@@ -1,0 +1,208 @@
+//! Bench: ablations of the paper's design choices (DESIGN.md experiment
+//! index):
+//!
+//! 1. **σ_f profiling** (§2(b)) — optimise lnP_max over (m−1) parameters
+//!    vs the full lnP over m parameters: dimensionality reduction saves
+//!    evaluations.
+//! 2. **Analytic gradient** (§2(a)) — CG with eq.-2.17 gradients vs
+//!    derivative-free Nelder–Mead: the gradient is almost free, so
+//!    gradient search wins on likelihood-evaluation counts.
+//! 3. **Toeplitz structure** (§3(b) fn. 7) — Levinson–Durbin O(n²) solve
+//!    vs Cholesky O(n³) on the regular tidal grid: the speed-up the
+//!    authors deliberately left on the table for generality.
+//! 4. **Backend** — native rust assembly vs the AOT XLA artifact
+//!    (requires `make artifacts`): same matrices, different engines.
+//!
+//! `cargo bench --bench ablations`
+
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::kernels::{paper_k1, PaperK1};
+use gpfast::linalg::{Chol, ToeplitzSolver};
+use gpfast::optimize::{
+    maximise_cg, maximise_neldermead, CgOptions, FnObjective, NmOptions,
+};
+use gpfast::priors::BoxPrior;
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::{Backend, NativeBackend, XlaBackend};
+use gpfast::util::{timer::human_time, Table, TimingStats};
+
+fn main() {
+    ablation_profiling();
+    ablation_gradient();
+    ablation_toeplitz();
+    ablation_backend();
+}
+
+/// 1. σ_f profiling: evals to reach the same peak.
+fn ablation_profiling() {
+    println!("== ablation 1: σ_f profiled out (eq. 2.16) vs explicit (eq. 2.5) ==\n");
+    let data = table1_dataset(100, 0.1, 20160125);
+    let model = paper_k1(0.1);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let cg = CgOptions::default();
+    let mut table = Table::new(vec!["objective", "dim", "evals", "peak lnP"]);
+    // profiled: 3 parameters
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let start = prior.sample(&mut rng);
+    let mut obj = FnObjective::new(
+        3,
+        |th: &[f64]| {
+            Ok(gpfast::gp::profiled::eval(&model, &data.t, &data.y, th)
+                .map_or(f64::NEG_INFINITY, |e| e.lnp))
+        },
+        |th: &[f64]| match gpfast::gp::profiled::eval_grad(&model, &data.t, &data.y, th) {
+            Ok((e, g)) => Ok((e.lnp, g)),
+            Err(_) => Ok((f64::NEG_INFINITY, vec![0.0; 3])),
+        },
+    );
+    let out = maximise_cg(&mut obj, &prior, &start, &cg).unwrap();
+    table.add_row(vec![
+        "profiled lnP_max".to_string(),
+        "3".to_string(),
+        format!("{}", obj.evals()),
+        format!("{:.3}", out.value),
+    ]);
+    // explicit σ_f: 4 parameters (λ prepended)
+    let mut full_prior = prior.clone();
+    full_prior.bounds.insert(0, (-6.9, 6.9)); // λ = ln σ_f
+    let mut full_start = vec![0.0];
+    full_start.extend(start.iter().copied());
+    let mut obj_full = FnObjective::new(
+        4,
+        |th: &[f64]| {
+            Ok(gpfast::gp::full_lnp(&model, &data.t, &data.y, th)
+                .unwrap_or(f64::NEG_INFINITY))
+        },
+        |th: &[f64]| match gpfast::gp::full_lnp_grad(&model, &data.t, &data.y, th) {
+            Ok(v) => Ok(v),
+            Err(_) => Ok((f64::NEG_INFINITY, vec![0.0; 4])),
+        },
+    );
+    let out_full = maximise_cg(&mut obj_full, &full_prior, &full_start, &cg).unwrap();
+    table.add_row(vec![
+        "full lnP(σ_f, ϑ)".to_string(),
+        "4".to_string(),
+        format!("{}", obj_full.evals()),
+        format!("{:.3}", out_full.value),
+    ]);
+    print!("{}", table.render());
+    println!("(same peak expected: profiling is exact, eq. 2.15–2.16)\n");
+}
+
+/// 2. gradient vs derivative-free.
+fn ablation_gradient() {
+    println!("== ablation 2: CG + analytic gradient vs Nelder–Mead ==\n");
+    let data = table1_dataset(100, 0.1, 20160125);
+    let model = paper_k1(0.1);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let mut rng = Xoshiro256::seed_from_u64(6);
+    let start = prior.sample(&mut rng);
+    let value = |th: &[f64]| {
+        gpfast::gp::profiled::eval(&model, &data.t, &data.y, th)
+            .map_or(f64::NEG_INFINITY, |e| e.lnp)
+    };
+    let mut cg_obj = FnObjective::new(
+        3,
+        |th: &[f64]| Ok(value(th)),
+        |th: &[f64]| match gpfast::gp::profiled::eval_grad(&model, &data.t, &data.y, th) {
+            Ok((e, g)) => Ok((e.lnp, g)),
+            Err(_) => Ok((f64::NEG_INFINITY, vec![0.0; 3])),
+        },
+    );
+    let cg_out = maximise_cg(&mut cg_obj, &prior, &start, &CgOptions::default()).unwrap();
+    let mut nm_obj = FnObjective::new(
+        3,
+        |th: &[f64]| Ok(value(th)),
+        |_: &[f64]| unreachable!(),
+    );
+    let (nm_x, nm_f) =
+        maximise_neldermead(&mut nm_obj, &prior, &start, &NmOptions::default()).unwrap();
+    let mut table = Table::new(vec!["method", "evals", "peak lnP"]);
+    table.add_row(vec![
+        "CG + analytic grad (eq. 2.17)".to_string(),
+        format!("{}", cg_obj.evals()),
+        format!("{:.3}", cg_out.value),
+    ]);
+    table.add_row(vec![
+        "Nelder–Mead (no gradient)".to_string(),
+        format!("{}", nm_obj.evals()),
+        format!("{:.3}", nm_f),
+    ]);
+    print!("{}", table.render());
+    let _ = nm_x;
+    println!("(the gradient costs ~nothing once lnP is evaluated — §2(a))\n");
+}
+
+/// 3. Toeplitz vs Cholesky on a regular grid.
+fn ablation_toeplitz() {
+    println!("== ablation 3: Toeplitz (Levinson O(n²)) vs Cholesky O(n³) ==\n");
+    let model = paper_k1(0.01);
+    let theta = PaperK1::truth();
+    let mut table = Table::new(vec!["n", "cholesky", "toeplitz", "speedup", "|Δlogdet|"]);
+    for &n in &[328usize, 1000, 1968] {
+        let t: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let k = gpfast::gp::assemble_cov(&model, &t, &theta);
+        let col: Vec<f64> = (0..n).map(|i| k[(i, 0)]).collect();
+        let b: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).sin()).collect();
+        let chol_t = TimingStats::measure(1, 3, || {
+            let ch = Chol::factor(&k).unwrap();
+            let _ = ch.solve(&b);
+        });
+        let toep_t = TimingStats::measure(1, 3, || {
+            let ts = ToeplitzSolver::new(&col).unwrap();
+            let _ = ts.solve(&b);
+        });
+        let ld_c = Chol::factor(&k).unwrap().logdet();
+        let ld_t = ToeplitzSolver::new(&col).unwrap().logdet();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(chol_t.min()),
+            human_time(toep_t.min()),
+            format!("{:.1}x", chol_t.min() / toep_t.min()),
+            format!("{:.2e}", (ld_c - ld_t).abs()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(§3(b) fn. 7: the paper skipped this so its code stays general)\n");
+}
+
+/// 4. native vs XLA-artifact assembly.
+fn ablation_backend() {
+    println!("== ablation 4: covariance assembly backend (native vs XLA AOT) ==\n");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let model = paper_k1(0.1);
+    let theta = PaperK1::truth();
+    let mut table = Table::new(vec!["n", "native", "xla artifact", "max |Δ|"]);
+    let mut xla = match XlaBackend::load(&dir) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("(skipped: {e})\n");
+            return;
+        }
+    };
+    let mut native = NativeBackend::new();
+    for &n in &[30usize, 100, 300, 1968] {
+        if !xla.accelerates(&model, n) {
+            continue;
+        }
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        // warm both paths (XLA compiles on first call)
+        let (kx, _) = xla.cov_and_grads(&model, &t, &theta).unwrap();
+        let (kn, _) = native.cov_and_grads(&model, &t, &theta).unwrap();
+        let tn = TimingStats::measure(1, if n > 500 { 3 } else { 10 }, || {
+            let _ = native.cov_and_grads(&model, &t, &theta).unwrap();
+        });
+        let tx = TimingStats::measure(1, if n > 500 { 3 } else { 10 }, || {
+            let _ = xla.cov_and_grads(&model, &t, &theta).unwrap();
+        });
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(tn.min()),
+            human_time(tx.min()),
+            format!("{:.1e}", kx.max_abs_diff(&kn)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(identical matrices; interpret-mode Pallas on CPU is the correctness path,");
+    println!(" real-TPU projections are in EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,48 @@
+//! Bench: **Fig. 1** — GP realisation sampling. Regenerates the figure's
+//! data (CSV) and measures the cost of realisation drawing (covariance
+//! assembly + Cholesky + MVN sample) across sizes, which is the same
+//! kernel-assembly + factorisation path the training loop pays per
+//! evaluation.
+//!
+//! `cargo bench --bench fig1`
+
+use gpfast::data::csv;
+use gpfast::gp::draw_realisation;
+use gpfast::kernels::{paper_k1, paper_k2, PaperK1, PaperK2};
+use gpfast::rng::Xoshiro256;
+use gpfast::util::{timer::human_time, Table, TimingStats};
+use std::path::Path;
+
+fn main() {
+    // 1. the figure's data
+    let n = 100;
+    let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+    let mut rng = Xoshiro256::seed_from_u64(20160125);
+    let k1 = paper_k1(0.1);
+    let k2 = paper_k2(0.1);
+    let y1 = draw_realisation(&k1, 1.0, &PaperK1::truth(), &t, &mut rng).unwrap();
+    let y2 = draw_realisation(&k2, 1.0, &PaperK2::truth(), &t, &mut rng).unwrap();
+    csv::write_columns(Path::new("fig1_realisations.csv"), &["t", "k1", "k2"], &[&t, &y1, &y2])
+        .unwrap();
+    println!("fig1_realisations.csv written (t = 1..100, paper truth hyperparameters)\n");
+
+    // 2. sampling cost scaling (assembly + Cholesky dominate: O(n³))
+    println!("== realisation cost vs n (k2) ==");
+    let mut table = Table::new(vec!["n", "mean", "min", "GFLOP/s (chol est)"]);
+    for &n in &[100usize, 300, 600, 1000] {
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let mut rng = Xoshiro256::seed_from_u64(n as u64);
+        let stats = TimingStats::measure(1, if n <= 300 { 10 } else { 3 }, || {
+            let _ = draw_realisation(&k2, 1.0, &PaperK2::truth(), &t, &mut rng).unwrap();
+        });
+        // Cholesky flops ≈ n³/3
+        let gflops = (n as f64).powi(3) / 3.0 / stats.min() / 1e9;
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(stats.mean()),
+            human_time(stats.min()),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    print!("{}", table.render());
+}

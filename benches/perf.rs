@@ -1,0 +1,81 @@
+//! Bench: layer-by-layer hot-path profile — the measurement harness
+//! behind EXPERIMENTS.md §Perf.
+//!
+//! * L3 Cholesky GFLOP/s (the O(n³) hot path, n³/3 flops)
+//! * L3 covariance assembly pair-rate (native per-pair kernel)
+//! * L3 O(n²) contraction rates (gradient eq. 2.17 given the factor)
+//! * end-to-end profiled eval+gradient cost at the paper's sizes
+//!
+//! `cargo bench --bench perf`
+
+use gpfast::kernels::{paper_k2, PaperK2};
+use gpfast::linalg::{Chol, Matrix};
+use gpfast::rng::Xoshiro256;
+use gpfast::util::{timer::human_time, Table, TimingStats};
+
+fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+    // diagonally dominant random symmetric matrix (cheap to build)
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.normal() * 0.01;
+            m[(i, j)] = v;
+            m[(j, i)] = v;
+        }
+        m[(i, i)] = 2.0;
+    }
+    m
+}
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+
+    println!("== L3 Cholesky (blocked, f64, single core) ==");
+    let mut t = Table::new(vec!["n", "time (min)", "GFLOP/s"]);
+    for &n in &[300usize, 600, 1000, 1968] {
+        let k = random_spd(n, &mut rng);
+        let reps = if n >= 1968 { 3 } else { 5 };
+        let stats = TimingStats::measure(1, reps, || {
+            let _ = Chol::factor(&k).unwrap();
+        });
+        let gflops = (n as f64).powi(3) / 3.0 / stats.min() / 1e9;
+        t.add_row(vec![format!("{n}"), human_time(stats.min()), format!("{gflops:.2}")]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== L3 covariance assembly (native k2: value+grads per pair) ==");
+    let model = paper_k2(0.1);
+    let theta = PaperK2::truth();
+    let mut t = Table::new(vec!["n", "time (min)", "Mpairs/s"]);
+    for &n in &[300usize, 1000, 1968] {
+        let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let reps = if n >= 1968 { 3 } else { 5 };
+        let stats = TimingStats::measure(1, reps, || {
+            let _ = gpfast::gp::assemble_cov_grads(&model, &ts, &theta);
+        });
+        let rate = (n * n) as f64 / 2.0 / stats.min() / 1e6;
+        t.add_row(vec![format!("{n}"), human_time(stats.min()), format!("{rate:.1}")]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== end-to-end profiled lnP + gradient (eqs. 2.16–2.17) ==");
+    let mut t = Table::new(vec!["n", "eval+grad", "eval only"]);
+    for &n in &[100usize, 300, 328, 1000, 1968] {
+        let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let y: Vec<f64> = ts.iter().map(|&x| (x * 0.51).sin()).collect();
+        let reps = if n >= 1000 { 3 } else { 5 };
+        let g = TimingStats::measure(1, reps, || {
+            let _ = gpfast::gp::profiled::eval_grad(&model, &ts, &y, &theta).unwrap();
+        });
+        let v = TimingStats::measure(1, reps, || {
+            let _ = gpfast::gp::profiled::eval(&model, &ts, &y, &theta).unwrap();
+        });
+        t.add_row(vec![
+            format!("{n}"),
+            human_time(g.min()),
+            human_time(v.min()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n(paper's yardstick: ~10 s per evaluation at n = 1968 on their machine)");
+}

@@ -1,0 +1,183 @@
+//! The paper's §3(b) real-data experiment on the simulated Woods-Hole
+//! tidal series (see DESIGN.md §Substitutions):
+//!
+//! * small set (one lunar month, n = 328) and large set (six lunar
+//!   months, n = 1968), 2-hour cadence, σ_n = 10⁻²;
+//! * trains k₁ (one periodic timescale) and k₂ (two), reports the
+//!   recovered timescales **in hours** with inverse-Hessian error bars —
+//!   the paper finds T₁ ≈ 12.4 h (the M2 tide) and T₂ ≈ 24 h (diurnal);
+//! * reports the k₂-over-k₁ log Bayes factor (paper: 57.8 small, 538
+//!   large) and writes both interpolants over a week (Fig. 3 inset).
+//!
+//! ```sh
+//! cargo run --release --example tidal_analysis            # both sizes
+//! cargo run --release --example tidal_analysis -- --fast  # n = 328 only
+//! ```
+
+use gpfast::coordinator::{
+    train_model, ComparisonPipeline, ModelReport, ModelSpec, PipelineConfig,
+};
+use gpfast::data::{csv, tidal};
+use gpfast::kernels::TIDAL_SIGMA_N;
+use gpfast::priors::{BoxPrior, ScalePrior};
+use gpfast::rng::Xoshiro256;
+use gpfast::util::Stopwatch;
+use std::path::Path;
+
+/// Train one model on the large dataset warm-started from its small-set
+/// peak (the timescales are physical — they do not move between subsets),
+/// with a single polish restart. This is how a practitioner scales the
+/// paper's workflow to the n = 1968 set without paying 10 cold restarts
+/// at ~8 s/evaluation.
+fn train_large_warm(
+    spec: &ModelSpec,
+    data: &gpfast::data::Dataset,
+    warm: &[f64],
+    rng: &mut Xoshiro256,
+) -> gpfast::Result<ModelReport> {
+    let sw = Stopwatch::start();
+    let model = spec.build(TIDAL_SIGMA_N);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let mut opts = gpfast::coordinator::TrainOptions::default();
+    opts.multistart.restarts = 1;
+    opts.extra_starts = vec![warm.to_vec()];
+    let trained = train_model(spec, TIDAL_SIGMA_N, data, &opts, 1, rng)?;
+    let hess = gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &trained.theta_hat)?;
+    let ev = gpfast::evidence::laplace_evidence(
+        data.len(),
+        &prior,
+        &ScalePrior::default(),
+        &trained.theta_hat,
+        trained.lnp_peak,
+        &hess,
+    )?;
+    Ok(ModelReport {
+        name: model.name.clone(),
+        param_names: model.kernel.names(),
+        theta_hat: trained.theta_hat,
+        sigma: ev.sigma,
+        lnp_peak: trained.lnp_peak,
+        sigma_f_hat: trained.sigma_f_hat2.sqrt(),
+        ln_z: ev.ln_z,
+        suspect: ev.suspect || !trained.converged,
+        n_evals: trained.n_evals,
+        n_modes: trained.n_modes,
+        restarts: 2,
+        wall_secs: sw.elapsed_secs(),
+        nested: None,
+    })
+}
+
+fn main() -> gpfast::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let full = tidal::generate_tidal(&tidal::TidalConfig::six_lunar_months(20160125));
+    let small = full.head(tidal::TidalConfig::LUNAR_MONTH_N).demean();
+    let large = full.demean();
+
+    // --- small set: the full multistart pipeline (paper §3(b), n = 328)
+    let mut small_peaks: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut reports = Vec::new();
+    {
+        let data = &small;
+        println!("=== {} (n = {}) ===", data.label, data.len());
+        let mut cfg = PipelineConfig::paper_synthetic();
+        cfg.sigma_n = TIDAL_SIGMA_N;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let sw = Stopwatch::start();
+        let report = ComparisonPipeline::new(cfg).run(data, &mut rng)?;
+        print!("{}", report.render());
+        println!("wall: {:.1} s", sw.elapsed_secs());
+        for m in &report.models {
+            small_peaks.push((m.name.clone(), m.theta_hat.clone()));
+        }
+        reports.push((small.clone(), report));
+    }
+
+    // --- large set: warm-started polish (skipped with --fast)
+    if !fast {
+        let data = &large;
+        println!("\n=== {} (n = {}) — warm-started from the n=328 peaks ===",
+            data.label, data.len());
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let mut models = Vec::new();
+        for spec in [ModelSpec::K1, ModelSpec::K2] {
+            let name = if spec == ModelSpec::K1 { "k1" } else { "k2" };
+            let warm = &small_peaks.iter().find(|(n, _)| n == name).unwrap().1;
+            eprintln!("training {name} on n = {} ...", data.len());
+            models.push(train_large_warm(&spec, data, warm, &mut rng)?);
+        }
+        let report = gpfast::coordinator::ComparisonReport::ranked(
+            data.label.clone(),
+            data.len(),
+            models,
+        );
+        print!("{}", report.render());
+        reports.push((large.clone(), report));
+    }
+
+    for (data, report) in &reports {
+        println!("\n--- timescales for {} (n = {}) ---", data.label, data.len());
+
+        // report timescales in hours (T = e^phi; times are in hours)
+        for m in &report.models {
+            println!("  {}:", m.name);
+            for ((name, th), sg) in m.param_names.iter().zip(&m.theta_hat).zip(&m.sigma) {
+                if name.starts_with("phi") && name != "phi0" {
+                    let t_h = th.exp();
+                    // δT = T·δφ (first order)
+                    println!(
+                        "    {} -> T = {:.2} ± {:.2} hours",
+                        name,
+                        t_h,
+                        t_h * sg
+                    );
+                }
+            }
+        }
+        if let Some(lnb) = report.ln_bayes("k2", "k1") {
+            println!(
+                "  ln B(k2 over k1) = {:.1}   [paper: 57.8 @ n=328, 538 @ n=1968]",
+                lnb
+            );
+        }
+
+        // Fig. 3 inset: both interpolants over the first week, 15-min grid
+        let week_h = 7.0 * 24.0;
+        let n_star = 4 * 7 * 24;
+        let t_star: Vec<f64> =
+            (0..n_star).map(|i| week_h * i as f64 / (n_star - 1) as f64).collect();
+        let mut cols: Vec<Vec<f64>> = vec![t_star.clone()];
+        let mut names = vec!["t_hours".to_string()];
+        for m in &report.models {
+            let spec = gpfast::coordinator::ModelSpec::parse(&m.name)?;
+            let model = spec.build(TIDAL_SIGMA_N);
+            let ev = gpfast::gp::profiled::eval(&model, &data.t, &data.y, &m.theta_hat)?;
+            let pred = gpfast::gp::predict(&model, &data.t, &m.theta_hat, &ev, &t_star);
+            cols.push(pred.mean);
+            names.push(format!("mean_{}", m.name));
+        }
+        if cols.len() == 3 {
+            let rms: f64 = (cols[1]
+                .iter()
+                .zip(&cols[2])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                / n_star as f64)
+                .sqrt();
+            let scale =
+                (data.y.iter().map(|v| v * v).sum::<f64>() / data.len() as f64).sqrt();
+            println!(
+                "  interpolant RMS(k1 − k2) over one week = {:.4} ({:.1}% of signal) — \
+                 paper: 'identical on this timescale'",
+                rms,
+                100.0 * rms / scale
+            );
+        }
+        let out = format!("tidal_interpolants_n{}.csv", data.len());
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let col_refs: Vec<&[f64]> = cols.iter().map(Vec::as_slice).collect();
+        csv::write_columns(Path::new(&out), &name_refs, &col_refs)?;
+        println!("  interpolants written to {out}\n");
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: jax graphs -> HLO **text** artifacts + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and DESIGN.md).
+
+Artifact calling conventions (all f64, ``return_tuple=True``):
+
+* ``cov``:       (t[n], theta[m], sigma_n[]) -> (K[n,n],)
+* ``cov_grads``: (t[n], theta[m], sigma_n[]) -> (K[n,n], dK[m,n,n])
+* ``full_lnp``:  (t[n], y[n], theta[m], sigma_n[]) -> (lnP, sigma2, logdet)
+
+Usage: ``python -m compile.aot --out ../artifacts [--sizes 30,100,...]``
+Run from the ``python/`` directory (the Makefile does).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model as m  # noqa: E402
+
+# the paper's experiment sizes: Table 1 (30/100/300) + tidal (328/1968)
+COV_SIZES = (30, 100, 300, 328, 1968)
+# full-graph artifacts carry an O(n^3) while-loop; cap the size
+FULL_SIZES = (30, 100, 300, 328)
+MODELS = ("k1", "k2")
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cov(model, n, grads):
+    mdim = m.MODELS[model]["m"]
+    t_spec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    th_spec = jax.ShapeDtypeStruct((mdim,), jnp.float64)
+    sn_spec = jax.ShapeDtypeStruct((), jnp.float64)
+    if grads:
+        fn = lambda t, th, sn: m.cov_and_grads_pallas(model, t, th, sn)  # noqa: E731
+    else:
+        fn = lambda t, th, sn: (m.cov_pallas(model, t, th, sn),)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(t_spec, th_spec, sn_spec))
+
+
+def lower_full_lnp(model, n):
+    mdim = m.MODELS[model]["m"]
+    t_spec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    y_spec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    th_spec = jax.ShapeDtypeStruct((mdim,), jnp.float64)
+    sn_spec = jax.ShapeDtypeStruct((), jnp.float64)
+    fn = lambda t, y, th, sn: m.full_lnp(model, t, y, th, sn)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(t_spec, y_spec, th_spec, sn_spec))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in COV_SIZES))
+    ap.add_argument("--full-sizes", default=",".join(str(s) for s in FULL_SIZES))
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    full_sizes = [int(s) for s in args.full_sizes.split(",") if s]
+    models = [s for s in args.models.split(",") if s]
+
+    entries = []
+
+    def emit(kind, model, n, text):
+        name = f"{kind}_{model}_n{n}.hlo.txt"
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "model": model,
+                "n": n,
+                "m": m.MODELS[model]["m"],
+                "kind": kind,
+                "path": name,
+                # sigma_n is a runtime input, not baked into the artifact
+                "sigma_n": -1.0,
+            }
+        )
+        print(f"  wrote {name} ({len(text) / 1024:.0f} KiB)")
+
+    for model in models:
+        for n in sizes:
+            print(f"lowering {model} n={n} ...")
+            emit("cov", model, n, lower_cov(model, n, grads=False))
+            emit("cov_grads", model, n, lower_cov(model, n, grads=True))
+        for n in full_sizes:
+            print(f"lowering full_lnp {model} n={n} ...")
+            emit("full_lnp", model, n, lower_full_lnp(model, n))
+
+    manifest = {"version": 1, "dtype": "f64", "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

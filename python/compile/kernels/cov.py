@@ -1,0 +1,189 @@
+"""L1 — the Pallas covariance-assembly kernel.
+
+The paper's released code evaluates the O(n^2) covariance matrix on a GPU
+(one CUDA thread per entry). The TPU re-think (DESIGN.md
+section Hardware-Adaptation): one Pallas *grid cell* per (TI x TJ) tile,
+with BlockSpec streaming the two `t` tile slabs HBM->VMEM, and the kernel
+emitting the covariance tile **and all m hyperparameter-derivative
+tiles** fused, so the shared transcendentals (sin, exp, the Wendland
+polynomial) are computed once per pair.
+
+Everything pair-independent (the erfinv-based smoothness transform,
+exp(-phi) scalings) is precomputed *outside* the kernel and passed in as
+a small parameter vector — the kernel body is pure VPU math.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom calls; interpret-mode lowers the kernel into plain HLO that both
+jax and the rust runtime can execute. Real-TPU tiling estimates live in
+EXPERIMENTS.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# 64x64 f64 tiles: 2 x 0.5 KiB input slabs, (m+1) x 32 KiB output tiles.
+# On a real TPU one would use 128x128 (VMEM budget table in
+# EXPERIMENTS.md); 64 keeps interpret-mode padding waste low at the
+# paper's n = 30..328 sizes.
+TILE = 64
+
+
+def _num_params(model):
+    return {"k1": 5, "k2": 8}[model]
+
+
+def pack_params(model, theta, sigma_n):
+    """Precompute the pair-independent scalars the kernel needs.
+
+    k1: [inv_t0, pi_inv_t1, c_l1, dxi1, sn2]
+    k2: [inv_t0, pi_inv_t1, c_l1, dxi1, pi_inv_t2, c_l2, dxi2, sn2]
+
+    where c_l = 2/l^2 and dxi = 2*c_l*d(ln l)/dxi (so that
+    d(ln P)/dxi = dxi * sin^2 a).
+    """
+    theta = jnp.asarray(theta, jnp.float64)
+    inv_t0 = jnp.exp(-theta[0])
+
+    def periodic(phi, xi):
+        l = ref.l_of_xi(xi)
+        c_l = 2.0 / (l * l)
+        return jnp.exp(-phi) * jnp.pi, c_l, 2.0 * c_l * ref.dl_dxi_over_l(xi)
+
+    sn2 = jnp.asarray(sigma_n, jnp.float64) ** 2
+    if model == "k1":
+        a1, c1, d1 = periodic(theta[1], theta[2])
+        return jnp.stack([inv_t0, a1, c1, d1, sn2])
+    elif model == "k2":
+        a1, c1, d1 = periodic(theta[1], theta[2])
+        a2, c2, d2 = periodic(theta[3], theta[4])
+        return jnp.stack([inv_t0, a1, c1, d1, a2, c2, d2, sn2])
+    raise ValueError(f"unknown model {model}")
+
+
+def _kernel_body(model, n, ti_ref, tj_ref, p_ref, k_ref, dk_ref):
+    """One (TI x TJ) tile: covariance + all derivative planes."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    ti = ti_ref[...]
+    tj = tj_ref[...]
+    p = p_ref[...]
+    dt = ti[:, None] - tj[None, :]
+
+    # Wendland psi_{3,2} factor and its tau-derivative
+    tau = jnp.abs(dt) * p[0]
+    om = jnp.maximum(1.0 - tau, 0.0)
+    om2 = om * om
+    om4 = om2 * om2
+    c = om4 * om2 * (35.0 * tau * tau + 18.0 * tau + 3.0) / 3.0
+    c1 = -(56.0 / 3.0) * tau * (5.0 * tau + 1.0) * om4 * om
+
+    def periodic(a_scale, c_l, dxi):
+        a = dt * a_scale
+        s = jnp.sin(a)
+        s2 = s * s
+        sin2a = jnp.sin(2.0 * a)
+        val = jnp.exp(-c_l * s2)
+        return val, c_l * a * sin2a, dxi * s2
+
+    # global indices for the noise diagonal
+    rows = i * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, TILE), 0)
+    cols = j * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, TILE), 1)
+    sn2 = p[_num_params(model) - 1]
+    diag = jnp.where(rows == cols, sn2, 0.0)
+
+    if model == "k1":
+        p1, g_phi1, g_xi1 = periodic(p[1], p[2], p[3])
+        smooth = c * p1
+        k_ref[...] = smooth + diag
+        dk_ref[0, :, :] = -tau * c1 * p1
+        dk_ref[1, :, :] = smooth * g_phi1
+        dk_ref[2, :, :] = smooth * g_xi1
+    else:  # k2
+        p1, g_phi1, g_xi1 = periodic(p[1], p[2], p[3])
+        p2, g_phi2, g_xi2 = periodic(p[4], p[5], p[6])
+        p12 = p1 * p2
+        smooth = c * p12
+        k_ref[...] = smooth + diag
+        dk_ref[0, :, :] = -tau * c1 * p12
+        dk_ref[1, :, :] = smooth * g_phi1
+        dk_ref[2, :, :] = smooth * g_xi1
+        dk_ref[3, :, :] = smooth * g_phi2
+        dk_ref[4, :, :] = smooth * g_xi2
+    del n  # shape is static; kept for signature clarity
+
+
+@functools.partial(jax.jit, static_argnames=("model",))
+def cov_and_grads_pallas(model, t, theta, sigma_n):
+    """(K[n,n], dK[m,n,n]) assembled by the Pallas tile kernel."""
+    n = t.shape[0]
+    m = ref.MODELS[model]["m"]
+    params = pack_params(model, theta, sigma_n)
+    grid = (pl.cdiv(n, TILE), pl.cdiv(n, TILE))
+    kernel = functools.partial(_kernel_body, model, n)
+    k, dk = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i, j: (i,)),           # t rows
+            pl.BlockSpec((TILE,), lambda i, j: (j,)),           # t cols
+            pl.BlockSpec((_num_params(model),), lambda i, j: (0,)),  # params
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((m, TILE, TILE), lambda i, j: (0, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float64),
+            jax.ShapeDtypeStruct((m, n, n), jnp.float64),
+        ],
+        interpret=True,
+    )(t, t, params)
+    return k, dk
+
+
+def _kernel_body_cov(model, ti_ref, tj_ref, p_ref, k_ref):
+    """Value-only tile (line-search evaluations need no derivatives)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    dt = ti_ref[...][:, None] - tj_ref[...][None, :]
+    p = p_ref[...]
+    tau = jnp.abs(dt) * p[0]
+    om = jnp.maximum(1.0 - tau, 0.0)
+    om2 = om * om
+    c = om2 * om2 * om2 * (35.0 * tau * tau + 18.0 * tau + 3.0) / 3.0
+    rows = i * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, TILE), 0)
+    cols = j * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, TILE), 1)
+    sn2 = p[_num_params(model) - 1]
+    diag = jnp.where(rows == cols, sn2, 0.0)
+    val = c * jnp.exp(-p[2] * jnp.sin(dt * p[1]) ** 2)
+    if model == "k2":
+        val = val * jnp.exp(-p[5] * jnp.sin(dt * p[4]) ** 2)
+    k_ref[...] = val + diag
+
+
+@functools.partial(jax.jit, static_argnames=("model",))
+def cov_pallas(model, t, theta, sigma_n):
+    """K[n,n] only (used on value-only line-search evaluations)."""
+    n = t.shape[0]
+    params = pack_params(model, theta, sigma_n)
+    grid = (pl.cdiv(n, TILE), pl.cdiv(n, TILE))
+    kernel = functools.partial(_kernel_body_cov, model)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i, j: (i,)),
+            pl.BlockSpec((TILE,), lambda i, j: (j,)),
+            pl.BlockSpec((_num_params(model),), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float64),
+        interpret=True,
+    )(t, t, params)

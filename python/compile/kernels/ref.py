@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for the paper's covariance functions.
+
+This is the **correctness reference** for the L1 Pallas kernel
+(``cov.py``): plain vectorised jnp, no Pallas, no cleverness. It mirrors
+the rust ``kernels::paper`` implementation (same flat-prior coordinates,
+same Wendland-psi_{3,2} erratum fix — see DESIGN.md).
+
+Parameter layout (sigma_f profiled out, noise sigma_n passed separately):
+
+* k1: theta = [phi0, phi1, xi1]                  (m = 3)
+* k2: theta = [phi0, phi1, xi1, phi2, xi2]       (m = 5)
+
+with T_j = exp(phi_j) and l_j = exp(mu + sqrt(2)*sigma_l*erfinv(2*xi_j)),
+mu = 1, sigma_l = 2 (paper section 3).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erfinv
+
+jax.config.update("jax_enable_x64", True)
+
+MU_L = 1.0
+SIGMA_L = 2.0
+
+
+def wendland_c(tau):
+    """Wendland psi_{3,2}: (1-tau)^6 (35 tau^2 + 18 tau + 3)/3 on [0, 1)."""
+    om = jnp.maximum(1.0 - tau, 0.0)
+    return om**6 * (35.0 * tau**2 + 18.0 * tau + 3.0) / 3.0
+
+
+def wendland_c1(tau):
+    """C'(tau) = -(56/3) tau (5 tau + 1) (1-tau)^5."""
+    om = jnp.maximum(1.0 - tau, 0.0)
+    return -(56.0 / 3.0) * tau * (5.0 * tau + 1.0) * om**5
+
+
+def l_of_xi(xi):
+    """The flat->physical smoothness transform, paper eq. (3.5)."""
+    return jnp.exp(MU_L + jnp.sqrt(2.0) * SIGMA_L * erfinv(2.0 * xi))
+
+
+def dl_dxi_over_l(xi):
+    """d(ln l)/d xi = sigma_l * sqrt(2 pi) * exp(erfinv(2 xi)^2)."""
+    w = erfinv(2.0 * xi)
+    return SIGMA_L * jnp.sqrt(2.0 * jnp.pi) * jnp.exp(w * w)
+
+
+def _periodic_parts(dt, phi, xi):
+    """Value and log-derivatives of one periodic factor at lags dt."""
+    a = jnp.pi * dt * jnp.exp(-phi)
+    s = jnp.sin(a)
+    s2 = s * s
+    sin2a = jnp.sin(2.0 * a)
+    l = l_of_xi(xi)
+    c_l = 2.0 / (l * l)
+    val = jnp.exp(-c_l * s2)
+    dlog_phi = c_l * a * sin2a
+    dlog_xi = 2.0 * c_l * s2 * dl_dxi_over_l(xi)
+    return val, dlog_phi, dlog_xi
+
+
+def cov_k1(t, theta, sigma_n):
+    """K tilde for k1 (sigma_f = 1 units), noise on the diagonal."""
+    dt = t[:, None] - t[None, :]
+    tau = jnp.abs(dt) * jnp.exp(-theta[0])
+    c = wendland_c(tau)
+    p1, _, _ = _periodic_parts(dt, theta[1], theta[2])
+    n = t.shape[0]
+    return c * p1 + (sigma_n**2) * jnp.eye(n)
+
+
+def cov_k2(t, theta, sigma_n):
+    """K tilde for k2."""
+    dt = t[:, None] - t[None, :]
+    tau = jnp.abs(dt) * jnp.exp(-theta[0])
+    c = wendland_c(tau)
+    p1, _, _ = _periodic_parts(dt, theta[1], theta[2])
+    p2, _, _ = _periodic_parts(dt, theta[3], theta[4])
+    n = t.shape[0]
+    return c * p1 * p2 + (sigma_n**2) * jnp.eye(n)
+
+
+def cov_and_grads_k1(t, theta, sigma_n):
+    """(K[n,n], dK[3,n,n]) for k1 — analytic derivatives."""
+    dt = t[:, None] - t[None, :]
+    tau = jnp.abs(dt) * jnp.exp(-theta[0])
+    c = wendland_c(tau)
+    c1 = wendland_c1(tau)
+    p1, dlp1_phi, dlp1_xi = _periodic_parts(dt, theta[1], theta[2])
+    smooth = c * p1
+    n = t.shape[0]
+    k = smooth + (sigma_n**2) * jnp.eye(n)
+    dk = jnp.stack(
+        [
+            -tau * c1 * p1,        # d/dphi0 (C' chain rule, dtau/dphi0 = -tau)
+            smooth * dlp1_phi,     # d/dphi1
+            smooth * dlp1_xi,      # d/dxi1
+        ]
+    )
+    return k, dk
+
+
+def cov_and_grads_k2(t, theta, sigma_n):
+    """(K[n,n], dK[5,n,n]) for k2."""
+    dt = t[:, None] - t[None, :]
+    tau = jnp.abs(dt) * jnp.exp(-theta[0])
+    c = wendland_c(tau)
+    c1 = wendland_c1(tau)
+    p1, dlp1_phi, dlp1_xi = _periodic_parts(dt, theta[1], theta[2])
+    p2, dlp2_phi, dlp2_xi = _periodic_parts(dt, theta[3], theta[4])
+    smooth = c * p1 * p2
+    n = t.shape[0]
+    k = smooth + (sigma_n**2) * jnp.eye(n)
+    dk = jnp.stack(
+        [
+            -tau * c1 * p1 * p2,
+            smooth * dlp1_phi,
+            smooth * dlp1_xi,
+            smooth * dlp2_phi,
+            smooth * dlp2_xi,
+        ]
+    )
+    return k, dk
+
+
+MODELS = {
+    "k1": {"m": 3, "cov": cov_k1, "cov_grads": cov_and_grads_k1},
+    "k2": {"m": 5, "cov": cov_k2, "cov_grads": cov_and_grads_k2},
+}

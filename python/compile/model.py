@@ -1,0 +1,91 @@
+"""L2 — the jax compute graphs that get AOT-lowered to HLO text.
+
+Two graph families per covariance model:
+
+* ``cov_and_grads`` / ``cov`` — the O(n^2 m) covariance(+derivative)
+  assembly, delegated to the L1 Pallas kernel (``kernels/cov.py``). These
+  are the request-path artifacts: the rust coordinator feeds them
+  ``(t, theta, sigma_n)`` and owns the O(n^3) Cholesky natively.
+
+* ``full_lnp`` — the *entire* profiled hyperlikelihood ln P_max
+  (paper eq. 2.16) in one graph, including a **scan-based Cholesky and
+  forward substitution written in pure jax**. jax's own
+  ``jnp.linalg.cholesky`` lowers to ``lapack_*_ffi`` typed-FFI custom
+  calls that the image's PJRT client rejects (see DESIGN.md), so the
+  factorisation here is a ``fori_loop`` over columns — plain HLO
+  while/dot ops that any PJRT backend executes. Used for
+  cross-validation and the backend ablation, not the hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cov as covk
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+LN_2PI_E = 2.8378770664093453
+
+
+def cholesky_scan(k):
+    """Column-by-column Cholesky as a fori_loop (no LAPACK custom call).
+
+    Equivalent to ``jnp.linalg.cholesky`` for SPD input; each iteration
+    does one length-n masked dot and one n-vector matvec, so the lowered
+    HLO is a while loop over n with O(n^2) work per step.
+    """
+    k = jnp.asarray(k)
+    n = k.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        mask = idx < j
+        row_j = jnp.where(mask, l[j, :], 0.0)
+        d = jnp.sqrt(k[j, j] - jnp.dot(row_j, row_j))
+        col = (k[:, j] - l @ row_j) / d
+        col = jnp.where(idx > j, col, 0.0)
+        l = l.at[:, j].set(col)
+        return l.at[j, j].set(d)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(k))
+
+
+def solve_lower_scan(l, y):
+    """Forward substitution ``L w = y`` as a fori_loop."""
+    l = jnp.asarray(l)
+    y = jnp.asarray(y)
+    n = y.shape[0]
+    idx = jnp.arange(n)
+
+    def body(i, w):
+        row = jnp.where(idx < i, l[i, :], 0.0)
+        wi = (y[i] - jnp.dot(row, w)) / l[i, i]
+        return w.at[i].set(wi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+@functools.partial(jax.jit, static_argnames=("model",))
+def full_lnp(model, t, y, theta, sigma_n):
+    """Profiled hyperlikelihood (eq. 2.16): returns (lnP, sigma_hat2, logdet).
+
+    sigma_hat2 = y^T K^-1 y / n = |L^-1 y|^2 / n   (eq. 2.15)
+    lnP_max    = -(n/2) ln(2 pi e sigma_hat2) - 0.5 ln det K
+    """
+    k = covk.cov_pallas(model, t, theta, sigma_n)
+    l = cholesky_scan(k)
+    w = solve_lower_scan(l, y)
+    n = y.shape[0]
+    sigma_hat2 = jnp.dot(w, w) / n
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    lnp = -0.5 * n * (LN_2PI_E + jnp.log(sigma_hat2)) - 0.5 * logdet
+    return lnp, sigma_hat2, logdet
+
+
+# re-exports used by aot.py / tests
+cov_pallas = covk.cov_pallas
+cov_and_grads_pallas = covk.cov_and_grads_pallas
+MODELS = ref.MODELS

@@ -1,0 +1,114 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Sweeps shapes (including non-tile-multiples), models, and random
+hyperparameter draws (a hypothesis-style randomised sweep with a fixed
+seed), asserting allclose at f64 tolerances.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import cov, ref
+
+RNG = np.random.RandomState(20160125)
+
+
+def random_theta(model, rng):
+    if model == "k1":
+        return np.array(
+            [rng.uniform(0.5, 4.0), rng.uniform(0.3, 3.0), rng.uniform(-0.45, 0.45)]
+        )
+    return np.array(
+        [
+            rng.uniform(0.5, 4.0),
+            rng.uniform(0.3, 2.0),
+            rng.uniform(-0.45, 0.45),
+            rng.uniform(2.0, 4.0),
+            rng.uniform(-0.45, 0.45),
+        ]
+    )
+
+
+@pytest.mark.parametrize("model", ["k1", "k2"])
+@pytest.mark.parametrize("n", [7, 30, 64, 65, 100, 130])
+def test_cov_and_grads_match_ref(model, n):
+    """K and all dK planes match the oracle across shapes incl. padding."""
+    rng = np.random.RandomState(n)
+    t = np.sort(rng.uniform(0.0, 120.0, size=n))
+    theta = random_theta(model, rng)
+    sn = 0.1
+    k_ref, dk_ref = ref.MODELS[model]["cov_grads"](t, theta, sn)
+    k_p, dk_p = cov.cov_and_grads_pallas(model, t, theta, sn)
+    np.testing.assert_allclose(np.array(k_p), np.array(k_ref), atol=1e-13, rtol=1e-12)
+    np.testing.assert_allclose(np.array(dk_p), np.array(dk_ref), atol=1e-13, rtol=1e-12)
+
+
+@pytest.mark.parametrize("model", ["k1", "k2"])
+def test_cov_only_matches(model):
+    rng = np.random.RandomState(3)
+    t = np.arange(1.0, 101.0)
+    theta = random_theta(model, rng)
+    k_ref = ref.MODELS[model]["cov"](t, theta, 0.05)
+    k_p = cov.cov_pallas(model, t, theta, 0.05)
+    np.testing.assert_allclose(np.array(k_p), np.array(k_ref), atol=1e-13, rtol=1e-12)
+
+
+@pytest.mark.parametrize("model", ["k1", "k2"])
+def test_random_sweep(model):
+    """Hypothesis-style sweep: 20 random (shape, theta, sigma_n) cases."""
+    for case in range(20):
+        rng = np.random.RandomState(1000 + case)
+        n = int(rng.randint(5, 90))
+        # irregular sampling, sometimes clustered
+        t = np.sort(rng.exponential(2.0, size=n).cumsum())
+        theta = random_theta(model, rng)
+        sn = float(rng.uniform(0.001, 0.5))
+        k_ref, dk_ref = ref.MODELS[model]["cov_grads"](t, theta, sn)
+        k_p, dk_p = cov.cov_and_grads_pallas(model, t, theta, sn)
+        np.testing.assert_allclose(
+            np.array(k_p), np.array(k_ref), atol=1e-12, rtol=1e-11,
+            err_msg=f"case {case} n={n}",
+        )
+        np.testing.assert_allclose(
+            np.array(dk_p), np.array(dk_ref), atol=1e-12, rtol=1e-11,
+            err_msg=f"case {case} n={n}",
+        )
+
+
+def test_noise_only_on_diagonal():
+    t = np.arange(1.0, 41.0)
+    theta = np.array([3.5, 1.5, 0.0])
+    k0 = np.array(cov.cov_pallas("k1", t, theta, 0.0))
+    k1 = np.array(cov.cov_pallas("k1", t, theta, 0.3))
+    diff = k1 - k0
+    off = diff - np.diag(np.diag(diff))
+    assert np.abs(off).max() < 1e-15
+    np.testing.assert_allclose(np.diag(diff), 0.09, atol=1e-14)
+
+
+def test_compact_support_zeroes_long_lags():
+    # T0 = e^0 = 1 with unit spacing: everything off-diagonal is outside
+    # the Wendland support
+    t = np.arange(0.0, 50.0)
+    theta = np.array([0.0, 1.5, 0.0])
+    k = np.array(cov.cov_pallas("k1", t, theta, 0.0))
+    off = k - np.diag(np.diag(k))
+    assert np.abs(off).max() == 0.0
+
+
+def test_grads_match_finite_differences():
+    """Analytic dK from the kernel vs central differences of the oracle."""
+    rng = np.random.RandomState(9)
+    t = np.sort(rng.uniform(0.0, 60.0, size=25))
+    theta = random_theta("k2", rng)
+    _, dk = cov.cov_and_grads_pallas("k2", t, theta, 0.1)
+    dk = np.array(dk)
+    h = 1e-6
+    for a in range(5):
+        tp, tm = theta.copy(), theta.copy()
+        tp[a] += h
+        tm[a] -= h
+        fd = (
+            np.array(ref.cov_k2(t, tp, 0.1)) - np.array(ref.cov_k2(t, tm, 0.1))
+        ) / (2 * h)
+        np.testing.assert_allclose(dk[a], fd, atol=1e-6, rtol=1e-5)

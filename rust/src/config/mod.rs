@@ -1,0 +1,182 @@
+//! Run configuration: a TOML-subset parser (no `serde` offline) plus the
+//! typed [`RunConfig`] consumed by the CLI and examples.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! float, integer, boolean and flat-array values, `#` comments.
+
+mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::coordinator::{ModelSpec, PipelineConfig};
+use crate::nested::NestedOptions;
+use crate::optimize::{CgOptions, MultistartOptions};
+use crate::priors::ScalePrior;
+
+/// Typed configuration for a gpfast run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub models: Vec<String>,
+    pub sigma_n: f64,
+    pub restarts: usize,
+    pub nlive: usize,
+    pub run_nested: bool,
+    pub backend: String,
+    pub workers: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            seed: 20160125, // the paper's DOI date
+            models: vec!["k1".into(), "k2".into()],
+            sigma_n: 0.1,
+            restarts: 10,
+            nlive: 400,
+            run_nested: false,
+            backend: "auto".into(),
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file; missing keys keep defaults.
+    pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> crate::Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("run", "seed") {
+            cfg.seed = v.as_int().ok_or_else(|| anyhow::anyhow!("run.seed must be int"))? as u64;
+        }
+        if let Some(v) = doc.get("run", "models") {
+            cfg.models = v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("run.models must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow::anyhow!("model names must be strings"))
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get("run", "sigma_n") {
+            cfg.sigma_n = v.as_float().ok_or_else(|| anyhow::anyhow!("run.sigma_n"))?;
+        }
+        if let Some(v) = doc.get("train", "restarts") {
+            cfg.restarts = v.as_int().ok_or_else(|| anyhow::anyhow!("train.restarts"))? as usize;
+        }
+        if let Some(v) = doc.get("nested", "nlive") {
+            cfg.nlive = v.as_int().ok_or_else(|| anyhow::anyhow!("nested.nlive"))? as usize;
+        }
+        if let Some(v) = doc.get("nested", "enabled") {
+            cfg.run_nested = v.as_bool().ok_or_else(|| anyhow::anyhow!("nested.enabled"))?;
+        }
+        if let Some(v) = doc.get("runtime", "backend") {
+            cfg.backend =
+                v.as_str().ok_or_else(|| anyhow::anyhow!("runtime.backend"))?.to_string();
+        }
+        if let Some(v) = doc.get("runtime", "workers") {
+            cfg.workers = v.as_int().ok_or_else(|| anyhow::anyhow!("runtime.workers"))? as usize;
+        }
+        if let Some(v) = doc.get("runtime", "artifacts_dir") {
+            cfg.artifacts_dir =
+                v.as_str().ok_or_else(|| anyhow::anyhow!("runtime.artifacts_dir"))?.to_string();
+        }
+        Ok(cfg)
+    }
+
+    /// Materialise the pipeline configuration.
+    pub fn pipeline(&self) -> crate::Result<PipelineConfig> {
+        let models = self
+            .models
+            .iter()
+            .map(|s| ModelSpec::parse(s))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(PipelineConfig {
+            models,
+            sigma_n: self.sigma_n,
+            train: crate::coordinator::TrainOptions {
+                multistart: MultistartOptions {
+                    restarts: self.restarts,
+                    cg: CgOptions::default(),
+                    ..Default::default()
+                },
+                extra_starts: Vec::new(),
+            },
+            scale_prior: ScalePrior::default(),
+            run_nested: self.run_nested,
+            nested: NestedOptions { nlive: self.nlive, ..Default::default() },
+            workers: self.workers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# gpfast run configuration
+[run]
+seed = 42
+models = ["k1", "k2", "k3"]
+sigma_n = 0.01
+
+[train]
+restarts = 5
+
+[nested]
+enabled = true
+nlive = 250
+
+[runtime]
+backend = "native"
+workers = 2
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.models, vec!["k1", "k2", "k3"]);
+        assert_eq!(cfg.sigma_n, 0.01);
+        assert_eq!(cfg.restarts, 5);
+        assert!(cfg.run_nested);
+        assert_eq!(cfg.nlive, 250);
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.workers, 2);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let cfg = RunConfig::from_toml("[run]\nseed = 1\n").unwrap();
+        assert_eq!(cfg.seed, 1);
+        assert_eq!(cfg.models, vec!["k1", "k2"]);
+        assert_eq!(cfg.restarts, 10);
+    }
+
+    #[test]
+    fn pipeline_materialises() {
+        let cfg = RunConfig::from_toml(SAMPLE).unwrap();
+        let p = cfg.pipeline().unwrap();
+        assert_eq!(p.models.len(), 3);
+        assert_eq!(p.train.multistart.restarts, 5);
+        assert!(p.run_nested);
+    }
+
+    #[test]
+    fn bad_model_rejected_at_pipeline() {
+        let cfg = RunConfig::from_toml("[run]\nmodels = [\"nope\"]\n").unwrap();
+        assert!(cfg.pipeline().is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal TOML-subset parser: sections, scalar values, flat arrays,
+//! comments. Enough for run configuration files; not a general TOML
+//! implementation (no nested tables, no multi-line strings, no dates).
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (TOML semantic convenience).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key) → value`. Keys before any section
+/// header live in section `""`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let v = parse_value(value.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.values.insert((section.clone(), key.trim().to_string()), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but safe for our subset: a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> crate::Result<TomlValue> {
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+/// Split a flat array body on commas (no nested arrays in our subset).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nx = 1.5\ny = \"hi\"\nz = true\n[b]\nx = -3\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int(), Some(1));
+        assert_eq!(doc.get("a", "x").unwrap().as_float(), Some(1.5));
+        assert_eq!(doc.get("a", "y").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("a", "z").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("b", "x").unwrap().as_int(), Some(-3));
+        assert!(doc.get("a", "missing").is_none());
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse("[s]\nm = [\"k1\", \"k2\"]\nn = [1, 2, 3]\ne = []\n").unwrap();
+        let m = doc.get("s", "m").unwrap().as_array().unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1].as_str(), Some("k2"));
+        let n = doc.get("s", "n").unwrap().as_array().unwrap();
+        assert_eq!(n[2].as_int(), Some(3));
+        assert!(doc.get("s", "e").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc = TomlDoc::parse("# header\nx = 5 # trailing\ns = \"a # not comment\"\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_int(), Some(5));
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = TomlDoc::parse("a = 2\nb = 2.0\nc = 1e3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int(), Some(2));
+        assert!(doc.get("", "b").unwrap().as_int().is_none());
+        assert_eq!(doc.get("", "b").unwrap().as_float(), Some(2.0));
+        assert_eq!(doc.get("", "c").unwrap().as_float(), Some(1000.0));
+        // int promotes to float
+        assert_eq!(doc.get("", "a").unwrap().as_float(), Some(2.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("x = @bad\n").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! A small fixed-size worker pool over std threads + channels.
+//!
+//! No `tokio`/`rayon` in the offline build image, so the coordinator
+//! carries its own: submit boxed jobs, collect results in submission
+//! order, cooperative shutdown. Invariants (every job runs exactly once,
+//! order-stable collection, no deadlock on drop) are property-tested.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("gpfast-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .expect("pool workers all dead");
+    }
+
+    /// Map `inputs` through `f` on the pool, collecting results in input
+    /// order. `f` must be cloneable across threads.
+    pub fn map<I, O, F>(&self, inputs: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send + 'static,
+        O: Send + 'static,
+        F: Fn(I) -> O + Send + Sync + Clone + 'static,
+    {
+        let n = inputs.len();
+        let (otx, orx): (Sender<(usize, O)>, Receiver<(usize, O)>) = channel();
+        for (idx, input) in inputs.into_iter().enumerate() {
+            let otx = otx.clone();
+            let f = f.clone();
+            self.submit(Box::new(move || {
+                let out = f(input);
+                // receiver may have been dropped if the caller panicked
+                let _ = otx.send((idx, out));
+            }));
+        }
+        drop(otx);
+        let mut results: Vec<Option<O>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (idx, out) = orx.recv().expect("worker dropped result channel");
+            results[idx] = Some(out);
+        }
+        results.into_iter().map(|o| o.expect("missing result")).collect()
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map((0..100).collect(), |x: usize| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let _ = pool.map((0..57).collect::<Vec<usize>>(), move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 57);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..20 {
+                let c = Arc::clone(&counter);
+                pool.submit(Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            // pool dropped here: must process or discard without hanging
+        }
+        // all submitted jobs ran (drop closes the queue after draining)
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn size_is_clamped_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map(vec![1, 2, 3], |x: i32| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_invariants_property() {
+        crate::propcheck::property("pool runs all jobs once, ordered", 20, |g| {
+            let workers = g.usize(1..6);
+            let jobs = g.usize(0..40);
+            let pool = WorkerPool::new(workers);
+            let out = pool.map((0..jobs).collect(), |x: usize| 2 * x + 1);
+            if out.len() != jobs {
+                return Err(format!("expected {jobs} results, got {}", out.len()));
+            }
+            for (i, v) in out.iter().enumerate() {
+                if *v != 2 * i + 1 {
+                    return Err(format!("slot {i} has {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

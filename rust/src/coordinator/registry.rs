@@ -1,0 +1,108 @@
+//! Model registry: thread-safe, serialisable specs that workers can turn
+//! into concrete [`CovarianceModel`]s (the models themselves hold
+//! `Box<dyn>` kernels and are built per worker).
+
+use crate::kernels::{
+    paper_k1, paper_k2, CovarianceModel, Matern32, Matern52, Periodic, ProductKernel,
+    SquaredExponential, Wendland,
+};
+
+/// A buildable model description.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// The paper's k₁ (eq. 3.1).
+    K1,
+    /// The paper's k₂ (eq. 3.2).
+    K2,
+    /// Wendland × SE — an aperiodic control model.
+    WendlandSe,
+    /// Wendland × Matérn-3/2.
+    WendlandM32,
+    /// Wendland × Matérn-5/2.
+    WendlandM52,
+    /// k₂ plus a third periodic component (the paper's §3(b) fn. 8
+    /// "three-timescale model" extension).
+    K3,
+}
+
+impl ModelSpec {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "k1" => Ok(Self::K1),
+            "k2" => Ok(Self::K2),
+            "k3" => Ok(Self::K3),
+            "wendland-se" => Ok(Self::WendlandSe),
+            "wendland-m32" => Ok(Self::WendlandM32),
+            "wendland-m52" => Ok(Self::WendlandM52),
+            other => anyhow::bail!(
+                "unknown model '{other}' (k1|k2|k3|wendland-se|wendland-m32|wendland-m52)"
+            ),
+        }
+    }
+
+    /// Build a concrete model with fixed noise σ_n.
+    pub fn build(&self, sigma_n: f64) -> CovarianceModel {
+        match self {
+            Self::K1 => paper_k1(sigma_n),
+            Self::K2 => paper_k2(sigma_n),
+            Self::K3 => {
+                let kernel = ProductKernel::new(vec![
+                    Box::new(Wendland),
+                    Box::new(Periodic::new(1)),
+                    Box::new(Periodic::new(2)),
+                    Box::new(Periodic::new(3)),
+                ])
+                // T₁ ≤ T₂ ≤ T₃ (φ indices 1, 3, 5)
+                .with_constraints(vec![(1, 3), (3, 5)]);
+                CovarianceModel::new("k3", Box::new(kernel), sigma_n)
+            }
+            Self::WendlandSe => {
+                let kernel = ProductKernel::new(vec![
+                    Box::new(Wendland),
+                    Box::new(SquaredExponential::new(1)),
+                ]);
+                CovarianceModel::new("wendland-se", Box::new(kernel), sigma_n)
+            }
+            Self::WendlandM32 => {
+                let kernel =
+                    ProductKernel::new(vec![Box::new(Wendland), Box::new(Matern32::new(1))]);
+                CovarianceModel::new("wendland-m32", Box::new(kernel), sigma_n)
+            }
+            Self::WendlandM52 => {
+                let kernel =
+                    ProductKernel::new(vec![Box::new(Wendland), Box::new(Matern52::new(1))]);
+                CovarianceModel::new("wendland-m52", Box::new(kernel), sigma_n)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["k1", "k2", "k3", "wendland-se", "wendland-m32", "wendland-m52"] {
+            let spec = ModelSpec::parse(s).unwrap();
+            let model = spec.build(0.1);
+            assert_eq!(model.name, s);
+        }
+        assert!(ModelSpec::parse("k9").is_err());
+    }
+
+    #[test]
+    fn dims() {
+        assert_eq!(ModelSpec::K1.build(0.1).dim(), 3);
+        assert_eq!(ModelSpec::K2.build(0.1).dim(), 5);
+        assert_eq!(ModelSpec::K3.build(0.1).dim(), 7);
+        assert_eq!(ModelSpec::WendlandSe.build(0.1).dim(), 2);
+    }
+
+    #[test]
+    fn k3_constraints_chain() {
+        let m = ModelSpec::K3.build(0.1);
+        assert_eq!(m.kernel.ordering_constraints(), vec![(1, 3), (3, 5)]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Comparison reports: the pipeline's structured output, renderable as a
+//! paper-style table or as JSON for downstream tooling.
+
+use crate::util::{Json, Table};
+
+/// Nested-sampling verification attached to a model (the paper's
+/// `ln Z_num` column).
+#[derive(Clone, Debug)]
+pub struct NestedReport {
+    pub ln_z: f64,
+    pub ln_z_err: f64,
+    pub n_evals: usize,
+    pub information: f64,
+    pub wall_secs: f64,
+}
+
+/// Everything the pipeline learned about one model.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub name: String,
+    pub param_names: Vec<String>,
+    pub theta_hat: Vec<f64>,
+    /// 1σ error bars from the inverse Hessian (§2(a)).
+    pub sigma: Vec<f64>,
+    pub lnp_peak: f64,
+    pub sigma_f_hat: f64,
+    /// Laplace ln Z_est (eq. 2.13).
+    pub ln_z: f64,
+    /// Laplace approximation flagged untrustworthy (non-PD Hessian,
+    /// boundary peak, or unconverged optimiser) — the paper's bold-faced
+    /// (k₂, n=30) case.
+    pub suspect: bool,
+    pub n_evals: usize,
+    pub n_modes: usize,
+    pub restarts: usize,
+    pub wall_secs: f64,
+    pub nested: Option<NestedReport>,
+}
+
+/// A ranked model-comparison report.
+#[derive(Clone, Debug)]
+pub struct ComparisonReport {
+    pub dataset: String,
+    pub n: usize,
+    /// Models sorted by ln Z descending.
+    pub models: Vec<ModelReport>,
+}
+
+impl ComparisonReport {
+    pub fn ranked(dataset: String, n: usize, mut models: Vec<ModelReport>) -> Self {
+        models.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap());
+        Self { dataset, n, models }
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelReport> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// `ln B = ln Z_a − ln Z_b` (Laplace).
+    pub fn ln_bayes(&self, a: &str, b: &str) -> Option<f64> {
+        Some(self.model(a)?.ln_z - self.model(b)?.ln_z)
+    }
+
+    /// Paper-style text table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "model", "lnP_peak", "lnZ_est", "lnZ_num", "evals", "modes", "flag",
+        ]);
+        for m in &self.models {
+            let (num, nev) = match &m.nested {
+                Some(ns) => (
+                    format!("{:.2} ± {:.2}", ns.ln_z, ns.ln_z_err),
+                    format!("{}+{}", m.n_evals, ns.n_evals),
+                ),
+                None => ("—".to_string(), format!("{}", m.n_evals)),
+            };
+            t.add_row(vec![
+                m.name.clone(),
+                format!("{:.2}", m.lnp_peak),
+                format!("{:.2}", m.ln_z),
+                num,
+                nev,
+                format!("{}", m.n_modes),
+                if m.suspect { "SUSPECT".to_string() } else { String::new() },
+            ]);
+        }
+        let mut out = format!("dataset {} (n = {})\n", self.dataset, self.n);
+        out.push_str(&t.render());
+        if self.models.len() >= 2 {
+            let b = self.models[0].ln_z - self.models[1].ln_z;
+            out.push_str(&format!(
+                "ln B({} over {}) = {:.2}  [{}]\n",
+                self.models[0].name,
+                self.models[1].name,
+                b,
+                crate::evidence::interpret_ln_bayes(b)
+            ));
+        }
+        out
+    }
+
+    /// JSON form for machine consumption / EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("n", self.n.into()),
+            (
+                "models",
+                Json::Arr(
+                    self.models
+                        .iter()
+                        .map(|m| {
+                            let mut fields = vec![
+                                ("name", Json::Str(m.name.clone())),
+                                (
+                                    "param_names",
+                                    Json::Arr(
+                                        m.param_names
+                                            .iter()
+                                            .map(|s| Json::Str(s.clone()))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("theta_hat", Json::nums(&m.theta_hat)),
+                                ("sigma", Json::nums(&m.sigma)),
+                                ("lnp_peak", m.lnp_peak.into()),
+                                ("sigma_f_hat", m.sigma_f_hat.into()),
+                                ("ln_z", m.ln_z.into()),
+                                ("suspect", m.suspect.into()),
+                                ("n_evals", m.n_evals.into()),
+                                ("n_modes", m.n_modes.into()),
+                                ("restarts", m.restarts.into()),
+                                ("wall_secs", m.wall_secs.into()),
+                            ];
+                            if let Some(ns) = &m.nested {
+                                fields.push((
+                                    "nested",
+                                    Json::obj(vec![
+                                        ("ln_z", ns.ln_z.into()),
+                                        ("ln_z_err", ns.ln_z_err.into()),
+                                        ("n_evals", ns.n_evals.into()),
+                                        ("information", ns.information.into()),
+                                        ("wall_secs", ns.wall_secs.into()),
+                                    ]),
+                                ));
+                            }
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(name: &str, ln_z: f64) -> ModelReport {
+        ModelReport {
+            name: name.to_string(),
+            param_names: vec!["phi0".into()],
+            theta_hat: vec![1.0],
+            sigma: vec![0.1],
+            lnp_peak: -10.0,
+            sigma_f_hat: 1.0,
+            ln_z,
+            suspect: false,
+            n_evals: 100,
+            n_modes: 1,
+            restarts: 10,
+            wall_secs: 0.5,
+            nested: None,
+        }
+    }
+
+    #[test]
+    fn ranking_and_bayes() {
+        let r = ComparisonReport::ranked(
+            "d".into(),
+            100,
+            vec![dummy("k1", -20.0), dummy("k2", -19.0)],
+        );
+        assert_eq!(r.models[0].name, "k2");
+        assert!((r.ln_bayes("k2", "k1").unwrap() - 1.0).abs() < 1e-12);
+        assert!(r.ln_bayes("k2", "kX").is_none());
+    }
+
+    #[test]
+    fn render_contains_table_and_bayes_line() {
+        let r = ComparisonReport::ranked(
+            "synth".into(),
+            30,
+            vec![dummy("k1", -17.77), dummy("k2", -18.82)],
+        );
+        let text = r.render();
+        assert!(text.contains("lnZ_est"));
+        assert!(text.contains("ln B(k1 over k2)"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = dummy("k2", -19.22);
+        m.nested = Some(NestedReport {
+            ln_z: -19.22,
+            ln_z_err: 0.11,
+            n_evals: 30000,
+            information: 12.0,
+            wall_secs: 60.0,
+        });
+        let r = ComparisonReport::ranked("synth".into(), 100, vec![m]);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(
+            parsed.get("models").unwrap().as_arr().unwrap()[0]
+                .get("nested")
+                .unwrap()
+                .get("n_evals")
+                .unwrap()
+                .as_usize(),
+            Some(30000)
+        );
+    }
+}

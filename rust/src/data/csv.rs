@@ -1,0 +1,99 @@
+//! Two-column CSV import/export for datasets and report series.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use super::Dataset;
+
+/// Write a dataset as `t,y` CSV with a header line.
+pub fn write_dataset(path: &Path, data: &Dataset) -> crate::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "t,y")?;
+    for (t, y) in data.t.iter().zip(&data.y) {
+        writeln!(f, "{t},{y}")?;
+    }
+    Ok(())
+}
+
+/// Write arbitrary named columns (all same length).
+pub fn write_columns(path: &Path, names: &[&str], cols: &[&[f64]]) -> crate::Result<()> {
+    anyhow::ensure!(names.len() == cols.len(), "names/cols mismatch");
+    if let Some(first) = cols.first() {
+        anyhow::ensure!(
+            cols.iter().all(|c| c.len() == first.len()),
+            "ragged columns"
+        );
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", names.join(","))?;
+    let rows = cols.first().map_or(0, |c| c.len());
+    for r in 0..rows {
+        let line: Vec<String> = cols.iter().map(|c| format!("{}", c[r])).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a `t,y` CSV (header optional; extra columns ignored).
+pub fn read_dataset(path: &Path) -> crate::Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let mut t = Vec::new();
+    let mut y = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let a = parts.next().unwrap_or("");
+        let b = parts.next().unwrap_or("");
+        match (a.trim().parse::<f64>(), b.trim().parse::<f64>()) {
+            (Ok(tv), Ok(yv)) => {
+                t.push(tv);
+                y.push(yv);
+            }
+            _ if lineno == 0 => continue, // header
+            _ => anyhow::bail!("bad CSV line {} in {}: '{line}'", lineno + 1, path.display()),
+        }
+    }
+    anyhow::ensure!(t.len() >= 2, "CSV {} has fewer than 2 data rows", path.display());
+    let label = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    Ok(Dataset::new(t, y, label))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("gpfast_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.csv");
+        let d = Dataset::new(vec![0.0, 0.5, 1.0], vec![1.0, -1.0, 2.5], "x");
+        write_dataset(&p, &d).unwrap();
+        let back = read_dataset(&p).unwrap();
+        assert_eq!(back.t, d.t);
+        assert_eq!(back.y, d.y);
+    }
+
+    #[test]
+    fn rejects_garbage_row() {
+        let dir = std::env::temp_dir().join("gpfast_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "t,y\n1,2\nnope,3\n").unwrap();
+        assert!(read_dataset(&p).is_err());
+    }
+
+    #[test]
+    fn columns_writer() {
+        let dir = std::env::temp_dir().join("gpfast_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.csv");
+        write_columns(&p, &["a", "b"], &[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b"));
+    }
+}

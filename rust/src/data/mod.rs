@@ -1,0 +1,71 @@
+//! Dataset handling: synthetic GP draws (§3(a)), the Woods-Hole tidal
+//! simulator (§3(b) substitute — see DESIGN.md §Substitutions), and CSV
+//! import/export.
+
+pub mod synthetic;
+pub mod tidal;
+pub mod csv;
+
+/// A 1-D regression dataset `{(t_i, y_i)}` — the paper's `D = {x, y}`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Input (time) vector.
+    pub t: Vec<f64>,
+    /// Output vector.
+    pub y: Vec<f64>,
+    /// Human-readable provenance tag carried into reports.
+    pub label: String,
+}
+
+impl Dataset {
+    pub fn new(t: Vec<f64>, y: Vec<f64>, label: impl Into<String>) -> Self {
+        assert_eq!(t.len(), y.len(), "t/y length mismatch");
+        Self { t, y, label: label.into() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// First `n` points (the paper's "first lunar month" style subsetting).
+    pub fn head(&self, n: usize) -> Dataset {
+        Dataset {
+            t: self.t[..n.min(self.len())].to_vec(),
+            y: self.y[..n.min(self.len())].to_vec(),
+            label: format!("{}[..{}]", self.label, n.min(self.len())),
+        }
+    }
+
+    /// Subtract the mean of `y` (the paper assumes zero-mean GPs).
+    pub fn demean(mut self) -> Dataset {
+        let m = self.y.iter().sum::<f64>() / self.len() as f64;
+        for v in &mut self.y {
+            *v -= m;
+        }
+        self
+    }
+
+    /// The sampling geometry (δt, ΔT).
+    pub fn span(&self) -> crate::kernels::DataSpan {
+        crate::kernels::DataSpan::from_times(&self.t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_and_demean() {
+        let d = Dataset::new(vec![0.0, 1.0, 2.0, 3.0], vec![1.0, 3.0, 5.0, 7.0], "x");
+        let h = d.head(2);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.y, vec![1.0, 3.0]);
+        let dm = d.demean();
+        assert!((dm.y.iter().sum::<f64>()).abs() < 1e-12);
+    }
+}

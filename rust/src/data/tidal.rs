@@ -1,0 +1,173 @@
+//! Woods-Hole tidal simulator — the §3(b) data substitute.
+//!
+//! The paper analyses NOAA tide-gauge mean-sea-level data from Woods Hole,
+//! MA (3 Jan – 15 Jun 2014, 2-hour cadence, n = 1968; first lunar month
+//! n = 328). That feed is not available offline, so we synthesise a series
+//! with the same physical content (DESIGN.md §Substitutions):
+//!
+//! * the principal **semidiurnal** constituents — M2 (12.4206 h), S2
+//!   (12.0000 h), N2 (12.6583 h) — whose M2/S2 beat produces the
+//!   spring–neap (≈ lunar-month) modulation visible in the paper's Fig. 3;
+//! * the principal **diurnal** constituents — K1 (23.9345 h), O1
+//!   (25.8193 h) — which create the height difference between the two
+//!   daily tides (the paper's T₂ ≈ 24 h detection);
+//! * a weather-band **red-noise** surge component (AR(1) over the sample
+//!   cadence), plus white measurement noise at the paper's σ_n = 10⁻²
+//!   fractional level.
+//!
+//! Amplitude ratios follow the NOAA harmonic constants for station
+//! 8447930 (Woods Hole): M2 is dominant; the diurnals are ≈ ⅓ of M2.
+//! What matters for reproduction is not the exact amplitudes but that the
+//! data contain exactly one strong ~12.4 h line plus weaker ~24 h
+//! structure — which is what drives the paper's k₂-over-k₁ preference.
+
+use crate::rng::Xoshiro256;
+
+use super::Dataset;
+
+/// One harmonic constituent: period (hours), amplitude (m), phase (rad).
+#[derive(Clone, Copy, Debug)]
+pub struct Constituent {
+    pub name: &'static str,
+    pub period_h: f64,
+    pub amplitude: f64,
+    pub phase: f64,
+}
+
+/// Woods-Hole-like constituent set (NOAA station 8447930 ratios).
+pub const WOODS_HOLE: [Constituent; 5] = [
+    Constituent { name: "M2", period_h: 12.4206, amplitude: 0.262, phase: 0.00 },
+    Constituent { name: "S2", period_h: 12.0000, amplitude: 0.055, phase: 1.10 },
+    Constituent { name: "N2", period_h: 12.6583, amplitude: 0.062, phase: 2.30 },
+    Constituent { name: "K1", period_h: 23.9345, amplitude: 0.070, phase: 0.70 },
+    Constituent { name: "O1", period_h: 25.8193, amplitude: 0.055, phase: 3.50 },
+];
+
+/// Configuration of the simulator.
+#[derive(Clone, Debug)]
+pub struct TidalConfig {
+    /// Sample interval in hours (paper: 2 h).
+    pub cadence_h: f64,
+    /// Number of samples (paper: 1968 for six lunar months, 328 for one).
+    pub n: usize,
+    /// AR(1) weather-surge amplitude (m).
+    pub surge_amplitude: f64,
+    /// AR(1) correlation time (hours).
+    pub surge_corr_h: f64,
+    /// White measurement-noise sd as a fraction of signal sd (paper σ_n).
+    pub noise_fraction: f64,
+    pub seed: u64,
+}
+
+impl TidalConfig {
+    /// Paper's "six lunar months" series: n = 1968 at 2-hour cadence.
+    pub fn six_lunar_months(seed: u64) -> Self {
+        Self {
+            cadence_h: 2.0,
+            n: 1968,
+            surge_amplitude: 0.04,
+            surge_corr_h: 36.0,
+            noise_fraction: 1e-2,
+            seed,
+        }
+    }
+
+    /// Paper's "first lunar month" subset size.
+    pub const LUNAR_MONTH_N: usize = 328;
+}
+
+/// Generate the tidal series. Times are reported in **hours** so the
+/// recovered timescales read directly in the paper's units
+/// (T₁ ≈ 12.4 h, T₂ ≈ 24 h).
+pub fn generate_tidal(cfg: &TidalConfig) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let mut t = Vec::with_capacity(cfg.n);
+    let mut y = Vec::with_capacity(cfg.n);
+    // AR(1) surge: x_{k+1} = ρ x_k + √(1−ρ²) ε
+    let rho = (-cfg.cadence_h / cfg.surge_corr_h).exp();
+    let innov = (1.0 - rho * rho).sqrt();
+    let mut surge = 0.0;
+    for k in 0..cfg.n {
+        let tk = k as f64 * cfg.cadence_h;
+        let mut h = 0.0;
+        for c in &WOODS_HOLE {
+            h += c.amplitude * (2.0 * std::f64::consts::PI * tk / c.period_h + c.phase).cos();
+        }
+        surge = rho * surge + innov * rng.normal();
+        h += cfg.surge_amplitude * surge;
+        t.push(tk);
+        y.push(h);
+    }
+    // add fractional white measurement noise
+    let sd = {
+        let m = y.iter().sum::<f64>() / y.len() as f64;
+        (y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / y.len() as f64).sqrt()
+    };
+    let noise_sd = cfg.noise_fraction * sd;
+    for v in &mut y {
+        *v += noise_sd * rng.normal();
+    }
+    Dataset::new(t, y, format!("tidal-woods-hole-sim-n{}", cfg.n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_paper_shape() {
+        let d = generate_tidal(&TidalConfig::six_lunar_months(1));
+        assert_eq!(d.len(), 1968);
+        assert_eq!(d.t[1] - d.t[0], 2.0);
+        // six lunar months ≈ 164 days
+        assert!((d.t.last().unwrap() - 1967.0 * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dominant_period_is_semidiurnal() {
+        // crude periodogram over candidate periods: the strongest response
+        // must be near M2 = 12.42 h, not near 24 h
+        let d = generate_tidal(&TidalConfig::six_lunar_months(2));
+        let power = |period: f64| -> f64 {
+            let (mut c, mut s) = (0.0, 0.0);
+            for (tk, yk) in d.t.iter().zip(&d.y) {
+                let w = 2.0 * std::f64::consts::PI * tk / period;
+                c += yk * w.cos();
+                s += yk * w.sin();
+            }
+            c * c + s * s
+        };
+        let p_m2 = power(12.4206);
+        let p_24 = power(23.9345);
+        let p_off = power(17.3);
+        assert!(p_m2 > p_24, "M2 must dominate diurnal");
+        assert!(p_24 > 20.0 * p_off, "diurnal must beat a non-tidal period");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_tidal(&TidalConfig::six_lunar_months(7));
+        let b = generate_tidal(&TidalConfig::six_lunar_months(7));
+        assert_eq!(a.y, b.y);
+        let c = generate_tidal(&TidalConfig::six_lunar_months(8));
+        assert!(a.y.iter().zip(&c.y).any(|(x, y)| (x - y).abs() > 1e-9));
+    }
+
+    #[test]
+    fn spring_neap_modulation_present() {
+        // envelope of the semidiurnal signal should vary over a lunar month
+        // (M2+S2 beat, period ≈ 14.77 d = 354.4 h)
+        let cfg = TidalConfig {
+            surge_amplitude: 0.0,
+            noise_fraction: 0.0,
+            ..TidalConfig::six_lunar_months(3)
+        };
+        let d = generate_tidal(&cfg);
+        // daily max over first and eighth days of a spring-neap cycle differ
+        let day = (24.0 / cfg.cadence_h) as usize;
+        let max_abs = |lo: usize| d.y[lo..lo + day].iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let spring = (0..14).map(|k| max_abs(k * day)).fold(0.0f64, f64::max);
+        let neap = (0..14).map(|k| max_abs(k * day)).fold(f64::INFINITY, f64::min);
+        assert!(spring / neap > 1.15, "spring/neap ratio {}", spring / neap);
+    }
+}

@@ -1,0 +1,181 @@
+//! Laplace-approximation hyperevidence and Bayes factors — §2(a),
+//! eqs. (2.10)–(2.13), in the σ_f-profiled formulation the paper actually
+//! computes with (§2(b)).
+//!
+//! With flat priors over the reduced coordinates ϑ (volume `V_ϑ`) and a
+//! truncated Jeffreys prior on σ_f, the hyperevidence factorises as
+//!
+//! `Z ≈ [marg const (eq. 2.18)] · (1/V_ϑ) · P_max(ϑ̂) ·
+//!      √((2π)^{m−1} / det H)`
+//!
+//! where `H = −∂²ln P_max` at the peak (eq. 2.19). The inverse Hessian is
+//! simultaneously the covariance of the maximum-hyperlikelihood estimator
+//! — the hyperparameter error bars quoted in §3(b).
+
+use crate::linalg::{Lu, Matrix};
+use crate::math::LN_2PI;
+use crate::priors::{BoxPrior, ScalePrior};
+
+/// A Laplace evidence estimate and its ingredients.
+#[derive(Clone, Debug)]
+pub struct LaplaceEvidence {
+    /// ln Z — the paper's `ln Z_est`.
+    pub ln_z: f64,
+    /// ln P_max(ϑ̂).
+    pub ln_p_peak: f64,
+    /// ln det H.
+    pub ln_det_h: f64,
+    /// ln V_ϑ (Occam volume factor actually subtracted).
+    pub ln_volume: f64,
+    /// σ_f-marginalisation constant (eq. 2.18).
+    pub marg_const: f64,
+    /// Per-parameter 1σ error bars from diag(H⁻¹).
+    pub sigma: Vec<f64>,
+    /// H⁻¹ — the estimator covariance (Fig. 2 Gaussian overlay).
+    pub covariance: Matrix,
+    /// True when H was not positive definite and the estimate should not
+    /// be trusted (the paper's flagged (k₂, n = 30) failure mode).
+    pub suspect: bool,
+}
+
+/// Assemble the Laplace evidence from a located peak and its Hessian.
+///
+/// `n` is the dataset size (for the eq.-2.18 constant), `theta_hat` the
+/// peak in reduced coordinates, `ln_p_peak = ln P_max(ϑ̂)`, `hessian`
+/// `H = −∂²ln P_max|_ϑ̂`.
+pub fn laplace_evidence(
+    n: usize,
+    prior: &BoxPrior,
+    scale: &ScalePrior,
+    theta_hat: &[f64],
+    ln_p_peak: f64,
+    hessian: &Matrix,
+) -> crate::Result<LaplaceEvidence> {
+    let m = prior.dim();
+    anyhow::ensure!(hessian.rows() == m && hessian.cols() == m, "Hessian shape mismatch");
+    let lu = Lu::factor(hessian)?;
+    let (ln_det_abs, sign) = lu.logdet_abs();
+    let covariance = lu.inverse();
+    let mut suspect = sign <= 0.0;
+    let mut sigma = Vec::with_capacity(m);
+    for i in 0..m {
+        let v = covariance[(i, i)];
+        if v <= 0.0 {
+            suspect = true;
+            sigma.push(f64::NAN);
+        } else {
+            sigma.push(v.sqrt());
+        }
+    }
+    // peak on the prior boundary also invalidates the Gaussian integral
+    for (i, (&th, (lo, hi))) in theta_hat.iter().zip(&prior.bounds).enumerate() {
+        let w = (hi - lo).abs().max(1e-300);
+        if (th - lo).abs() < 1e-6 * w || (th - hi).abs() < 1e-6 * w {
+            let _ = i;
+            suspect = true;
+        }
+    }
+    let ln_volume = prior.ln_volume_at(theta_hat);
+    let marg_const = crate::gp::marg_constant(n, scale.sigma_lo, scale.sigma_hi);
+    let ln_z = marg_const + ln_p_peak - ln_volume + 0.5 * (m as f64) * LN_2PI
+        - 0.5 * ln_det_abs;
+    Ok(LaplaceEvidence {
+        ln_z,
+        ln_p_peak,
+        ln_det_h: ln_det_abs,
+        ln_volume,
+        marg_const,
+        sigma,
+        covariance,
+        suspect,
+    })
+}
+
+/// `ln B = ln Z_a − ln Z_b` with the paper's reading aid.
+pub fn log_bayes_factor(a: &LaplaceEvidence, b: &LaplaceEvidence) -> f64 {
+    a.ln_z - b.ln_z
+}
+
+/// Jeffreys-scale interpretation of a log Bayes factor (for reports).
+pub fn interpret_ln_bayes(ln_b: f64) -> &'static str {
+    let b = ln_b.abs();
+    if b < 1.0 {
+        "inconclusive"
+    } else if b < 2.5 {
+        "weak"
+    } else if b < 5.0 {
+        "moderate"
+    } else {
+        "decisive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::priors::BoxPrior;
+
+    fn flat_prior(m: usize, lo: f64, hi: f64) -> BoxPrior {
+        BoxPrior { bounds: vec![(lo, hi); m], constraints: vec![] }
+    }
+
+    /// For an exactly Gaussian ln P the Laplace "approximation" is exact:
+    /// Z = ∫ (1/V) e^{lnP̂ − ½Δᵀ H Δ} dϑ (peak well inside the box).
+    #[test]
+    fn exact_on_gaussian_integrand() {
+        let prior = flat_prior(2, -50.0, 50.0);
+        let scale = ScalePrior::default();
+        let h = Matrix::from_rows(&[&[2.0, 0.3], &[0.3, 1.0]]);
+        let ln_p_peak = -5.0;
+        let ev = laplace_evidence(10, &prior, &scale, &[0.0, 0.0], ln_p_peak, &h).unwrap();
+        // analytic: marg + lnP̂ − ln V + ln(2π/√det H)
+        let det: f64 = 2.0 * 1.0 - 0.09;
+        let want = ev.marg_const + ln_p_peak - (100f64.ln() * 2.0) + LN_2PI - 0.5 * det.ln();
+        assert!((ev.ln_z - want).abs() < 1e-12, "{} vs {want}", ev.ln_z);
+        assert!(!ev.suspect);
+        // error bars are sqrt of H⁻¹ diagonal
+        let hinv = Lu::factor(&h).unwrap().inverse();
+        assert!((ev.sigma[0] - hinv[(0, 0)].sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occam_penalty_grows_with_volume() {
+        let scale = ScalePrior::default();
+        let h = Matrix::eye(1);
+        let small = laplace_evidence(10, &flat_prior(1, 0.0, 1.0), &scale, &[0.5], 0.0, &h)
+            .unwrap();
+        let large = laplace_evidence(10, &flat_prior(1, -50.0, 50.0), &scale, &[0.5], 0.0, &h)
+            .unwrap();
+        assert!(small.ln_z > large.ln_z, "wider prior must be Occam-penalised");
+        assert!((small.ln_z - large.ln_z - 100f64.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn non_pd_hessian_is_flagged() {
+        let prior = flat_prior(2, -10.0, 10.0);
+        let h = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, -1.0]]); // saddle
+        let ev = laplace_evidence(10, &prior, &ScalePrior::default(), &[0.0, 0.0], 0.0, &h)
+            .unwrap();
+        assert!(ev.suspect);
+    }
+
+    #[test]
+    fn boundary_peak_is_flagged() {
+        let prior = flat_prior(1, 0.0, 1.0);
+        let h = Matrix::eye(1);
+        let ev = laplace_evidence(10, &prior, &ScalePrior::default(), &[1.0], 0.0, &h).unwrap();
+        assert!(ev.suspect);
+    }
+
+    #[test]
+    fn bayes_factor_and_interpretation() {
+        let prior = flat_prior(1, -10.0, 10.0);
+        let scale = ScalePrior::default();
+        let h = Matrix::eye(1);
+        let a = laplace_evidence(10, &prior, &scale, &[0.0], -3.0, &h).unwrap();
+        let b = laplace_evidence(10, &prior, &scale, &[0.0], -9.0, &h).unwrap();
+        assert!((log_bayes_factor(&a, &b) - 6.0).abs() < 1e-12);
+        assert_eq!(interpret_ln_bayes(6.0), "decisive");
+        assert_eq!(interpret_ln_bayes(0.3), "inconclusive");
+    }
+}

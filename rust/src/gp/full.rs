@@ -1,0 +1,209 @@
+//! The un-profiled hyperlikelihood with σ_f explicit — eqs. (2.5), (2.7),
+//! (2.9) — parametrised by `θ = [λ, ϑ…]` with `λ = ln σ_f` (the flat
+//! coordinate of the Jeffreys prior on a scale parameter).
+//!
+//! With `K = e^{2λ} K̃(ϑ)` and `Q = yᵀK̃⁻¹y`:
+//!
+//! `ln P = −½ [e^{−2λ} Q + 2nλ + ln det K̃ + n ln 2π]`
+//! `∂ln P/∂λ   = e^{−2λ} Q − n`
+//! `∂ln P/∂ϑ_a = ½ e^{−2λ} q_a − ½ Tr(W ∂_aK̃)`
+//!
+//! Used by the nested-sampling baseline (each live point carries its own
+//! σ_f) and by the σ_f-profiling ablation benchmark.
+
+use crate::kernels::CovarianceModel;
+use crate::linalg::{dot, Matrix};
+use crate::math::LN_2PI;
+
+use super::assemble::{assemble_cov_grads, hessian_contractions};
+use super::profiled::ProfiledEval;
+
+/// `ln P(y | x, [λ, ϑ])` — eq. (2.5).
+pub fn full_lnp(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta_full: &[f64],
+) -> crate::Result<f64> {
+    let (lambda, theta) = split(model, theta_full)?;
+    let ev = super::profiled::eval(model, t, y, theta)?;
+    Ok(lnp_from_eval(&ev, y.len(), lambda))
+}
+
+/// `ln P` and its gradient `[∂λ, ∂ϑ…]` — eq. (2.7) in (λ, ϑ) coordinates.
+pub fn full_lnp_grad(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta_full: &[f64],
+) -> crate::Result<(f64, Vec<f64>)> {
+    let (lambda, theta) = split(model, theta_full)?;
+    let n = y.len();
+    let (k, grads) = assemble_cov_grads(model, t, theta);
+    let ev = ProfiledEval::from_cov(k, y)?;
+    let w = ev.inverse();
+    let e2 = (-2.0 * lambda).exp();
+    let q_total = n as f64 * ev.sigma_f_hat2; // yᵀK̃⁻¹y
+    let mut g = Vec::with_capacity(model.dim() + 1);
+    g.push(e2 * q_total - n as f64);
+    for dk in &grads {
+        let va = dk.matvec(&ev.alpha);
+        let qa = dot(&ev.alpha, &va);
+        let mut tr = 0.0;
+        for i in 0..n {
+            tr += dot(w.row(i), dk.row(i));
+        }
+        g.push(0.5 * e2 * qa - 0.5 * tr);
+    }
+    Ok((lnp_from_eval(&ev, n, lambda), g))
+}
+
+/// Hessian `H = −∂²ln P/∂θ∂θ'` in (λ, ϑ) coordinates — eq. (2.9) plus the
+/// λ row/column:
+///
+/// `∂²ln P/∂λ²      = −2 e^{−2λ} Q`
+/// `∂²ln P/∂λ∂ϑ_a   = −e^{−2λ} q_a`
+/// `∂²ln P/∂ϑ_a∂ϑ_b = −½e^{−2λ}(2v_aᵀWv_b − A_ab) + ½Tr(W∂_aK̃W∂_bK̃) − ½B_ab`
+pub fn full_hessian(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta_full: &[f64],
+) -> crate::Result<Matrix> {
+    let (lambda, theta) = split(model, theta_full)?;
+    let m = model.dim();
+    let n = y.len();
+    let (k, grads) = assemble_cov_grads(model, t, theta);
+    let ev = ProfiledEval::from_cov(k, y)?;
+    let w = ev.inverse();
+    let e2 = (-2.0 * lambda).exp();
+    let q_total = n as f64 * ev.sigma_f_hat2;
+
+    let mut v = Vec::with_capacity(m);
+    let mut q = Vec::with_capacity(m);
+    let mut wm = Vec::with_capacity(m);
+    for dk in &grads {
+        let va = dk.matvec(&ev.alpha);
+        q.push(dot(&ev.alpha, &va));
+        v.push(va);
+        wm.push(w.matmul(dk));
+    }
+    let (a_c, b_c) = hessian_contractions(model, t, theta, &ev.alpha, &w);
+
+    let mut h = Matrix::zeros(m + 1, m + 1);
+    h[(0, 0)] = 2.0 * e2 * q_total; // −∂²/∂λ²
+    for a in 0..m {
+        let val = e2 * q[a]; // −∂²/∂λ∂ϑ_a
+        h[(0, a + 1)] = val;
+        h[(a + 1, 0)] = val;
+    }
+    for a in 0..m {
+        for b in a..m {
+            let mut tr_ab = 0.0;
+            for i in 0..n {
+                let ra = wm[a].row(i);
+                for (j, raj) in ra.iter().enumerate() {
+                    tr_ab += raj * wm[b][(j, i)];
+                }
+            }
+            let wv_b = w.matvec(&v[b]);
+            let vwv = dot(&v[a], &wv_b);
+            let d2 = -0.5 * e2 * (2.0 * vwv - a_c[(a, b)]) + 0.5 * tr_ab - 0.5 * b_c[(a, b)];
+            h[(a + 1, b + 1)] = -d2;
+            h[(b + 1, a + 1)] = -d2;
+        }
+    }
+    Ok(h)
+}
+
+fn lnp_from_eval(ev: &ProfiledEval, n: usize, lambda: f64) -> f64 {
+    let nf = n as f64;
+    let q = nf * ev.sigma_f_hat2;
+    -0.5 * ((-2.0 * lambda).exp() * q + 2.0 * nf * lambda + ev.chol.logdet() + nf * LN_2PI)
+}
+
+fn split<'a>(model: &CovarianceModel, theta_full: &'a [f64]) -> crate::Result<(f64, &'a [f64])> {
+    anyhow::ensure!(
+        theta_full.len() == model.dim() + 1,
+        "expected {} parameters ([ln σ_f, ϑ…]), got {}",
+        model.dim() + 1,
+        theta_full.len()
+    );
+    Ok((theta_full[0], &theta_full[1..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::draw_gp_dataset;
+    use crate::kernels::{paper_k1, PaperK1};
+    use crate::rng::Xoshiro256;
+
+    fn problem() -> (crate::kernels::CovarianceModel, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 20, &mut rng);
+        let mut theta_full = vec![0.2]; // λ = ln σ_f
+        theta_full.extend(PaperK1::truth());
+        (model, data.t, data.y, theta_full)
+    }
+
+    /// At λ = ½ ln σ̂_f², the full likelihood equals the profiled one.
+    #[test]
+    fn full_at_sigma_hat_equals_profiled() {
+        let (model, t, y, _) = problem();
+        let ev = super::super::profiled::eval(&model, &t, &y, &PaperK1::truth()).unwrap();
+        let mut tf = vec![0.5 * ev.sigma_f_hat2.ln()];
+        tf.extend(PaperK1::truth());
+        let lnp = full_lnp(&model, &t, &y, &tf).unwrap();
+        assert!((lnp - ev.lnp).abs() < 1e-9 * ev.lnp.abs(), "{lnp} vs {}", ev.lnp);
+        // and the λ-gradient vanishes there
+        let (_, g) = full_lnp_grad(&model, &t, &y, &tf).unwrap();
+        assert!(g[0].abs() < 1e-8, "∂λ at σ̂: {}", g[0]);
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        let (model, t, y, tf) = problem();
+        let (_, g) = full_lnp_grad(&model, &t, &y, &tf).unwrap();
+        for a in 0..tf.len() {
+            let h = 1e-6;
+            let mut tp = tf.clone();
+            let mut tm = tf.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let fp = full_lnp(&model, &t, &y, &tp).unwrap();
+            let fm = full_lnp(&model, &t, &y, &tm).unwrap();
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                crate::math::rel_diff(g[a], fd) < 1e-5,
+                "grad[{a}]: {} vs {fd}",
+                g[a]
+            );
+        }
+    }
+
+    #[test]
+    fn hessian_matches_fd_of_gradient() {
+        let (model, t, y, tf) = problem();
+        let hess = full_hessian(&model, &t, &y, &tf).unwrap();
+        let mdim = tf.len();
+        for a in 0..mdim {
+            let h = 1e-5;
+            let mut tp = tf.clone();
+            let mut tm = tf.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let (_, gp) = full_lnp_grad(&model, &t, &y, &tp).unwrap();
+            let (_, gm) = full_lnp_grad(&model, &t, &y, &tm).unwrap();
+            for b in 0..mdim {
+                let fd = -(gp[b] - gm[b]) / (2.0 * h);
+                assert!(
+                    crate::math::rel_diff(hess[(a, b)], fd) < 1e-4,
+                    "H[{a},{b}]: {} vs {fd}",
+                    hess[(a, b)]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Gaussian-process hyperlikelihood machinery — the paper's §2.
+//!
+//! * [`assemble`] — O(n²·m) covariance/derivative matrix assembly from a
+//!   [`crate::kernels::CovarianceModel`] (the native twin of the L1
+//!   Pallas kernel; the XLA backend produces the same matrices from AOT
+//!   artifacts).
+//! * [`profiled`] — the σ_f-profiled hyperlikelihood ln P_max (eq. 2.16),
+//!   its gradient (eq. 2.17) and Hessian (eq. 2.19), plus the
+//!   marginalisation constant of eq. (2.18). This is the training
+//!   objective used throughout the paper.
+//! * [`full`] — the un-profiled hyperlikelihood (eq. 2.5) with σ_f as an
+//!   explicit coordinate `λ = ln σ_f`, gradient (eq. 2.7) and Hessian
+//!   (eq. 2.9). Used by the nested-sampling baseline and the σ_f-profiling
+//!   ablation.
+//! * [`predict`] — the predictive distribution (eq. 2.1).
+//! * [`sample`] — GP realisation sampling (Fig. 1).
+
+pub mod assemble;
+pub mod profiled;
+pub mod full;
+pub mod predict;
+pub mod sample;
+
+pub use assemble::{assemble_cov, assemble_cov_grads, hessian_contractions};
+pub use full::{full_hessian, full_lnp, full_lnp_grad};
+pub use predict::predict;
+pub use profiled::{marg_constant, profiled_hessian, ProfiledEval};
+pub use sample::draw_realisation;

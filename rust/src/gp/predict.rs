@@ -1,0 +1,100 @@
+//! The GP predictive distribution — eq. (2.1):
+//!
+//! `ȳ(x*) = k*ᵀ K⁻¹ y`,  `σ_y²(x*) = k** − k*ᵀ K⁻¹ k*`.
+//!
+//! In σ_f-profiled form: `K = σ̂_f² K̃`, `k* = σ̂_f² k̃*`, so the mean is
+//! `k̃*ᵀ K̃⁻¹ y` (σ̂_f² cancels) and the variance is
+//! `σ̂_f² (k̃** − k̃*ᵀ K̃⁻¹ k̃*)`. The cross-covariance `k̃*` carries **no**
+//! noise term (the prediction is of the latent function, which the paper's
+//! Fig. 3 interpolants plot); `k̃** = k̃(0)`.
+
+use crate::kernels::CovarianceModel;
+use crate::linalg::dot;
+
+use super::profiled::ProfiledEval;
+
+/// Predictive mean and standard deviation at each point of `t_star`.
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    pub sd: Vec<f64>,
+}
+
+/// Predict at new inputs from a trained evaluation (peak ϑ̂, eq. 2.6).
+pub fn predict(
+    model: &CovarianceModel,
+    t: &[f64],
+    theta: &[f64],
+    ev: &ProfiledEval,
+    t_star: &[f64],
+) -> Prediction {
+    let n = t.len();
+    let mut prep = model.kernel.prepare(theta);
+    let k_ss = prep.value(0.0);
+    let mut mean = Vec::with_capacity(t_star.len());
+    let mut sd = Vec::with_capacity(t_star.len());
+    let mut k_star = vec![0.0; n];
+    for &ts in t_star {
+        for (i, &ti) in t.iter().enumerate() {
+            k_star[i] = prep.value(ts - ti);
+        }
+        mean.push(dot(&k_star, &ev.alpha));
+        let var = ev.sigma_f_hat2 * (k_ss - ev.chol.inv_quad(&k_star));
+        sd.push(var.max(0.0).sqrt());
+    }
+    Prediction { mean, sd }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::draw_gp_dataset;
+    use crate::gp::profiled::eval;
+    use crate::kernels::{paper_k1, PaperK1};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn interpolates_training_points_at_low_noise() {
+        let model = paper_k1(1e-4);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 30, &mut rng);
+        let ev = eval(&model, &data.t, &data.y, &PaperK1::truth()).unwrap();
+        let pred = predict(&model, &data.t, &PaperK1::truth(), &ev, &data.t);
+        for i in 0..data.t.len() {
+            assert!(
+                (pred.mean[i] - data.y[i]).abs() < 1e-3,
+                "point {i}: {} vs {}",
+                pred.mean[i],
+                data.y[i]
+            );
+            // predictive sd at a training point ≈ noise level — tiny
+            assert!(pred.sd[i] < 0.05);
+        }
+    }
+
+    #[test]
+    fn reverts_to_prior_far_from_data() {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 30, &mut rng);
+        let ev = eval(&model, &data.t, &data.y, &PaperK1::truth()).unwrap();
+        // T0 = e^3.5 ≈ 33; far beyond compact support the mean → 0 and the
+        // sd → σ̂_f (the prior marginal sd)
+        let far = vec![data.t.last().unwrap() + 500.0];
+        let pred = predict(&model, &data.t, &PaperK1::truth(), &ev, &far);
+        assert!(pred.mean[0].abs() < 1e-12);
+        assert!((pred.sd[0] - ev.sigma_f_hat2.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variance_shrinks_near_data() {
+        let model = paper_k1(0.01);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 40, &mut rng);
+        let ev = eval(&model, &data.t, &data.y, &PaperK1::truth()).unwrap();
+        let near = vec![data.t[10] + 0.25];
+        let far = vec![data.t.last().unwrap() + 20.0];
+        let p_near = predict(&model, &data.t, &PaperK1::truth(), &ev, &near);
+        let p_far = predict(&model, &data.t, &PaperK1::truth(), &ev, &far);
+        assert!(p_near.sd[0] < p_far.sd[0]);
+    }
+}

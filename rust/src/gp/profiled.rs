@@ -1,0 +1,287 @@
+//! The σ_f-profiled hyperlikelihood — paper §2(b).
+//!
+//! For the scaled covariance `K = σ_f² K̃(ϑ)`, the hyperlikelihood
+//! (eq. 2.14) has a unique analytic maximum over σ_f² at
+//! `σ̂_f² = yᵀK̃⁻¹y / n` (eq. 2.15), where it takes the value
+//!
+//! `ln P_max(ϑ) = −(n/2) ln(2πe σ̂_f²) − ½ ln det K̃`   (eq. 2.16)
+//!
+//! with gradient (eq. 2.17) and Hessian (eq. 2.19). Marginalising σ_f over
+//! a Jeffreys prior instead of maximising gives the same function of ϑ up
+//! to the additive constant of eq. (2.18) ([`marg_constant`]), so both
+//! share gradients and Hessians.
+
+use crate::kernels::CovarianceModel;
+use crate::linalg::{dot, Chol, Matrix};
+use crate::math::{lgamma, LN_2PI_E};
+
+use super::assemble::{assemble_cov_grads, hessian_contractions};
+
+/// The per-ϑ products of one profiled-hyperlikelihood evaluation.
+pub struct ProfiledEval {
+    /// `ln P_max(ϑ)` — eq. (2.16).
+    pub lnp: f64,
+    /// `σ̂_f²` — eq. (2.15).
+    pub sigma_f_hat2: f64,
+    /// Cholesky factor of `K̃`.
+    pub chol: Chol,
+    /// `α = K̃⁻¹ y`.
+    pub alpha: Vec<f64>,
+}
+
+impl ProfiledEval {
+    /// Evaluate from an already-assembled covariance (consumed).
+    ///
+    /// This is the entry point used by both backends: the native path
+    /// assembles `K̃` with [`super::assemble_cov`], the XLA path receives
+    /// it from the AOT artifact.
+    pub fn from_cov(k: Matrix, y: &[f64]) -> crate::Result<Self> {
+        let n = y.len();
+        anyhow::ensure!(k.rows() == n, "covariance/data size mismatch");
+        let chol = Chol::factor_owned(k)?;
+        let alpha = chol.solve(y);
+        let sigma_f_hat2 = dot(y, &alpha) / n as f64;
+        anyhow::ensure!(
+            sigma_f_hat2 > 0.0 && sigma_f_hat2.is_finite(),
+            "degenerate σ̂_f² = {sigma_f_hat2}"
+        );
+        let lnp = -0.5 * (n as f64) * (LN_2PI_E + sigma_f_hat2.ln()) - 0.5 * chol.logdet();
+        Ok(Self { lnp, sigma_f_hat2, chol, alpha })
+    }
+
+    /// Gradient of `ln P_max` (eq. 2.17) given the assembled `∂K̃/∂ϑ_a`.
+    ///
+    /// `∂_a ln P_max = (1/2σ̂_f²) αᵀ(∂_aK̃)α − ½ Tr(K̃⁻¹ ∂_aK̃)`.
+    ///
+    /// The trace needs `W = K̃⁻¹`, which costs one extra `O(n³)` pass; pass
+    /// the cached inverse in if you already have it.
+    pub fn gradient(&self, grads: &[Matrix], w: &Matrix) -> Vec<f64> {
+        let n = self.alpha.len();
+        let mut out = Vec::with_capacity(grads.len());
+        for dk in grads {
+            // quadratic form αᵀ ∂K α
+            let v = dk.matvec(&self.alpha);
+            let q = dot(&self.alpha, &v);
+            // Tr(W ∂K) = Σ_ij W_ij ∂K_ij (both symmetric)
+            let mut tr = 0.0;
+            for i in 0..n {
+                tr += dot(w.row(i), dk.row(i));
+            }
+            out.push(0.5 * q / self.sigma_f_hat2 - 0.5 * tr);
+        }
+        out
+    }
+
+    /// `W = K̃⁻¹` (an `O(n³)` densification of the Cholesky factor).
+    pub fn inverse(&self) -> Matrix {
+        self.chol.inverse()
+    }
+}
+
+/// Evaluate `ln P_max` natively (assemble + factor).
+pub fn eval(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta: &[f64],
+) -> crate::Result<ProfiledEval> {
+    let k = super::assemble_cov(model, t, theta);
+    ProfiledEval::from_cov(k, y)
+}
+
+/// Evaluate `ln P_max` and its gradient natively.
+pub fn eval_grad(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta: &[f64],
+) -> crate::Result<(ProfiledEval, Vec<f64>)> {
+    let (k, grads) = assemble_cov_grads(model, t, theta);
+    let ev = ProfiledEval::from_cov(k, y)?;
+    let w = ev.inverse();
+    let g = ev.gradient(&grads, &w);
+    Ok((ev, g))
+}
+
+/// The Hessian `H = −∂²ln P_max/∂ϑ∂ϑ'` at (or near) the peak — eq. (2.19).
+///
+/// `∂_a∂_b ln P_max = q_a q_b/(2nσ̂⁴) − (2 v_aᵀW v_b − A_ab)/(2σ̂²)
+///                    + ½Tr(W∂_aK̃ W∂_bK̃) − ½B_ab`
+/// with `q_a = αᵀ∂_aK̃α`, `v_a = ∂_aK̃ α`, `A_ab = αᵀ∂²K̃α`,
+/// `B_ab = Tr(W ∂²K̃)`.
+///
+/// Cost: the `m` products `W·∂_aK̃` dominate at `O(m n³)`; evaluated once
+/// at the peak (the paper: "one additional evaluation to calculate the
+/// Hessian").
+pub fn profiled_hessian(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta: &[f64],
+) -> crate::Result<Matrix> {
+    let m = model.dim();
+    let n = y.len();
+    let (k, grads) = assemble_cov_grads(model, t, theta);
+    let ev = ProfiledEval::from_cov(k, y)?;
+    let w = ev.inverse();
+    let s2 = ev.sigma_f_hat2;
+
+    // v_a = ∂K α, q_a = αᵀ v_a, and the W-products M_a = W ∂K
+    let mut v = Vec::with_capacity(m);
+    let mut q = Vec::with_capacity(m);
+    let mut wm = Vec::with_capacity(m);
+    for dk in &grads {
+        let va = dk.matvec(&ev.alpha);
+        q.push(dot(&ev.alpha, &va));
+        v.push(va);
+        wm.push(w.matmul(dk));
+    }
+    let (a_c, b_c) = hessian_contractions(model, t, theta, &ev.alpha, &w);
+
+    let mut h = Matrix::zeros(m, m);
+    for a in 0..m {
+        for b in a..m {
+            // Tr(M_a M_b) = Σ_ij M_a[i,j] M_b[j,i]
+            let mut tr_ab = 0.0;
+            for i in 0..n {
+                let ra = wm[a].row(i);
+                for (j, raj) in ra.iter().enumerate() {
+                    tr_ab += raj * wm[b][(j, i)];
+                }
+            }
+            // v_aᵀ W v_b
+            let wv_b = w.matvec(&v[b]);
+            let vwv = dot(&v[a], &wv_b);
+            let d2 = q[a] * q[b] / (2.0 * n as f64 * s2 * s2)
+                - (2.0 * vwv - a_c[(a, b)]) / (2.0 * s2)
+                + 0.5 * tr_ab
+                - 0.5 * b_c[(a, b)];
+            h[(a, b)] = -d2;
+            h[(b, a)] = -d2;
+        }
+    }
+    Ok(h)
+}
+
+/// The additive constant converting `ln P_max` into the σ_f-marginalised
+/// `ln P_marg` (eq. 2.18) under a **truncated** Jeffreys prior
+/// `P(σ_f) = c/σ_f`, `σ_f ∈ (σ_lo, σ_hi)`, `c = 1/ln(σ_hi/σ_lo)`:
+///
+/// `ln[ (c/2) (2e/n)^{n/2} Γ(n/2) ]`.
+///
+/// The truncation bounds are part of the model-comparison prior volume;
+/// they cancel in Bayes factors between models fitted to the same data.
+pub fn marg_constant(n: usize, sigma_lo: f64, sigma_hi: f64) -> f64 {
+    assert!(sigma_hi > sigma_lo && sigma_lo > 0.0);
+    let nf = n as f64;
+    let ln_c = -(sigma_hi / sigma_lo).ln().ln();
+    ln_c - std::f64::consts::LN_2 + 0.5 * nf * (std::f64::consts::LN_2 + 1.0 - nf.ln())
+        + lgamma(0.5 * nf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::draw_gp_dataset;
+    use crate::kernels::{paper_k1, PaperK1};
+    use crate::rng::Xoshiro256;
+
+    fn small_problem() -> (crate::kernels::CovarianceModel, Vec<f64>, Vec<f64>) {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 25, &mut rng);
+        (model, data.t, data.y)
+    }
+
+    /// ln P_max must equal ln P(σ̂_f) computed through the *unprofiled*
+    /// eq. (2.14) — the analytic maximisation identity.
+    #[test]
+    fn profiled_equals_full_at_sigma_hat() {
+        let (model, t, y) = small_problem();
+        let theta = PaperK1::truth();
+        let ev = eval(&model, &t, &y, &theta).unwrap();
+        let n = y.len() as f64;
+        // eq. 2.14 at σ_f² = σ̂_f²
+        let quad = n; // yᵀK⁻¹y/σ̂² = n by definition of σ̂²
+        let lnp_full = -0.5 * quad
+            - 0.5 * ev.chol.logdet()
+            - 0.5 * n * (crate::math::LN_2PI + ev.sigma_f_hat2.ln());
+        assert!(
+            (ev.lnp - lnp_full).abs() < 1e-10 * ev.lnp.abs(),
+            "{} vs {lnp_full}",
+            ev.lnp
+        );
+    }
+
+    /// σ̂_f² is the true maximiser: nudging σ_f² in eq. (2.14) must lower
+    /// the likelihood on both sides.
+    #[test]
+    fn sigma_hat_is_the_maximiser() {
+        let (model, t, y) = small_problem();
+        let ev = eval(&model, &t, &y, &PaperK1::truth()).unwrap();
+        let n = y.len() as f64;
+        let lnp_at = |s2: f64| {
+            let quad = n * ev.sigma_f_hat2 / s2;
+            -0.5 * quad - 0.5 * ev.chol.logdet() - 0.5 * n * (crate::math::LN_2PI + s2.ln())
+        };
+        let peak = lnp_at(ev.sigma_f_hat2);
+        assert!((peak - ev.lnp).abs() < 1e-9 * peak.abs());
+        assert!(lnp_at(ev.sigma_f_hat2 * 1.05) < peak);
+        assert!(lnp_at(ev.sigma_f_hat2 * 0.95) < peak);
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        let (model, t, y) = small_problem();
+        let theta = PaperK1::truth();
+        let (_, g) = eval_grad(&model, &t, &y, &theta).unwrap();
+        for a in 0..3 {
+            let h = 1e-6;
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let fp = eval(&model, &t, &y, &tp).unwrap().lnp;
+            let fm = eval(&model, &t, &y, &tm).unwrap().lnp;
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                crate::math::rel_diff(g[a], fd) < 1e-5,
+                "grad[{a}]: analytic {} vs FD {fd}",
+                g[a]
+            );
+        }
+    }
+
+    #[test]
+    fn hessian_matches_fd_of_gradient() {
+        let (model, t, y) = small_problem();
+        let theta = PaperK1::truth();
+        let hess = profiled_hessian(&model, &t, &y, &theta).unwrap();
+        for a in 0..3 {
+            let h = 1e-5;
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let (_, gp) = eval_grad(&model, &t, &y, &tp).unwrap();
+            let (_, gm) = eval_grad(&model, &t, &y, &tm).unwrap();
+            for b in 0..3 {
+                let fd = -(gp[b] - gm[b]) / (2.0 * h); // H = −∂∂lnP
+                assert!(
+                    crate::math::rel_diff(hess[(a, b)], fd) < 1e-4,
+                    "H[{a},{b}]: analytic {} vs FD {fd}",
+                    hess[(a, b)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn marg_constant_small_n_exact() {
+        // n = 2: ln[(c/2)(2e/2)^1 Γ(1)] = ln(c/2) + 1
+        let c = 1.0 / (1e3f64 / 1e-3).ln();
+        let want = (c / 2.0).ln() + 1.0;
+        let got = marg_constant(2, 1e-3, 1e3);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+}

@@ -1,0 +1,72 @@
+//! GP realisation sampling (paper Fig. 1): draw `y ~ N(0, σ_f² K̃(ϑ))`
+//! over an input grid, noise included.
+
+use crate::kernels::CovarianceModel;
+use crate::rng::{MultivariateNormal, Xoshiro256};
+
+use super::assemble::assemble_cov;
+
+/// Draw one realisation of the GP (including the σ_n measurement noise)
+/// at the inputs `t`.
+pub fn draw_realisation(
+    model: &CovarianceModel,
+    sigma_f: f64,
+    theta: &[f64],
+    t: &[f64],
+    rng: &mut Xoshiro256,
+) -> crate::Result<Vec<f64>> {
+    let mut k = assemble_cov(model, t, theta);
+    let s2 = sigma_f * sigma_f;
+    for v in k.as_mut_slice() {
+        *v *= s2;
+    }
+    let mvn = MultivariateNormal::new(vec![0.0; t.len()], &k)?;
+    Ok(mvn.sample(rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{paper_k1, paper_k2, PaperK1, PaperK2};
+
+    #[test]
+    fn realisation_has_unit_scale_statistics() {
+        // With σ_f = 1 the marginal variance of each sample point is
+        // k(0) + σ_n² ≈ 1.01; average over many draws must agree.
+        let model = paper_k1(0.1);
+        let t: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let mut acc = 0.0;
+        let reps = 200;
+        for _ in 0..reps {
+            let y = draw_realisation(&model, 1.0, &PaperK1::truth(), &t, &mut rng).unwrap();
+            acc += y.iter().map(|v| v * v).sum::<f64>() / t.len() as f64;
+        }
+        let var = acc / reps as f64;
+        assert!((var - 1.01).abs() < 0.15, "marginal variance {var}");
+    }
+
+    #[test]
+    fn sigma_f_scales_amplitude() {
+        let model = paper_k2(0.1);
+        let t: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        let mut rng_a = Xoshiro256::seed_from_u64(1);
+        let mut rng_b = Xoshiro256::seed_from_u64(1);
+        let y1 = draw_realisation(&model, 1.0, &PaperK2::truth(), &t, &mut rng_a).unwrap();
+        let y3 = draw_realisation(&model, 3.0, &PaperK2::truth(), &t, &mut rng_b).unwrap();
+        for i in 0..t.len() {
+            assert!((3.0 * y1[i] - y3[i]).abs() < 1e-9, "same seed → 3× amplitude");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let model = paper_k1(0.1);
+        let t: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let a = draw_realisation(&model, 1.0, &PaperK1::truth(), &t,
+            &mut Xoshiro256::seed_from_u64(9)).unwrap();
+        let b = draw_realisation(&model, 1.0, &PaperK1::truth(), &t,
+            &mut Xoshiro256::seed_from_u64(9)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,81 @@
+//! Constant amplitude factor `F = e^{2ρ}` (ρ = ln amplitude).
+//!
+//! Within a single product kernel the overall scale is σ_f and is profiled
+//! out analytically, so this factor is only useful inside **sums** of
+//! kernels, where the *relative* weight of each summand must be learned.
+//! `lnF = 2ρ` ⇒ `∂lnF/∂ρ = 2`, `∂²lnF/∂ρ² = 0`.
+
+use super::{DataSpan, Factor, PreparedFactor};
+
+/// Relative-amplitude factor, one hyperparameter `ρ = ln A`.
+#[derive(Clone, Copy, Debug)]
+pub struct Amplitude {
+    pub index: usize,
+    /// Allowed range of ρ (flat prior); amplitude ratios outside
+    /// `e^{±ρ_range}` are considered unresolvable.
+    pub rho_range: f64,
+}
+
+impl Amplitude {
+    pub fn new(index: usize) -> Self {
+        Self { index, rho_range: 6.0 }
+    }
+}
+
+impl Factor for Amplitude {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn names(&self) -> Vec<String> {
+        vec![format!("rho{}", self.index)]
+    }
+
+    fn bounds(&self, _span: &DataSpan) -> Vec<(f64, f64)> {
+        vec![(-self.rho_range, self.rho_range)]
+    }
+
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedFactor> {
+        assert_eq!(theta.len(), 1);
+        Box::new(PreparedAmp { a2: (2.0 * theta[0]).exp() })
+    }
+}
+
+struct PreparedAmp {
+    a2: f64,
+}
+
+impl PreparedFactor for PreparedAmp {
+    fn value(&self, _dt: f64) -> f64 {
+        self.a2
+    }
+
+    fn value_dlog(&self, _dt: f64, dlog: &mut [f64]) -> f64 {
+        dlog[0] = 2.0;
+        self.a2
+    }
+
+    fn value_dlog2(&self, _dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64 {
+        dlog[0] = 2.0;
+        d2log[0] = 0.0;
+        self.a2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amplitude_squares() {
+        let a = Amplitude::new(1);
+        let p = a.prepare(&[0.7]);
+        assert!((p.value(3.0) - (1.4f64).exp()).abs() < 1e-12);
+        let mut dl = [0.0];
+        let mut d2 = [0.0];
+        let v = p.value_dlog2(1.0, &mut dl, &mut d2);
+        assert_eq!(dl[0], 2.0);
+        assert_eq!(d2[0], 0.0);
+        assert!(v > 0.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Matérn-3/2 and Matérn-5/2 factors with flat coordinate `φ = ln L`.
+//!
+//! Both are expressed through `z = √ν̃ |Δt| e^{−φ}` (ν̃ = 3 or 5) and the
+//! chain rule `∂z/∂φ = −z`, giving for `f(z) = ln F`:
+//!   `L_φ = −z f′(z)`, `M_φφ = z f′(z) + z² f″(z)`.
+
+use super::{DataSpan, Factor, PreparedFactor};
+
+/// Matérn ν = 3/2: `F = (1+z) e^{−z}`, `z = √3 |Δt|/L`.
+///
+/// `f′(z) = −z/(1+z)`, `f″(z) = −1/(1+z)²`.
+#[derive(Clone, Copy, Debug)]
+pub struct Matern32 {
+    pub index: usize,
+}
+
+/// Matérn ν = 5/2: `F = (1+z+z²/3) e^{−z}`, `z = √5 |Δt|/L`.
+///
+/// With `D = 1+z+z²/3`: `f′ = −z(1+z)/(3D)`,
+/// `f″ = (n′D − nD′)/D²` for `n = −z(1+z)/3`, `n′ = −(1+2z)/3`, `D′ = 1+2z/3`.
+#[derive(Clone, Copy, Debug)]
+pub struct Matern52 {
+    pub index: usize,
+}
+
+impl Matern32 {
+    pub fn new(index: usize) -> Self {
+        Self { index }
+    }
+}
+
+impl Matern52 {
+    pub fn new(index: usize) -> Self {
+        Self { index }
+    }
+}
+
+macro_rules! matern_factor_impl {
+    ($ty:ident, $prep:ident, $label:expr) => {
+        impl Factor for $ty {
+            fn dim(&self) -> usize {
+                1
+            }
+
+            fn names(&self) -> Vec<String> {
+                vec![format!(concat!("phi", $label, "{}"), self.index)]
+            }
+
+            fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)> {
+                vec![span.phi_bounds()]
+            }
+
+            fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedFactor> {
+                assert_eq!(theta.len(), 1);
+                Box::new($prep { inv_l: (-theta[0]).exp() })
+            }
+        }
+    };
+}
+
+matern_factor_impl!(Matern32, PreparedM32, "M32_");
+matern_factor_impl!(Matern52, PreparedM52, "M52_");
+
+struct PreparedM32 {
+    inv_l: f64,
+}
+
+impl PreparedM32 {
+    #[inline]
+    fn z(&self, dt: f64) -> f64 {
+        3f64.sqrt() * dt.abs() * self.inv_l
+    }
+}
+
+impl PreparedFactor for PreparedM32 {
+    fn value(&self, dt: f64) -> f64 {
+        let z = self.z(dt);
+        (1.0 + z) * (-z).exp()
+    }
+
+    fn value_dlog(&self, dt: f64, dlog: &mut [f64]) -> f64 {
+        let z = self.z(dt);
+        dlog[0] = z * z / (1.0 + z);
+        (1.0 + z) * (-z).exp()
+    }
+
+    fn value_dlog2(&self, dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64 {
+        let z = self.z(dt);
+        let fp = -z / (1.0 + z);
+        let fpp = -1.0 / ((1.0 + z) * (1.0 + z));
+        dlog[0] = -z * fp;
+        d2log[0] = z * fp + z * z * fpp;
+        (1.0 + z) * (-z).exp()
+    }
+}
+
+struct PreparedM52 {
+    inv_l: f64,
+}
+
+impl PreparedM52 {
+    #[inline]
+    fn z(&self, dt: f64) -> f64 {
+        5f64.sqrt() * dt.abs() * self.inv_l
+    }
+}
+
+impl PreparedFactor for PreparedM52 {
+    fn value(&self, dt: f64) -> f64 {
+        let z = self.z(dt);
+        (1.0 + z + z * z / 3.0) * (-z).exp()
+    }
+
+    fn value_dlog(&self, dt: f64, dlog: &mut [f64]) -> f64 {
+        let z = self.z(dt);
+        let d = 1.0 + z + z * z / 3.0;
+        let fp = -z * (1.0 + z) / (3.0 * d);
+        dlog[0] = -z * fp;
+        d * (-z).exp()
+    }
+
+    fn value_dlog2(&self, dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64 {
+        let z = self.z(dt);
+        let d = 1.0 + z + z * z / 3.0;
+        let n = -z * (1.0 + z) / 3.0;
+        let np = -(1.0 + 2.0 * z) / 3.0;
+        let dp = 1.0 + 2.0 * z / 3.0;
+        let fp = n / d;
+        let fpp = (np * d - n * dp) / (d * d);
+        dlog[0] = -z * fp;
+        d2log[0] = z * fp + z * z * fpp;
+        d * (-z).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_factor(f: &dyn Factor, phis: &[f64], dts: &[f64]) {
+        for &phi in phis {
+            for &dt in dts {
+                let p = f.prepare(&[phi]);
+                let mut dl = [0.0];
+                let mut d2 = [0.0];
+                let v = p.value_dlog2(dt, &mut dl, &mut d2);
+                assert!(v > 0.0 && v <= 1.0);
+                let h = 1e-6;
+                let lp = f.prepare(&[phi + h]).value(dt).ln();
+                let lm = f.prepare(&[phi - h]).value(dt).ln();
+                let fd1 = (lp - lm) / (2.0 * h);
+                let fd2 = (lp - 2.0 * v.ln() + lm) / (h * h);
+                assert!(
+                    crate::math::rel_diff(dl[0], fd1) < 1e-5,
+                    "dlog {} vs {fd1} at dt={dt} phi={phi}",
+                    dl[0]
+                );
+                assert!(
+                    crate::math::rel_diff(d2[0], fd2) < 1e-3,
+                    "d2log {} vs {fd2} at dt={dt} phi={phi}",
+                    d2[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matern32_derivs() {
+        check_factor(&Matern32::new(1), &[0.0, 1.0, 2.3], &[0.3, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn matern52_derivs() {
+        check_factor(&Matern52::new(1), &[0.0, 1.0, 2.3], &[0.3, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn values_at_zero_lag() {
+        assert!((Matern32::new(1).prepare(&[0.5]).value(0.0) - 1.0).abs() < 1e-15);
+        assert!((Matern52::new(1).prepare(&[0.5]).value(0.0) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn m52_smoother_than_m32_at_origin() {
+        // near 0 lag, M52 should decay more slowly (it is twice mean-square
+        // differentiable, M32 only once)
+        let m32 = Matern32::new(1).prepare(&[0.0]);
+        let m52 = Matern52::new(1).prepare(&[0.0]);
+        assert!(m52.value(0.05) > m32.value(0.05));
+    }
+}

@@ -1,0 +1,252 @@
+//! Covariance functions ("kernels") with analytic first and second
+//! hyperparameter derivatives.
+//!
+//! The paper trains GPs by maximising the σ_f-profiled hyperlikelihood
+//! (eq. 2.16) with a conjugate-gradient optimiser driven by the analytic
+//! gradient (eq. 2.17), then compares covariance functions through the
+//! Laplace evidence built from the analytic Hessian (eq. 2.19). All of
+//! that needs, per point-pair lag `Δt`, the kernel value `k(Δt; ϑ)`, the
+//! gradient `∂k/∂ϑ` and the Hessian `∂²k/∂ϑ∂ϑ'` — which this module
+//! provides for the paper's covariance functions k₁/k₂ (eqs. 3.1–3.2) and
+//! for a library of composable pieces (Wendland, periodic, squared-
+//! exponential, Matérn, amplitude; products and sums).
+//!
+//! ## Hyperparameter coordinates
+//!
+//! All kernels are parametrised directly in the paper's **flat-prior
+//! coordinates** (§3): timescales enter as `φ = ln T` (Jeffreys prior →
+//! flat, eq. 3.4) and periodic smoothness parameters as `ξ ∈ (−½, ½)`
+//! with `l = exp(μ + √2 σ_l erf⁻¹(2ξ))` (log-normal prior → flat,
+//! eq. 3.5). The overall scale σ_f is **not** a kernel parameter — it is
+//! profiled out analytically by the [`crate::gp`] layer (eq. 2.15), so a
+//! kernel here evaluates `k̃ = k/σ_f²`.
+//!
+//! ## Erratum implemented
+//!
+//! Eq. (3.3) of the published paper prints the compact-support polynomial
+//! as `(1−τ)⁵(48τ²+15τ+3)/3`, which is **not positive definite** (its
+//! Gram matrices on regular grids have eigenvalues as low as −0.5; the
+//! unit tests demonstrate this). It is a typo of the Wendland ψ₃,₂
+//! function `(1−τ)⁶(35τ²+18τ+3)/3` [Wendland 2005, the paper's ref. 18],
+//! which is what we implement. See DESIGN.md.
+
+mod wendland;
+mod periodic;
+mod se;
+mod matern;
+mod amplitude;
+mod product;
+mod sum;
+mod paper;
+
+pub use amplitude::Amplitude;
+pub use matern::{Matern32, Matern52};
+pub use paper::{
+    paper_k1, paper_k2, PaperK1, PaperK2, K2_PHI1_IDX, K2_PHI2_IDX, SYNTHETIC_SIGMA_N,
+    TIDAL_SIGMA_N,
+};
+pub use periodic::Periodic;
+pub use product::ProductKernel;
+pub use se::SquaredExponential;
+pub use sum::SumKernel;
+pub use wendland::Wendland;
+
+/// The sampling geometry of a dataset: smallest and largest separations
+/// between input points. Defines the resolvable-timescale hyperprior range
+/// `T ∈ (δt, ΔT)` (paper §3: "If there was a timescale in the problem
+/// outside of this range, we would be unable to resolve it").
+#[derive(Clone, Copy, Debug)]
+pub struct DataSpan {
+    /// δt — smallest separation between sampling points.
+    pub dt_min: f64,
+    /// ΔT — largest separation between sampling points.
+    pub dt_max: f64,
+}
+
+impl DataSpan {
+    /// Compute from a (not necessarily sorted) input vector.
+    pub fn from_times(t: &[f64]) -> Self {
+        assert!(t.len() >= 2, "need at least two points");
+        let mut s = t.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut dt_min = f64::INFINITY;
+        for w in s.windows(2) {
+            let d = w[1] - w[0];
+            if d > 0.0 {
+                dt_min = dt_min.min(d);
+            }
+        }
+        let dt_max = s[s.len() - 1] - s[0];
+        assert!(dt_min.is_finite() && dt_max > 0.0, "degenerate input grid");
+        Self { dt_min, dt_max }
+    }
+
+    /// `ln(ΔT/δt)` — the hyperprior volume per timescale parameter.
+    pub fn log_timescale_range(&self) -> f64 {
+        (self.dt_max / self.dt_min).ln()
+    }
+
+    /// Flat-coordinate range for a timescale: `φ ∈ (ln δt, ln ΔT)`.
+    pub fn phi_bounds(&self) -> (f64, f64) {
+        (self.dt_min.ln(), self.dt_max.ln())
+    }
+}
+
+/// A multiplicative stationary factor (one term of a product kernel) with
+/// its own hyperparameter block, exposing *logarithmic* derivatives.
+///
+/// For a product kernel `V = Π_k F_k`, log-derivatives compose trivially:
+/// `∂V/∂α = V·L_α` and `∂²V/∂α∂β = V·(L_α L_β + M_αβ)` where
+/// `L_α = ∂ln F/∂α` and `M_αβ = ∂²ln F/∂α∂β` vanish across factors.
+pub trait Factor: Send + Sync {
+    /// Number of hyperparameters in this factor.
+    fn dim(&self) -> usize;
+    /// Hyperparameter names (flat-prior coordinates).
+    fn names(&self) -> Vec<String>;
+    /// Hyperparameter box bounds given the data geometry.
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)>;
+    /// Bind hyperparameters, precomputing everything pair-independent.
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedFactor>;
+}
+
+/// A factor with hyperparameters bound; provides fast per-pair evaluation.
+///
+/// Contract: if `value` returns exactly `0.0` (outside compact support),
+/// the caller must treat every derivative of the *product* as zero and may
+/// ignore the contents of `dlog`/`d2log`.
+pub trait PreparedFactor {
+    /// Factor value at lag `dt`.
+    fn value(&self, dt: f64) -> f64;
+    /// Value + gradient of `ln F` (length `dim`).
+    fn value_dlog(&self, dt: f64, dlog: &mut [f64]) -> f64;
+    /// Value + gradient + Hessian of `ln F` (row-major `dim×dim`, full).
+    fn value_dlog2(&self, dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64;
+}
+
+/// A stationary covariance kernel `k̃(Δt; ϑ)` with direct derivatives.
+pub trait StationaryKernel: Send + Sync {
+    /// Number of hyperparameters `ϑ` (σ_f excluded — it is profiled).
+    fn dim(&self) -> usize;
+    /// Hyperparameter names, e.g. `["phi0", "phi1", "xi1"]`.
+    fn names(&self) -> Vec<String>;
+    /// Box bounds for each hyperparameter given the data geometry.
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)>;
+    /// Ordering constraints `θ[i] ≤ θ[j]` (e.g. the paper's `T₂ ≥ T₁`).
+    fn ordering_constraints(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+    /// Bind hyperparameters for fast per-pair evaluation.
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedKernel>;
+}
+
+/// A kernel with hyperparameters bound.
+///
+/// Methods take `&mut self` so implementations can reuse interior scratch
+/// buffers across the `O(n²)` per-pair calls of a matrix assembly.
+pub trait PreparedKernel {
+    /// `k̃(Δt)`.
+    fn value(&mut self, dt: f64) -> f64;
+    /// `k̃(Δt)` and `∂k̃/∂ϑ` (length `dim`).
+    fn value_grad(&mut self, dt: f64, grad: &mut [f64]) -> f64;
+    /// `k̃(Δt)`, gradient, and full symmetric Hessian (row-major `m×m`).
+    fn value_grad_hess(&mut self, dt: f64, grad: &mut [f64], hess: &mut [f64]) -> f64;
+}
+
+/// A complete covariance model in the paper's sense: a stationary kernel
+/// plus the fixed fractional noise σ_n (the `σ_f² σ_n² δ_tt'` term of
+/// eqs. 3.1–3.2; σ_n is fixed, not learned — see §3: "fixing σ_n is
+/// roughly equivalent to specifying a fixed fractional error").
+pub struct CovarianceModel {
+    /// Display name, e.g. `"k1"`; also the artifact lookup key.
+    pub name: String,
+    /// The stationary kernel.
+    pub kernel: Box<dyn StationaryKernel>,
+    /// Fixed noise parameter σ_n (enters the diagonal as σ_n²).
+    pub sigma_n: f64,
+}
+
+impl CovarianceModel {
+    pub fn new(name: impl Into<String>, kernel: Box<dyn StationaryKernel>, sigma_n: f64) -> Self {
+        Self { name: name.into(), kernel, sigma_n }
+    }
+
+    /// Number of reduced hyperparameters (σ_f profiled out).
+    pub fn dim(&self) -> usize {
+        self.kernel.dim()
+    }
+
+    /// σ_n² — the diagonal noise contribution in σ_f = 1 units.
+    pub fn noise_variance(&self) -> f64 {
+        self.sigma_n * self.sigma_n
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+
+    /// Finite-difference check of a kernel's gradient and Hessian at one
+    /// (dt, theta) point. Central differences, step scaled per-parameter.
+    pub fn check_derivatives(kernel: &dyn StationaryKernel, dt: f64, theta: &[f64], tol: f64) {
+        let m = kernel.dim();
+        let mut grad = vec![0.0; m];
+        let mut hess = vec![0.0; m * m];
+        let v0 = kernel.prepare(theta).value_grad_hess(dt, &mut grad, &mut hess);
+        // value consistency across the three entry points
+        let v1 = kernel.prepare(theta).value(dt);
+        let mut g2 = vec![0.0; m];
+        let v2 = kernel.prepare(theta).value_grad(dt, &mut g2);
+        assert!((v0 - v1).abs() <= 1e-14 * v1.abs().max(1e-14), "value mismatch: {v0} vs {v1}");
+        assert!((v0 - v2).abs() <= 1e-14 * v1.abs().max(1e-14));
+        for i in 0..m {
+            assert!(
+                (grad[i] - g2[i]).abs() <= 1e-12 * grad[i].abs().max(1e-12),
+                "grad entry {i} differs between value_grad and value_grad_hess"
+            );
+        }
+        // FD gradient
+        for i in 0..m {
+            let h = 1e-6 * theta[i].abs().max(0.05);
+            let mut tp = theta.to_vec();
+            let mut tm = theta.to_vec();
+            tp[i] += h;
+            tm[i] -= h;
+            let fp = kernel.prepare(&tp).value(dt);
+            let fm = kernel.prepare(&tm).value(dt);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                crate::math::rel_diff(grad[i], fd) < tol,
+                "grad[{i}] at dt={dt}: analytic {} vs FD {}",
+                grad[i],
+                fd
+            );
+        }
+        // FD Hessian from analytic gradients (more stable than 2nd FD)
+        for i in 0..m {
+            let h = 1e-6 * theta[i].abs().max(0.05);
+            let mut tp = theta.to_vec();
+            let mut tm = theta.to_vec();
+            tp[i] += h;
+            tm[i] -= h;
+            let mut gp = vec![0.0; m];
+            let mut gm = vec![0.0; m];
+            kernel.prepare(&tp).value_grad(dt, &mut gp);
+            kernel.prepare(&tm).value_grad(dt, &mut gm);
+            for j in 0..m {
+                let fd = (gp[j] - gm[j]) / (2.0 * h);
+                assert!(
+                    crate::math::rel_diff(hess[i * m + j], fd) < tol,
+                    "hess[{i},{j}] at dt={dt}: analytic {} vs FD {}",
+                    hess[i * m + j],
+                    fd
+                );
+                // symmetry
+                assert!(
+                    (hess[i * m + j] - hess[j * m + i]).abs()
+                        <= 1e-10 * hess[i * m + j].abs().max(1e-10),
+                    "hessian not symmetric at ({i},{j})"
+                );
+            }
+        }
+    }
+}

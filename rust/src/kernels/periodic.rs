@@ -1,0 +1,217 @@
+//! Periodic factor `exp[−(2/l²) sin²(πΔt/T)]` (MacKay 2003; the paper's
+//! eqs. 3.1–3.2), in flat-prior coordinates `(φ, ξ)`:
+//!
+//! * `T = e^φ` — timescale with Jeffreys → flat transform (eq. 3.4);
+//! * `l = exp(μ + √2 σ_l erf⁻¹(2ξ))`, `ξ ∈ (−½, ½)` — smoothness with
+//!   log-normal → flat transform (eq. 3.5); paper uses μ = 1, σ_l² = 4.
+//!
+//! Log-derivatives (a = πΔt/T, s = sin a, c_l = 2/l²):
+//!   ln F          = −c_l s²
+//!   ∂lnF/∂φ       =  c_l a sin 2a
+//!   ∂lnF/∂ξ       =  2 c_l s² (l′/l)
+//!   ∂²lnF/∂φ²     = −c_l a (sin 2a + 2a cos 2a)
+//!   ∂²lnF/∂φ∂ξ    = −2 c_l a sin 2a (l′/l)
+//!   ∂²lnF/∂ξ²     =  4 s² (3 l′²/l⁴ − l″/l³) · (−1)  [see code]
+//! where `l′ = dl/dξ = l σ_l √(2π) e^{w²}`, `w = erf⁻¹(2ξ)`, and
+//! `l″ = l(g′² + g″)` with `g′ = σ_l√(2π)e^{w²}`, `g″ = 2√2 π σ_l w e^{2w²}`.
+
+use super::{DataSpan, Factor, PreparedFactor};
+use crate::math::erfinv;
+
+/// Paper defaults for the log-normal prior on `l` (§3: μ = 1, σ_l² = 4).
+pub const DEFAULT_MU_L: f64 = 1.0;
+pub const DEFAULT_SIGMA_L: f64 = 2.0;
+
+/// Margin keeping `ξ` away from ±½ where `erf⁻¹(2ξ)` diverges.
+pub const XI_MARGIN: f64 = 1e-6;
+
+/// A periodic factor with hyperparameters `(φ_j, ξ_j)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Periodic {
+    /// Index `j` used only for parameter naming (`phi1`, `xi1`, …).
+    pub index: usize,
+    /// Log-normal prior mean μ of `ln l`.
+    pub mu_l: f64,
+    /// Log-normal prior width σ_l of `ln l`.
+    pub sigma_l: f64,
+}
+
+impl Periodic {
+    pub fn new(index: usize) -> Self {
+        Self { index, mu_l: DEFAULT_MU_L, sigma_l: DEFAULT_SIGMA_L }
+    }
+
+    /// The flat→physical transform `l(ξ)` of eq. (3.5).
+    pub fn l_of_xi(&self, xi: f64) -> f64 {
+        (self.mu_l + std::f64::consts::SQRT_2 * self.sigma_l * erfinv(2.0 * xi)).exp()
+    }
+}
+
+impl Factor for Periodic {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn names(&self) -> Vec<String> {
+        vec![format!("phi{}", self.index), format!("xi{}", self.index)]
+    }
+
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)> {
+        vec![span.phi_bounds(), (-0.5 + XI_MARGIN, 0.5 - XI_MARGIN)]
+    }
+
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedFactor> {
+        assert_eq!(theta.len(), 2);
+        let (phi, xi) = (theta[0], theta[1]);
+        let w = erfinv(2.0 * xi);
+        let ew2 = (w * w).exp();
+        let gp = self.sigma_l * (2.0 * std::f64::consts::PI).sqrt() * ew2; // g′ = dln l/dξ
+        let gpp = 2.0 * std::f64::consts::SQRT_2 * std::f64::consts::PI * self.sigma_l * w
+            * ew2
+            * ew2; // g″
+        let l = (self.mu_l + std::f64::consts::SQRT_2 * self.sigma_l * w).exp();
+        Box::new(PreparedPeriodic {
+            pi_inv_t: std::f64::consts::PI * (-phi).exp(),
+            c_l: 2.0 / (l * l),
+            dlog_l: gp,           // l′/l
+            d2log_l: gp * gp + gpp, // l″/l
+        })
+    }
+}
+
+struct PreparedPeriodic {
+    /// π/T.
+    pi_inv_t: f64,
+    /// 2/l².
+    c_l: f64,
+    /// l′/l.
+    dlog_l: f64,
+    /// l″/l.
+    d2log_l: f64,
+}
+
+impl PreparedFactor for PreparedPeriodic {
+    fn value(&self, dt: f64) -> f64 {
+        let s = (dt * self.pi_inv_t).sin();
+        (-self.c_l * s * s).exp()
+    }
+
+    fn value_dlog(&self, dt: f64, dlog: &mut [f64]) -> f64 {
+        let a = dt * self.pi_inv_t;
+        let (s, c) = a.sin_cos();
+        let s2 = s * s;
+        let sin2a = 2.0 * s * c;
+        dlog[0] = self.c_l * a * sin2a;
+        dlog[1] = 2.0 * self.c_l * s2 * self.dlog_l;
+        (-self.c_l * s2).exp()
+    }
+
+    fn value_dlog2(&self, dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64 {
+        let a = dt * self.pi_inv_t;
+        let (s, c) = a.sin_cos();
+        let s2 = s * s;
+        let sin2a = 2.0 * s * c;
+        let cos2a = 1.0 - 2.0 * s2;
+        dlog[0] = self.c_l * a * sin2a;
+        dlog[1] = 2.0 * self.c_l * s2 * self.dlog_l;
+        // ∂²lnF/∂φ² : d(c_l a sin2a)/dφ with da/dφ = −a
+        d2log[0] = -self.c_l * a * (sin2a + 2.0 * a * cos2a);
+        // ∂²lnF/∂φ∂ξ : c_l depends on ξ through l: d(c_l)/dξ = −2 c_l l′/l
+        let cross = -2.0 * self.c_l * a * sin2a * self.dlog_l;
+        d2log[1] = cross;
+        d2log[2] = cross;
+        // ∂²lnF/∂ξ² : lnF = −2 s²/l² ⇒ ∂ξ lnF = 4 s² l′/l³ (=2 c_l s² l′/l)
+        //   ∂²ξ lnF = 4 s² (l″/l³ − 3 l′²/l⁴) = 2 c_l s² (l″/l − 3 (l′/l)²)
+        d2log[3] = 2.0 * self.c_l * s2 * (self.d2log_l - 3.0 * self.dlog_l * self.dlog_l);
+        (-self.c_l * s2).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l_transform_paper_values() {
+        let p = Periodic::new(1);
+        // ξ = 0 → l = e^μ = e
+        assert!((p.l_of_xi(0.0) - std::f64::consts::E).abs() < 1e-12);
+        // transform is monotonic
+        assert!(p.l_of_xi(0.2) > p.l_of_xi(0.0));
+        assert!(p.l_of_xi(-0.2) < p.l_of_xi(0.0));
+    }
+
+    #[test]
+    fn value_periodicity() {
+        let p = Periodic::new(1);
+        let f = p.prepare(&[1.2, 0.1]); // T = e^1.2
+        let t = 1.2f64.exp();
+        for &dt in &[0.3, 1.7, 5.0] {
+            assert!((f.value(dt) - f.value(dt + t)).abs() < 1e-12);
+            assert!((f.value(dt) - f.value(-dt)).abs() < 1e-15);
+        }
+        assert!((f.value(0.0) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn log_derivs_match_fd() {
+        let p = Periodic::new(1);
+        for &(dt, phi, xi) in &[
+            (0.7, 1.5, 0.0),
+            (3.1, 1.5, 0.23),
+            (1.0, 0.4, -0.31),
+            (12.0, 2.5, 0.45),
+        ] {
+            let f = p.prepare(&[phi, xi]);
+            let mut dl = [0.0; 2];
+            let mut d2 = [0.0; 4];
+            let v = f.value_dlog2(dt, &mut dl, &mut d2);
+            assert!(v > 0.0);
+            let h = 1e-6;
+            // FD of ln value w.r.t. each parameter
+            for i in 0..2 {
+                let mut tp = [phi, xi];
+                let mut tm = [phi, xi];
+                tp[i] += h;
+                tm[i] -= h;
+                let lp = p.prepare(&tp).value(dt).ln();
+                let lm = p.prepare(&tm).value(dt).ln();
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    crate::math::rel_diff(dl[i], fd) < 1e-5,
+                    "dlog[{i}] at ({dt},{phi},{xi}): {} vs {fd}",
+                    dl[i]
+                );
+            }
+            // FD of the dlog vector for the Hessian of ln F
+            for i in 0..2 {
+                let mut tp = [phi, xi];
+                let mut tm = [phi, xi];
+                tp[i] += h;
+                tm[i] -= h;
+                let mut glp = [0.0; 2];
+                let mut glm = [0.0; 2];
+                p.prepare(&tp).value_dlog(dt, &mut glp);
+                p.prepare(&tm).value_dlog(dt, &mut glm);
+                for j in 0..2 {
+                    let fd = (glp[j] - glm[j]) / (2.0 * h);
+                    assert!(
+                        crate::math::rel_diff(d2[i * 2 + j], fd) < 1e-4,
+                        "d2log[{i},{j}] at ({dt},{phi},{xi}): {} vs {fd}",
+                        d2[i * 2 + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_is_symmetric() {
+        let p = Periodic::new(2);
+        let f = p.prepare(&[2.0, 0.17]);
+        let mut dl = [0.0; 2];
+        let mut d2 = [0.0; 4];
+        f.value_dlog2(4.2, &mut dl, &mut d2);
+        assert_eq!(d2[1], d2[2]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Product-of-factors kernel: `k̃(Δt) = Π_k F_k(Δt; ϑ_k)`.
+//!
+//! Converts the factors' logarithmic derivatives into the direct
+//! derivatives the GP layer needs:
+//! `∂V/∂α = V L_α`, `∂²V/∂α∂β = V (L_α L_β + M_αβ)` with `M_αβ = 0`
+//! across factors. If any factor evaluates to exactly zero (compact
+//! support), the product and *all* its derivatives are zero — valid here
+//! because the Wendland factor has a 6th-order zero at its support edge.
+
+use super::{DataSpan, Factor, PreparedFactor, PreparedKernel, StationaryKernel};
+
+/// A product kernel over a list of factors with concatenated parameters.
+pub struct ProductKernel {
+    factors: Vec<Box<dyn Factor>>,
+    /// Parameter offset of each factor in the concatenated vector.
+    offsets: Vec<usize>,
+    dim: usize,
+    constraints: Vec<(usize, usize)>,
+}
+
+impl ProductKernel {
+    pub fn new(factors: Vec<Box<dyn Factor>>) -> Self {
+        let mut offsets = Vec::with_capacity(factors.len());
+        let mut dim = 0;
+        for f in &factors {
+            offsets.push(dim);
+            dim += f.dim();
+        }
+        Self { factors, offsets, dim, constraints: Vec::new() }
+    }
+
+    /// Declare ordering constraints `θ[i] ≤ θ[j]` on the concatenated
+    /// parameter vector (e.g. the paper's `T₂ ≥ T₁` for k₂).
+    pub fn with_constraints(mut self, constraints: Vec<(usize, usize)>) -> Self {
+        for &(i, j) in &constraints {
+            assert!(i < self.dim && j < self.dim, "constraint index out of range");
+        }
+        self.constraints = constraints;
+        self
+    }
+}
+
+impl StationaryKernel for ProductKernel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn names(&self) -> Vec<String> {
+        self.factors.iter().flat_map(|f| f.names()).collect()
+    }
+
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)> {
+        self.factors.iter().flat_map(|f| f.bounds(span)).collect()
+    }
+
+    fn ordering_constraints(&self) -> Vec<(usize, usize)> {
+        self.constraints.clone()
+    }
+
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedKernel> {
+        assert_eq!(theta.len(), self.dim, "theta length mismatch");
+        let prepared: Vec<(usize, usize, Box<dyn PreparedFactor>)> = self
+            .factors
+            .iter()
+            .zip(&self.offsets)
+            .map(|(f, &off)| (off, f.dim(), f.prepare(&theta[off..off + f.dim()])))
+            .collect();
+        let max_fdim = self.factors.iter().map(|f| f.dim()).max().unwrap_or(0);
+        Box::new(PreparedProduct {
+            prepared,
+            dim: self.dim,
+            dlog: vec![0.0; self.dim],
+            fd2: vec![0.0; max_fdim * max_fdim],
+        })
+    }
+}
+
+struct PreparedProduct {
+    prepared: Vec<(usize, usize, Box<dyn PreparedFactor>)>,
+    dim: usize,
+    /// Scratch: concatenated L vector.
+    dlog: Vec<f64>,
+    /// Scratch: per-factor M block.
+    fd2: Vec<f64>,
+}
+
+impl PreparedKernel for PreparedProduct {
+    fn value(&mut self, dt: f64) -> f64 {
+        let mut v = 1.0;
+        for (_, _, f) in &self.prepared {
+            v *= f.value(dt);
+            if v == 0.0 {
+                return 0.0;
+            }
+        }
+        v
+    }
+
+    fn value_grad(&mut self, dt: f64, grad: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.dim);
+        let mut v = 1.0;
+        for (off, fdim, f) in &self.prepared {
+            let fv = f.value_dlog(dt, &mut self.dlog[*off..*off + *fdim]);
+            v *= fv;
+            if v == 0.0 {
+                grad.fill(0.0);
+                return 0.0;
+            }
+        }
+        for i in 0..self.dim {
+            grad[i] = v * self.dlog[i];
+        }
+        v
+    }
+
+    fn value_grad_hess(&mut self, dt: f64, grad: &mut [f64], hess: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.dim);
+        debug_assert_eq!(hess.len(), self.dim * self.dim);
+        let mut v = 1.0;
+        // first pass: values + dlogs + per-factor d2log blocks into hess
+        hess.fill(0.0);
+        for (off, fdim, f) in &self.prepared {
+            let (off, fdim) = (*off, *fdim);
+            let block = &mut self.fd2[..fdim * fdim];
+            let fv = f.value_dlog2(dt, &mut self.dlog[off..off + fdim], block);
+            v *= fv;
+            if v == 0.0 {
+                grad.fill(0.0);
+                hess.fill(0.0);
+                return 0.0;
+            }
+            // place the M block (same-factor second log-derivatives)
+            for a in 0..fdim {
+                for b in 0..fdim {
+                    hess[(off + a) * self.dim + (off + b)] = block[a * fdim + b];
+                }
+            }
+        }
+        // second pass: grad and the L_α L_β outer product, all scaled by V
+        for i in 0..self.dim {
+            grad[i] = v * self.dlog[i];
+        }
+        for i in 0..self.dim {
+            for j in 0..self.dim {
+                hess[i * self.dim + j] =
+                    v * (hess[i * self.dim + j] + self.dlog[i] * self.dlog[j]);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::check_derivatives;
+    use super::super::{Periodic, SquaredExponential, Wendland};
+    use super::*;
+
+    fn k1_like() -> ProductKernel {
+        ProductKernel::new(vec![Box::new(Wendland), Box::new(Periodic::new(1))])
+    }
+
+    #[test]
+    fn product_value_is_product() {
+        let k = k1_like();
+        let w = Wendland;
+        let p = Periodic::new(1);
+        let theta = [2.0, 1.0, 0.1];
+        let mut prep = k.prepare(&theta);
+        let want = w.prepare(&[2.0]).value(1.5) * p.prepare(&[1.0, 0.1]).value(1.5);
+        assert!((prep.value(1.5) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn k1_like_derivatives_fd() {
+        let k = k1_like();
+        for &dt in &[0.4, 1.0, 3.3, 6.0] {
+            check_derivatives(&k, dt, &[2.2, 1.0, 0.12], 2e-4);
+        }
+    }
+
+    #[test]
+    fn k2_like_derivatives_fd() {
+        let k = ProductKernel::new(vec![
+            Box::new(Wendland),
+            Box::new(Periodic::new(1)),
+            Box::new(Periodic::new(2)),
+        ])
+        .with_constraints(vec![(1, 3)]);
+        assert_eq!(k.dim(), 5);
+        assert_eq!(k.ordering_constraints(), vec![(1, 3)]);
+        for &dt in &[0.4, 2.0, 5.0] {
+            check_derivatives(&k, dt, &[2.5, 1.0, 0.1, 1.8, -0.2], 2e-4);
+        }
+    }
+
+    #[test]
+    fn mixed_factor_product() {
+        let k = ProductKernel::new(vec![
+            Box::new(SquaredExponential::new(1)),
+            Box::new(Periodic::new(1)),
+        ]);
+        for &dt in &[0.5, 2.0] {
+            check_derivatives(&k, dt, &[1.3, 0.8, 0.05], 2e-4);
+        }
+    }
+
+    #[test]
+    fn outside_support_zero() {
+        let k = k1_like();
+        let theta = [0.0, 1.0, 0.0]; // T0 = 1 → support |dt| < 1
+        let mut prep = k.prepare(&theta);
+        let mut g = [1.0; 3];
+        let mut h = [1.0; 9];
+        assert_eq!(prep.value_grad_hess(5.0, &mut g, &mut h), 0.0);
+        assert!(g.iter().all(|&x| x == 0.0));
+        assert!(h.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn names_and_bounds_concatenate() {
+        let k = k1_like();
+        assert_eq!(k.names(), vec!["phi0", "phi1", "xi1"]);
+        let span = DataSpan { dt_min: 1.0, dt_max: 100.0 };
+        let b = k.bounds(&span);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0], (0.0, 100f64.ln()));
+        assert_eq!(b[2].0, -0.5 + super::super::periodic::XI_MARGIN);
+    }
+}

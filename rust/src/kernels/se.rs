@@ -1,0 +1,92 @@
+//! Squared-exponential factor `exp[−Δt²/(2L²)]` with flat coordinate
+//! `φ = ln L` (Jeffreys prior on the lengthscale).
+//!
+//! With `q = Δt² e^{−2φ}/2`: `lnF = −q`, `∂lnF/∂φ = 2q`, `∂²lnF/∂φ² = −4q`.
+
+use super::{DataSpan, Factor, PreparedFactor};
+
+/// Squared-exponential (RBF) factor, one hyperparameter `φ = ln L`.
+#[derive(Clone, Copy, Debug)]
+pub struct SquaredExponential {
+    pub index: usize,
+}
+
+impl SquaredExponential {
+    pub fn new(index: usize) -> Self {
+        Self { index }
+    }
+}
+
+impl Factor for SquaredExponential {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn names(&self) -> Vec<String> {
+        vec![format!("phiSE{}", self.index)]
+    }
+
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)> {
+        vec![span.phi_bounds()]
+    }
+
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedFactor> {
+        assert_eq!(theta.len(), 1);
+        Box::new(PreparedSe { inv_2l2: 0.5 * (-2.0 * theta[0]).exp() })
+    }
+}
+
+struct PreparedSe {
+    inv_2l2: f64,
+}
+
+impl PreparedFactor for PreparedSe {
+    fn value(&self, dt: f64) -> f64 {
+        (-dt * dt * self.inv_2l2).exp()
+    }
+
+    fn value_dlog(&self, dt: f64, dlog: &mut [f64]) -> f64 {
+        let q = dt * dt * self.inv_2l2;
+        dlog[0] = 2.0 * q;
+        (-q).exp()
+    }
+
+    fn value_dlog2(&self, dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64 {
+        let q = dt * dt * self.inv_2l2;
+        dlog[0] = 2.0 * q;
+        d2log[0] = -4.0 * q;
+        (-q).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_basics() {
+        let k = SquaredExponential::new(1);
+        let f = k.prepare(&[0.0]); // L = 1
+        assert!((f.value(0.0) - 1.0).abs() < 1e-15);
+        assert!((f.value(1.0) - (-0.5f64).exp()).abs() < 1e-15);
+        assert!(f.value(2.0) < f.value(1.0));
+    }
+
+    #[test]
+    fn log_derivs_match_fd() {
+        let k = SquaredExponential::new(1);
+        for &(dt, phi) in &[(0.5, 0.0), (2.0, 1.0), (7.0, 2.0)] {
+            let f = k.prepare(&[phi]);
+            let mut dl = [0.0];
+            let mut d2 = [0.0];
+            let v = f.value_dlog2(dt, &mut dl, &mut d2);
+            let h = 1e-6;
+            let lp = k.prepare(&[phi + h]).value(dt).ln();
+            let lm = k.prepare(&[phi - h]).value(dt).ln();
+            let fd1 = (lp - lm) / (2.0 * h);
+            let fd2 = (lp - 2.0 * v.ln() + lm) / (h * h);
+            assert!(crate::math::rel_diff(dl[0], fd1) < 1e-6);
+            assert!(crate::math::rel_diff(d2[0], fd2) < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Sum-of-kernels combinator: `k̃(Δt) = Σ_c k̃_c(Δt; ϑ_c)`.
+//!
+//! Values, gradients and Hessians add directly; the Hessian is block
+//! diagonal across summands. Pair each summand (after the first) with an
+//! [`super::Amplitude`] factor inside a [`super::ProductKernel`] so the
+//! relative weights are learnable — the *overall* scale stays profiled
+//! out through σ_f as usual.
+
+use super::{DataSpan, PreparedKernel, StationaryKernel};
+
+/// Sum of stationary kernels with concatenated parameter vectors.
+pub struct SumKernel {
+    children: Vec<Box<dyn StationaryKernel>>,
+    offsets: Vec<usize>,
+    dim: usize,
+}
+
+impl SumKernel {
+    pub fn new(children: Vec<Box<dyn StationaryKernel>>) -> Self {
+        let mut offsets = Vec::with_capacity(children.len());
+        let mut dim = 0;
+        for c in &children {
+            offsets.push(dim);
+            dim += c.dim();
+        }
+        Self { children, offsets, dim }
+    }
+}
+
+impl StationaryKernel for SumKernel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn names(&self) -> Vec<String> {
+        self.children
+            .iter()
+            .enumerate()
+            .flat_map(|(i, c)| c.names().into_iter().map(move |n| format!("s{i}.{n}")))
+            .collect()
+    }
+
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)> {
+        self.children.iter().flat_map(|c| c.bounds(span)).collect()
+    }
+
+    fn ordering_constraints(&self) -> Vec<(usize, usize)> {
+        // shift each child's constraints by its offset
+        self.children
+            .iter()
+            .zip(&self.offsets)
+            .flat_map(|(c, &off)| {
+                c.ordering_constraints().into_iter().map(move |(i, j)| (i + off, j + off))
+            })
+            .collect()
+    }
+
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedKernel> {
+        assert_eq!(theta.len(), self.dim);
+        let prepared: Vec<(usize, usize, Box<dyn PreparedKernel>)> = self
+            .children
+            .iter()
+            .zip(&self.offsets)
+            .map(|(c, &off)| (off, c.dim(), c.prepare(&theta[off..off + c.dim()])))
+            .collect();
+        let max_dim = self.children.iter().map(|c| c.dim()).max().unwrap_or(0);
+        Box::new(PreparedSum {
+            prepared,
+            dim: self.dim,
+            g_scratch: vec![0.0; max_dim],
+            h_scratch: vec![0.0; max_dim * max_dim],
+        })
+    }
+}
+
+struct PreparedSum {
+    prepared: Vec<(usize, usize, Box<dyn PreparedKernel>)>,
+    dim: usize,
+    g_scratch: Vec<f64>,
+    h_scratch: Vec<f64>,
+}
+
+impl PreparedKernel for PreparedSum {
+    fn value(&mut self, dt: f64) -> f64 {
+        self.prepared.iter_mut().map(|(_, _, c)| c.value(dt)).sum()
+    }
+
+    fn value_grad(&mut self, dt: f64, grad: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.dim);
+        grad.fill(0.0);
+        let mut v = 0.0;
+        for (off, cdim, c) in &mut self.prepared {
+            let g = &mut self.g_scratch[..*cdim];
+            v += c.value_grad(dt, g);
+            grad[*off..*off + *cdim].copy_from_slice(g);
+        }
+        v
+    }
+
+    fn value_grad_hess(&mut self, dt: f64, grad: &mut [f64], hess: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.dim);
+        debug_assert_eq!(hess.len(), self.dim * self.dim);
+        grad.fill(0.0);
+        hess.fill(0.0);
+        let mut v = 0.0;
+        for (off, cdim, c) in &mut self.prepared {
+            let (off, cdim) = (*off, *cdim);
+            let g = &mut self.g_scratch[..cdim];
+            let h = &mut self.h_scratch[..cdim * cdim];
+            v += c.value_grad_hess(dt, g, h);
+            grad[off..off + cdim].copy_from_slice(g);
+            for a in 0..cdim {
+                for b in 0..cdim {
+                    hess[(off + a) * self.dim + (off + b)] = h[a * cdim + b];
+                }
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::check_derivatives;
+    use super::super::{Amplitude, Factor, Matern32, Periodic, ProductKernel, SquaredExponential};
+    use super::*;
+
+    fn se_plus_periodic() -> SumKernel {
+        SumKernel::new(vec![
+            Box::new(ProductKernel::new(vec![Box::new(SquaredExponential::new(1))])),
+            Box::new(ProductKernel::new(vec![
+                Box::new(Amplitude::new(1)),
+                Box::new(Periodic::new(1)),
+            ])),
+        ])
+    }
+
+    #[test]
+    fn sum_value_adds() {
+        let k = se_plus_periodic();
+        let theta = [1.0, -0.3, 0.9, 0.05];
+        let mut p = k.prepare(&theta);
+        let se = SquaredExponential::new(1).prepare(&[1.0]);
+        let amp = Amplitude::new(1).prepare(&[-0.3]);
+        let per = Periodic::new(1).prepare(&[0.9, 0.05]);
+        let dt = 1.3;
+        let want = se.value(dt) + amp.value(dt) * per.value(dt);
+        assert!((p.value(dt) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn sum_derivatives_fd() {
+        let k = se_plus_periodic();
+        assert_eq!(k.dim(), 4);
+        for &dt in &[0.2, 1.0, 2.7] {
+            check_derivatives(&k, dt, &[1.0, -0.3, 0.9, 0.05], 2e-4);
+        }
+    }
+
+    #[test]
+    fn names_have_summand_prefix() {
+        let k = SumKernel::new(vec![
+            Box::new(ProductKernel::new(vec![Box::new(Matern32::new(1))])),
+            Box::new(ProductKernel::new(vec![Box::new(SquaredExponential::new(2))])),
+        ]);
+        let names = k.names();
+        assert!(names[0].starts_with("s0."));
+        assert!(names[1].starts_with("s1."));
+    }
+}

@@ -1,0 +1,212 @@
+//! Compact-support Wendland ψ₃,₂ factor — the `C(|t−t'|/T₀)` term of the
+//! paper's k₁/k₂ (eqs. 3.1–3.3, with the erratum fix described in the
+//! module docs of [`crate::kernels`]).
+//!
+//! `C(τ) = (1−τ)₊⁶ (35τ² + 18τ + 3) / 3`, `τ = |Δt| / T₀`, `T₀ = e^{φ₀}`.
+//!
+//! Derivatives (hand-derived, FD-validated in the tests):
+//! `C'(τ)  = −(56/3) τ (5τ+1) (1−τ)⁵`
+//! `C''(τ) =  (56/3) (1−τ)⁴ (35τ² − 4τ − 1)`
+//! and in the flat coordinate `φ₀ = ln T₀` (so `∂τ/∂φ₀ = −τ`):
+//! `L ≡ ∂lnC/∂φ₀ = −τ C'/C`,
+//! `M ≡ ∂²lnC/∂φ₀² = τ u + τ² (C''/C − u²)`, `u = C'/C`.
+
+use super::{DataSpan, Factor, PreparedFactor};
+
+/// Wendland ψ₃,₂ compact-support factor with hyperparameter `φ₀ = ln T₀`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Wendland;
+
+/// `C(τ)` — exposed for the data generators and the python oracle tests.
+pub fn wendland_c(tau: f64) -> f64 {
+    if tau >= 1.0 {
+        return 0.0;
+    }
+    let om = 1.0 - tau;
+    let om2 = om * om;
+    let om6 = om2 * om2 * om2;
+    om6 * (35.0 * tau * tau + 18.0 * tau + 3.0) / 3.0
+}
+
+/// `C'(τ)`.
+pub fn wendland_c1(tau: f64) -> f64 {
+    if tau >= 1.0 {
+        return 0.0;
+    }
+    let om = 1.0 - tau;
+    let om2 = om * om;
+    let om5 = om2 * om2 * om;
+    -(56.0 / 3.0) * tau * (5.0 * tau + 1.0) * om5
+}
+
+/// `C''(τ)`.
+pub fn wendland_c2(tau: f64) -> f64 {
+    if tau >= 1.0 {
+        return 0.0;
+    }
+    let om = 1.0 - tau;
+    let om2 = om * om;
+    let om4 = om2 * om2;
+    (56.0 / 3.0) * om4 * (35.0 * tau * tau - 4.0 * tau - 1.0)
+}
+
+impl Factor for Wendland {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn names(&self) -> Vec<String> {
+        vec!["phi0".to_string()]
+    }
+
+    fn bounds(&self, span: &DataSpan) -> Vec<(f64, f64)> {
+        vec![span.phi_bounds()]
+    }
+
+    fn prepare(&self, theta: &[f64]) -> Box<dyn PreparedFactor> {
+        assert_eq!(theta.len(), 1);
+        Box::new(PreparedWendland { inv_t0: (-theta[0]).exp() })
+    }
+}
+
+struct PreparedWendland {
+    inv_t0: f64,
+}
+
+impl PreparedFactor for PreparedWendland {
+    fn value(&self, dt: f64) -> f64 {
+        wendland_c(dt.abs() * self.inv_t0)
+    }
+
+    fn value_dlog(&self, dt: f64, dlog: &mut [f64]) -> f64 {
+        let tau = dt.abs() * self.inv_t0;
+        let c = wendland_c(tau);
+        if c == 0.0 {
+            dlog[0] = 0.0;
+            return 0.0;
+        }
+        dlog[0] = -tau * wendland_c1(tau) / c;
+        c
+    }
+
+    fn value_dlog2(&self, dt: f64, dlog: &mut [f64], d2log: &mut [f64]) -> f64 {
+        let tau = dt.abs() * self.inv_t0;
+        let c = wendland_c(tau);
+        if c == 0.0 {
+            dlog[0] = 0.0;
+            d2log[0] = 0.0;
+            return 0.0;
+        }
+        let u = wendland_c1(tau) / c;
+        dlog[0] = -tau * u;
+        d2log[0] = tau * u + tau * tau * (wendland_c2(tau) / c - u * u);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_endpoints() {
+        assert!((wendland_c(0.0) - 1.0).abs() < 1e-15);
+        assert_eq!(wendland_c(1.0), 0.0);
+        assert_eq!(wendland_c(1.5), 0.0);
+        // strictly decreasing on (0, 1)
+        let mut prev = 1.0;
+        for i in 1..=100 {
+            let v = wendland_c(i as f64 / 100.0);
+            assert!(v < prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn derivative_polynomials_match_fd() {
+        for &tau in &[0.01, 0.1, 0.35, 0.5, 0.77, 0.95] {
+            let h = 1e-7;
+            let fd1 = (wendland_c(tau + h) - wendland_c(tau - h)) / (2.0 * h);
+            assert!(
+                crate::math::rel_diff(wendland_c1(tau), fd1) < 1e-6,
+                "C' at {tau}: {} vs {fd1}",
+                wendland_c1(tau)
+            );
+            let fd2 = (wendland_c1(tau + h) - wendland_c1(tau - h)) / (2.0 * h);
+            assert!(
+                crate::math::rel_diff(wendland_c2(tau), fd2) < 1e-6,
+                "C'' at {tau}: {} vs {fd2}",
+                wendland_c2(tau)
+            );
+        }
+    }
+
+    #[test]
+    fn smooth_at_support_boundary() {
+        // C, C', C'' all → 0 as τ → 1⁻ (6th-order zero)
+        assert!(wendland_c(1.0 - 1e-8) < 1e-40);
+        assert!(wendland_c1(1.0 - 1e-8).abs() < 1e-30);
+        assert!(wendland_c2(1.0 - 1e-8).abs() < 1e-25);
+    }
+
+    #[test]
+    fn log_derivs_match_fd_in_phi() {
+        let w = Wendland;
+        for &(dt, phi) in &[(1.0, 1.0), (3.0, 1.5), (0.5, 0.0), (2.0, 0.9)] {
+            let h = 1e-6;
+            let f0 = w.prepare(&[phi]);
+            let mut dl = [0.0];
+            let mut d2 = [0.0];
+            let v = f0.value_dlog2(dt, &mut dl, &mut d2);
+            assert!(v > 0.0, "inside support expected");
+            let lp = w.prepare(&[phi + h]).value(dt).ln();
+            let lm = w.prepare(&[phi - h]).value(dt).ln();
+            let l0 = v.ln();
+            let fd1 = (lp - lm) / (2.0 * h);
+            let fd2 = (lp - 2.0 * l0 + lm) / (h * h);
+            assert!(crate::math::rel_diff(dl[0], fd1) < 1e-5, "{} vs {fd1}", dl[0]);
+            assert!(crate::math::rel_diff(d2[0], fd2) < 1e-3, "{} vs {fd2}", d2[0]);
+        }
+    }
+
+    #[test]
+    fn outside_support_returns_zero_everywhere() {
+        let w = Wendland;
+        let p = w.prepare(&[0.0]); // T0 = 1
+        let mut dl = [9.0];
+        let mut d2 = [9.0];
+        assert_eq!(p.value_dlog2(2.0, &mut dl, &mut d2), 0.0);
+        assert_eq!(dl[0], 0.0);
+        assert_eq!(d2[0], 0.0);
+    }
+
+    /// The erratum check: the *published* polynomial (1−τ)⁵(48τ²+15τ+3)/3
+    /// is not positive definite on a regular grid, while the Wendland
+    /// ψ₃,₂ we implement is (smallest eigenvalue ≥ 0 up to round-off).
+    #[test]
+    fn published_polynomial_is_indefinite_wendland_is_not() {
+        use crate::linalg::{sym_eigen, Matrix};
+        let published = |tau: f64| -> f64 {
+            if tau >= 1.0 {
+                0.0
+            } else {
+                (1.0 - tau).powi(5) * (48.0 * tau * tau + 15.0 * tau + 3.0) / 3.0
+            }
+        };
+        let n = 60;
+        let t0 = 20.0;
+        let build = |f: &dyn Fn(f64) -> f64| {
+            let mut k = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    k[(i, j)] = f((i as f64 - j as f64).abs() / t0);
+                }
+            }
+            k
+        };
+        let (ev_pub, _) = sym_eigen(&build(&published));
+        let (ev_wend, _) = sym_eigen(&build(&|tau| wendland_c(tau)));
+        assert!(ev_pub[0] < -1e-3, "published poly should be indefinite, min eig {}", ev_pub[0]);
+        assert!(ev_wend[0] > -1e-10, "wendland should be PSD, min eig {}", ev_wend[0]);
+    }
+}

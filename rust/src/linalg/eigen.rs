@@ -1,0 +1,150 @@
+//! Cyclic Jacobi eigensolver for small symmetric matrices.
+//!
+//! Used by the nested sampler's bounding-ellipsoid proposal (the
+//! MULTINEST-style baseline) and by the Fig. 2 corner-plot diagnostics,
+//! where matrices are `m×m` with m ≤ ~10 — Jacobi is simple, provably
+//! convergent, and plenty fast at that size.
+
+use super::Matrix;
+
+/// Eigendecomposition `A = V diag(λ) Vᵀ` of a symmetric matrix.
+///
+/// Returns `(eigenvalues, eigenvectors)` with eigenvalues ascending and
+/// eigenvectors in the *columns* of the returned matrix.
+pub fn sym_eigen(a: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows(), a.cols(), "sym_eigen needs a square matrix");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Matrix::eye(n);
+    const MAX_SWEEPS: usize = 64;
+    for _ in 0..MAX_SWEEPS {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * m.fro_norm().max(1e-300) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // stable tan rotation
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // apply rotation J(p,q,θ): M ← JᵀMJ, V ← VJ
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // extract and sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| evals[a].partial_cmp(&evals[b]).unwrap());
+    let sorted_vals: Vec<f64> = idx.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = Matrix::zeros(n, n);
+    for (new_col, &old_col) in idx.iter().enumerate() {
+        for r in 0..n {
+            sorted_vecs[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    (sorted_vals, sorted_vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let (vals, _) = sym_eigen(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → λ = 1, 3
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (vals, vecs) = sym_eigen(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        // eigenvector for λ=3 is (1,1)/√2 up to sign
+        let v = (vecs[(0, 1)], vecs[(1, 1)]);
+        assert!((v.0.abs() - (0.5f64).sqrt()).abs() < 1e-10);
+        assert!((v.0 - v.1).abs() < 1e-10 || (v.0 + v.1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        let mut rng = Xoshiro256::seed_from_u64(47);
+        for &n in &[2usize, 4, 7, 10] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = rng.normal();
+                    a[(i, j)] = v;
+                    a[(j, i)] = v;
+                }
+            }
+            let (vals, vecs) = sym_eigen(&a);
+            // A V = V diag(λ)
+            for c in 0..n {
+                let vc: Vec<f64> = (0..n).map(|r| vecs[(r, c)]).collect();
+                let av = a.matvec(&vc);
+                for r in 0..n {
+                    assert!(
+                        (av[r] - vals[c] * vc[r]).abs() < 1e-9,
+                        "n={n} col={c} row={r}"
+                    );
+                }
+            }
+            // orthonormality
+            for c1 in 0..n {
+                for c2 in 0..n {
+                    let d: f64 = (0..n).map(|r| vecs[(r, c1)] * vecs[(r, c2)]).sum();
+                    let want = if c1 == c2 { 1.0 } else { 0.0 };
+                    assert!((d - want).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_and_det_preserved() {
+        let a = Matrix::from_rows(&[&[4.0, 1.0, 0.5], &[1.0, 3.0, 0.2], &[0.5, 0.2, 5.0]]);
+        let (vals, _) = sym_eigen(&a);
+        let tr: f64 = vals.iter().sum();
+        assert!((tr - 12.0).abs() < 1e-10);
+    }
+}

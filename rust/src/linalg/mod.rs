@@ -1,0 +1,66 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's costs are dominated by the `O(n³)` Cholesky factorisation of
+//! the covariance matrix (§2); everything else — gradients, Hessians,
+//! predictive variances — is `O(n²)` contractions once the factor exists.
+//! This module owns that hot path in pure rust (no BLAS/LAPACK is available
+//! in the build image): a blocked right-looking Cholesky, triangular
+//! solves, a Levinson–Durbin Toeplitz solver (the §3(b) footnote-7
+//! ablation), a small LU for Hessian determinants, and a Jacobi symmetric
+//! eigensolver for bounding ellipsoids in the nested sampler.
+
+mod matrix;
+mod cholesky;
+mod triangular;
+mod toeplitz;
+mod lu;
+mod eigen;
+
+pub use matrix::Matrix;
+pub use cholesky::{Chol, CholError};
+pub use triangular::{solve_lower, solve_lower_transpose, solve_upper};
+pub use toeplitz::ToeplitzSolver;
+pub use lu::Lu;
+pub use eigen::sym_eigen;
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,106 @@
+//! Triangular solves against a lower factor stored in a full square
+//! matrix (upper triangle ignored).
+
+use super::Matrix;
+
+/// Solve `L x = b` in place (`b` becomes `x`), `L` lower triangular.
+pub fn solve_lower(l: &Matrix, b: &mut [f64]) {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let c = l.cols();
+    let data = l.as_slice();
+    for i in 0..n {
+        let row = i * c;
+        let mut s = b[i];
+        // dot of the solved prefix with L's row — contiguous, vectorises
+        let mut acc = 0.0;
+        for k in 0..i {
+            acc += data[row + k] * b[k];
+        }
+        s -= acc;
+        b[i] = s / data[row + i];
+    }
+}
+
+/// Solve `Lᵀ x = b` in place, `L` lower triangular (so `Lᵀ` is upper).
+///
+/// Implemented as a column-oriented backward sweep so all inner accesses
+/// still walk `L`'s rows contiguously.
+pub fn solve_lower_transpose(l: &Matrix, b: &mut [f64]) {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let c = l.cols();
+    let data = l.as_slice();
+    for i in (0..n).rev() {
+        let row = i * c;
+        let xi = b[i] / data[row + i];
+        b[i] = xi;
+        // eliminate x_i from all earlier equations: b[k] -= L[i,k] * x_i
+        for k in 0..i {
+            b[k] -= data[row + k] * xi;
+        }
+    }
+}
+
+/// Solve `U x = b` in place for a genuinely upper-triangular `U`
+/// (used by the small-m LU in Hessian determinant work).
+pub fn solve_upper(u: &Matrix, b: &mut [f64]) {
+    let n = u.rows();
+    debug_assert_eq!(b.len(), n);
+    let c = u.cols();
+    let data = u.as_slice();
+    for i in (0..n).rev() {
+        let row = i * c;
+        let mut acc = 0.0;
+        for k in (i + 1)..n {
+            acc += data[row + k] * b[k];
+        }
+        b[i] = (b[i] - acc) / data[row + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lower_solve_exact() {
+        // L = [[2,0],[1,3]], b = [4, 7] → x = [2, 5/3]
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let mut b = vec![4.0, 7.0];
+        solve_lower(&l, &mut b);
+        assert!((b[0] - 2.0).abs() < 1e-15);
+        assert!((b[1] - 5.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn lower_transpose_solve_exact() {
+        // Lᵀ = [[2,1],[0,3]], b = [5, 6] → x₁ = 2, x₀ = (5-2)/2 = 1.5
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let mut b = vec![5.0, 6.0];
+        solve_lower_transpose(&l, &mut b);
+        assert!((b[1] - 2.0).abs() < 1e-15);
+        assert!((b[0] - 1.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn upper_solve_exact() {
+        let u = Matrix::from_rows(&[&[2.0, 1.0], &[0.0, 4.0]]);
+        let mut b = vec![4.0, 8.0];
+        solve_upper(&u, &mut b);
+        assert!((b[1] - 2.0).abs() < 1e-15);
+        assert!((b[0] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn garbage_upper_triangle_is_ignored() {
+        let mut l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        l[(0, 1)] = f64::NAN; // must never be read
+        let mut b = vec![4.0, 7.0];
+        solve_lower(&l, &mut b);
+        assert!(b.iter().all(|x| x.is_finite()));
+        let mut b = vec![5.0, 6.0];
+        solve_lower_transpose(&l, &mut b);
+        assert!(b.iter().all(|x| x.is_finite()));
+    }
+}

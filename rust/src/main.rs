@@ -1,0 +1,275 @@
+//! `gpfast` — command-line driver for the GP fast-training system.
+//!
+//! Subcommands:
+//!
+//! * `compare`  — train every configured model on a dataset and rank by
+//!   Laplace hyperevidence (optionally verifying with nested sampling);
+//!   the paper's Table-1 workflow.
+//! * `train`    — train a single model, print θ̂ ± σ and ln P peak.
+//! * `nested`   — run only the nested-sampling baseline.
+//! * `synth`    — emit a synthetic Table-1 dataset as CSV.
+//! * `tidal`    — emit the simulated Woods-Hole tidal series as CSV.
+//! * `realise`  — draw GP realisations (Fig. 1) as CSV.
+//! * `predict`  — train then interpolate onto a finer grid (Fig. 3).
+//! * `info`     — backend/artifact status.
+//!
+//! Common flags: `--config <toml>`, `--backend native|xla|auto`,
+//! `--seed N`, `--data <csv>`, `--out <path>`.
+
+use std::path::{Path, PathBuf};
+
+use gpfast::config::RunConfig;
+use gpfast::coordinator::{train_model, ComparisonPipeline, ModelSpec};
+use gpfast::data::{csv, synthetic, tidal, Dataset};
+use gpfast::nested::{nested_sample, NestedOptions};
+use gpfast::priors::{BoxPrior, ScalePrior};
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::select_backend;
+use gpfast::util::{Args, Stopwatch};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> gpfast::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    // CLI overrides
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
+    if let Some(m) = args.get("models") {
+        cfg.models = m.split(',').map(String::from).collect();
+    }
+    cfg.sigma_n = args.get_f64("sigma-n", cfg.sigma_n)?;
+    cfg.restarts = args.get_usize("restarts", cfg.restarts)?;
+    if args.flag("nested") {
+        cfg.run_nested = true;
+    }
+
+    match args.command.as_deref() {
+        Some("compare") => cmd_compare(args, &cfg),
+        Some("train") => cmd_train(args, &cfg),
+        Some("nested") => cmd_nested(args, &cfg),
+        Some("synth") => cmd_synth(args, &cfg),
+        Some("tidal") => cmd_tidal(args, &cfg),
+        Some("realise") => cmd_realise(args, &cfg),
+        Some("predict") => cmd_predict(args, &cfg),
+        Some("info") => cmd_info(args, &cfg),
+        Some(other) => anyhow::bail!(
+            "unknown subcommand '{other}' (try: compare, train, nested, synth, tidal, realise, predict, info)"
+        ),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "gpfast — fast GP training (Moore et al., RSOS 2016 reproduction)
+
+usage: gpfast <compare|train|nested|synth|tidal|realise|predict|info> [flags]
+
+flags:
+  --config <file.toml>     load run configuration
+  --data <file.csv>        dataset (else synthetic --n points)
+  --n <N>                  synthetic dataset size [100]
+  --models k1,k2           models to use
+  --model k2               single model (train/nested)
+  --backend native|xla|auto
+  --restarts <N>           multistart restarts [10]
+  --nested                 verify compare with nested sampling
+  --seed <N>               RNG seed
+  --out <path>             output file (csv/json)";
+
+/// Load `--data` CSV, else synthesise a Table-1 dataset of `--n` points.
+fn load_dataset(args: &Args, cfg: &RunConfig) -> gpfast::Result<Dataset> {
+    match args.get("data") {
+        Some(path) => csv::read_dataset(Path::new(path)),
+        None => {
+            let n = args.get_usize("n", 100)?;
+            Ok(synthetic::table1_dataset(n, cfg.sigma_n, cfg.seed))
+        }
+    }
+}
+
+fn cmd_compare(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let data = load_dataset(args, cfg)?;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let mut pipeline = ComparisonPipeline::new(cfg.pipeline()?);
+    let sw = Stopwatch::start();
+    let report = pipeline.run(&data, &mut rng)?;
+    print!("{}", report.render());
+    println!("total wall time: {:.2} s", sw.elapsed_secs());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().pretty())?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let data = load_dataset(args, cfg)?;
+    let spec = ModelSpec::parse(&args.get_or("model", "k2"))?;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let pipe = cfg.pipeline()?;
+    let sw = Stopwatch::start();
+    let res = train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &mut rng)?;
+    let model = spec.build(cfg.sigma_n);
+    let hess = gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &res.theta_hat)?;
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let ev = gpfast::evidence::laplace_evidence(
+        data.len(),
+        &prior,
+        &ScalePrior::default(),
+        &res.theta_hat,
+        res.lnp_peak,
+        &hess,
+    )?;
+    println!("model {} on {} (n = {})", model.name, data.label, data.len());
+    for ((name, th), sg) in model.kernel.names().iter().zip(&res.theta_hat).zip(&ev.sigma) {
+        println!("  {name:8} = {th:9.4} ± {sg:.4}");
+    }
+    println!("  sigma_f  = {:9.4}", res.sigma_f_hat2.sqrt());
+    println!("  lnP_peak = {:9.3}", res.lnp_peak);
+    println!("  lnZ_est  = {:9.3}{}", ev.ln_z, if ev.suspect { "  (SUSPECT)" } else { "" });
+    println!(
+        "  evals    = {} across {} restarts ({} modes)",
+        res.n_evals, pipe.train.multistart.restarts, res.n_modes
+    );
+    println!("  wall     = {:.2} s", sw.elapsed_secs());
+    Ok(())
+}
+
+fn cmd_nested(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let data = load_dataset(args, cfg)?;
+    let spec = ModelSpec::parse(&args.get_or("model", "k2"))?;
+    let model = spec.build(cfg.sigma_n);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let scale = ScalePrior::default();
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let opts = NestedOptions { nlive: cfg.nlive, ..Default::default() };
+    let sw = Stopwatch::start();
+    let res = nested_sample(
+        prior.dim() + 1,
+        |u: &[f64]| {
+            let lambda = scale.lambda_from_unit(u[0]);
+            let theta = prior.from_unit_cube(&u[1..]);
+            let mut full = vec![lambda];
+            full.extend(theta);
+            gpfast::gp::full_lnp(&model, &data.t, &data.y, &full).unwrap_or(f64::NEG_INFINITY)
+        },
+        &opts,
+        &mut rng,
+    )?;
+    println!("nested sampling: model {} on {} (n = {})", model.name, data.label, data.len());
+    println!("  lnZ_num = {:.3} ± {:.3}", res.ln_z, res.ln_z_err);
+    println!(
+        "  evals   = {}  iters = {}  H = {:.2} nats",
+        res.n_evals, res.n_iters, res.information
+    );
+    println!("  wall    = {:.2} s", sw.elapsed_secs());
+    if let Some(out) = args.get("out") {
+        // posterior samples for corner plots
+        let mut cols: Vec<Vec<f64>> = vec![Vec::new(); prior.dim() + 2];
+        for s in &res.samples {
+            cols[0].push(s.ln_w);
+            cols[1].push(scale.lambda_from_unit(s.u[0]));
+            for (d, v) in prior.from_unit_cube(&s.u[1..]).into_iter().enumerate() {
+                cols[d + 2].push(v);
+            }
+        }
+        let mut names = vec!["ln_w".to_string(), "lambda".to_string()];
+        names.extend(model.kernel.names());
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let col_refs: Vec<&[f64]> = cols.iter().map(Vec::as_slice).collect();
+        csv::write_columns(Path::new(out), &name_refs, &col_refs)?;
+        println!("posterior samples written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let n = args.get_usize("n", 100)?;
+    let data = synthetic::table1_dataset(n, cfg.sigma_n, cfg.seed);
+    let out = PathBuf::from(args.get_or("out", "synthetic.csv"));
+    csv::write_dataset(&out, &data)?;
+    println!("wrote {} points to {}", data.len(), out.display());
+    Ok(())
+}
+
+fn cmd_tidal(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let mut tcfg = tidal::TidalConfig::six_lunar_months(cfg.seed);
+    tcfg.n = args.get_usize("n", tcfg.n)?;
+    let data = tidal::generate_tidal(&tcfg);
+    let out = PathBuf::from(args.get_or("out", "tidal.csv"));
+    csv::write_dataset(&out, &data)?;
+    println!("wrote {} points to {}", data.len(), out.display());
+    Ok(())
+}
+
+fn cmd_realise(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let n = args.get_usize("n", 100)?;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+    let k1 = gpfast::kernels::paper_k1(cfg.sigma_n);
+    let k2 = gpfast::kernels::paper_k2(cfg.sigma_n);
+    let y1 =
+        gpfast::gp::draw_realisation(&k1, 1.0, &gpfast::kernels::PaperK1::truth(), &t, &mut rng)?;
+    let y2 =
+        gpfast::gp::draw_realisation(&k2, 1.0, &gpfast::kernels::PaperK2::truth(), &t, &mut rng)?;
+    let out = PathBuf::from(args.get_or("out", "realisations.csv"));
+    csv::write_columns(&out, &["t", "k1", "k2"], &[&t, &y1, &y2])?;
+    println!("wrote Fig.-1 style realisations to {}", out.display());
+    Ok(())
+}
+
+fn cmd_predict(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let data = load_dataset(args, cfg)?;
+    let spec = ModelSpec::parse(&args.get_or("model", "k2"))?;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let pipe = cfg.pipeline()?;
+    let res = train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &mut rng)?;
+    let model = spec.build(cfg.sigma_n);
+    let ev = gpfast::gp::profiled::eval(&model, &data.t, &data.y, &res.theta_hat)?;
+    let factor = args.get_usize("refine", 4)?;
+    let n_star = data.len() * factor;
+    let (t0, t1) = (data.t[0], *data.t.last().unwrap());
+    let t_star: Vec<f64> =
+        (0..n_star).map(|i| t0 + (t1 - t0) * i as f64 / (n_star - 1) as f64).collect();
+    let pred = gpfast::gp::predict(&model, &data.t, &res.theta_hat, &ev, &t_star);
+    let out = PathBuf::from(args.get_or("out", "interpolant.csv"));
+    csv::write_columns(&out, &["t", "mean", "sd"], &[&t_star, &pred.mean, &pred.sd])?;
+    println!("wrote interpolant ({} points) to {}", n_star, out.display());
+    Ok(())
+}
+
+fn cmd_info(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", &cfg.artifacts_dir));
+    println!("gpfast — backend info");
+    println!("  requested backend: {}", cfg.backend);
+    match select_backend(&cfg.backend, Some(&dir)) {
+        Ok(b) => println!("  resolved backend:  {}", b.name()),
+        Err(e) => println!("  backend error:     {e}"),
+    }
+    match gpfast::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("  artifacts ({}):", m.entries.len());
+            for e in &m.entries {
+                println!(
+                    "    {:10} {:10} n={:<5} m={} σn={}",
+                    e.kind, e.model, e.n, e.m, e.sigma_n
+                );
+            }
+        }
+        Err(e) => println!("  no artifact manifest: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Scalar special functions used throughout the crate.
+//!
+//! Everything here is self-contained (no external crates are available in
+//! the build environment), double precision, and validated against
+//! high-precision reference values in the unit tests.
+
+mod special;
+
+pub use special::{erf, erfc, erfinv, lgamma};
+
+/// `ln(2π)` to full double precision.
+pub const LN_2PI: f64 = 1.837_877_066_409_345_4;
+
+/// `ln(2πe)` — appears in the profiled hyperlikelihood, eq. (2.16).
+pub const LN_2PI_E: f64 = 2.837_877_066_409_345_4;
+
+/// Numerically stable `ln(exp(a) + exp(b))`.
+pub fn log_add_exp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// Numerically stable `ln(exp(a) - exp(b))`, requires `a >= b`.
+pub fn log_sub_exp(a: f64, b: f64) -> f64 {
+    debug_assert!(a >= b, "log_sub_exp requires a >= b, got {a} < {b}");
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    a + (-(b - a).exp()).ln_1p()
+}
+
+/// Stable log-sum-exp over a slice.
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Relative difference `|a-b| / max(|a|, |b|, 1)` — the comparison metric
+/// used by the finite-difference derivative tests.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_2pi_matches() {
+        assert!((LN_2PI - (2.0 * std::f64::consts::PI).ln()).abs() < 1e-15);
+        assert!((LN_2PI_E - (2.0 * std::f64::consts::PI * std::f64::consts::E).ln()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn log_add_exp_basic() {
+        let a = 700.0;
+        let b = 700.0;
+        // naive exp(700) overflows; stable version does not
+        assert!((log_add_exp(a, b) - (700.0 + 2f64.ln())).abs() < 1e-12);
+        assert_eq!(log_add_exp(f64::NEG_INFINITY, 3.0), 3.0);
+        assert_eq!(log_add_exp(3.0, f64::NEG_INFINITY), 3.0);
+    }
+
+    #[test]
+    fn log_sub_exp_basic() {
+        // ln(e^2 - e^1)
+        let want = (2f64.exp() - 1f64.exp()).ln();
+        assert!((log_sub_exp(2.0, 1.0) - want).abs() < 1e-12);
+        assert_eq!(log_sub_exp(5.0, f64::NEG_INFINITY), 5.0);
+    }
+
+    #[test]
+    fn log_sum_exp_basic() {
+        let xs = [0.0, 0.0, 0.0, 0.0];
+        assert!((log_sum_exp(&xs) - 4f64.ln()).abs() < 1e-12);
+        assert_eq!(log_sum_exp(&[]), f64::NEG_INFINITY);
+        // mixed magnitudes
+        let xs = [-1000.0, 0.0];
+        assert!((log_sum_exp(&xs) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_diff_basic() {
+        assert_eq!(rel_diff(1.0, 1.0), 0.0);
+        assert!((rel_diff(2.0, 1.0) - 0.5).abs() < 1e-15);
+        // small numbers measured against 1
+        assert!((rel_diff(1e-20, 0.0) - 1e-20).abs() < 1e-30);
+    }
+}

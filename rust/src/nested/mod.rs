@@ -1,0 +1,487 @@
+//! Nested-sampling baseline — the stand-in for the paper's MULTINEST
+//! comparator (Feroz & Hobson 2008/2009; Skilling 2006).
+//!
+//! Implements the standard nested-sampling evidence estimator with
+//! bounding-ellipsoid likelihood-constrained proposals:
+//!
+//! * `nlive` live points in the unit hypercube (the prior transform is the
+//!   caller's — see [`crate::priors::BoxPrior::from_unit_cube`]);
+//! * at step k the worst point (ln L*) is replaced by a draw with
+//!   `ln L > ln L*` sampled inside the enlarged bounding ellipsoid of the
+//!   live set (MULTINEST's core idea, single-ellipsoid variant);
+//! * prior-volume shrinkage `ln X_k = −k/nlive`, trapezoidal weights,
+//!   `Z = Σ L_i w_i` accumulated in log space;
+//! * termination when the maximum possible remaining contribution
+//!   `L_max · X_k` falls below `tol · Z`;
+//! * the information integral gives the classic evidence error estimate
+//!   `σ(ln Z) ≈ √(H/nlive)`.
+//!
+//! The evaluation counter is the paper's headline cost metric: Table 1's
+//! `ln Z_num` took "between 20,000 and 50,000 likelihood evaluations".
+
+use crate::linalg::{sym_eigen, Chol, Matrix};
+use crate::math::{log_add_exp, log_sub_exp};
+use crate::rng::Xoshiro256;
+
+/// Options for a nested-sampling run.
+#[derive(Clone, Copy, Debug)]
+pub struct NestedOptions {
+    /// Number of live points (MULTINEST default era: 400–1000).
+    pub nlive: usize,
+    /// Termination tolerance on the remaining-evidence fraction.
+    pub tol: f64,
+    /// Ellipsoid enlargement factor (>1).
+    pub enlarge: f64,
+    /// Hard cap on iterations (safety).
+    pub max_iters: usize,
+}
+
+impl Default for NestedOptions {
+    fn default() -> Self {
+        Self { nlive: 400, tol: 1e-3, enlarge: 1.15, max_iters: 200_000 }
+    }
+}
+
+/// One weighted posterior sample from the run.
+#[derive(Clone, Debug)]
+pub struct WeightedSample {
+    /// Unit-cube coordinates.
+    pub u: Vec<f64>,
+    /// ln likelihood.
+    pub ln_l: f64,
+    /// ln posterior weight (normalised: logsumexp over samples = 0).
+    pub ln_w: f64,
+}
+
+/// Result of a nested-sampling run.
+#[derive(Debug)]
+pub struct NestedResult {
+    /// ln Z estimate.
+    pub ln_z: f64,
+    /// Error estimate σ(ln Z) = √(H/nlive).
+    pub ln_z_err: f64,
+    /// Information (KL divergence prior→posterior), nats.
+    pub information: f64,
+    /// Total likelihood evaluations — the paper's cost metric.
+    pub n_evals: usize,
+    /// Iterations (dead points).
+    pub n_iters: usize,
+    /// Weighted posterior samples (dead + final live points).
+    pub samples: Vec<WeightedSample>,
+}
+
+/// Run nested sampling over the unit hypercube.
+///
+/// `ln_like(u)` must return `f64::NEG_INFINITY` (or any non-finite value)
+/// for invalid points; those count as zero-likelihood prior volume.
+pub fn nested_sample<F>(
+    dim: usize,
+    mut ln_like: F,
+    opts: &NestedOptions,
+    rng: &mut Xoshiro256,
+) -> crate::Result<NestedResult>
+where
+    F: FnMut(&[f64]) -> f64,
+{
+    anyhow::ensure!(opts.nlive >= dim + 2, "need nlive ≥ dim+2");
+    let nlive = opts.nlive;
+    let mut n_evals = 0usize;
+    // initialise live set
+    let mut live_u: Vec<Vec<f64>> = Vec::with_capacity(nlive);
+    let mut live_l: Vec<f64> = Vec::with_capacity(nlive);
+    for _ in 0..nlive {
+        loop {
+            let u: Vec<f64> = (0..dim).map(|_| rng.uniform()).collect();
+            let l = ln_like(&u);
+            n_evals += 1;
+            if l.is_finite() {
+                live_u.push(u);
+                live_l.push(l);
+                break;
+            }
+        }
+    }
+
+    let ln_shrink = -1.0 / nlive as f64; // E[ln t] per iteration
+    let mut ln_x_prev = 0.0; // ln X_0 = 0
+    let mut ln_z = f64::NEG_INFINITY;
+    let mut info_acc = 0.0; // ∫ L/Z ln(L/Z) dX accumulated incrementally
+    let mut samples: Vec<WeightedSample> = Vec::new();
+    let mut n_iters = 0usize;
+
+    while n_iters < opts.max_iters {
+        n_iters += 1;
+        // worst live point
+        let (worst, &ln_l_star) = live_l
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let ln_x = ln_x_prev + ln_shrink;
+        // trapezoid weight: w = X_{k-1} − X_k
+        let ln_w = log_sub_exp(ln_x_prev, ln_x);
+        let ln_zw = ln_l_star + ln_w;
+        let ln_z_new = log_add_exp(ln_z, ln_zw);
+        // incremental information update (Skilling's recurrence)
+        if ln_zw.is_finite() {
+            let z_ratio = (ln_z - ln_z_new).exp();
+            let w_ratio = (ln_zw - ln_z_new).exp();
+            info_acc = z_ratio * (info_acc + (ln_z - ln_z_new))
+                + w_ratio * (ln_l_star - ln_z_new);
+            // note: rearranged H-update; see tests for calibration
+            info_acc = if info_acc.is_finite() { info_acc } else { 0.0 };
+        }
+        ln_z = ln_z_new;
+        samples.push(WeightedSample { u: live_u[worst].clone(), ln_l: ln_l_star, ln_w: ln_zw });
+        ln_x_prev = ln_x;
+
+        // termination: remaining mass bound
+        let ln_l_max = live_l.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if ln_l_max + ln_x < ln_z + (opts.tol).ln() {
+            break;
+        }
+
+        // replace the worst point with an ellipsoid draw above ln L*
+        let (u_new, l_new, evals) =
+            draw_above(&live_u, worst, ln_l_star, &mut ln_like, opts, rng, dim)?;
+        n_evals += evals;
+        live_u[worst] = u_new;
+        live_l[worst] = l_new;
+    }
+
+    // final live-point contribution: each carries X_final/nlive
+    let ln_w_live = ln_x_prev - (nlive as f64).ln();
+    for (u, &l) in live_u.iter().zip(&live_l) {
+        let ln_zw = l + ln_w_live;
+        let ln_z_new = log_add_exp(ln_z, ln_zw);
+        let z_ratio = (ln_z - ln_z_new).exp();
+        let w_ratio = (ln_zw - ln_z_new).exp();
+        info_acc = z_ratio * (info_acc + (ln_z - ln_z_new)) + w_ratio * (l - ln_z_new);
+        ln_z = ln_z_new;
+        samples.push(WeightedSample { u: u.clone(), ln_l: l, ln_w: ln_zw });
+    }
+
+    // normalise weights to logsumexp = 0
+    for s in &mut samples {
+        s.ln_w -= ln_z;
+    }
+    // information H = Σ w (lnL − lnZ) over normalised weights
+    let information: f64 = samples
+        .iter()
+        .map(|s| {
+            let w = s.ln_w.exp();
+            if w > 0.0 {
+                w * (s.ln_l - ln_z)
+            } else {
+                0.0
+            }
+        })
+        .sum();
+    let ln_z_err = (information.max(0.0) / nlive as f64).sqrt();
+    Ok(NestedResult { ln_z, ln_z_err, information, n_evals, n_iters, samples })
+}
+
+/// Draw a unit-cube point with `ln L > ln L*` from the enlarged bounding
+/// ellipsoid of the live set (excluding `skip`, the point being replaced —
+/// standard practice so the ellipsoid is not inflated by the worst point).
+#[allow(clippy::too_many_arguments)]
+fn draw_above<F>(
+    live: &[Vec<f64>],
+    skip: usize,
+    ln_l_star: f64,
+    ln_like: &mut F,
+    opts: &NestedOptions,
+    rng: &mut Xoshiro256,
+    dim: usize,
+) -> crate::Result<(Vec<f64>, f64, usize)>
+where
+    F: FnMut(&[f64]) -> f64,
+{
+    // mean and covariance of the live set
+    let n = live.len();
+    let mut mean = vec![0.0; dim];
+    for (i, u) in live.iter().enumerate() {
+        if i == skip {
+            continue;
+        }
+        for d in 0..dim {
+            mean[d] += u[d];
+        }
+    }
+    for v in &mut mean {
+        *v /= (n - 1) as f64;
+    }
+    let mut cov = Matrix::zeros(dim, dim);
+    for (i, u) in live.iter().enumerate() {
+        if i == skip {
+            continue;
+        }
+        for a in 0..dim {
+            for b in 0..dim {
+                cov[(a, b)] += (u[a] - mean[a]) * (u[b] - mean[b]);
+            }
+        }
+    }
+    for v in cov.as_mut_slice() {
+        *v /= (n - 2).max(1) as f64;
+    }
+    // jitter for degenerate directions
+    for d in 0..dim {
+        cov[(d, d)] += 1e-12;
+    }
+    // max Mahalanobis distance of live points = ellipsoid scale
+    let chol = Chol::factor(&cov).map_err(|e| anyhow::anyhow!("live-set covariance: {e}"))?;
+    let mut scale2 = 0.0f64;
+    let mut diff = vec![0.0; dim];
+    for (i, u) in live.iter().enumerate() {
+        if i == skip {
+            continue;
+        }
+        for d in 0..dim {
+            diff[d] = u[d] - mean[d];
+        }
+        scale2 = scale2.max(chol.inv_quad(&diff));
+    }
+    let scale = scale2.sqrt() * opts.enlarge;
+    // principal axes for sampling
+    let (evals, evecs) = sym_eigen(&cov);
+    let mut attempts = 0usize;
+    let mut enlarge_extra = 1.0;
+    let mut evals_used = 0usize;
+    loop {
+        attempts += 1;
+        if attempts % 500 == 0 {
+            enlarge_extra *= 1.5; // widen if the constrained region is awkward
+        }
+        if attempts >= 20_000 {
+            // Ellipsoid proposals are failing (typically: a degenerate live
+            // set hugging a cube face). Fall back to a likelihood-constrained
+            // random walk from a random live point — always succeeds because
+            // live points themselves satisfy the constraint.
+            return mcmc_above(live, skip, ln_l_star, ln_like, rng, dim)
+                .map(|(u, l, e)| (u, l, evals_used + e));
+        }
+        // uniform in unit ball: normal direction, radius^(1/dim)
+        let mut z = vec![0.0; dim];
+        rng.fill_normal(&mut z);
+        let norm = crate::linalg::norm2(&z).max(1e-300);
+        let r = rng.uniform().powf(1.0 / dim as f64);
+        let factor = r / norm * scale * enlarge_extra;
+        // x = mean + V diag(√λ) z·factor
+        let mut x = mean.clone();
+        let mut ok = true;
+        for a in 0..dim {
+            let mut acc = 0.0;
+            for b in 0..dim {
+                acc += evecs[(a, b)] * evals[b].max(0.0).sqrt() * z[b];
+            }
+            x[a] += acc * factor;
+            if !(0.0..=1.0).contains(&x[a]) {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue; // outside the unit cube: reject without an eval
+        }
+        let l = ln_like(&x);
+        evals_used += 1;
+        if l.is_finite() && l > ln_l_star {
+            return Ok((x, l, evals_used));
+        }
+    }
+}
+
+/// Likelihood-constrained random-walk fallback: start from a random live
+/// point (which satisfies `ln L > ln L*` by construction) and take
+/// Gaussian steps, accepting any in-cube point above the threshold.
+/// Step size adapts down on rejection; a fixed walk length decorrelates
+/// the sample from its seed point.
+fn mcmc_above<F>(
+    live: &[Vec<f64>],
+    skip: usize,
+    ln_l_star: f64,
+    ln_like: &mut F,
+    rng: &mut Xoshiro256,
+    _dim: usize,
+) -> crate::Result<(Vec<f64>, f64, usize)>
+where
+    F: FnMut(&[f64]) -> f64,
+{
+    // seed from a random live point other than the one being replaced
+    let seed_idx = loop {
+        let i = rng.below(live.len());
+        if i != skip || live.len() == 1 {
+            break i;
+        }
+    };
+    let mut x = live[seed_idx].clone();
+    let mut l_cur = ln_like(&x);
+    let mut evals = 1usize;
+    if !(l_cur.is_finite() && l_cur > ln_l_star) {
+        // numerical edge: re-evaluate gave a boundary value; nudge later
+        l_cur = f64::NEG_INFINITY;
+    }
+    let mut step = 0.05;
+    let mut accepted = 0usize;
+    const WALK: usize = 40;
+    for _ in 0..20_000 {
+        if accepted >= WALK {
+            break;
+        }
+        let mut prop = x.clone();
+        for v in prop.iter_mut() {
+            *v += step * rng.normal();
+        }
+        if prop.iter().any(|v| !(0.0..=1.0).contains(v)) {
+            step *= 0.95;
+            continue;
+        }
+        let l = ln_like(&prop);
+        evals += 1;
+        if l.is_finite() && l > ln_l_star {
+            x = prop;
+            l_cur = l;
+            accepted += 1;
+            step *= 1.05;
+        } else {
+            step *= 0.95;
+        }
+        step = step.clamp(1e-7, 0.5);
+    }
+    anyhow::ensure!(
+        l_cur.is_finite() && l_cur > ln_l_star && accepted > 0,
+        "likelihood-constrained walk failed to move above the threshold"
+    );
+    Ok((x, l_cur, evals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Gaussian likelihood over a flat unit-cube prior — analytic Z.
+    /// L(u) = N(u; 0.5, σ² I) ⇒ Z ≈ 1 (σ ≪ 1 keeps all mass inside).
+    fn gaussian_lnlike(sigma: f64) -> impl FnMut(&[f64]) -> f64 {
+        move |u: &[f64]| {
+            let mut q = 0.0;
+            for &ui in u {
+                let d = (ui - 0.5) / sigma;
+                q += d * d;
+            }
+            -0.5 * q - u.len() as f64 * (sigma.ln() + 0.5 * crate::math::LN_2PI)
+        }
+    }
+
+    #[test]
+    fn recovers_gaussian_evidence_2d() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let res = nested_sample(
+            2,
+            gaussian_lnlike(0.05),
+            &NestedOptions { nlive: 300, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        // true ln Z = 0 (normalised Gaussian wholly inside the cube)
+        assert!(
+            res.ln_z.abs() < 3.0 * res.ln_z_err.max(0.02),
+            "lnZ = {} ± {}",
+            res.ln_z,
+            res.ln_z_err
+        );
+        assert!(res.ln_z_err < 0.2);
+        assert!(res.n_evals > res.n_iters);
+    }
+
+    #[test]
+    fn recovers_scaled_evidence() {
+        // L = const · N ⇒ ln Z = ln const
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut base = gaussian_lnlike(0.07);
+        let res = nested_sample(
+            2,
+            move |u: &[f64]| base(u) + 7.5,
+            &NestedOptions { nlive: 300, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        assert!(
+            (res.ln_z - 7.5).abs() < 3.0 * res.ln_z_err.max(0.02),
+            "lnZ = {} ± {}",
+            res.ln_z,
+            res.ln_z_err
+        );
+    }
+
+    #[test]
+    fn information_positive_and_sensible() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let res = nested_sample(
+            2,
+            gaussian_lnlike(0.05),
+            &NestedOptions { nlive: 250, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        // H ≈ ln(prior vol / posterior vol) ≈ 2·ln(1/(σ√(2πe))) ≈ 3.6
+        assert!(res.information > 1.0 && res.information < 8.0, "H = {}", res.information);
+    }
+
+    #[test]
+    fn weights_normalised() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let res = nested_sample(
+            1,
+            gaussian_lnlike(0.1),
+            &NestedOptions { nlive: 150, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        let total: f64 = res.samples.iter().map(|s| s.ln_w.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σw = {total}");
+    }
+
+    #[test]
+    fn posterior_mean_matches_truth() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let res = nested_sample(
+            2,
+            gaussian_lnlike(0.08),
+            &NestedOptions { nlive: 300, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        for d in 0..2 {
+            let mean: f64 = res.samples.iter().map(|s| s.ln_w.exp() * s.u[d]).sum();
+            assert!((mean - 0.5).abs() < 0.01, "dim {d} mean {mean}");
+            let var: f64 = res
+                .samples
+                .iter()
+                .map(|s| s.ln_w.exp() * (s.u[d] - mean) * (s.u[d] - mean))
+                .sum();
+            assert!((var.sqrt() - 0.08).abs() < 0.02, "dim {d} sd {}", var.sqrt());
+        }
+    }
+
+    #[test]
+    fn handles_invalid_regions() {
+        // likelihood undefined (−∞) on half the cube — sampler must avoid it
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let mut g = gaussian_lnlike(0.05);
+        let res = nested_sample(
+            2,
+            move |u: &[f64]| if u[0] > 0.9 { f64::NEG_INFINITY } else { g(u) },
+            &NestedOptions { nlive: 200, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        // truncation removes ~0 mass; allow ~3.5σ of sampler noise
+        assert!(
+            res.ln_z.abs() < 3.5 * res.ln_z_err.max(0.05),
+            "lnZ = {} ± {}",
+            res.ln_z,
+            res.ln_z_err
+        );
+    }
+}

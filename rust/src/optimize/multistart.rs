@@ -1,0 +1,158 @@
+//! Multistart driver — §3(a): "In order to guard against the possibility
+//! of the maximisation routines becoming trapped in local maxima … the
+//! algorithm was run multiple times from randomly selected starting
+//! positions. The typical number of runs required to find the global
+//! maximum was ∼ 10."
+
+use crate::priors::BoxPrior;
+use crate::rng::Xoshiro256;
+
+use super::{maximise_cg, CgOptions, Objective};
+
+/// Options for the multistart driver.
+#[derive(Clone, Copy, Debug)]
+pub struct MultistartOptions {
+    /// Number of random restarts (paper: ~10).
+    pub restarts: usize,
+    /// Two peaks closer than this (∞-norm) are considered the same mode.
+    pub dedupe_tol: f64,
+    pub cg: CgOptions,
+}
+
+impl Default for MultistartOptions {
+    fn default() -> Self {
+        Self { restarts: 10, dedupe_tol: 1e-3, cg: CgOptions::default() }
+    }
+}
+
+/// One restart's result.
+#[derive(Clone, Debug)]
+pub struct StartOutcome {
+    pub start: Vec<f64>,
+    pub theta: Vec<f64>,
+    pub value: f64,
+    pub converged: bool,
+    pub iterations: usize,
+}
+
+/// Aggregate outcome.
+#[derive(Clone, Debug)]
+pub struct MultistartOutcome {
+    /// The best (global, we hope) peak.
+    pub best: StartOutcome,
+    /// Every restart, best first.
+    pub all: Vec<StartOutcome>,
+    /// Number of *distinct* modes found (after dedupe) — the paper's
+    /// multimodality diagnostic for the flagged (k₂, n=30) failure case.
+    pub n_modes: usize,
+}
+
+/// Run `opts.restarts` CG maximisations from prior-sampled starts.
+pub fn multistart(
+    obj: &mut dyn Objective,
+    prior: &BoxPrior,
+    opts: &MultistartOptions,
+    rng: &mut Xoshiro256,
+) -> crate::Result<MultistartOutcome> {
+    anyhow::ensure!(opts.restarts > 0, "need at least one restart");
+    let mut all = Vec::with_capacity(opts.restarts);
+    for _ in 0..opts.restarts {
+        let start = prior.sample(rng);
+        match maximise_cg(obj, prior, &start, &opts.cg) {
+            Ok(out) => all.push(StartOutcome {
+                start,
+                theta: out.theta,
+                value: out.value,
+                converged: out.converged,
+                iterations: out.iterations,
+            }),
+            Err(_) => {
+                // a start that lands on a non-PD covariance region is just
+                // discarded — the paper's code would equally reject it
+                continue;
+            }
+        }
+    }
+    anyhow::ensure!(!all.is_empty(), "every restart failed (covariance never PD)");
+    all.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    // count distinct modes
+    let mut modes: Vec<&[f64]> = Vec::new();
+    for s in &all {
+        let dup = modes.iter().any(|m| {
+            m.iter().zip(&s.theta).fold(0.0f64, |acc, (a, b)| acc.max((a - b).abs()))
+                < opts.dedupe_tol
+        });
+        if !dup {
+            modes.push(&s.theta);
+        }
+    }
+    let n_modes = modes.len();
+    Ok(MultistartOutcome { best: all[0].clone(), all, n_modes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimize::FnObjective;
+
+    /// Double-well: two maxima at x = ±2, global at +2 (value 1 vs 0.5).
+    fn double_well(t: &[f64]) -> f64 {
+        let x = t[0];
+        let peak = |c: f64, h: f64| h * (-(x - c) * (x - c)).exp();
+        peak(2.0, 1.0) + peak(-2.0, 0.5)
+    }
+
+    fn double_well_grad(t: &[f64]) -> Vec<f64> {
+        let x = t[0];
+        let dpeak = |c: f64, h: f64| -2.0 * (x - c) * h * (-(x - c) * (x - c)).exp();
+        vec![dpeak(2.0, 1.0) + dpeak(-2.0, 0.5)]
+    }
+
+    #[test]
+    fn finds_global_mode_among_two() {
+        let mut obj = FnObjective::new(
+            1,
+            |t: &[f64]| Ok(double_well(t)),
+            |t: &[f64]| Ok((double_well(t), double_well_grad(t))),
+        );
+        let prior = BoxPrior { bounds: vec![(-6.0, 6.0)], constraints: vec![] };
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let out = multistart(&mut obj, &prior, &MultistartOptions::default(), &mut rng).unwrap();
+        assert!((out.best.theta[0] - 2.0).abs() < 1e-3, "best {:?}", out.best.theta);
+        assert!(out.n_modes >= 2, "should discover both wells, found {}", out.n_modes);
+        assert!((out.best.value - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn results_sorted_descending() {
+        let mut obj = FnObjective::new(
+            1,
+            |t: &[f64]| Ok(double_well(t)),
+            |t: &[f64]| Ok((double_well(t), double_well_grad(t))),
+        );
+        let prior = BoxPrior { bounds: vec![(-6.0, 6.0)], constraints: vec![] };
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let out = multistart(&mut obj, &prior, &MultistartOptions::default(), &mut rng).unwrap();
+        for w in out.all.windows(2) {
+            assert!(w[0].value >= w[1].value);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed: u64| {
+            let mut obj = FnObjective::new(
+                1,
+                |t: &[f64]| Ok(double_well(t)),
+                |t: &[f64]| Ok((double_well(t), double_well_grad(t))),
+            );
+            let prior = BoxPrior { bounds: vec![(-6.0, 6.0)], constraints: vec![] };
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            multistart(&mut obj, &prior, &MultistartOptions::default(), &mut rng)
+                .unwrap()
+                .best
+                .theta
+        };
+        assert_eq!(run(5), run(5));
+    }
+}

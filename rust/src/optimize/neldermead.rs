@@ -1,0 +1,166 @@
+//! Nelder–Mead simplex maximiser (derivative-free).
+//!
+//! Exists for the "value of the analytic gradient" ablation
+//! (`benches/ablations.rs`): the paper's §2(a) point is that the gradient
+//! comes almost free once ln P is evaluated, making gradient-based search
+//! far cheaper in likelihood evaluations than derivative-free search.
+
+use crate::priors::BoxPrior;
+
+use super::Objective;
+
+/// Options for Nelder–Mead.
+#[derive(Clone, Copy, Debug)]
+pub struct NmOptions {
+    /// Initial simplex scale as a fraction of each coordinate's range.
+    pub init_scale: f64,
+    /// Convergence: spread of simplex values.
+    pub f_tol: f64,
+    pub max_iters: usize,
+}
+
+impl Default for NmOptions {
+    fn default() -> Self {
+        Self { init_scale: 0.05, f_tol: 1e-9, max_iters: 2000 }
+    }
+}
+
+/// Maximise `obj` inside `prior` from `x0`. Returns `(θ̂, f̂)`.
+pub fn maximise_neldermead(
+    obj: &mut dyn Objective,
+    prior: &BoxPrior,
+    x0: &[f64],
+    opts: &NmOptions,
+) -> crate::Result<(Vec<f64>, f64)> {
+    let n = obj.dim();
+    let eval = |x: &mut Vec<f64>, obj: &mut dyn Objective| -> crate::Result<f64> {
+        prior.project(x);
+        obj.value(x)
+    };
+    // initial simplex
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    let mut base = x0.to_vec();
+    let f0 = eval(&mut base, obj)?;
+    simplex.push((base.clone(), f0));
+    for i in 0..n {
+        let mut v = base.clone();
+        let (lo, hi) = prior.bounds[i];
+        v[i] += opts.init_scale * (hi - lo);
+        let f = eval(&mut v, obj)?;
+        simplex.push((v, f));
+    }
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+    for _ in 0..opts.max_iters {
+        // sort descending (maximisation: best first)
+        simplex.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let spread = simplex[0].1 - simplex[n].1;
+        if spread.abs() < opts.f_tol * (1.0 + simplex[0].1.abs()) {
+            break;
+        }
+        // centroid of all but worst
+        let mut centroid = vec![0.0; n];
+        for (v, _) in &simplex[..n] {
+            for i in 0..n {
+                centroid[i] += v[i] / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+        let reflect = |t: f64| -> Vec<f64> {
+            (0..n).map(|i| centroid[i] + t * (centroid[i] - worst.0[i])).collect()
+        };
+        let mut xr = reflect(alpha);
+        let fr = eval(&mut xr, obj)?;
+        if fr > simplex[0].1 {
+            // try expansion
+            let mut xe = reflect(gamma);
+            let fe = eval(&mut xe, obj)?;
+            simplex[n] = if fe > fr { (xe, fe) } else { (xr, fr) };
+        } else if fr > simplex[n - 1].1 {
+            simplex[n] = (xr, fr);
+        } else {
+            // contraction
+            let mut xc = reflect(-rho);
+            let fc = eval(&mut xc, obj)?;
+            if fc > worst.1 {
+                simplex[n] = (xc, fc);
+            } else {
+                // shrink towards best
+                let best = simplex[0].0.clone();
+                for item in simplex.iter_mut().skip(1) {
+                    let mut v: Vec<f64> = item
+                        .0
+                        .iter()
+                        .zip(&best)
+                        .map(|(vi, bi)| bi + sigma * (vi - bi))
+                        .collect();
+                    let f = eval(&mut v, obj)?;
+                    *item = (v, f);
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let best = simplex.remove(0);
+    Ok((best.0, best.1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimize::FnObjective;
+
+    #[test]
+    fn finds_quadratic_max() {
+        let mut obj = FnObjective::new(
+            2,
+            |t: &[f64]| Ok(-(t[0] - 1.0).powi(2) - (t[1] + 2.0).powi(2)),
+            |_: &[f64]| unreachable!("derivative-free"),
+        );
+        let prior = BoxPrior { bounds: vec![(-10.0, 10.0); 2], constraints: vec![] };
+        let (x, f) = maximise_neldermead(&mut obj, &prior, &[5.0, 5.0], &NmOptions::default())
+            .unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-3, "{x:?} f={f}");
+        assert!((x[1] + 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn uses_more_evals_than_cg_on_same_problem() {
+        // the ablation claim in miniature
+        let f = |t: &[f64]| -(t[0] - 2.0).powi(2) - 2.0 * (t[1] + 1.0).powi(2);
+        let prior = BoxPrior { bounds: vec![(-100.0, 100.0); 2], constraints: vec![] };
+        let mut nm_obj =
+            FnObjective::new(2, |t: &[f64]| Ok(f(t)), |_: &[f64]| unreachable!());
+        let _ = maximise_neldermead(&mut nm_obj, &prior, &[50.0, 50.0], &NmOptions::default())
+            .unwrap();
+        let mut cg_obj = FnObjective::new(
+            2,
+            |t: &[f64]| Ok(f(t)),
+            |t: &[f64]| Ok((f(t), vec![-2.0 * (t[0] - 2.0), -4.0 * (t[1] + 1.0)])),
+        );
+        let _ = crate::optimize::maximise_cg(
+            &mut cg_obj,
+            &prior,
+            &[50.0, 50.0],
+            &crate::optimize::CgOptions::default(),
+        )
+        .unwrap();
+        assert!(
+            nm_obj.evals() > cg_obj.evals(),
+            "NM {} vs CG {}",
+            nm_obj.evals(),
+            cg_obj.evals()
+        );
+    }
+
+    #[test]
+    fn stays_in_box() {
+        let mut obj = FnObjective::new(
+            1,
+            |t: &[f64]| Ok(t[0]),
+            |_: &[f64]| unreachable!(),
+        );
+        let prior = BoxPrior { bounds: vec![(0.0, 3.0)], constraints: vec![] };
+        let (x, _) = maximise_neldermead(&mut obj, &prior, &[1.0], &NmOptions::default()).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,232 @@
+//! Hyperprior system: the paper's flat-prior reparametrisations (§3) and
+//! the unit-hypercube mapping used by the nested sampler and the Laplace
+//! volume bookkeeping.
+//!
+//! Every hyperparameter is carried in a **flat coordinate** (φ for
+//! Jeffreys-prior timescales, eq. 3.4; ξ for log-normal smoothness
+//! parameters, eq. 3.5; λ = ln σ_f for the Jeffreys scale prior). The
+//! prior over the flat coordinates is uniform on a box, so:
+//!
+//! * the hyperposterior ∝ hyperlikelihood (the assumption behind
+//!   eq. 2.13),
+//! * the prior volume `V` is the box volume (the Occam factor of §2(a)),
+//! * a unit-cube point `u ∈ [0,1]^m` maps affinely to the box — which is
+//!   exactly the prior transform MULTINEST-style samplers need.
+
+use crate::kernels::{CovarianceModel, DataSpan};
+
+/// The box prior over a model's reduced hyperparameters ϑ, with optional
+/// ordering constraints (the paper's `T₂ ≥ T₁`).
+#[derive(Clone, Debug)]
+pub struct BoxPrior {
+    /// Per-coordinate (lo, hi).
+    pub bounds: Vec<(f64, f64)>,
+    /// Pairs (i, j) requiring `θ[i] ≤ θ[j]`.
+    pub constraints: Vec<(usize, usize)>,
+}
+
+impl BoxPrior {
+    /// Build from a model and the data geometry.
+    pub fn for_model(model: &CovarianceModel, span: &DataSpan) -> Self {
+        Self {
+            bounds: model.kernel.bounds(span),
+            constraints: model.kernel.ordering_constraints(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Is θ inside the box with all constraints satisfied?
+    pub fn contains(&self, theta: &[f64]) -> bool {
+        theta.len() == self.dim()
+            && theta
+                .iter()
+                .zip(&self.bounds)
+                .all(|(v, (lo, hi))| *v >= *lo && *v <= *hi)
+            && self.constraints.iter().all(|&(i, j)| theta[i] <= theta[j])
+    }
+
+    /// Clamp θ into the box (used by the bounded optimiser); ordering
+    /// constraints are restored by collapsing offending pairs to their
+    /// midpoint.
+    pub fn project(&self, theta: &mut [f64]) {
+        for (v, (lo, hi)) in theta.iter_mut().zip(&self.bounds) {
+            *v = v.clamp(*lo, *hi);
+        }
+        for &(i, j) in &self.constraints {
+            if theta[i] > theta[j] {
+                let mid = 0.5 * (theta[i] + theta[j]);
+                theta[i] = mid;
+                theta[j] = mid;
+            }
+        }
+    }
+
+    /// Map a unit-cube point to the box, honouring ordering constraints by
+    /// conditional stretching: a constrained coordinate `j` (θ_i ≤ θ_j) is
+    /// mapped into `[θ_i, hi_j]` — the paper's conditional flat prior on
+    /// `T₂ ∈ (T₁, ΔT)`.
+    pub fn from_unit_cube(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.dim());
+        let mut theta: Vec<f64> = u
+            .iter()
+            .zip(&self.bounds)
+            .map(|(ui, (lo, hi))| lo + ui * (hi - lo))
+            .collect();
+        for &(i, j) in &self.constraints {
+            let (_, hi_j) = self.bounds[j];
+            theta[j] = theta[i] + u[j] * (hi_j - theta[i]).max(0.0);
+        }
+        theta
+    }
+
+    /// Natural log of the prior volume **at a point**: the product of
+    /// coordinate ranges, with each constrained coordinate contributing its
+    /// conditional range `(θ_i, hi_j)` instead of the full one. This is the
+    /// `V` of eq. (2.13) as realised by [`Self::from_unit_cube`].
+    pub fn ln_volume_at(&self, theta: &[f64]) -> f64 {
+        let mut v = 0.0;
+        for (idx, (lo, hi)) in self.bounds.iter().enumerate() {
+            if let Some(&(i, _)) = self.constraints.iter().find(|&&(_, j)| j == idx) {
+                v += (hi - theta[i]).max(f64::MIN_POSITIVE).ln();
+            } else {
+                v += (hi - lo).ln();
+            }
+        }
+        v
+    }
+
+    /// Draw a uniform point from the prior.
+    pub fn sample(&self, rng: &mut crate::rng::Xoshiro256) -> Vec<f64> {
+        let u: Vec<f64> = (0..self.dim()).map(|_| rng.uniform()).collect();
+        self.from_unit_cube(&u)
+    }
+}
+
+/// The σ_f scale prior: truncated Jeffreys `P(σ_f) ∝ 1/σ_f` on
+/// `(σ_lo, σ_hi)`, i.e. flat in `λ = ln σ_f`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePrior {
+    pub sigma_lo: f64,
+    pub sigma_hi: f64,
+}
+
+impl Default for ScalePrior {
+    /// A deliberately generous default range; the paper fixes "suitable
+    /// prior volumes" without stating them — Bayes factors are insensitive
+    /// because the σ_f range cancels between models on the same data.
+    fn default() -> Self {
+        Self { sigma_lo: 1e-3, sigma_hi: 1e3 }
+    }
+}
+
+impl ScalePrior {
+    /// λ-range (flat coordinate).
+    pub fn lambda_bounds(&self) -> (f64, f64) {
+        (self.sigma_lo.ln(), self.sigma_hi.ln())
+    }
+
+    /// ln of the λ volume: `ln ln(σ_hi/σ_lo)`.
+    pub fn ln_volume(&self) -> f64 {
+        (self.sigma_hi / self.sigma_lo).ln().ln()
+    }
+
+    /// Map u ∈ [0,1] to λ.
+    pub fn lambda_from_unit(&self, u: f64) -> f64 {
+        let (lo, hi) = self.lambda_bounds();
+        lo + u * (hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::paper_k2;
+    use crate::rng::Xoshiro256;
+
+    fn k2_prior() -> BoxPrior {
+        let m = paper_k2(0.1);
+        let span = DataSpan { dt_min: 1.0, dt_max: 100.0 };
+        BoxPrior::for_model(&m, &span)
+    }
+
+    #[test]
+    fn cube_mapping_hits_box_and_constraints() {
+        let p = k2_prior();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..500 {
+            let u: Vec<f64> = (0..p.dim()).map(|_| rng.uniform()).collect();
+            let theta = p.from_unit_cube(&u);
+            assert!(p.contains(&theta), "mapped point must satisfy prior: {theta:?}");
+        }
+    }
+
+    #[test]
+    fn cube_corners() {
+        let p = k2_prior();
+        let lo = p.from_unit_cube(&vec![0.0; 5]);
+        // at u=0 every coordinate sits at its lower bound (constrained φ2
+        // degenerates to φ1 = its own lower bound here, which coincides)
+        for (v, (l, _)) in lo.iter().zip(&p.bounds) {
+            assert!((v - l).abs() < 1e-12);
+        }
+        let hi = p.from_unit_cube(&vec![1.0; 5]);
+        for (idx, (v, (_, h))) in hi.iter().zip(&p.bounds).enumerate() {
+            assert!((v - h).abs() < 1e-9, "coord {idx}: {v} vs {h}");
+        }
+    }
+
+    #[test]
+    fn project_restores_feasibility() {
+        let p = k2_prior();
+        // violate box and constraint: φ1 > φ2
+        let mut theta = vec![200.0, 4.0, 0.9, 1.0, -0.9];
+        p.project(&mut theta);
+        assert!(p.contains(&theta), "{theta:?}");
+    }
+
+    #[test]
+    fn volume_at_unconstrained_matches_product() {
+        let m = crate::kernels::paper_k1(0.1);
+        let span = DataSpan { dt_min: 1.0, dt_max: 100.0 };
+        let p = BoxPrior::for_model(&m, &span);
+        let theta = p.from_unit_cube(&[0.5, 0.5, 0.5]);
+        let direct: f64 = p.bounds.iter().map(|(lo, hi)| (hi - lo).ln()).sum();
+        assert!((p.ln_volume_at(&theta) - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn volume_at_constrained_uses_conditional_range() {
+        let p = k2_prior();
+        let theta = p.from_unit_cube(&[0.5, 0.5, 0.5, 0.5, 0.5]);
+        let mut want = 0.0;
+        for (idx, (lo, hi)) in p.bounds.iter().enumerate() {
+            if idx == 3 {
+                want += (hi - theta[1]).ln(); // conditional on φ1
+            } else {
+                want += (hi - lo).ln();
+            }
+        }
+        assert!((p.ln_volume_at(&theta) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_respects_prior() {
+        let p = k2_prior();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..200 {
+            let theta = p.sample(&mut rng);
+            assert!(p.contains(&theta));
+        }
+    }
+
+    #[test]
+    fn scale_prior_volume() {
+        let s = ScalePrior { sigma_lo: 0.1, sigma_hi: 10.0 };
+        assert!((s.ln_volume() - (100f64.ln()).ln()).abs() < 1e-12);
+        assert!((s.lambda_from_unit(0.0) - 0.1f64.ln()).abs() < 1e-12);
+        assert!((s.lambda_from_unit(1.0) - 10f64.ln()).abs() < 1e-12);
+    }
+}

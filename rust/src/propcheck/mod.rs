@@ -1,0 +1,221 @@
+//! Mini property-based testing framework.
+//!
+//! `proptest` is not available in the offline build image, so the crate
+//! ships its own: seeded random case generation with bisection shrinking
+//! on failure. It is used by the linalg, kernel, gp and coordinator test
+//! suites to state *invariants* (e.g. "Cholesky reconstructs", "assembled
+//! covariance is PSD", "every scheduled job runs exactly once") rather
+//! than example-based assertions only.
+//!
+//! ```
+//! use gpfast::propcheck::{property, Gen};
+//! property("reverse twice is identity", 100, |g| {
+//!     let xs = g.vec_f64(0..20, -10.0, 10.0);
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     if twice == xs { Ok(()) } else { Err("mismatch".to_string()) }
+//! });
+//! ```
+
+use crate::rng::Xoshiro256;
+use std::ops::Range;
+
+/// Case-generation handle passed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Trace of the draws made in this case (for reporting).
+    pub trace: Vec<String>,
+    /// Shrink scale in (0, 1]: sizes and magnitudes contract towards
+    /// minimal cases as the framework retries a failing seed.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self { rng: Xoshiro256::seed_from_u64(seed), trace: Vec::new(), scale }
+    }
+
+    /// Uniform f64 in `[lo, hi)`, contracted towards the midpoint under
+    /// shrinking.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let mid = 0.5 * (lo + hi);
+        let half = 0.5 * (hi - lo) * self.scale;
+        let v = self.rng.uniform_in(mid - half, mid + half);
+        self.trace.push(format!("f64[{lo},{hi}) = {v}"));
+        v
+    }
+
+    /// Positive f64 log-uniform in `[lo, hi)` — natural for scale
+    /// hyperparameters.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        let v = (self.rng.uniform_in(lo.ln(), lo.ln() + (hi.ln() - lo.ln()) * self.scale)).exp();
+        self.trace.push(format!("logu[{lo},{hi}) = {v}"));
+        v
+    }
+
+    /// usize in a range, contracted towards `range.start` under shrinking.
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        assert!(range.end > range.start);
+        let span = ((range.end - range.start) as f64 * self.scale).ceil() as usize;
+        let span = span.max(1);
+        let v = range.start + self.rng.below(span);
+        self.trace.push(format!("usize[{:?}) = {v}", range));
+        v
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        let v = self.rng.normal() * self.scale;
+        self.trace.push(format!("normal = {v}"));
+        v
+    }
+
+    /// Vector of uniforms with random length in `len`.
+    pub fn vec_f64(&mut self, len: Range<usize>, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    /// Bool with probability `p` of true.
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.uniform() < p;
+        self.trace.push(format!("bool({p}) = {v}"));
+        v
+    }
+
+    /// Access the raw RNG (for domain-specific draws).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. On failure, retry the failing seed
+/// at geometrically decreasing scales (bisection shrinking) and panic with
+/// the smallest failing case's trace.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    // Deterministic per-property seeding: hash the name so adding a new
+    // property elsewhere doesn't shift this one's cases.
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: same seed, smaller scales
+            let mut smallest = (msg, g.trace);
+            for k in 1..=6 {
+                let scale = 1.0 / (1 << k) as f64;
+                let mut g2 = Gen::new(seed, scale);
+                if let Err(m2) = prop(&mut g2) {
+                    smallest = (m2, g2.trace);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  {}\n  draws:\n    {}",
+                smallest.0,
+                smallest.1.join("\n    ")
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("abs is non-negative", 200, |g| {
+            let x = g.f64(-100.0, 100.0);
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("abs({x}) < 0"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_trace() {
+        property("always fails", 10, |g| {
+            let _ = g.f64(0.0, 1.0);
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_magnitude() {
+        // A property failing only for |x| > 10 should report a shrunk case
+        // (scale contraction pulls values towards the midpoint 0).
+        let result = std::panic::catch_unwind(|| {
+            property("fails for big x", 50, |g| {
+                let x = g.f64(-100.0, 100.0);
+                if x.abs() <= 10.0 {
+                    Ok(())
+                } else {
+                    Err(format!("big {x}"))
+                }
+            });
+        });
+        // It must fail (values >10 occur with prob ~0.9 per case)...
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // ...and the reported case should be from a shrunk scale: values at
+        // scale 1/2 are within ±50, at 1/4 within ±25, etc. We only assert
+        // the shrink machinery ran by checking the trace exists.
+        assert!(msg.contains("draws:"), "panic message carries the trace: {msg}");
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut first: Vec<f64> = Vec::new();
+        property("det check", 5, |g| {
+            first.push(g.f64(0.0, 1.0));
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        property("det check", 5, |g| {
+            second.push(g.f64(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        property("ranges", 300, |g| {
+            let u = g.usize(3..17);
+            if !(3..17).contains(&u) {
+                return Err(format!("usize out of range: {u}"));
+            }
+            let x = g.log_uniform(1e-3, 1e3);
+            if !(1e-3..1e3).contains(&x) {
+                return Err(format!("logu out of range: {x}"));
+            }
+            let v = g.vec_f64(0..5, -1.0, 1.0);
+            if v.len() >= 5 || v.iter().any(|x| !(-1.0..1.0).contains(x)) {
+                return Err("vec constraint violated".to_string());
+            }
+            Ok(())
+        });
+    }
+}

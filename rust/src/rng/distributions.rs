@@ -1,0 +1,160 @@
+//! Distribution helpers layered on [`Xoshiro256`].
+
+use super::Xoshiro256;
+use crate::linalg::{Chol, Matrix};
+
+/// A scalar normal distribution `N(mean, sd²)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub sd: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, sd: f64) -> Self {
+        assert!(sd >= 0.0, "standard deviation must be non-negative");
+        Self { mean, sd }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        self.mean + self.sd * rng.normal()
+    }
+
+    /// Log-density at `x`.
+    pub fn log_pdf(&self, x: f64) -> f64 {
+        let z = (x - self.mean) / self.sd;
+        -0.5 * z * z - self.sd.ln() - 0.5 * crate::math::LN_2PI
+    }
+}
+
+/// A multivariate normal `N(mean, Σ)` sampled through the Cholesky factor
+/// of Σ — this is how GP realisations (paper Fig. 1) are drawn.
+pub struct MultivariateNormal {
+    mean: Vec<f64>,
+    chol: Chol,
+}
+
+impl MultivariateNormal {
+    /// Construct from a mean vector and covariance matrix.
+    ///
+    /// Fails if `cov` is not (numerically) positive definite.
+    pub fn new(mean: Vec<f64>, cov: &Matrix) -> crate::Result<Self> {
+        anyhow::ensure!(
+            cov.rows() == mean.len() && cov.cols() == mean.len(),
+            "covariance shape {}x{} does not match mean length {}",
+            cov.rows(),
+            cov.cols(),
+            mean.len()
+        );
+        let chol = Chol::factor(cov)?;
+        Ok(Self { mean, chol })
+    }
+
+    /// Dimension of the distribution.
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Draw one sample: `mean + L z`, `z ~ N(0, I)`.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> Vec<f64> {
+        let n = self.dim();
+        let mut z = vec![0.0; n];
+        rng.fill_normal(&mut z);
+        let mut out = self.mean.clone();
+        // out += L z (L lower triangular)
+        let l = self.chol.factor_matrix();
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..=i {
+                acc += l[(i, j)] * z[j];
+            }
+            out[i] += acc;
+        }
+        out
+    }
+
+    /// Log-density at `x`.
+    pub fn log_pdf(&self, x: &[f64]) -> f64 {
+        let n = self.dim();
+        let dx: Vec<f64> = x.iter().zip(&self.mean).map(|(a, b)| a - b).collect();
+        let alpha = self.chol.solve(&dx);
+        let quad: f64 = dx.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        -0.5 * (quad + self.chol.logdet() + n as f64 * crate::math::LN_2PI)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_sample_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(100);
+        let d = Normal::new(3.0, 2.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.03, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn normal_log_pdf_matches_closed_form() {
+        let d = Normal::new(0.0, 1.0);
+        // standard normal at 0: -0.5 ln 2π
+        assert!((d.log_pdf(0.0) + 0.5 * crate::math::LN_2PI).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mvn_sample_covariance_recovers_sigma() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        // Σ = [[2, 0.6], [0.6, 1]]
+        let cov = Matrix::from_rows(&[&[2.0, 0.6], &[0.6, 1.0]]);
+        let mvn = MultivariateNormal::new(vec![1.0, -2.0], &cov).unwrap();
+        let n = 100_000;
+        let mut m = [0.0; 2];
+        let mut c = [[0.0; 2]; 2];
+        let samples: Vec<Vec<f64>> = (0..n).map(|_| mvn.sample(&mut rng)).collect();
+        for s in &samples {
+            m[0] += s[0];
+            m[1] += s[1];
+        }
+        m[0] /= n as f64;
+        m[1] /= n as f64;
+        for s in &samples {
+            let d0 = s[0] - m[0];
+            let d1 = s[1] - m[1];
+            c[0][0] += d0 * d0;
+            c[0][1] += d0 * d1;
+            c[1][1] += d1 * d1;
+        }
+        for row in &mut c {
+            for v in row.iter_mut() {
+                *v /= n as f64;
+            }
+        }
+        assert!((m[0] - 1.0).abs() < 0.02);
+        assert!((m[1] + 2.0).abs() < 0.02);
+        assert!((c[0][0] - 2.0).abs() < 0.05, "c00 {}", c[0][0]);
+        assert!((c[0][1] - 0.6).abs() < 0.03, "c01 {}", c[0][1]);
+        assert!((c[1][1] - 1.0).abs() < 0.03, "c11 {}", c[1][1]);
+    }
+
+    #[test]
+    fn mvn_log_pdf_vs_independent_product() {
+        // diagonal Σ → log pdf must equal sum of 1-D log pdfs
+        let cov = Matrix::diag(&[4.0, 9.0]);
+        let mvn = MultivariateNormal::new(vec![0.5, -0.5], &cov).unwrap();
+        let x = [1.0, 2.0];
+        let want = Normal::new(0.5, 2.0).log_pdf(1.0) + Normal::new(-0.5, 3.0).log_pdf(2.0);
+        assert!((mvn.log_pdf(&x) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mvn_rejects_non_psd() {
+        let cov = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // indefinite
+        assert!(MultivariateNormal::new(vec![0.0, 0.0], &cov).is_err());
+    }
+}

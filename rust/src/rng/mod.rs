@@ -1,0 +1,232 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The build environment has no `rand` crate, so the crate carries its own
+//! generator: **xoshiro256++** (Blackman & Vigna) seeded through
+//! **splitmix64**, plus the distributions the paper's experiments need —
+//! uniforms, Box–Muller normals, and multivariate normals through a
+//! Cholesky factor (used to draw GP realisations, Fig. 1).
+
+mod distributions;
+
+pub use distributions::{MultivariateNormal, Normal};
+
+/// xoshiro256++ — fast, high-quality 64-bit PRNG with 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// splitmix64 step — used to expand a single u64 seed into PRNG state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256 {
+    /// Seed deterministically from a single `u64` via splitmix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        // all-zero state is the one forbidden state; splitmix64 of any seed
+        // cannot produce it across 4 consecutive outputs, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            Self { s: [1, 2, 3, 4] }
+        } else {
+            Self { s }
+        }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our use).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply trick: unbiased enough for simulation workloads
+        // (bias < 2^-64), and branch-free.
+        let x = self.next_u64() as u128;
+        ((x * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal deviate (Box–Muller, cached second value).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        // Box–Muller without caching: simple, branch-predictable, and the
+        // hot paths batch through `Normal`/`MultivariateNormal` anyway.
+        loop {
+            let u1 = self.uniform();
+            if u1 > 0.0 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = loop {
+                let u = self.uniform();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (two_pi * u2).sin_cos();
+            out[i] = r * c;
+            out[i + 1] = r * s;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.normal();
+        }
+    }
+
+    /// Split off an independent stream (jump-free: reseed through splitmix
+    /// of the current state — adequate for embarrassingly parallel workers).
+    pub fn split(&mut self) -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(self.next_u64())
+    }
+
+    /// Random permutation index shuffle (Fisher–Yates) of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            idx.swap(i, j);
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_construction() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::seed_from_u64(1);
+        let mut b = Xoshiro256::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = r.uniform();
+            m1 += u;
+            m2 += u * u;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!((m1 - 0.5).abs() < 3e-3, "mean {m1}");
+        assert!((m2 - 1.0 / 3.0).abs() < 3e-3, "E[x²] {m2}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 200_000usize;
+        let mut xs = vec![0.0; n];
+        r.fill_normal(&mut xs);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let skew = xs.iter().map(|x| (x - mean).powi(3)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!(skew.abs() < 0.03, "skew {skew}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Xoshiro256::seed_from_u64(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent_enough() {
+        let mut root = Xoshiro256::seed_from_u64(1234);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (writer) and the rust runtime (reader).
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "dtype": "f64",
+//!   "artifacts": [
+//!     {"model": "k1", "n": 100, "m": 3, "kind": "cov_grads",
+//!      "path": "cov_grads_k1_n100.hlo.txt", "sigma_n": 0.1},
+//!     {"model": "k1", "n": 100, "m": 3, "kind": "full_lnp",
+//!      "path": "full_lnp_k1_n100.hlo.txt", "sigma_n": 0.1}
+//!   ]
+//! }
+//! ```
+//!
+//! `cov_grads` artifacts map `(t[n], θ[m]) → (K[n,n], dK[m,n,n])`;
+//! `full_lnp` artifacts map `(t[n], y[n], θ[m]) → (lnP_max, σ̂_f²)` with the
+//! whole profiled likelihood (scan-Cholesky included) lowered to HLO.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub model: String,
+    pub n: usize,
+    pub m: usize,
+    pub kind: String,
+    pub path: PathBuf,
+    pub sigma_n: f64,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from (paths resolve against it).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> crate::Result<Self> {
+        let v = Json::parse(text)?;
+        let version = v.get("version").and_then(Json::as_usize).unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let dtype = v.get("dtype").and_then(Json::as_str).unwrap_or("?");
+        anyhow::ensure!(dtype == "f64", "runtime requires f64 artifacts, got {dtype}");
+        let arr = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let field = |k: &str| {
+                e.get(k).ok_or_else(|| anyhow::anyhow!("artifact {i} missing field '{k}'"))
+            };
+            entries.push(ArtifactEntry {
+                model: field("model")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact {i}: model must be a string"))?
+                    .to_string(),
+                n: field("n")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad n"))?,
+                m: field("m")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad m"))?,
+                kind: field("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("bad kind"))?
+                    .to_string(),
+                path: PathBuf::from(
+                    field("path")?.as_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+                ),
+                sigma_n: field("sigma_n")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("bad sigma_n"))?,
+            });
+        }
+        Ok(Self { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Find an artifact for (model, n, kind).
+    pub fn find(&self, model: &str, n: usize, kind: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.model == model && e.n == n && e.kind == kind)
+    }
+
+    /// Absolute path of an entry.
+    pub fn resolve(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "dtype": "f64",
+        "artifacts": [
+            {"model": "k1", "n": 100, "m": 3, "kind": "cov_grads",
+             "path": "cov_grads_k1_n100.hlo.txt", "sigma_n": 0.1},
+            {"model": "k2", "n": 300, "m": 5, "kind": "full_lnp",
+             "path": "full_lnp_k2_n300.hlo.txt", "sigma_n": 0.1}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("k1", 100, "cov_grads").unwrap();
+        assert_eq!(e.m, 3);
+        assert_eq!(m.resolve(e), PathBuf::from("/tmp/a/cov_grads_k1_n100.hlo.txt"));
+        assert!(m.find("k1", 101, "cov_grads").is_none());
+        assert!(m.find("k3", 100, "cov_grads").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version_or_dtype() {
+        assert!(Manifest::parse(r#"{"version": 2, "dtype": "f64", "artifacts": []}"#,
+            Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"version": 1, "dtype": "f32", "artifacts": []}"#,
+            Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "dtype": "f64",
+                      "artifacts": [{"model": "k1", "n": 10}]}"#;
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+}

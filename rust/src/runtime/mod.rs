@@ -1,0 +1,99 @@
+//! Execution backends: where the `O(n² m)` covariance assembly runs.
+//!
+//! * [`NativeBackend`] — pure-rust per-pair evaluation
+//!   ([`crate::gp::assemble`]); always available, the correctness
+//!   reference.
+//! * [`XlaBackend`] — loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO **text**; see DESIGN.md for why text,
+//!   not serialised protos) through the PJRT C API and executes them on
+//!   the CPU plugin. The artifacts contain the L1 Pallas covariance
+//!   kernel lowered inside the L2 jax graph. Python is never on this
+//!   path — the rust binary is self-contained once `artifacts/` exists.
+//!
+//! Both produce identical matrices (cross-checked in
+//! `rust/tests/backend_agreement.rs`), so every experiment can run with
+//! `--backend native` or `--backend xla`.
+
+mod manifest;
+mod native;
+mod xla_backend;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use crate::kernels::CovarianceModel;
+use crate::linalg::Matrix;
+
+/// A source of assembled covariance matrices.
+///
+/// Deliberately **not** `Send`: the PJRT client wraps raw C pointers.
+/// Worker threads construct their own (native) backends; the XLA backend
+/// lives on the coordinator thread.
+pub trait Backend {
+    /// Short display name ("native", "xla").
+    fn name(&self) -> &str;
+
+    /// Assemble `K̃(ϑ)` for the model at inputs `t`.
+    fn cov(&mut self, model: &CovarianceModel, t: &[f64], theta: &[f64])
+        -> crate::Result<Matrix>;
+
+    /// Assemble `K̃` and all `∂K̃/∂ϑ_a` in one call.
+    fn cov_and_grads(
+        &mut self,
+        model: &CovarianceModel,
+        t: &[f64],
+        theta: &[f64],
+    ) -> crate::Result<(Matrix, Vec<Matrix>)>;
+
+    /// Does this backend have a fast path for (model, n)? Used by the
+    /// coordinator to report which layer actually served a request.
+    fn accelerates(&self, _model: &CovarianceModel, _n: usize) -> bool {
+        false
+    }
+}
+
+/// Select a backend by name. `"xla"` requires `artifacts_dir`; `"auto"`
+/// tries XLA and falls back to native.
+pub fn select_backend(
+    name: &str,
+    artifacts_dir: Option<&std::path::Path>,
+) -> crate::Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "xla" => {
+            let dir = artifacts_dir
+                .ok_or_else(|| anyhow::anyhow!("--backend xla needs an artifacts dir"))?;
+            Ok(Box::new(XlaBackend::load(dir)?))
+        }
+        "auto" => match artifacts_dir {
+            Some(dir) if dir.join("manifest.json").exists() => {
+                Ok(Box::new(XlaBackend::load(dir)?))
+            }
+            _ => Ok(Box::new(NativeBackend::new())),
+        },
+        other => anyhow::bail!("unknown backend '{other}' (native|xla|auto)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_native() {
+        let b = select_backend("native", None).unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn select_unknown_fails() {
+        assert!(select_backend("cuda", None).is_err());
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_native() {
+        let b = select_backend("auto", Some(std::path::Path::new("/nonexistent"))).unwrap();
+        assert_eq!(b.name(), "native");
+    }
+}

@@ -1,0 +1,68 @@
+//! The pure-rust backend: per-pair kernel evaluation via
+//! [`crate::gp::assemble`].
+
+use crate::kernels::CovarianceModel;
+use crate::linalg::Matrix;
+
+use super::Backend;
+
+/// Always-available native backend.
+#[derive(Default)]
+pub struct NativeBackend {
+    /// Number of assemblies served (metrics).
+    pub n_cov: usize,
+    pub n_cov_grads: usize,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn cov(
+        &mut self,
+        model: &CovarianceModel,
+        t: &[f64],
+        theta: &[f64],
+    ) -> crate::Result<Matrix> {
+        self.n_cov += 1;
+        Ok(crate::gp::assemble_cov(model, t, theta))
+    }
+
+    fn cov_and_grads(
+        &mut self,
+        model: &CovarianceModel,
+        t: &[f64],
+        theta: &[f64],
+    ) -> crate::Result<(Matrix, Vec<Matrix>)> {
+        self.n_cov_grads += 1;
+        Ok(crate::gp::assemble_cov_grads(model, t, theta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{paper_k1, PaperK1};
+
+    #[test]
+    fn matches_direct_assembly_and_counts() {
+        let model = paper_k1(0.1);
+        let t: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut b = NativeBackend::new();
+        let k = b.cov(&model, &t, &PaperK1::truth()).unwrap();
+        let want = crate::gp::assemble_cov(&model, &t, &PaperK1::truth());
+        assert_eq!(k.max_abs_diff(&want), 0.0);
+        let (_, grads) = b.cov_and_grads(&model, &t, &PaperK1::truth()).unwrap();
+        assert_eq!(grads.len(), 3);
+        assert_eq!(b.n_cov, 1);
+        assert_eq!(b.n_cov_grads, 1);
+        assert!(!b.accelerates(&model, 10));
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Grammar: `binary [subcommand] [--flag] [--key value | --key=value] [positional…]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token, if any (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` tokens.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let tokens: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} expects a number, got '{s}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} expects an integer, got '{s}': {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> crate::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} expects an integer, got '{s}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --model k2 --n=300 --seed 7 data.csv");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("k2"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 300);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.positional, vec!["data.csv"]);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("compare --fast --backend native --verbose");
+        assert!(a.flag("fast"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("backend"), Some("native"));
+        assert!(!a.flag("backend"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("x --quiet");
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run --n abc");
+        assert!(a.get_usize("n", 5).is_err());
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small utilities: JSON, CLI parsing, report tables, timers.
+
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod timer;
+
+pub use json::Json;
+pub use cli::Args;
+pub use table::Table;
+pub use timer::{Stopwatch, TimingStats};

@@ -1,0 +1,103 @@
+//! Fixed-width text-table renderer — the benches print the paper's tables
+//! in the same row/column layout the paper reports.
+
+/// A simple left/right-aligned text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn add_row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with a header rule; numeric-looking cells right-aligned.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let pad = width[i] - c.chars().count();
+                if looks_numeric(c) {
+                    for _ in 0..pad {
+                        out.push(' ');
+                    }
+                    out.push_str(c);
+                } else {
+                    out.push_str(c);
+                    for _ in 0..pad {
+                        out.push(' ');
+                    }
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &width, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &width, &mut out);
+        }
+        out
+    }
+}
+
+fn looks_numeric(s: &str) -> bool {
+    let t = s.trim_start_matches(['-', '+']);
+    !t.is_empty() && t.chars().next().is_some_and(|c| c.is_ascii_digit())
+}
+
+/// Format `value ± error` the way the paper's Table 1 does.
+pub fn pm(value: f64, err: f64) -> String {
+    format!("{value:.2} ± {err:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["n", "lnZ_est", "model"]);
+        t.add_row(vec!["30".to_string(), "-17.77".to_string(), "k1".to_string()]);
+        t.add_row(vec!["300".to_string(), "-49.94".to_string(), "k2".to_string()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same visual width for the data rows
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(lines[1].starts_with('-'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.add_row(vec!["1"]);
+    }
+
+    #[test]
+    fn pm_format() {
+        assert_eq!(pm(-17.87, 0.08), "-17.87 ± 0.08");
+    }
+}

@@ -1,0 +1,139 @@
+//! Wall-clock timing for the bench harness (no `criterion` offline).
+
+use std::time::{Duration, Instant};
+
+/// A running stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Summary statistics over repeated timing samples.
+#[derive(Debug, Clone)]
+pub struct TimingStats {
+    pub samples: Vec<f64>,
+}
+
+impl TimingStats {
+    /// Time `f` for `iters` iterations after `warmup` discarded runs.
+    pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Self {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.elapsed_secs());
+        }
+        Self { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Human-friendly one-liner: `mean ± std (min)` with unit scaling.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ± {} (min {})",
+            human_time(self.mean()),
+            human_time(self.std()),
+            human_time(self.min())
+        )
+    }
+}
+
+/// Seconds → "1.23 s" / "4.56 ms" / "7.89 µs".
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = TimingStats { samples: vec![1.0, 2.0, 3.0, 4.0] };
+        assert!((s.mean() - 2.5).abs() < 1e-15);
+        assert!((s.median() - 2.5).abs() < 1e-15);
+        assert_eq!(s.min(), 1.0);
+        let sd = s.std();
+        assert!((sd - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut count = 0usize;
+        let s = TimingStats::measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.samples.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(1.5), "1.500 s");
+        assert_eq!(human_time(0.0015), "1.500 ms");
+        assert_eq!(human_time(0.0000015), "1.500 µs");
+        assert!(human_time(5e-10).ends_with("ns"));
+    }
+}

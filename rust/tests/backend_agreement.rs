@@ -1,0 +1,100 @@
+//! Integration test: the XLA artifact backend and the native backend must
+//! produce identical covariance matrices, gradients, and profiled
+//! likelihoods — this is the end-to-end proof that L1 (Pallas kernel),
+//! L2 (jax graph) and L3 (rust coordinator) compute the same math.
+//!
+//! Skips (with a message) when `artifacts/` has not been built yet; the
+//! Makefile `test` target builds artifacts first, so CI always runs it.
+
+use gpfast::gp::profiled::ProfiledEval;
+use gpfast::kernels::{paper_k1, paper_k2, PaperK1, PaperK2};
+use gpfast::runtime::{Backend, NativeBackend, XlaBackend};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn grid(n: usize) -> Vec<f64> {
+    (1..=n).map(|i| i as f64).collect()
+}
+
+#[test]
+fn xla_and_native_covariance_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaBackend::load(&dir).expect("loading artifacts");
+    let mut native = NativeBackend::new();
+    let t = grid(30);
+    for (model, theta) in [
+        (paper_k1(0.1), PaperK1::truth()),
+        (paper_k2(0.1), PaperK2::truth()),
+    ] {
+        if !xla.accelerates(&model, t.len()) {
+            eprintln!("no n=30 artifact for {}, skipping", model.name);
+            continue;
+        }
+        let k_x = xla.cov(&model, &t, &theta).unwrap();
+        let k_n = native.cov(&model, &t, &theta).unwrap();
+        let d = k_x.max_abs_diff(&k_n);
+        assert!(d < 1e-12, "{}: cov diff {d:.3e}", model.name);
+
+        let (k_x2, g_x) = xla.cov_and_grads(&model, &t, &theta).unwrap();
+        let (k_n2, g_n) = native.cov_and_grads(&model, &t, &theta).unwrap();
+        assert!(k_x2.max_abs_diff(&k_n2) < 1e-12);
+        assert_eq!(g_x.len(), g_n.len());
+        for (a, (gx, gn)) in g_x.iter().zip(&g_n).enumerate() {
+            let d = gx.max_abs_diff(gn);
+            assert!(d < 1e-12, "{} grad[{a}] diff {d:.3e}", model.name);
+        }
+        assert!(xla.n_xla > 0);
+    }
+}
+
+#[test]
+fn xla_full_lnp_matches_rust_profiled_eval() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaBackend::load(&dir).expect("loading artifacts");
+    let t = grid(30);
+    // deterministic pseudo-data
+    let y: Vec<f64> = (0..30).map(|i| ((i as f64) * 0.7).sin() * 1.3).collect();
+    for (model, theta) in [
+        (paper_k1(0.1), PaperK1::truth()),
+        (paper_k2(0.1), PaperK2::truth()),
+    ] {
+        let Some((lnp_x, s2_x, logdet_x)) =
+            xla.full_lnp(&model, &t, &y, &theta).expect("full_lnp execution")
+        else {
+            eprintln!("no full_lnp artifact for {}, skipping", model.name);
+            continue;
+        };
+        // rust native: assemble + factor + profile
+        let k = gpfast::gp::assemble_cov(&model, &t, &theta);
+        let ev = ProfiledEval::from_cov(k, &y).unwrap();
+        assert!(
+            (lnp_x - ev.lnp).abs() < 1e-8 * ev.lnp.abs(),
+            "{}: lnp {lnp_x} vs {}",
+            model.name,
+            ev.lnp
+        );
+        assert!((s2_x - ev.sigma_f_hat2).abs() < 1e-9 * ev.sigma_f_hat2);
+        assert!((logdet_x - ev.chol.logdet()).abs() < 1e-8 * ev.chol.logdet().abs());
+    }
+}
+
+#[test]
+fn strict_mode_errors_on_missing_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaBackend::load(&dir).expect("loading artifacts");
+    xla.strict = true;
+    let model = paper_k1(0.1);
+    let t = grid(17); // no artifact for n=17
+    assert!(xla.cov(&model, &t, &PaperK1::truth()).is_err());
+    xla.strict = false;
+    assert!(xla.cov(&model, &t, &PaperK1::truth()).is_ok());
+    assert_eq!(xla.n_fallback, 1);
+}

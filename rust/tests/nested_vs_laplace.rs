@@ -1,0 +1,120 @@
+//! Focused consistency test between the two evidence estimators on a
+//! *known* integrand: a synthetic log-likelihood whose evidence has a
+//! closed form. This isolates the estimator math from GP specifics —
+//! if both machines integrate a known Gaussian correctly, Table-1 level
+//! disagreements must come from non-Gaussianity of the posterior, which
+//! is exactly the paper's interpretation of its (k₂, n=30) outlier.
+
+use gpfast::evidence::laplace_evidence;
+use gpfast::linalg::Matrix;
+use gpfast::nested::{nested_sample, NestedOptions};
+use gpfast::priors::{BoxPrior, ScalePrior};
+use gpfast::rng::Xoshiro256;
+
+/// A 3-D Gaussian "hyperlikelihood" over a box prior, with analytic Z.
+struct Toy {
+    prior: BoxPrior,
+    peak: Vec<f64>,
+    hess: Matrix,
+    ln_p_peak: f64,
+}
+
+impl Toy {
+    fn new() -> Self {
+        Self {
+            prior: BoxPrior { bounds: vec![(-8.0, 8.0); 3], constraints: vec![] },
+            peak: vec![0.5, -1.0, 2.0],
+            hess: Matrix::from_rows(&[
+                &[4.0, 0.5, 0.0],
+                &[0.5, 9.0, 1.0],
+                &[0.0, 1.0, 2.0],
+            ]),
+            ln_p_peak: -4.0,
+        }
+    }
+
+    fn ln_p(&self, theta: &[f64]) -> f64 {
+        let d: Vec<f64> = theta.iter().zip(&self.peak).map(|(a, b)| a - b).collect();
+        let hd = self.hess.matvec(&d);
+        self.ln_p_peak - 0.5 * gpfast::linalg::dot(&d, &hd)
+    }
+}
+
+#[test]
+fn both_estimators_agree_on_gaussian_integrand() {
+    let toy = Toy::new();
+    // Laplace: exact for this integrand (modulo box truncation ~0).
+    // Use a σ_f prior with zero extra dimension by noting laplace_evidence
+    // adds the marg constant: replicate it in the nested integrand instead.
+    let scale = ScalePrior::default();
+    let n_data = 10; // arbitrary: contributes the same constant to both
+    let lap = laplace_evidence(n_data, &toy.prior, &scale, &toy.peak, toy.ln_p_peak, &toy.hess)
+        .unwrap();
+    assert!(!lap.suspect);
+
+    // Nested: integrate the same thing — P_max over ϑ-cube; add the same
+    // marginalisation constant afterwards.
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let res = nested_sample(
+        3,
+        |u: &[f64]| toy.ln_p(&toy.prior.from_unit_cube(u)),
+        &NestedOptions { nlive: 400, ..Default::default() },
+        &mut rng,
+    )
+    .unwrap();
+    let marg = gpfast::gp::marg_constant(n_data, scale.sigma_lo, scale.sigma_hi);
+    let ln_z_nested = res.ln_z + marg;
+    let tol = 3.5 * res.ln_z_err.max(0.05);
+    assert!(
+        (lap.ln_z - ln_z_nested).abs() < tol,
+        "laplace {} vs nested {} ± {}",
+        lap.ln_z,
+        ln_z_nested,
+        res.ln_z_err
+    );
+}
+
+#[test]
+fn laplace_error_bars_match_gaussian_truth() {
+    let toy = Toy::new();
+    let lap = laplace_evidence(
+        10,
+        &toy.prior,
+        &ScalePrior::default(),
+        &toy.peak,
+        toy.ln_p_peak,
+        &toy.hess,
+    )
+    .unwrap();
+    // σ_i = sqrt((H⁻¹)_ii)
+    let hinv = gpfast::linalg::Lu::factor(&toy.hess).unwrap().inverse();
+    for i in 0..3 {
+        assert!((lap.sigma[i] - hinv[(i, i)].sqrt()).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn nested_posterior_moments_match_gaussian() {
+    let toy = Toy::new();
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    let res = nested_sample(
+        3,
+        |u: &[f64]| toy.ln_p(&toy.prior.from_unit_cube(u)),
+        &NestedOptions { nlive: 400, ..Default::default() },
+        &mut rng,
+    )
+    .unwrap();
+    // posterior mean ≈ peak (Gaussian, box-interior)
+    for d in 0..3 {
+        let mean: f64 = res
+            .samples
+            .iter()
+            .map(|s| s.ln_w.exp() * toy.prior.from_unit_cube(&s.u)[d])
+            .sum();
+        assert!(
+            (mean - toy.peak[d]).abs() < 0.1,
+            "dim {d}: posterior mean {mean} vs peak {}",
+            toy.peak[d]
+        );
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-module property tests (the `propcheck` mini-framework):
+//! invariants that must hold for *any* valid inputs, not just the
+//! example cases of the unit suites.
+
+use gpfast::gp::profiled::ProfiledEval;
+use gpfast::kernels::{paper_k1, paper_k2, DataSpan, PaperK1, PaperK2};
+use gpfast::linalg::{Chol, Matrix, ToeplitzSolver};
+use gpfast::priors::BoxPrior;
+use gpfast::propcheck::{property, Gen};
+
+/// Random irregular time grid.
+fn gen_times(g: &mut Gen, max_n: usize) -> Vec<f64> {
+    let n = g.usize(8..max_n);
+    let mut t = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += g.f64(0.2, 3.0);
+        t.push(acc);
+    }
+    t
+}
+
+/// Random k2 hyperparameters inside the prior box of the grid.
+fn gen_theta_k2(g: &mut Gen, span: &DataSpan) -> Vec<f64> {
+    let (lo, hi) = span.phi_bounds();
+    let phi0 = g.f64(lo + 0.3 * (hi - lo), hi);
+    let phi1 = g.f64(lo, hi - 0.5);
+    let phi2 = g.f64(phi1, hi); // respects T2 >= T1
+    vec![phi0, phi1, g.f64(-0.4, 0.4), phi2, g.f64(-0.4, 0.4)]
+}
+
+#[test]
+fn assembled_covariance_is_positive_definite() {
+    property("K(θ) is PD for any prior-interior θ", 40, |g| {
+        let t = gen_times(g, 40);
+        let span = DataSpan::from_times(&t);
+        let theta = gen_theta_k2(g, &span);
+        let model = paper_k2(g.f64(0.01, 0.3));
+        let k = gpfast::gp::assemble_cov(&model, &t, &theta);
+        match Chol::factor(&k) {
+            Ok(_) => Ok(()),
+            Err(e) => Err(format!("not PD at θ={theta:?}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn profiled_sigma_hat_is_scale_equivariant() {
+    // scaling y by c scales σ̂_f² by c² and shifts lnP by −n ln c
+    property("σ̂_f²(c·y) = c²σ̂_f²(y)", 30, |g| {
+        let t = gen_times(g, 30);
+        let span = DataSpan::from_times(&t);
+        let theta = gen_theta_k2(g, &span);
+        let model = paper_k2(0.1);
+        let y: Vec<f64> = t.iter().map(|&x| (x * 0.7).sin() + 0.3 * (x * 0.13).cos()).collect();
+        let c = g.f64(0.5, 3.0);
+        let yc: Vec<f64> = y.iter().map(|v| c * v).collect();
+        let k = gpfast::gp::assemble_cov(&model, &t, &theta);
+        let e1 = ProfiledEval::from_cov(k.clone(), &y).map_err(|e| e.to_string())?;
+        let e2 = ProfiledEval::from_cov(k, &yc).map_err(|e| e.to_string())?;
+        let want = c * c * e1.sigma_f_hat2;
+        if (e2.sigma_f_hat2 - want).abs() > 1e-9 * want {
+            return Err(format!("{} vs {want}", e2.sigma_f_hat2));
+        }
+        let n = y.len() as f64;
+        let want_lnp = e1.lnp - n * c.ln();
+        if (e2.lnp - want_lnp).abs() > 1e-8 * want_lnp.abs() {
+            return Err(format!("lnp {} vs {want_lnp}", e2.lnp));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn profiled_lnp_is_maximum_over_explicit_sigma() {
+    // for random λ, full_lnp([λ, ϑ]) ≤ lnP_max(ϑ)
+    property("lnP(λ, ϑ) ≤ lnP_max(ϑ)", 25, |g| {
+        let t = gen_times(g, 25);
+        let span = DataSpan::from_times(&t);
+        let theta = gen_theta_k2(g, &span);
+        let model = paper_k2(0.1);
+        let y: Vec<f64> = t.iter().map(|&x| (x * 0.9).sin()).collect();
+        let ev = gpfast::gp::profiled::eval(&model, &t, &y, &theta).map_err(|e| e.to_string())?;
+        let lambda = g.f64(-2.0, 2.0);
+        let mut full = vec![lambda];
+        full.extend(theta.iter().copied());
+        let lnp = gpfast::gp::full_lnp(&model, &t, &y, &full).map_err(|e| e.to_string())?;
+        if lnp <= ev.lnp + 1e-9 * ev.lnp.abs().max(1.0) {
+            Ok(())
+        } else {
+            Err(format!("full {lnp} exceeds profiled max {}", ev.lnp))
+        }
+    });
+}
+
+#[test]
+fn toeplitz_matches_cholesky_on_regular_grids() {
+    property("Levinson solve == Cholesky solve on regular grids", 25, |g| {
+        let n = g.usize(5..40);
+        let model = paper_k1(0.1);
+        let t: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let span = DataSpan::from_times(&t);
+        let (lo, hi) = span.phi_bounds();
+        let theta = vec![g.f64(lo + 0.5 * (hi - lo), hi), g.f64(lo, hi), g.f64(-0.3, 0.3)];
+        // first column defines the Toeplitz operator on a regular grid
+        let k = gpfast::gp::assemble_cov(&model, &t, &theta);
+        let col: Vec<f64> = (0..n).map(|i| k[(i, 0)]).collect();
+        let ts = ToeplitzSolver::new(&col).map_err(|e| e.to_string())?;
+        let ch = Chol::factor(&k).map_err(|e| e.to_string())?;
+        let b: Vec<f64> = (0..n).map(|i| ((i * i) as f64 * 0.11).sin()).collect();
+        let xt = ts.solve(&b);
+        let xc = ch.solve(&b);
+        for i in 0..n {
+            if (xt[i] - xc[i]).abs() > 1e-7 * xc[i].abs().max(1.0) {
+                return Err(format!("n={n} i={i}: {} vs {}", xt[i], xc[i]));
+            }
+        }
+        if (ts.logdet() - ch.logdet()).abs() > 1e-7 * ch.logdet().abs().max(1.0) {
+            return Err(format!("logdet {} vs {}", ts.logdet(), ch.logdet()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prior_cube_roundtrip_volume_consistency() {
+    property("cube → θ stays in prior; volume finite", 100, |g| {
+        let t = gen_times(g, 20);
+        let span = DataSpan::from_times(&t);
+        let model = paper_k2(0.1);
+        let prior = BoxPrior::for_model(&model, &span);
+        let u: Vec<f64> = (0..prior.dim()).map(|_| g.f64(0.0, 1.0)).collect();
+        let theta = prior.from_unit_cube(&u);
+        if !prior.contains(&theta) {
+            return Err(format!("mapped point escapes prior: {theta:?}"));
+        }
+        let v = prior.ln_volume_at(&theta);
+        if !v.is_finite() {
+            return Err(format!("non-finite volume at {theta:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truth_parameters_recovered_within_error_bars_on_large_n() {
+    // statistical sanity at n = 300, k2. The periodic hyperlikelihood is
+    // genuinely multimodal (harmonic aliases — the phenomenon behind the
+    // paper's flagged case), so the *guaranteed* invariant is that the
+    // trained peak dominates the truth point: lnP(θ̂) ≥ lnP(θ_truth).
+    // When multistart additionally lands in the truth's own mode, φ1 must
+    // agree with the truth within ~5σ of the inverse-Hessian error bar
+    // (the paper's T1 = 12.44 ± 0.07 h analogue).
+    use gpfast::coordinator::{train_model, ModelSpec, TrainOptions};
+    use gpfast::rng::Xoshiro256;
+    let data = gpfast::data::synthetic::table1_dataset(300, 0.1, 99);
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let mut opts = TrainOptions::default();
+    opts.multistart.restarts = 10;
+    // help multistart with the truth's basin as one deterministic start —
+    // the pipeline's warm-start mechanism in miniature
+    opts.extra_starts = vec![vec![3.0, 1.2, 0.1, 2.8, 0.1]];
+    let res = train_model(&ModelSpec::K2, 0.1, &data, &opts, 2, &mut rng).unwrap();
+    let model = paper_k2(0.1);
+    let truth = PaperK2::truth();
+    let _ = PaperK1::truth();
+    // invariant 1: the found peak dominates the truth point
+    let ev_truth = gpfast::gp::profiled::eval(&model, &data.t, &data.y, &truth).unwrap();
+    assert!(
+        res.lnp_peak >= ev_truth.lnp - 1e-6,
+        "trained peak {} below truth lnP {}",
+        res.lnp_peak,
+        ev_truth.lnp
+    );
+    // invariant 2: if we are in the truth mode, φ1 matches within 5σ
+    if (res.theta_hat[1] - truth[1]).abs() < 0.3 {
+        let hess =
+            gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &res.theta_hat).unwrap();
+        let prior = BoxPrior::for_model(&model, &data.span());
+        let ev = gpfast::evidence::laplace_evidence(
+            300,
+            &prior,
+            &gpfast::priors::ScalePrior::default(),
+            &res.theta_hat,
+            res.lnp_peak,
+            &hess,
+        )
+        .unwrap();
+        let dev = (res.theta_hat[1] - truth[1]).abs();
+        assert!(
+            dev < 5.0 * ev.sigma[1].max(0.01),
+            "φ1 = {} vs truth {} (σ = {})",
+            res.theta_hat[1],
+            truth[1],
+            ev.sigma[1]
+        );
+    }
+}

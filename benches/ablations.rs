@@ -23,6 +23,7 @@ use gpfast::optimize::{
 };
 use gpfast::priors::BoxPrior;
 use gpfast::rng::Xoshiro256;
+#[cfg(feature = "xla")]
 use gpfast::runtime::{Backend, NativeBackend, XlaBackend};
 use gpfast::util::{timer::human_time, Table, TimingStats};
 
@@ -166,7 +167,15 @@ fn ablation_toeplitz() {
     println!("(§3(b) fn. 7: the paper skipped this so its code stays general)\n");
 }
 
+/// 4. native vs XLA-artifact assembly (needs the `xla` feature).
+#[cfg(not(feature = "xla"))]
+fn ablation_backend() {
+    println!("== ablation 4: covariance assembly backend (native vs XLA AOT) ==\n");
+    println!("(skipped: built without the `xla` feature)\n");
+}
+
 /// 4. native vs XLA-artifact assembly.
+#[cfg(feature = "xla")]
 fn ablation_backend() {
     println!("== ablation 4: covariance assembly backend (native vs XLA AOT) ==\n");
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -26,10 +26,12 @@ fn main() {
     let mut rng = Xoshiro256::seed_from_u64(2);
     let mut opts = TrainOptions::default();
     opts.multistart.restarts = 10;
+    let exec = gpfast::runtime::ExecutionContext::from_env();
     let sw_fast = Stopwatch::start();
-    let trained = train_model(&spec, 0.1, &data, &opts, 2, &mut rng).unwrap();
+    let trained = train_model(&spec, 0.1, &data, &opts, 2, &exec, &mut rng).unwrap();
     let hess =
-        gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &trained.theta_hat).unwrap();
+        gpfast::gp::profiled_hessian_with(&model, &data.t, &data.y, &trained.theta_hat, &exec)
+            .unwrap();
     let lap =
         laplace_evidence(n, &prior, &scale, &trained.theta_hat, trained.lnp_peak, &hess).unwrap();
     let t_fast = sw_fast.elapsed_secs();

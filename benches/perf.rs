@@ -1,17 +1,27 @@
 //! Bench: layer-by-layer hot-path profile — the measurement harness
-//! behind EXPERIMENTS.md §Perf.
+//! behind EXPERIMENTS.md §Perf, now serial *and* parallel.
 //!
-//! * L3 Cholesky GFLOP/s (the O(n³) hot path, n³/3 flops)
-//! * L3 covariance assembly pair-rate (native per-pair kernel)
-//! * L3 O(n²) contraction rates (gradient eq. 2.17 given the factor)
-//! * end-to-end profiled eval+gradient cost at the paper's sizes
+//! * L3 Cholesky GFLOP/s (the O(n³) hot path, n³/3 flops) across thread
+//!   counts — the `ExecutionContext` scaling table
+//! * L3 covariance assembly pair-rate (native per-pair kernel) across
+//!   thread counts
+//! * L3 O(n²) gradient-contraction rates (eq. 2.17 given the factor)
+//! * end-to-end profiled eval+gradient cost at the paper's sizes,
+//!   1 thread vs the full budget
+//!
+//! Besides the human tables, writes **`BENCH_perf.json`** (schema:
+//! `{threads_available, sections: {cholesky|assembly|gradient|end_to_end:
+//! [{n, threads, seconds, gflops|mpairs|speedup…}]}}`) so future PRs can
+//! track the perf trajectory mechanically.
 //!
 //! `cargo bench --bench perf`
 
+use gpfast::gp::profiled::ProfiledEval;
 use gpfast::kernels::{paper_k2, PaperK2};
 use gpfast::linalg::{Chol, Matrix};
 use gpfast::rng::Xoshiro256;
-use gpfast::util::{timer::human_time, Table, TimingStats};
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::{timer::human_time, Json, Table, TimingStats};
 
 fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
     // diagonally dominant random symmetric matrix (cheap to build)
@@ -27,55 +37,196 @@ fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
     m
 }
 
+/// Thread counts to sweep: 1, 2, 4 capped at the machine's parallelism
+/// (oversubscribed rows would masquerade as scaling data in
+/// BENCH_perf.json), plus the full machine if it has more cores.
+fn thread_counts() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut ts: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&t| t <= avail).collect();
+    if !ts.contains(&avail) {
+        ts.push(avail);
+    }
+    ts
+}
+
 fn main() {
     let mut rng = Xoshiro256::seed_from_u64(1);
+    let threads = thread_counts();
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("(machine parallelism: {avail}; sweeping threads {threads:?})\n");
+    let mut j_chol: Vec<Json> = Vec::new();
+    let mut j_asm: Vec<Json> = Vec::new();
+    let mut j_grad: Vec<Json> = Vec::new();
+    let mut j_e2e: Vec<Json> = Vec::new();
 
-    println!("== L3 Cholesky (blocked, f64, single core) ==");
-    let mut t = Table::new(vec!["n", "time (min)", "GFLOP/s"]);
+    println!("== L3 Cholesky (blocked, f64) ==");
+    let mut t = Table::new(vec!["n", "threads", "time (min)", "GFLOP/s", "speedup"]);
     for &n in &[300usize, 600, 1000, 1968] {
         let k = random_spd(n, &mut rng);
-        let reps = if n >= 1968 { 3 } else { 5 };
-        let stats = TimingStats::measure(1, reps, || {
-            let _ = Chol::factor(&k).unwrap();
-        });
-        let gflops = (n as f64).powi(3) / 3.0 / stats.min() / 1e9;
-        t.add_row(vec![format!("{n}"), human_time(stats.min()), format!("{gflops:.2}")]);
+        let reps = if n >= 1968 { 2 } else { 3 };
+        let mut serial_secs = f64::NAN;
+        for &nt in &threads {
+            let ctx = ExecutionContext::new(nt);
+            let stats = TimingStats::measure(1, reps, || {
+                let _ = Chol::factor_with(&k, &ctx).unwrap();
+            });
+            let secs = stats.min();
+            if nt == 1 {
+                serial_secs = secs;
+            }
+            let gflops = (n as f64).powi(3) / 3.0 / secs / 1e9;
+            let speedup = serial_secs / secs;
+            t.add_row(vec![
+                format!("{n}"),
+                format!("{nt}"),
+                human_time(secs),
+                format!("{gflops:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            j_chol.push(Json::obj(vec![
+                ("n", n.into()),
+                ("threads", nt.into()),
+                ("seconds", secs.into()),
+                ("gflops", gflops.into()),
+                ("speedup", speedup.into()),
+            ]));
+        }
     }
     print!("{}", t.render());
 
     println!("\n== L3 covariance assembly (native k2: value+grads per pair) ==");
     let model = paper_k2(0.1);
     let theta = PaperK2::truth();
-    let mut t = Table::new(vec!["n", "time (min)", "Mpairs/s"]);
+    let mut t = Table::new(vec!["n", "threads", "time (min)", "Mpairs/s", "speedup"]);
     for &n in &[300usize, 1000, 1968] {
         let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
-        let reps = if n >= 1968 { 3 } else { 5 };
-        let stats = TimingStats::measure(1, reps, || {
-            let _ = gpfast::gp::assemble_cov_grads(&model, &ts, &theta);
-        });
-        let rate = (n * n) as f64 / 2.0 / stats.min() / 1e6;
-        t.add_row(vec![format!("{n}"), human_time(stats.min()), format!("{rate:.1}")]);
+        let reps = if n >= 1968 { 2 } else { 3 };
+        let mut serial_secs = f64::NAN;
+        for &nt in &threads {
+            let ctx = ExecutionContext::new(nt);
+            let stats = TimingStats::measure(1, reps, || {
+                let _ = gpfast::gp::assemble_cov_grads_with(&model, &ts, &theta, &ctx);
+            });
+            let secs = stats.min();
+            if nt == 1 {
+                serial_secs = secs;
+            }
+            let rate = (n * n) as f64 / 2.0 / secs / 1e6;
+            let speedup = serial_secs / secs;
+            t.add_row(vec![
+                format!("{n}"),
+                format!("{nt}"),
+                human_time(secs),
+                format!("{rate:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+            j_asm.push(Json::obj(vec![
+                ("n", n.into()),
+                ("threads", nt.into()),
+                ("seconds", secs.into()),
+                ("mpairs", rate.into()),
+                ("speedup", speedup.into()),
+            ]));
+        }
+    }
+    print!("{}", t.render());
+
+    println!("\n== L3 gradient contractions (eq. 2.17, given factor + W) ==");
+    let mut t = Table::new(vec!["n", "threads", "time (min)", "speedup"]);
+    for &n in &[1000usize, 1968] {
+        let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let y: Vec<f64> = ts.iter().map(|&x| (x * 0.51).sin()).collect();
+        let setup_ctx = ExecutionContext::from_env();
+        let (k, grads) = gpfast::gp::assemble_cov_grads_with(&model, &ts, &theta, &setup_ctx);
+        let ev = ProfiledEval::from_cov_with(k, &y, &setup_ctx).unwrap();
+        let w = ev.inverse_with(&setup_ctx);
+        let mut serial_secs = f64::NAN;
+        for &nt in &threads {
+            let ctx = ExecutionContext::new(nt);
+            let stats = TimingStats::measure(1, 3, || {
+                let _ = ev.gradient_with(&grads, &w, &ctx);
+            });
+            let secs = stats.min();
+            if nt == 1 {
+                serial_secs = secs;
+            }
+            let speedup = serial_secs / secs;
+            t.add_row(vec![
+                format!("{n}"),
+                format!("{nt}"),
+                human_time(secs),
+                format!("{speedup:.2}x"),
+            ]);
+            j_grad.push(Json::obj(vec![
+                ("n", n.into()),
+                ("threads", nt.into()),
+                ("seconds", secs.into()),
+                ("speedup", speedup.into()),
+            ]));
+        }
     }
     print!("{}", t.render());
 
     println!("\n== end-to-end profiled lnP + gradient (eqs. 2.16–2.17) ==");
-    let mut t = Table::new(vec!["n", "eval+grad", "eval only"]);
-    for &n in &[100usize, 300, 328, 1000, 1968] {
+    let full = *threads.last().unwrap();
+    let mut t = Table::new(vec![
+        "n".to_string(),
+        "eval+grad (1t)".to_string(),
+        format!("eval+grad ({full}t)"),
+        "speedup".to_string(),
+    ]);
+    for &n in &[328usize, 1000, 1968] {
         let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
         let y: Vec<f64> = ts.iter().map(|&x| (x * 0.51).sin()).collect();
-        let reps = if n >= 1000 { 3 } else { 5 };
-        let g = TimingStats::measure(1, reps, || {
-            let _ = gpfast::gp::profiled::eval_grad(&model, &ts, &y, &theta).unwrap();
+        let reps = if n >= 1000 { 2 } else { 3 };
+        let seq = ExecutionContext::seq();
+        let par = ExecutionContext::new(full);
+        let g1 = TimingStats::measure(1, reps, || {
+            let _ = gpfast::gp::profiled::eval_grad_with(&model, &ts, &y, &theta, &seq).unwrap();
         });
-        let v = TimingStats::measure(1, reps, || {
-            let _ = gpfast::gp::profiled::eval(&model, &ts, &y, &theta).unwrap();
+        let gp = TimingStats::measure(1, reps, || {
+            let _ = gpfast::gp::profiled::eval_grad_with(&model, &ts, &y, &theta, &par).unwrap();
         });
+        let speedup = g1.min() / gp.min();
         t.add_row(vec![
             format!("{n}"),
-            human_time(g.min()),
-            human_time(v.min()),
+            human_time(g1.min()),
+            human_time(gp.min()),
+            format!("{speedup:.2}x"),
         ]);
+        // uniform per-section schema: one {n, threads, seconds, speedup}
+        // entry per measured configuration
+        j_e2e.push(Json::obj(vec![
+            ("n", n.into()),
+            ("threads", 1usize.into()),
+            ("seconds", g1.min().into()),
+            ("speedup", 1.0.into()),
+        ]));
+        j_e2e.push(Json::obj(vec![
+            ("n", n.into()),
+            ("threads", full.into()),
+            ("seconds", gp.min().into()),
+            ("speedup", speedup.into()),
+        ]));
     }
     print!("{}", t.render());
     println!("\n(paper's yardstick: ~10 s per evaluation at n = 1968 on their machine)");
+
+    let doc = Json::obj(vec![
+        ("bench", "perf".into()),
+        ("threads_available", avail.into()),
+        (
+            "sections",
+            Json::obj(vec![
+                ("cholesky", Json::Arr(j_chol)),
+                ("assembly", Json::Arr(j_asm)),
+                ("gradient", Json::Arr(j_grad)),
+                ("end_to_end", Json::Arr(j_e2e)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_perf.json", doc.pretty()) {
+        Ok(()) => println!("machine-readable results written to BENCH_perf.json"),
+        Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+    }
 }

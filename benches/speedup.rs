@@ -38,12 +38,19 @@ fn main() {
             let mut opts = TrainOptions::default();
             opts.multistart.restarts = 10;
 
+            let exec = gpfast::runtime::ExecutionContext::from_env();
             let sw = Stopwatch::start();
-            let trained = train_model(&spec, 0.1, &data, &opts, 1, &mut rng).unwrap();
+            let trained = train_model(&spec, 0.1, &data, &opts, 1, &exec, &mut rng).unwrap();
             // the "+1" evaluation of the Hessian (paper: "one additional
             // evaluation to calculate the Hessian and hence ln Z_est")
-            let _h = gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &trained.theta_hat)
-                .unwrap();
+            let _h = gpfast::gp::profiled_hessian_with(
+                &model,
+                &data.t,
+                &data.y,
+                &trained.theta_hat,
+                &exec,
+            )
+            .unwrap();
             let t_fast = sw.elapsed_secs();
             let fast_evals = trained.n_evals + 1;
 

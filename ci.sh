@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Pre-merge gate for gpfast — run from the repo root before every merge:
+#
+#   ./ci.sh
+#
+# Mirrors the tier-1 verify in ROADMAP.md (release build + tests) and adds
+# the formatting check. Benches/examples compile as part of `cargo test`'s
+# target graph; `cargo bench --bench perf` is the perf-tracking run and is
+# deliberately not part of the gate (wall-clock heavy).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check (advisory) =="
+    # Advisory until the pre-manifest tree is formatted wholesale: report
+    # drift without failing the gate, so the gate stays usable on images
+    # whose rustfmt disagrees with the seed style.
+    cargo fmt --check || echo "WARNING: formatting drift (non-blocking)"
+else
+    echo "rustfmt unavailable; skipping fmt check"
+fi
+
+echo "ci.sh: all gates passed"

@@ -20,6 +20,7 @@ use gpfast::evidence::laplace_evidence;
 use gpfast::nested::{nested_sample, NestedOptions};
 use gpfast::priors::{BoxPrior, ScalePrior};
 use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
 use gpfast::util::Table;
 use std::path::Path;
 
@@ -36,8 +37,10 @@ fn main() -> gpfast::Result<()> {
     let mut rng = Xoshiro256::seed_from_u64(2);
     let mut opts = TrainOptions::default();
     opts.multistart.restarts = 10;
-    let trained = train_model(&spec, 0.1, &data, &opts, 2, &mut rng)?;
-    let hess = gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &trained.theta_hat)?;
+    let exec = ExecutionContext::from_env();
+    let trained = train_model(&spec, 0.1, &data, &opts, 2, &exec, &mut rng)?;
+    let hess =
+        gpfast::gp::profiled_hessian_with(&model, &data.t, &data.y, &trained.theta_hat, &exec)?;
     let lap = laplace_evidence(n, &prior, &scale, &trained.theta_hat, trained.lnp_peak, &hess)?;
 
     // 2. nested-sampling posterior over (λ, ϑ)

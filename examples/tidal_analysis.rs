@@ -41,8 +41,10 @@ fn train_large_warm(
     let mut opts = gpfast::coordinator::TrainOptions::default();
     opts.multistart.restarts = 1;
     opts.extra_starts = vec![warm.to_vec()];
-    let trained = train_model(spec, TIDAL_SIGMA_N, data, &opts, 1, rng)?;
-    let hess = gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &trained.theta_hat)?;
+    let exec = gpfast::runtime::ExecutionContext::from_env();
+    let trained = train_model(spec, TIDAL_SIGMA_N, data, &opts, 1, &exec, rng)?;
+    let hess =
+        gpfast::gp::profiled_hessian_with(&model, &data.t, &data.y, &trained.theta_hat, &exec)?;
     let ev = gpfast::evidence::laplace_evidence(
         data.len(),
         &prior,

@@ -24,6 +24,9 @@ pub struct RunConfig {
     pub run_nested: bool,
     pub backend: String,
     pub workers: usize,
+    /// Linalg/assembly thread budget; 0 means "auto" (`GPFAST_THREADS`
+    /// env var, else the machine's available parallelism).
+    pub threads: usize,
     pub artifacts_dir: String,
 }
 
@@ -38,6 +41,7 @@ impl Default for RunConfig {
             run_nested: false,
             backend: "auto".into(),
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            threads: 0,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -88,11 +92,26 @@ impl RunConfig {
         if let Some(v) = doc.get("runtime", "workers") {
             cfg.workers = v.as_int().ok_or_else(|| anyhow::anyhow!("runtime.workers"))? as usize;
         }
+        if let Some(v) = doc.get("runtime", "threads") {
+            let t = v.as_int().ok_or_else(|| anyhow::anyhow!("runtime.threads"))?;
+            anyhow::ensure!(t >= 0, "runtime.threads must be >= 0 (0 = auto), got {t}");
+            cfg.threads = t as usize;
+        }
         if let Some(v) = doc.get("runtime", "artifacts_dir") {
             cfg.artifacts_dir =
                 v.as_str().ok_or_else(|| anyhow::anyhow!("runtime.artifacts_dir"))?.to_string();
         }
         Ok(cfg)
+    }
+
+    /// The execution context this config describes: `threads = 0` means
+    /// auto (`GPFAST_THREADS` env var, else machine parallelism).
+    pub fn exec(&self) -> crate::runtime::ExecutionContext {
+        if self.threads == 0 {
+            crate::runtime::ExecutionContext::from_env()
+        } else {
+            crate::runtime::ExecutionContext::new(self.threads)
+        }
     }
 
     /// Materialise the pipeline configuration.
@@ -117,6 +136,7 @@ impl RunConfig {
             run_nested: self.run_nested,
             nested: NestedOptions { nlive: self.nlive, ..Default::default() },
             workers: self.workers,
+            exec: self.exec(),
         })
     }
 }
@@ -172,6 +192,16 @@ workers = 2
         assert_eq!(p.models.len(), 3);
         assert_eq!(p.train.multistart.restarts, 5);
         assert!(p.run_nested);
+    }
+
+    #[test]
+    fn threads_key_parses_and_rejects_negatives() {
+        let cfg = RunConfig::from_toml("[runtime]\nthreads = 3\n").unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.exec().threads(), 3);
+        let auto = RunConfig::from_toml("[runtime]\nthreads = 0\n").unwrap();
+        assert!(auto.exec().threads() >= 1);
+        assert!(RunConfig::from_toml("[runtime]\nthreads = -1\n").is_err());
     }
 
     #[test]

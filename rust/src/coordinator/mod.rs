@@ -32,6 +32,7 @@ use crate::evidence::laplace_evidence;
 use crate::nested::{nested_sample, NestedOptions};
 use crate::priors::{BoxPrior, ScalePrior};
 use crate::rng::Xoshiro256;
+use crate::runtime::ExecutionContext;
 use crate::util::Stopwatch;
 
 /// Configuration of a model-comparison pipeline run.
@@ -51,6 +52,10 @@ pub struct PipelineConfig {
     pub nested: NestedOptions,
     /// Worker threads for multistart fan-out.
     pub workers: usize,
+    /// Thread budget for the linalg/assembly hot paths; restarts running
+    /// concurrently split it (the borrowed-slots rule of
+    /// [`crate::runtime::exec`]).
+    pub exec: ExecutionContext,
 }
 
 impl PipelineConfig {
@@ -64,6 +69,7 @@ impl PipelineConfig {
             run_nested: false,
             nested: NestedOptions::default(),
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            exec: ExecutionContext::from_env(),
         }
     }
 
@@ -107,11 +113,18 @@ impl ComparisonPipeline {
                 data,
                 &train_opts,
                 self.config.workers,
+                &self.config.exec,
                 rng,
             )?;
-            // Hessian + Laplace evidence at the peak
-            let hessian =
-                crate::gp::profiled_hessian(&model, &data.t, &data.y, &trained.theta_hat)?;
+            // Hessian + Laplace evidence at the peak (full thread budget:
+            // nothing else runs concurrently here)
+            let hessian = crate::gp::profiled_hessian_with(
+                &model,
+                &data.t,
+                &data.y,
+                &trained.theta_hat,
+                &self.config.exec,
+            )?;
             let ev = laplace_evidence(
                 data.len(),
                 &prior,
@@ -158,6 +171,7 @@ impl ComparisonPipeline {
         let dim = prior.dim() + 1; // λ first
         let scale = self.config.scale_prior;
         let mut n_lnp = 0usize;
+        let exec = self.config.exec.clone();
         let res = {
             let mut ln_like = |u: &[f64]| -> f64 {
                 let lambda = scale.lambda_from_unit(u[0]);
@@ -165,7 +179,7 @@ impl ComparisonPipeline {
                 let mut full = vec![lambda];
                 full.extend(theta);
                 n_lnp += 1;
-                crate::gp::full_lnp(model, &data.t, &data.y, &full)
+                crate::gp::full_lnp_with(model, &data.t, &data.y, &full, &exec)
                     .unwrap_or(f64::NEG_INFINITY)
             };
             nested_sample(dim, &mut ln_like, &self.config.nested, rng)?

@@ -1,5 +1,12 @@
 //! Training a single covariance model: multistart CG on the profiled
 //! hyperlikelihood, fanned out across the worker pool.
+//!
+//! Nested parallelism follows the borrowed-slots rule of
+//! [`crate::runtime::exec`]: `exec` is the **total** compute-thread
+//! budget. The pool width is `min(workers, restarts, exec.threads())`
+//! and each concurrent restart's linalg gets `exec.split(width)`, so
+//! multistart × linalg never exceeds the budget. With a single worker
+//! (or one restart) the full budget flows into the linalg layer.
 
 use std::sync::Arc;
 
@@ -8,6 +15,7 @@ use crate::gp::profiled;
 use crate::optimize::{maximise_cg, CgOptions, FnObjective, MultistartOptions};
 use crate::priors::BoxPrior;
 use crate::rng::Xoshiro256;
+use crate::runtime::ExecutionContext;
 
 use super::pool::WorkerPool;
 use super::registry::ModelSpec;
@@ -46,6 +54,7 @@ pub struct TrainResult {
 fn make_objective<'a>(
     model: &'a crate::kernels::CovarianceModel,
     data: &'a Dataset,
+    ctx: &'a ExecutionContext,
 ) -> FnObjective<
     impl FnMut(&[f64]) -> crate::Result<f64> + 'a,
     impl FnMut(&[f64]) -> crate::Result<(f64, Vec<f64>)> + 'a,
@@ -54,16 +63,19 @@ fn make_objective<'a>(
     FnObjective::new(
         m,
         move |theta: &[f64]| {
-            Ok(profiled::eval(model, &data.t, &data.y, theta).map_or(f64::NEG_INFINITY, |e| e.lnp))
+            Ok(profiled::eval_with(model, &data.t, &data.y, theta, ctx)
+                .map_or(f64::NEG_INFINITY, |e| e.lnp))
         },
-        move |theta: &[f64]| match profiled::eval_grad(model, &data.t, &data.y, theta) {
+        move |theta: &[f64]| match profiled::eval_grad_with(model, &data.t, &data.y, theta, ctx) {
             Ok((ev, g)) => Ok((ev.lnp, g)),
             Err(_) => Ok((f64::NEG_INFINITY, vec![0.0; m])),
         },
     )
 }
 
-/// Train `spec` on `data`: multistart CG across `workers` threads.
+/// Train `spec` on `data`: multistart CG across `workers` threads, with
+/// `exec` as the total thread budget for the linalg underneath (split
+/// across concurrent restarts — see the module docs).
 ///
 /// Each restart builds its own model instance (kernels are not `Sync`
 /// across the pool) and seeds an independent RNG stream.
@@ -73,6 +85,7 @@ pub fn train_model(
     data: &Dataset,
     opts: &TrainOptions,
     workers: usize,
+    exec: &ExecutionContext,
     rng: &mut Xoshiro256,
 ) -> crate::Result<TrainResult> {
     let restarts = opts.multistart.restarts.max(1);
@@ -98,6 +111,18 @@ pub fn train_model(
         evals: usize,
     }
 
+    // borrowed-slots: concurrent restarts divide the linalg thread
+    // budget, and the pool itself never exceeds it — `exec` is the total
+    // compute-thread budget, so `workers` is a fan-out *request* capped
+    // by it (workers=16 with a 4-thread budget runs a 4-wide pool).
+    let pool_workers = if workers > 1 {
+        workers.min(starts.len().max(1)).min(exec.threads())
+    } else {
+        1
+    };
+    let inner_ctx =
+        if pool_workers > 1 { exec.split(pool_workers) } else { exec.clone() };
+
     let run_one = {
         let data = Arc::clone(&data);
         let spec = spec_owned;
@@ -114,7 +139,7 @@ pub fn train_model(
                     p
                 }
             };
-            let mut obj = make_objective(&model, &data);
+            let mut obj = make_objective(&model, &data, &inner_ctx);
             match maximise_cg(&mut obj, &prior, &x0, &cg) {
                 Ok(out) if out.value.is_finite() => Some(StartResult {
                     theta: out.theta,
@@ -127,8 +152,8 @@ pub fn train_model(
         }
     };
 
-    let results: Vec<Option<StartResult>> = if workers > 1 {
-        let pool = WorkerPool::new(workers.min(starts.len()));
+    let results: Vec<Option<StartResult>> = if pool_workers > 1 {
+        let pool = WorkerPool::new(pool_workers);
         let shared = Arc::new(run_one);
         let f = {
             let shared = Arc::clone(&shared);
@@ -161,7 +186,7 @@ pub fn train_model(
     let best = &ok[0];
     // recompute σ̂_f² at the winning peak (cheap; avoids shipping it around)
     let model = spec.build(sigma_n);
-    let ev = profiled::eval(&model, &data.t, &data.y, &best.theta)?;
+    let ev = profiled::eval_with(&model, &data.t, &data.y, &best.theta, exec)?;
     Ok(TrainResult {
         theta_hat: best.theta.clone(),
         lnp_peak: best.value,
@@ -189,8 +214,9 @@ mod tests {
     fn trains_k1_on_synthetic_data() {
         let data = table1_dataset(50, 0.1, 7);
         let mut rng = Xoshiro256::seed_from_u64(3);
+        let exec = ExecutionContext::seq();
         let res =
-            train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &mut rng).unwrap();
+            train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &exec, &mut rng).unwrap();
         assert!(res.lnp_peak.is_finite());
         // σ_f truth is 1.0; estimate should be order-unity
         assert!(res.sigma_f_hat2 > 0.05 && res.sigma_f_hat2 < 20.0, "{}", res.sigma_f_hat2);
@@ -211,17 +237,46 @@ mod tests {
         let data = table1_dataset(40, 0.1, 11);
         let mut rng_a = Xoshiro256::seed_from_u64(5);
         let mut rng_b = Xoshiro256::seed_from_u64(5);
-        let a = train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &mut rng_a).unwrap();
-        let b = train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 3, &mut rng_b).unwrap();
+        // 3-thread budget so workers=3 genuinely runs a 3-wide pool
+        // (the pool width is capped at the budget)
+        let exec = ExecutionContext::new(3);
+        let a = train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &exec, &mut rng_a)
+            .unwrap();
+        let b = train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 3, &exec, &mut rng_b)
+            .unwrap();
         assert_eq!(a.theta_hat, b.theta_hat, "determinism across worker counts");
         assert!((a.lnp_peak - b.lnp_peak).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inner_parallelism_matches_serial_exactly() {
+        // the linalg layer is bit-deterministic, so even *different*
+        // thread budgets must reproduce the same training trajectory
+        // (n = 150 exceeds the parallel dispatch cutoffs)
+        let data = table1_dataset(150, 0.1, 19);
+        let mut rng_a = Xoshiro256::seed_from_u64(9);
+        let mut rng_b = Xoshiro256::seed_from_u64(9);
+        let a = train_model(
+            &ModelSpec::K1, 0.1, &data, &fast_opts(), 1,
+            &ExecutionContext::seq(), &mut rng_a,
+        )
+        .unwrap();
+        let b = train_model(
+            &ModelSpec::K1, 0.1, &data, &fast_opts(), 1,
+            &ExecutionContext::new(4), &mut rng_b,
+        )
+        .unwrap();
+        assert_eq!(a.theta_hat, b.theta_hat, "thread budget must not change the result");
+        assert_eq!(a.lnp_peak, b.lnp_peak);
     }
 
     #[test]
     fn peak_gradient_is_small() {
         let data = table1_dataset(40, 0.1, 13);
         let mut rng = Xoshiro256::seed_from_u64(21);
-        let res = train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &mut rng).unwrap();
+        let exec = ExecutionContext::seq();
+        let res =
+            train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &exec, &mut rng).unwrap();
         let model = ModelSpec::K1.build(0.1);
         let prior = BoxPrior::for_model(&model, &data.span());
         let (_, mut g) =

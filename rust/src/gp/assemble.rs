@@ -2,98 +2,154 @@
 //!
 //! The `O(n² m)` matrix-entry computation is the paper's device-offloaded
 //! hot spot (their released code does it on a GPU; our L1 Pallas kernel
-//! does it on the accelerator via the [`crate::runtime::XlaBackend`]).
+//! does it on the accelerator via the XLA backend when compiled in).
 //! This module is the **native** implementation: it exploits symmetry
 //! (upper triangle computed, mirrored) and streams per-pair kernel
 //! Hessians into `m×m` contractions so second-derivative matrices are
 //! never materialised.
+//!
+//! With a multi-thread [`ExecutionContext`], the pair loops are
+//! partitioned over row tiles weighted by their pair count (`n − i` pairs
+//! in row `i`); every worker binds its own prepared kernel and writes
+//! only its own rows, so assembled matrices are bit-identical to the
+//! serial ones. The Hessian contractions reduce per-tile `m×m` partials
+//! in tile order (deterministic for a fixed thread count).
 
 use crate::kernels::CovarianceModel;
 use crate::linalg::Matrix;
+use crate::runtime::exec::{split_rows_mut, weighted_bounds, ExecutionContext};
 
-/// Assemble `K̃ = k̃(t_i − t_j) + σ_n² δ_ij` (σ_f = 1 units).
-pub fn assemble_cov(model: &CovarianceModel, t: &[f64], theta: &[f64]) -> Matrix {
-    let n = t.len();
-    let mut prep = model.kernel.prepare(theta);
-    let mut k = Matrix::zeros(n, n);
-    let diag = prep.value(0.0) + model.noise_variance();
-    for i in 0..n {
-        k[(i, i)] = diag;
-        for j in (i + 1)..n {
-            k[(i, j)] = prep.value(t[i] - t[j]);
-        }
+/// Below this `n` a parallel dispatch costs more than the pair loop.
+const PAR_MIN_N: usize = 64;
+
+fn assembly_jobs(n: usize, ctx: &ExecutionContext) -> usize {
+    if n < PAR_MIN_N {
+        1
+    } else {
+        ctx.threads().min(n)
     }
-    mirror_upper(&mut k);
+}
+
+/// Assemble `K̃ = k̃(t_i − t_j) + σ_n² δ_ij` (σ_f = 1 units), serial.
+pub fn assemble_cov(model: &CovarianceModel, t: &[f64], theta: &[f64]) -> Matrix {
+    assemble_cov_with(model, t, theta, &ExecutionContext::seq())
+}
+
+/// Assemble `K̃` with the row tiles of the upper triangle distributed
+/// over the context's threads.
+pub fn assemble_cov_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> Matrix {
+    let n = t.len();
+    let mut k = Matrix::zeros(n, n);
+    let jobs = assembly_jobs(n, ctx);
+    let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
+    let chunks = split_rows_mut(k.as_mut_slice(), n, &bounds);
+    let mut job_fns = Vec::with_capacity(chunks.len());
+    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+        let (r0, r1) = (w[0], w[1]);
+        job_fns.push(move || {
+            let mut prep = model.kernel.prepare(theta);
+            let diag = prep.value(0.0) + model.noise_variance();
+            for i in r0..r1 {
+                let row = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+                row[i] = diag;
+                for j in (i + 1)..n {
+                    row[j] = prep.value(t[i] - t[j]);
+                }
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+    k.mirror_upper_to_lower();
     k
 }
 
 /// Assemble `K̃` and all `∂K̃/∂ϑ_a` in one pass over the pairs
-/// (the shared transcendental subexpressions are computed once).
+/// (the shared transcendental subexpressions are computed once), serial.
 pub fn assemble_cov_grads(
     model: &CovarianceModel,
     t: &[f64],
     theta: &[f64],
 ) -> (Matrix, Vec<Matrix>) {
+    assemble_cov_grads_with(model, t, theta, &ExecutionContext::seq())
+}
+
+/// Assemble `K̃` and all `∂K̃/∂ϑ_a`, row-tile parallel: each worker fills
+/// its rows of the value matrix *and* of every derivative matrix from a
+/// single pair sweep.
+pub fn assemble_cov_grads_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> (Matrix, Vec<Matrix>) {
     let n = t.len();
     let m = model.dim();
-    let mut prep = model.kernel.prepare(theta);
     let mut k = Matrix::zeros(n, n);
     let mut grads = vec![Matrix::zeros(n, n); m];
-    let mut g = vec![0.0; m];
-    // diagonal: dt = 0
-    let vd = prep.value_grad(0.0, &mut g);
-    for i in 0..n {
-        k[(i, i)] = vd + model.noise_variance();
-        for (a, ga) in g.iter().enumerate() {
-            grads[a][(i, i)] = *ga;
-        }
-    }
-    // fill the upper triangles with contiguous row writes, then mirror in
-    // a cache-blocked pass — writing (j,i) inside the pair loop strides a
-    // full row per store and collapses throughput ~8× at n ≈ 2000
-    // (EXPERIMENTS.md §Perf).
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let v = prep.value_grad(t[i] - t[j], &mut g);
-            k[(i, j)] = v;
-            for (a, ga) in g.iter().enumerate() {
-                grads[a][(i, j)] = *ga;
+    let jobs = assembly_jobs(n, ctx);
+    let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
+    let n_chunks = bounds.len() - 1;
+    {
+        let k_chunks = split_rows_mut(k.as_mut_slice(), n, &bounds);
+        // transpose the per-matrix chunk lists into per-chunk matrix lists
+        let mut grad_chunks: Vec<Vec<&mut [f64]>> =
+            (0..n_chunks).map(|_| Vec::with_capacity(m)).collect();
+        for g in grads.iter_mut() {
+            for (ci, chunk) in split_rows_mut(g.as_mut_slice(), n, &bounds).into_iter().enumerate()
+            {
+                grad_chunks[ci].push(chunk);
             }
         }
+        let mut job_fns = Vec::with_capacity(n_chunks);
+        for ((k_chunk, g_chunk), w) in
+            k_chunks.into_iter().zip(grad_chunks).zip(bounds.windows(2))
+        {
+            let (r0, r1) = (w[0], w[1]);
+            job_fns.push(move || {
+                let mut g_chunk = g_chunk;
+                let mut prep = model.kernel.prepare(theta);
+                let mut g = vec![0.0; m];
+                // diagonal: dt = 0, same for every row
+                let vd = prep.value_grad(0.0, &mut g);
+                let diag = vd + model.noise_variance();
+                let g_diag = g.clone();
+                // fill the upper-triangle rows with contiguous writes;
+                // mirroring happens in a cache-blocked pass afterwards —
+                // writing (j,i) inside the pair loop strides a full row
+                // per store and collapses throughput ~8× at n ≈ 2000
+                // (EXPERIMENTS.md §Perf).
+                for i in r0..r1 {
+                    let base = (i - r0) * n;
+                    k_chunk[base + i] = diag;
+                    for (a, gm) in g_chunk.iter_mut().enumerate() {
+                        gm[base + i] = g_diag[a];
+                    }
+                    for j in (i + 1)..n {
+                        let v = prep.value_grad(t[i] - t[j], &mut g);
+                        k_chunk[base + j] = v;
+                        for (a, gm) in g_chunk.iter_mut().enumerate() {
+                            gm[base + j] = g[a];
+                        }
+                    }
+                }
+            });
+        }
+        ctx.run_jobs(job_fns);
     }
-    mirror_upper(&mut k);
+    k.mirror_upper_to_lower();
     for gmat in &mut grads {
-        mirror_upper(gmat);
+        gmat.mirror_upper_to_lower();
     }
     (k, grads)
 }
 
-/// Copy the strict upper triangle onto the lower one, in `B×B` blocks so
-/// both source rows and destination rows stay cache-resident.
-pub(crate) fn mirror_upper(m: &mut Matrix) {
-    const B: usize = 64;
-    let n = m.rows();
-    let data = m.as_mut_slice();
-    let mut bi = 0;
-    while bi < n {
-        let i_end = (bi + B).min(n);
-        let mut bj = bi;
-        while bj < n {
-            let j_end = (bj + B).min(n);
-            for i in bi..i_end {
-                let j0 = bj.max(i + 1);
-                for j in j0..j_end {
-                    data[j * n + i] = data[i * n + j];
-                }
-            }
-            bj += B;
-        }
-        bi += B;
-    }
-}
-
 /// Stream the per-pair kernel Hessians `∂²k̃/∂ϑ_a∂ϑ_b (t_i − t_j)` into the
-/// two contractions the profiled Hessian (eq. 2.19) needs:
+/// two contractions the profiled Hessian (eq. 2.19) needs (serial):
 ///
 /// * `A_ab = αᵀ (∂²K̃/∂ϑ_a∂ϑ_b) α`
 /// * `B_ab = Tr(W · ∂²K̃/∂ϑ_a∂ϑ_b)`
@@ -106,37 +162,78 @@ pub fn hessian_contractions(
     alpha: &[f64],
     w: &Matrix,
 ) -> (Matrix, Matrix) {
+    hessian_contractions_with(model, t, theta, alpha, w, &ExecutionContext::seq())
+}
+
+/// Hessian contractions with the pair sweep partitioned over row tiles;
+/// each worker accumulates private `m×m` partials which are folded in
+/// tile order (per-thread-count deterministic, equal to serial to
+/// rounding).
+pub fn hessian_contractions_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    theta: &[f64],
+    alpha: &[f64],
+    w: &Matrix,
+    ctx: &ExecutionContext,
+) -> (Matrix, Matrix) {
     let n = t.len();
     let m = model.dim();
     assert_eq!(alpha.len(), n);
     assert_eq!((w.rows(), w.cols()), (n, n));
-    let mut prep = model.kernel.prepare(theta);
-    let mut g = vec![0.0; m];
-    let mut h = vec![0.0; m * m];
     let mut a_c = Matrix::zeros(m, m);
     let mut b_c = Matrix::zeros(m, m);
     // diagonal pairs (dt = 0): weight 1 each
-    prep.value_grad_hess(0.0, &mut g, &mut h);
-    let diag_alpha: f64 = alpha.iter().map(|x| x * x).sum();
-    let diag_w: f64 = (0..n).map(|i| w[(i, i)]).sum();
-    for a in 0..m {
-        for b in 0..m {
-            a_c[(a, b)] += diag_alpha * h[a * m + b];
-            b_c[(a, b)] += diag_w * h[a * m + b];
+    {
+        let mut prep = model.kernel.prepare(theta);
+        let mut g = vec![0.0; m];
+        let mut h = vec![0.0; m * m];
+        prep.value_grad_hess(0.0, &mut g, &mut h);
+        let diag_alpha: f64 = alpha.iter().map(|x| x * x).sum();
+        let diag_w: f64 = (0..n).map(|i| w[(i, i)]).sum();
+        for a in 0..m {
+            for b in 0..m {
+                a_c[(a, b)] += diag_alpha * h[a * m + b];
+                b_c[(a, b)] += diag_w * h[a * m + b];
+            }
         }
     }
-    // off-diagonal pairs: weight 2 (symmetry)
-    for i in 0..n {
-        for j in (i + 1)..n {
-            prep.value_grad_hess(t[i] - t[j], &mut g, &mut h);
-            let wa = 2.0 * alpha[i] * alpha[j];
-            let ww = 2.0 * w[(i, j)];
-            for a in 0..m {
-                for b in a..m {
-                    let hv = h[a * m + b];
-                    a_c[(a, b)] += wa * hv;
-                    b_c[(a, b)] += ww * hv;
+    // off-diagonal pairs: weight 2 (symmetry), row tiles in parallel
+    let jobs = assembly_jobs(n, ctx);
+    let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
+    let n_chunks = bounds.len() - 1;
+    let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..n_chunks).map(|_| (vec![0.0; m * m], vec![0.0; m * m])).collect();
+    let mut job_fns = Vec::with_capacity(n_chunks);
+    for (slot, wnd) in partials.iter_mut().zip(bounds.windows(2)) {
+        let (r0, r1) = (wnd[0], wnd[1]);
+        job_fns.push(move || {
+            let (a_part, b_part) = slot;
+            let mut prep = model.kernel.prepare(theta);
+            let mut g = vec![0.0; m];
+            let mut h = vec![0.0; m * m];
+            for i in r0..r1 {
+                for j in (i + 1)..n {
+                    prep.value_grad_hess(t[i] - t[j], &mut g, &mut h);
+                    let wa = 2.0 * alpha[i] * alpha[j];
+                    let ww = 2.0 * w[(i, j)];
+                    for a in 0..m {
+                        for b in a..m {
+                            let hv = h[a * m + b];
+                            a_part[a * m + b] += wa * hv;
+                            b_part[a * m + b] += ww * hv;
+                        }
+                    }
                 }
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+    for (a_part, b_part) in &partials {
+        for a in 0..m {
+            for b in a..m {
+                a_c[(a, b)] += a_part[a * m + b];
+                b_c[(a, b)] += b_part[a * m + b];
             }
         }
     }
@@ -180,6 +277,28 @@ mod tests {
         let t = grid(60);
         let k = assemble_cov(&model, &t, &PaperK1::truth());
         assert!(Chol::factor(&k).is_ok());
+    }
+
+    #[test]
+    fn parallel_assembly_is_bit_identical() {
+        let model = paper_k1(0.1);
+        // straddle the PAR_MIN_N dispatch cutoff
+        for n in [40usize, 63, 64, 65, 130] {
+            let t = grid(n);
+            let theta = PaperK1::truth();
+            let k_s = assemble_cov(&model, &t, &theta);
+            let (kg_s, g_s) = assemble_cov_grads(&model, &t, &theta);
+            for threads in [2usize, 4] {
+                let ctx = ExecutionContext::new(threads);
+                let k_p = assemble_cov_with(&model, &t, &theta, &ctx);
+                assert_eq!(k_p.max_abs_diff(&k_s), 0.0, "n={n} threads={threads}");
+                let (kg_p, g_p) = assemble_cov_grads_with(&model, &t, &theta, &ctx);
+                assert_eq!(kg_p.max_abs_diff(&kg_s), 0.0);
+                for (a, (gp, gs)) in g_p.iter().zip(&g_s).enumerate() {
+                    assert_eq!(gp.max_abs_diff(gs), 0.0, "n={n} grad[{a}]");
+                }
+            }
+        }
     }
 
     #[test]
@@ -245,5 +364,29 @@ mod tests {
         }
         assert!(a_c.max_abs_diff(&a_ref) < 1e-10, "A: {}", a_c.max_abs_diff(&a_ref));
         assert!(b_c.max_abs_diff(&b_ref) < 1e-10, "B: {}", b_c.max_abs_diff(&b_ref));
+    }
+
+    #[test]
+    fn parallel_contractions_match_serial_to_rounding() {
+        let model = paper_k1(0.1);
+        let n = 90;
+        let t = grid(n);
+        let theta = PaperK1::truth();
+        let alpha: Vec<f64> = (0..n).map(|i| (i as f64 * 0.51).cos()).collect();
+        let mut w = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                w[(i, j)] = 1.0 / (1.0 + (i as f64 - j as f64).abs());
+            }
+        }
+        let (a_s, b_s) = hessian_contractions(&model, &t, &theta, &alpha, &w);
+        for threads in [2usize, 4] {
+            let ctx = ExecutionContext::new(threads);
+            let (a_p, b_p) = hessian_contractions_with(&model, &t, &theta, &alpha, &w, &ctx);
+            let scale = a_s.fro_norm().max(1.0);
+            assert!(a_p.max_abs_diff(&a_s) < 1e-12 * scale, "A threads={threads}");
+            let scale = b_s.fro_norm().max(1.0);
+            assert!(b_p.max_abs_diff(&b_s) < 1e-12 * scale, "B threads={threads}");
+        }
     }
 }

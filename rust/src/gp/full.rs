@@ -9,57 +9,78 @@
 //! `∂ln P/∂ϑ_a = ½ e^{−2λ} q_a − ½ Tr(W ∂_aK̃)`
 //!
 //! Used by the nested-sampling baseline (each live point carries its own
-//! σ_f) and by the σ_f-profiling ablation benchmark.
+//! σ_f) and by the σ_f-profiling ablation benchmark. Shares the parallel
+//! contraction kernels of [`super::profiled`]; `*_with` variants thread
+//! an [`ExecutionContext`] through every stage.
 
 use crate::kernels::CovarianceModel;
-use crate::linalg::{dot, Matrix};
+use crate::linalg::Matrix;
 use crate::math::LN_2PI;
+use crate::runtime::ExecutionContext;
 
-use super::assemble::{assemble_cov_grads, hessian_contractions};
-use super::profiled::ProfiledEval;
+use super::assemble::{assemble_cov_grads_with, hessian_contractions_with};
+use super::profiled::{pairwise_d2_with, quad_and_trace_with, ProfiledEval};
 
-/// `ln P(y | x, [λ, ϑ])` — eq. (2.5).
+/// `ln P(y | x, [λ, ϑ])` — eq. (2.5), serial.
 pub fn full_lnp(
     model: &CovarianceModel,
     t: &[f64],
     y: &[f64],
     theta_full: &[f64],
 ) -> crate::Result<f64> {
+    full_lnp_with(model, t, y, theta_full, &ExecutionContext::seq())
+}
+
+/// `ln P` with parallel assembly and factorisation.
+pub fn full_lnp_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta_full: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<f64> {
     let (lambda, theta) = split(model, theta_full)?;
-    let ev = super::profiled::eval(model, t, y, theta)?;
+    let ev = super::profiled::eval_with(model, t, y, theta, ctx)?;
     Ok(lnp_from_eval(&ev, y.len(), lambda))
 }
 
-/// `ln P` and its gradient `[∂λ, ∂ϑ…]` — eq. (2.7) in (λ, ϑ) coordinates.
+/// `ln P` and its gradient `[∂λ, ∂ϑ…]` — eq. (2.7) in (λ, ϑ) coordinates,
+/// serial.
 pub fn full_lnp_grad(
     model: &CovarianceModel,
     t: &[f64],
     y: &[f64],
     theta_full: &[f64],
 ) -> crate::Result<(f64, Vec<f64>)> {
+    full_lnp_grad_with(model, t, y, theta_full, &ExecutionContext::seq())
+}
+
+/// `ln P` and gradient with every stage parallel.
+pub fn full_lnp_grad_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta_full: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<(f64, Vec<f64>)> {
     let (lambda, theta) = split(model, theta_full)?;
     let n = y.len();
-    let (k, grads) = assemble_cov_grads(model, t, theta);
-    let ev = ProfiledEval::from_cov(k, y)?;
-    let w = ev.inverse();
+    let (k, grads) = assemble_cov_grads_with(model, t, theta, ctx);
+    let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+    let w = ev.inverse_with(ctx);
     let e2 = (-2.0 * lambda).exp();
     let q_total = n as f64 * ev.sigma_f_hat2; // yᵀK̃⁻¹y
     let mut g = Vec::with_capacity(model.dim() + 1);
     g.push(e2 * q_total - n as f64);
     for dk in &grads {
-        let va = dk.matvec(&ev.alpha);
-        let qa = dot(&ev.alpha, &va);
-        let mut tr = 0.0;
-        for i in 0..n {
-            tr += dot(w.row(i), dk.row(i));
-        }
+        let (qa, tr) = quad_and_trace_with(dk, &ev.alpha, &w, ctx);
         g.push(0.5 * e2 * qa - 0.5 * tr);
     }
     Ok((lnp_from_eval(&ev, n, lambda), g))
 }
 
 /// Hessian `H = −∂²ln P/∂θ∂θ'` in (λ, ϑ) coordinates — eq. (2.9) plus the
-/// λ row/column:
+/// λ row/column (serial):
 ///
 /// `∂²ln P/∂λ²      = −2 e^{−2λ} Q`
 /// `∂²ln P/∂λ∂ϑ_a   = −e^{−2λ} q_a`
@@ -70,12 +91,23 @@ pub fn full_hessian(
     y: &[f64],
     theta_full: &[f64],
 ) -> crate::Result<Matrix> {
+    full_hessian_with(model, t, y, theta_full, &ExecutionContext::seq())
+}
+
+/// Hessian with the `W·∂K̃` products and trace pairs parallel.
+pub fn full_hessian_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta_full: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<Matrix> {
     let (lambda, theta) = split(model, theta_full)?;
     let m = model.dim();
     let n = y.len();
-    let (k, grads) = assemble_cov_grads(model, t, theta);
-    let ev = ProfiledEval::from_cov(k, y)?;
-    let w = ev.inverse();
+    let (k, grads) = assemble_cov_grads_with(model, t, theta, ctx);
+    let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+    let w = ev.inverse_with(ctx);
     let e2 = (-2.0 * lambda).exp();
     let q_total = n as f64 * ev.sigma_f_hat2;
 
@@ -84,11 +116,11 @@ pub fn full_hessian(
     let mut wm = Vec::with_capacity(m);
     for dk in &grads {
         let va = dk.matvec(&ev.alpha);
-        q.push(dot(&ev.alpha, &va));
+        q.push(crate::linalg::dot(&ev.alpha, &va));
         v.push(va);
-        wm.push(w.matmul(dk));
+        wm.push(w.matmul_with(dk, ctx));
     }
-    let (a_c, b_c) = hessian_contractions(model, t, theta, &ev.alpha, &w);
+    let (a_c, b_c) = hessian_contractions_with(model, t, theta, &ev.alpha, &w, ctx);
 
     let mut h = Matrix::zeros(m + 1, m + 1);
     h[(0, 0)] = 2.0 * e2 * q_total; // −∂²/∂λ²
@@ -97,20 +129,15 @@ pub fn full_hessian(
         h[(0, a + 1)] = val;
         h[(a + 1, 0)] = val;
     }
+    let d2 = pairwise_d2_with(n, m, &w, &wm, &v, ctx);
+    let mut idx = 0;
     for a in 0..m {
         for b in a..m {
-            let mut tr_ab = 0.0;
-            for i in 0..n {
-                let ra = wm[a].row(i);
-                for (j, raj) in ra.iter().enumerate() {
-                    tr_ab += raj * wm[b][(j, i)];
-                }
-            }
-            let wv_b = w.matvec(&v[b]);
-            let vwv = dot(&v[a], &wv_b);
-            let d2 = -0.5 * e2 * (2.0 * vwv - a_c[(a, b)]) + 0.5 * tr_ab - 0.5 * b_c[(a, b)];
-            h[(a + 1, b + 1)] = -d2;
-            h[(b + 1, a + 1)] = -d2;
+            let (tr_ab, vwv) = d2[idx];
+            idx += 1;
+            let val = -0.5 * e2 * (2.0 * vwv - a_c[(a, b)]) + 0.5 * tr_ab - 0.5 * b_c[(a, b)];
+            h[(a + 1, b + 1)] = -val;
+            h[(b + 1, a + 1)] = -val;
         }
     }
     Ok(h)
@@ -181,6 +208,20 @@ mod tests {
                 g[a]
             );
         }
+    }
+
+    #[test]
+    fn parallel_full_matches_serial() {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 100, &mut rng);
+        let mut tf = vec![0.1];
+        tf.extend(PaperK1::truth());
+        let (lnp_s, g_s) = full_lnp_grad(&model, &data.t, &data.y, &tf).unwrap();
+        let ctx = ExecutionContext::new(4);
+        let (lnp_p, g_p) = full_lnp_grad_with(&model, &data.t, &data.y, &tf, &ctx).unwrap();
+        assert_eq!(lnp_p, lnp_s);
+        assert_eq!(g_p, g_s);
     }
 
     #[test]

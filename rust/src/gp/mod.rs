@@ -21,8 +21,13 @@ pub mod full;
 pub mod predict;
 pub mod sample;
 
-pub use assemble::{assemble_cov, assemble_cov_grads, hessian_contractions};
-pub use full::{full_hessian, full_lnp, full_lnp_grad};
+pub use assemble::{
+    assemble_cov, assemble_cov_grads, assemble_cov_grads_with, assemble_cov_with,
+    hessian_contractions, hessian_contractions_with,
+};
+pub use full::{
+    full_hessian, full_hessian_with, full_lnp, full_lnp_grad, full_lnp_grad_with, full_lnp_with,
+};
 pub use predict::predict;
-pub use profiled::{marg_constant, profiled_hessian, ProfiledEval};
+pub use profiled::{marg_constant, profiled_hessian, profiled_hessian_with, ProfiledEval};
 pub use sample::draw_realisation;

@@ -10,12 +10,19 @@
 //! a Jeffreys prior instead of maximising gives the same function of ϑ up
 //! to the additive constant of eq. (2.18) ([`marg_constant`]), so both
 //! share gradients and Hessians.
+//!
+//! Every `*_with` entry point threads an [`ExecutionContext`] through the
+//! assembly, Cholesky, inverse and `O(n²)` contraction stages; the
+//! plain-named functions are the serial specialisations. Evaluations and
+//! gradients are bit-identical across thread counts (contractions reduce
+//! through per-row buffers summed in row order).
 
 use crate::kernels::CovarianceModel;
 use crate::linalg::{dot, Chol, Matrix};
 use crate::math::{lgamma, LN_2PI_E};
+use crate::runtime::exec::{even_bounds, split_rows_mut, ExecutionContext};
 
-use super::assemble::{assemble_cov_grads, hessian_contractions};
+use super::assemble::{assemble_cov_grads_with, assemble_cov_with, hessian_contractions_with};
 
 /// The per-ϑ products of one profiled-hyperlikelihood evaluation.
 pub struct ProfiledEval {
@@ -29,16 +36,66 @@ pub struct ProfiledEval {
     pub alpha: Vec<f64>,
 }
 
+/// Fill `out[i] = f(i)` for `i` in `0..out.len()`, row-parallel. The
+/// caller reduces `out` serially in index order, so any reduction built
+/// on top matches its serial double loop bit-for-bit.
+fn row_map_with<F>(out: &mut [f64], ctx: &ExecutionContext, f: F)
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let n = out.len();
+    let jobs = ctx.threads().min((n / 64).max(1));
+    let bounds = even_bounds(0, n, jobs);
+    let chunks = split_rows_mut(out, 1, &bounds);
+    let f = &f;
+    let mut job_fns = Vec::with_capacity(chunks.len());
+    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+        let (r0, r1) = (w[0], w[1]);
+        job_fns.push(move || {
+            for i in r0..r1 {
+                chunk[i - r0] = f(i);
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+}
+
+/// The eq.-2.17 ingredients for one derivative matrix:
+/// `q = αᵀ(∂K̃)α` and `tr = Tr(W ∂K̃)`.
+pub(crate) fn quad_and_trace_with(
+    dk: &Matrix,
+    alpha: &[f64],
+    w: &Matrix,
+    ctx: &ExecutionContext,
+) -> (f64, f64) {
+    let n = alpha.len();
+    let mut vbuf = vec![0.0; n];
+    row_map_with(&mut vbuf, ctx, |i| dot(dk.row(i), alpha));
+    let q = dot(alpha, &vbuf);
+    let mut trbuf = vec![0.0; n];
+    row_map_with(&mut trbuf, ctx, |i| dot(w.row(i), dk.row(i)));
+    let mut tr = 0.0;
+    for v in &trbuf {
+        tr += v;
+    }
+    (q, tr)
+}
+
 impl ProfiledEval {
-    /// Evaluate from an already-assembled covariance (consumed).
+    /// Evaluate from an already-assembled covariance (consumed), serial.
     ///
     /// This is the entry point used by both backends: the native path
     /// assembles `K̃` with [`super::assemble_cov`], the XLA path receives
     /// it from the AOT artifact.
     pub fn from_cov(k: Matrix, y: &[f64]) -> crate::Result<Self> {
+        Self::from_cov_with(k, y, &ExecutionContext::seq())
+    }
+
+    /// Evaluate from an assembled covariance with a parallel Cholesky.
+    pub fn from_cov_with(k: Matrix, y: &[f64], ctx: &ExecutionContext) -> crate::Result<Self> {
         let n = y.len();
         anyhow::ensure!(k.rows() == n, "covariance/data size mismatch");
-        let chol = Chol::factor_owned(k)?;
+        let chol = Chol::factor_owned_with(k, ctx)?;
         let alpha = chol.solve(y);
         let sigma_f_hat2 = dot(y, &alpha) / n as f64;
         anyhow::ensure!(
@@ -49,24 +106,22 @@ impl ProfiledEval {
         Ok(Self { lnp, sigma_f_hat2, chol, alpha })
     }
 
-    /// Gradient of `ln P_max` (eq. 2.17) given the assembled `∂K̃/∂ϑ_a`.
+    /// Gradient of `ln P_max` (eq. 2.17) given the assembled `∂K̃/∂ϑ_a`,
+    /// serial.
     ///
     /// `∂_a ln P_max = (1/2σ̂_f²) αᵀ(∂_aK̃)α − ½ Tr(K̃⁻¹ ∂_aK̃)`.
     ///
     /// The trace needs `W = K̃⁻¹`, which costs one extra `O(n³)` pass; pass
     /// the cached inverse in if you already have it.
     pub fn gradient(&self, grads: &[Matrix], w: &Matrix) -> Vec<f64> {
-        let n = self.alpha.len();
+        self.gradient_with(grads, w, &ExecutionContext::seq())
+    }
+
+    /// Gradient with the per-ϑ `O(n²)` contractions row-parallel.
+    pub fn gradient_with(&self, grads: &[Matrix], w: &Matrix, ctx: &ExecutionContext) -> Vec<f64> {
         let mut out = Vec::with_capacity(grads.len());
         for dk in grads {
-            // quadratic form αᵀ ∂K α
-            let v = dk.matvec(&self.alpha);
-            let q = dot(&self.alpha, &v);
-            // Tr(W ∂K) = Σ_ij W_ij ∂K_ij (both symmetric)
-            let mut tr = 0.0;
-            for i in 0..n {
-                tr += dot(w.row(i), dk.row(i));
-            }
+            let (q, tr) = quad_and_trace_with(dk, &self.alpha, w, ctx);
             out.push(0.5 * q / self.sigma_f_hat2 - 0.5 * tr);
         }
         out
@@ -76,34 +131,64 @@ impl ProfiledEval {
     pub fn inverse(&self) -> Matrix {
         self.chol.inverse()
     }
+
+    /// `W = K̃⁻¹` with both inversion stages row-parallel.
+    pub fn inverse_with(&self, ctx: &ExecutionContext) -> Matrix {
+        self.chol.inverse_with(ctx)
+    }
 }
 
-/// Evaluate `ln P_max` natively (assemble + factor).
+/// Evaluate `ln P_max` natively (assemble + factor), serial.
 pub fn eval(
     model: &CovarianceModel,
     t: &[f64],
     y: &[f64],
     theta: &[f64],
 ) -> crate::Result<ProfiledEval> {
-    let k = super::assemble_cov(model, t, theta);
-    ProfiledEval::from_cov(k, y)
+    eval_with(model, t, y, theta, &ExecutionContext::seq())
 }
 
-/// Evaluate `ln P_max` and its gradient natively.
+/// Evaluate `ln P_max` with parallel assembly and factorisation.
+pub fn eval_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<ProfiledEval> {
+    let k = assemble_cov_with(model, t, theta, ctx);
+    ProfiledEval::from_cov_with(k, y, ctx)
+}
+
+/// Evaluate `ln P_max` and its gradient natively, serial.
 pub fn eval_grad(
     model: &CovarianceModel,
     t: &[f64],
     y: &[f64],
     theta: &[f64],
 ) -> crate::Result<(ProfiledEval, Vec<f64>)> {
-    let (k, grads) = assemble_cov_grads(model, t, theta);
-    let ev = ProfiledEval::from_cov(k, y)?;
-    let w = ev.inverse();
-    let g = ev.gradient(&grads, &w);
+    eval_grad_with(model, t, y, theta, &ExecutionContext::seq())
+}
+
+/// Evaluate `ln P_max` and its gradient with every `O(n³)`/`O(n²)` stage
+/// parallel: assembly, Cholesky, the explicit inverse and the per-ϑ
+/// contractions.
+pub fn eval_grad_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<(ProfiledEval, Vec<f64>)> {
+    let (k, grads) = assemble_cov_grads_with(model, t, theta, ctx);
+    let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+    let w = ev.inverse_with(ctx);
+    let g = ev.gradient_with(&grads, &w, ctx);
     Ok((ev, g))
 }
 
-/// The Hessian `H = −∂²ln P_max/∂ϑ∂ϑ'` at (or near) the peak — eq. (2.19).
+/// The Hessian `H = −∂²ln P_max/∂ϑ∂ϑ'` at (or near) the peak — eq. (2.19),
+/// serial.
 ///
 /// `∂_a∂_b ln P_max = q_a q_b/(2nσ̂⁴) − (2 v_aᵀW v_b − A_ab)/(2σ̂²)
 ///                    + ½Tr(W∂_aK̃ W∂_bK̃) − ½B_ab`
@@ -119,11 +204,23 @@ pub fn profiled_hessian(
     y: &[f64],
     theta: &[f64],
 ) -> crate::Result<Matrix> {
+    profiled_hessian_with(model, t, y, theta, &ExecutionContext::seq())
+}
+
+/// Hessian with the dominant `W·∂_aK̃` products row-parallel and the
+/// `(a,b)` trace pairs distributed over the context.
+pub fn profiled_hessian_with(
+    model: &CovarianceModel,
+    t: &[f64],
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<Matrix> {
     let m = model.dim();
     let n = y.len();
-    let (k, grads) = assemble_cov_grads(model, t, theta);
-    let ev = ProfiledEval::from_cov(k, y)?;
-    let w = ev.inverse();
+    let (k, grads) = assemble_cov_grads_with(model, t, theta, ctx);
+    let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+    let w = ev.inverse_with(ctx);
     let s2 = ev.sigma_f_hat2;
 
     // v_a = ∂K α, q_a = αᵀ v_a, and the W-products M_a = W ∂K
@@ -134,33 +231,70 @@ pub fn profiled_hessian(
         let va = dk.matvec(&ev.alpha);
         q.push(dot(&ev.alpha, &va));
         v.push(va);
-        wm.push(w.matmul(dk));
+        wm.push(w.matmul_with(dk, ctx));
     }
-    let (a_c, b_c) = hessian_contractions(model, t, theta, &ev.alpha, &w);
+    let (a_c, b_c) = hessian_contractions_with(model, t, theta, &ev.alpha, &w, ctx);
 
+    let d2 = pairwise_d2_with(n, m, &w, &wm, &v, ctx);
     let mut h = Matrix::zeros(m, m);
+    let mut idx = 0;
     for a in 0..m {
         for b in a..m {
-            // Tr(M_a M_b) = Σ_ij M_a[i,j] M_b[j,i]
-            let mut tr_ab = 0.0;
-            for i in 0..n {
-                let ra = wm[a].row(i);
-                for (j, raj) in ra.iter().enumerate() {
-                    tr_ab += raj * wm[b][(j, i)];
-                }
-            }
-            // v_aᵀ W v_b
-            let wv_b = w.matvec(&v[b]);
-            let vwv = dot(&v[a], &wv_b);
-            let d2 = q[a] * q[b] / (2.0 * n as f64 * s2 * s2)
+            let (tr_ab, vwv) = d2[idx];
+            idx += 1;
+            let val = q[a] * q[b] / (2.0 * n as f64 * s2 * s2)
                 - (2.0 * vwv - a_c[(a, b)]) / (2.0 * s2)
                 + 0.5 * tr_ab
                 - 0.5 * b_c[(a, b)];
-            h[(a, b)] = -d2;
-            h[(b, a)] = -d2;
+            h[(a, b)] = -val;
+            h[(b, a)] = -val;
         }
     }
     Ok(h)
+}
+
+/// For each Hessian pair `(a, b)` with `b ≥ a`, compute
+/// `Tr(M_a M_b)` and `v_aᵀ W v_b` — `O(n²)` each — with the pairs
+/// distributed over the context's threads.
+pub(crate) fn pairwise_d2_with(
+    n: usize,
+    m: usize,
+    w: &Matrix,
+    wm: &[Matrix],
+    v: &[Vec<f64>],
+    ctx: &ExecutionContext,
+) -> Vec<(f64, f64)> {
+    let pairs: Vec<(usize, usize)> =
+        (0..m).flat_map(|a| (a..m).map(move |b| (a, b))).collect();
+    let n_pairs = pairs.len();
+    let mut out = vec![(0.0, 0.0); n_pairs];
+    let jobs = ctx.threads().min(n_pairs.max(1));
+    let bounds = even_bounds(0, n_pairs, jobs);
+    let chunks = split_rows_mut(&mut out, 1, &bounds);
+    let pairs_ref = &pairs;
+    let mut job_fns = Vec::with_capacity(chunks.len());
+    for (chunk, wnd) in chunks.into_iter().zip(bounds.windows(2)) {
+        let (p0, p1) = (wnd[0], wnd[1]);
+        job_fns.push(move || {
+            for p in p0..p1 {
+                let (a, b) = pairs_ref[p];
+                // Tr(M_a M_b) = Σ_ij M_a[i,j] M_b[j,i]
+                let mut tr_ab = 0.0;
+                for i in 0..n {
+                    let ra = wm[a].row(i);
+                    for (j, raj) in ra.iter().enumerate() {
+                        tr_ab += raj * wm[b][(j, i)];
+                    }
+                }
+                // v_aᵀ W v_b
+                let wv_b = w.matvec(&v[b]);
+                let vwv = dot(&v[a], &wv_b);
+                chunk[p - p0] = (tr_ab, vwv);
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+    out
 }
 
 /// The additive constant converting `ln P_max` into the σ_f-marginalised
@@ -249,6 +383,22 @@ mod tests {
                 "grad[{a}]: analytic {} vs FD {fd}",
                 g[a]
             );
+        }
+    }
+
+    #[test]
+    fn parallel_eval_grad_is_bit_identical() {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 120, &mut rng);
+        let theta = PaperK1::truth();
+        let (ev_s, g_s) = eval_grad(&model, &data.t, &data.y, &theta).unwrap();
+        for threads in [2usize, 4] {
+            let ctx = ExecutionContext::new(threads);
+            let (ev_p, g_p) = eval_grad_with(&model, &data.t, &data.y, &theta, &ctx).unwrap();
+            assert_eq!(ev_p.lnp, ev_s.lnp, "threads={threads}");
+            assert_eq!(ev_p.sigma_f_hat2, ev_s.sigma_f_hat2);
+            assert_eq!(g_p, g_s, "threads={threads}");
         }
     }
 

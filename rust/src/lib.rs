@@ -24,10 +24,34 @@
 //! The crate is the **layer-3 coordinator** of a three-layer stack:
 //! a Pallas kernel (layer 1) and a JAX compute graph (layer 2) are
 //! AOT-lowered at build time (`make artifacts`) to HLO text which the
-//! [`runtime`] module loads and executes through the PJRT C API; Python is
-//! never on the request path. A pure-rust [`runtime::NativeBackend`]
-//! implements the same interface so the whole system also runs without
-//! artifacts, and the two are cross-checked in the test suite.
+//! [`runtime`] module loads and executes through the PJRT C API (behind
+//! the `xla` cargo feature); Python is never on the request path. A
+//! pure-rust [`runtime::NativeBackend`] implements the same interface so
+//! the whole system also runs without artifacts, and the two are
+//! cross-checked in the test suite.
+//!
+//! ### Parallel execution layer
+//!
+//! Every hot path — the `O(n³)` blocked Cholesky, the `O(n² m)`
+//! covariance/derivative assembly, the explicit inverse, and the `O(n²)`
+//! gradient/Hessian contractions — is row-tile parallel behind
+//! [`runtime::ExecutionContext`], a cheap cloneable thread-budget handle
+//! over scoped std threads (no rayon). The `*_with(…, ctx)` entry points
+//! take the context; the plain-named functions are the serial
+//! specialisations. Thread count comes from the `GPFAST_THREADS` env
+//! var, the `[runtime] threads` config key, or the machine default.
+//!
+//! **Oversubscription rule:** nested layers *split* the budget — when the
+//! multistart coordinator fans `w` restarts across its worker pool, each
+//! restart's linalg receives `ctx.split(w)` threads, so outer × inner
+//! parallelism never exceeds the configured budget (see
+//! [`runtime::exec`]).
+//!
+//! **Determinism:** parallel kernels preserve the serial per-element
+//! arithmetic order (reductions go through per-row buffers summed in row
+//! order), so factors, assembled matrices, likelihoods and gradients are
+//! bit-identical for any thread count — asserted in
+//! `rust/tests/parallel_equivalence.rs`.
 //!
 //! ## Quick start
 //!

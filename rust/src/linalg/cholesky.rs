@@ -7,13 +7,30 @@
 //! trailing update is where ~all the FLOPs are; it is written as a
 //! register-blocked `C -= A Bᵀ` micro-kernel over row-major storage that
 //! the compiler auto-vectorises.
+//!
+//! ## Parallelism
+//!
+//! With a multi-thread [`ExecutionContext`], the panel TRSM and the
+//! trailing SYRK are partitioned over **row tiles** of the trailing
+//! submatrix (SYRK tiles weighted by their triangular cost). The solved
+//! panel is first copied into a contiguous scratch buffer so that every
+//! worker writes only its own rows while reading the shared panel — the
+//! disjointness is expressed through `split_at_mut`, no `unsafe`. Small
+//! trailing blocks (and hence small `n`) stay on the serial path; both
+//! paths perform the identical per-entry arithmetic, so the factor is
+//! **bit-identical** for any thread count.
 
 use super::{solve_lower, solve_lower_transpose, Matrix};
+use crate::runtime::exec::{even_bounds, split_rows_mut, weighted_bounds, ExecutionContext};
 use std::fmt;
 
 /// Block size for the panel factorisation. 48–96 all perform similarly on
 /// the benchmark machine; 64 keeps the panel (64·n doubles) in L2.
 const NB: usize = 64;
+
+/// Minimum trailing rows per worker before a parallel dispatch pays for
+/// its scoped-thread spawns.
+const PAR_MIN_ROWS: usize = 48;
 
 /// Error: matrix was not positive definite.
 #[derive(Debug, Clone, Copy)]
@@ -46,24 +63,27 @@ pub struct Chol {
 }
 
 impl Chol {
-    /// Factor a symmetric positive-definite matrix.
+    /// Factor a symmetric positive-definite matrix (serial).
     ///
     /// Only the lower triangle of `k` is read.
     pub fn factor(k: &Matrix) -> Result<Self, CholError> {
-        let mut l = k.clone();
-        factor_in_place(&mut l)?;
-        let n = l.rows();
-        let mut logdet = 0.0;
-        for i in 0..n {
-            logdet += l[(i, i)].ln();
-        }
-        Ok(Self { l, logdet: 2.0 * logdet })
+        Self::factor_with(k, &ExecutionContext::seq())
+    }
+
+    /// Factor with an explicit thread budget.
+    pub fn factor_with(k: &Matrix, ctx: &ExecutionContext) -> Result<Self, CholError> {
+        Self::factor_owned_with(k.clone(), ctx)
     }
 
     /// Factor, consuming the input matrix (no copy) — used on the hot path
     /// where the covariance buffer is rebuilt every iteration anyway.
-    pub fn factor_owned(mut k: Matrix) -> Result<Self, CholError> {
-        factor_in_place(&mut k)?;
+    pub fn factor_owned(k: Matrix) -> Result<Self, CholError> {
+        Self::factor_owned_with(k, &ExecutionContext::seq())
+    }
+
+    /// Owned factorisation with an explicit thread budget.
+    pub fn factor_owned_with(mut k: Matrix, ctx: &ExecutionContext) -> Result<Self, CholError> {
+        factor_in_place_ctx(&mut k, ctx)?;
         let n = k.rows();
         let mut logdet = 0.0;
         for i in 0..n {
@@ -110,22 +130,43 @@ impl Chol {
 
     /// Solve `K X = B` for a multi-column right-hand side, column-blocked.
     pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        self.solve_mat_with(b, &ExecutionContext::seq())
+    }
+
+    /// Multi-RHS solve with the columns distributed over the context's
+    /// threads (each column's two triangular sweeps are independent).
+    pub fn solve_mat_with(&self, b: &Matrix, ctx: &ExecutionContext) -> Matrix {
         assert_eq!(b.rows(), self.dim());
         let n = self.dim();
         let m = b.cols();
         // Work column-major for solve locality: transpose, solve rows, undo.
         let bt = b.transpose();
         let mut out = Matrix::zeros(m, n);
-        for c in 0..m {
-            let mut x = bt.row(c).to_vec();
-            solve_lower(&self.l, &mut x);
-            solve_lower_transpose(&self.l, &mut x);
-            out.row_mut(c).copy_from_slice(&x);
+        // below ~256 a column's two O(n²) sweeps are µs-scale — spawning
+        // threads costs more than it saves (same dispatch-cutoff idea as
+        // the factorisation's PAR_MIN_ROWS)
+        let jobs = if n < 256 { 1 } else { ctx.threads().min(m.max(1)) };
+        let bounds = even_bounds(0, m, jobs);
+        let chunks = split_rows_mut(out.as_mut_slice(), n, &bounds);
+        let l = &self.l;
+        let bt_ref = &bt;
+        let mut job_fns = Vec::with_capacity(chunks.len());
+        for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+            let (c0, c1) = (w[0], w[1]);
+            job_fns.push(move || {
+                for c in c0..c1 {
+                    let row = &mut chunk[(c - c0) * n..(c - c0 + 1) * n];
+                    row.copy_from_slice(bt_ref.row(c));
+                    solve_lower(l, row);
+                    solve_lower_transpose(l, row);
+                }
+            });
         }
+        ctx.run_jobs(job_fns);
         out.transpose()
     }
 
-    /// Explicit inverse `K⁻¹ = L⁻ᵀ L⁻¹` (dpotri-style).
+    /// Explicit inverse `K⁻¹ = L⁻ᵀ L⁻¹` (dpotri-style, serial).
     ///
     /// Perf note (EXPERIMENTS.md §Perf): this used to solve `K X = I`
     /// column by column (≈ 2n³ flops, column-strided access). It now does
@@ -134,39 +175,73 @@ impl Chol {
     /// product `W_ab = Σ_k U_ak U_bk`, for ≈ n³/2 flops total with
     /// sequential access. ~5× faster at n ≈ 2000.
     pub fn inverse(&self) -> Matrix {
+        self.inverse_with(&ExecutionContext::seq())
+    }
+
+    /// Explicit inverse with both `O(n³)` stages row-parallel: every row
+    /// of `U` depends only on `L`, and every row of the symmetric product
+    /// depends only on `U`, so each stage partitions its output rows
+    /// (weighted by their triangular cost) across the context.
+    pub fn inverse_with(&self, ctx: &ExecutionContext) -> Matrix {
         let n = self.dim();
         let c = self.l.cols();
         let ld = self.l.as_slice();
+        let jobs = ctx.threads().min((n / PAR_MIN_ROWS).max(1));
         // U[j][i] = (L⁻¹)[i][j] for i ≥ j (row-major upper triangle):
         //   U[j][j] = 1/L[j][j]
         //   U[j][i] = −(Σ_{k=j}^{i−1} L[i][k] U[j][k]) / L[i][i]
         let mut u = Matrix::zeros(n, n);
-        for j in 0..n {
-            let urow = u.row_mut(j);
-            urow[j] = 1.0 / ld[j * c + j];
-            for i in (j + 1)..n {
-                let lrow = &ld[i * c..i * c + i];
-                let mut acc = 0.0;
-                for k in j..i {
-                    acc += lrow[k] * urow[k];
-                }
-                urow[i] = -acc / ld[i * c + i];
+        {
+            let bounds = weighted_bounds(0, n, jobs, |j| ((n - j) as f64) * ((n - j) as f64));
+            let chunks = split_rows_mut(u.as_mut_slice(), n, &bounds);
+            let mut job_fns = Vec::with_capacity(chunks.len());
+            for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+                let (r0, r1) = (w[0], w[1]);
+                job_fns.push(move || {
+                    for j in r0..r1 {
+                        let urow = &mut chunk[(j - r0) * n..(j - r0 + 1) * n];
+                        urow[j] = 1.0 / ld[j * c + j];
+                        for i in (j + 1)..n {
+                            let lrow = &ld[i * c..i * c + i];
+                            let mut acc = 0.0;
+                            for k in j..i {
+                                acc += lrow[k] * urow[k];
+                            }
+                            urow[i] = -acc / ld[i * c + i];
+                        }
+                    }
+                });
             }
+            ctx.run_jobs(job_fns);
         }
-        // W[a][b] = Σ_{k ≥ max(a,b)} U[a][k] U[b][k]
+        // W[a][b] = Σ_{k ≥ max(a,b)} U[a][k] U[b][k]; fill the upper
+        // triangle row-parallel, then mirror.
         let mut w = Matrix::zeros(n, n);
-        for a in 0..n {
-            for b in a..n {
-                let ua = u.row(a);
-                let ub = u.row(b);
-                let mut acc = 0.0;
-                for k in b..n {
-                    acc += ua[k] * ub[k];
-                }
-                w[(a, b)] = acc;
-                w[(b, a)] = acc;
+        {
+            let u_ref = &u;
+            let bounds = weighted_bounds(0, n, jobs, |a| ((n - a) as f64) * ((n - a) as f64));
+            let chunks = split_rows_mut(w.as_mut_slice(), n, &bounds);
+            let mut job_fns = Vec::with_capacity(chunks.len());
+            for (chunk, wnd) in chunks.into_iter().zip(bounds.windows(2)) {
+                let (r0, r1) = (wnd[0], wnd[1]);
+                job_fns.push(move || {
+                    for a in r0..r1 {
+                        let wrow = &mut chunk[(a - r0) * n..(a - r0 + 1) * n];
+                        let ua = u_ref.row(a);
+                        for b in a..n {
+                            let ub = u_ref.row(b);
+                            let mut acc = 0.0;
+                            for k in b..n {
+                                acc += ua[k] * ub[k];
+                            }
+                            wrow[b] = acc;
+                        }
+                    }
+                });
             }
+            ctx.run_jobs(job_fns);
         }
+        w.mirror_upper_to_lower();
         w
     }
 }
@@ -271,10 +346,94 @@ fn trailing_syrk(a: &mut Matrix, off: usize, nb: usize, t0: usize, n: usize) {
     }
 }
 
-/// In-place blocked lower Cholesky. Only the lower triangle is referenced.
-pub(crate) fn factor_in_place(a: &mut Matrix) -> Result<(), CholError> {
+/// Parallel panel TRSM: the trailing rows are split evenly across jobs;
+/// each job solves its rows against the (read-only) diagonal block and
+/// additionally writes the solved `nb` values into its slice of the
+/// contiguous `panel` scratch (consumed by [`par_syrk`]).
+fn par_trsm(
+    a: &mut Matrix,
+    off: usize,
+    nb: usize,
+    t0: usize,
+    n: usize,
+    ctx: &ExecutionContext,
+    jobs: usize,
+    panel: &mut [f64],
+) {
+    let c = a.cols();
+    let bounds = even_bounds(t0, n, jobs);
+    let (head, tail) = a.as_mut_slice().split_at_mut(t0 * c);
+    let head: &[f64] = head;
+    let row_chunks = split_rows_mut(tail, c, &bounds);
+    let panel_chunks = split_rows_mut(panel, nb, &bounds);
+    let mut job_fns = Vec::with_capacity(row_chunks.len());
+    for ((chunk, pchunk), w) in row_chunks.into_iter().zip(panel_chunks).zip(bounds.windows(2)) {
+        let (r0, r1) = (w[0], w[1]);
+        job_fns.push(move || {
+            for lr in 0..(r1 - r0) {
+                let row = &mut chunk[lr * c..lr * c + c];
+                for j in off..off + nb {
+                    let lrow = j * c;
+                    let mut acc = 0.0;
+                    for k in off..j {
+                        acc += row[k] * head[lrow + k];
+                    }
+                    let v = (row[j] - acc) / head[lrow + j];
+                    row[j] = v;
+                    pchunk[lr * nb + (j - off)] = v;
+                }
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+}
+
+/// Parallel trailing SYRK: rows split by triangular cost; every job reads
+/// the shared solved panel and updates only its own rows.
+fn par_syrk(
+    a: &mut Matrix,
+    nb: usize,
+    t0: usize,
+    n: usize,
+    ctx: &ExecutionContext,
+    jobs: usize,
+    panel: &[f64],
+) {
+    let c = a.cols();
+    let bounds = weighted_bounds(t0, n, jobs, |i| (i - t0 + 1) as f64);
+    let (_, tail) = a.as_mut_slice().split_at_mut(t0 * c);
+    let chunks = split_rows_mut(tail, c, &bounds);
+    let mut job_fns = Vec::with_capacity(chunks.len());
+    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+        let (r0, r1) = (w[0], w[1]);
+        job_fns.push(move || {
+            for r in r0..r1 {
+                let lrow = (r - r0) * c;
+                let prow = (r - t0) * nb;
+                for j in t0..=r {
+                    let pj = (j - t0) * nb;
+                    let mut acc = 0.0;
+                    for k in 0..nb {
+                        acc += panel[prow + k] * panel[pj + k];
+                    }
+                    chunk[lrow + j] -= acc;
+                }
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+}
+
+/// In-place blocked lower Cholesky with the trailing update parallelised
+/// over the context (see the module docs for the tiling scheme). Only the
+/// lower triangle is referenced.
+pub(crate) fn factor_in_place_ctx(
+    a: &mut Matrix,
+    ctx: &ExecutionContext,
+) -> Result<(), CholError> {
     let n = a.rows();
     assert_eq!(n, a.cols(), "Cholesky requires a square matrix");
+    let mut panel: Vec<f64> = Vec::new();
     let mut off = 0;
     while off < n {
         let nb = NB.min(n - off);
@@ -282,10 +441,18 @@ pub(crate) fn factor_in_place(a: &mut Matrix) -> Result<(), CholError> {
         factor_unblocked(a, off, nb)?;
         let t0 = off + nb;
         if t0 < n {
-            // 2. solve the sub-diagonal panel against the diagonal block
-            panel_trsm(a, off, nb, t0, n);
-            // 3. rank-nb update of the trailing lower triangle
-            trailing_syrk(a, off, nb, t0, n);
+            let rows = n - t0;
+            let jobs = ctx.threads().min((rows / PAR_MIN_ROWS).max(1));
+            if jobs > 1 {
+                panel.resize(rows * nb, 0.0);
+                // 2. solve the sub-diagonal panel against the diagonal block
+                par_trsm(a, off, nb, t0, n, ctx, jobs, &mut panel);
+                // 3. rank-nb update of the trailing lower triangle
+                par_syrk(a, nb, t0, n, ctx, jobs, &panel);
+            } else {
+                panel_trsm(a, off, nb, t0, n);
+                trailing_syrk(a, off, nb, t0, n);
+            }
         }
         off = t0;
     }
@@ -357,6 +524,26 @@ mod tests {
     }
 
     #[test]
+    fn parallel_factor_is_bit_identical() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        // sizes straddling NB and the PAR_MIN_ROWS dispatch cutoff
+        for &n in &[40usize, 64, 65, 112, 113, 160, 200, 300] {
+            let k = random_spd(n, &mut rng);
+            let serial = Chol::factor(&k).unwrap();
+            for threads in [2usize, 3, 4] {
+                let ctx = ExecutionContext::new(threads);
+                let par = Chol::factor_with(&k, &ctx).unwrap();
+                assert_eq!(
+                    par.factor_matrix().max_abs_diff(serial.factor_matrix()),
+                    0.0,
+                    "n={n} threads={threads}: factor differs"
+                );
+                assert_eq!(par.logdet(), serial.logdet(), "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
     fn solve_residual() {
         let mut rng = Xoshiro256::seed_from_u64(23);
         for &n in &[3usize, 50, 120] {
@@ -403,11 +590,43 @@ mod tests {
     }
 
     #[test]
+    fn parallel_inverse_and_solve_mat_match_serial() {
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        for &n in &[60usize, 150] {
+            let k = random_spd(n, &mut rng);
+            let ch = Chol::factor(&k).unwrap();
+            let serial_inv = ch.inverse();
+            let mut b = Matrix::zeros(n, 5);
+            for i in 0..n {
+                for j in 0..5 {
+                    b[(i, j)] = rng.normal();
+                }
+            }
+            let serial_x = ch.solve_mat(&b);
+            for threads in [2usize, 4] {
+                let ctx = ExecutionContext::new(threads);
+                assert_eq!(ch.inverse_with(&ctx).max_abs_diff(&serial_inv), 0.0);
+                assert_eq!(ch.solve_mat_with(&b, &ctx).max_abs_diff(&serial_x), 0.0);
+            }
+        }
+    }
+
+    #[test]
     fn rejects_indefinite() {
         let k = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
         let err = Chol::factor(&k).unwrap_err();
         assert_eq!(err.pivot, 1);
         assert!(err.value <= 0.0);
+    }
+
+    #[test]
+    fn rejects_indefinite_in_parallel() {
+        // indefinite beyond the first block so the parallel path has run
+        let mut rng = Xoshiro256::seed_from_u64(47);
+        let mut k = random_spd(200, &mut rng);
+        k[(150, 150)] = -1e6;
+        let ctx = ExecutionContext::new(4);
+        assert!(Chol::factor_with(&k, &ctx).is_err());
     }
 
     #[test]

@@ -122,23 +122,44 @@ impl Matrix {
         y
     }
 
-    /// Dense matmul (used only in tests and small-m Hessian work).
+    /// Dense matmul (serial).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        self.matmul_with(other, &crate::runtime::ExecutionContext::seq())
+    }
+
+    /// Dense matmul with output rows distributed over the context's
+    /// threads. Each output row is produced entirely by one worker with
+    /// the same accumulation order as the serial kernel, so the product
+    /// is bit-identical for any thread count. Used by the `O(m n³)`
+    /// Hessian trace products `W·∂K̃`.
+    pub fn matmul_with(&self, other: &Matrix, ctx: &crate::runtime::ExecutionContext) -> Matrix {
         assert_eq!(self.cols, other.rows);
         let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let aik = self[(i, k)];
-                if aik == 0.0 {
-                    continue;
+        let oc = other.cols;
+        // one job per ≥32-row tile: tiny products stay on the caller
+        let jobs = ctx.threads().min((self.rows / 32).max(1));
+        let bounds = crate::runtime::exec::even_bounds(0, self.rows, jobs);
+        let chunks = crate::runtime::exec::split_rows_mut(out.as_mut_slice(), oc, &bounds);
+        let mut job_fns = Vec::with_capacity(chunks.len());
+        for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+            let (r0, r1) = (w[0], w[1]);
+            job_fns.push(move || {
+                for i in r0..r1 {
+                    let orow = &mut chunk[(i - r0) * oc..(i - r0 + 1) * oc];
+                    for k in 0..self.cols {
+                        let aik = self[(i, k)];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = other.row(k);
+                        for j in 0..oc {
+                            orow[j] += aik * brow[j];
+                        }
+                    }
                 }
-                let brow = other.row(k);
-                let orow = out.row_mut(i);
-                for j in 0..other.cols {
-                    orow[j] += aik * brow[j];
-                }
-            }
+            });
         }
+        ctx.run_jobs(job_fns);
         out
     }
 
@@ -163,6 +184,33 @@ impl Matrix {
                 self[(i, j)] = v;
                 self[(j, i)] = v;
             }
+        }
+    }
+
+    /// Copy the strict upper triangle onto the lower one, in `B×B` blocks
+    /// so both source rows and destination rows stay cache-resident.
+    /// Shared by covariance assembly and the Cholesky inverse, which
+    /// compute one triangle and mirror.
+    pub fn mirror_upper_to_lower(&mut self) {
+        const B: usize = 64;
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let data = self.as_mut_slice();
+        let mut bi = 0;
+        while bi < n {
+            let i_end = (bi + B).min(n);
+            let mut bj = bi;
+            while bj < n {
+                let j_end = (bj + B).min(n);
+                for i in bi..i_end {
+                    let j0 = bj.max(i + 1);
+                    for j in j0..j_end {
+                        data[j * n + i] = data[i * n + j];
+                    }
+                }
+                bj += B;
+            }
+            bi += B;
         }
     }
 

@@ -8,6 +8,13 @@
 //! solves, a Levinson–Durbin Toeplitz solver (the §3(b) footnote-7
 //! ablation), a small LU for Hessian determinants, and a Jacobi symmetric
 //! eigensolver for bounding ellipsoids in the nested sampler.
+//!
+//! The `O(n³)` kernels (`Chol::factor_with`, `Chol::inverse_with`,
+//! `Chol::solve_mat_with`, `Matrix::matmul_with`) accept an
+//! [`ExecutionContext`] and partition their work over row tiles; the
+//! plain-named entry points are the serial (`seq`) specialisations.
+//! Parallel results are bit-identical to serial ones — see
+//! `rust/tests/parallel_equivalence.rs`.
 
 mod matrix;
 mod cholesky;
@@ -18,6 +25,8 @@ mod eigen;
 
 pub use matrix::Matrix;
 pub use cholesky::{Chol, CholError};
+/// Re-exported here because the dense kernels take it as a parameter.
+pub use crate::runtime::ExecutionContext;
 pub use triangular::{solve_lower, solve_lower_transpose, solve_upper};
 pub use toeplitz::ToeplitzSolver;
 pub use lu::Lu;

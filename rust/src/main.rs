@@ -121,9 +121,11 @@ fn cmd_train(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let pipe = cfg.pipeline()?;
     let sw = Stopwatch::start();
-    let res = train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &mut rng)?;
+    let res =
+        train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &pipe.exec, &mut rng)?;
     let model = spec.build(cfg.sigma_n);
-    let hess = gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &res.theta_hat)?;
+    let hess =
+        gpfast::gp::profiled_hessian_with(&model, &data.t, &data.y, &res.theta_hat, &pipe.exec)?;
     let prior = BoxPrior::for_model(&model, &data.span());
     let ev = gpfast::evidence::laplace_evidence(
         data.len(),
@@ -156,6 +158,7 @@ fn cmd_nested(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     let scale = ScalePrior::default();
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let opts = NestedOptions { nlive: cfg.nlive, ..Default::default() };
+    let exec = cfg.exec();
     let sw = Stopwatch::start();
     let res = nested_sample(
         prior.dim() + 1,
@@ -164,7 +167,8 @@ fn cmd_nested(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
             let theta = prior.from_unit_cube(&u[1..]);
             let mut full = vec![lambda];
             full.extend(theta);
-            gpfast::gp::full_lnp(&model, &data.t, &data.y, &full).unwrap_or(f64::NEG_INFINITY)
+            gpfast::gp::full_lnp_with(&model, &data.t, &data.y, &full, &exec)
+                .unwrap_or(f64::NEG_INFINITY)
         },
         &opts,
         &mut rng,
@@ -236,9 +240,10 @@ fn cmd_predict(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     let spec = ModelSpec::parse(&args.get_or("model", "k2"))?;
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let pipe = cfg.pipeline()?;
-    let res = train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &mut rng)?;
+    let res =
+        train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &pipe.exec, &mut rng)?;
     let model = spec.build(cfg.sigma_n);
-    let ev = gpfast::gp::profiled::eval(&model, &data.t, &data.y, &res.theta_hat)?;
+    let ev = gpfast::gp::profiled::eval_with(&model, &data.t, &data.y, &res.theta_hat, &pipe.exec)?;
     let factor = args.get_usize("refine", 4)?;
     let n_star = data.len() * factor;
     let (t0, t1) = (data.t[0], *data.t.last().unwrap());

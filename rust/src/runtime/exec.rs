@@ -1,0 +1,280 @@
+//! The parallel execution layer: a cheap, cloneable thread-budget handle
+//! plus scoped-thread fan-out, shared by every hot path in the crate.
+//!
+//! No `rayon`/`tokio` in the offline image, so the crate carries its own
+//! primitives on `std::thread::scope`:
+//!
+//! * [`ExecutionContext`] — *how many threads may this call use?* It is a
+//!   plain budget (no persistent pool handle is needed: scoped threads
+//!   borrow stack data safely and the spawn cost — tens of µs — is
+//!   negligible against the `O(n³)`/`O(n² m)` regions it parallelises).
+//! * [`ExecutionContext::run_jobs`] — run a small vector of closures, one
+//!   scoped thread each (first job runs on the caller's thread). Callers
+//!   build **at most `threads()` jobs**; partition helpers below do the
+//!   chunk arithmetic.
+//!
+//! ## Oversubscription rule (nested parallelism)
+//!
+//! Outer fan-out (multistart restarts over the
+//! [`crate::coordinator::WorkerPool`]) and inner linalg parallelism must
+//! not multiply. The discipline is *borrowed slots*: a layer that fans out
+//! `w` ways hands each child `ctx.split(w)` — an integer division of the
+//! budget — so the total live-thread count never exceeds the configured
+//! budget. A context with one thread (`seq`) executes everything inline,
+//! with zero allocation or synchronisation.
+//!
+//! ## Determinism
+//!
+//! Every parallel kernel in the crate partitions *output* rows across
+//! jobs and keeps the per-element arithmetic order identical to the
+//! serial code; reductions go through per-row buffers summed in row
+//! order, or per-chunk partials folded in chunk order. Cholesky factors,
+//! assembled covariances and gradients are **bit-identical** for any
+//! thread count; see `rust/tests/parallel_equivalence.rs`.
+//!
+//! Thread count resolution: explicit [`ExecutionContext::new`] >
+//! `GPFAST_THREADS` env var > `std::thread::available_parallelism()`.
+
+/// Cloneable handle carrying the thread budget for one call tree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecutionContext {
+    threads: usize,
+}
+
+impl Default for ExecutionContext {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl ExecutionContext {
+    /// Single-threaded context: every `run_jobs` executes inline.
+    pub fn seq() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Context with an explicit thread budget (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Budget from the environment: `GPFAST_THREADS` if set and positive,
+    /// else the machine's available parallelism. A set-but-invalid value
+    /// (non-numeric, 0, negative) warns on stderr before falling back, so
+    /// a typo can't silently grab every core.
+    pub fn from_env() -> Self {
+        let threads = match std::env::var("GPFAST_THREADS") {
+            Ok(raw) => match raw.trim().parse::<usize>() {
+                Ok(t) if t > 0 => Some(t),
+                _ => {
+                    eprintln!(
+                        "gpfast: ignoring invalid GPFAST_THREADS={raw:?} \
+                         (want a positive integer); using machine parallelism"
+                    );
+                    None
+                }
+            },
+            Err(_) => None,
+        };
+        let threads = threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        });
+        Self::new(threads)
+    }
+
+    /// The thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when everything runs inline on the caller's thread.
+    pub fn is_seq(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Borrow at most `n` of this context's slots (never grows the budget).
+    pub fn with_threads(&self, n: usize) -> Self {
+        Self::new(n.min(self.threads))
+    }
+
+    /// The budget each of `ways` concurrent children may use — the
+    /// oversubscription rule for nested parallelism.
+    pub fn split(&self, ways: usize) -> Self {
+        Self::new(self.threads / ways.max(1))
+    }
+
+    /// Run `jobs`, each exactly once, on up to `jobs.len()` scoped
+    /// threads (the first job runs on the calling thread). With a `seq`
+    /// context or ≤ 1 job, runs everything inline in order. Panics in any
+    /// job propagate to the caller.
+    ///
+    /// Contract: callers submit at most [`Self::threads`] jobs; use the
+    /// partition helpers to size chunks.
+    pub fn run_jobs<F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send,
+    {
+        if self.threads <= 1 || jobs.len() <= 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut iter = jobs.into_iter();
+            let first = iter.next().expect("non-empty checked above");
+            let handles: Vec<_> = iter.map(|job| scope.spawn(job)).collect();
+            first();
+            for handle in handles {
+                if let Err(payload) = handle.join() {
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        });
+    }
+}
+
+/// Even partition of `lo..hi` into at most `k` non-empty chunks:
+/// ascending bounds starting at `lo` and ending at `hi`.
+pub fn even_bounds(lo: usize, hi: usize, k: usize) -> Vec<usize> {
+    let n = hi - lo;
+    let k = k.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(k + 1);
+    for i in 0..=k {
+        bounds.push(lo + i * n / k);
+    }
+    bounds.dedup();
+    bounds
+}
+
+/// Partition of `lo..hi` into at most `k` non-empty chunks of roughly
+/// equal **total weight**, for triangular workloads where per-index cost
+/// varies (e.g. row `i` of a trailing update costs `∝ i`).
+pub fn weighted_bounds<W: Fn(usize) -> f64>(lo: usize, hi: usize, k: usize, weight: W) -> Vec<usize> {
+    let n = hi - lo;
+    let k = k.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push(lo);
+    if k > 1 {
+        let total: f64 = (lo..hi).map(&weight).sum();
+        let mut acc = 0.0;
+        for i in lo..hi {
+            acc += weight(i);
+            let cuts = bounds.len() - 1;
+            if cuts + 1 < k && i + 1 < hi && acc >= total * (cuts + 1) as f64 / k as f64 {
+                bounds.push(i + 1);
+            }
+        }
+    }
+    bounds.push(hi);
+    bounds
+}
+
+/// Split the storage of rows `bounds[0]..bounds[last]` (row-major, `cols`
+/// columns, `data` starting at row `bounds[0]`) into one mutable slice per
+/// consecutive bound pair. The disjointness that makes row-parallel
+/// kernels safe is enforced by the borrow checker, not by `unsafe`.
+pub fn split_rows_mut<'a, T>(data: &'a mut [T], cols: usize, bounds: &[usize]) -> Vec<&'a mut [T]> {
+    let mut chunks = Vec::with_capacity(bounds.len().saturating_sub(1));
+    let mut rest = data;
+    for w in bounds.windows(2) {
+        let len = (w[1] - w[0]) * cols;
+        let taken = rest;
+        let (head, tail) = taken.split_at_mut(len);
+        chunks.push(head);
+        rest = tail;
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn budget_clamps_and_splits() {
+        assert_eq!(ExecutionContext::new(0).threads(), 1);
+        assert!(ExecutionContext::seq().is_seq());
+        let ctx = ExecutionContext::new(8);
+        assert_eq!(ctx.split(3).threads(), 2);
+        assert_eq!(ctx.split(100).threads(), 1);
+        assert_eq!(ctx.with_threads(99).threads(), 8);
+        assert_eq!(ctx.with_threads(2).threads(), 2);
+    }
+
+    #[test]
+    fn run_jobs_runs_each_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let ctx = ExecutionContext::new(threads);
+            let counter = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..threads)
+                .map(|_| {
+                    let c = &counter;
+                    move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            ctx.run_jobs(jobs);
+            assert_eq!(counter.load(Ordering::SeqCst), threads);
+        }
+    }
+
+    #[test]
+    fn run_jobs_borrows_disjoint_chunks() {
+        let ctx = ExecutionContext::new(4);
+        let mut data = vec![0.0f64; 100];
+        let bounds = even_bounds(0, 100, 4);
+        let chunks = split_rows_mut(&mut data, 1, &bounds);
+        let mut jobs = Vec::new();
+        for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+            let r0 = w[0];
+            jobs.push(move || {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = (r0 + i) as f64;
+                }
+            });
+        }
+        ctx.run_jobs(jobs);
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as f64);
+        }
+    }
+
+    #[test]
+    fn even_bounds_cover_range() {
+        for (lo, hi, k) in [(0usize, 10usize, 3usize), (5, 6, 4), (0, 0, 2), (2, 100, 7)] {
+            let b = even_bounds(lo, hi, k);
+            assert_eq!(*b.first().unwrap(), lo);
+            assert_eq!(*b.last().unwrap(), hi.max(lo));
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "empty chunk in {b:?}");
+            }
+            assert!(b.len() <= k + 1);
+        }
+    }
+
+    #[test]
+    fn weighted_bounds_balance_triangular_cost() {
+        // weight(i) = i + 1 over 0..100 split 4 ways: each chunk's total
+        // weight should be within 2× of the ideal quarter.
+        let b = weighted_bounds(0, 100, 4, |i| (i + 1) as f64);
+        assert_eq!(*b.first().unwrap(), 0);
+        assert_eq!(*b.last().unwrap(), 100);
+        let total: f64 = (0..100).map(|i| (i + 1) as f64).sum();
+        for w in b.windows(2) {
+            let chunk: f64 = (w[0]..w[1]).map(|i| (i + 1) as f64).sum();
+            assert!(chunk < total / 2.0, "chunk {w:?} holds {chunk} of {total}");
+        }
+        // first chunk (cheap rows) must hold more rows than the last
+        assert!(b[1] - b[0] > 100 - b[b.len() - 2]);
+    }
+
+    #[test]
+    fn weighted_bounds_degenerate() {
+        assert_eq!(weighted_bounds(3, 4, 8, |_| 1.0), vec![3, 4]);
+        let b = weighted_bounds(0, 5, 1, |i| i as f64);
+        assert_eq!(b, vec![0, 5]);
+    }
+}

@@ -14,12 +14,16 @@
 //! `rust/tests/backend_agreement.rs`), so every experiment can run with
 //! `--backend native` or `--backend xla`.
 
+pub mod exec;
 mod manifest;
 mod native;
+#[cfg(feature = "xla")]
 mod xla_backend;
 
+pub use exec::ExecutionContext;
 pub use manifest::{ArtifactEntry, Manifest};
 pub use native::NativeBackend;
+#[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 
 use crate::kernels::CovarianceModel;
@@ -61,12 +65,20 @@ pub fn select_backend(
 ) -> crate::Result<Box<dyn Backend>> {
     match name {
         "native" => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "xla")]
         "xla" => {
             let dir = artifacts_dir
                 .ok_or_else(|| anyhow::anyhow!("--backend xla needs an artifacts dir"))?;
             Ok(Box::new(XlaBackend::load(dir)?))
         }
+        #[cfg(not(feature = "xla"))]
+        "xla" => anyhow::bail!(
+            "this build has no XLA backend: the `xla` cargo feature gates code that \
+             also needs the external PJRT FFI crate, which the offline image does not \
+             ship (see [features] in Cargo.toml); use --backend native"
+        ),
         "auto" => match artifacts_dir {
+            #[cfg(feature = "xla")]
             Some(dir) if dir.join("manifest.json").exists() => {
                 Ok(Box::new(XlaBackend::load(dir)?))
             }

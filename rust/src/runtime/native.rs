@@ -1,14 +1,17 @@
 //! The pure-rust backend: per-pair kernel evaluation via
-//! [`crate::gp::assemble`].
+//! [`crate::gp::assemble`], parallelised over the matrix's row tiles
+//! through the backend's [`ExecutionContext`].
 
 use crate::kernels::CovarianceModel;
 use crate::linalg::Matrix;
 
-use super::Backend;
+use super::{Backend, ExecutionContext};
 
 /// Always-available native backend.
 #[derive(Default)]
 pub struct NativeBackend {
+    /// Thread budget for assembly (defaults to [`ExecutionContext::from_env`]).
+    pub ctx: ExecutionContext,
     /// Number of assemblies served (metrics).
     pub n_cov: usize,
     pub n_cov_grads: usize,
@@ -17,6 +20,13 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Backend with an explicit execution context (e.g. `seq` inside an
+    /// already-parallel outer layer — see the oversubscription rule in
+    /// [`crate::runtime::exec`]).
+    pub fn with_context(ctx: ExecutionContext) -> Self {
+        Self { ctx, n_cov: 0, n_cov_grads: 0 }
     }
 }
 
@@ -32,7 +42,7 @@ impl Backend for NativeBackend {
         theta: &[f64],
     ) -> crate::Result<Matrix> {
         self.n_cov += 1;
-        Ok(crate::gp::assemble_cov(model, t, theta))
+        Ok(crate::gp::assemble::assemble_cov_with(model, t, theta, &self.ctx))
     }
 
     fn cov_and_grads(
@@ -42,7 +52,7 @@ impl Backend for NativeBackend {
         theta: &[f64],
     ) -> crate::Result<(Matrix, Vec<Matrix>)> {
         self.n_cov_grads += 1;
-        Ok(crate::gp::assemble_cov_grads(model, t, theta))
+        Ok(crate::gp::assemble::assemble_cov_grads_with(model, t, theta, &self.ctx))
     }
 }
 
@@ -64,5 +74,16 @@ mod tests {
         assert_eq!(b.n_cov, 1);
         assert_eq!(b.n_cov_grads, 1);
         assert!(!b.accelerates(&model, 10));
+    }
+
+    #[test]
+    fn explicit_context_matches_default() {
+        let model = paper_k1(0.1);
+        let t: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let mut par = NativeBackend::with_context(ExecutionContext::new(4));
+        let mut seq = NativeBackend::with_context(ExecutionContext::seq());
+        let kp = par.cov(&model, &t, &PaperK1::truth()).unwrap();
+        let ks = seq.cov(&model, &t, &PaperK1::truth()).unwrap();
+        assert_eq!(kp.max_abs_diff(&ks), 0.0);
     }
 }

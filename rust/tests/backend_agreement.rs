@@ -5,6 +5,9 @@
 //!
 //! Skips (with a message) when `artifacts/` has not been built yet; the
 //! Makefile `test` target builds artifacts first, so CI always runs it.
+//! The whole file is gated on the `xla` feature (the offline image has no
+//! PJRT FFI crate).
+#![cfg(feature = "xla")]
 
 use gpfast::gp::profiled::ProfiledEval;
 use gpfast::kernels::{paper_k1, paper_k2, PaperK1, PaperK2};

@@ -1,0 +1,217 @@
+//! Parallel ⇔ serial equivalence for every hot-path kernel behind the
+//! [`ExecutionContext`] layer.
+//!
+//! The parallel kernels are designed to be **bit-identical** to the
+//! serial ones (row-tile partitioning, per-element arithmetic order
+//! preserved, reductions through per-row buffers summed in row order), so
+//! most assertions here are exact equality — any rounding drift is a bug.
+//! The one exception is the Hessian pair contraction, whose per-tile
+//! partials are folded in tile order: it is checked to tight tolerance.
+//!
+//! Sizes deliberately straddle the Cholesky block size (NB = 64), the
+//! parallel dispatch cutoffs, and ragged tails; thread counts cover
+//! 1/2/4 (4 oversubscribes small CI machines — correctness must hold
+//! regardless).
+
+use gpfast::gp::profiled::{self, ProfiledEval};
+use gpfast::gp::{assemble_cov_grads, assemble_cov_grads_with, full_lnp_grad, full_lnp_grad_with};
+use gpfast::kernels::{paper_k2, PaperK2};
+use gpfast::linalg::{Chol, ExecutionContext, Matrix};
+use gpfast::propcheck::{property, Gen};
+use gpfast::rng::Xoshiro256;
+
+fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.normal() * 0.05;
+            m[(i, j)] = v;
+            m[(j, i)] = v;
+        }
+        m[(i, i)] = 3.0;
+    }
+    m
+}
+
+fn grid(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.0 + 0.9 * i as f64).collect()
+}
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+#[test]
+fn cholesky_factor_bit_identical_across_threads() {
+    let mut rng = Xoshiro256::seed_from_u64(2024);
+    // straddle NB = 64 (63/64/65), the per-iteration dispatch cutoff
+    // (small trailing blocks stay serial), multi-block and ragged sizes
+    for &n in &[16usize, 63, 64, 65, 100, 113, 128, 129, 200, 320] {
+        let k = random_spd(n, &mut rng);
+        let serial = Chol::factor(&k).unwrap();
+        for &nt in &THREADS {
+            let ctx = ExecutionContext::new(nt);
+            let par = Chol::factor_with(&k, &ctx).unwrap();
+            assert_eq!(
+                par.factor_matrix().max_abs_diff(serial.factor_matrix()),
+                0.0,
+                "factor n={n} threads={nt}"
+            );
+            assert_eq!(par.logdet(), serial.logdet(), "logdet n={n} threads={nt}");
+        }
+    }
+}
+
+#[test]
+fn cholesky_inverse_and_solve_mat_bit_identical() {
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    // 300 exceeds every dispatch cutoff (incl. solve_mat's n ≥ 256)
+    for &n in &[40usize, 96, 130, 300] {
+        let k = random_spd(n, &mut rng);
+        let ch = Chol::factor(&k).unwrap();
+        let inv_s = ch.inverse();
+        let mut b = Matrix::zeros(n, 7);
+        for i in 0..n {
+            for j in 0..7 {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let x_s = ch.solve_mat(&b);
+        for &nt in &THREADS {
+            let ctx = ExecutionContext::new(nt);
+            assert_eq!(ch.inverse_with(&ctx).max_abs_diff(&inv_s), 0.0, "inv n={n} t={nt}");
+            assert_eq!(ch.solve_mat_with(&b, &ctx).max_abs_diff(&x_s), 0.0, "slv n={n} t={nt}");
+        }
+    }
+}
+
+#[test]
+fn matmul_bit_identical() {
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let mut a = Matrix::zeros(150, 90);
+    let mut b = Matrix::zeros(90, 110);
+    for i in 0..150 {
+        for j in 0..90 {
+            a[(i, j)] = rng.normal();
+        }
+    }
+    for i in 0..90 {
+        for j in 0..110 {
+            b[(i, j)] = rng.normal();
+        }
+    }
+    let serial = a.matmul(&b);
+    for &nt in &THREADS {
+        let ctx = ExecutionContext::new(nt);
+        assert_eq!(a.matmul_with(&b, &ctx).max_abs_diff(&serial), 0.0, "threads={nt}");
+    }
+}
+
+#[test]
+fn assembled_cov_and_grads_bit_identical() {
+    let model = paper_k2(0.1);
+    let theta = PaperK2::truth();
+    // straddle the assembly dispatch cutoff (PAR_MIN_N = 64)
+    for &n in &[20usize, 63, 64, 65, 130, 257] {
+        let t = grid(n);
+        let (k_s, g_s) = assemble_cov_grads(&model, &t, &theta);
+        for &nt in &THREADS {
+            let ctx = ExecutionContext::new(nt);
+            let (k_p, g_p) = assemble_cov_grads_with(&model, &t, &theta, &ctx);
+            assert_eq!(k_p.max_abs_diff(&k_s), 0.0, "K n={n} threads={nt}");
+            for (a, (gp, gs)) in g_p.iter().zip(&g_s).enumerate() {
+                assert_eq!(gp.max_abs_diff(gs), 0.0, "dK[{a}] n={n} threads={nt}");
+            }
+        }
+    }
+}
+
+#[test]
+fn profiled_eval_and_gradient_bit_identical() {
+    let model = paper_k2(0.1);
+    let theta = PaperK2::truth();
+    for &n in &[80usize, 150, 260] {
+        let t = grid(n);
+        let y: Vec<f64> = t.iter().map(|&x| (0.23 * x).sin() + 0.1 * (1.7 * x).cos()).collect();
+        let (ev_s, g_s) = profiled::eval_grad(&model, &t, &y, &theta).unwrap();
+        for &nt in &THREADS {
+            let ctx = ExecutionContext::new(nt);
+            let (ev_p, g_p) = profiled::eval_grad_with(&model, &t, &y, &theta, &ctx).unwrap();
+            assert_eq!(ev_p.lnp, ev_s.lnp, "lnp n={n} threads={nt}");
+            assert_eq!(ev_p.sigma_f_hat2, ev_s.sigma_f_hat2, "σ̂² n={n} threads={nt}");
+            assert_eq!(g_p, g_s, "gradient n={n} threads={nt}");
+        }
+    }
+}
+
+#[test]
+fn full_likelihood_and_gradient_bit_identical() {
+    let model = paper_k2(0.1);
+    let n = 140;
+    let t = grid(n);
+    let y: Vec<f64> = t.iter().map(|&x| (0.31 * x).sin()).collect();
+    let mut tf = vec![0.15];
+    tf.extend(PaperK2::truth());
+    let (lnp_s, g_s) = full_lnp_grad(&model, &t, &y, &tf).unwrap();
+    for &nt in &THREADS {
+        let ctx = ExecutionContext::new(nt);
+        let (lnp_p, g_p) = full_lnp_grad_with(&model, &t, &y, &tf, &ctx).unwrap();
+        assert_eq!(lnp_p, lnp_s, "threads={nt}");
+        assert_eq!(g_p, g_s, "threads={nt}");
+    }
+}
+
+#[test]
+fn profiled_hessian_matches_serial_to_rounding() {
+    let model = paper_k2(0.1);
+    let theta = PaperK2::truth();
+    let n = 120;
+    let t = grid(n);
+    let y: Vec<f64> = t.iter().map(|&x| (0.29 * x).sin()).collect();
+    let h_s = profiled::profiled_hessian(&model, &t, &y, &theta).unwrap();
+    let scale = h_s.fro_norm().max(1.0);
+    for &nt in &THREADS {
+        let ctx = ExecutionContext::new(nt);
+        let h_p = profiled::profiled_hessian_with(&model, &t, &y, &theta, &ctx).unwrap();
+        assert!(
+            h_p.max_abs_diff(&h_s) < 1e-11 * scale,
+            "hessian threads={nt}: {}",
+            h_p.max_abs_diff(&h_s)
+        );
+    }
+}
+
+#[test]
+fn property_random_shapes_and_thread_counts() {
+    property("parallel Cholesky + assembly equal serial", 25, |g: &mut Gen| {
+        let n = g.usize(8..180);
+        let nt = g.usize(2..5);
+        let ctx = ExecutionContext::new(nt);
+        let mut rng = Xoshiro256::seed_from_u64(n as u64 * 31 + nt as u64);
+        let k = random_spd(n, &mut rng);
+        let serial = Chol::factor(&k).unwrap();
+        let par = Chol::factor_with(&k, &ctx).unwrap();
+        if par.factor_matrix().max_abs_diff(serial.factor_matrix()) != 0.0 {
+            return Err(format!("factor differs at n={n} threads={nt}"));
+        }
+        let model = paper_k2(0.1);
+        let t = grid(n);
+        let theta = PaperK2::truth();
+        let (k_s, g_s) = assemble_cov_grads(&model, &t, &theta);
+        let (k_p, g_p) = assemble_cov_grads_with(&model, &t, &theta, &ctx);
+        if k_p.max_abs_diff(&k_s) != 0.0 {
+            return Err(format!("K differs at n={n} threads={nt}"));
+        }
+        for (a, (gp, gs)) in g_p.iter().zip(&g_s).enumerate() {
+            if gp.max_abs_diff(gs) != 0.0 {
+                return Err(format!("dK[{a}] differs at n={n} threads={nt}"));
+            }
+        }
+        // the evaluation built on top must agree bit-for-bit too
+        let y: Vec<f64> = t.iter().map(|&x| (0.41 * x).sin()).collect();
+        let ev_s = ProfiledEval::from_cov(k_s, &y).unwrap();
+        let ev_p = ProfiledEval::from_cov_with(k_p, &y, &ctx).unwrap();
+        if ev_p.lnp != ev_s.lnp {
+            return Err(format!("lnp differs at n={n} threads={nt}"));
+        }
+        Ok(())
+    });
+}

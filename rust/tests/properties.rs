@@ -153,6 +153,7 @@ fn truth_parameters_recovered_within_error_bars_on_large_n() {
     // (the paper's T1 = 12.44 ± 0.07 h analogue).
     use gpfast::coordinator::{train_model, ModelSpec, TrainOptions};
     use gpfast::rng::Xoshiro256;
+    use gpfast::runtime::ExecutionContext;
     let data = gpfast::data::synthetic::table1_dataset(300, 0.1, 99);
     let mut rng = Xoshiro256::seed_from_u64(17);
     let mut opts = TrainOptions::default();
@@ -160,7 +161,8 @@ fn truth_parameters_recovered_within_error_bars_on_large_n() {
     // help multistart with the truth's basin as one deterministic start —
     // the pipeline's warm-start mechanism in miniature
     opts.extra_starts = vec![vec![3.0, 1.2, 0.1, 2.8, 0.1]];
-    let res = train_model(&ModelSpec::K2, 0.1, &data, &opts, 2, &mut rng).unwrap();
+    let exec = ExecutionContext::from_env();
+    let res = train_model(&ModelSpec::K2, 0.1, &data, &opts, 2, &exec, &mut rng).unwrap();
     let model = paper_k2(0.1);
     let truth = PaperK2::truth();
     let _ = PaperK1::truth();

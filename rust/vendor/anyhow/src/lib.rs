@@ -1,0 +1,136 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io registry, so the subset of `anyhow`
+//! this crate actually uses is vendored here: an opaque [`Error`] that any
+//! `std::error::Error` converts into, the [`Result`] alias, and the
+//! `anyhow!` / `bail!` / `ensure!` macros (format-string forms). No
+//! context chains, no backtraces, no downcasting — none are used.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque boxed error.
+///
+/// Deliberately does **not** implement `std::error::Error` itself, so the
+/// blanket `From<E: std::error::Error>` below cannot overlap with the
+/// reflexive `From<Error> for Error` that `?` needs (the same trick the
+/// real `anyhow` uses).
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap any displayable message into an error.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { inner: Box::new(e) }
+    }
+}
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with a formatted error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError>
+        ensure!(v >= 0, "negative: {v}");
+        if v > 100 {
+            bail!("too big: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert!(parse("-3").unwrap_err().to_string().contains("negative"));
+        assert!(parse("101").unwrap_err().to_string().contains("too big"));
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+        assert_eq!(format!("{e:?}"), "code 42");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(f(true).is_ok());
+        assert!(f(false).unwrap_err().to_string().contains("condition failed"));
+    }
+}

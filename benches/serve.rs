@@ -1,0 +1,136 @@
+//! Bench: the serving layer — cached-factor batch prediction vs the cold
+//! assemble+factor+predict path, and the `O(n²)` streaming observe
+//! (factor extend + α refresh) vs a full `O(n³)` refactorisation.
+//!
+//! Appends a `serve` section to **`BENCH_perf.json`** (merging with the
+//! sections `cargo bench --bench perf` wrote, if the file exists) so the
+//! perf trajectory stays in one machine-readable document. Row schema:
+//!
+//! * `batch_predict`: `{n, q, threads, cached_seconds, cold_seconds,
+//!   speedup}` — one q-point batch through the cached factor vs paying
+//!   assembly + factorisation for the batch.
+//! * `observe`: `{n, threads, extend_seconds, refactor_seconds, speedup}`
+//!   — appending one observation via `Chol::extend` + α refresh vs
+//!   refactorising the grown matrix from scratch.
+//!
+//! `cargo bench --bench serve`
+
+use gpfast::gp::serve::Predictor;
+use gpfast::gp::{assemble_cov_with, predict, profiled::ProfiledEval};
+use gpfast::kernels::{paper_k1, PaperK1};
+use gpfast::linalg::Chol;
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::{timer::human_time, Json, Table, TimingStats};
+
+fn main() {
+    let ctx = ExecutionContext::from_env();
+    let threads = ctx.threads();
+    println!("(thread budget: {threads})\n");
+    let mut rows: Vec<Json> = Vec::new();
+    let theta = PaperK1::truth();
+
+    println!("== cached-factor batch predict vs cold (k1, q = 256 queries) ==");
+    let mut table = Table::new(vec!["n", "cached", "cold", "speedup"]);
+    for &n in &[500usize, 1000, 1968] {
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let y: Vec<f64> = t.iter().map(|&x| (x * 0.51).sin()).collect();
+        let q = 256usize;
+        let t_star: Vec<f64> =
+            (0..q).map(|i| 0.5 + (n as f64 - 1.0) * i as f64 / q as f64).collect();
+        let model = paper_k1(0.1);
+        let predictor = Predictor::fit(paper_k1(0.1), &t, &y, &theta, &ctx).unwrap();
+        let reps = if n >= 1968 { 2 } else { 3 };
+        let cached = TimingStats::measure(1, reps, || {
+            let _ = predictor.predict_batch(&t_star, &ctx);
+        });
+        let cold = TimingStats::measure(0, reps, || {
+            // what serving costs without the cache: re-assemble and
+            // re-factorise for every batch
+            let k = assemble_cov_with(&model, &t, &theta, &ctx);
+            let ev = ProfiledEval::from_cov_with(k, &y, &ctx).unwrap();
+            let _ = predict(&model, &t, &theta, &ev, &t_star);
+        });
+        let speedup = cold.min() / cached.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(cached.min()),
+            human_time(cold.min()),
+            format!("{speedup:.1}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "batch_predict".into()),
+            ("n", n.into()),
+            ("q", q.into()),
+            ("threads", threads.into()),
+            ("cached_seconds", cached.min().into()),
+            ("cold_seconds", cold.min().into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    println!("\n== streaming observe: O(n²) extend vs O(n³) refactor ==");
+    let mut table = Table::new(vec!["n", "extend+refresh", "refactor", "speedup"]);
+    for &n in &[500usize, 1000, 1968] {
+        let t: Vec<f64> = (1..=n + 1).map(|i| i as f64).collect();
+        let y: Vec<f64> = t.iter().map(|&x| (x * 0.51).sin()).collect();
+        let model = paper_k1(0.1);
+        let k_grown = assemble_cov_with(&model, &t, &theta, &ctx);
+        let mut k_base = gpfast::linalg::Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k_base[(i, j)] = k_grown[(i, j)];
+            }
+        }
+        let base = Chol::factor_with(&k_base, &ctx).unwrap();
+        let cross: Vec<f64> = (0..n).map(|i| k_grown[(n, i)]).collect();
+        let diag = k_grown[(n, n)];
+        let reps = if n >= 1968 { 2 } else { 3 };
+        // both closures clone an O(n²) object; the refactor path then
+        // pays O(n³) on top, the extend path only O(n²)
+        let extend = TimingStats::measure(1, reps, || {
+            let mut ch = base.clone();
+            ch.extend(&cross, diag).unwrap();
+            let _ = ch.solve(&y);
+        });
+        let refactor = TimingStats::measure(0, reps, || {
+            let ch = Chol::factor_owned_with(k_grown.clone(), &ctx).unwrap();
+            let _ = ch.solve(&y);
+        });
+        let speedup = refactor.min() / extend.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(extend.min()),
+            human_time(refactor.min()),
+            format!("{speedup:.1}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "observe".into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("extend_seconds", extend.min().into()),
+            ("refactor_seconds", refactor.min().into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    // merge the serve section into BENCH_perf.json (keep perf's sections)
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections = doc
+        .get("sections")
+        .and_then(|s| s.as_obj().cloned())
+        .unwrap_or_default();
+    sections.insert("serve".to_string(), Json::Arr(rows));
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), threads.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("\nserve section merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

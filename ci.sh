@@ -4,17 +4,25 @@
 #   ./ci.sh
 #
 # Mirrors the tier-1 verify in ROADMAP.md (release build + tests) and adds
-# the formatting check. Benches/examples compile as part of `cargo test`'s
-# target graph; `cargo bench --bench perf` is the perf-tracking run and is
-# deliberately not part of the gate (wall-clock heavy).
+# the formatting check. The test suite runs TWICE: once with
+# GPFAST_THREADS=1 (every ExecutionContext::from_env() path serial) and
+# once with the machine's full parallelism, so serial/parallel divergence
+# — the bit-identity contract of runtime::exec — is caught pre-merge even
+# in tests that take their thread budget from the environment.
+# Benches/examples compile as part of `cargo test`'s target graph;
+# `cargo bench --bench perf` / `--bench serve` are the perf-tracking runs
+# and are deliberately not part of the gate (wall-clock heavy).
 set -euo pipefail
 cd "$(dirname "$0")"
 
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== cargo test -q (GPFAST_THREADS=1) =="
+GPFAST_THREADS=1 cargo test -q
+
+echo "== cargo test -q (GPFAST_THREADS=max) =="
+GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check (advisory) =="

@@ -1,0 +1,131 @@
+//! Streaming serving demo: replay the Woods-Hole tidal series as an
+//! arriving stream.
+//!
+//! 1. **Train** k₁ on the first lunar month (n = 328, the paper's small
+//!    set) with multistart CG;
+//! 2. **Serve** day-ahead forecasts from a [`ServeSession`] — the factor
+//!    from training is cached, each batch costs `O(q n²)`;
+//! 3. **Stream** two more weeks of observations in day-sized batches:
+//!    every append extends the factor in `O(n²)` (no refactorisation),
+//!    predictions stay available between batches;
+//! 4. **Verify**: after the stream, the served predictions are compared
+//!    against a from-scratch refit at the same hyperparameters — they
+//!    must agree to 1e-8 (the issue's acceptance bar), while the
+//!    incremental path does orders of magnitude less work.
+//!
+//! ```sh
+//! cargo run --release --example streaming_tidal
+//! GPFAST_THREADS=4 cargo run --release --example streaming_tidal
+//! ```
+
+use gpfast::coordinator::{ModelSpec, ServeSession, TrainOptions};
+use gpfast::data::tidal::{generate_tidal, TidalConfig};
+use gpfast::gp::profiled::ProfiledEval;
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::Stopwatch;
+
+/// Noise level for the serving demo. The §3(b) reproduction uses the
+/// paper's σ_n = 10⁻² (see `tidal_analysis.rs`); here a 5% fractional
+/// error keeps κ(K̃) ~ 10⁴ so the streamed-vs-refit 1e-8 check sits far
+/// above the conditioning floor — the serving machinery is identical.
+const SIGMA_N: f64 = 0.05;
+
+fn main() -> gpfast::Result<()> {
+    let exec = ExecutionContext::from_env();
+    let full = generate_tidal(&TidalConfig::six_lunar_months(20160125)).demean();
+    let n0 = TidalConfig::LUNAR_MONTH_N; // 328: the paper's first month
+    let stream_days = 14;
+    let per_day = (24.0 / 2.0) as usize; // 2-hour cadence → 12 points/day
+    let history = full.head(n0);
+
+    // --- 1. train on the first lunar month
+    println!("training k1 on the first lunar month (n = {n0}) ...");
+    let mut opts = TrainOptions::default();
+    opts.multistart.restarts = 3;
+    // physically-informed warm start: T0 ≈ 90 h window, T1 = 12.42 h (M2)
+    opts.extra_starts = vec![vec![4.5, 12.42f64.ln(), 0.0]];
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let sw = Stopwatch::start();
+    let (mut session, trained) = ServeSession::train_and_serve(
+        &ModelSpec::K1,
+        SIGMA_N,
+        &history,
+        &opts,
+        2,
+        exec.clone(),
+        &mut rng,
+    )?;
+    println!(
+        "trained in {:.1} s: lnP = {:.2}, T1 = {:.2} h, σ̂_f = {:.3}",
+        sw.elapsed_secs(),
+        trained.lnp_peak,
+        trained.theta_hat[1].exp(),
+        trained.sigma_f_hat2.sqrt()
+    );
+
+    // --- 2 & 3. stream two weeks, serving a day-ahead forecast daily
+    let mut m = n0;
+    let mut extend_secs = 0.0;
+    for day in 0..stream_days {
+        let hi = (m + per_day).min(full.len());
+        let sw = Stopwatch::start();
+        session.observe_batch(&full.t[m..hi], &full.y[m..hi])?;
+        extend_secs += sw.elapsed_secs();
+        m = hi;
+        // forecast the *next* day on a 30-minute grid
+        let t_star: Vec<f64> = (0..48).map(|i| full.t[m - 1] + 0.5 * (i + 1) as f64).collect();
+        let pred = session.predict(&t_star);
+        // one-line daily digest: predictive envelope of the coming day
+        let (mut lo, mut hi_v) = (f64::INFINITY, f64::NEG_INFINITY);
+        for v in &pred.mean {
+            lo = lo.min(*v);
+            hi_v = hi_v.max(*v);
+        }
+        println!(
+            "day {:2}: n = {}, forecast range [{:+.3}, {:+.3}] m, mean sd {:.4}",
+            day + 1,
+            m,
+            lo,
+            hi_v,
+            pred.sd.iter().sum::<f64>() / pred.sd.len() as f64
+        );
+    }
+    let stats = session.stats();
+    println!(
+        "\nstreamed {} observations in {:.3} s of factor work (n: {} → {}); \
+         {} query points served",
+        stats.observations_appended,
+        extend_secs,
+        n0,
+        stats.n_train,
+        stats.queries_served
+    );
+
+    // --- 4. verify against a from-scratch refit at the same θ̂
+    let t_star: Vec<f64> = (0..96).map(|i| full.t[m - 1] + 0.25 * (i + 1) as f64).collect();
+    let served = session.predict(&t_star);
+    let sw = Stopwatch::start();
+    let model = ModelSpec::K1.build(SIGMA_N);
+    let k = gpfast::gp::assemble_cov_with(&model, &full.t[..m], &trained.theta_hat, &exec);
+    let ev = ProfiledEval::from_cov_with(k, &full.y[..m], &exec)?;
+    let refit = gpfast::gp::predict(&model, &full.t[..m], &trained.theta_hat, &ev, &t_star);
+    let refit_secs = sw.elapsed_secs();
+    let mut max_mean = 0.0f64;
+    let mut max_sd = 0.0f64;
+    for i in 0..t_star.len() {
+        max_mean = max_mean.max((served.mean[i] - refit.mean[i]).abs());
+        max_sd = max_sd.max((served.sd[i] - refit.sd[i]).abs());
+    }
+    println!(
+        "from-scratch refit at n = {m}: {:.3} s (streamed factor work was {:.3} s)",
+        refit_secs, extend_secs
+    );
+    println!("max |Δmean| = {max_mean:.3e}, max |Δsd| = {max_sd:.3e} vs refit");
+    assert!(
+        max_mean < 1e-8 && max_sd < 1e-8,
+        "streamed predictions must match a from-scratch refit to 1e-8"
+    );
+    println!("OK: streamed serving ≡ refit to 1e-8, with no O(n³) work in the loop");
+    Ok(())
+}

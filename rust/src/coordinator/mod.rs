@@ -11,7 +11,10 @@
 //!    error bars (inverse-Hessian diagonal);
 //! 4. optionally verify with the **nested-sampling baseline** — the
 //!    paper's MULTINEST comparison, at 20,000–50,000 likelihood
-//!    evaluations vs ~10×100 for the fast path.
+//!    evaluations vs ~10×100 for the fast path;
+//! 5. hand the winning model to the **serving layer** ([`serve`]): a
+//!    [`ServeSession`] caches the factor from training and serves batched
+//!    predictions / streaming observation appends without refactorising.
 //!
 //! Multistart restarts fan out over a [`pool::WorkerPool`]; each worker
 //! owns a native backend (PJRT handles are not `Send`), while artifact-
@@ -19,12 +22,14 @@
 
 pub mod pool;
 pub mod registry;
+pub mod serve;
 pub mod train;
 mod report;
 
 pub use pool::WorkerPool;
 pub use registry::ModelSpec;
 pub use report::{ComparisonReport, ModelReport, NestedReport};
+pub use serve::ServeSession;
 pub use train::{train_model, TrainOptions, TrainResult};
 
 use crate::data::Dataset;

@@ -1,0 +1,156 @@
+//! Coordinator glue for the serving layer: turn a training run into a
+//! live, streaming [`Predictor`] session.
+//!
+//! [`ServeSession`] owns the predictor plus the spec/context bookkeeping a
+//! deployment needs: it is constructed either from an existing
+//! [`TrainResult`] ([`ServeSession::from_training`]) or by training
+//! in-place ([`ServeSession::train_and_serve`]), carries the
+//! [`ExecutionContext`] so callers don't thread it through every query,
+//! and exposes the observe → predict streaming loop of
+//! `examples/streaming_tidal.rs`.
+
+use crate::data::Dataset;
+use crate::gp::predict::Prediction;
+use crate::gp::serve::{Predictor, ServeStats};
+use crate::rng::Xoshiro256;
+use crate::runtime::ExecutionContext;
+
+use super::registry::ModelSpec;
+use super::train::{train_model, TrainOptions, TrainResult};
+
+/// A live serving session: trained hyperparameters + cached factor +
+/// thread budget, answering batched queries and absorbing a stream of
+/// new observations.
+pub struct ServeSession {
+    /// The model spec this session serves (kept for reporting/rebuilds).
+    pub spec: ModelSpec,
+    predictor: Predictor,
+    exec: ExecutionContext,
+}
+
+impl ServeSession {
+    /// Wire a finished training run into a predictor by **adopting** the
+    /// peak evaluation `train_model` already produced — an `O(n²)` factor
+    /// copy, no re-assembly and no `O(n³)` refactorisation. `exec`
+    /// parallelises the queries.
+    pub fn from_training(
+        spec: &ModelSpec,
+        sigma_n: f64,
+        data: &Dataset,
+        trained: &TrainResult,
+        exec: ExecutionContext,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            trained.peak_eval.chol.dim() == data.len(),
+            "TrainResult is for n = {}, dataset has n = {}",
+            trained.peak_eval.chol.dim(),
+            data.len()
+        );
+        let model = spec.build(sigma_n);
+        let predictor = Predictor::from_eval(
+            model,
+            data.t.clone(),
+            data.y.clone(),
+            trained.theta_hat.clone(),
+            trained.peak_eval.clone(),
+        );
+        Ok(Self { spec: spec.clone(), predictor, exec })
+    }
+
+    /// Train (multistart CG, like the comparison pipeline) and move
+    /// straight into serving.
+    pub fn train_and_serve(
+        spec: &ModelSpec,
+        sigma_n: f64,
+        data: &Dataset,
+        opts: &TrainOptions,
+        workers: usize,
+        exec: ExecutionContext,
+        rng: &mut Xoshiro256,
+    ) -> crate::Result<(Self, TrainResult)> {
+        let trained = train_model(spec, sigma_n, data, opts, workers, &exec, rng)?;
+        let session = Self::from_training(spec, sigma_n, data, &trained, exec)?;
+        Ok((session, trained))
+    }
+
+    /// Serve one batch of query points through the cached factor.
+    pub fn predict(&self, t_star: &[f64]) -> Prediction {
+        self.predictor.predict_batch(t_star, &self.exec)
+    }
+
+    /// Append one observation (`O(n²)` factor extension).
+    pub fn observe(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        self.predictor.observe(t_new, y_new)
+    }
+
+    /// Append a batch of observations, refreshing `α`/`σ̂_f²` once.
+    pub fn observe_batch(&mut self, t_new: &[f64], y_new: &[f64]) -> crate::Result<()> {
+        self.predictor.observe_batch(t_new, y_new)
+    }
+
+    /// Serving counters.
+    pub fn stats(&self) -> ServeStats {
+        self.predictor.stats()
+    }
+
+    /// The underlying predictor (e.g. for `lnp()`/`sigma_f_hat2()`).
+    pub fn predictor(&self) -> &Predictor {
+        &self.predictor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::table1_dataset;
+    use crate::optimize::MultistartOptions;
+
+    #[test]
+    fn train_and_serve_round_trip() {
+        let data = table1_dataset(40, 0.1, 23);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let (mut session, trained) = ServeSession::train_and_serve(
+            &ModelSpec::K1,
+            0.1,
+            &data,
+            &opts,
+            1,
+            ExecutionContext::seq(),
+            &mut rng,
+        )
+        .unwrap();
+        assert!(trained.lnp_peak.is_finite());
+        let pred = session.predict(&[5.5, 20.25]);
+        assert_eq!(pred.mean.len(), 2);
+        assert!(pred.sd.iter().all(|s| s.is_finite() && *s >= 0.0));
+        // stream two points and serve again — n grows, queries accumulate
+        session.observe_batch(&[41.0, 42.0], &[0.1, -0.2]).unwrap();
+        let s = session.stats();
+        assert_eq!(s.n_train, 42);
+        assert_eq!(s.observations_appended, 2);
+        let pred2 = session.predict(&[41.5]);
+        assert_eq!(s.queries_served + 1, session.stats().queries_served);
+        assert!(pred2.mean[0].is_finite());
+    }
+
+    #[test]
+    fn from_training_uses_trained_theta() {
+        let data = table1_dataset(30, 0.1, 31);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(37);
+        let exec = ExecutionContext::seq();
+        let trained =
+            train_model(&ModelSpec::K1, 0.1, &data, &opts, 1, &exec, &mut rng).unwrap();
+        let session =
+            ServeSession::from_training(&ModelSpec::K1, 0.1, &data, &trained, exec).unwrap();
+        assert_eq!(session.predictor().theta(), trained.theta_hat.as_slice());
+        assert_eq!(session.stats().n_train, 30);
+    }
+}

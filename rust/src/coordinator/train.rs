@@ -38,6 +38,10 @@ pub struct TrainResult {
     pub theta_hat: Vec<f64>,
     pub lnp_peak: f64,
     pub sigma_f_hat2: f64,
+    /// The profiled evaluation at the winning peak — factor and α
+    /// included, so the serving layer ([`crate::coordinator::serve`])
+    /// can adopt them without re-paying the `O(n³)` factorisation.
+    pub peak_eval: profiled::ProfiledEval,
     /// Did the winning restart converge?
     pub converged: bool,
     /// Total profiled-likelihood evaluations across all restarts.
@@ -184,13 +188,15 @@ pub fn train_model(
     let n_modes = modes.len();
     let restart_values: Vec<f64> = ok.iter().map(|r| r.value).collect();
     let best = &ok[0];
-    // recompute σ̂_f² at the winning peak (cheap; avoids shipping it around)
+    // re-evaluate at the winning peak: σ̂_f² for the report, and the
+    // factor + α for the serving layer to adopt (no refactorisation)
     let model = spec.build(sigma_n);
     let ev = profiled::eval_with(&model, &data.t, &data.y, &best.theta, exec)?;
     Ok(TrainResult {
         theta_hat: best.theta.clone(),
         lnp_peak: best.value,
         sigma_f_hat2: ev.sigma_f_hat2,
+        peak_eval: ev,
         converged: best.converged,
         n_evals,
         n_modes,

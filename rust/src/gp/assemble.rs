@@ -17,7 +17,7 @@
 
 use crate::kernels::CovarianceModel;
 use crate::linalg::Matrix;
-use crate::runtime::exec::{split_rows_mut, weighted_bounds, ExecutionContext};
+use crate::runtime::exec::{for_row_chunks, split_rows_mut, weighted_bounds, ExecutionContext};
 
 /// Below this `n` a parallel dispatch costs more than the pair loop.
 const PAR_MIN_N: usize = 64;
@@ -47,23 +47,17 @@ pub fn assemble_cov_with(
     let mut k = Matrix::zeros(n, n);
     let jobs = assembly_jobs(n, ctx);
     let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
-    let chunks = split_rows_mut(k.as_mut_slice(), n, &bounds);
-    let mut job_fns = Vec::with_capacity(chunks.len());
-    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
-        let (r0, r1) = (w[0], w[1]);
-        job_fns.push(move || {
-            let mut prep = model.kernel.prepare(theta);
-            let diag = prep.value(0.0) + model.noise_variance();
-            for i in r0..r1 {
-                let row = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
-                row[i] = diag;
-                for j in (i + 1)..n {
-                    row[j] = prep.value(t[i] - t[j]);
-                }
+    for_row_chunks(k.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
+        let mut prep = model.kernel.prepare(theta);
+        let diag = prep.value(0.0) + model.noise_variance();
+        for i in r0..r1 {
+            let row = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+            row[i] = diag;
+            for j in (i + 1)..n {
+                row[j] = prep.value(t[i] - t[j]);
             }
-        });
-    }
-    ctx.run_jobs(job_fns);
+        }
+    });
     k.mirror_upper_to_lower();
     k
 }

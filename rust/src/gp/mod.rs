@@ -13,12 +13,16 @@
 //!   (eq. 2.9). Used by the nested-sampling baseline and the σ_f-profiling
 //!   ablation.
 //! * [`predict`] — the predictive distribution (eq. 2.1).
+//! * [`serve`] — the streaming prediction engine: cached-factor batched
+//!   serving of eq. (2.1) with `O(n²)` observation appends
+//!   ([`crate::linalg::Chol::extend`]) — no per-query refactorisation.
 //! * [`sample`] — GP realisation sampling (Fig. 1).
 
 pub mod assemble;
 pub mod profiled;
 pub mod full;
 pub mod predict;
+pub mod serve;
 pub mod sample;
 
 pub use assemble::{
@@ -31,3 +35,4 @@ pub use full::{
 pub use predict::predict;
 pub use profiled::{marg_constant, profiled_hessian, profiled_hessian_with, ProfiledEval};
 pub use sample::draw_realisation;
+pub use serve::{Predictor, ServeStats};

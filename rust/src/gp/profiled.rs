@@ -20,11 +20,16 @@
 use crate::kernels::CovarianceModel;
 use crate::linalg::{dot, Chol, Matrix};
 use crate::math::{lgamma, LN_2PI_E};
-use crate::runtime::exec::{even_bounds, split_rows_mut, ExecutionContext};
+use crate::runtime::exec::{even_bounds, for_row_chunks, split_rows_mut, ExecutionContext};
 
 use super::assemble::{assemble_cov_grads_with, assemble_cov_with, hessian_contractions_with};
 
 /// The per-ϑ products of one profiled-hyperlikelihood evaluation.
+///
+/// `Clone` is an `O(n²)` factor copy — the training→serving handoff uses
+/// it so a [`crate::gp::serve::Predictor`] can adopt a peak evaluation
+/// without re-paying the `O(n³)` factorisation.
+#[derive(Clone, Debug)]
 pub struct ProfiledEval {
     /// `ln P_max(ϑ)` — eq. (2.16).
     pub lnp: f64,
@@ -46,18 +51,11 @@ where
     let n = out.len();
     let jobs = ctx.threads().min((n / 64).max(1));
     let bounds = even_bounds(0, n, jobs);
-    let chunks = split_rows_mut(out, 1, &bounds);
-    let f = &f;
-    let mut job_fns = Vec::with_capacity(chunks.len());
-    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
-        let (r0, r1) = (w[0], w[1]);
-        job_fns.push(move || {
-            for i in r0..r1 {
-                chunk[i - r0] = f(i);
-            }
-        });
-    }
-    ctx.run_jobs(job_fns);
+    for_row_chunks(out, 1, &bounds, ctx, |chunk, r0, r1| {
+        for i in r0..r1 {
+            chunk[i - r0] = f(i);
+        }
+    });
 }
 
 /// The eq.-2.17 ingredients for one derivative matrix:

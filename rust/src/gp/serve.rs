@@ -1,0 +1,389 @@
+//! The streaming prediction engine — cached-factor batch serving.
+//!
+//! Training (the rest of this crate) pays `O(n³)` once to locate ϑ̂; the
+//! naive serving story then re-assembles and re-factorises `K̃` on *every*
+//! predict call. At the ROADMAP's traffic target that is the bottleneck:
+//! the factor never changes between queries. [`Predictor`] therefore owns
+//! the trained state — hyperparameters ϑ̂, the Cholesky factor `L`, the
+//! weight vector `α = K̃⁻¹y` and `σ̂_f²` — and answers **batched**
+//! mean/variance queries (eq. 2.1) without ever re-factorising:
+//!
+//! 1. one row-parallel assembly of the cross-covariance block `K*`
+//!    (`q×n`, one row per query) fused with the means `K* α`;
+//! 2. one multi-RHS TRSM `W = L⁻¹ K*ᵀ` ([`Chol::half_solve_rows_with`]);
+//! 3. the variances `σ̂_f² (k̃** − ‖w‖²)`, row-parallel.
+//!
+//! Total: `O(q n²)` for a `q`-point batch instead of `O(n³ + q n²)`.
+//!
+//! New observations stream in through [`Predictor::observe`] /
+//! [`Predictor::observe_batch`]: the factor is *extended* in `O(n²)` via
+//! the bordered factorisation ([`Chol::extend`]) and `α`, `σ̂_f²` are
+//! refreshed with two triangular solves — no `O(n³)` refactorisation.
+//! After any number of appends the served predictions match a
+//! from-scratch refit at the same ϑ̂ to better than 1e-8 (asserted in
+//! `rust/tests/serving.rs` and `examples/streaming_tidal.rs`).
+//!
+//! Serial results are bit-identical to [`super::predict::predict`]; with
+//! a multi-thread [`ExecutionContext`] each query row is produced whole
+//! by one worker in the serial arithmetic order, so batches are
+//! bit-identical for any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::kernels::CovarianceModel;
+use crate::linalg::{dot, Chol, Matrix};
+use crate::math::LN_2PI_E;
+use crate::runtime::exec::{
+    even_bounds, for_row_chunks, split_rows_mut, ExecutionContext, PAR_MIN_WORK,
+};
+
+use super::assemble::assemble_cov_with;
+use super::predict::Prediction;
+use super::profiled::ProfiledEval;
+
+/// Serving counters (monotonic over the predictor's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Current training-set size `n` behind the cached factor.
+    pub n_train: usize,
+    /// Query points served across all batches.
+    pub queries_served: usize,
+    /// Observations appended via the `O(n²)` factor extension.
+    pub observations_appended: usize,
+}
+
+/// A trained GP wired for serving: cached factor, cached `α`, batched
+/// queries, `O(n²)` streaming appends. See the module docs.
+pub struct Predictor {
+    model: CovarianceModel,
+    theta: Vec<f64>,
+    t: Vec<f64>,
+    y: Vec<f64>,
+    chol: Chol,
+    alpha: Vec<f64>,
+    sigma_f_hat2: f64,
+    queries: AtomicUsize,
+    observations: AtomicUsize,
+}
+
+impl Predictor {
+    /// Assemble and factor once, then serve from the cache. Use
+    /// [`Predictor::from_eval`] when training already produced the
+    /// factorisation (no extra `O(n³)` work).
+    pub fn fit(
+        model: CovarianceModel,
+        t: &[f64],
+        y: &[f64],
+        theta: &[f64],
+        ctx: &ExecutionContext,
+    ) -> crate::Result<Self> {
+        let k = assemble_cov_with(&model, t, theta, ctx);
+        let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+        Ok(Self::from_eval(model, t.to_vec(), y.to_vec(), theta.to_vec(), ev))
+    }
+
+    /// Adopt a training-time evaluation (peak ϑ̂, eq. 2.6) without
+    /// refactorising: the [`ProfiledEval`]'s factor and `α` *are* the
+    /// serving cache.
+    pub fn from_eval(
+        model: CovarianceModel,
+        t: Vec<f64>,
+        y: Vec<f64>,
+        theta: Vec<f64>,
+        ev: ProfiledEval,
+    ) -> Self {
+        assert_eq!(t.len(), y.len(), "t/y length mismatch");
+        assert_eq!(ev.chol.dim(), t.len(), "factor/data size mismatch");
+        assert_eq!(theta.len(), model.dim(), "theta/model dim mismatch");
+        Self {
+            model,
+            theta,
+            t,
+            y,
+            chol: ev.chol,
+            alpha: ev.alpha,
+            sigma_f_hat2: ev.sigma_f_hat2,
+            queries: AtomicUsize::new(0),
+            observations: AtomicUsize::new(0),
+        }
+    }
+
+    /// Current training-set size behind the factor.
+    pub fn n(&self) -> usize {
+        self.t.len()
+    }
+
+    /// The hyperparameters the predictor serves with.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// `σ̂_f²` at the current data (refreshed on every observe).
+    pub fn sigma_f_hat2(&self) -> f64 {
+        self.sigma_f_hat2
+    }
+
+    /// `ln P_max(ϑ̂)` at the current data (eq. 2.16), recomputed from the
+    /// maintained log-determinant — `O(1)`.
+    pub fn lnp(&self) -> f64 {
+        let n = self.t.len() as f64;
+        -0.5 * n * (LN_2PI_E + self.sigma_f_hat2.ln()) - 0.5 * self.chol.logdet()
+    }
+
+    /// Serving counters.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            n_train: self.t.len(),
+            queries_served: self.queries.load(Ordering::Relaxed),
+            observations_appended: self.observations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Serve one batch of query points: predictive mean and sd at each
+    /// element of `t_star`, through the cached factor (see module docs;
+    /// never refactorises).
+    pub fn predict_batch(&self, t_star: &[f64], ctx: &ExecutionContext) -> Prediction {
+        let q = t_star.len();
+        let n = self.t.len();
+        let mut mean = vec![0.0; q];
+        let mut sd = vec![0.0; q];
+        if q == 0 {
+            return Prediction { mean, sd };
+        }
+        self.queries.fetch_add(q, Ordering::Relaxed);
+        let jobs = if q * n < PAR_MIN_WORK { 1 } else { ctx.threads().min(q) };
+        let bounds = even_bounds(0, q, jobs);
+        // 1. cross-covariance rows fused with the means K*α
+        let mut work = Matrix::zeros(q, n);
+        {
+            let work_chunks = split_rows_mut(work.as_mut_slice(), n, &bounds);
+            let mean_chunks = split_rows_mut(&mut mean, 1, &bounds);
+            let (model, theta, t, alpha) = (&self.model, &self.theta, &self.t, &self.alpha);
+            let mut job_fns = Vec::with_capacity(work_chunks.len());
+            for ((wchunk, mchunk), wnd) in
+                work_chunks.into_iter().zip(mean_chunks).zip(bounds.windows(2))
+            {
+                let (r0, r1) = (wnd[0], wnd[1]);
+                job_fns.push(move || {
+                    let mut prep = model.kernel.prepare(theta);
+                    for r in r0..r1 {
+                        let row = &mut wchunk[(r - r0) * n..(r - r0 + 1) * n];
+                        let ts = t_star[r];
+                        for (i, &ti) in t.iter().enumerate() {
+                            row[i] = prep.value(ts - ti);
+                        }
+                        mchunk[r - r0] = dot(row, alpha);
+                    }
+                });
+            }
+            ctx.run_jobs(job_fns);
+        }
+        // 2. one multi-RHS TRSM: every row w = L⁻¹ k*
+        self.chol.half_solve_rows_with(&mut work, ctx);
+        // 3. variances σ̂_f² (k̃** − wᵀw), row-parallel
+        let k_ss = self.model.kernel.prepare(&self.theta).value(0.0);
+        let s2 = self.sigma_f_hat2;
+        let work_ref = &work;
+        for_row_chunks(&mut sd, 1, &bounds, ctx, |chunk, r0, r1| {
+            for r in r0..r1 {
+                let w = work_ref.row(r);
+                let var = s2 * (k_ss - dot(w, w));
+                chunk[r - r0] = var.max(0.0).sqrt();
+            }
+        });
+        Prediction { mean, sd }
+    }
+
+    /// Append one observation in `O(n²)`: extend the factor by the
+    /// bordered-factorisation row ([`Chol::extend`]) and refresh `α` and
+    /// `σ̂_f²` with two triangular solves. No refactorisation.
+    pub fn observe(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        self.append(t_new, y_new)?;
+        self.refresh();
+        Ok(())
+    }
+
+    /// Append a batch of observations (each factor extension is `O(n²)`),
+    /// refreshing `α`/`σ̂_f²` once at the end.
+    ///
+    /// On a mid-batch failure the points already appended are kept and
+    /// `α`/`σ̂_f²` are refreshed before the error propagates, so the
+    /// predictor stays serviceable: the successfully absorbed prefix is
+    /// fully incorporated, the failing point (and the rest of the batch)
+    /// is not.
+    pub fn observe_batch(&mut self, t_new: &[f64], y_new: &[f64]) -> crate::Result<()> {
+        anyhow::ensure!(t_new.len() == y_new.len(), "t/y batch length mismatch");
+        let mut failure = None;
+        let mut appended = 0usize;
+        for (&tn, &yn) in t_new.iter().zip(y_new) {
+            match self.append(tn, yn) {
+                Ok(()) => appended += 1,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if appended > 0 {
+            self.refresh();
+        }
+        match failure {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn append(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        let mut prep = self.model.kernel.prepare(&self.theta);
+        // assembly convention: lag = existing − new (the new point is the
+        // trailing row of the grown matrix); kernels are even in the lag
+        let cross: Vec<f64> = self.t.iter().map(|&ti| prep.value(ti - t_new)).collect();
+        let diag = prep.value(0.0) + self.model.noise_variance();
+        self.chol
+            .extend(&cross, diag)
+            .map_err(|e| anyhow::anyhow!("observe(t={t_new}) makes K̃ non-PD: {e}"))?;
+        self.t.push(t_new);
+        self.y.push(y_new);
+        self.observations.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Recompute `α = K̃⁻¹y` and `σ̂_f² = yᵀα/n` from the current factor
+    /// (`O(n²)`; eq. 2.15).
+    fn refresh(&mut self) {
+        self.alpha = self.chol.solve(&self.y);
+        self.sigma_f_hat2 = dot(&self.y, &self.alpha) / self.y.len() as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::draw_gp_dataset;
+    use crate::gp::{predict, profiled};
+    use crate::kernels::{paper_k1, PaperK1};
+    use crate::rng::Xoshiro256;
+
+    fn trained_predictor(n: usize, seed: u64) -> (Predictor, Vec<f64>, Vec<f64>) {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), n, &mut rng);
+        let ev = profiled::eval(&model, &data.t, &data.y, &PaperK1::truth()).unwrap();
+        let p = Predictor::from_eval(
+            paper_k1(0.1),
+            data.t.clone(),
+            data.y.clone(),
+            PaperK1::truth(),
+            ev,
+        );
+        (p, data.t, data.y)
+    }
+
+    #[test]
+    fn batch_matches_pointwise_predict_bitwise() {
+        let (p, t, y) = trained_predictor(40, 9);
+        let model = paper_k1(0.1);
+        let ev = profiled::eval(&model, &t, &y, &PaperK1::truth()).unwrap();
+        let t_star: Vec<f64> = (0..25).map(|i| 0.5 + 1.7 * i as f64).collect();
+        let reference = predict::predict(&model, &t, &PaperK1::truth(), &ev, &t_star);
+        let served = p.predict_batch(&t_star, &ExecutionContext::seq());
+        assert_eq!(served.mean, reference.mean, "serial batch mean must be bit-identical");
+        assert_eq!(served.sd, reference.sd, "serial batch sd must be bit-identical");
+    }
+
+    #[test]
+    fn batch_is_bit_identical_across_threads() {
+        let (p, _, _) = trained_predictor(150, 11);
+        let t_star: Vec<f64> = (0..400).map(|i| 0.13 + 0.37 * i as f64).collect();
+        let serial = p.predict_batch(&t_star, &ExecutionContext::seq());
+        for threads in [2usize, 4] {
+            let par = p.predict_batch(&t_star, &ExecutionContext::new(threads));
+            assert_eq!(par.mean, serial.mean, "threads={threads}");
+            assert_eq!(par.sd, serial.sd, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn observe_matches_cold_refit() {
+        let model = paper_k1(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 45, &mut rng);
+        let (head_t, tail_t) = data.t.split_at(30);
+        let (head_y, tail_y) = data.y.split_at(30);
+        let mut p = Predictor::fit(
+            paper_k1(0.1),
+            head_t,
+            head_y,
+            &PaperK1::truth(),
+            &ExecutionContext::seq(),
+        )
+        .unwrap();
+        p.observe_batch(tail_t, tail_y).unwrap();
+        // cold refit on the full 45 points at the same θ
+        let ev = profiled::eval(&model, &data.t, &data.y, &PaperK1::truth()).unwrap();
+        assert!(
+            (p.sigma_f_hat2() - ev.sigma_f_hat2).abs() < 1e-10 * ev.sigma_f_hat2,
+            "σ̂² {} vs {}",
+            p.sigma_f_hat2(),
+            ev.sigma_f_hat2
+        );
+        assert!((p.lnp() - ev.lnp).abs() < 1e-8 * ev.lnp.abs(), "{} vs {}", p.lnp(), ev.lnp);
+        let t_star: Vec<f64> = (0..60).map(|i| 0.4 + 0.75 * i as f64).collect();
+        let cold = predict::predict(&model, &data.t, &PaperK1::truth(), &ev, &t_star);
+        let served = p.predict_batch(&t_star, &ExecutionContext::seq());
+        for i in 0..t_star.len() {
+            assert!(
+                (served.mean[i] - cold.mean[i]).abs() < 1e-8,
+                "mean[{i}]: {} vs {}",
+                served.mean[i],
+                cold.mean[i]
+            );
+            assert!(
+                (served.sd[i] - cold.sd[i]).abs() < 1e-8,
+                "sd[{i}]: {} vs {}",
+                served.sd[i],
+                cold.sd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn stats_count_queries_and_observations() {
+        let (mut p, _, _) = trained_predictor(20, 17);
+        assert_eq!(p.stats(), ServeStats { n_train: 20, ..Default::default() });
+        let _ = p.predict_batch(&[1.0, 2.0, 3.0], &ExecutionContext::seq());
+        p.observe(21.5, 0.3).unwrap();
+        let _ = p.predict_batch(&[4.0], &ExecutionContext::seq());
+        let s = p.stats();
+        assert_eq!(s.n_train, 21);
+        assert_eq!(s.queries_served, 4);
+        assert_eq!(s.observations_appended, 1);
+    }
+
+    #[test]
+    fn failed_mid_batch_observe_leaves_predictor_serviceable() {
+        let (mut p, _, _) = trained_predictor(25, 23);
+        // a NaN input time makes Chol::extend fail deterministically
+        // (non-finite Schur complement) before any state is mutated
+        let err = p.observe_batch(&[26.0, f64::NAN, 27.0], &[0.1, 0.2, 0.3]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("non-PD"), "unexpected error: {msg}");
+        // the successfully appended prefix (26.0) is fully incorporated…
+        let s = p.stats();
+        assert_eq!(s.n_train, 26);
+        assert_eq!(s.observations_appended, 1);
+        assert!(p.sigma_f_hat2().is_finite());
+        // …and serving still works: α matches the grown factor
+        let out = p.predict_batch(&[25.5, 26.5], &ExecutionContext::seq());
+        assert!(out.mean.iter().all(|v| v.is_finite()));
+        assert!(out.sd.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let (p, _, _) = trained_predictor(15, 19);
+        let out = p.predict_batch(&[], &ExecutionContext::new(4));
+        assert!(out.mean.is_empty() && out.sd.is_empty());
+        assert_eq!(p.stats().queries_served, 0);
+    }
+}

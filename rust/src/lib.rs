@@ -53,6 +53,22 @@
 //! bit-identical for any thread count — asserted in
 //! `rust/tests/parallel_equivalence.rs`.
 //!
+//! ### Serving layer (streaming prediction engine)
+//!
+//! Training pays `O(n³)` once; serving must not. [`gp::serve::Predictor`]
+//! caches the trained state — ϑ̂, the Cholesky factor, `α = K̃⁻¹y`, σ̂_f² —
+//! and answers **batched** predictive-mean/variance queries (eq. 2.1) in
+//! `O(q n²)`: one parallel cross-covariance assembly plus one multi-RHS
+//! triangular solve per batch, never refactorising. New observations
+//! stream in through `O(n²)` factor maintenance in [`linalg`]:
+//! [`linalg::Chol::extend`] (bordered factorisation) and
+//! [`linalg::Chol::rank1_update`] / [`linalg::Chol::rank1_downdate`]
+//! (LINPACK-style sweeps). [`coordinator::ServeSession`] wires a training
+//! run straight into a live session (`train_and_serve` → `predict` /
+//! `observe`); `examples/streaming_tidal.rs` replays the tidal series as
+//! an arriving stream and verifies streamed serving ≡ from-scratch refit
+//! to 1e-8.
+//!
 //! ## Quick start
 //!
 //! ```

@@ -8,6 +8,16 @@
 //! register-blocked `C -= A Bᵀ` micro-kernel over row-major storage that
 //! the compiler auto-vectorises.
 //!
+//! ## Streaming primitives
+//!
+//! The serving layer ([`crate::gp::serve`]) amortises one factorisation
+//! across many queries and data arrivals, so [`Chol`] also supports
+//! `O(n²)` *incremental* maintenance: [`Chol::extend`] appends one
+//! observation (bordered factorisation — one triangular solve plus a
+//! square root), and [`Chol::rank1_update`] / [`Chol::rank1_downdate`]
+//! apply `K ± xxᵀ` via Givens / hyperbolic sweeps (LINPACK
+//! `dchud`/`dchdd`). All three maintain the cached log-determinant.
+//!
 //! ## Parallelism
 //!
 //! With a multi-thread [`ExecutionContext`], the panel TRSM and the
@@ -21,7 +31,9 @@
 //! **bit-identical** for any thread count.
 
 use super::{solve_lower, solve_lower_transpose, Matrix};
-use crate::runtime::exec::{even_bounds, split_rows_mut, weighted_bounds, ExecutionContext};
+use crate::runtime::exec::{
+    even_bounds, for_row_chunks, split_rows_mut, weighted_bounds, ExecutionContext, PAR_MIN_WORK,
+};
 use std::fmt;
 
 /// Block size for the panel factorisation. 48–96 all perform similarly on
@@ -147,23 +159,139 @@ impl Chol {
         // the factorisation's PAR_MIN_ROWS)
         let jobs = if n < 256 { 1 } else { ctx.threads().min(m.max(1)) };
         let bounds = even_bounds(0, m, jobs);
-        let chunks = split_rows_mut(out.as_mut_slice(), n, &bounds);
         let l = &self.l;
         let bt_ref = &bt;
-        let mut job_fns = Vec::with_capacity(chunks.len());
-        for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
-            let (c0, c1) = (w[0], w[1]);
-            job_fns.push(move || {
-                for c in c0..c1 {
-                    let row = &mut chunk[(c - c0) * n..(c - c0 + 1) * n];
-                    row.copy_from_slice(bt_ref.row(c));
-                    solve_lower(l, row);
-                    solve_lower_transpose(l, row);
-                }
-            });
-        }
-        ctx.run_jobs(job_fns);
+        for_row_chunks(out.as_mut_slice(), n, &bounds, ctx, |chunk, c0, c1| {
+            for c in c0..c1 {
+                let row = &mut chunk[(c - c0) * n..(c - c0 + 1) * n];
+                row.copy_from_slice(bt_ref.row(c));
+                solve_lower(l, row);
+                solve_lower_transpose(l, row);
+            }
+        });
         out.transpose()
+    }
+
+    /// Solve `L w = b` for several right-hand-side rows at once: `b` is
+    /// `q×n` row-major with one RHS per **row**, solved in place. Rows are
+    /// independent, so they are distributed over the context's threads;
+    /// each row's sweep is the serial [`solve_lower`], so results are
+    /// bit-identical for any thread count. This is the multi-RHS TRSM of
+    /// the serving layer's batched predictive variance.
+    pub fn half_solve_rows_with(&self, b: &mut Matrix, ctx: &ExecutionContext) {
+        let n = self.dim();
+        assert_eq!(b.cols(), n, "RHS rows must have length n");
+        let q = b.rows();
+        // gate on total batch size, not n alone: a large batch over a
+        // small factor is still O(q n²) of work worth distributing
+        let jobs =
+            if q * n < PAR_MIN_WORK { 1 } else { ctx.threads().min(q.max(1)) };
+        let bounds = even_bounds(0, q, jobs);
+        let l = &self.l;
+        for_row_chunks(b.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
+            for r in r0..r1 {
+                solve_lower(l, &mut chunk[(r - r0) * n..(r - r0 + 1) * n]);
+            }
+        });
+    }
+
+    /// Grow the factorisation by one observation in `O(n²)` — the
+    /// streaming-serving primitive. Given the cross-covariances `cross`
+    /// (`k(t_new, t_i)` for the existing `n` points) and the new
+    /// diagonal entry `diag = k(0) + σ_n²`, the factor of the bordered
+    /// matrix `[[K, k], [kᵀ, d]]` is `[[L, 0], [wᵀ, l₂₂]]` with
+    /// `w = L⁻¹k` (one triangular solve) and `l₂₂ = √(d − wᵀw)`.
+    ///
+    /// The first `n` rows of the factor are untouched — exactly what a
+    /// cold refactorisation would produce for them — so repeated extends
+    /// stay within rounding of a from-scratch factor of the grown matrix
+    /// (asserted at 1e-10 in `rust/tests/serving.rs`).
+    ///
+    /// Errors when the bordered matrix is not positive definite
+    /// (`d ≤ wᵀw`, e.g. a duplicate input point with no jitter).
+    pub fn extend(&mut self, cross: &[f64], diag: f64) -> Result<(), CholError> {
+        let n = self.dim();
+        assert_eq!(cross.len(), n, "cross-covariance length mismatch");
+        let mut w = cross.to_vec();
+        solve_lower(&self.l, &mut w);
+        let d = diag - super::dot(&w, &w);
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholError { pivot: n, value: d });
+        }
+        let l22 = d.sqrt();
+        // regrow the row-major storage (cols changes, so rows must move;
+        // an O(n²) copy — same order as the solve above)
+        let mut grown = Matrix::zeros(n + 1, n + 1);
+        for i in 0..n {
+            // only the lower triangle is live; the rest stays zero
+            grown.row_mut(i)[..=i].copy_from_slice(&self.l.row(i)[..=i]);
+        }
+        grown.row_mut(n)[..n].copy_from_slice(&w);
+        grown[(n, n)] = l22;
+        self.l = grown;
+        self.logdet += 2.0 * l22.ln();
+        Ok(())
+    }
+
+    /// Rank-1 **update** in place: the factor of `K + x xᵀ` in `O(n²)`
+    /// (LINPACK `dchud`-style Givens sweep). `x` is consumed as scratch.
+    pub fn rank1_update(&mut self, x: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(x.len(), n);
+        let c = self.l.cols();
+        let data = self.l.as_mut_slice();
+        for k in 0..n {
+            let lkk = data[k * c + k];
+            let r = (lkk * lkk + x[k] * x[k]).sqrt();
+            let co = r / lkk;
+            let si = x[k] / lkk;
+            data[k * c + k] = r;
+            for i in (k + 1)..n {
+                let lik = (data[i * c + k] + si * x[i]) / co;
+                data[i * c + k] = lik;
+                x[i] = co * x[i] - si * lik;
+            }
+        }
+        let mut logdet = 0.0;
+        for i in 0..n {
+            logdet += data[i * c + i].ln();
+        }
+        self.logdet = 2.0 * logdet;
+    }
+
+    /// Rank-1 **downdate** in place: the factor of `K − x xᵀ` in `O(n²)`
+    /// (hyperbolic-rotation sweep). `x` is consumed as scratch.
+    ///
+    /// Fails — leaving the factor partially downdated and unusable —
+    /// when `K − x xᵀ` is not positive definite; callers must treat the
+    /// error as fatal for this factor (refactor from scratch).
+    pub fn rank1_downdate(&mut self, x: &mut [f64]) -> Result<(), CholError> {
+        let n = self.dim();
+        assert_eq!(x.len(), n);
+        let c = self.l.cols();
+        let data = self.l.as_mut_slice();
+        for k in 0..n {
+            let lkk = data[k * c + k];
+            let d = lkk * lkk - x[k] * x[k];
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholError { pivot: k, value: d });
+            }
+            let r = d.sqrt();
+            let co = r / lkk;
+            let si = x[k] / lkk;
+            data[k * c + k] = r;
+            for i in (k + 1)..n {
+                let lik = (data[i * c + k] - si * x[i]) / co;
+                data[i * c + k] = lik;
+                x[i] = co * x[i] - si * lik;
+            }
+        }
+        let mut logdet = 0.0;
+        for i in 0..n {
+            logdet += data[i * c + i].ln();
+        }
+        self.logdet = 2.0 * logdet;
+        Ok(())
     }
 
     /// Explicit inverse `K⁻¹ = L⁻ᵀ L⁻¹` (dpotri-style, serial).
@@ -193,26 +321,20 @@ impl Chol {
         let mut u = Matrix::zeros(n, n);
         {
             let bounds = weighted_bounds(0, n, jobs, |j| ((n - j) as f64) * ((n - j) as f64));
-            let chunks = split_rows_mut(u.as_mut_slice(), n, &bounds);
-            let mut job_fns = Vec::with_capacity(chunks.len());
-            for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
-                let (r0, r1) = (w[0], w[1]);
-                job_fns.push(move || {
-                    for j in r0..r1 {
-                        let urow = &mut chunk[(j - r0) * n..(j - r0 + 1) * n];
-                        urow[j] = 1.0 / ld[j * c + j];
-                        for i in (j + 1)..n {
-                            let lrow = &ld[i * c..i * c + i];
-                            let mut acc = 0.0;
-                            for k in j..i {
-                                acc += lrow[k] * urow[k];
-                            }
-                            urow[i] = -acc / ld[i * c + i];
+            for_row_chunks(u.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
+                for j in r0..r1 {
+                    let urow = &mut chunk[(j - r0) * n..(j - r0 + 1) * n];
+                    urow[j] = 1.0 / ld[j * c + j];
+                    for i in (j + 1)..n {
+                        let lrow = &ld[i * c..i * c + i];
+                        let mut acc = 0.0;
+                        for k in j..i {
+                            acc += lrow[k] * urow[k];
                         }
+                        urow[i] = -acc / ld[i * c + i];
                     }
-                });
-            }
-            ctx.run_jobs(job_fns);
+                }
+            });
         }
         // W[a][b] = Σ_{k ≥ max(a,b)} U[a][k] U[b][k]; fill the upper
         // triangle row-parallel, then mirror.
@@ -220,26 +342,20 @@ impl Chol {
         {
             let u_ref = &u;
             let bounds = weighted_bounds(0, n, jobs, |a| ((n - a) as f64) * ((n - a) as f64));
-            let chunks = split_rows_mut(w.as_mut_slice(), n, &bounds);
-            let mut job_fns = Vec::with_capacity(chunks.len());
-            for (chunk, wnd) in chunks.into_iter().zip(bounds.windows(2)) {
-                let (r0, r1) = (wnd[0], wnd[1]);
-                job_fns.push(move || {
-                    for a in r0..r1 {
-                        let wrow = &mut chunk[(a - r0) * n..(a - r0 + 1) * n];
-                        let ua = u_ref.row(a);
-                        for b in a..n {
-                            let ub = u_ref.row(b);
-                            let mut acc = 0.0;
-                            for k in b..n {
-                                acc += ua[k] * ub[k];
-                            }
-                            wrow[b] = acc;
+            for_row_chunks(w.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
+                for a in r0..r1 {
+                    let wrow = &mut chunk[(a - r0) * n..(a - r0 + 1) * n];
+                    let ua = u_ref.row(a);
+                    for b in a..n {
+                        let ub = u_ref.row(b);
+                        let mut acc = 0.0;
+                        for k in b..n {
+                            acc += ua[k] * ub[k];
                         }
+                        wrow[b] = acc;
                     }
-                });
-            }
-            ctx.run_jobs(job_fns);
+                }
+            });
         }
         w.mirror_upper_to_lower();
         w
@@ -402,26 +518,20 @@ fn par_syrk(
     let c = a.cols();
     let bounds = weighted_bounds(t0, n, jobs, |i| (i - t0 + 1) as f64);
     let (_, tail) = a.as_mut_slice().split_at_mut(t0 * c);
-    let chunks = split_rows_mut(tail, c, &bounds);
-    let mut job_fns = Vec::with_capacity(chunks.len());
-    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
-        let (r0, r1) = (w[0], w[1]);
-        job_fns.push(move || {
-            for r in r0..r1 {
-                let lrow = (r - r0) * c;
-                let prow = (r - t0) * nb;
-                for j in t0..=r {
-                    let pj = (j - t0) * nb;
-                    let mut acc = 0.0;
-                    for k in 0..nb {
-                        acc += panel[prow + k] * panel[pj + k];
-                    }
-                    chunk[lrow + j] -= acc;
+    for_row_chunks(tail, c, &bounds, ctx, |chunk, r0, r1| {
+        for r in r0..r1 {
+            let lrow = (r - r0) * c;
+            let prow = (r - t0) * nb;
+            for j in t0..=r {
+                let pj = (j - t0) * nb;
+                let mut acc = 0.0;
+                for k in 0..nb {
+                    acc += panel[prow + k] * panel[pj + k];
                 }
+                chunk[lrow + j] -= acc;
             }
-        });
-    }
-    ctx.run_jobs(job_fns);
+        }
+    });
 }
 
 /// In-place blocked lower Cholesky with the trailing update parallelised
@@ -627,6 +737,147 @@ mod tests {
         k[(150, 150)] = -1e6;
         let ctx = ExecutionContext::new(4);
         assert!(Chol::factor_with(&k, &ctx).is_err());
+    }
+
+    /// Max |A − B| over the lower triangles only (the upper triangle of a
+    /// factor is garbage by contract).
+    fn lower_diff(a: &Matrix, b: &Matrix) -> f64 {
+        assert_eq!(a.rows(), b.rows());
+        let mut d = 0.0f64;
+        for i in 0..a.rows() {
+            for j in 0..=i {
+                d = d.max((a[(i, j)] - b[(i, j)]).abs());
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn extend_matches_cold_factor() {
+        let mut rng = Xoshiro256::seed_from_u64(53);
+        for &n in &[1usize, 5, 30, 90] {
+            let big = random_spd(n + 3, &mut rng);
+            // factor the leading n×n, then extend three times
+            let mut lead = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    lead[(i, j)] = big[(i, j)];
+                }
+            }
+            let mut ch = Chol::factor(&lead).unwrap();
+            for k in n..n + 3 {
+                let cross: Vec<f64> = (0..k).map(|i| big[(k, i)]).collect();
+                ch.extend(&cross, big[(k, k)]).unwrap();
+            }
+            let cold = Chol::factor(&big).unwrap();
+            assert_eq!(ch.dim(), n + 3);
+            let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+            assert!(d < 1e-10, "n={n}: extended factor differs from cold by {d:.3e}");
+            assert!(
+                (ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs().max(1.0),
+                "n={n}: logdet {} vs {}",
+                ch.logdet(),
+                cold.logdet()
+            );
+            // the grown factor must actually solve the grown system
+            let b: Vec<f64> = (0..n + 3).map(|_| rng.normal()).collect();
+            let x = ch.solve(&b);
+            let r = big.matvec(&x);
+            for i in 0..n + 3 {
+                assert!((r[i] - b[i]).abs() < 1e-8, "residual {}", (r[i] - b[i]).abs());
+            }
+        }
+    }
+
+    #[test]
+    fn extend_rejects_non_pd_border() {
+        let mut rng = Xoshiro256::seed_from_u64(59);
+        let k = random_spd(20, &mut rng);
+        let mut ch = Chol::factor(&k).unwrap();
+        // bordering with K's own first column and half its diagonal makes
+        // the Schur complement −K₀₀/2 < 0
+        let cross: Vec<f64> = (0..20).map(|i| k[(i, 0)]).collect();
+        let err = ch.extend(&cross, 0.5 * k[(0, 0)]).unwrap_err();
+        assert_eq!(err.pivot, 20);
+        assert!(err.value <= 0.0);
+    }
+
+    #[test]
+    fn rank1_update_matches_cold_factor() {
+        let mut rng = Xoshiro256::seed_from_u64(61);
+        for &n in &[1usize, 7, 40, 120] {
+            let k = random_spd(n, &mut rng);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut kx = k.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    kx[(i, j)] += x[i] * x[j];
+                }
+            }
+            let mut ch = Chol::factor(&k).unwrap();
+            let mut scratch = x.clone();
+            ch.rank1_update(&mut scratch);
+            let cold = Chol::factor(&kx).unwrap();
+            let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+            assert!(d < 1e-10, "n={n}: updated factor differs from cold by {d:.3e}");
+            assert!((ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn rank1_update_downdate_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(67);
+        for &n in &[5usize, 50, 150] {
+            let k = random_spd(n, &mut rng);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let orig = Chol::factor(&k).unwrap();
+            let mut ch = orig.clone();
+            let mut up = x.clone();
+            ch.rank1_update(&mut up);
+            let mut down = x.clone();
+            ch.rank1_downdate(&mut down).unwrap();
+            let d = lower_diff(ch.factor_matrix(), orig.factor_matrix());
+            assert!(d < 1e-10, "n={n}: update→downdate drifts by {d:.3e}");
+            assert!((ch.logdet() - orig.logdet()).abs() < 1e-9 * orig.logdet().abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn rank1_downdate_rejects_non_pd() {
+        let k = Matrix::diag(&[4.0, 9.0]);
+        let mut ch = Chol::factor(&k).unwrap();
+        // subtracting xxᵀ with x = (3, 0) makes the (0,0) pivot negative
+        let mut x = vec![3.0, 0.0];
+        let err = ch.rank1_downdate(&mut x).unwrap_err();
+        assert_eq!(err.pivot, 0);
+        assert!(err.value <= 0.0);
+    }
+
+    #[test]
+    fn half_solve_rows_matches_scalar_half_solve() {
+        let mut rng = Xoshiro256::seed_from_u64(71);
+        for &n in &[30usize, 300] {
+            let k = random_spd(n, &mut rng);
+            let ch = Chol::factor(&k).unwrap();
+            let q = 7;
+            let mut b = Matrix::zeros(q, n);
+            for r in 0..q {
+                for j in 0..n {
+                    b[(r, j)] = rng.normal();
+                }
+            }
+            let want: Vec<Vec<f64>> = (0..q).map(|r| ch.half_solve(b.row(r))).collect();
+            for threads in [1usize, 3] {
+                let ctx = ExecutionContext::new(threads);
+                let mut got = b.clone();
+                ch.half_solve_rows_with(&mut got, &ctx);
+                for r in 0..q {
+                    for j in 0..n {
+                        assert_eq!(got[(r, j)], want[r][j], "n={n} threads={threads}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -134,6 +134,13 @@ impl ExecutionContext {
     }
 }
 
+/// Below this many `f64` elements of touched data an `O(q·n)`-shaped
+/// batch kernel stays on the calling thread — the spawn cost of a scoped
+/// dispatch outweighs the work. Shared by the serving-layer stages
+/// (cross-covariance assembly, multi-RHS TRSM, variances) so one retune
+/// moves them in lockstep.
+pub const PAR_MIN_WORK: usize = 32_768;
+
 /// Even partition of `lo..hi` into at most `k` non-empty chunks:
 /// ascending bounds starting at `lo` and ending at `hi`.
 pub fn even_bounds(lo: usize, hi: usize, k: usize) -> Vec<usize> {
@@ -185,6 +192,36 @@ pub fn split_rows_mut<'a, T>(data: &'a mut [T], cols: usize, bounds: &[usize]) -
         rest = tail;
     }
     chunks
+}
+
+/// The repeated chunking dance of every row-parallel kernel in one call:
+/// split the row-major storage `data` (rows `bounds[0]..bounds[last]`,
+/// `cols` columns) along `bounds`, and run `f(chunk, r0, r1)` for each
+/// chunk on the context's threads. `f` sees the *global* row range
+/// `r0..r1` its chunk covers; `chunk` starts at row `r0`.
+///
+/// Callers keep choosing their own partition ([`even_bounds`] or
+/// [`weighted_bounds`]) — only the split→zip→run_jobs boilerplate is
+/// collapsed. Per-chunk arithmetic order is whatever `f` does, so a site
+/// ported onto this helper is bit-identical to its hand-rolled original.
+pub fn for_row_chunks<T, F>(
+    data: &mut [T],
+    cols: usize,
+    bounds: &[usize],
+    ctx: &ExecutionContext,
+    f: F,
+) where
+    T: Send,
+    F: Fn(&mut [T], usize, usize) + Sync,
+{
+    let chunks = split_rows_mut(data, cols, bounds);
+    let f = &f;
+    let mut job_fns = Vec::with_capacity(chunks.len());
+    for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
+        let (r0, r1) = (w[0], w[1]);
+        job_fns.push(move || f(chunk, r0, r1));
+    }
+    ctx.run_jobs(job_fns);
 }
 
 #[cfg(test)]
@@ -269,6 +306,33 @@ mod tests {
         }
         // first chunk (cheap rows) must hold more rows than the last
         assert!(b[1] - b[0] > 100 - b[b.len() - 2]);
+    }
+
+    #[test]
+    fn for_row_chunks_partitions_exactly_once() {
+        // every cell written exactly once, with the correct global row
+        // index, for even and weighted partitions and any thread count
+        for threads in [1usize, 2, 4, 7] {
+            let ctx = ExecutionContext::new(threads);
+            for (lo, hi) in [(0usize, 13usize), (3, 29), (5, 6), (0, 1)] {
+                let cols = 3;
+                let mut data = vec![-1.0f64; (hi - lo) * cols];
+                let bounds = weighted_bounds(lo, hi, threads, |i| (i + 1) as f64);
+                for_row_chunks(&mut data, cols, &bounds, &ctx, |chunk, r0, r1| {
+                    assert_eq!(chunk.len(), (r1 - r0) * cols);
+                    for r in r0..r1 {
+                        for c in 0..cols {
+                            let cell = &mut chunk[(r - r0) * cols + c];
+                            assert_eq!(*cell, -1.0, "row {r} written twice");
+                            *cell = (r * cols + c) as f64;
+                        }
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, (lo * cols + i) as f64, "cell {i} wrong/unwritten");
+                }
+            }
+        }
     }
 
     #[test]

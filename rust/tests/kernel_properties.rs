@@ -1,0 +1,237 @@
+//! Property tests for **every** kernel in `rust/src/kernels/`, via the
+//! `propcheck` mini-framework:
+//!
+//! 1. **symmetry** — stationarity in the lag: `k(Δt) = k(−Δt)` (so
+//!    `k(x, x′) = k(x′, x)`), exactly;
+//! 2. **positive definiteness** — the Gram matrix on a random irregular
+//!    grid admits a Cholesky factorisation once the standard σ_n² jitter
+//!    is on the diagonal;
+//! 3. **gradients** — `value_grad` matches central finite differences of
+//!    `value` in every hyperparameter, and the `value_grad_hess` Hessian
+//!    is symmetric and consistent with FD of the gradient.
+//!
+//! The kernel zoo below covers each concrete factor (Wendland, Periodic,
+//! SquaredExponential, Matern32, Matern52, Amplitude) and both
+//! combinators (ProductKernel, SumKernel), including the paper's k₁/k₂.
+
+use gpfast::kernels::{
+    paper_k1, paper_k2, Amplitude, DataSpan, Matern32, Matern52, Periodic, ProductKernel,
+    SquaredExponential, StationaryKernel, SumKernel, Wendland,
+};
+use gpfast::linalg::{Chol, Matrix};
+use gpfast::propcheck::{property, Gen};
+
+/// Every kernel under test, freshly built (kernels are not `Clone`).
+/// Index 0..N-1 must stay stable across calls — properties draw a kernel
+/// by index.
+fn build_kernel(idx: usize) -> (&'static str, Box<dyn StationaryKernel>) {
+    match idx {
+        0 => ("wendland", Box::new(ProductKernel::new(vec![Box::new(Wendland)]))),
+        1 => (
+            "periodic",
+            Box::new(ProductKernel::new(vec![Box::new(Periodic::new(1))])),
+        ),
+        2 => (
+            "squared-exponential",
+            Box::new(ProductKernel::new(vec![Box::new(SquaredExponential::new(1))])),
+        ),
+        3 => (
+            "matern32",
+            Box::new(ProductKernel::new(vec![Box::new(Matern32::new(1))])),
+        ),
+        4 => (
+            "matern52",
+            Box::new(ProductKernel::new(vec![Box::new(Matern52::new(1))])),
+        ),
+        5 => (
+            "amplitude×periodic",
+            Box::new(ProductKernel::new(vec![
+                Box::new(Amplitude::new(1)),
+                Box::new(Periodic::new(1)),
+            ])),
+        ),
+        6 => ("k1", paper_k1(0.1).kernel),
+        7 => ("k2", paper_k2(0.1).kernel),
+        8 => (
+            "se+amp×periodic (sum)",
+            Box::new(SumKernel::new(vec![
+                Box::new(ProductKernel::new(vec![Box::new(SquaredExponential::new(1))])),
+                Box::new(ProductKernel::new(vec![
+                    Box::new(Amplitude::new(1)),
+                    Box::new(Periodic::new(1)),
+                ])),
+            ])),
+        ),
+        _ => unreachable!(),
+    }
+}
+
+const N_KERNELS: usize = 9;
+
+/// A hyperparameter point drawn uniformly from the interior of the
+/// kernel's own prior box (edges excluded so FD probes stay inside),
+/// with ordering constraints respected.
+fn gen_theta(g: &mut Gen, kernel: &dyn StationaryKernel, span: &DataSpan) -> Vec<f64> {
+    let bounds = kernel.bounds(span);
+    let mut theta: Vec<f64> = bounds
+        .iter()
+        .map(|(lo, hi)| {
+            let w = hi - lo;
+            g.f64(lo + 0.05 * w, hi - 0.05 * w)
+        })
+        .collect();
+    for (i, j) in kernel.ordering_constraints() {
+        if theta[i] > theta[j] {
+            theta.swap(i, j);
+        }
+    }
+    theta
+}
+
+/// Random irregular grid with spacings in [0.3, 2.5].
+fn gen_times(g: &mut Gen, max_n: usize) -> Vec<f64> {
+    let n = g.usize(6..max_n);
+    let mut t = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += g.f64(0.3, 2.5);
+        t.push(acc);
+    }
+    t
+}
+
+#[test]
+fn every_kernel_is_symmetric_in_the_lag() {
+    property("k(Δt) = k(−Δt) for every kernel", 60, |g| {
+        let idx = g.usize(0..N_KERNELS);
+        let (name, kernel) = build_kernel(idx);
+        let span = DataSpan { dt_min: 0.3, dt_max: 40.0 };
+        let theta = gen_theta(g, kernel.as_ref(), &span);
+        let mut prep = kernel.prepare(&theta);
+        for _ in 0..8 {
+            let dt = g.f64(0.0, 30.0);
+            let (a, b) = (prep.value(dt), prep.value(-dt));
+            if a != b {
+                return Err(format!("{name}: k({dt}) = {a} but k(−{dt}) = {b}"));
+            }
+            if !a.is_finite() || a < 0.0 {
+                return Err(format!("{name}: k({dt}) = {a} not finite/non-negative"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_kernel_gram_matrix_is_pd_with_jitter() {
+    property("Cholesky succeeds on every kernel's jittered Gram", 40, |g| {
+        let idx = g.usize(0..N_KERNELS);
+        let (name, kernel) = build_kernel(idx);
+        let t = gen_times(g, 30);
+        let span = DataSpan::from_times(&t);
+        let theta = gen_theta(g, kernel.as_ref(), &span);
+        let mut prep = kernel.prepare(&theta);
+        let n = t.len();
+        // σ_n²-style diagonal jitter scaled to the kernel's own k(0)
+        let jitter = 1e-6 * prep.value(0.0).max(1e-12);
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k[(i, j)] = prep.value(t[i] - t[j]);
+            }
+            k[(i, i)] += jitter;
+        }
+        match Chol::factor(&k) {
+            Ok(_) => Ok(()),
+            Err(e) => Err(format!("{name}: Gram not PD at θ={theta:?}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn every_kernel_gradient_matches_finite_differences() {
+    property("analytic ∂k/∂ϑ = FD for every kernel", 30, |g| {
+        let idx = g.usize(0..N_KERNELS);
+        let (name, kernel) = build_kernel(idx);
+        let span = DataSpan { dt_min: 0.5, dt_max: 30.0 };
+        let theta = gen_theta(g, kernel.as_ref(), &span);
+        let m = kernel.dim();
+        let dt = g.f64(0.1, 8.0);
+        let mut grad = vec![0.0; m];
+        let v = kernel.prepare(&theta).value_grad(dt, &mut grad);
+        // compact support: the contract says all derivatives are zero
+        if v == 0.0 {
+            return if grad.iter().all(|&x| x == 0.0) {
+                Ok(())
+            } else {
+                Err(format!("{name}: zero value but nonzero gradient"))
+            };
+        }
+        for a in 0..m {
+            let h = 1e-6 * theta[a].abs().max(0.05);
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let fp = kernel.prepare(&tp).value(dt);
+            let fm = kernel.prepare(&tm).value(dt);
+            let fd = (fp - fm) / (2.0 * h);
+            // rel_diff floors the denominator at 1 — the same metric and
+            // tolerance the in-crate FD suites use
+            if gpfast::math::rel_diff(grad[a], fd) > 5e-4 {
+                return Err(format!(
+                    "{name}: grad[{a}] at dt={dt} θ={theta:?}: analytic {} vs FD {fd}",
+                    grad[a]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_kernel_hessian_is_symmetric_and_matches_fd_of_gradient() {
+    property("∂²k symmetric + consistent with FD(∂k)", 20, |g| {
+        let idx = g.usize(0..N_KERNELS);
+        let (name, kernel) = build_kernel(idx);
+        let span = DataSpan { dt_min: 0.5, dt_max: 30.0 };
+        let theta = gen_theta(g, kernel.as_ref(), &span);
+        let m = kernel.dim();
+        let dt = g.f64(0.1, 8.0);
+        let mut grad = vec![0.0; m];
+        let mut hess = vec![0.0; m * m];
+        let v = kernel.prepare(&theta).value_grad_hess(dt, &mut grad, &mut hess);
+        if v == 0.0 {
+            return Ok(());
+        }
+        for a in 0..m {
+            for b in 0..m {
+                let (hab, hba) = (hess[a * m + b], hess[b * m + a]);
+                if (hab - hba).abs() > 1e-9 * hab.abs().max(1e-9) {
+                    return Err(format!("{name}: H[{a},{b}] = {hab} ≠ H[{b},{a}] = {hba}"));
+                }
+            }
+        }
+        for a in 0..m {
+            let h = 1e-6 * theta[a].abs().max(0.05);
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let mut gp = vec![0.0; m];
+            let mut gm = vec![0.0; m];
+            kernel.prepare(&tp).value_grad(dt, &mut gp);
+            kernel.prepare(&tm).value_grad(dt, &mut gm);
+            for b in 0..m {
+                let fd = (gp[b] - gm[b]) / (2.0 * h);
+                if gpfast::math::rel_diff(hess[a * m + b], fd) > 1e-3 {
+                    return Err(format!(
+                        "{name}: H[{a},{b}] at dt={dt}: analytic {} vs FD {fd}",
+                        hess[a * m + b]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -143,6 +143,11 @@ fn prior_cube_roundtrip_volume_consistency() {
 }
 
 #[test]
+#[ignore = "wall-clock heavy: k2 multistart (10 restarts) at n = 300 — minutes serial, \
+            and tier-1 now runs twice (ci.sh serial+parallel passes). Statistical \
+            recovery is a paper-validation check, not a regression gate; run \
+            explicitly with `cargo test --release -- --ignored`. Tracked in \
+            ROADMAP.md §Tier-1 test ledger."]
 fn truth_parameters_recovered_within_error_bars_on_large_n() {
     // statistical sanity at n = 300, k2. The periodic hyperlikelihood is
     // genuinely multimodal (harmonic aliases — the phenomenon behind the

@@ -1,0 +1,237 @@
+//! Integration tests for the streaming prediction engine: the rank-1 /
+//! bordered factor maintenance in `linalg`, the cached-factor batch
+//! predictor in `gp::serve`, and the coordinator `ServeSession` — the
+//! acceptance criteria of the serving-subsystem issue.
+
+use gpfast::coordinator::{ModelSpec, ServeSession, TrainOptions};
+use gpfast::data::tidal::{generate_tidal, TidalConfig};
+use gpfast::gp::profiled::ProfiledEval;
+use gpfast::gp::{predict, serve::Predictor};
+use gpfast::kernels::{paper_k1, TIDAL_SIGMA_N};
+use gpfast::linalg::{Chol, Matrix};
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+
+/// Random SPD matrix `A Aᵀ + n·I` (well-conditioned by construction).
+fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = rng.normal();
+        }
+    }
+    let mut spd = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += a[(i, k)] * a[(j, k)];
+            }
+            spd[(i, j)] = s + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    spd
+}
+
+fn lower_diff(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.rows(), b.rows());
+    let mut d = 0.0f64;
+    for i in 0..a.rows() {
+        for j in 0..=i {
+            d = d.max((a[(i, j)] - b[(i, j)]).abs());
+        }
+    }
+    d
+}
+
+/// Issue acceptance: L after k incremental extends is within 1e-10 of a
+/// cold factorisation of the grown matrix.
+#[test]
+fn factor_after_k_extends_matches_cold_factorisation() {
+    let mut rng = Xoshiro256::seed_from_u64(101);
+    let (n0, k) = (120usize, 20usize);
+    let big = random_spd(n0 + k, &mut rng);
+    let mut lead = Matrix::zeros(n0, n0);
+    for i in 0..n0 {
+        for j in 0..n0 {
+            lead[(i, j)] = big[(i, j)];
+        }
+    }
+    let mut ch = Chol::factor(&lead).unwrap();
+    for m in n0..n0 + k {
+        let cross: Vec<f64> = (0..m).map(|i| big[(m, i)]).collect();
+        ch.extend(&cross, big[(m, m)]).unwrap();
+    }
+    let cold = Chol::factor(&big).unwrap();
+    let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+    assert!(d < 1e-10, "after {k} extends the factor drifted by {d:.3e}");
+    assert!((ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs());
+}
+
+/// Issue acceptance: k rank-1 updates match a cold factorisation, and the
+/// update → downdate round trip returns the original factor.
+#[test]
+fn repeated_rank1_updates_match_cold_and_round_trip() {
+    let mut rng = Xoshiro256::seed_from_u64(103);
+    let n = 100;
+    let k = random_spd(n, &mut rng);
+    let vs: Vec<Vec<f64>> =
+        (0..6).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let orig = Chol::factor(&k).unwrap();
+    let mut ch = orig.clone();
+    let mut grown = k.clone();
+    for v in &vs {
+        let mut scratch = v.clone();
+        ch.rank1_update(&mut scratch);
+        for i in 0..n {
+            for j in 0..n {
+                grown[(i, j)] += v[i] * v[j];
+            }
+        }
+    }
+    let cold = Chol::factor(&grown).unwrap();
+    let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+    assert!(d < 1e-10, "after {} updates the factor drifted by {d:.3e}", vs.len());
+    // downdate in reverse order back to the original
+    for v in vs.iter().rev() {
+        let mut scratch = v.clone();
+        ch.rank1_downdate(&mut scratch).unwrap();
+    }
+    let d = lower_diff(ch.factor_matrix(), orig.factor_matrix());
+    assert!(d < 1e-10, "update→downdate round trip drifted by {d:.3e}");
+    assert!((ch.logdet() - orig.logdet()).abs() < 1e-9 * orig.logdet().abs());
+}
+
+/// Issue acceptance: the streaming observe → predict loop matches a
+/// from-scratch refit at the same hyperparameters to 1e-8, on the tidal
+/// stream the serving layer was built for.
+#[test]
+fn streaming_tidal_predictions_match_from_scratch_refit() {
+    let full = generate_tidal(&TidalConfig {
+        n: 180,
+        ..TidalConfig::six_lunar_months(2016)
+    })
+    .demean();
+    // serve from physically sensible fixed hyperparameters (training is
+    // exercised elsewhere; this isolates the serving math): T0 = e^4.5,
+    // T1 = ln 12.42 h — the M2 tide. σ_n = 0.1 keeps κ(K̃) ~ 10³ so the
+    // 1e-8 agreement bar sits orders of magnitude above rounding; the
+    // serving machinery is identical at any σ_n.
+    let sigma_n = 0.1;
+    let theta = vec![4.5, 12.42f64.ln(), 0.0];
+    let n0 = 120;
+    let exec = ExecutionContext::seq();
+    let mut predictor = Predictor::fit(
+        paper_k1(sigma_n),
+        &full.t[..n0],
+        &full.y[..n0],
+        &theta,
+        &exec,
+    )
+    .unwrap();
+    // stream the remaining 60 points in day-sized batches, serving a
+    // batch of look-ahead queries after each
+    let mut served_any = false;
+    let mut m = n0;
+    while m < full.t.len() {
+        let hi = (m + 12).min(full.t.len());
+        predictor.observe_batch(&full.t[m..hi], &full.y[m..hi]).unwrap();
+        m = hi;
+        let t_star: Vec<f64> =
+            (0..8).map(|i| full.t[m - 1] + 0.5 + i as f64 * 0.5).collect();
+        let served = predictor.predict_batch(&t_star, &exec);
+        // cold refit at the same θ on exactly the data seen so far
+        let model = paper_k1(sigma_n);
+        let ev = ProfiledEval::from_cov(
+            gpfast::gp::assemble_cov(&model, &full.t[..m], &theta),
+            &full.y[..m],
+        )
+        .unwrap();
+        let cold = predict(&model, &full.t[..m], &theta, &ev, &t_star);
+        for i in 0..t_star.len() {
+            assert!(
+                (served.mean[i] - cold.mean[i]).abs() < 1e-8,
+                "n={m} mean[{i}]: streamed {} vs refit {}",
+                served.mean[i],
+                cold.mean[i]
+            );
+            assert!(
+                (served.sd[i] - cold.sd[i]).abs() < 1e-8,
+                "n={m} sd[{i}]: streamed {} vs refit {}",
+                served.sd[i],
+                cold.sd[i]
+            );
+        }
+        served_any = true;
+    }
+    assert!(served_any);
+    let stats = predictor.stats();
+    assert_eq!(stats.n_train, full.t.len());
+    assert_eq!(stats.observations_appended, full.t.len() - n0);
+}
+
+/// The cached path and thread budget must not change results: a batch
+/// through a ServeSession equals the pointwise eq.-2.1 reference for any
+/// thread count.
+#[test]
+fn serve_session_batches_equal_pointwise_reference() {
+    let data = generate_tidal(&TidalConfig { n: 96, ..TidalConfig::six_lunar_months(7) })
+        .demean();
+    let theta = vec![4.0, 12.42f64.ln(), 0.05];
+    let model = paper_k1(TIDAL_SIGMA_N);
+    let ev = ProfiledEval::from_cov(
+        gpfast::gp::assemble_cov(&model, &data.t, &theta),
+        &data.y,
+    )
+    .unwrap();
+    // 500×96 cross-entries exceed the serve dispatch cutoff, so the
+    // multi-thread rows genuinely run parallel here
+    let t_star: Vec<f64> = (0..500).map(|i| 0.25 + i as f64 * 0.65).collect();
+    let reference = predict(&model, &data.t, &theta, &ev, &t_star);
+    for threads in [1usize, 2, 4] {
+        let predictor = Predictor::fit(
+            paper_k1(TIDAL_SIGMA_N),
+            &data.t,
+            &data.y,
+            &theta,
+            &ExecutionContext::seq(),
+        )
+        .unwrap();
+        let out = predictor.predict_batch(&t_star, &ExecutionContext::new(threads));
+        assert_eq!(out.mean, reference.mean, "threads={threads}");
+        assert_eq!(out.sd, reference.sd, "threads={threads}");
+    }
+}
+
+/// End-to-end coordinator wiring: train → serve → stream → serve, with
+/// the session's predictions staying finite and its factor growing.
+#[test]
+fn serve_session_full_loop_on_synthetic_data() {
+    let data = gpfast::data::synthetic::table1_dataset(60, 0.1, 77);
+    let mut opts = TrainOptions::default();
+    opts.multistart.restarts = 3;
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let (mut session, trained) = ServeSession::train_and_serve(
+        &ModelSpec::K1,
+        0.1,
+        &data,
+        &opts,
+        2,
+        ExecutionContext::new(2),
+        &mut rng,
+    )
+    .unwrap();
+    assert!(trained.lnp_peak.is_finite());
+    let q1 = session.predict(&[10.5, 30.5, 61.0]);
+    assert!(q1.mean.iter().all(|v| v.is_finite()));
+    // stream five fresh points past the end of the grid
+    let t_new: Vec<f64> = (1..=5).map(|i| 60.0 + i as f64).collect();
+    let y_new: Vec<f64> = t_new.iter().map(|&t| (t * 0.3).sin() * 0.5).collect();
+    session.observe_batch(&t_new, &y_new).unwrap();
+    let q2 = session.predict(&[66.5]);
+    assert!(q2.mean[0].is_finite() && q2.sd[0].is_finite());
+    let s = session.stats();
+    assert_eq!(s.n_train, 65);
+    assert_eq!(s.observations_appended, 5);
+    assert_eq!(s.queries_served, 4);
+}

@@ -1,6 +1,8 @@
 //! Bench: layer-by-layer hot-path profile — the measurement harness
 //! behind EXPERIMENTS.md §Perf, now serial *and* parallel.
 //!
+//! * register micro-kernel GEMM/SYRK GFLOP/s vs a naive scalar triple
+//!   loop (the pre-micro-kernel baseline), single thread
 //! * L3 Cholesky GFLOP/s (the O(n³) hot path, n³/3 flops) across thread
 //!   counts — the `ExecutionContext` scaling table
 //! * L3 covariance assembly pair-rate (native per-pair kernel) across
@@ -10,14 +12,19 @@
 //!   1 thread vs the full budget
 //!
 //! Besides the human tables, writes **`BENCH_perf.json`** (schema:
-//! `{threads_available, sections: {cholesky|assembly|gradient|end_to_end:
-//! [{n, threads, seconds, gflops|mpairs|speedup…}]}}`) so future PRs can
-//! track the perf trajectory mechanically.
+//! `{threads_available, sections: {gemm|syrk|cholesky|assembly|gradient|
+//! end_to_end: [{n, threads, seconds, gflops|mpairs|speedup…}]}}`) so
+//! future PRs can track the perf trajectory mechanically.
 //!
 //! `cargo bench --bench perf`
+//!
+//! Set `GPFAST_BENCH_QUICK=1` for the ci.sh smoke run: small sizes, the
+//! heavyweight gradient/end-to-end sections skipped, but the gemm/syrk
+//! sections always populated so the trajectory file stays comparable.
 
 use gpfast::gp::profiled::ProfiledEval;
 use gpfast::kernels::{paper_k2, PaperK2};
+use gpfast::linalg::micro::{self, Clip};
 use gpfast::linalg::{Chol, Matrix};
 use gpfast::rng::Xoshiro256;
 use gpfast::runtime::ExecutionContext;
@@ -49,19 +56,138 @@ fn thread_counts() -> Vec<usize> {
     ts
 }
 
+/// Naive scalar i-k-j GEMM — the shape of the pre-micro-kernel matmul.
+fn naive_gemm(c: &mut [f64], n: usize, a: &[f64], b: &[f64]) {
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+}
+
+/// Naive scalar lower-triangle SYRK `C −= P·Pᵀ` — the shape of the
+/// pre-micro-kernel trailing update.
+fn naive_syrk(c: &mut [f64], n: usize, k: usize, p: &[f64]) {
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += p[i * k + kk] * p[j * k + kk];
+            }
+            c[i * n + j] -= acc;
+        }
+    }
+}
+
 fn main() {
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
     let mut rng = Xoshiro256::seed_from_u64(1);
     let threads = thread_counts();
     let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    println!("(machine parallelism: {avail}; sweeping threads {threads:?})\n");
+    println!(
+        "(machine parallelism: {avail}; sweeping threads {threads:?}{})\n",
+        if quick { "; QUICK smoke sizes" } else { "" }
+    );
+    let mut j_gemm: Vec<Json> = Vec::new();
+    let mut j_syrk: Vec<Json> = Vec::new();
     let mut j_chol: Vec<Json> = Vec::new();
     let mut j_asm: Vec<Json> = Vec::new();
     let mut j_grad: Vec<Json> = Vec::new();
     let mut j_e2e: Vec<Json> = Vec::new();
 
-    println!("== L3 Cholesky (blocked, f64) ==");
+    println!("== register micro-kernel GEMM vs naive scalar (1 thread) ==");
+    let gemm_sizes: &[usize] = if quick { &[160, 256] } else { &[256, 512, 1024, 1968] };
+    let mut t = Table::new(vec!["n", "micro", "GFLOP/s", "naive", "GFLOP/s", "speedup"]);
+    for &n in gemm_sizes {
+        let mut a = Matrix::zeros(n, n);
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.normal();
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let flops = 2.0 * (n as f64).powi(3);
+        let reps = if n >= 1024 { 2 } else { 3 };
+        let micro_stats = TimingStats::measure(1, reps, || {
+            let _ = a.matmul(&b); // seq context → single-thread micro GEMM
+        });
+        // same warmup policy as the micro side so the recorded speedup
+        // compares warm runs to warm runs (the naive side is merely
+        // capped at one timed rep at large n — it is slow)
+        let naive_stats = TimingStats::measure(1, if n >= 1024 { 1 } else { reps }, || {
+            let mut c = vec![0.0; n * n];
+            naive_gemm(&mut c, n, a.as_slice(), b.as_slice());
+            std::hint::black_box(&c);
+        });
+        let (ms, ns) = (micro_stats.min(), naive_stats.min());
+        let (mg, ng) = (flops / ms / 1e9, flops / ns / 1e9);
+        t.add_row(vec![
+            format!("{n}"),
+            human_time(ms),
+            format!("{mg:.2}"),
+            human_time(ns),
+            format!("{ng:.2}"),
+            format!("{:.2}x", ns / ms),
+        ]);
+        j_gemm.push(Json::obj(vec![
+            ("n", n.into()),
+            ("threads", 1usize.into()),
+            ("seconds", ms.into()),
+            ("gflops", mg.into()),
+            ("naive_seconds", ns.into()),
+            ("naive_gflops", ng.into()),
+            ("speedup", (ns / ms).into()),
+        ]));
+    }
+    print!("{}", t.render());
+
+    println!("\n== register micro-kernel SYRK (lower, k=64 panel) vs naive scalar ==");
+    let mut t = Table::new(vec!["n", "micro", "GFLOP/s", "naive", "GFLOP/s", "speedup"]);
+    for &n in gemm_sizes {
+        let kdim = 64usize; // the Cholesky panel width NB
+        let p: Vec<f64> = (0..n * kdim).map(|_| rng.normal()).collect();
+        let flops = (n * (n + 1)) as f64 * kdim as f64; // 2·k·n(n+1)/2
+        let reps = if n >= 1024 { 2 } else { 3 };
+        let micro_stats = TimingStats::measure(1, reps, || {
+            let mut c = vec![0.0; n * n];
+            micro::gemm_nt(&mut c, n, n, n, kdim, &p, kdim, &p, kdim, -1.0, Clip::Lower(0));
+            std::hint::black_box(&c);
+        });
+        let naive_stats = TimingStats::measure(1, if n >= 1024 { 1 } else { reps }, || {
+            let mut c = vec![0.0; n * n];
+            naive_syrk(&mut c, n, kdim, &p);
+            std::hint::black_box(&c);
+        });
+        let (ms, ns) = (micro_stats.min(), naive_stats.min());
+        let (mg, ng) = (flops / ms / 1e9, flops / ns / 1e9);
+        t.add_row(vec![
+            format!("{n}"),
+            human_time(ms),
+            format!("{mg:.2}"),
+            human_time(ns),
+            format!("{ng:.2}"),
+            format!("{:.2}x", ns / ms),
+        ]);
+        j_syrk.push(Json::obj(vec![
+            ("n", n.into()),
+            ("threads", 1usize.into()),
+            ("seconds", ms.into()),
+            ("gflops", mg.into()),
+            ("naive_seconds", ns.into()),
+            ("naive_gflops", ng.into()),
+            ("speedup", (ns / ms).into()),
+        ]));
+    }
+    print!("{}", t.render());
+
+    println!("\n== L3 Cholesky (blocked, f64) ==");
+    let chol_sizes: &[usize] = if quick { &[256] } else { &[300, 600, 1000, 1968] };
     let mut t = Table::new(vec!["n", "threads", "time (min)", "GFLOP/s", "speedup"]);
-    for &n in &[300usize, 600, 1000, 1968] {
+    for &n in chol_sizes {
         let k = random_spd(n, &mut rng);
         let reps = if n >= 1968 { 2 } else { 3 };
         let mut serial_secs = f64::NAN;
@@ -97,8 +223,9 @@ fn main() {
     println!("\n== L3 covariance assembly (native k2: value+grads per pair) ==");
     let model = paper_k2(0.1);
     let theta = PaperK2::truth();
+    let asm_sizes: &[usize] = if quick { &[256] } else { &[300, 1000, 1968] };
     let mut t = Table::new(vec!["n", "threads", "time (min)", "Mpairs/s", "speedup"]);
-    for &n in &[300usize, 1000, 1968] {
+    for &n in asm_sizes {
         let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
         let reps = if n >= 1968 { 2 } else { 3 };
         let mut serial_secs = f64::NAN;
@@ -132,8 +259,9 @@ fn main() {
     print!("{}", t.render());
 
     println!("\n== L3 gradient contractions (eq. 2.17, given factor + W) ==");
+    let grad_sizes: &[usize] = if quick { &[] } else { &[1000, 1968] };
     let mut t = Table::new(vec!["n", "threads", "time (min)", "speedup"]);
-    for &n in &[1000usize, 1968] {
+    for &n in grad_sizes {
         let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
         let y: Vec<f64> = ts.iter().map(|&x| (x * 0.51).sin()).collect();
         let setup_ctx = ExecutionContext::from_env();
@@ -175,7 +303,8 @@ fn main() {
         format!("eval+grad ({full}t)"),
         "speedup".to_string(),
     ]);
-    for &n in &[328usize, 1000, 1968] {
+    let e2e_sizes: &[usize] = if quick { &[] } else { &[328, 1000, 1968] };
+    for &n in e2e_sizes {
         let ts: Vec<f64> = (1..=n).map(|i| i as f64).collect();
         let y: Vec<f64> = ts.iter().map(|&x| (x * 0.51).sin()).collect();
         let reps = if n >= 1000 { 2 } else { 3 };
@@ -212,21 +341,36 @@ fn main() {
     print!("{}", t.render());
     println!("\n(paper's yardstick: ~10 s per evaluation at n = 1968 on their machine)");
 
-    let doc = Json::obj(vec![
-        ("bench", "perf".into()),
-        ("threads_available", avail.into()),
-        (
-            "sections",
-            Json::obj(vec![
-                ("cholesky", Json::Arr(j_chol)),
-                ("assembly", Json::Arr(j_asm)),
-                ("gradient", Json::Arr(j_grad)),
-                ("end_to_end", Json::Arr(j_e2e)),
-            ]),
-        ),
-    ]);
-    match std::fs::write("BENCH_perf.json", doc.pretty()) {
-        Ok(()) => println!("machine-readable results written to BENCH_perf.json"),
-        Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+    // merge into BENCH_perf.json: only overwrite the sections this run
+    // actually measured, so the quick smoke doesn't clobber the `serve`
+    // section or a prior full-size sweep's gradient/end-to-end rows
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections = doc
+        .get("sections")
+        .and_then(|s| s.as_obj().cloned())
+        .unwrap_or_default();
+    for (name, rows) in [
+        ("gemm", j_gemm),
+        ("syrk", j_syrk),
+        ("cholesky", j_chol),
+        ("assembly", j_asm),
+        ("gradient", j_grad),
+        ("end_to_end", j_e2e),
+    ] {
+        if !rows.is_empty() {
+            sections.insert(name.to_string(), Json::Arr(rows));
+        }
+    }
+    doc.insert("bench".to_string(), "perf".into());
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), avail.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("machine-readable results merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

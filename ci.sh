@@ -24,6 +24,28 @@ GPFAST_THREADS=1 cargo test -q
 echo "== cargo test -q (GPFAST_THREADS=max) =="
 GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q
 
+echo "== quick-bench smoke: micro-kernel gflops recorded in BENCH_perf.json =="
+# Small-n sweep of the perf bench so the BENCH_perf.json trajectory is
+# refreshed on every gate run; the full-size sweep stays a manual
+# `cargo bench --bench perf`.
+GPFAST_BENCH_QUICK=1 cargo bench --bench perf
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'EOF'
+import json, sys
+doc = json.load(open("BENCH_perf.json"))
+for name in ("gemm", "syrk"):
+    rows = doc.get("sections", {}).get(name, [])
+    if not rows or not all("gflops" in r for r in rows):
+        sys.exit(f"FAIL: BENCH_perf.json section {name!r} is empty or missing gflops")
+print("BENCH_perf.json gemm/syrk sections populated")
+EOF
+else
+    # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
+    # in quick mode), so a populated run has at least 4 of them
+    [ "$(grep -c '"naive_gflops"' BENCH_perf.json)" -ge 4 ] \
+        || { echo "FAIL: BENCH_perf.json gemm/syrk sections not populated"; exit 1; }
+fi
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check (advisory) =="
     # Advisory until the pre-manifest tree is formatted wholesale: report

@@ -17,7 +17,9 @@
 
 use crate::kernels::CovarianceModel;
 use crate::linalg::Matrix;
-use crate::runtime::exec::{for_row_chunks, split_rows_mut, weighted_bounds, ExecutionContext};
+use crate::runtime::exec::{
+    for_row_chunks, for_row_chunks_multi, weighted_bounds, ExecutionContext,
+};
 
 /// Below this `n` a parallel dispatch costs more than the pair loop.
 const PAR_MIN_N: usize = 64;
@@ -87,53 +89,44 @@ pub fn assemble_cov_grads_with(
     let mut grads = vec![Matrix::zeros(n, n); m];
     let jobs = assembly_jobs(n, ctx);
     let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
-    let n_chunks = bounds.len() - 1;
     {
-        let k_chunks = split_rows_mut(k.as_mut_slice(), n, &bounds);
-        // transpose the per-matrix chunk lists into per-chunk matrix lists
-        let mut grad_chunks: Vec<Vec<&mut [f64]>> =
-            (0..n_chunks).map(|_| Vec::with_capacity(m)).collect();
+        // the value matrix and every derivative matrix chunk along the
+        // same row bounds, so one pair sweep fills all m+1 of them
+        let mut buffers: Vec<(&mut [f64], usize)> = Vec::with_capacity(m + 1);
+        buffers.push((k.as_mut_slice(), n));
         for g in grads.iter_mut() {
-            for (ci, chunk) in split_rows_mut(g.as_mut_slice(), n, &bounds).into_iter().enumerate()
-            {
-                grad_chunks[ci].push(chunk);
-            }
+            buffers.push((g.as_mut_slice(), n));
         }
-        let mut job_fns = Vec::with_capacity(n_chunks);
-        for ((k_chunk, g_chunk), w) in
-            k_chunks.into_iter().zip(grad_chunks).zip(bounds.windows(2))
-        {
-            let (r0, r1) = (w[0], w[1]);
-            job_fns.push(move || {
-                let mut g_chunk = g_chunk;
-                let mut prep = model.kernel.prepare(theta);
-                let mut g = vec![0.0; m];
-                // diagonal: dt = 0, same for every row
-                let vd = prep.value_grad(0.0, &mut g);
-                let diag = vd + model.noise_variance();
-                let g_diag = g.clone();
-                // fill the upper-triangle rows with contiguous writes;
-                // mirroring happens in a cache-blocked pass afterwards —
-                // writing (j,i) inside the pair loop strides a full row
-                // per store and collapses throughput ~8× at n ≈ 2000
-                // (EXPERIMENTS.md §Perf).
-                for i in r0..r1 {
-                    let base = (i - r0) * n;
-                    k_chunk[base + i] = diag;
+        for_row_chunks_multi(buffers, &bounds, ctx, |chunks, r0, r1| {
+            let mut it = chunks.into_iter();
+            let k_chunk = it.next().expect("value-matrix chunk");
+            let mut g_chunk: Vec<&mut [f64]> = it.collect();
+            let mut prep = model.kernel.prepare(theta);
+            let mut g = vec![0.0; m];
+            // diagonal: dt = 0, same for every row
+            let vd = prep.value_grad(0.0, &mut g);
+            let diag = vd + model.noise_variance();
+            let g_diag = g.clone();
+            // fill the upper-triangle rows with contiguous writes;
+            // mirroring happens in a cache-blocked pass afterwards —
+            // writing (j,i) inside the pair loop strides a full row
+            // per store and collapses throughput ~8× at n ≈ 2000
+            // (EXPERIMENTS.md §Perf).
+            for i in r0..r1 {
+                let base = (i - r0) * n;
+                k_chunk[base + i] = diag;
+                for (a, gm) in g_chunk.iter_mut().enumerate() {
+                    gm[base + i] = g_diag[a];
+                }
+                for j in (i + 1)..n {
+                    let v = prep.value_grad(t[i] - t[j], &mut g);
+                    k_chunk[base + j] = v;
                     for (a, gm) in g_chunk.iter_mut().enumerate() {
-                        gm[base + i] = g_diag[a];
-                    }
-                    for j in (i + 1)..n {
-                        let v = prep.value_grad(t[i] - t[j], &mut g);
-                        k_chunk[base + j] = v;
-                        for (a, gm) in g_chunk.iter_mut().enumerate() {
-                            gm[base + j] = g[a];
-                        }
+                        gm[base + j] = g[a];
                     }
                 }
-            });
-        }
-        ctx.run_jobs(job_fns);
+            }
+        });
     }
     k.mirror_upper_to_lower();
     for gmat in &mut grads {

@@ -120,6 +120,7 @@ pub fn full_hessian_with(
         v.push(va);
         wm.push(w.matmul_with(dk, ctx));
     }
+    let wmt: Vec<Matrix> = wm.iter().map(|ma| ma.transpose()).collect();
     let (a_c, b_c) = hessian_contractions_with(model, t, theta, &ev.alpha, &w, ctx);
 
     let mut h = Matrix::zeros(m + 1, m + 1);
@@ -129,7 +130,7 @@ pub fn full_hessian_with(
         h[(0, a + 1)] = val;
         h[(a + 1, 0)] = val;
     }
-    let d2 = pairwise_d2_with(n, m, &w, &wm, &v, ctx);
+    let d2 = pairwise_d2_with(n, m, &w, &wm, &wmt, &v, ctx);
     let mut idx = 0;
     for a in 0..m {
         for b in a..m {

@@ -9,7 +9,8 @@
 //! Fig. 3 interpolants plot); `k̃** = k̃(0)`.
 
 use crate::kernels::CovarianceModel;
-use crate::linalg::dot;
+use crate::linalg::{dot, Matrix};
+use crate::runtime::ExecutionContext;
 
 use super::profiled::ProfiledEval;
 
@@ -20,6 +21,12 @@ pub struct Prediction {
 }
 
 /// Predict at new inputs from a trained evaluation (peak ϑ̂, eq. 2.6).
+///
+/// All query rows go through one blocked multi-RHS TRSM
+/// ([`crate::linalg::Chol::half_solve_rows_with`]) — the same kernel the
+/// serving layer's `predict_batch` uses, with per-row arithmetic
+/// independent of the batch size, so pointwise and batched predictions
+/// agree **bitwise** (asserted in `rust/tests/serving.rs`).
 pub fn predict(
     model: &CovarianceModel,
     t: &[f64],
@@ -28,18 +35,42 @@ pub fn predict(
     t_star: &[f64],
 ) -> Prediction {
     let n = t.len();
+    let q = t_star.len();
     let mut prep = model.kernel.prepare(theta);
     let k_ss = prep.value(0.0);
-    let mut mean = Vec::with_capacity(t_star.len());
-    let mut sd = Vec::with_capacity(t_star.len());
-    let mut k_star = vec![0.0; n];
-    for &ts in t_star {
-        for (i, &ti) in t.iter().enumerate() {
-            k_star[i] = prep.value(ts - ti);
+    let mut mean = vec![0.0; q];
+    let mut sd = vec![0.0; q];
+    if q == 0 {
+        return Prediction { mean, sd };
+    }
+    // Process the queries in fixed-size row blocks: per-row arithmetic
+    // is batch-size independent (the bitwise contract above), so
+    // blocking changes nothing numerically while keeping the scratch at
+    // O(PB·n) for arbitrarily large query grids.
+    const PB: usize = 512;
+    let mut r0 = 0;
+    while r0 < q {
+        let r1 = (r0 + PB).min(q);
+        let qb = r1 - r0;
+        // cross-covariance rows fused with the means K*α …
+        let mut work = Matrix::zeros(qb, n);
+        for r in 0..qb {
+            let row = work.row_mut(r);
+            let ts = t_star[r0 + r];
+            for (i, &ti) in t.iter().enumerate() {
+                row[i] = prep.value(ts - ti);
+            }
+            mean[r0 + r] = dot(row, &ev.alpha);
         }
-        mean.push(dot(&k_star, &ev.alpha));
-        let var = ev.sigma_f_hat2 * (k_ss - ev.chol.inv_quad(&k_star));
-        sd.push(var.max(0.0).sqrt());
+        // … one multi-RHS TRSM w = L⁻¹k* …
+        ev.chol.half_solve_rows_with(&mut work, &ExecutionContext::seq());
+        // … and the variances σ̂_f²(k̃** − ‖w‖²)
+        for r in 0..qb {
+            let wrow = work.row(r);
+            let var = ev.sigma_f_hat2 * (k_ss - dot(wrow, wrow));
+            sd[r0 + r] = var.max(0.0).sqrt();
+        }
+        r0 = r1;
     }
     Prediction { mean, sd }
 }

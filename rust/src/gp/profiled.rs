@@ -20,7 +20,7 @@
 use crate::kernels::CovarianceModel;
 use crate::linalg::{dot, Chol, Matrix};
 use crate::math::{lgamma, LN_2PI_E};
-use crate::runtime::exec::{even_bounds, for_row_chunks, split_rows_mut, ExecutionContext};
+use crate::runtime::exec::{even_bounds, for_row_chunks, ExecutionContext};
 
 use super::assemble::{assemble_cov_grads_with, assemble_cov_with, hessian_contractions_with};
 
@@ -222,6 +222,7 @@ pub fn profiled_hessian_with(
     let s2 = ev.sigma_f_hat2;
 
     // v_a = ∂K α, q_a = αᵀ v_a, and the W-products M_a = W ∂K
+    // (the transposes let the trace pairs run on contiguous row dots)
     let mut v = Vec::with_capacity(m);
     let mut q = Vec::with_capacity(m);
     let mut wm = Vec::with_capacity(m);
@@ -231,9 +232,10 @@ pub fn profiled_hessian_with(
         v.push(va);
         wm.push(w.matmul_with(dk, ctx));
     }
+    let wmt: Vec<Matrix> = wm.iter().map(|ma| ma.transpose()).collect();
     let (a_c, b_c) = hessian_contractions_with(model, t, theta, &ev.alpha, &w, ctx);
 
-    let d2 = pairwise_d2_with(n, m, &w, &wm, &v, ctx);
+    let d2 = pairwise_d2_with(n, m, &w, &wm, &wmt, &v, ctx);
     let mut h = Matrix::zeros(m, m);
     let mut idx = 0;
     for a in 0..m {
@@ -253,12 +255,16 @@ pub fn profiled_hessian_with(
 
 /// For each Hessian pair `(a, b)` with `b ≥ a`, compute
 /// `Tr(M_a M_b)` and `v_aᵀ W v_b` — `O(n²)` each — with the pairs
-/// distributed over the context's threads.
+/// distributed over the context's threads ([`for_row_chunks`] over the
+/// pair list). The trace pairs read `M_b` through its pre-transposed
+/// copy `wmt[b]`, so every inner product is a contiguous row dot instead
+/// of a full-stride column walk.
 pub(crate) fn pairwise_d2_with(
     n: usize,
     m: usize,
     w: &Matrix,
     wm: &[Matrix],
+    wmt: &[Matrix],
     v: &[Vec<f64>],
     ctx: &ExecutionContext,
 ) -> Vec<(f64, f64)> {
@@ -266,32 +272,26 @@ pub(crate) fn pairwise_d2_with(
         (0..m).flat_map(|a| (a..m).map(move |b| (a, b))).collect();
     let n_pairs = pairs.len();
     let mut out = vec![(0.0, 0.0); n_pairs];
+    // the m products W·v_b once up front — every pair reads them, so
+    // recomputing the O(n²) matvec per pair would cost m(m+1)/2 sweeps
+    let wv: Vec<Vec<f64>> = v.iter().map(|vb| w.matvec(vb)).collect();
     let jobs = ctx.threads().min(n_pairs.max(1));
     let bounds = even_bounds(0, n_pairs, jobs);
-    let chunks = split_rows_mut(&mut out, 1, &bounds);
     let pairs_ref = &pairs;
-    let mut job_fns = Vec::with_capacity(chunks.len());
-    for (chunk, wnd) in chunks.into_iter().zip(bounds.windows(2)) {
-        let (p0, p1) = (wnd[0], wnd[1]);
-        job_fns.push(move || {
-            for p in p0..p1 {
-                let (a, b) = pairs_ref[p];
-                // Tr(M_a M_b) = Σ_ij M_a[i,j] M_b[j,i]
-                let mut tr_ab = 0.0;
-                for i in 0..n {
-                    let ra = wm[a].row(i);
-                    for (j, raj) in ra.iter().enumerate() {
-                        tr_ab += raj * wm[b][(j, i)];
-                    }
-                }
-                // v_aᵀ W v_b
-                let wv_b = w.matvec(&v[b]);
-                let vwv = dot(&v[a], &wv_b);
-                chunk[p - p0] = (tr_ab, vwv);
+    let wv_ref = &wv;
+    for_row_chunks(&mut out, 1, &bounds, ctx, |chunk, p0, p1| {
+        for p in p0..p1 {
+            let (a, b) = pairs_ref[p];
+            // Tr(M_a M_b) = Σ_i ⟨row_i(M_a), row_i(M_bᵀ)⟩
+            let mut tr_ab = 0.0;
+            for i in 0..n {
+                tr_ab += dot(wm[a].row(i), wmt[b].row(i));
             }
-        });
-    }
-    ctx.run_jobs(job_fns);
+            // v_aᵀ W v_b
+            let vwv = dot(&v[a], &wv_ref[b]);
+            chunk[p - p0] = (tr_ab, vwv);
+        }
+    });
     out
 }
 

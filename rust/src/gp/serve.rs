@@ -23,10 +23,11 @@
 //! from-scratch refit at the same ϑ̂ to better than 1e-8 (asserted in
 //! `rust/tests/serving.rs` and `examples/streaming_tidal.rs`).
 //!
-//! Serial results are bit-identical to [`super::predict::predict`]; with
-//! a multi-thread [`ExecutionContext`] each query row is produced whole
-//! by one worker in the serial arithmetic order, so batches are
-//! bit-identical for any thread count.
+//! Results are bit-identical to [`super::predict::predict`] for any
+//! batch size and thread count: both paths share the blocked multi-RHS
+//! TRSM ([`Chol::half_solve_rows_with`]), whose per-row arithmetic is
+//! fixed by the `linalg::micro` block grids alone — independent of how
+//! the rows are batched or partitioned across workers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -34,7 +35,7 @@ use crate::kernels::CovarianceModel;
 use crate::linalg::{dot, Chol, Matrix};
 use crate::math::LN_2PI_E;
 use crate::runtime::exec::{
-    even_bounds, for_row_chunks, split_rows_mut, ExecutionContext, PAR_MIN_WORK,
+    even_bounds, for_row_chunks, for_row_chunks_multi, ExecutionContext, PAR_MIN_WORK,
 };
 
 use super::assemble::assemble_cov_with;
@@ -153,18 +154,19 @@ impl Predictor {
         self.queries.fetch_add(q, Ordering::Relaxed);
         let jobs = if q * n < PAR_MIN_WORK { 1 } else { ctx.threads().min(q) };
         let bounds = even_bounds(0, q, jobs);
-        // 1. cross-covariance rows fused with the means K*α
+        // 1. cross-covariance rows fused with the means K*α (the work
+        // matrix and the mean vector chunk along the same row bounds)
         let mut work = Matrix::zeros(q, n);
         {
-            let work_chunks = split_rows_mut(work.as_mut_slice(), n, &bounds);
-            let mean_chunks = split_rows_mut(&mut mean, 1, &bounds);
             let (model, theta, t, alpha) = (&self.model, &self.theta, &self.t, &self.alpha);
-            let mut job_fns = Vec::with_capacity(work_chunks.len());
-            for ((wchunk, mchunk), wnd) in
-                work_chunks.into_iter().zip(mean_chunks).zip(bounds.windows(2))
-            {
-                let (r0, r1) = (wnd[0], wnd[1]);
-                job_fns.push(move || {
+            for_row_chunks_multi(
+                vec![(work.as_mut_slice(), n), (&mut mean[..], 1)],
+                &bounds,
+                ctx,
+                |chunks, r0, r1| {
+                    let mut it = chunks.into_iter();
+                    let wchunk = it.next().expect("cross-covariance chunk");
+                    let mchunk = it.next().expect("mean chunk");
                     let mut prep = model.kernel.prepare(theta);
                     for r in r0..r1 {
                         let row = &mut wchunk[(r - r0) * n..(r - r0 + 1) * n];
@@ -174,9 +176,8 @@ impl Predictor {
                         }
                         mchunk[r - r0] = dot(row, alpha);
                     }
-                });
-            }
-            ctx.run_jobs(job_fns);
+                },
+            );
         }
         // 2. one multi-RHS TRSM: every row w = L⁻¹ k*
         self.chol.half_solve_rows_with(&mut work, ctx);

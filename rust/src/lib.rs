@@ -30,16 +30,27 @@
 //! the whole system also runs without artifacts, and the two are
 //! cross-checked in the test suite.
 //!
-//! ### Parallel execution layer
+//! ### Three-level performance architecture
 //!
-//! Every hot path — the `O(n³)` blocked Cholesky, the `O(n² m)`
-//! covariance/derivative assembly, the explicit inverse, and the `O(n²)`
-//! gradient/Hessian contractions — is row-tile parallel behind
-//! [`runtime::ExecutionContext`], a cheap cloneable thread-budget handle
-//! over scoped std threads (no rayon). The `*_with(…, ctx)` entry points
-//! take the context; the plain-named functions are the serial
-//! specialisations. Thread count comes from the `GPFAST_THREADS` env
-//! var, the `[runtime] threads` config key, or the machine default.
+//! Every `O(n³)`/`O(n² m)` hot path — the blocked Cholesky, the
+//! covariance/derivative assembly, the explicit inverse, the multi-RHS
+//! solves and the gradient/Hessian contractions — runs through three
+//! nested levels:
+//!
+//! 1. **threads** — [`runtime::ExecutionContext`], a cheap cloneable
+//!    thread-budget handle over scoped std threads (no rayon),
+//!    partitions output row tiles across workers. The `*_with(…, ctx)`
+//!    entry points take the context; the plain-named functions are the
+//!    serial specialisations. Thread count comes from the
+//!    `GPFAST_THREADS` env var, the `[runtime] threads` config key, or
+//!    the machine default.
+//! 2. **cache blocks** — each worker's dense kernel walks `KC×NC` /
+//!    `MC×KC` panels packed into contiguous scratch ([`linalg::micro`]),
+//!    so the innermost loops stream L1/L2-resident data.
+//! 3. **register tiles** — an `MR×NR` block of the output is held in
+//!    `f64::mul_add` FMA accumulators for the whole panel depth
+//!    (the build sets `-C target-cpu=native` in `.cargo/config.toml` so
+//!    these lower to hardware FMA).
 //!
 //! **Oversubscription rule:** nested layers *split* the budget — when the
 //! multistart coordinator fans `w` restarts across its worker pool, each
@@ -47,11 +58,16 @@
 //! parallelism never exceeds the configured budget (see
 //! [`runtime::exec`]).
 //!
-//! **Determinism:** parallel kernels preserve the serial per-element
-//! arithmetic order (reductions go through per-row buffers summed in row
-//! order), so factors, assembled matrices, likelihoods and gradients are
+//! **Canonical accumulation order:** every output entry owns a private
+//! FMA accumulator chain whose summation order is fixed by the global
+//! block grids alone (`KC` depth chunks, `TB` solve blocks) — never by
+//! the thread count, the row partition, or the batch size. Factors,
+//! assembled matrices, likelihoods and gradients are therefore
 //! bit-identical for any thread count — asserted in
-//! `rust/tests/parallel_equivalence.rs`.
+//! `rust/tests/parallel_equivalence.rs` and `rust/tests/micro_kernels.rs`.
+//! (Different *builds* — e.g. different target CPUs — may round
+//! differently; the golden-value suite pins absolute accuracy at 1e-8
+//! against 60-digit mpmath references.)
 //!
 //! ### Serving layer (streaming prediction engine)
 //!

@@ -127,49 +127,67 @@ impl Matrix {
         self.matmul_with(other, &crate::runtime::ExecutionContext::seq())
     }
 
-    /// Dense matmul with output rows distributed over the context's
-    /// threads. Each output row is produced entirely by one worker with
-    /// the same accumulation order as the serial kernel, so the product
-    /// is bit-identical for any thread count. Used by the `O(m n³)`
-    /// Hessian trace products `W·∂K̃`.
+    /// Dense matmul through the packed [`super::micro`] GEMM, with output
+    /// row stripes distributed over the context's threads. Each stripe
+    /// runs the full cache-blocked kernel; per-entry accumulation order
+    /// depends only on the global `KC` grid, so the product is
+    /// bit-identical for any thread count. Used by the `O(m n³)` Hessian
+    /// trace products `W·∂K̃`.
     pub fn matmul_with(&self, other: &Matrix, ctx: &crate::runtime::ExecutionContext) -> Matrix {
         assert_eq!(self.cols, other.rows);
-        let mut out = Matrix::zeros(self.rows, other.cols);
-        let oc = other.cols;
-        // one job per ≥32-row tile: tiny products stay on the caller
-        let jobs = ctx.threads().min((self.rows / 32).max(1));
-        let bounds = crate::runtime::exec::even_bounds(0, self.rows, jobs);
-        let chunks = crate::runtime::exec::split_rows_mut(out.as_mut_slice(), oc, &bounds);
-        let mut job_fns = Vec::with_capacity(chunks.len());
-        for (chunk, w) in chunks.into_iter().zip(bounds.windows(2)) {
-            let (r0, r1) = (w[0], w[1]);
-            job_fns.push(move || {
-                for i in r0..r1 {
-                    let orow = &mut chunk[(i - r0) * oc..(i - r0 + 1) * oc];
-                    for k in 0..self.cols {
-                        let aik = self[(i, k)];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = other.row(k);
-                        for j in 0..oc {
-                            orow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            });
+        let (m, n, k) = (self.rows, other.cols, self.cols);
+        let mut out = Matrix::zeros(m, n);
+        if m == 0 || n == 0 || k == 0 {
+            return out;
         }
-        ctx.run_jobs(job_fns);
+        // one job per ≥32-row stripe: tiny products stay on the caller
+        let jobs = ctx.threads().min((m / 32).max(1));
+        let bounds = crate::runtime::exec::even_bounds(0, m, jobs);
+        let a_data = self.as_slice();
+        let b_data = other.as_slice();
+        crate::runtime::exec::for_row_chunks(out.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
+            super::micro::gemm_nn(
+                chunk,
+                n,
+                r1 - r0,
+                n,
+                k,
+                &a_data[r0 * k..],
+                k,
+                b_data,
+                n,
+                1.0,
+                super::micro::Clip::None,
+            );
+        });
         out
     }
 
-    /// Transpose.
+    /// Transpose, in cache-sized blocks so both the source rows and the
+    /// destination rows of a block stay resident (the naive double loop
+    /// strides a full row per store — ~8× slower at n ≈ 2000). Sits on
+    /// the `solve_mat` column-major path and the Hessian trace products.
     pub fn transpose(&self) -> Matrix {
-        let mut out = Matrix::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
+        const B: usize = 32;
+        let (r, c) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(c, r);
+        let src = self.as_slice();
+        let dst = out.as_mut_slice();
+        let mut bi = 0;
+        while bi < r {
+            let i_end = (bi + B).min(r);
+            let mut bj = 0;
+            while bj < c {
+                let j_end = (bj + B).min(c);
+                for i in bi..i_end {
+                    let row = &src[i * c + bj..i * c + j_end];
+                    for (j, &v) in row.iter().enumerate() {
+                        dst[(bj + j) * r + i] = v;
+                    }
+                }
+                bj += B;
             }
+            bi += B;
         }
         out
     }

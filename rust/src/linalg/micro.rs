@@ -1,0 +1,720 @@
+//! Cache-blocked, register-tiled f64 micro-kernels — the innermost layer
+//! of the crate's three-level performance architecture (see `lib.rs`):
+//!
+//! 1. **threads** — [`crate::runtime::ExecutionContext`] splits output
+//!    rows across scoped threads;
+//! 2. **cache blocks** — each thread's GEMM walks `KC×NC` panels of `B`
+//!    and `MC×KC` panels of `A`, packed into contiguous scratch so the
+//!    innermost loops stream L1-resident data;
+//! 3. **register tiles** — an `MR×NR` block of `C` is held in FMA
+//!    accumulators (`f64::mul_add`) for the whole `KC` depth.
+//!
+//! Everything here operates on raw row-major slices with an explicit row
+//! stride, so the same kernels serve full matrices, sub-blocks of a
+//! matrix being factorised in place, and packed panels.
+//!
+//! ## The canonical accumulation-order contract
+//!
+//! Every `C` entry owns a private accumulator: its value is
+//! `C₀ + α·Σ_chunk(Σ_k fma…)` where the `k` chunk grid depends only on
+//! the *call's* `k` origin and the global `KC` constant — never on which
+//! thread computed the entry, how the output rows were chunked, or how
+//! many other rows the call processed. Results are therefore
+//! **bit-identical for any thread count and any row partition** (asserted
+//! in `rust/tests/micro_kernels.rs` and `rust/tests/parallel_equivalence.rs`).
+//! They *do* differ from a naive triple loop by rounding (different
+//! summation order, fused multiply-adds); the golden-value suite's 1e-8
+//! tolerance absorbs this, and reconstruction/residual tests pass
+//! unchanged.
+//!
+//! ## Triangular variants
+//!
+//! [`gemm_nt`] with a [`Clip`] is the SYRK building block: the update is
+//! computed tile-by-tile but only the requested trapezoid of `C` is
+//! written, so `C −= P·Pᵀ` restricted to the lower triangle (the blocked
+//! Cholesky's trailing update) and `W = U·Uᵀ`-style upper-triangle
+//! products reuse the one macro-kernel. [`solve_lower_rows`] /
+//! [`solve_lower_transpose_rows`] are blocked multi-RHS TRSMs: column
+//! blocks of width [`TB`] are eliminated with a GEMM against the
+//! already-solved columns (mirrored into a scratch buffer so the in-place
+//! update needs no aliased borrows), then a small scalar triangle solve
+//! finishes the block.
+
+/// Register-tile rows: each micro-kernel invocation accumulates `MR`
+/// rows of `C`.
+pub const MR: usize = 4;
+/// Register-tile columns (`MR·NR` f64 accumulators ≈ 8 AVX registers).
+pub const NR: usize = 8;
+/// Depth of one packed panel pass; per-entry k-sums are chunked on this
+/// grid (part of the canonical accumulation-order contract).
+pub const KC: usize = 256;
+/// Rows of `A` packed per macro-tile (`MC·KC` doubles ≈ 128 KiB ≈ L2).
+pub const MC: usize = 64;
+/// Columns of `B` packed per macro-tile.
+pub const NC: usize = 512;
+/// Column-block width of the blocked TRSMs.
+pub const TB: usize = 32;
+
+/// Which trapezoid of the `C` region a clipped GEMM may write.
+///
+/// Indices are local to the `C` region passed in; the caller folds any
+/// global row/column offsets into `shift`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Clip {
+    /// Write every entry.
+    None,
+    /// Write `c[i][j]` only when `j <= i + shift`.
+    Lower(isize),
+    /// Write `c[i][j]` only when `j >= i + shift`.
+    Upper(isize),
+}
+
+impl Clip {
+    /// Does the `rows×cols` block at local `(i0, j0)` contain any
+    /// writable entry?
+    #[inline]
+    fn live(self, i0: isize, rows: usize, j0: isize, cols: usize) -> bool {
+        match self {
+            Clip::None => true,
+            Clip::Lower(s) => j0 <= i0 + rows as isize - 1 + s,
+            Clip::Upper(s) => j0 + cols as isize - 1 >= i0 + s,
+        }
+    }
+
+    /// Writable local-column range `[lo, hi)` for the row at local index
+    /// `i`, inside a tile whose first column has local index `j0` and
+    /// which spans `nr` columns.
+    #[inline]
+    fn col_range(self, i: isize, j0: isize, nr: usize) -> (usize, usize) {
+        match self {
+            Clip::None => (0, nr),
+            Clip::Lower(s) => {
+                let max_j = i + s - j0; // inclusive
+                if max_j < 0 {
+                    (0, 0)
+                } else {
+                    (0, nr.min(max_j as usize + 1))
+                }
+            }
+            Clip::Upper(s) => {
+                let min_j = i + s - j0; // inclusive
+                if min_j <= 0 {
+                    (0, nr)
+                } else {
+                    (nr.min(min_j as usize), nr)
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn round_up(x: usize, to: usize) -> usize {
+    (x + to - 1) / to * to
+}
+
+/// Pack `mc` rows of `A` (rows `m0..m0+mc`, columns `k0..k0+kc`, row
+/// stride `ars`) into `MR`-row micro-panels:
+/// `out[ip·MR·kc + kk·MR + ii] = A[m0+ip·MR+ii][k0+kk]`, zero-padded so
+/// the kernel never reads past the true row count.
+fn pack_a(a: &[f64], ars: usize, m0: usize, mc: usize, k0: usize, kc: usize, out: &mut [f64]) {
+    let panels = (mc + MR - 1) / MR;
+    for ip in 0..panels {
+        let dst = &mut out[ip * MR * kc..(ip + 1) * MR * kc];
+        let r_base = m0 + ip * MR;
+        let rows = MR.min(mc - ip * MR);
+        for ii in 0..rows {
+            let start = (r_base + ii) * ars + k0;
+            let src = &a[start..start + kc];
+            for (kk, &v) in src.iter().enumerate() {
+                dst[kk * MR + ii] = v;
+            }
+        }
+        for ii in rows..MR {
+            for kk in 0..kc {
+                dst[kk * MR + ii] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a `kc×nc` block of a **normal** `B` (row index = k):
+/// `out[jp·NR·kc + kk·NR + jj] = B[k0+kk][n0+jp·NR+jj]`, zero-padded.
+fn pack_b_n(b: &[f64], brs: usize, k0: usize, kc: usize, n0: usize, nc: usize, out: &mut [f64]) {
+    let panels = (nc + NR - 1) / NR;
+    for jp in 0..panels {
+        let dst = &mut out[jp * NR * kc..(jp + 1) * NR * kc];
+        let c_base = n0 + jp * NR;
+        let cols = NR.min(nc - jp * NR);
+        for kk in 0..kc {
+            let start = (k0 + kk) * brs + c_base;
+            let src = &b[start..start + cols];
+            let d = &mut dst[kk * NR..kk * NR + NR];
+            d[..cols].copy_from_slice(src);
+            for slot in d[cols..].iter_mut() {
+                *slot = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a block of a **transposed** `B` operand (`B` stored `n×k`
+/// row-major, used as `Bᵀ`): `out[… kk·NR + jj] = B[n0+jp·NR+jj][k0+kk]`.
+fn pack_b_t(b: &[f64], brs: usize, k0: usize, kc: usize, n0: usize, nc: usize, out: &mut [f64]) {
+    let panels = (nc + NR - 1) / NR;
+    for jp in 0..panels {
+        let dst = &mut out[jp * NR * kc..(jp + 1) * NR * kc];
+        let c_base = n0 + jp * NR;
+        let cols = NR.min(nc - jp * NR);
+        for jj in 0..cols {
+            let start = (c_base + jj) * brs + k0;
+            let src = &b[start..start + kc];
+            for (kk, &v) in src.iter().enumerate() {
+                dst[kk * NR + jj] = v;
+            }
+        }
+        for jj in cols..NR {
+            for kk in 0..kc {
+                dst[kk * NR + jj] = 0.0;
+            }
+        }
+    }
+}
+
+/// The register kernel: accumulate `ap·bpᵀ` (both packed, depth `kc`)
+/// into an `MR×NR` tile of FMA accumulators, then apply the writable
+/// `mr×nr` part to `C` as `c += alpha·acc`.
+///
+/// `gi`/`gj` are the tile's local coordinates inside the `C` region
+/// (for the clip test only).
+#[inline]
+fn micro_kernel(
+    ap: &[f64],
+    bp: &[f64],
+    c: &mut [f64],
+    cs: usize,
+    mr: usize,
+    nr: usize,
+    alpha: f64,
+    gi: isize,
+    gj: isize,
+    clip: Clip,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    // `chunks_exact` keeps the hot loop free of bounds checks and lets
+    // LLVM lift the MR×NR body into registers.
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for ii in 0..MR {
+            let a = av[ii];
+            for jj in 0..NR {
+                acc[ii][jj] = a.mul_add(bv[jj], acc[ii][jj]);
+            }
+        }
+    }
+    for ii in 0..mr {
+        let (lo, hi) = clip.col_range(gi + ii as isize, gj, nr);
+        if lo >= hi {
+            continue;
+        }
+        let row = &mut c[ii * cs + lo..ii * cs + hi];
+        let arow = &acc[ii];
+        for (jj, cv) in row.iter_mut().enumerate() {
+            *cv += alpha * arow[lo + jj];
+        }
+    }
+}
+
+/// Sweep the packed panels over one `mc×nc` macro-tile of `C` at local
+/// origin `(i0, j0)`. The `jr` loop is outer so each `B` micro-panel
+/// stays hot while the `A` panels stream past it.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    c: &mut [f64],
+    cs: usize,
+    i0: usize,
+    mc: usize,
+    j0: usize,
+    nc: usize,
+    kc: usize,
+    apack: &[f64],
+    bpack: &[f64],
+    alpha: f64,
+    clip: Clip,
+) {
+    let mut jr = 0;
+    while jr < nc {
+        let nr = NR.min(nc - jr);
+        let bp = &bpack[(jr / NR) * NR * kc..(jr / NR + 1) * NR * kc];
+        let tj = (j0 + jr) as isize;
+        let mut ir = 0;
+        while ir < mc {
+            let mr = MR.min(mc - ir);
+            let ti = (i0 + ir) as isize;
+            if clip.live(ti, mr, tj, nr) {
+                let ap = &apack[(ir / MR) * MR * kc..(ir / MR + 1) * MR * kc];
+                let coff = (i0 + ir) * cs + j0 + jr;
+                micro_kernel(ap, bp, &mut c[coff..], cs, mr, nr, alpha, ti, tj, clip);
+            }
+            ir += MR;
+        }
+        jr += NR;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    c: &mut [f64],
+    cs: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    b: &[f64],
+    brs: usize,
+    alpha: f64,
+    clip: Clip,
+    b_transposed: bool,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    assert!(c.len() >= (m - 1) * cs + n, "C region too short");
+    assert!(a.len() >= (m - 1) * ars + k, "A region too short");
+    if b_transposed {
+        assert!(b.len() >= (n - 1) * brs + k, "Bᵀ region too short");
+    } else {
+        assert!(b.len() >= (k - 1) * brs + n, "B region too short");
+    }
+    let kc_max = KC.min(k);
+    let mut apack = vec![0.0; MC.min(round_up(m, MR)) * kc_max];
+    let mut bpack = vec![0.0; NC.min(round_up(n, NR)) * kc_max];
+    let mut j0 = 0;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            if b_transposed {
+                pack_b_t(b, brs, k0, kc, j0, nc, &mut bpack);
+            } else {
+                pack_b_n(b, brs, k0, kc, j0, nc, &mut bpack);
+            }
+            let mut i0 = 0;
+            while i0 < m {
+                let mc = MC.min(m - i0);
+                if clip.live(i0 as isize, mc, j0 as isize, nc) {
+                    pack_a(a, ars, i0, mc, k0, kc, &mut apack);
+                    macro_kernel(c, cs, i0, mc, j0, nc, kc, &apack, &bpack, alpha, clip);
+                }
+                i0 += MC;
+            }
+            k0 += KC;
+        }
+        j0 += NC;
+    }
+}
+
+/// `C += α·A·B` on row-major regions: `A` is `m×k` (row stride `ars`),
+/// `B` is `k×n` (row stride `brs`), `C` is `m×n` (row stride `cs`).
+/// Entries outside `clip` are left untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn(
+    c: &mut [f64],
+    cs: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    b: &[f64],
+    brs: usize,
+    alpha: f64,
+    clip: Clip,
+) {
+    gemm_driver(c, cs, m, n, k, a, ars, b, brs, alpha, clip, false);
+}
+
+/// `C += α·A·Bᵀ` with **both** operands row-major over `k`: `A` is `m×k`,
+/// `B` is `n×k` (one row per output *column*), `C` is `m×n`. With
+/// `A = B` and `Clip::Lower` this is the SYRK of the blocked Cholesky.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    c: &mut [f64],
+    cs: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    b: &[f64],
+    brs: usize,
+    alpha: f64,
+    clip: Clip,
+) {
+    gemm_driver(c, cs, m, n, k, a, ars, b, brs, alpha, clip, true);
+}
+
+/// Blocked forward substitution for `q` stacked row right-hand sides,
+/// in place: row `r` of `x` becomes the solution of `L y = x[r]` where
+/// `L` is the `nn×nn` lower triangle stored at `l` with row stride `ls`
+/// (upper triangle never read). `x` rows have stride `xs ≥ nn`.
+///
+/// Column blocks of width [`TB`] are eliminated with [`gemm_nt`] against
+/// the already-solved columns — mirrored into a private scratch buffer so
+/// the in-place update reads and writes disjoint slices — then a scalar
+/// triangle solve finishes the block. Per-row arithmetic is independent
+/// of `q`, of the caller's row chunking, and of the thread count.
+pub fn solve_lower_rows(l: &[f64], ls: usize, nn: usize, x: &mut [f64], xs: usize, q: usize) {
+    if q == 0 || nn == 0 {
+        return;
+    }
+    assert!(xs >= nn, "row stride shorter than the triangle");
+    assert!(x.len() >= (q - 1) * xs + nn, "X region too short");
+    assert!(l.len() >= (nn - 1) * ls + nn, "L region too short");
+    let mut solved = vec![0.0; q * nn];
+    let mut j0 = 0;
+    while j0 < nn {
+        let j1 = (j0 + TB).min(nn);
+        if j0 > 0 {
+            // X[:, j0..j1] −= X[:, 0..j0] · L[j0..j1, 0..j0]ᵀ
+            let c_end = (q - 1) * xs + j1;
+            gemm_nt(
+                &mut x[j0..c_end],
+                xs,
+                q,
+                j1 - j0,
+                j0,
+                &solved,
+                nn,
+                &l[j0 * ls..],
+                ls,
+                -1.0,
+                Clip::None,
+            );
+        }
+        // scalar triangle solve within the block
+        for r in 0..q {
+            let row = &mut x[r * xs..r * xs + j1];
+            for j in j0..j1 {
+                let lrow = j * ls;
+                let mut acc = 0.0;
+                for k in j0..j {
+                    acc = l[lrow + k].mul_add(row[k], acc);
+                }
+                row[j] = (row[j] - acc) / l[lrow + j];
+            }
+        }
+        // mirror the solved block so later GEMM updates read it from a
+        // buffer disjoint from their write target
+        for r in 0..q {
+            solved[r * nn + j0..r * nn + j1].copy_from_slice(&x[r * xs + j0..r * xs + j1]);
+        }
+        j0 = j1;
+    }
+}
+
+/// Blocked backward substitution for `q` stacked row right-hand sides,
+/// in place: row `r` of `x` becomes the solution of `Lᵀ y = x[r]`
+/// (same storage conventions as [`solve_lower_rows`]). Column blocks are
+/// processed right-to-left; the block grid is anchored at `nn`, so the
+/// accumulation order is fixed by `nn` alone.
+pub fn solve_lower_transpose_rows(
+    l: &[f64],
+    ls: usize,
+    nn: usize,
+    x: &mut [f64],
+    xs: usize,
+    q: usize,
+) {
+    if q == 0 || nn == 0 {
+        return;
+    }
+    assert!(xs >= nn, "row stride shorter than the triangle");
+    assert!(x.len() >= (q - 1) * xs + nn, "X region too short");
+    assert!(l.len() >= (nn - 1) * ls + nn, "L region too short");
+    let mut solved = vec![0.0; q * nn];
+    let mut j1 = nn;
+    while j1 > 0 {
+        let j0 = j1.saturating_sub(TB);
+        if j1 < nn {
+            // X[:, j0..j1] −= X[:, j1..nn] · L[j1..nn, j0..j1]
+            let c_end = (q - 1) * xs + j1;
+            gemm_nn(
+                &mut x[j0..c_end],
+                xs,
+                q,
+                j1 - j0,
+                nn - j1,
+                &solved[j1..],
+                nn,
+                &l[j1 * ls + j0..],
+                ls,
+                -1.0,
+                Clip::None,
+            );
+        }
+        for r in 0..q {
+            let row = &mut x[r * xs..r * xs + j1];
+            for j in (j0..j1).rev() {
+                let mut acc = 0.0;
+                for k in (j + 1)..j1 {
+                    acc = l[k * ls + j].mul_add(row[k], acc);
+                }
+                row[j] = (row[j] - acc) / l[j * ls + j];
+            }
+        }
+        for r in 0..q {
+            solved[r * nn + j0..r * nn + j1].copy_from_slice(&x[r * xs + j0..r * xs + j1]);
+        }
+        j1 = j0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn randv(len: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    fn naive_nn(m: usize, n: usize, k: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_nt(m: usize, n: usize, k: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[j * k + kk];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn max_rel(got: &[f64], want: &[f64]) -> f64 {
+        let scale = want.iter().fold(1.0f64, |s, v| s.max(v.abs()));
+        got.iter().zip(want).map(|(g, w)| (g - w).abs()).fold(0.0, f64::max) / scale
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive_at_edge_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for &(m, n, k) in
+            &[(1usize, 1usize, 1usize), (3, 5, 2), (4, 8, 7), (5, 9, 3), (17, 13, 29), (40, 33, 65)]
+        {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut c = vec![0.0; m * n];
+            gemm_nn(&mut c, n, m, n, k, &a, k, &b, n, 1.0, Clip::None);
+            let want = naive_nn(m, n, k, &a, &b);
+            assert!(max_rel(&c, &want) < 1e-13, "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive_and_respects_alpha() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for &(m, n, k) in &[(1usize, 2usize, 3usize), (6, 4, 9), (9, 17, 33), (33, 20, 5)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(n * k, &mut rng);
+            let mut c = vec![1.0; m * n];
+            gemm_nt(&mut c, n, m, n, k, &a, k, &b, k, -2.0, Clip::None);
+            let want: Vec<f64> =
+                naive_nt(m, n, k, &a, &b).iter().map(|v| 1.0 - 2.0 * v).collect();
+            assert!(max_rel(&c, &want) < 1e-13, "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn strided_subregions_work() {
+        // operate on the interior of a larger buffer: strides > logical cols
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let (m, n, k) = (5usize, 6usize, 7usize);
+        let (ars, brs, cs) = (11usize, 13usize, 9usize);
+        let abuf = randv(m * ars, &mut rng);
+        let bbuf = randv(k * brs, &mut rng);
+        let mut cbuf = vec![0.0; m * cs];
+        gemm_nn(&mut cbuf, cs, m, n, k, &abuf, ars, &bbuf, brs, 1.0, Clip::None);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += abuf[i * ars + kk] * bbuf[kk * brs + j];
+                }
+                assert!((cbuf[i * cs + j] - s).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        // columns beyond n untouched
+        for i in 0..m {
+            for j in n..cs {
+                assert_eq!(cbuf[i * cs + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn clip_lower_writes_only_the_trapezoid() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let (m, k) = (37usize, 12usize);
+        let a = randv(m * k, &mut rng);
+        let mut c = vec![f64::NAN; m * m];
+        // C = −A·Aᵀ on the lower triangle only (shift 0)
+        for (i, v) in c.iter_mut().enumerate() {
+            if i % m <= i / m {
+                *v = 0.0;
+            }
+        }
+        gemm_nt(&mut c, m, m, m, k, &a, k, &a, k, -1.0, Clip::Lower(0));
+        let want = naive_nt(m, m, k, &a, &a);
+        for i in 0..m {
+            for j in 0..m {
+                if j <= i {
+                    assert!(
+                        (c[i * m + j] + want[i * m + j]).abs() < 1e-12,
+                        "lower ({i},{j})"
+                    );
+                } else {
+                    assert!(c[i * m + j].is_nan(), "upper ({i},{j}) was written");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clip_upper_with_shift() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let (m, n, k) = (9usize, 14usize, 6usize);
+        let shift = 3isize;
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut c = vec![0.0; m * n];
+        gemm_nn(&mut c, n, m, n, k, &a, k, &b, n, 1.0, Clip::Upper(shift));
+        let want = naive_nn(m, n, k, &a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                if j as isize >= i as isize + shift {
+                    assert!((c[i * n + j] - want[i * n + j]).abs() < 1e-12, "({i},{j})");
+                } else {
+                    assert_eq!(c[i * n + j], 0.0, "({i},{j}) below the clip was written");
+                }
+            }
+        }
+    }
+
+    /// Well-conditioned lower triangle for solve tests.
+    fn test_lower(nn: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+        let mut l = vec![0.0; nn * nn];
+        for i in 0..nn {
+            for j in 0..i {
+                l[i * nn + j] = 0.3 * rng.normal() / (nn as f64).sqrt();
+            }
+            l[i * nn + i] = 2.0 + 0.1 * rng.normal().abs();
+            // garbage above the diagonal must never be read
+            for j in (i + 1)..nn {
+                l[i * nn + j] = f64::NAN;
+            }
+        }
+        l
+    }
+
+    #[test]
+    fn solve_lower_rows_matches_scalar_solve() {
+        let mut rng = Xoshiro256::seed_from_u64(19);
+        for &nn in &[1usize, 5, 31, 32, 33, 97] {
+            let l = test_lower(nn, &mut rng);
+            let lm = {
+                let mut m = crate::linalg::Matrix::zeros(nn, nn);
+                for i in 0..nn {
+                    for j in 0..=i {
+                        m[(i, j)] = l[i * nn + j];
+                    }
+                }
+                m
+            };
+            for &q in &[1usize, 4] {
+                let b = randv(q * nn, &mut rng);
+                let mut x = b.clone();
+                solve_lower_rows(&l, nn, nn, &mut x, nn, q);
+                for r in 0..q {
+                    let mut want = b[r * nn..(r + 1) * nn].to_vec();
+                    crate::linalg::solve_lower(&lm, &mut want);
+                    for j in 0..nn {
+                        let w = want[j];
+                        assert!(
+                            (x[r * nn + j] - w).abs() < 1e-11 * w.abs().max(1.0),
+                            "nn={nn} q={q} row={r} col={j}: {} vs {w}",
+                            x[r * nn + j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_lower_transpose_rows_matches_scalar_solve() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        for &nn in &[1usize, 7, 32, 33, 97] {
+            let l = test_lower(nn, &mut rng);
+            let lm = {
+                let mut m = crate::linalg::Matrix::zeros(nn, nn);
+                for i in 0..nn {
+                    for j in 0..=i {
+                        m[(i, j)] = l[i * nn + j];
+                    }
+                }
+                m
+            };
+            let q = 3;
+            let b = randv(q * nn, &mut rng);
+            let mut x = b.clone();
+            solve_lower_transpose_rows(&l, nn, nn, &mut x, nn, q);
+            for r in 0..q {
+                let mut want = b[r * nn..(r + 1) * nn].to_vec();
+                crate::linalg::solve_lower_transpose(&lm, &mut want);
+                for j in 0..nn {
+                    let w = want[j];
+                    assert!(
+                        (x[r * nn + j] - w).abs() < 1e-11 * w.abs().max(1.0),
+                        "nn={nn} row={r} col={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_partition_invariance() {
+        // the canonical-order contract: computing rows in two separate
+        // calls gives bit-identical results to one call over all rows
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let (m, n, k) = (23usize, 19usize, 300usize); // k spans two KC chunks
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut c_whole = vec![0.0; m * n];
+        gemm_nn(&mut c_whole, n, m, n, k, &a, k, &b, n, 1.0, Clip::None);
+        for split in [1usize, 7, 16] {
+            let mut c_split = vec![0.0; m * n];
+            let (top, bottom) = c_split.split_at_mut(split * n);
+            gemm_nn(top, n, split, n, k, &a, k, &b, n, 1.0, Clip::None);
+            gemm_nn(bottom, n, m - split, n, k, &a[split * k..], k, &b, n, 1.0, Clip::None);
+            assert_eq!(c_split, c_whole, "split={split}");
+        }
+    }
+}

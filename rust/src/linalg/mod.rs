@@ -15,9 +15,16 @@
 //! plain-named entry points are the serial (`seq`) specialisations.
 //! Parallel results are bit-identical to serial ones — see
 //! `rust/tests/parallel_equivalence.rs`.
+//!
+//! All of them bottom out in the [`micro`] module: packed, register-tiled
+//! GEMM/SYRK/TRSM micro-kernels whose accumulation order is the crate's
+//! canonical one (fixed by the `KC`/`TB` block grids alone, so it is
+//! invariant under thread count and row partition — see the [`micro`]
+//! module docs for the contract).
 
 mod matrix;
 mod cholesky;
+pub mod micro;
 mod triangular;
 mod toeplitz;
 mod lu;
@@ -33,22 +40,35 @@ pub use lu::Lu;
 pub use eigen::sym_eigen;
 
 /// Dot product of two equal-length slices.
+///
+/// Four independent `mul_add` chains reduced as `(s₀+s₁)+(s₂+s₃)` plus an
+/// in-order tail — the scalar sibling of the [`micro`] kernels' FMA
+/// accumulators. Deterministic for a fixed build; differs from a plain
+/// sequential sum by rounding only.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
+    let n4 = a.len() / 4 * 4;
+    let mut acc = [0.0f64; 4];
+    for (x, y) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        acc[0] = x[0].mul_add(y[0], acc[0]);
+        acc[1] = x[1].mul_add(y[1], acc[1]);
+        acc[2] = x[2].mul_add(y[2], acc[2]);
+        acc[3] = x[3].mul_add(y[3], acc[3]);
     }
-    acc
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in n4..a.len() {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (fused multiply-add per element).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = alpha.mul_add(xi, *yi);
     }
 }
 

@@ -1,7 +1,11 @@
 //! Triangular solves against a lower factor stored in a full square
 //! matrix (upper triangle ignored).
+//!
+//! These are the scalar single-RHS sweeps (one FMA `dot`/`axpy` per row);
+//! the multi-RHS hot paths use the blocked
+//! [`crate::linalg::micro::solve_lower_rows`] family instead.
 
-use super::Matrix;
+use super::{axpy, dot, Matrix};
 
 /// Solve `L x = b` in place (`b` becomes `x`), `L` lower triangular.
 pub fn solve_lower(l: &Matrix, b: &mut [f64]) {
@@ -11,14 +15,9 @@ pub fn solve_lower(l: &Matrix, b: &mut [f64]) {
     let data = l.as_slice();
     for i in 0..n {
         let row = i * c;
-        let mut s = b[i];
         // dot of the solved prefix with L's row — contiguous, vectorises
-        let mut acc = 0.0;
-        for k in 0..i {
-            acc += data[row + k] * b[k];
-        }
-        s -= acc;
-        b[i] = s / data[row + i];
+        let acc = dot(&data[row..row + i], &b[..i]);
+        b[i] = (b[i] - acc) / data[row + i];
     }
 }
 
@@ -36,9 +35,7 @@ pub fn solve_lower_transpose(l: &Matrix, b: &mut [f64]) {
         let xi = b[i] / data[row + i];
         b[i] = xi;
         // eliminate x_i from all earlier equations: b[k] -= L[i,k] * x_i
-        for k in 0..i {
-            b[k] -= data[row + k] * xi;
-        }
+        axpy(-xi, &data[row..row + i], &mut b[..i]);
     }
 }
 
@@ -51,10 +48,7 @@ pub fn solve_upper(u: &Matrix, b: &mut [f64]) {
     let data = u.as_slice();
     for i in (0..n).rev() {
         let row = i * c;
-        let mut acc = 0.0;
-        for k in (i + 1)..n {
-            acc += data[row + k] * b[k];
-        }
+        let acc = dot(&data[row + i + 1..row + n], &b[i + 1..n]);
         b[i] = (b[i] - acc) / data[row + i];
     }
 }

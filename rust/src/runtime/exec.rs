@@ -224,6 +224,41 @@ pub fn for_row_chunks<T, F>(
     ctx.run_jobs(job_fns);
 }
 
+/// Multi-buffer variant of [`for_row_chunks`]: several parallel row-major
+/// buffers — each with its own column count but all starting at row
+/// `bounds[0]` — are chunked along the **same** row bounds, and `f`
+/// receives one chunk per buffer (in input order) plus the global row
+/// range. This is the shape of kernels that fill a value matrix and its
+/// derivative matrices in one sweep (`assemble_cov_grads_with`) or that
+/// solve matrix rows while packing them into a scratch panel (the blocked
+/// Cholesky's TRSM).
+pub fn for_row_chunks_multi<'a, T, F>(
+    buffers: Vec<(&'a mut [T], usize)>,
+    bounds: &[usize],
+    ctx: &ExecutionContext,
+    f: F,
+) where
+    T: Send,
+    F: Fn(Vec<&'a mut [T]>, usize, usize) + Sync,
+{
+    let n_chunks = bounds.len().saturating_sub(1);
+    let n_buffers = buffers.len();
+    let mut per_chunk: Vec<Vec<&'a mut [T]>> =
+        (0..n_chunks).map(|_| Vec::with_capacity(n_buffers)).collect();
+    for (data, cols) in buffers {
+        for (ci, chunk) in split_rows_mut(data, cols, bounds).into_iter().enumerate() {
+            per_chunk[ci].push(chunk);
+        }
+    }
+    let f = &f;
+    let mut job_fns = Vec::with_capacity(n_chunks);
+    for (chunks, w) in per_chunk.into_iter().zip(bounds.windows(2)) {
+        let (r0, r1) = (w[0], w[1]);
+        job_fns.push(move || f(chunks, r0, r1));
+    }
+    ctx.run_jobs(job_fns);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,6 +366,48 @@ mod tests {
                 for (i, v) in data.iter().enumerate() {
                     assert_eq!(*v, (lo * cols + i) as f64, "cell {i} wrong/unwritten");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn for_row_chunks_multi_keeps_buffers_in_lockstep() {
+        // two buffers with different column counts, chunked on the same
+        // bounds: every cell of both written exactly once with its global
+        // row index visible to the job
+        for threads in [1usize, 3] {
+            let ctx = ExecutionContext::new(threads);
+            let (lo, hi) = (2usize, 17usize);
+            let (ca, cb) = (4usize, 2usize);
+            let mut a = vec![-1.0f64; (hi - lo) * ca];
+            let mut b = vec![-1.0f64; (hi - lo) * cb];
+            let bounds = even_bounds(lo, hi, threads);
+            for_row_chunks_multi(
+                vec![(&mut a[..], ca), (&mut b[..], cb)],
+                &bounds,
+                &ctx,
+                |chunks, r0, r1| {
+                    let mut it = chunks.into_iter();
+                    let ac = it.next().unwrap();
+                    let bc = it.next().unwrap();
+                    assert!(it.next().is_none());
+                    assert_eq!(ac.len(), (r1 - r0) * ca);
+                    assert_eq!(bc.len(), (r1 - r0) * cb);
+                    for r in r0..r1 {
+                        for c in 0..ca {
+                            ac[(r - r0) * ca + c] = (r * ca + c) as f64;
+                        }
+                        for c in 0..cb {
+                            bc[(r - r0) * cb + c] = (r * cb + c) as f64;
+                        }
+                    }
+                },
+            );
+            for (i, v) in a.iter().enumerate() {
+                assert_eq!(*v, (lo * ca + i) as f64, "a[{i}] threads={threads}");
+            }
+            for (i, v) in b.iter().enumerate() {
+                assert_eq!(*v, (lo * cb + i) as f64, "b[{i}] threads={threads}");
             }
         }
     }

@@ -1,0 +1,228 @@
+//! Adversarial-shape validation of the `linalg::micro` kernel layer:
+//! GEMM/SYRK/TRSM against naive triple-loop references at remainder-heavy
+//! and non-square shapes, plus the canonical accumulation-order contract
+//! (bit-identical results at any thread count, including the machine
+//! maximum).
+
+use gpfast::linalg::micro::{self, Clip};
+use gpfast::linalg::{solve_lower, solve_lower_transpose, Chol, ExecutionContext, Matrix};
+use gpfast::rng::Xoshiro256;
+
+/// The adversarial size set from the issue: unit, just-below/at/above the
+/// MR/NR/TB tile edges, a prime, and a multi-`KC`-straddling size.
+const SIZES: [usize; 7] = [1, 7, 31, 32, 33, 97, 256];
+
+fn randv(len: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Xoshiro256) -> Matrix {
+    Matrix::from_vec(r, c, randv(r * c, rng))
+}
+
+fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.normal() * 0.1;
+            m[(i, j)] = v;
+            m[(j, i)] = v;
+        }
+        m[(i, i)] = 4.0;
+    }
+    m
+}
+
+fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).max(2)
+}
+
+#[test]
+fn gemm_nn_matches_naive_reference_across_shape_grid() {
+    let mut rng = Xoshiro256::seed_from_u64(2027);
+    for &m in &SIZES {
+        for &n in &SIZES {
+            for &k in &SIZES {
+                let a = randv(m * k, &mut rng);
+                let b = randv(k * n, &mut rng);
+                let mut c = vec![0.0; m * n];
+                micro::gemm_nn(&mut c, n, m, n, k, &a, k, &b, n, 1.0, Clip::None);
+                // naive i-j-k reference
+                let mut scale = 1.0f64;
+                let mut worst = 0.0f64;
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut s = 0.0;
+                        for kk in 0..k {
+                            s += a[i * k + kk] * b[kk * n + j];
+                        }
+                        scale = scale.max(s.abs());
+                        worst = worst.max((c[i * n + j] - s).abs());
+                    }
+                }
+                assert!(
+                    worst / scale < 1e-12,
+                    "gemm_nn m={m} n={n} k={k}: rel err {:.3e}",
+                    worst / scale
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_nt_matches_naive_reference_across_shape_grid() {
+    let mut rng = Xoshiro256::seed_from_u64(2029);
+    for &m in &SIZES {
+        for &n in &SIZES {
+            for &k in &SIZES {
+                let a = randv(m * k, &mut rng);
+                let b = randv(n * k, &mut rng);
+                let mut c = vec![0.0; m * n];
+                micro::gemm_nt(&mut c, n, m, n, k, &a, k, &b, k, 1.0, Clip::None);
+                let mut scale = 1.0f64;
+                let mut worst = 0.0f64;
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut s = 0.0;
+                        for kk in 0..k {
+                            s += a[i * k + kk] * b[j * k + kk];
+                        }
+                        scale = scale.max(s.abs());
+                        worst = worst.max((c[i * n + j] - s).abs());
+                    }
+                }
+                assert!(
+                    worst / scale < 1e-12,
+                    "gemm_nt m={m} n={n} k={k}: rel err {:.3e}",
+                    worst / scale
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn syrk_lower_clip_matches_naive_triangle_and_leaves_upper_untouched() {
+    let mut rng = Xoshiro256::seed_from_u64(2031);
+    for &n in &[7usize, 33, 97, 130] {
+        for &k in &[1usize, 31, 64] {
+            let p = randv(n * k, &mut rng);
+            let sentinel = 123.456789;
+            let mut c = vec![sentinel; n * n];
+            for i in 0..n {
+                for j in 0..=i {
+                    c[i * n + j] = 1.0;
+                }
+            }
+            micro::gemm_nt(&mut c, n, n, n, k, &p, k, &p, k, -1.0, Clip::Lower(0));
+            for i in 0..n {
+                for j in 0..n {
+                    if j <= i {
+                        let mut s = 0.0;
+                        for kk in 0..k {
+                            s += p[i * k + kk] * p[j * k + kk];
+                        }
+                        let want = 1.0 - s;
+                        assert!(
+                            (c[i * n + j] - want).abs() < 1e-11 * want.abs().max(1.0),
+                            "syrk n={n} k={k} ({i},{j})"
+                        );
+                    } else {
+                        assert_eq!(c[i * n + j], sentinel, "syrk wrote above diagonal ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_row_solves_match_scalar_triangular_solves() {
+    let mut rng = Xoshiro256::seed_from_u64(2033);
+    for &n in &SIZES {
+        let ch = Chol::factor(&random_spd(n, &mut rng)).unwrap();
+        let l = ch.factor_matrix();
+        for &q in &[1usize, 5] {
+            let b = randv(q * n, &mut rng);
+            let mut fwd = b.clone();
+            micro::solve_lower_rows(l.as_slice(), n, n, &mut fwd, n, q);
+            let mut bwd = fwd.clone();
+            micro::solve_lower_transpose_rows(l.as_slice(), n, n, &mut bwd, n, q);
+            for r in 0..q {
+                let mut want = b[r * n..(r + 1) * n].to_vec();
+                solve_lower(l, &mut want);
+                for j in 0..n {
+                    assert!(
+                        (fwd[r * n + j] - want[j]).abs() < 1e-10 * want[j].abs().max(1.0),
+                        "forward n={n} q={q} ({r},{j})"
+                    );
+                }
+                solve_lower_transpose(l, &mut want);
+                for j in 0..n {
+                    assert!(
+                        (bwd[r * n + j] - want[j]).abs() < 1e-10 * want[j].abs().max(1.0),
+                        "backward n={n} q={q} ({r},{j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The canonical accumulation-order contract at the machine's full
+/// parallelism: every ported kernel must be bit-identical to its serial
+/// run, including at sizes that straddle every block edge.
+#[test]
+fn ported_kernels_bit_identical_at_max_threads() {
+    let mut rng = Xoshiro256::seed_from_u64(2039);
+    let ctx = ExecutionContext::new(max_threads());
+    for &n in &[65usize, 129, 320] {
+        // matmul (non-square to exercise remainder tiles)
+        let a = rand_matrix(n, n + 17, &mut rng);
+        let b = rand_matrix(n + 17, n - 3, &mut rng);
+        let serial = a.matmul(&b);
+        assert_eq!(a.matmul_with(&b, &ctx).max_abs_diff(&serial), 0.0, "matmul n={n}");
+        // factor, inverse, multi-RHS solves
+        let k = random_spd(n, &mut rng);
+        let ch_s = Chol::factor(&k).unwrap();
+        let ch_p = Chol::factor_with(&k, &ctx).unwrap();
+        assert_eq!(
+            ch_p.factor_matrix().max_abs_diff(ch_s.factor_matrix()),
+            0.0,
+            "factor n={n}"
+        );
+        assert_eq!(ch_p.inverse_with(&ctx).max_abs_diff(&ch_s.inverse()), 0.0, "inverse n={n}");
+        let rhs = rand_matrix(n, 9, &mut rng);
+        assert_eq!(
+            ch_p.solve_mat_with(&rhs, &ctx).max_abs_diff(&ch_s.solve_mat(&rhs)),
+            0.0,
+            "solve_mat n={n}"
+        );
+        let batch = rand_matrix(40, n, &mut rng);
+        let mut got_s = batch.clone();
+        ch_s.half_solve_rows_with(&mut got_s, &ExecutionContext::seq());
+        let mut got_p = batch.clone();
+        ch_p.half_solve_rows_with(&mut got_p, &ctx);
+        assert_eq!(got_p.max_abs_diff(&got_s), 0.0, "half_solve_rows n={n}");
+    }
+}
+
+/// Factor → solve residual stays tight through the micro-kernel path.
+#[test]
+fn micro_kernel_factor_solves_accurately() {
+    let mut rng = Xoshiro256::seed_from_u64(2041);
+    for &n in &[97usize, 256] {
+        let k = random_spd(n, &mut rng);
+        let ch = Chol::factor(&k).unwrap();
+        let b: Vec<f64> = randv(n, &mut rng);
+        let x = ch.solve(&b);
+        let r = k.matvec(&x);
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-9, "n={n} residual {:.3e}", (r[i] - b[i]).abs());
+        }
+        // tiled transpose round-trips exactly
+        let m = rand_matrix(n, n / 2 + 1, &mut rng);
+        assert_eq!(m.transpose().transpose().max_abs_diff(&m), 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Bench: the model-comparison tournament — roster wall-clock vs serial
+//! per-model training, and the warm-start evaluation savings.
+//!
+//! * **roster-of-3** (`k1`, `wendland-se`, `k2`): the two lineage roots
+//!   train concurrently under a split budget, then `k2` trains
+//!   warm-started from `k1`'s peak — wall-clock is compared against
+//!   training the same three models one after another with the full
+//!   budget each (the pre-tournament workflow);
+//! * **warm-start savings**: profiled-likelihood evaluations recorded by
+//!   the warm-started `k2` vs a cold multistart of the same model.
+//!
+//! Merges a `tournament` section into **`BENCH_perf.json`** (same
+//! per-section row convention as `perf`/`serve`):
+//! `{n, threads, restarts, tournament_seconds, serial_seconds, speedup,
+//!   warm_evals, cold_evals, eval_savings}`.
+//!
+//! `cargo bench --bench tournament`; set `GPFAST_BENCH_QUICK=1` for the
+//! ci.sh smoke sizes.
+
+use gpfast::coordinator::{train_model, ModelSpec, PipelineConfig, Tournament, TrainOptions};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::optimize::MultistartOptions;
+use gpfast::priors::{BoxPrior, ScalePrior};
+use gpfast::rng::Xoshiro256;
+use gpfast::util::{timer::human_time, Json, Stopwatch, Table};
+
+fn main() {
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let sizes: &[(usize, usize)] =
+        if quick { &[(48, 2)] } else { &[(100, 4), (200, 6)] };
+    let roster = vec![ModelSpec::K1, ModelSpec::WendlandSe, ModelSpec::K2];
+    println!(
+        "(machine parallelism: {avail}; roster: k1 + wendland-se + k2{})\n",
+        if quick { "; QUICK smoke sizes" } else { "" }
+    );
+
+    let mut t = Table::new(vec![
+        "n", "restarts", "tournament", "serial", "speedup", "k2 warm evals", "k2 cold evals",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &(n, restarts) in sizes {
+        let data = table1_dataset(n, 0.1, 20160125);
+        let mut cfg = PipelineConfig::paper_synthetic();
+        cfg.models = roster.clone();
+        cfg.train.multistart.restarts = restarts;
+        cfg.workers = avail;
+
+        // --- the tournament: lineage-scheduled, shared budget
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let sw = Stopwatch::start();
+        let result = Tournament::new(cfg.clone()).run(&data, &mut rng).expect("tournament");
+        let tournament_secs = sw.elapsed_secs();
+        let warm_evals = result.model("k2").expect("k2 trained").train.n_evals;
+
+        // --- the pre-tournament workflow: each model trained serially
+        // with the full budget (cold starts throughout), followed by its
+        // Laplace evidence — the same per-model work the tournament's
+        // wall-clock includes, so the speedup isolates the scheduling win
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let sw = Stopwatch::start();
+        let mut cold_evals = 0usize;
+        for spec in &roster {
+            let res = train_model(spec, cfg.sigma_n, &data, &opts, cfg.workers, &cfg.exec, &mut rng)
+                .expect("serial train");
+            if *spec == ModelSpec::K2 {
+                cold_evals = res.n_evals;
+            }
+            let model = spec.build(cfg.sigma_n);
+            let prior = BoxPrior::for_model(&model, &data.span());
+            let hess = gpfast::gp::profiled_hessian_with(
+                &model,
+                &data.t,
+                &data.y,
+                &res.theta_hat,
+                &cfg.exec,
+            )
+            .expect("serial hessian");
+            let _ev = gpfast::evidence::laplace_evidence(
+                data.len(),
+                &prior,
+                &ScalePrior::default(),
+                &res.theta_hat,
+                res.lnp_peak,
+                &hess,
+            )
+            .expect("serial evidence");
+        }
+        let serial_secs = sw.elapsed_secs();
+
+        let speedup = serial_secs / tournament_secs;
+        t.add_row(vec![
+            format!("{n}"),
+            format!("{restarts}"),
+            human_time(tournament_secs),
+            human_time(serial_secs),
+            format!("{speedup:.2}x"),
+            format!("{warm_evals}"),
+            format!("{cold_evals}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("n", n.into()),
+            ("threads", avail.into()),
+            ("restarts", restarts.into()),
+            ("tournament_seconds", tournament_secs.into()),
+            ("serial_seconds", serial_secs.into()),
+            ("speedup", speedup.into()),
+            ("warm_evals", warm_evals.into()),
+            ("cold_evals", cold_evals.into()),
+            (
+                "eval_savings",
+                (1.0 - warm_evals as f64 / cold_evals.max(1) as f64).into(),
+            ),
+        ]));
+    }
+    print!("{}", t.render());
+    println!(
+        "\n(serial trains the roster one model at a time with the full budget and cold \
+         starts — the tournament's win is model-level concurrency plus warm-started \
+         children doing fewer profiled-likelihood evaluations)"
+    );
+
+    // merge the tournament section into BENCH_perf.json, preserving the
+    // sections other benches wrote
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections =
+        doc.get("sections").and_then(|s| s.as_obj().cloned()).unwrap_or_default();
+    sections.insert("tournament".to_string(), Json::Arr(rows));
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), avail.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("machine-readable results merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

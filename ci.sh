@@ -24,11 +24,12 @@ GPFAST_THREADS=1 cargo test -q
 echo "== cargo test -q (GPFAST_THREADS=max) =="
 GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q
 
-echo "== quick-bench smoke: micro-kernel gflops recorded in BENCH_perf.json =="
-# Small-n sweep of the perf bench so the BENCH_perf.json trajectory is
-# refreshed on every gate run; the full-size sweep stays a manual
-# `cargo bench --bench perf`.
+echo "== quick-bench smoke: micro-kernel gflops + tournament recorded in BENCH_perf.json =="
+# Small-n sweeps of the perf and tournament benches so the
+# BENCH_perf.json trajectory is refreshed on every gate run; the
+# full-size sweeps stay manual `cargo bench --bench perf|tournament`.
 GPFAST_BENCH_QUICK=1 cargo bench --bench perf
+GPFAST_BENCH_QUICK=1 cargo bench --bench tournament
 if command -v python3 >/dev/null 2>&1; then
     python3 - <<'EOF'
 import json, sys
@@ -37,13 +38,19 @@ for name in ("gemm", "syrk"):
     rows = doc.get("sections", {}).get(name, [])
     if not rows or not all("gflops" in r for r in rows):
         sys.exit(f"FAIL: BENCH_perf.json section {name!r} is empty or missing gflops")
-print("BENCH_perf.json gemm/syrk sections populated")
+rows = doc.get("sections", {}).get("tournament", [])
+if not rows or not all("tournament_seconds" in r and "warm_evals" in r for r in rows):
+    sys.exit("FAIL: BENCH_perf.json section 'tournament' is empty or missing fields")
+print("BENCH_perf.json gemm/syrk/tournament sections populated")
 EOF
 else
     # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
-    # in quick mode), so a populated run has at least 4 of them
+    # in quick mode), so a populated run has at least 4 of them, and the
+    # tournament section carries at least one wall-clock row
     [ "$(grep -c '"naive_gflops"' BENCH_perf.json)" -ge 4 ] \
         || { echo "FAIL: BENCH_perf.json gemm/syrk sections not populated"; exit 1; }
+    [ "$(grep -c '"tournament_seconds"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json tournament section not populated"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

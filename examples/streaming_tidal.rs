@@ -18,9 +18,12 @@
 //! GPFAST_THREADS=4 cargo run --release --example streaming_tidal
 //! ```
 
-use gpfast::coordinator::{ModelSpec, ServeSession, TrainOptions};
+use gpfast::coordinator::{
+    ModelSpec, PipelineConfig, Roster, ServeSession, Tournament, TrainOptions,
+};
 use gpfast::data::tidal::{generate_tidal, TidalConfig};
 use gpfast::gp::profiled::ProfiledEval;
+use gpfast::priors::ScalePrior;
 use gpfast::rng::Xoshiro256;
 use gpfast::runtime::ExecutionContext;
 use gpfast::util::Stopwatch;
@@ -39,7 +42,9 @@ fn main() -> gpfast::Result<()> {
     let per_day = (24.0 / 2.0) as usize; // 2-hour cadence → 12 points/day
     let history = full.head(n0);
 
-    // --- 1. train on the first lunar month
+    // --- 1. train on the first lunar month: a roster-of-one tournament
+    // (same multistart and RNG stream as the old standalone path, so a
+    // single-model roster reproduces the pre-roster run exactly)
     println!("training k1 on the first lunar month (n = {n0}) ...");
     let mut opts = TrainOptions::default();
     opts.multistart.restarts = 3;
@@ -47,21 +52,31 @@ fn main() -> gpfast::Result<()> {
     opts.extra_starts = vec![vec![4.5, 12.42f64.ln(), 0.0]];
     let mut rng = Xoshiro256::seed_from_u64(1);
     let sw = Stopwatch::start();
-    let (mut session, trained) = ServeSession::train_and_serve(
-        &ModelSpec::K1,
-        SIGMA_N,
-        &history,
-        &opts,
-        2,
-        exec.clone(),
-        &mut rng,
-    )?;
+    let config = PipelineConfig {
+        models: Roster::parse("k1")?.specs().to_vec(),
+        sigma_n: SIGMA_N,
+        train: opts,
+        scale_prior: ScalePrior::default(),
+        run_nested: false,
+        nested: Default::default(),
+        workers: 2,
+        exec: exec.clone(),
+    };
+    let result = Tournament::new(config).run(&history, &mut rng)?;
+    let trained = result.winner().train.clone();
+    // the router adopts every artifact's cached factor; with a roster of
+    // one it routes every query to that model, bit-identically to the
+    // old single-predictor session. (The tournament also attaches the
+    // Laplace evidence — one extra analytic-Hessian evaluation — which
+    // the old train-only path skipped; the wall-clock below includes it.)
+    let mut session = ServeSession::from_tournament(&result.models, &history, exec.clone())?;
     println!(
-        "trained in {:.1} s: lnP = {:.2}, T1 = {:.2} h, σ̂_f = {:.3}",
+        "trained (+evidence) in {:.1} s: lnP = {:.2}, T1 = {:.2} h, σ̂_f = {:.3}, lnZ = {:.2}",
         sw.elapsed_secs(),
         trained.lnp_peak,
         trained.theta_hat[1].exp(),
-        trained.sigma_f_hat2.sqrt()
+        trained.sigma_f_hat2.sqrt(),
+        result.winner().ln_z()
     );
 
     // --- 2 & 3. stream two weeks, serving a day-ahead forecast daily

@@ -61,7 +61,9 @@ fn train_large_warm(
         lnp_peak: trained.lnp_peak,
         sigma_f_hat: trained.sigma_f_hat2.sqrt(),
         ln_z: ev.ln_z,
+        ln_b: 0.0, // filled in by ComparisonReport::ranked
         suspect: ev.suspect || !trained.converged,
+        warm_started: true, // seeded from the small-set peak
         n_evals: trained.n_evals,
         n_modes: trained.n_modes,
         restarts: 2,

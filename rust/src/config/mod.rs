@@ -8,7 +8,7 @@ mod toml;
 
 pub use toml::{TomlDoc, TomlValue};
 
-use crate::coordinator::{ModelSpec, PipelineConfig};
+use crate::coordinator::{PipelineConfig, Roster};
 use crate::nested::NestedOptions;
 use crate::optimize::{CgOptions, MultistartOptions};
 use crate::priors::ScalePrior;
@@ -114,13 +114,14 @@ impl RunConfig {
         }
     }
 
+    /// The model roster this config names (validated, deduplicated).
+    pub fn roster(&self) -> crate::Result<Roster> {
+        Roster::from_names(&self.models)
+    }
+
     /// Materialise the pipeline configuration.
     pub fn pipeline(&self) -> crate::Result<PipelineConfig> {
-        let models = self
-            .models
-            .iter()
-            .map(|s| ModelSpec::parse(s))
-            .collect::<crate::Result<Vec<_>>>()?;
+        let models = self.roster()?.specs().to_vec();
         Ok(PipelineConfig {
             models,
             sigma_n: self.sigma_n,

@@ -12,9 +12,18 @@
 //! 4. optionally verify with the **nested-sampling baseline** — the
 //!    paper's MULTINEST comparison, at 20,000–50,000 likelihood
 //!    evaluations vs ~10×100 for the fast path;
-//! 5. hand the winning model to the **serving layer** ([`serve`]): a
-//!    [`ServeSession`] caches the factor from training and serves batched
-//!    predictions / streaming observation appends without refactorising.
+//! 5. hand the ranked [`TrainedModel`] artifacts to the **serving
+//!    layer** ([`serve`]): a [`ServeSession`] routes queries across the
+//!    cached factors — the evidence winner by default, optionally
+//!    evidence-weighted model averaging — and absorbs streamed
+//!    observations with per-model drift monitoring.
+//!
+//! Steps 1–4 are one call since the tournament refactor:
+//! [`tournament::Tournament::run`] trains the whole [`registry::Roster`]
+//! (lineage-ordered, concurrently within a generation, under one shared
+//! thread budget), attaches every Laplace evidence, and returns the
+//! ranked artifacts plus the Bayes-factor report.
+//! [`ComparisonPipeline`] remains as a thin wrapper over it.
 //!
 //! Multistart restarts fan out over a [`pool::WorkerPool`]; each worker
 //! owns a native backend (PJRT handles are not `Send`), while artifact-
@@ -23,22 +32,22 @@
 pub mod pool;
 pub mod registry;
 pub mod serve;
+pub mod tournament;
 pub mod train;
 mod report;
 
 pub use pool::WorkerPool;
-pub use registry::ModelSpec;
+pub use registry::{ModelSpec, Roster};
 pub use report::{ComparisonReport, ModelReport, NestedReport};
-pub use serve::ServeSession;
-pub use train::{train_model, TrainOptions, TrainResult};
+pub use serve::{DriftOptions, DriftStatus, RouteMode, ServeSession};
+pub use tournament::{Tournament, TournamentResult, TrainedModel};
+pub use train::{train_model, train_model_seeded, TrainOptions, TrainResult};
 
 use crate::data::Dataset;
-use crate::evidence::laplace_evidence;
-use crate::nested::{nested_sample, NestedOptions};
-use crate::priors::{BoxPrior, ScalePrior};
+use crate::nested::NestedOptions;
+use crate::priors::ScalePrior;
 use crate::rng::Xoshiro256;
 use crate::runtime::ExecutionContext;
-use crate::util::Stopwatch;
 
 /// Configuration of a model-comparison pipeline run.
 #[derive(Clone, Debug)]
@@ -87,7 +96,10 @@ impl PipelineConfig {
     }
 }
 
-/// The model-comparison pipeline.
+/// The model-comparison pipeline — a thin wrapper over
+/// [`tournament::Tournament`] kept for callers that only want the ranked
+/// report (the tournament additionally returns the [`TrainedModel`]
+/// artifacts the serving router adopts).
 pub struct ComparisonPipeline {
     pub config: PipelineConfig,
 }
@@ -99,137 +111,8 @@ impl ComparisonPipeline {
 
     /// Run the full compare workflow on a dataset.
     pub fn run(&mut self, data: &Dataset, rng: &mut Xoshiro256) -> crate::Result<ComparisonReport> {
-        anyhow::ensure!(!self.config.models.is_empty(), "no models configured");
-        let span = data.span();
-        let mut models = Vec::with_capacity(self.config.models.len());
-        // peaks of already-trained models, used to warm-start richer ones
-        let mut hints: Vec<(Vec<String>, Vec<f64>)> = Vec::new();
-        for spec in &self.config.models {
-            let sw = Stopwatch::start();
-            let model = spec.build(self.config.sigma_n);
-            let prior = BoxPrior::for_model(&model, &span);
-            let mut train_opts = self.config.train.clone();
-            train_opts
-                .extra_starts
-                .extend(warm_starts(&model.kernel.names(), &prior, &hints, rng));
-            let trained = train_model(
-                spec,
-                self.config.sigma_n,
-                data,
-                &train_opts,
-                self.config.workers,
-                &self.config.exec,
-                rng,
-            )?;
-            // Hessian + Laplace evidence at the peak (full thread budget:
-            // nothing else runs concurrently here)
-            let hessian = crate::gp::profiled_hessian_with(
-                &model,
-                &data.t,
-                &data.y,
-                &trained.theta_hat,
-                &self.config.exec,
-            )?;
-            let ev = laplace_evidence(
-                data.len(),
-                &prior,
-                &self.config.scale_prior,
-                &trained.theta_hat,
-                trained.lnp_peak,
-                &hessian,
-            )?;
-            let nested = if self.config.run_nested {
-                Some(self.run_nested_for(&model, &prior, data, rng)?)
-            } else {
-                None
-            };
-            hints.push((model.kernel.names(), trained.theta_hat.clone()));
-            models.push(ModelReport {
-                name: model.name.clone(),
-                param_names: model.kernel.names(),
-                theta_hat: trained.theta_hat,
-                sigma: ev.sigma.clone(),
-                lnp_peak: trained.lnp_peak,
-                sigma_f_hat: trained.sigma_f_hat2.sqrt(),
-                ln_z: ev.ln_z,
-                suspect: ev.suspect || !trained.converged,
-                n_evals: trained.n_evals,
-                n_modes: trained.n_modes,
-                restarts: self.config.train.multistart.restarts,
-                wall_secs: sw.elapsed_secs(),
-                nested,
-            });
-        }
-        Ok(ComparisonReport::ranked(data.label.clone(), data.len(), models))
+        Ok(Tournament::new(self.config.clone()).run(data, rng)?.report)
     }
-
-    /// Nested-sampling verification over the full (λ, ϑ) unit cube — the
-    /// paper's ln Z_num.
-    fn run_nested_for(
-        &self,
-        model: &crate::kernels::CovarianceModel,
-        prior: &BoxPrior,
-        data: &Dataset,
-        rng: &mut Xoshiro256,
-    ) -> crate::Result<NestedReport> {
-        let sw = Stopwatch::start();
-        let dim = prior.dim() + 1; // λ first
-        let scale = self.config.scale_prior;
-        let mut n_lnp = 0usize;
-        let exec = self.config.exec.clone();
-        let res = {
-            let mut ln_like = |u: &[f64]| -> f64 {
-                let lambda = scale.lambda_from_unit(u[0]);
-                let theta = prior.from_unit_cube(&u[1..]);
-                let mut full = vec![lambda];
-                full.extend(theta);
-                n_lnp += 1;
-                crate::gp::full_lnp_with(model, &data.t, &data.y, &full, &exec)
-                    .unwrap_or(f64::NEG_INFINITY)
-            };
-            nested_sample(dim, &mut ln_like, &self.config.nested, rng)?
-        };
-        Ok(NestedReport {
-            ln_z: res.ln_z,
-            ln_z_err: res.ln_z_err,
-            n_evals: res.n_evals,
-            information: res.information,
-            wall_secs: sw.elapsed_secs(),
-        })
-    }
-}
-
-/// Build warm-start candidates for a model from previously trained peaks:
-/// parameters are matched **by name** (k₂'s `phi0/phi1/xi1` inherit k₁'s
-/// peak), unmatched coordinates are filled from the prior. Three random
-/// fills per hint give the new components several basins to start from.
-fn warm_starts(
-    names: &[String],
-    prior: &BoxPrior,
-    hints: &[(Vec<String>, Vec<f64>)],
-    rng: &mut Xoshiro256,
-) -> Vec<Vec<f64>> {
-    let mut out = Vec::new();
-    for (hnames, htheta) in hints {
-        let matched: Vec<Option<f64>> = names
-            .iter()
-            .map(|nm| hnames.iter().position(|h| h == nm).map(|j| htheta[j]))
-            .collect();
-        if matched.iter().all(Option::is_none) {
-            continue;
-        }
-        for _ in 0..3 {
-            let fill = prior.sample(rng);
-            let mut start: Vec<f64> = matched
-                .iter()
-                .zip(&fill)
-                .map(|(m, f)| m.unwrap_or(*f))
-                .collect();
-            prior.project(&mut start);
-            out.push(start);
-        }
-    }
-    out
 }
 
 #[cfg(test)]

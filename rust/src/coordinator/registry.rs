@@ -1,6 +1,14 @@
 //! Model registry: thread-safe, serialisable specs that workers can turn
 //! into concrete [`CovarianceModel`]s (the models themselves hold
-//! `Box<dyn>` kernels and are built per worker).
+//! `Box<dyn>` kernels and are built per worker), plus the [`Roster`] —
+//! the ordered, deduplicated model list a comparison tournament trains.
+//!
+//! Each spec declares its **warm-start lineage**
+//! ([`ModelSpec::warm_start_parent`]): the simpler model whose trained
+//! peak seeds this one's multistart (parameters are matched by name —
+//! k₂'s `phi0/phi1/xi1` inherit k₁'s peak). The tournament scheduler
+//! orders training so parents finish before their warm-started children
+//! ([`Roster::generations`]).
 
 use crate::kernels::{
     paper_k1, paper_k2, CovarianceModel, Matern32, Matern52, Periodic, ProductKernel,
@@ -41,6 +49,34 @@ impl ModelSpec {
         }
     }
 
+    /// The canonical CLI/config name of this spec.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::K1 => "k1",
+            Self::K2 => "k2",
+            Self::K3 => "k3",
+            Self::WendlandSe => "wendland-se",
+            Self::WendlandM32 => "wendland-m32",
+            Self::WendlandM52 => "wendland-m52",
+        }
+    }
+
+    /// Declared warm-start lineage: the simpler model whose trained peak
+    /// seeds this one's multistart (matched by parameter name, unmatched
+    /// coordinates filled from the prior). `None` for root models that
+    /// always cold-start. This generalises the pipeline's old ad-hoc
+    /// k₁→k₂ `extra_starts` wiring: k₂ extends k₁ by a second periodic
+    /// component, k₃ extends k₂ by a third, and the Wendland×Matérn
+    /// controls inherit the Wendland window scale from Wendland×SE.
+    pub fn warm_start_parent(&self) -> Option<ModelSpec> {
+        match self {
+            Self::K1 | Self::WendlandSe => None,
+            Self::K2 => Some(Self::K1),
+            Self::K3 => Some(Self::K2),
+            Self::WendlandM32 | Self::WendlandM52 => Some(Self::WendlandSe),
+        }
+    }
+
     /// Build a concrete model with fixed noise σ_n.
     pub fn build(&self, sigma_n: f64) -> CovarianceModel {
         match self {
@@ -78,6 +114,108 @@ impl ModelSpec {
     }
 }
 
+/// The model list a comparison tournament trains: insertion-ordered,
+/// deduplicated, parsed from config/CLI (`"k1,k2"` or a TOML array).
+///
+/// The roster also owns the **lineage schedule**: models are grouped into
+/// generations such that every model's nearest trained ancestor (by
+/// [`ModelSpec::warm_start_parent`], walking up until a roster member is
+/// found) lands in an earlier generation. Models within one generation
+/// have no warm-start dependency on each other and may train
+/// concurrently under a split thread budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Roster {
+    specs: Vec<ModelSpec>,
+}
+
+impl Roster {
+    /// Build from specs: order preserved, duplicates dropped, must be
+    /// non-empty.
+    pub fn new(specs: Vec<ModelSpec>) -> crate::Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "empty model roster");
+        let mut deduped: Vec<ModelSpec> = Vec::with_capacity(specs.len());
+        for s in specs {
+            if !deduped.contains(&s) {
+                deduped.push(s);
+            }
+        }
+        Ok(Self { specs: deduped })
+    }
+
+    /// Parse a comma-separated CLI list, e.g. `"k1,k2,k3"`.
+    pub fn parse(list: &str) -> crate::Result<Self> {
+        let specs = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(ModelSpec::parse)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Self::new(specs)
+    }
+
+    /// Parse from a config-file name list.
+    pub fn from_names(names: &[String]) -> crate::Result<Self> {
+        let specs =
+            names.iter().map(|s| ModelSpec::parse(s)).collect::<crate::Result<Vec<_>>>()?;
+        Self::new(specs)
+    }
+
+    pub fn specs(&self) -> &[ModelSpec] {
+        &self.specs
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Index of the nearest warm-start ancestor of `specs[i]` that is
+    /// itself a roster member, walking up the declared lineage; `None`
+    /// for cold-started roots (or when no ancestor made the roster).
+    pub fn warm_parent_index(&self, i: usize) -> Option<usize> {
+        let mut cur = self.specs[i].warm_start_parent();
+        while let Some(p) = cur {
+            if let Some(j) = self.specs.iter().position(|s| *s == p) {
+                return Some(j);
+            }
+            cur = p.warm_start_parent();
+        }
+        None
+    }
+
+    /// Lineage generations (indices into [`Roster::specs`], roster order
+    /// within each): generation 0 holds the cold-started roots, and every
+    /// warm-started child lands exactly one generation after its resolved
+    /// parent — the tournament trains generation by generation so parents
+    /// finish before the children they seed.
+    pub fn generations(&self) -> Vec<Vec<usize>> {
+        let n = self.specs.len();
+        let mut depth = vec![0usize; n];
+        for i in 0..n {
+            // lineage chains are short (≤3) and acyclic by construction,
+            // and parents may appear after children in roster order, so
+            // resolve each depth by walking the ancestor chain directly
+            let mut d = 0;
+            let mut cur = i;
+            while let Some(p) = self.warm_parent_index(cur) {
+                d += 1;
+                cur = p;
+            }
+            depth[i] = d;
+        }
+        let max_d = depth.iter().copied().max().unwrap_or(0);
+        let mut gens: Vec<Vec<usize>> = vec![Vec::new(); max_d + 1];
+        for i in 0..n {
+            gens[depth[i]].push(i);
+        }
+        gens.retain(|g| !g.is_empty());
+        gens
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +242,45 @@ mod tests {
     fn k3_constraints_chain() {
         let m = ModelSpec::K3.build(0.1);
         assert_eq!(m.kernel.ordering_constraints(), vec![(1, 3), (3, 5)]);
+    }
+
+    #[test]
+    fn lineage_declares_the_paper_chain() {
+        assert_eq!(ModelSpec::K1.warm_start_parent(), None);
+        assert_eq!(ModelSpec::K2.warm_start_parent(), Some(ModelSpec::K1));
+        assert_eq!(ModelSpec::K3.warm_start_parent(), Some(ModelSpec::K2));
+        assert_eq!(ModelSpec::WendlandM32.warm_start_parent(), Some(ModelSpec::WendlandSe));
+        for s in [ModelSpec::K1, ModelSpec::K2, ModelSpec::K3] {
+            assert_eq!(ModelSpec::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn roster_parses_dedupes_and_schedules() {
+        let r = Roster::parse("k2, k1, k2, wendland-se").unwrap();
+        assert_eq!(
+            r.specs(),
+            &[ModelSpec::K2, ModelSpec::K1, ModelSpec::WendlandSe]
+        );
+        // k2's parent k1 is at index 1
+        assert_eq!(r.warm_parent_index(0), Some(1));
+        assert_eq!(r.warm_parent_index(1), None);
+        assert_eq!(r.warm_parent_index(2), None);
+        // generations: roots first, k2 after its parent
+        assert_eq!(r.generations(), vec![vec![1, 2], vec![0]]);
+        assert!(Roster::parse("").is_err());
+        assert!(Roster::parse("k1,bogus").is_err());
+    }
+
+    #[test]
+    fn roster_skips_absent_ancestors() {
+        // k3 without k2 in the roster warm-starts from k1 (the nearest
+        // ancestor present); without any ancestor it is a root
+        let r = Roster::new(vec![ModelSpec::K1, ModelSpec::K3]).unwrap();
+        assert_eq!(r.warm_parent_index(1), Some(0));
+        assert_eq!(r.generations(), vec![vec![0], vec![1]]);
+        let lone = Roster::new(vec![ModelSpec::K3]).unwrap();
+        assert_eq!(lone.warm_parent_index(0), None);
+        assert_eq!(lone.generations(), vec![vec![0]]);
     }
 }

@@ -26,10 +26,15 @@ pub struct ModelReport {
     pub sigma_f_hat: f64,
     /// Laplace ln Z_est (eq. 2.13).
     pub ln_z: f64,
+    /// `ln Z − ln Z_winner` (≤ 0; 0 for the ranked winner). Filled in by
+    /// [`ComparisonReport::ranked`].
+    pub ln_b: f64,
     /// Laplace approximation flagged untrustworthy (non-PD Hessian,
     /// boundary peak, or unconverged optimiser) — the paper's bold-faced
     /// (k₂, n=30) case.
     pub suspect: bool,
+    /// Did this model's multistart inherit a lineage parent's peak?
+    pub warm_started: bool,
     pub n_evals: usize,
     pub n_modes: usize,
     pub restarts: usize,
@@ -49,6 +54,11 @@ pub struct ComparisonReport {
 impl ComparisonReport {
     pub fn ranked(dataset: String, n: usize, mut models: Vec<ModelReport>) -> Self {
         models.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap());
+        if let Some(best) = models.first().map(|m| m.ln_z) {
+            for m in &mut models {
+                m.ln_b = m.ln_z - best;
+            }
+        }
         Self { dataset, n, models }
     }
 
@@ -61,10 +71,11 @@ impl ComparisonReport {
         Some(self.model(a)?.ln_z - self.model(b)?.ln_z)
     }
 
-    /// Paper-style text table.
+    /// Paper-style ranking table (the Table-2 layout: ln Z, ln B against
+    /// the winner, per-model σ error bars as a parameter block below).
     pub fn render(&self) -> String {
         let mut t = Table::new(vec![
-            "model", "lnP_peak", "lnZ_est", "lnZ_num", "evals", "modes", "flag",
+            "model", "lnP_peak", "lnZ_est", "lnB", "lnZ_num", "evals", "modes", "start", "flag",
         ]);
         for m in &self.models {
             let (num, nev) = match &m.nested {
@@ -78,14 +89,33 @@ impl ComparisonReport {
                 m.name.clone(),
                 format!("{:.2}", m.lnp_peak),
                 format!("{:.2}", m.ln_z),
+                format!("{:.2}", m.ln_b),
                 num,
                 nev,
                 format!("{}", m.n_modes),
+                if m.warm_started { "warm".to_string() } else { "cold".to_string() },
                 if m.suspect { "SUSPECT".to_string() } else { String::new() },
             ]);
         }
         let mut out = format!("dataset {} (n = {})\n", self.dataset, self.n);
         out.push_str(&t.render());
+        // Table-2 style hyperparameter block: θ̂ ± σ (inverse-Hessian
+        // error bars) per model
+        for m in &self.models {
+            let params: Vec<String> = m
+                .param_names
+                .iter()
+                .zip(&m.theta_hat)
+                .zip(&m.sigma)
+                .map(|((nm, th), sg)| format!("{nm} = {th:.4} ± {sg:.4}"))
+                .collect();
+            out.push_str(&format!(
+                "  {}: {}, sigma_f = {:.4}\n",
+                m.name,
+                params.join(", "),
+                m.sigma_f_hat
+            ));
+        }
         if self.models.len() >= 2 {
             let b = self.models[0].ln_z - self.models[1].ln_z;
             out.push_str(&format!(
@@ -126,7 +156,9 @@ impl ComparisonReport {
                                 ("lnp_peak", m.lnp_peak.into()),
                                 ("sigma_f_hat", m.sigma_f_hat.into()),
                                 ("ln_z", m.ln_z.into()),
+                                ("ln_b", m.ln_b.into()),
                                 ("suspect", m.suspect.into()),
+                                ("warm_started", m.warm_started.into()),
                                 ("n_evals", m.n_evals.into()),
                                 ("n_modes", m.n_modes.into()),
                                 ("restarts", m.restarts.into()),
@@ -166,7 +198,9 @@ mod tests {
             lnp_peak: -10.0,
             sigma_f_hat: 1.0,
             ln_z,
+            ln_b: 0.0,
             suspect: false,
+            warm_started: false,
             n_evals: 100,
             n_modes: 1,
             restarts: 10,
@@ -185,6 +219,9 @@ mod tests {
         assert_eq!(r.models[0].name, "k2");
         assert!((r.ln_bayes("k2", "k1").unwrap() - 1.0).abs() < 1e-12);
         assert!(r.ln_bayes("k2", "kX").is_none());
+        // ranked() fills the per-row Bayes column against the winner
+        assert_eq!(r.models[0].ln_b, 0.0);
+        assert!((r.models[1].ln_b + 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -196,7 +233,11 @@ mod tests {
         );
         let text = r.render();
         assert!(text.contains("lnZ_est"));
+        assert!(text.contains("lnB"));
         assert!(text.contains("ln B(k1 over k2)"));
+        // Table-2 parameter block with inverse-Hessian error bars
+        assert!(text.contains("phi0 = 1.0000 ± 0.1000"), "{text}");
+        assert!(text.contains("cold"));
     }
 
     #[test]

@@ -1,13 +1,36 @@
-//! Coordinator glue for the serving layer: turn a training run into a
-//! live, streaming [`Predictor`] session.
+//! Coordinator glue for the serving layer: a **multi-model router** over
+//! cached [`Predictor`]s, fed by the tournament's [`TrainedModel`]
+//! artifacts.
 //!
-//! [`ServeSession`] owns the predictor plus the spec/context bookkeeping a
-//! deployment needs: it is constructed either from an existing
-//! [`TrainResult`] ([`ServeSession::from_training`]) or by training
-//! in-place ([`ServeSession::train_and_serve`]), carries the
-//! [`ExecutionContext`] so callers don't thread it through every query,
-//! and exposes the observe → predict streaming loop of
-//! `examples/streaming_tidal.rs`.
+//! [`ServeSession`] owns one live predictor per tournament entrant,
+//! ranked by Laplace evidence:
+//!
+//! * **Routing** — queries go to the evidence winner by default
+//!   ([`RouteMode::Winner`]; a single-model session is bit-identical to
+//!   serving that model directly), or to the whole roster under
+//!   **evidence-weighted model averaging** ([`RouteMode::Averaged`]):
+//!   posterior-probability weights `w_i ∝ exp(ln Z_i)`, mixture mean
+//!   `Σ w_i μ_i` and mixture variance `Σ w_i (σ_i² + μ_i²) − μ̄²`.
+//! * **Streaming** — [`ServeSession::observe`] /
+//!   [`ServeSession::observe_batch`] fan every arriving observation out
+//!   to **all** live factors (each an `O(n²)` extension), so the ranking
+//!   can be revisited and the router switched without retraining. The
+//!   fan-out is all-or-nothing per point: every model's extension pivot
+//!   is checked before any factor mutates, so the slots always hold the
+//!   same data.
+//! * **Drift** — before a point is absorbed, each model scores it with
+//!   its log predictive density ([`Predictor::log_predictive`]); a
+//!   per-model [`DriftMonitor`] compares the recent windowed mean
+//!   log-score against the baseline established when streaming began and
+//!   **flags retraining** when the score has degraded past a threshold
+//!   ([`ServeSession::needs_retrain`]). Hyperparameters are frozen at
+//!   ϑ̂ between retrains, so a sustained log-score deficit is exactly the
+//!   signature of hyperparameter drift.
+//!
+//! Constructed from a finished tournament
+//! ([`ServeSession::from_tournament`]), from a single training run
+//! ([`ServeSession::from_training`]), or by training in place
+//! ([`ServeSession::train_and_serve`]).
 
 use crate::data::Dataset;
 use crate::gp::predict::Prediction;
@@ -16,23 +39,171 @@ use crate::rng::Xoshiro256;
 use crate::runtime::ExecutionContext;
 
 use super::registry::ModelSpec;
+use super::tournament::TrainedModel;
 use super::train::{train_model, TrainOptions, TrainResult};
 
-/// A live serving session: trained hyperparameters + cached factor +
-/// thread budget, answering batched queries and absorbing a stream of
-/// new observations.
-pub struct ServeSession {
-    /// The model spec this session serves (kept for reporting/rebuilds).
-    pub spec: ModelSpec,
+/// How the session answers a predict call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Serve the evidence winner only (the default; bit-identical to a
+    /// single-model session).
+    #[default]
+    Winner,
+    /// Evidence-weighted model averaging across the whole roster.
+    Averaged,
+}
+
+/// Drift-monitor tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftOptions {
+    /// Points in the baseline and in the rolling comparison window.
+    pub window: usize,
+    /// Flag when `baseline − recent` mean log-score exceeds this (nats
+    /// per point).
+    pub threshold: f64,
+}
+
+impl Default for DriftOptions {
+    fn default() -> Self {
+        // a sustained 2-nat per-point deficit corresponds to the data
+        // sitting ~2σ from the predictive mean on average — far outside
+        // streaming noise, a clear retrain signal
+        Self { window: 16, threshold: 2.0 }
+    }
+}
+
+/// One model's drift state, reported by [`ServeSession::drift`].
+#[derive(Clone, Debug)]
+pub struct DriftStatus {
+    pub model: String,
+    /// Mean log-score over the baseline window (`None` until filled).
+    pub baseline: Option<f64>,
+    /// Mean log-score over the most recent window (`None` until filled).
+    pub recent: Option<f64>,
+    /// `baseline − recent` when both windows are full, else 0.
+    pub deficit: f64,
+    /// Latched true once the deficit crossed the threshold.
+    pub drifted: bool,
+}
+
+/// Windowed log-score drift detector (see the module docs). Scores are
+/// pushed *before* the point is absorbed, so each one is a genuine
+/// out-of-sample log predictive density.
+#[derive(Clone, Debug)]
+struct DriftMonitor {
+    opts: DriftOptions,
+    /// Sum and count of the first `window` scores.
+    baseline_sum: f64,
+    baseline_n: usize,
+    /// Ring buffer of the most recent `window` scores (after baseline).
+    recent: Vec<f64>,
+    next: usize,
+    filled: bool,
+    drifted: bool,
+}
+
+impl DriftMonitor {
+    fn new(mut opts: DriftOptions) -> Self {
+        // a zero-point window would index an empty ring on the first
+        // push; one point is the smallest meaningful window
+        opts.window = opts.window.max(1);
+        Self {
+            opts,
+            baseline_sum: 0.0,
+            baseline_n: 0,
+            recent: Vec::new(),
+            next: 0,
+            filled: false,
+            drifted: false,
+        }
+    }
+
+    fn push(&mut self, score: f64) {
+        if !score.is_finite() {
+            return;
+        }
+        if self.baseline_n < self.opts.window {
+            self.baseline_sum += score;
+            self.baseline_n += 1;
+            return;
+        }
+        if self.recent.len() < self.opts.window {
+            self.recent.push(score);
+            self.filled = self.recent.len() == self.opts.window;
+        } else {
+            self.recent[self.next] = score;
+            self.next = (self.next + 1) % self.opts.window;
+        }
+        if self.filled && self.deficit() > self.opts.threshold {
+            self.drifted = true;
+        }
+    }
+
+    fn baseline(&self) -> Option<f64> {
+        (self.baseline_n == self.opts.window)
+            .then(|| self.baseline_sum / self.baseline_n as f64)
+    }
+
+    fn recent_mean(&self) -> Option<f64> {
+        self.filled
+            .then(|| self.recent.iter().sum::<f64>() / self.recent.len() as f64)
+    }
+
+    fn deficit(&self) -> f64 {
+        match (self.baseline(), self.recent_mean()) {
+            (Some(b), Some(r)) => b - r,
+            _ => 0.0,
+        }
+    }
+}
+
+/// One routed model: spec, cached predictor, ranking evidence, drift
+/// state.
+struct ModelSlot {
+    spec: ModelSpec,
     predictor: Predictor,
+    ln_z: f64,
+    drift: DriftMonitor,
+}
+
+/// A live serving session routing over `N` trained models — see the
+/// module docs. Slot 0 is always the evidence winner.
+pub struct ServeSession {
+    slots: Vec<ModelSlot>,
+    route: RouteMode,
     exec: ExecutionContext,
 }
 
 impl ServeSession {
-    /// Wire a finished training run into a predictor by **adopting** the
-    /// peak evaluation `train_model` already produced — an `O(n²)` factor
-    /// copy, no re-assembly and no `O(n³)` refactorisation. `exec`
-    /// parallelises the queries.
+    /// Build the router from a finished tournament: every artifact's
+    /// peak factor is **adopted** (an `O(n²)` copy each, no re-assembly,
+    /// no `O(n³)` refactorisation) and the slots are ranked by ln Z —
+    /// the winner serves by default. `models` is expected ranked (as
+    /// [`super::tournament::TournamentResult::models`] is); the session
+    /// re-ranks defensively.
+    pub fn from_tournament(
+        models: &[TrainedModel],
+        data: &Dataset,
+        exec: ExecutionContext,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!models.is_empty(), "no trained models to serve");
+        let mut slots = Vec::with_capacity(models.len());
+        for tm in models {
+            slots.push(ModelSlot {
+                spec: tm.spec.clone(),
+                predictor: tm.predictor(data)?,
+                ln_z: tm.ln_z(),
+                drift: DriftMonitor::new(DriftOptions::default()),
+            });
+        }
+        slots.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap_or(std::cmp::Ordering::Equal));
+        Ok(Self { slots, route: RouteMode::Winner, exec })
+    }
+
+    /// Wire a finished single-model training run into a session by
+    /// adopting the peak evaluation `train_model` already produced.
+    /// Equivalent to a tournament-of-one handoff (ln Z is not known on
+    /// this path; the lone slot needs no ranking).
     pub fn from_training(
         spec: &ModelSpec,
         sigma_n: f64,
@@ -54,7 +225,16 @@ impl ServeSession {
             trained.theta_hat.clone(),
             trained.peak_eval.clone(),
         );
-        Ok(Self { spec: spec.clone(), predictor, exec })
+        Ok(Self {
+            slots: vec![ModelSlot {
+                spec: spec.clone(),
+                predictor,
+                ln_z: 0.0,
+                drift: DriftMonitor::new(DriftOptions::default()),
+            }],
+            route: RouteMode::Winner,
+            exec,
+        })
     }
 
     /// Train (multistart CG, like the comparison pipeline) and move
@@ -73,29 +253,155 @@ impl ServeSession {
         Ok((session, trained))
     }
 
-    /// Serve one batch of query points through the cached factor.
+    /// Switch the routing policy (builder style).
+    pub fn with_route(mut self, route: RouteMode) -> Self {
+        self.route = route;
+        self
+    }
+
+    /// Override the drift-monitor tuning on every slot (resets any
+    /// accumulated drift state).
+    pub fn with_drift_options(mut self, opts: DriftOptions) -> Self {
+        for slot in &mut self.slots {
+            slot.drift = DriftMonitor::new(opts);
+        }
+        self
+    }
+
+    /// Number of routed models.
+    pub fn n_models(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The spec served by default (the evidence winner).
+    pub fn spec(&self) -> &ModelSpec {
+        &self.slots[0].spec
+    }
+
+    /// Evidence-posterior weights over the roster, winner first
+    /// (`w_i ∝ exp(ln Z_i)`, normalised).
+    pub fn weights(&self) -> Vec<f64> {
+        let max = self.slots.iter().map(|s| s.ln_z).fold(f64::NEG_INFINITY, f64::max);
+        let mut w: Vec<f64> = self.slots.iter().map(|s| (s.ln_z - max).exp()).collect();
+        let total: f64 = w.iter().sum();
+        for v in &mut w {
+            *v /= total;
+        }
+        w
+    }
+
+    /// Serve one batch of query points under the session's route mode.
     pub fn predict(&self, t_star: &[f64]) -> Prediction {
-        self.predictor.predict_batch(t_star, &self.exec)
+        match self.route {
+            RouteMode::Winner => self.slots[0].predictor.predict_batch(t_star, &self.exec),
+            RouteMode::Averaged => self.predict_averaged(t_star),
+        }
     }
 
-    /// Append one observation (`O(n²)` factor extension).
+    /// Serve a specific roster member by name, regardless of route mode.
+    pub fn predict_model(&self, name: &str, t_star: &[f64]) -> Option<Prediction> {
+        self.slots
+            .iter()
+            .find(|s| s.spec.name() == name)
+            .map(|s| s.predictor.predict_batch(t_star, &self.exec))
+    }
+
+    /// Evidence-weighted model averaging: mixture mean and mixture
+    /// standard deviation across every slot. With a dominant winner
+    /// (`ln B ≫ 1`) this degrades gracefully to the winner's prediction.
+    fn predict_averaged(&self, t_star: &[f64]) -> Prediction {
+        let w = self.weights();
+        let mut mean = vec![0.0; t_star.len()];
+        let mut second = vec![0.0; t_star.len()]; // Σ wᵢ (σᵢ² + μᵢ²)
+        for (slot, &wi) in self.slots.iter().zip(&w) {
+            let p = slot.predictor.predict_batch(t_star, &self.exec);
+            for i in 0..t_star.len() {
+                mean[i] += wi * p.mean[i];
+                second[i] += wi * (p.sd[i] * p.sd[i] + p.mean[i] * p.mean[i]);
+            }
+        }
+        let sd = mean
+            .iter()
+            .zip(&second)
+            .map(|(m, s)| (s - m * m).max(0.0).sqrt())
+            .collect();
+        Prediction { mean, sd }
+    }
+
+    /// Append one observation to **every** live factor (`O(n²)` each),
+    /// all-or-nothing: each model first scores the point and reports the
+    /// pivot its factor extension would take
+    /// ([`Predictor::log_predictive_and_pivot`]); if any model's
+    /// extension would fail, the call errors **before any slot mutates**,
+    /// so the routed factors never diverge in their data. Scores feed the
+    /// per-model drift monitors only when the point is absorbed.
     pub fn observe(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
-        self.predictor.observe(t_new, y_new)
+        let mut scored = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let s = slot.predictor.score_observation(t_new, y_new);
+            anyhow::ensure!(
+                s.pivot > 0.0 && s.pivot.is_finite(),
+                "observe(t={t_new}) would make {}'s K̃ non-PD (pivot {:.3e}); \
+                 no model absorbed the point",
+                slot.spec.name(),
+                s.pivot
+            );
+            scored.push(s);
+        }
+        for (slot, s) in self.slots.iter_mut().zip(scored) {
+            slot.drift.push(s.score);
+            // reuses the pivot check's triangular solve — one O(n²) solve
+            // per (point, model), and it cannot fail: the extension takes
+            // exactly the pre-checked pivot
+            slot.predictor.observe_scored(t_new, y_new, s)?;
+        }
+        Ok(())
     }
 
-    /// Append a batch of observations, refreshing `α`/`σ̂_f²` once.
+    /// Append a batch of observations **point by point**: each point is
+    /// scored against factors that have already absorbed every earlier
+    /// point (drift scores are independent of how the caller chunks the
+    /// stream), then fanned out atomically like [`ServeSession::observe`].
+    /// On a mid-batch failure the already-absorbed prefix is kept — by
+    /// every model consistently — and the error propagates.
     pub fn observe_batch(&mut self, t_new: &[f64], y_new: &[f64]) -> crate::Result<()> {
-        self.predictor.observe_batch(t_new, y_new)
+        anyhow::ensure!(t_new.len() == y_new.len(), "t/y batch length mismatch");
+        for (&tn, &yn) in t_new.iter().zip(y_new) {
+            self.observe(tn, yn)?;
+        }
+        Ok(())
     }
 
-    /// Serving counters.
+    /// Serving counters of the **winner** slot (the factor every default
+    /// query goes through).
     pub fn stats(&self) -> ServeStats {
-        self.predictor.stats()
+        self.slots[0].predictor.stats()
     }
 
-    /// The underlying predictor (e.g. for `lnp()`/`sigma_f_hat2()`).
+    /// The winner's predictor (e.g. for `lnp()`/`sigma_f_hat2()`).
     pub fn predictor(&self) -> &Predictor {
-        &self.predictor
+        &self.slots[0].predictor
+    }
+
+    /// Per-model drift status, winner first.
+    pub fn drift(&self) -> Vec<DriftStatus> {
+        self.slots
+            .iter()
+            .map(|s| DriftStatus {
+                model: s.spec.name().to_string(),
+                baseline: s.drift.baseline(),
+                recent: s.drift.recent_mean(),
+                deficit: s.drift.deficit(),
+                drifted: s.drift.drifted,
+            })
+            .collect()
+    }
+
+    /// True when any routed model's appended-point log-score has
+    /// degraded past the drift threshold — the signal to rerun the
+    /// tournament on the accumulated data.
+    pub fn needs_retrain(&self) -> bool {
+        self.slots.iter().any(|s| s.drift.drifted)
     }
 }
 
@@ -135,6 +441,7 @@ mod tests {
         let pred2 = session.predict(&[41.5]);
         assert_eq!(s.queries_served + 1, session.stats().queries_served);
         assert!(pred2.mean[0].is_finite());
+        assert!(!session.needs_retrain(), "two in-distribution points must not flag");
     }
 
     #[test]
@@ -152,5 +459,45 @@ mod tests {
             ServeSession::from_training(&ModelSpec::K1, 0.1, &data, &trained, exec).unwrap();
         assert_eq!(session.predictor().theta(), trained.theta_hat.as_slice());
         assert_eq!(session.stats().n_train, 30);
+        assert_eq!(session.n_models(), 1);
+        assert_eq!(session.spec(), &ModelSpec::K1);
+        assert_eq!(session.weights(), vec![1.0]);
+    }
+
+    #[test]
+    fn drift_monitor_fires_on_sustained_deficit_and_not_on_noise() {
+        let opts = DriftOptions { window: 4, threshold: 1.0 };
+        let mut m = DriftMonitor::new(opts);
+        // baseline window: scores around −1
+        for s in [-1.0, -1.1, -0.9, -1.0] {
+            m.push(s);
+        }
+        assert!((m.baseline().expect("baseline full") + 1.0).abs() < 1e-12);
+        // comparable recent window: no flag
+        for s in [-1.2, -0.8, -1.0, -1.0] {
+            m.push(s);
+        }
+        assert!(!m.drifted, "in-noise scores must not latch drift");
+        // degraded scores: deficit 3 nats > threshold 1 → latch
+        for s in [-4.0, -4.0, -4.0, -4.0] {
+            m.push(s);
+        }
+        assert!(m.drifted);
+        assert!(m.deficit() > 1.0);
+        // recovery does not unlatch (the flag is a retrain signal)
+        for s in [-1.0; 8] {
+            m.push(s);
+        }
+        assert!(m.drifted);
+        // non-finite scores are ignored outright
+        let mut m2 = DriftMonitor::new(opts);
+        m2.push(f64::NAN);
+        assert_eq!(m2.baseline_n, 0);
+        // a window of 0 is clamped to 1 instead of panicking on push
+        let mut m3 = DriftMonitor::new(DriftOptions { window: 0, threshold: 1.0 });
+        m3.push(-1.0);
+        m3.push(-1.0);
+        m3.push(-5.0);
+        assert!(m3.drifted, "1-point window must still detect the collapse");
     }
 }

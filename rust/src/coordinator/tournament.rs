@@ -1,0 +1,507 @@
+//! The model-comparison tournament — the paper's §2(a) headline workflow
+//! as one pipeline over one artifact.
+//!
+//! Training, evidence and serving used to be three separate calls the
+//! caller had to wire together (`train_model` → `laplace_evidence` →
+//! `ServeSession`). The tournament unifies them around the
+//! [`TrainedModel`] artifact: for every [`super::registry::Roster`]
+//! member it produces the spec, the full [`TrainResult`] (including the
+//! adoptable peak factor), the [`LaplaceEvidence`] with its σ error
+//! bars, and the optional nested-sampling verification — then ranks the
+//! roster by ln Z into a Bayes-factor [`ComparisonReport`] and hands the
+//! artifacts to the serving router
+//! ([`super::serve::ServeSession::from_tournament`]).
+//!
+//! ## Scheduling
+//!
+//! The roster's declared warm-start lineage
+//! ([`super::registry::ModelSpec::warm_start_parent`]) orders training
+//! into **generations**: parents finish before the children they seed.
+//! Within a generation the models have no dependency on each other and
+//! train **concurrently** in waves of at most the thread budget, each
+//! wave member under `exec.split(g)` of the shared budget and a
+//! proportional share of the worker fan-out — the borrowed-slots rule
+//! applied across *models*, not just restarts, so models × restarts ×
+//! linalg never exceeds the configured budget (a 1-thread budget trains
+//! the generation serially with the full budget per model).
+//!
+//! Warm-started children **replace** random restarts with their parent's
+//! peak (matched by hyperparameter name, unmatched coordinates filled
+//! from the prior) within the same total start budget:
+//! `min(WARM_FILLS, restarts)` deterministic starts plus
+//! `restarts − fills` random draws — never more starts than a cold
+//! model, and the warm starts begin near a peak, so children record
+//! measurably fewer profiled-likelihood evaluations than a cold
+//! multistart of the same model (asserted in `rust/tests/tournament.rs`,
+//! measured in `benches/tournament.rs`).
+//!
+//! ## Determinism
+//!
+//! Every RNG draw (warm-start fills, restart seeds, nested sampling)
+//! happens on the master RNG at schedule time in roster order; the
+//! concurrent training itself is RNG-free and the linalg underneath is
+//! bit-identical for any thread budget. A tournament is therefore fully
+//! reproducible from its seed, and a **tournament-of-one consumes
+//! exactly the RNG stream of a plain [`train_model`] call** — the old
+//! single-model path is a special case, bit for bit.
+
+use crate::data::Dataset;
+use crate::evidence::{laplace_evidence, LaplaceEvidence};
+use crate::gp::serve::Predictor;
+use crate::nested::nested_sample;
+use crate::priors::BoxPrior;
+use crate::rng::Xoshiro256;
+use crate::util::Stopwatch;
+
+use super::registry::{ModelSpec, Roster};
+use super::report::{ComparisonReport, ModelReport, NestedReport};
+use super::train::{train_model_seeded, TrainOptions, TrainResult};
+use super::PipelineConfig;
+
+/// Random prior fills drawn per warm start, giving the child model's new
+/// coordinates several basins to explore around the inherited peak.
+pub const WARM_FILLS: usize = 3;
+
+/// Everything one tournament entrant produced, in one artifact: the
+/// buildable spec, the training result (with its adoptable peak factor),
+/// the Laplace evidence (ln Z + error bars), and the optional
+/// nested-sampling verification. This is the unit the report renders and
+/// the serving router adopts.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub spec: ModelSpec,
+    /// Fixed noise level the model was trained with.
+    pub sigma_n: f64,
+    /// Hyperparameter names (order matches `train.theta_hat`).
+    pub param_names: Vec<String>,
+    /// Multistart training result; `train.peak_eval` carries the factor
+    /// and `α` the serving layer adopts without refactorising.
+    pub train: TrainResult,
+    /// Laplace evidence at the peak (eq. 2.13) with σ error bars.
+    pub evidence: LaplaceEvidence,
+    /// Nested-sampling verification, when the tournament ran it.
+    pub nested: Option<NestedReport>,
+    /// Did this model inherit starts from a lineage parent?
+    pub warm_started: bool,
+    /// Configured random-restart budget (the warm-start policy may have
+    /// replaced part of it — `train.restart_values.len()` has the actual
+    /// start count).
+    pub restarts: usize,
+    /// Wall-clock: training + evidence (+ nested verification).
+    pub wall_secs: f64,
+}
+
+impl TrainedModel {
+    /// The spec's canonical name.
+    pub fn name(&self) -> &'static str {
+        self.spec.name()
+    }
+
+    /// Laplace ln Z (the ranking key).
+    pub fn ln_z(&self) -> f64 {
+        self.evidence.ln_z
+    }
+
+    /// Wire this artifact into a serving [`Predictor`] by **adopting**
+    /// the peak evaluation — an `O(n²)` factor copy, no re-assembly and
+    /// no `O(n³)` refactorisation. `data` must be the training set.
+    pub fn predictor(&self, data: &Dataset) -> crate::Result<Predictor> {
+        anyhow::ensure!(
+            self.train.peak_eval.chol.dim() == data.len(),
+            "TrainedModel factor is for n = {}, dataset has n = {}",
+            self.train.peak_eval.chol.dim(),
+            data.len()
+        );
+        Ok(Predictor::from_eval(
+            self.spec.build(self.sigma_n),
+            data.t.clone(),
+            data.y.clone(),
+            self.train.theta_hat.clone(),
+            self.train.peak_eval.clone(),
+        ))
+    }
+
+    /// The per-model row of the comparison report.
+    pub fn report(&self) -> ModelReport {
+        ModelReport {
+            name: self.spec.name().to_string(),
+            param_names: self.param_names.clone(),
+            theta_hat: self.train.theta_hat.clone(),
+            sigma: self.evidence.sigma.clone(),
+            lnp_peak: self.train.lnp_peak,
+            sigma_f_hat: self.train.sigma_f_hat2.sqrt(),
+            ln_z: self.evidence.ln_z,
+            ln_b: 0.0, // filled in by ComparisonReport::ranked
+            suspect: self.evidence.suspect || !self.train.converged,
+            warm_started: self.warm_started,
+            n_evals: self.train.n_evals,
+            n_modes: self.train.n_modes,
+            restarts: self.restarts,
+            wall_secs: self.wall_secs,
+            nested: self.nested.clone(),
+        }
+    }
+}
+
+/// A finished tournament: the ranked artifacts plus the rendered-ready
+/// comparison report (both ordered by ln Z, winner first).
+#[derive(Clone, Debug)]
+pub struct TournamentResult {
+    /// Trained artifacts, ranked by Laplace ln Z descending.
+    pub models: Vec<TrainedModel>,
+    /// The Bayes-factor ranking table over the same models.
+    pub report: ComparisonReport,
+}
+
+impl TournamentResult {
+    /// The evidence winner.
+    pub fn winner(&self) -> &TrainedModel {
+        &self.models[0]
+    }
+
+    /// Look up an entrant by canonical name.
+    pub fn model(&self, name: &str) -> Option<&TrainedModel> {
+        self.models.iter().find(|m| m.name() == name)
+    }
+}
+
+/// The tournament runner: trains a whole roster under one shared budget
+/// and ranks it by Laplace evidence. See the module docs for the
+/// scheduling and determinism contracts.
+pub struct Tournament {
+    pub config: PipelineConfig,
+}
+
+/// One scheduled training job (all RNG draws already done).
+struct Job {
+    idx: usize,
+    spec: ModelSpec,
+    opts: TrainOptions,
+    seeds: Vec<u64>,
+    warm: bool,
+}
+
+impl Tournament {
+    pub fn new(config: PipelineConfig) -> Self {
+        Self { config }
+    }
+
+    /// Convenience: a tournament over a single spec (the shrunken form of
+    /// the old standalone training path — same RNG stream, same result,
+    /// plus the evidence the artifact carries).
+    pub fn single(spec: ModelSpec, mut config: PipelineConfig) -> Self {
+        config.models = vec![spec];
+        Self { config }
+    }
+
+    /// Train every roster model (lineage-ordered, concurrently within a
+    /// generation), compute every Laplace evidence, and rank by ln Z.
+    pub fn run(&self, data: &Dataset, rng: &mut Xoshiro256) -> crate::Result<TournamentResult> {
+        let cfg = &self.config;
+        let roster = Roster::new(cfg.models.clone())?;
+        let span = data.span();
+        let mut slots: Vec<Option<TrainedModel>> = (0..roster.len()).map(|_| None).collect();
+        for gen in roster.generations() {
+            // --- schedule: every RNG draw happens here, in roster order
+            let mut jobs: Vec<Job> = Vec::with_capacity(gen.len());
+            for &i in &gen {
+                let spec = roster.specs()[i].clone();
+                let model = spec.build(cfg.sigma_n);
+                let prior = BoxPrior::for_model(&model, &span);
+                let mut opts = cfg.train.clone();
+                let restarts = cfg.train.multistart.restarts.max(1);
+                let mut n_warm = 0usize;
+                if let Some(p) = roster.warm_parent_index(i) {
+                    let parent = slots[p]
+                        .as_ref()
+                        .expect("lineage schedule: parent trained in an earlier generation");
+                    // warm starts REPLACE random restarts within the same
+                    // total start budget (never exceed it — that is where
+                    // the eval-count saving comes from): up to WARM_FILLS
+                    // fills, capped at `restarts`. Only these fills count
+                    // against the budget; user-configured extra_starts
+                    // ride along exactly as they would on a cold model.
+                    let ws = warm_starts(
+                        &model.kernel.names(),
+                        &prior,
+                        &parent.param_names,
+                        &parent.train.theta_hat,
+                        WARM_FILLS.min(restarts),
+                        rng,
+                    );
+                    n_warm = ws.len();
+                    opts.extra_starts.extend(ws);
+                }
+                let warm = n_warm > 0;
+                let seeds: Vec<u64> =
+                    (0..restarts - n_warm.min(restarts)).map(|_| rng.next_u64()).collect();
+                jobs.push(Job { idx: i, spec, opts, seeds, warm });
+            }
+            // --- train: concurrent within the generation in waves of at
+            // most the thread budget, the shared budget split across the
+            // wave's models (borrowed-slots rule across models — a wave
+            // of g models gives each exec.split(g), so models × restarts
+            // × linalg never exceeds the configured budget; with a
+            // 1-thread budget the generation degrades to the serial
+            // full-budget path)
+            let max_conc = cfg.exec.threads().max(1);
+            let mut results: Vec<(usize, bool, crate::Result<TrainResult>, f64)> =
+                Vec::with_capacity(jobs.len());
+            let mut queue = jobs.into_iter().peekable();
+            while queue.peek().is_some() {
+                let wave: Vec<Job> = queue.by_ref().take(max_conc).collect();
+                let g = wave.len();
+                if g == 1 {
+                    let Job { idx, spec, opts, seeds, warm } =
+                        wave.into_iter().next().expect("one job");
+                    let sw = Stopwatch::start();
+                    let r = train_model_seeded(
+                        &spec, cfg.sigma_n, data, &opts, &seeds, cfg.workers, &cfg.exec,
+                    );
+                    results.push((idx, warm, r, sw.elapsed_secs()));
+                } else {
+                    let child_exec = cfg.exec.split(g);
+                    let child_workers = (cfg.workers / g).max(1);
+                    let sigma_n = cfg.sigma_n;
+                    results.extend(std::thread::scope(|s| {
+                        let handles: Vec<_> = wave
+                            .into_iter()
+                            .map(|job| {
+                                let child_exec = child_exec.clone();
+                                s.spawn(move || {
+                                    let sw = Stopwatch::start();
+                                    let r = train_model_seeded(
+                                        &job.spec,
+                                        sigma_n,
+                                        data,
+                                        &job.opts,
+                                        &job.seeds,
+                                        child_workers,
+                                        &child_exec,
+                                    );
+                                    (job.idx, job.warm, r, sw.elapsed_secs())
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("training thread panicked"))
+                            .collect::<Vec<_>>()
+                    }));
+                }
+            }
+            // --- evidence (full budget: training is done) + optional
+            // nested verification, roster order
+            for (idx, warm, res, train_secs) in results {
+                let trained = res?;
+                let sw = Stopwatch::start();
+                let spec = roster.specs()[idx].clone();
+                let model = spec.build(cfg.sigma_n);
+                let prior = BoxPrior::for_model(&model, &span);
+                let hessian = crate::gp::profiled_hessian_with(
+                    &model,
+                    &data.t,
+                    &data.y,
+                    &trained.theta_hat,
+                    &cfg.exec,
+                )?;
+                let evidence = laplace_evidence(
+                    data.len(),
+                    &prior,
+                    &cfg.scale_prior,
+                    &trained.theta_hat,
+                    trained.lnp_peak,
+                    &hessian,
+                )?;
+                let nested = if cfg.run_nested {
+                    Some(run_nested_for(cfg, &model, &prior, data, rng)?)
+                } else {
+                    None
+                };
+                slots[idx] = Some(TrainedModel {
+                    spec,
+                    sigma_n: cfg.sigma_n,
+                    param_names: model.kernel.names(),
+                    train: trained,
+                    evidence,
+                    nested,
+                    warm_started: warm,
+                    restarts: cfg.train.multistart.restarts,
+                    wall_secs: train_secs + sw.elapsed_secs(),
+                });
+            }
+        }
+        let mut models: Vec<TrainedModel> =
+            slots.into_iter().map(|s| s.expect("every roster model trained")).collect();
+        let reports: Vec<ModelReport> = models.iter().map(TrainedModel::report).collect();
+        let report = ComparisonReport::ranked(data.label.clone(), data.len(), reports);
+        models.sort_by(|a, b| {
+            b.evidence.ln_z.partial_cmp(&a.evidence.ln_z).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        Ok(TournamentResult { models, report })
+    }
+}
+
+/// Build warm-start candidates for a child model from its parent's
+/// trained peak: parameters are matched **by name** (k₂'s
+/// `phi0/phi1/xi1` inherit k₁'s peak), unmatched coordinates are filled
+/// from the prior — [`WARM_FILLS`] random fills give the new components
+/// several basins to start from. Empty when no name matches.
+fn warm_starts(
+    names: &[String],
+    prior: &BoxPrior,
+    parent_names: &[String],
+    parent_theta: &[f64],
+    fills: usize,
+    rng: &mut Xoshiro256,
+) -> Vec<Vec<f64>> {
+    let matched: Vec<Option<f64>> = names
+        .iter()
+        .map(|nm| parent_names.iter().position(|h| h == nm).map(|j| parent_theta[j]))
+        .collect();
+    if matched.iter().all(Option::is_none) {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(fills);
+    for _ in 0..fills {
+        let fill = prior.sample(rng);
+        let mut start: Vec<f64> =
+            matched.iter().zip(&fill).map(|(m, f)| m.unwrap_or(*f)).collect();
+        prior.project(&mut start);
+        out.push(start);
+    }
+    out
+}
+
+/// Nested-sampling verification over the full (λ, ϑ) unit cube — the
+/// paper's ln Z_num.
+fn run_nested_for(
+    cfg: &PipelineConfig,
+    model: &crate::kernels::CovarianceModel,
+    prior: &BoxPrior,
+    data: &Dataset,
+    rng: &mut Xoshiro256,
+) -> crate::Result<NestedReport> {
+    let sw = Stopwatch::start();
+    let dim = prior.dim() + 1; // λ first
+    let scale = cfg.scale_prior;
+    let exec = cfg.exec.clone();
+    let res = {
+        let mut ln_like = |u: &[f64]| -> f64 {
+            let lambda = scale.lambda_from_unit(u[0]);
+            let theta = prior.from_unit_cube(&u[1..]);
+            let mut full = vec![lambda];
+            full.extend(theta);
+            crate::gp::full_lnp_with(model, &data.t, &data.y, &full, &exec)
+                .unwrap_or(f64::NEG_INFINITY)
+        };
+        nested_sample(dim, &mut ln_like, &cfg.nested, rng)?
+    };
+    Ok(NestedReport {
+        ln_z: res.ln_z,
+        ln_z_err: res.ln_z_err,
+        n_evals: res.n_evals,
+        information: res.information,
+        wall_secs: sw.elapsed_secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::table1_dataset;
+
+    fn fast_config() -> PipelineConfig {
+        let mut c = PipelineConfig::fast();
+        c.train.multistart.restarts = 3;
+        c
+    }
+
+    #[test]
+    fn tournament_of_one_matches_plain_train_model_bitwise() {
+        // the old standalone path is a special case of the tournament:
+        // same RNG stream, same optimum, same factor
+        let data = table1_dataset(40, 0.1, 55);
+        let mut cfg = fast_config();
+        cfg.models = vec![ModelSpec::K1];
+        cfg.workers = 1;
+        cfg.exec = crate::runtime::ExecutionContext::seq();
+        let mut rng_a = Xoshiro256::seed_from_u64(8);
+        let result = Tournament::new(cfg.clone()).run(&data, &mut rng_a).unwrap();
+        let mut rng_b = Xoshiro256::seed_from_u64(8);
+        let direct = super::super::train::train_model(
+            &ModelSpec::K1,
+            0.1,
+            &data,
+            &cfg.train,
+            1,
+            &cfg.exec,
+            &mut rng_b,
+        )
+        .unwrap();
+        let tm = result.winner();
+        assert_eq!(tm.train.theta_hat, direct.theta_hat);
+        assert_eq!(tm.train.lnp_peak, direct.lnp_peak);
+        assert_eq!(tm.train.n_evals, direct.n_evals);
+        assert!(!tm.warm_started);
+        assert!(tm.evidence.ln_z.is_finite());
+    }
+
+    #[test]
+    fn lineage_orders_and_warm_starts_the_child() {
+        let data = table1_dataset(50, 0.1, 77);
+        let mut cfg = fast_config();
+        cfg.models = vec![ModelSpec::K2, ModelSpec::K1]; // child listed first
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let result = Tournament::new(cfg).run(&data, &mut rng).unwrap();
+        assert_eq!(result.models.len(), 2);
+        let k2 = result.model("k2").unwrap();
+        let k1 = result.model("k1").unwrap();
+        assert!(k2.warm_started, "k2 must inherit k1's peak");
+        assert!(!k1.warm_started);
+        // warm starts replace random restarts within the same budget:
+        // min(3, restarts=3) warm fills + 0 random = 3 starts, exactly
+        // a cold model's start count
+        assert!(k2.train.restart_values.len() <= 3);
+        // report is ranked and carries per-model error bars
+        for m in &result.report.models {
+            assert_eq!(m.sigma.len(), m.theta_hat.len());
+        }
+        assert_eq!(result.winner().ln_z(), result.report.models[0].ln_z);
+    }
+
+    #[test]
+    fn concurrent_generation_of_roots_is_deterministic() {
+        // k1 and wendland-se share no lineage: one generation of two
+        // models training concurrently under a split budget — the
+        // scoped-thread scheduling path
+        let data = table1_dataset(40, 0.1, 13);
+        let mut cfg = fast_config();
+        cfg.models = vec![ModelSpec::K1, ModelSpec::WendlandSe];
+        cfg.train.multistart.restarts = 2;
+        cfg.workers = 2;
+        cfg.exec = crate::runtime::ExecutionContext::new(2);
+        let run = || {
+            let mut rng = Xoshiro256::seed_from_u64(21);
+            Tournament::new(cfg.clone()).run(&data, &mut rng).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.models.len(), 2);
+        for (ma, mb) in a.models.iter().zip(&b.models) {
+            assert_eq!(ma.name(), mb.name());
+            assert_eq!(ma.train.theta_hat, mb.train.theta_hat);
+            assert_eq!(ma.evidence.ln_z, mb.evidence.ln_z);
+            assert!(!ma.warm_started);
+        }
+    }
+
+    #[test]
+    fn empty_roster_is_an_error() {
+        let mut cfg = fast_config();
+        cfg.models.clear();
+        let data = table1_dataset(20, 0.1, 1);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        assert!(Tournament::new(cfg).run(&data, &mut rng).is_err());
+    }
+}

@@ -93,6 +93,29 @@ pub fn train_model(
     rng: &mut Xoshiro256,
 ) -> crate::Result<TrainResult> {
     let restarts = opts.multistart.restarts.max(1);
+    let seeds: Vec<u64> = (0..restarts).map(|_| rng.next_u64()).collect();
+    train_model_seeded(spec, sigma_n, data, opts, &seeds, workers, exec)
+}
+
+/// [`train_model`] with the random-restart seeds **pre-drawn** by the
+/// caller. This is the tournament's entry point: it draws every model's
+/// seeds from the master RNG at schedule time (in roster order), so
+/// models of one lineage generation can train concurrently while the
+/// whole tournament stays deterministic — and a tournament-of-one
+/// consumes exactly the RNG stream `train_model` would.
+///
+/// The run's starts are `opts.extra_starts` (deterministic points, e.g.
+/// a parent model's peak) plus one random prior draw per seed.
+pub fn train_model_seeded(
+    spec: &ModelSpec,
+    sigma_n: f64,
+    data: &Dataset,
+    opts: &TrainOptions,
+    seeds: &[u64],
+    workers: usize,
+    exec: &ExecutionContext,
+) -> crate::Result<TrainResult> {
+    let restarts = seeds.len().max(1);
     let span = data.span();
     /// A start is either a fresh RNG stream (random prior draw) or a
     /// deterministic warm-start point.
@@ -103,7 +126,7 @@ pub fn train_model(
     }
     let mut starts: Vec<Start> =
         opts.extra_starts.iter().cloned().map(Start::Point).collect();
-    starts.extend((0..restarts).map(|_| Start::Seed(rng.next_u64())));
+    starts.extend(seeds.iter().map(|&s| Start::Seed(s)));
     let data = Arc::new(data.clone());
     let spec_owned = spec.clone();
     let cg: CgOptions = opts.multistart.cg;

@@ -53,6 +53,21 @@ pub struct ServeStats {
     pub observations_appended: usize,
 }
 
+/// One scored candidate observation: the drift log-score, the
+/// bordered-factorisation pivot, and (privately) the triangular solve
+/// `w = L⁻¹k*` that [`Predictor::observe_scored`] reuses. Produced by
+/// [`Predictor::score_observation`]; only valid against the factor state
+/// it was scored on (absorption checks the dimension).
+#[derive(Clone, Debug)]
+pub struct ScoredObservation {
+    /// Log predictive density `ln N(y | μ, σ² + σ̂_f²σ_n²)`.
+    pub score: f64,
+    /// Schur-complement pivot `d` of the would-be extension (`≤ 0` ⇒
+    /// the append would make `K̃` non-PD).
+    pub pivot: f64,
+    w: Vec<f64>,
+}
+
 /// A trained GP wired for serving: cached factor, cached `α`, batched
 /// queries, `O(n²)` streaming appends. See the module docs.
 pub struct Predictor {
@@ -193,6 +208,73 @@ impl Predictor {
             }
         });
         Prediction { mean, sd }
+    }
+
+    /// Log predictive density of a single would-be observation under the
+    /// **current** state: `ln N(y | μ(t), σ²(t) + σ̂_f²·σ_n²)` — the
+    /// latent predictive variance plus the model's (scaled) noise floor.
+    /// `O(n²)` (one triangular solve); does not mutate the cache and does
+    /// not count as a served query. This is the per-appended-point
+    /// log-score the serving router's drift monitor tracks.
+    pub fn log_predictive(&self, t_new: f64, y_new: f64) -> f64 {
+        self.log_predictive_and_pivot(t_new, y_new).0
+    }
+
+    /// [`Predictor::log_predictive`] plus the bordered-factorisation
+    /// pivot the matching [`Predictor::observe`] would take:
+    /// `d = k̃(0) + σ_n² − wᵀw` with `w = L⁻¹k*` — computed with exactly
+    /// the arithmetic of [`Chol::extend`], so `d > 0` (and finite) iff
+    /// the factor extension at `t_new` will succeed. The multi-model
+    /// router checks every model's pivot **before** mutating any factor,
+    /// making a fan-out append all-or-nothing.
+    pub fn log_predictive_and_pivot(&self, t_new: f64, y_new: f64) -> (f64, f64) {
+        let s = self.score_observation(t_new, y_new);
+        (s.score, s.pivot)
+    }
+
+    /// Score a candidate observation and keep the triangular solve for
+    /// reuse: the returned [`ScoredObservation`] carries the drift
+    /// log-score, the extension pivot, and `w = L⁻¹k*` — so a
+    /// [`Predictor::observe_scored`] absorption right after pays **one**
+    /// `O(n²)` solve per point instead of two (score, then extend).
+    pub fn score_observation(&self, t_new: f64, y_new: f64) -> ScoredObservation {
+        let mut prep = self.model.kernel.prepare(&self.theta);
+        let k: Vec<f64> = self.t.iter().map(|&ti| prep.value(ti - t_new)).collect();
+        let mean = dot(&k, &self.alpha);
+        let w = self.chol.half_solve(&k);
+        let d = prep.value(0.0) + self.model.noise_variance() - dot(&w, &w);
+        let var = (self.sigma_f_hat2 * d).max(1e-300);
+        let score =
+            -0.5 * ((y_new - mean) * (y_new - mean) / var + var.ln() + crate::math::LN_2PI);
+        ScoredObservation { score, pivot: d, w }
+    }
+
+    /// Absorb an observation whose solve was already done by
+    /// [`Predictor::score_observation`] **against the current factor**:
+    /// the border row is written straight from the scored `w`
+    /// ([`Chol::extend_solved`]), then `α`/`σ̂_f²` refresh as in
+    /// [`Predictor::observe`]. Errors if the factor grew since scoring
+    /// (the solve would be stale) or the pivot is not positive.
+    pub fn observe_scored(
+        &mut self,
+        t_new: f64,
+        y_new: f64,
+        scored: ScoredObservation,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            scored.w.len() == self.t.len(),
+            "scored observation is stale: solved against n = {}, factor has n = {}",
+            scored.w.len(),
+            self.t.len()
+        );
+        self.chol
+            .extend_solved(&scored.w, scored.pivot)
+            .map_err(|e| anyhow::anyhow!("observe(t={t_new}) makes K̃ non-PD: {e}"))?;
+        self.t.push(t_new);
+        self.y.push(y_new);
+        self.observations.fetch_add(1, Ordering::Relaxed);
+        self.refresh();
+        Ok(())
     }
 
     /// Append one observation in `O(n²)`: extend the factor by the
@@ -378,6 +460,43 @@ mod tests {
         let out = p.predict_batch(&[25.5, 26.5], &ExecutionContext::seq());
         assert!(out.mean.iter().all(|v| v.is_finite()));
         assert!(out.sd.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn observe_scored_is_bitwise_identical_to_observe() {
+        // the scored path reuses the pivot check's solve; the absorbed
+        // state must match a plain observe exactly
+        let (mut a, t, _) = trained_predictor(35, 41);
+        let (mut b, _, _) = trained_predictor(35, 41);
+        let (tn, yn) = (t[t.len() - 1] + 0.75, 0.42);
+        a.observe(tn, yn).unwrap();
+        let s = b.score_observation(tn, yn);
+        assert!(s.pivot > 0.0);
+        b.observe_scored(tn, yn, s).unwrap();
+        assert_eq!(a.lnp(), b.lnp());
+        assert_eq!(a.sigma_f_hat2(), b.sigma_f_hat2());
+        let q = [tn + 0.3, tn + 1.1];
+        let pa = a.predict_batch(&q, &ExecutionContext::seq());
+        let pb = b.predict_batch(&q, &ExecutionContext::seq());
+        assert_eq!(pa.mean, pb.mean);
+        assert_eq!(pa.sd, pb.sd);
+        // a stale scored solve (factor grew since scoring) is rejected
+        let stale = b.score_observation(tn + 2.0, 0.1);
+        b.observe(tn + 1.5, 0.2).unwrap();
+        assert!(b.observe_scored(tn + 2.0, 0.1, stale).is_err());
+    }
+
+    #[test]
+    fn log_predictive_prefers_plausible_observations() {
+        let (p, t, _) = trained_predictor(40, 31);
+        let t_new = t[t.len() - 1] + 0.5;
+        let pred = p.predict_batch(&[t_new], &ExecutionContext::seq());
+        let good = p.log_predictive(t_new, pred.mean[0]);
+        let bad = p.log_predictive(t_new, pred.mean[0] + 10.0 * pred.sd[0].max(0.1));
+        assert!(good.is_finite() && bad.is_finite());
+        assert!(good > bad, "at-mean score {good} must beat 10σ-off score {bad}");
+        // scoring mutates nothing
+        assert_eq!(p.stats().queries_served, 1); // only the predict above
     }
 
     #[test]

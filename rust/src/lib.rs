@@ -46,7 +46,10 @@
 //!    the machine default.
 //! 2. **cache blocks** — each worker's dense kernel walks `KC×NC` /
 //!    `MC×KC` panels packed into contiguous scratch ([`linalg::micro`]),
-//!    so the innermost loops stream L1/L2-resident data.
+//!    so the innermost loops stream L1/L2-resident data. Pack panels and
+//!    the TRSM mirror live in a **per-thread scratch arena** — a warm
+//!    thread performs zero heap allocations per GEMM/TRSM call
+//!    (asserted with a counting allocator in `rust/tests/alloc_reuse.rs`).
 //! 3. **register tiles** — an `MR×NR` block of the output is held in
 //!    `f64::mul_add` FMA accumulators for the whole panel depth
 //!    (the build sets `-C target-cpu=native` in `.cargo/config.toml` so
@@ -69,7 +72,31 @@
 //! differently; the golden-value suite pins absolute accuracy at 1e-8
 //! against 60-digit mpmath references.)
 //!
-//! ### Serving layer (streaming prediction engine)
+//! ### Model lifecycle: tournament → `TrainedModel` → router
+//!
+//! The paper's headline contribution — fast Bayesian model comparison
+//! between covariance functions — is one pipeline keyed on the
+//! [`coordinator::TrainedModel`] artifact (spec + [`coordinator::TrainResult`]
+//! with its adoptable peak factor + Laplace evidence with σ error bars):
+//!
+//! * **Roster & lineage** — [`coordinator::Roster`] parses the kernel
+//!   list from config/CLI; each [`coordinator::ModelSpec`] declares a
+//!   warm-start parent (k₁→k₂→k₃, wendland-se→wendland-m32/m52) whose
+//!   trained peak seeds the child's multistart by parameter name.
+//! * **Tournament scheduling** — [`coordinator::Tournament`] trains the
+//!   roster in lineage **generations**: parents before warm-started
+//!   children; models within a generation train concurrently, each under
+//!   `exec.split(g)` of the shared budget (the borrowed-slots rule
+//!   across *models*, not just restarts). Warm starts *replace* random
+//!   restarts, so children record fewer profiled-likelihood
+//!   evaluations. All RNG draws happen at schedule time in roster order:
+//!   tournaments are deterministic, and a roster-of-one is bit-identical
+//!   to the old standalone training path.
+//! * **Ranking** — every entrant gets its Laplace evidence (eq. 2.13);
+//!   [`coordinator::ComparisonReport`] ranks by ln Z with per-row ln B
+//!   and the Table-2 θ̂ ± σ error-bar block.
+//!
+//! ### Serving layer (streaming prediction engine + multi-model router)
 //!
 //! Training pays `O(n³)` once; serving must not. [`gp::serve::Predictor`]
 //! caches the trained state — ϑ̂, the Cholesky factor, `α = K̃⁻¹y`, σ̂_f² —
@@ -79,11 +106,20 @@
 //! stream in through `O(n²)` factor maintenance in [`linalg`]:
 //! [`linalg::Chol::extend`] (bordered factorisation) and
 //! [`linalg::Chol::rank1_update`] / [`linalg::Chol::rank1_downdate`]
-//! (LINPACK-style sweeps). [`coordinator::ServeSession`] wires a training
-//! run straight into a live session (`train_and_serve` → `predict` /
-//! `observe`); `examples/streaming_tidal.rs` replays the tidal series as
-//! an arriving stream and verifies streamed serving ≡ from-scratch refit
-//! to 1e-8.
+//! (LINPACK-style sweeps).
+//!
+//! [`coordinator::ServeSession`] is a **router over N cached
+//! predictors**, built from a tournament (`from_tournament`) or a single
+//! training run (`from_training` / `train_and_serve`): queries go to the
+//! evidence winner by default (bit-identical to single-model serving),
+//! or to the roster under evidence-weighted model averaging
+//! ([`coordinator::RouteMode`]); streamed `observe`s fan out to every
+//! live factor; each appended point is first scored with each model's
+//! log predictive density and a windowed per-model drift monitor
+//! **flags retraining** when the log-score degrades past a threshold
+//! ([`coordinator::ServeSession::needs_retrain`]).
+//! `examples/streaming_tidal.rs` replays the tidal series as an arriving
+//! stream and verifies streamed serving ≡ from-scratch refit to 1e-8.
 //!
 //! ## Quick start
 //!

@@ -227,6 +227,17 @@ impl Chol {
         let mut w = cross.to_vec();
         solve_lower(&self.l, &mut w);
         let d = diag - super::dot(&w, &w);
+        self.extend_solved(&w, d)
+    }
+
+    /// [`Chol::extend`] with the triangular solve already done: `w` is
+    /// `L⁻¹k` and `d` the Schur-complement pivot `diag − wᵀw`. Callers
+    /// that computed `w`/`d` anyway (e.g. a predictive-variance check
+    /// before committing the append — the serving router's pivot
+    /// pre-check) skip the second `O(n²)` solve.
+    pub fn extend_solved(&mut self, w: &[f64], d: f64) -> Result<(), CholError> {
+        let n = self.dim();
+        assert_eq!(w.len(), n, "solved border length mismatch");
         if d <= 0.0 || !d.is_finite() {
             return Err(CholError { pivot: n, value: d });
         }
@@ -238,7 +249,7 @@ impl Chol {
             // only the lower triangle is live; the rest stays zero
             grown.row_mut(i)[..=i].copy_from_slice(&self.l.row(i)[..=i]);
         }
-        grown.row_mut(n)[..n].copy_from_slice(&w);
+        grown.row_mut(n)[..n].copy_from_slice(w);
         grown[(n, n)] = l22;
         self.l = grown;
         self.logdet += 2.0 * l22.ln();
@@ -318,38 +329,78 @@ impl Chol {
         self.inverse_with(&ExecutionContext::seq())
     }
 
-    /// Explicit inverse with both `O(n³)` stages row-parallel: every row
-    /// of `U` depends only on `L`, and every row of the symmetric product
-    /// depends only on `U`, so each stage partitions its output rows
-    /// (weighted by their triangular cost) across the context. The
-    /// symmetric product runs on the clipped [`micro::gemm_nt`] kernel,
-    /// column-blocked so each block's `k` range starts at the block edge
-    /// (entries with `k < b` contribute exact zeros from `U`'s lower
-    /// triangle); the block grid is global, so results stay bit-identical
-    /// across thread counts.
+    /// Explicit inverse with both `O(n³)` stages row-parallel and on the
+    /// packed [`micro`] kernels: every row of `U` depends only on `L`,
+    /// and every row of the symmetric product depends only on `U`, so
+    /// each stage partitions its output rows (weighted by their
+    /// triangular cost) across the context.
+    ///
+    /// **Stage 1** (`U = (L⁻¹)ᵀ`): row `j` of `U` is the solution of
+    /// `L x = e_j`, whose leading `j` components are exactly zero — so
+    /// rows are solved in groups of `INV_RB` through the blocked
+    /// multi-row TRSM ([`micro::solve_lower_rows`]) on the trailing
+    /// subtriangle at each group's origin, with unit-vector right-hand
+    /// sides. The group grid is anchored at row 0, so a row's arithmetic
+    /// depends only on its own (global) group — bit-identical for any
+    /// thread count or partition. This lifted the last scalar `O(n³)`
+    /// recurrence onto the tiled kernels.
+    ///
+    /// **Stage 2** (`W = U·Uᵀ`) runs on the clipped [`micro::gemm_nt`]
+    /// kernel, column-blocked so each block's `k` range starts at the
+    /// block edge (entries with `k < b` contribute exact zeros from `U`'s
+    /// lower triangle); that block grid is global too.
     pub fn inverse_with(&self, ctx: &ExecutionContext) -> Matrix {
         /// Column-block width of the `W = U·Uᵀ` stage: the wasted
         /// `k ∈ [b₀, b)` zero-work per block is `≤ INV_CB/2` of the
         /// `n − b₀` real depth.
         const INV_CB: usize = 128;
+        /// Row-group width of the stage-1 triangular inversion. Groups
+        /// are anchored on the global `j = 0` grid (part of the
+        /// accumulation-order contract); within a group the `≤ INV_RB`
+        /// leading columns of zero right-hand-side cost are the only
+        /// wasted work.
+        const INV_RB: usize = 32;
         let n = self.dim();
+        if n == 0 {
+            return Matrix::zeros(0, 0);
+        }
         let c = self.l.cols();
         let ld = self.l.as_slice();
         let jobs = ctx.threads().min((n / PAR_MIN_ROWS).max(1));
         // U[j][i] = (L⁻¹)[i][j] for i ≥ j (row-major upper triangle):
-        //   U[j][j] = 1/L[j][j]
-        //   U[j][i] = −(Σ_{k=j}^{i−1} L[i][k] U[j][k]) / L[i][i]
+        // row j of U solves L x = e_j on the subtriangle at its group's
+        // origin (components before the group are exact zeros, and the
+        // solve reproduces the zeros between the origin and j exactly).
         let mut u = Matrix::zeros(n, n);
         {
-            let bounds = weighted_bounds(0, n, jobs, |j| ((n - j) as f64) * ((n - j) as f64));
+            let nblocks = (n + INV_RB - 1) / INV_RB;
+            // partition whole groups across workers, weighted by each
+            // group's O((n − j)²) solve cost
+            let block_bounds = weighted_bounds(0, nblocks, jobs.min(nblocks), |b| {
+                let j0 = b * INV_RB;
+                let j1 = (j0 + INV_RB).min(n);
+                (j0..j1).map(|j| ((n - j) as f64) * ((n - j) as f64)).sum()
+            });
+            let bounds: Vec<usize> =
+                block_bounds.iter().map(|&b| (b * INV_RB).min(n)).collect();
             for_row_chunks(u.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
-                for j in r0..r1 {
-                    let urow = &mut chunk[(j - r0) * n..(j - r0 + 1) * n];
-                    urow[j] = 1.0 / ld[j * c + j];
-                    for i in (j + 1)..n {
-                        let acc = super::dot(&ld[i * c + j..i * c + i], &urow[j..i]);
-                        urow[i] = -acc / ld[i * c + i];
+                let mut b0 = r0;
+                while b0 < r1 {
+                    let b1 = (b0 + INV_RB).min(r1);
+                    for j in b0..b1 {
+                        chunk[(j - r0) * n + j] = 1.0;
                     }
+                    let x0 = (b0 - r0) * n + b0;
+                    let x1 = (b1 - 1 - r0) * n + n;
+                    micro::solve_lower_rows(
+                        &ld[b0 * c + b0..],
+                        c,
+                        n - b0,
+                        &mut chunk[x0..x1],
+                        n,
+                        b1 - b0,
+                    );
+                    b0 = b1;
                 }
             });
         }
@@ -629,6 +680,47 @@ mod tests {
         let prod = k.matmul(&inv);
         let eye = Matrix::eye(30);
         assert!(prod.max_abs_diff(&eye) < 1e-9, "K K⁻¹ ≠ I: {}", prod.max_abs_diff(&eye));
+    }
+
+    /// The blocked stage-1 triangular inversion (rows of `U` through
+    /// `micro::solve_lower_rows`) must agree with the scalar recurrence
+    /// it replaced to ≤1e-12 relative, for sizes straddling the INV_RB
+    /// group grid.
+    #[test]
+    fn blocked_inverse_matches_scalar_recurrence() {
+        let mut rng = Xoshiro256::seed_from_u64(101);
+        for &n in &[1usize, 7, 31, 32, 33, 64, 97, 150] {
+            let k = random_spd(n, &mut rng);
+            let ch = Chol::factor(&k).unwrap();
+            let got = ch.inverse();
+            // reference: the pre-blocking scalar recurrence for
+            // U[j][i] = (L⁻¹)[i][j], then the naive symmetric product
+            let l = ch.factor_matrix();
+            let mut u = Matrix::zeros(n, n);
+            for j in 0..n {
+                u[(j, j)] = 1.0 / l[(j, j)];
+                for i in (j + 1)..n {
+                    let mut acc = 0.0;
+                    for t in j..i {
+                        acc += l[(i, t)] * u[(j, t)];
+                    }
+                    u[(j, i)] = -acc / l[(i, i)];
+                }
+            }
+            let mut want = Matrix::zeros(n, n);
+            for a in 0..n {
+                for b in 0..n {
+                    let mut s = 0.0;
+                    for t in a.max(b)..n {
+                        s += u[(a, t)] * u[(b, t)];
+                    }
+                    want[(a, b)] = s;
+                }
+            }
+            let scale = (0..n).map(|i| want[(i, i)].abs()).fold(1e-300, f64::max);
+            let rel = got.max_abs_diff(&want) / scale;
+            assert!(rel < 1e-12, "n={n}: blocked vs scalar inverse drift {rel:.3e}");
+        }
     }
 
     #[test]

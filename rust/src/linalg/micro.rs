@@ -40,6 +40,8 @@
 //! update needs no aliased borrows), then a small scalar triangle solve
 //! finishes the block.
 
+use std::cell::RefCell;
+
 /// Register-tile rows: each micro-kernel invocation accumulates `MR`
 /// rows of `C`.
 pub const MR: usize = 4;
@@ -54,6 +56,63 @@ pub const MC: usize = 64;
 pub const NC: usize = 512;
 /// Column-block width of the blocked TRSMs.
 pub const TB: usize = 32;
+
+/// Reusable per-thread scratch for the packed panels and the TRSM
+/// mirror buffer. A `gemm` call at full blocking packs
+/// `MC·KC + NC·KC` doubles (≈1.2 MB zeroed) — allocated fresh on every
+/// call this cost a few % of an n = 2000 factorisation (~500 calls).
+/// Buffers are **taken out** of the slot for the duration of a call and
+/// put back after (so the TRSMs' mirror and the GEMMs they invoke never
+/// alias a shared borrow); they only ever grow, and their stale contents
+/// are never read — packing overwrites exactly the region each kernel
+/// consumes, and the TRSM mirror is written block-by-block before the
+/// eliminations that read it.
+struct PackArena {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    mirror: Vec<f64>,
+}
+
+thread_local! {
+    static PACK_ARENA: RefCell<PackArena> =
+        const { RefCell::new(PackArena { a: Vec::new(), b: Vec::new(), mirror: Vec::new() }) };
+}
+
+fn slot_a(ar: &mut PackArena) -> &mut Vec<f64> {
+    &mut ar.a
+}
+fn slot_b(ar: &mut PackArena) -> &mut Vec<f64> {
+    &mut ar.b
+}
+fn slot_mirror(ar: &mut PackArena) -> &mut Vec<f64> {
+    &mut ar.mirror
+}
+
+/// Take a buffer of at least `len` elements out of the arena slot
+/// selected by `pick` (growing it if needed — the only case that
+/// allocates). The caller must hand it back with [`arena_put`].
+fn arena_take(
+    pick: fn(&mut PackArena) -> &mut Vec<f64>,
+    len: usize,
+) -> Vec<f64> {
+    let mut buf = PACK_ARENA.with(|ar| std::mem::take(pick(&mut *ar.borrow_mut())));
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    buf
+}
+
+fn arena_put(pick: fn(&mut PackArena) -> &mut Vec<f64>, buf: Vec<f64>) {
+    PACK_ARENA.with(|ar| {
+        let mut ar = ar.borrow_mut();
+        let slot = pick(&mut *ar);
+        // keep the larger of the two (a reentrant call may have regrown
+        // the slot); dropping the smaller is the cold path
+        if slot.len() < buf.len() {
+            *slot = buf;
+        }
+    });
+}
 
 /// Which trapezoid of the `C` region a clipped GEMM may write.
 ///
@@ -287,8 +346,13 @@ fn gemm_driver(
         assert!(b.len() >= (k - 1) * brs + n, "B region too short");
     }
     let kc_max = KC.min(k);
-    let mut apack = vec![0.0; MC.min(round_up(m, MR)) * kc_max];
-    let mut bpack = vec![0.0; NC.min(round_up(n, NR)) * kc_max];
+    let a_len = MC.min(round_up(m, MR)) * kc_max;
+    let b_len = NC.min(round_up(n, NR)) * kc_max;
+    // per-thread reusable pack scratch: no allocation once warm
+    let mut abuf = arena_take(slot_a, a_len);
+    let mut bbuf = arena_take(slot_b, b_len);
+    let apack = &mut abuf[..a_len];
+    let bpack = &mut bbuf[..b_len];
     let mut j0 = 0;
     while j0 < n {
         let nc = NC.min(n - j0);
@@ -296,16 +360,16 @@ fn gemm_driver(
         while k0 < k {
             let kc = KC.min(k - k0);
             if b_transposed {
-                pack_b_t(b, brs, k0, kc, j0, nc, &mut bpack);
+                pack_b_t(b, brs, k0, kc, j0, nc, bpack);
             } else {
-                pack_b_n(b, brs, k0, kc, j0, nc, &mut bpack);
+                pack_b_n(b, brs, k0, kc, j0, nc, bpack);
             }
             let mut i0 = 0;
             while i0 < m {
                 let mc = MC.min(m - i0);
                 if clip.live(i0 as isize, mc, j0 as isize, nc) {
-                    pack_a(a, ars, i0, mc, k0, kc, &mut apack);
-                    macro_kernel(c, cs, i0, mc, j0, nc, kc, &apack, &bpack, alpha, clip);
+                    pack_a(a, ars, i0, mc, k0, kc, apack);
+                    macro_kernel(c, cs, i0, mc, j0, nc, kc, &*apack, &*bpack, alpha, clip);
                 }
                 i0 += MC;
             }
@@ -313,6 +377,8 @@ fn gemm_driver(
         }
         j0 += NC;
     }
+    arena_put(slot_a, abuf);
+    arena_put(slot_b, bbuf);
 }
 
 /// `C += α·A·B` on row-major regions: `A` is `m×k` (row stride `ars`),
@@ -372,7 +438,10 @@ pub fn solve_lower_rows(l: &[f64], ls: usize, nn: usize, x: &mut [f64], xs: usiz
     assert!(xs >= nn, "row stride shorter than the triangle");
     assert!(x.len() >= (q - 1) * xs + nn, "X region too short");
     assert!(l.len() >= (nn - 1) * ls + nn, "L region too short");
-    let mut solved = vec![0.0; q * nn];
+    // per-thread reusable mirror (stale contents never read: each block
+    // is copied in before any elimination consumes it)
+    let mut sbuf = arena_take(slot_mirror, q * nn);
+    let solved = &mut sbuf[..q * nn];
     let mut j0 = 0;
     while j0 < nn {
         let j1 = (j0 + TB).min(nn);
@@ -385,7 +454,7 @@ pub fn solve_lower_rows(l: &[f64], ls: usize, nn: usize, x: &mut [f64], xs: usiz
                 q,
                 j1 - j0,
                 j0,
-                &solved,
+                &*solved,
                 nn,
                 &l[j0 * ls..],
                 ls,
@@ -412,6 +481,7 @@ pub fn solve_lower_rows(l: &[f64], ls: usize, nn: usize, x: &mut [f64], xs: usiz
         }
         j0 = j1;
     }
+    arena_put(slot_mirror, sbuf);
 }
 
 /// Blocked backward substitution for `q` stacked row right-hand sides,
@@ -433,7 +503,8 @@ pub fn solve_lower_transpose_rows(
     assert!(xs >= nn, "row stride shorter than the triangle");
     assert!(x.len() >= (q - 1) * xs + nn, "X region too short");
     assert!(l.len() >= (nn - 1) * ls + nn, "L region too short");
-    let mut solved = vec![0.0; q * nn];
+    let mut sbuf = arena_take(slot_mirror, q * nn);
+    let solved = &mut sbuf[..q * nn];
     let mut j1 = nn;
     while j1 > 0 {
         let j0 = j1.saturating_sub(TB);
@@ -469,6 +540,7 @@ pub fn solve_lower_transpose_rows(
         }
         j1 = j0;
     }
+    arena_put(slot_mirror, sbuf);
 }
 
 #[cfg(test)]

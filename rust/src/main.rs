@@ -19,7 +19,7 @@
 use std::path::{Path, PathBuf};
 
 use gpfast::config::RunConfig;
-use gpfast::coordinator::{train_model, ComparisonPipeline, ModelSpec};
+use gpfast::coordinator::{train_model, ModelSpec, Tournament};
 use gpfast::data::{csv, synthetic, tidal, Dataset};
 use gpfast::nested::{nested_sample, NestedOptions};
 use gpfast::priors::{BoxPrior, ScalePrior};
@@ -103,13 +103,19 @@ fn load_dataset(args: &Args, cfg: &RunConfig) -> gpfast::Result<Dataset> {
 fn cmd_compare(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     let data = load_dataset(args, cfg)?;
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
-    let mut pipeline = ComparisonPipeline::new(cfg.pipeline()?);
+    let tournament = Tournament::new(cfg.pipeline()?);
     let sw = Stopwatch::start();
-    let report = pipeline.run(&data, &mut rng)?;
-    print!("{}", report.render());
+    let result = tournament.run(&data, &mut rng)?;
+    print!("{}", result.report.render());
+    if result.models.len() >= 2 {
+        println!(
+            "serving: router would serve '{}' (evidence winner)",
+            result.winner().name()
+        );
+    }
     println!("total wall time: {:.2} s", sw.elapsed_secs());
     if let Some(out) = args.get("out") {
-        std::fs::write(out, report.to_json().pretty())?;
+        std::fs::write(out, result.report.to_json().pretty())?;
         println!("report written to {out}");
     }
     Ok(())
@@ -120,23 +126,15 @@ fn cmd_train(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     let spec = ModelSpec::parse(&args.get_or("model", "k2"))?;
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let pipe = cfg.pipeline()?;
+    let restarts = pipe.train.multistart.restarts;
     let sw = Stopwatch::start();
-    let res =
-        train_model(&spec, cfg.sigma_n, &data, &pipe.train, pipe.workers, &pipe.exec, &mut rng)?;
-    let model = spec.build(cfg.sigma_n);
-    let hess =
-        gpfast::gp::profiled_hessian_with(&model, &data.t, &data.y, &res.theta_hat, &pipe.exec)?;
-    let prior = BoxPrior::for_model(&model, &data.span());
-    let ev = gpfast::evidence::laplace_evidence(
-        data.len(),
-        &prior,
-        &ScalePrior::default(),
-        &res.theta_hat,
-        res.lnp_peak,
-        &hess,
-    )?;
-    println!("model {} on {} (n = {})", model.name, data.label, data.len());
-    for ((name, th), sg) in model.kernel.names().iter().zip(&res.theta_hat).zip(&ev.sigma) {
+    // a tournament-of-one: same multistart, same RNG stream, and the
+    // TrainedModel artifact carries the evidence alongside the peak
+    let result = Tournament::single(spec, pipe).run(&data, &mut rng)?;
+    let tm = result.winner();
+    let (res, ev) = (&tm.train, &tm.evidence);
+    println!("model {} on {} (n = {})", tm.name(), data.label, data.len());
+    for ((name, th), sg) in tm.param_names.iter().zip(&res.theta_hat).zip(&ev.sigma) {
         println!("  {name:8} = {th:9.4} ± {sg:.4}");
     }
     println!("  sigma_f  = {:9.4}", res.sigma_f_hat2.sqrt());
@@ -144,7 +142,7 @@ fn cmd_train(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     println!("  lnZ_est  = {:9.3}{}", ev.ln_z, if ev.suspect { "  (SUSPECT)" } else { "" });
     println!(
         "  evals    = {} across {} restarts ({} modes)",
-        res.n_evals, pipe.train.multistart.restarts, res.n_modes
+        res.n_evals, restarts, res.n_modes
     );
     println!("  wall     = {:.2} s", sw.elapsed_secs());
     Ok(())

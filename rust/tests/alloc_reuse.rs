@@ -1,0 +1,138 @@
+//! The `linalg::micro` scratch-arena contract: once a thread has warmed
+//! the per-thread pack/mirror buffers, further GEMM/TRSM calls of the
+//! same (or smaller) footprint perform **zero heap allocations** — the
+//! ≈290 KB-per-call pack scratch of the pre-arena kernels is gone.
+//!
+//! Counted with a thread-local counting wrapper around the system
+//! allocator, so the parallel test harness (and any other test threads)
+//! cannot pollute the count. This file deliberately holds a single test.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use gpfast::linalg::micro::{self, Clip};
+use gpfast::rng::Xoshiro256;
+
+thread_local! {
+    static ALLOC_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates everything to `System`; the bookkeeping is a
+// thread-local counter bump (Cell<u64> has no destructor, so the TLS
+// access cannot itself allocate or recurse).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOC_CALLS.with(|c| c.get())
+}
+
+fn randv(len: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn warm_micro_kernels_do_not_allocate() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    // k = 300 spans two KC chunks; m, n exceed one register tile
+    let (m, n, k) = (96usize, 80, 300);
+    let a = randv(m * k, &mut rng);
+    let b = randv(k * n, &mut rng);
+    let mut c = vec![0.0; m * n];
+
+    // lower triangle for the TRSMs (well conditioned)
+    let nn = 97usize;
+    let q = 5usize;
+    let mut l = vec![0.0; nn * nn];
+    for i in 0..nn {
+        for j in 0..i {
+            l[i * nn + j] = 0.3 * rng.normal() / (nn as f64).sqrt();
+        }
+        l[i * nn + i] = 2.0 + 0.1 * rng.normal().abs();
+    }
+    let rhs = randv(q * nn, &mut rng);
+    let mut x = rhs.clone();
+
+    // --- warm-up: first calls may grow the thread-local arena
+    micro::gemm_nn(&mut c, n, m, n, k, &a, k, &b, n, 1.0, Clip::None);
+    micro::gemm_nt(&mut c, n, m, n, k, &a, k, &b, k, 1.0, Clip::None);
+    micro::solve_lower_rows(&l, nn, nn, &mut x, nn, q);
+    micro::solve_lower_transpose_rows(&l, nn, nn, &mut x, nn, q);
+
+    // --- warm runs must not touch the heap at all
+    let before = allocs_on_this_thread();
+    micro::gemm_nn(&mut c, n, m, n, k, &a, k, &b, n, 1.0, Clip::None);
+    assert_eq!(
+        allocs_on_this_thread() - before,
+        0,
+        "warm gemm_nn allocated on the pack path"
+    );
+
+    let before = allocs_on_this_thread();
+    micro::gemm_nt(&mut c, n, m, n, k, &a, k, &b, k, -1.0, Clip::Lower(0));
+    assert_eq!(
+        allocs_on_this_thread() - before,
+        0,
+        "warm gemm_nt allocated on the pack path"
+    );
+
+    x.copy_from_slice(&rhs);
+    let before = allocs_on_this_thread();
+    micro::solve_lower_rows(&l, nn, nn, &mut x, nn, q);
+    assert_eq!(
+        allocs_on_this_thread() - before,
+        0,
+        "warm solve_lower_rows allocated (mirror or pack path)"
+    );
+
+    let before = allocs_on_this_thread();
+    micro::solve_lower_transpose_rows(&l, nn, nn, &mut x, nn, q);
+    assert_eq!(
+        allocs_on_this_thread() - before,
+        0,
+        "warm solve_lower_transpose_rows allocated (mirror or pack path)"
+    );
+
+    // sanity: the warm TRSM still solves the system (L·Lᵀ x = rhs)
+    for r in 0..q {
+        // recompute L (Lᵀ x) and compare against rhs
+        let xr = &x[r * nn..(r + 1) * nn];
+        let mut lt_x = vec![0.0; nn];
+        for i in 0..nn {
+            for j in i..nn {
+                lt_x[i] += l[j * nn + i] * xr[j];
+            }
+        }
+        for i in 0..nn {
+            let mut got = 0.0;
+            for j in 0..=i {
+                got += l[i * nn + j] * lt_x[j];
+            }
+            let want = rhs[r * nn + i];
+            assert!(
+                (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                "row {r} comp {i}: {got} vs {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Integration tests for the model-comparison tournament and the
+//! multi-model serving router:
+//!
+//! * on k₂-drawn data the tournament ranks k₂ above k₁ (ln B > 0) and
+//!   the router serves k₂ by default;
+//! * the warm-started child records fewer profiled-likelihood
+//!   evaluations than a cold multistart of the same model;
+//! * evidence-weighted model averaging collapses to the winner when
+//!   ln B is large;
+//! * the drift monitor flags retraining on mean-shifted appends and
+//!   stays quiet on in-distribution streaming.
+
+use gpfast::coordinator::{
+    train_model, DriftOptions, ModelSpec, PipelineConfig, RouteMode, ServeSession, Tournament,
+    TrainOptions,
+};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::optimize::MultistartOptions;
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+
+/// The heavyweight end-to-end case: same data/seed regime as
+/// `pipeline_end_to_end::k2_wins_decisively_with_more_data`, through the
+/// tournament + router stack.
+#[test]
+fn tournament_ranks_k2_and_router_serves_it() {
+    let data = table1_dataset(200, 0.1, 42);
+    let mut cfg = PipelineConfig::paper_synthetic();
+    cfg.train.multistart.restarts = 10;
+    cfg.workers = 2;
+    let exec = cfg.exec.clone();
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let result = Tournament::new(cfg.clone()).run(&data, &mut rng).unwrap();
+
+    // --- ranking: the truth (k2) wins the Bayes factor, with error bars
+    let k2 = result.model("k2").expect("k2 trained");
+    let k1 = result.model("k1").expect("k1 trained");
+    let lnb = k2.ln_z() - k1.ln_z();
+    assert!(lnb > 0.0, "expected k2 (truth) to win at n=200, got ln B = {lnb}");
+    assert_eq!(result.winner().name(), "k2");
+    for tm in &result.models {
+        assert_eq!(tm.evidence.sigma.len(), tm.train.theta_hat.len());
+        assert!(tm.train.lnp_peak.is_finite());
+    }
+    // report mirrors the artifacts: ranked, ln_b column against winner
+    assert_eq!(result.report.models[0].name, "k2");
+    assert_eq!(result.report.models[0].ln_b, 0.0);
+    assert!(result.report.models[1].ln_b < 0.0);
+
+    // --- warm-start lineage: k2 inherited k1's peak and recorded fewer
+    // profiled-likelihood evaluations than a cold multistart of k2
+    assert!(k2.warm_started && !k1.warm_started);
+    let mut cold_rng = Xoshiro256::seed_from_u64(91);
+    let cold = train_model(
+        &ModelSpec::K2,
+        cfg.sigma_n,
+        &data,
+        &TrainOptions {
+            multistart: MultistartOptions { restarts: 10, ..Default::default() },
+            extra_starts: Vec::new(),
+        },
+        cfg.workers,
+        &exec,
+        &mut cold_rng,
+    )
+    .unwrap();
+    assert!(
+        k2.train.n_evals < cold.n_evals,
+        "warm-started k2 used {} evals, cold multistart {}",
+        k2.train.n_evals,
+        cold.n_evals
+    );
+    // both found the same quality of peak
+    assert!(
+        k2.train.lnp_peak > cold.lnp_peak - 1.0,
+        "warm peak {} must not be materially below cold peak {}",
+        k2.train.lnp_peak,
+        cold.lnp_peak
+    );
+
+    // --- routing: the session serves the evidence winner by default,
+    // bit-identically to querying that model directly
+    let session = ServeSession::from_tournament(&result.models, &data, exec.clone()).unwrap();
+    assert_eq!(session.n_models(), 2);
+    assert_eq!(session.spec(), &ModelSpec::K2);
+    let t_star: Vec<f64> = (0..40).map(|i| 0.7 + 4.9 * i as f64).collect();
+    let routed = session.predict(&t_star);
+    let direct = session.predict_model("k2", &t_star).unwrap();
+    assert_eq!(routed.mean, direct.mean, "winner routing must be the k2 predictor");
+    assert_eq!(routed.sd, direct.sd);
+
+    // --- evidence-weighted averaging: with ln B large the mixture
+    // collapses to the winner; in general it brackets the two means
+    let weights = session.weights();
+    assert!((weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    assert!(weights[0] > weights[1], "winner must carry the larger weight");
+    let averaged_session = ServeSession::from_tournament(&result.models, &data, exec.clone())
+        .unwrap()
+        .with_route(RouteMode::Averaged);
+    let avg = averaged_session.predict(&t_star);
+    let loser = session.predict_model("k1", &t_star).unwrap();
+    for i in 0..t_star.len() {
+        let (lo, hi) = if direct.mean[i] <= loser.mean[i] {
+            (direct.mean[i], loser.mean[i])
+        } else {
+            (loser.mean[i], direct.mean[i])
+        };
+        assert!(
+            avg.mean[i] >= lo - 1e-12 && avg.mean[i] <= hi + 1e-12,
+            "mixture mean must sit between the component means at point {i}"
+        );
+    }
+    if weights[1] < 1e-6 {
+        for i in 0..t_star.len() {
+            assert!(
+                (avg.mean[i] - direct.mean[i]).abs() < 1e-4,
+                "ln B = {lnb}: averaged mean {} vs winner {} at point {i}",
+                avg.mean[i],
+                direct.mean[i]
+            );
+            assert!((avg.sd[i] - direct.sd[i]).abs() < 1e-3);
+        }
+    }
+}
+
+/// The drift monitor: quiet on in-distribution streaming, latched on a
+/// sustained mean shift, per model.
+#[test]
+fn drift_monitor_fires_on_mean_shifted_appends() {
+    // 80 points from the synthetic truth; train on the first 60, stream
+    // the genuine continuation, then a corrupted one
+    let full = table1_dataset(80, 0.1, 1234);
+    let head = full.head(60);
+    let opts = TrainOptions {
+        multistart: MultistartOptions { restarts: 2, ..Default::default() },
+        extra_starts: Vec::new(),
+    };
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let (session, _trained) = ServeSession::train_and_serve(
+        &ModelSpec::K1,
+        0.1,
+        &head,
+        &opts,
+        1,
+        ExecutionContext::seq(),
+        &mut rng,
+    )
+    .unwrap();
+    let mut session = session.with_drift_options(DriftOptions { window: 4, threshold: 3.0 });
+
+    // in-distribution continuation: 4 baseline + 4 comparison points,
+    // scored point-by-point against the growing factor
+    session.observe_batch(&full.t[60..68], &full.y[60..68]).unwrap();
+    let clean = session.drift();
+    assert!(clean[0].baseline.is_some(), "baseline window must be full");
+    assert!(clean[0].recent.is_some(), "recent window must be full");
+    assert!(
+        !session.needs_retrain(),
+        "clean continuation flagged drift: deficit = {}",
+        clean[0].deficit
+    );
+
+    // corrupted continuation: a 12-unit mean shift (~120 σ_n, and ≥10σ of
+    // any plausible predictive sd, so even the first point's log-score
+    // collapses by ≫ threshold before the factor adapts to the shift)
+    let t_shift: Vec<f64> = (0..8).map(|i| full.t[67] + 1.0 + i as f64).collect();
+    let y_shift: Vec<f64> = t_shift.iter().map(|&t| (t * 0.11).sin() + 12.0).collect();
+    session.observe_batch(&t_shift, &y_shift).unwrap();
+    let shifted = session.drift();
+    let status = &shifted[0];
+    assert!(
+        session.needs_retrain(),
+        "mean-shifted appends must flag retraining: deficit = {}",
+        status.deficit
+    );
+    assert!(status.drifted);
+    // note: the *current* deficit may have recovered — the factor absorbs
+    // the shifted points and adapts — but the latch records that the
+    // threshold was crossed, which is exactly the retrain signal
+    // the session keeps serving (the flag is advisory)
+    let p = session.predict(&[full.t[67] + 0.5]);
+    assert!(p.mean[0].is_finite() && p.sd[0].is_finite());
+}
+
+/// Determinism: the tournament is reproducible from its seed (the
+/// single-roster ≡ old-path bitwise claim is asserted in the
+/// coordinator's unit tests; this is the end-to-end repeat).
+#[test]
+fn tournament_is_deterministic() {
+    let data = table1_dataset(60, 0.1, 9);
+    let mut cfg = PipelineConfig::fast();
+    cfg.train.multistart.restarts = 3;
+    let run = |seed: u64| {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tournament::new(cfg.clone()).run(&data, &mut rng).unwrap()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a.models.len(), b.models.len());
+    for (ma, mb) in a.models.iter().zip(&b.models) {
+        assert_eq!(ma.name(), mb.name());
+        assert_eq!(ma.train.theta_hat, mb.train.theta_hat);
+        assert_eq!(ma.train.lnp_peak, mb.train.lnp_peak);
+        assert_eq!(ma.evidence.ln_z, mb.evidence.ln_z);
+        assert_eq!(ma.train.n_evals, mb.train.n_evals);
+    }
+}

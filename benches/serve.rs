@@ -1,6 +1,9 @@
 //! Bench: the serving layer — cached-factor batch prediction vs the cold
-//! assemble+factor+predict path, and the `O(n²)` streaming observe
-//! (factor extend + α refresh) vs a full `O(n³)` refactorisation.
+//! assemble+factor+predict path, the `O(n²)` streaming observe
+//! (factor extend + α refresh) vs a full `O(n³)` refactorisation, the
+//! `O(n²)` sliding-window **evict** vs refactorising the shrunk window,
+//! and the **persistence** restart (`TrainedModel` save/load) vs
+//! retraining from scratch.
 //!
 //! Appends a `serve` section to **`BENCH_perf.json`** (merging with the
 //! sections `cargo bench --bench perf` wrote, if the file exists) so the
@@ -12,26 +15,38 @@
 //! * `observe`: `{n, threads, extend_seconds, refactor_seconds, speedup}`
 //!   — appending one observation via `Chol::extend` + α refresh vs
 //!   refactorising the grown matrix from scratch.
+//! * `evict`: `{n, threads, evict_seconds, refactor_seconds, speedup}` —
+//!   deleting the oldest observation via `Chol::shrink_front(1)` + α
+//!   refresh vs refactorising the shrunk window from scratch.
+//! * `persistence`: `{n, threads, artifact_bytes, save_seconds,
+//!   load_seconds, retrain_seconds, speedup}` — restoring a serving
+//!   session from a `TrainedModel` artifact (first prediction included)
+//!   vs re-running training; `speedup = retrain/load`.
 //!
-//! `cargo bench --bench serve`
+//! `cargo bench --bench serve`; set `GPFAST_BENCH_QUICK=1` for the
+//! ci.sh smoke run (small n, 1-restart retrain).
 
+use gpfast::coordinator::{ModelSpec, PipelineConfig, ServeSession, Tournament};
 use gpfast::gp::serve::Predictor;
 use gpfast::gp::{assemble_cov_with, predict, profiled::ProfiledEval};
 use gpfast::kernels::{paper_k1, PaperK1};
 use gpfast::linalg::Chol;
+use gpfast::rng::Xoshiro256;
 use gpfast::runtime::ExecutionContext;
-use gpfast::util::{timer::human_time, Json, Table, TimingStats};
+use gpfast::util::{timer::human_time, Json, Stopwatch, Table, TimingStats};
 
 fn main() {
     let ctx = ExecutionContext::from_env();
     let threads = ctx.threads();
-    println!("(thread budget: {threads})\n");
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let sizes: Vec<usize> = if quick { vec![128, 256] } else { vec![500, 1000, 1968] };
+    println!("(thread budget: {threads}{})\n", if quick { ", quick mode" } else { "" });
     let mut rows: Vec<Json> = Vec::new();
     let theta = PaperK1::truth();
 
     println!("== cached-factor batch predict vs cold (k1, q = 256 queries) ==");
     let mut table = Table::new(vec!["n", "cached", "cold", "speedup"]);
-    for &n in &[500usize, 1000, 1968] {
+    for &n in &sizes {
         let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
         let y: Vec<f64> = t.iter().map(|&x| (x * 0.51).sin()).collect();
         let q = 256usize;
@@ -71,7 +86,7 @@ fn main() {
 
     println!("\n== streaming observe: O(n²) extend vs O(n³) refactor ==");
     let mut table = Table::new(vec!["n", "extend+refresh", "refactor", "speedup"]);
-    for &n in &[500usize, 1000, 1968] {
+    for &n in &sizes {
         let t: Vec<f64> = (1..=n + 1).map(|i| i as f64).collect();
         let y: Vec<f64> = t.iter().map(|&x| (x * 0.51).sin()).collect();
         let model = paper_k1(0.1);
@@ -110,6 +125,103 @@ fn main() {
             ("threads", threads.into()),
             ("extend_seconds", extend.min().into()),
             ("refactor_seconds", refactor.min().into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    println!("\n== sliding-window evict: O(n²) shrink vs O(n³) refactor ==");
+    let mut table = Table::new(vec!["n", "evict+refresh", "refactor", "speedup"]);
+    for &n in &sizes {
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let y: Vec<f64> = t.iter().map(|&x| (x * 0.51).sin()).collect();
+        let model = paper_k1(0.1);
+        let k_full = assemble_cov_with(&model, &t, &theta, &ctx);
+        let base = Chol::factor_with(&k_full, &ctx).unwrap();
+        // the shrunk window the eviction produces: points 1..n
+        let m = n - 1;
+        let mut k_tail = gpfast::linalg::Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                k_tail[(i, j)] = k_full[(i + 1, j + 1)];
+            }
+        }
+        let reps = if n >= 1968 { 2 } else { 3 };
+        // both closures clone an O(n²) object; the refactor path then
+        // pays O(n³) on top, the evict path only the O(n²) rank-1 sweep
+        let evict = TimingStats::measure(1, reps, || {
+            let mut ch = base.clone();
+            ch.shrink_front(1);
+            let _ = ch.solve(&y[1..]);
+        });
+        let refactor = TimingStats::measure(0, reps, || {
+            let ch = Chol::factor_owned_with(k_tail.clone(), &ctx).unwrap();
+            let _ = ch.solve(&y[1..]);
+        });
+        let speedup = refactor.min() / evict.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(evict.min()),
+            human_time(refactor.min()),
+            format!("{speedup:.1}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "evict".into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("evict_seconds", evict.min().into()),
+            ("refactor_seconds", refactor.min().into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    println!("\n== persistence: save/load restart vs retraining ==");
+    let mut table = Table::new(vec!["n", "save", "load+predict", "retrain", "speedup"]);
+    {
+        let n = if quick { 128 } else { 500 };
+        let restarts = if quick { 1 } else { 2 };
+        let data = gpfast::data::synthetic::table1_dataset(n, 0.1, 5);
+        let mut cfg = PipelineConfig::fast();
+        cfg.models = vec![ModelSpec::K1];
+        cfg.train.multistart.restarts = restarts;
+        cfg.workers = 1;
+        cfg.exec = ctx.clone();
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        // the cost persistence avoids: train (+ evidence) from scratch
+        let sw = Stopwatch::start();
+        let result = Tournament::new(cfg).run(&data, &mut rng).unwrap();
+        let retrain_secs = sw.elapsed_secs();
+        let tm = result.winner();
+        let path = std::env::temp_dir()
+            .join(format!("gpfast_bench_artifact_{}.bin", std::process::id()));
+        let save = TimingStats::measure(1, 3, || {
+            tm.save(&path, &data).unwrap();
+        });
+        let artifact_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let probe = [0.5 * n as f64];
+        let load = TimingStats::measure(1, 3, || {
+            let session =
+                ServeSession::from_artifacts(&[&path], ctx.clone()).unwrap();
+            let _ = session.predict(&probe);
+        });
+        let _ = std::fs::remove_file(&path);
+        let speedup = retrain_secs / load.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(save.min()),
+            human_time(load.min()),
+            human_time(retrain_secs),
+            format!("{speedup:.0}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "persistence".into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("artifact_bytes", (artifact_bytes as usize).into()),
+            ("save_seconds", save.min().into()),
+            ("load_seconds", load.min().into()),
+            ("retrain_seconds", retrain_secs.into()),
             ("speedup", speedup.into()),
         ]));
     }

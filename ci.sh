@@ -24,12 +24,22 @@ GPFAST_THREADS=1 cargo test -q
 echo "== cargo test -q (GPFAST_THREADS=max) =="
 GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q
 
-echo "== quick-bench smoke: micro-kernel gflops + tournament recorded in BENCH_perf.json =="
-# Small-n sweeps of the perf and tournament benches so the
+echo "== serving-lifecycle soak (quick mode, both thread settings) =="
+# The full suite above already includes soak_serving; these explicit runs
+# keep the windowed evict/refresh/retrain gate visible and guarantee the
+# soak's serial-vs-threaded bit-identity is exercised even if the suite
+# list changes. (The #[ignore]d long-haul variant stays manual:
+# `cargo test --release -- --ignored`.)
+GPFAST_THREADS=1 cargo test -q --test soak_serving
+GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q --test soak_serving
+
+echo "== quick-bench smoke: micro-kernel gflops + tournament + serve recorded in BENCH_perf.json =="
+# Small-n sweeps of the perf, tournament and serve benches so the
 # BENCH_perf.json trajectory is refreshed on every gate run; the
-# full-size sweeps stay manual `cargo bench --bench perf|tournament`.
+# full-size sweeps stay manual `cargo bench --bench perf|tournament|serve`.
 GPFAST_BENCH_QUICK=1 cargo bench --bench perf
 GPFAST_BENCH_QUICK=1 cargo bench --bench tournament
+GPFAST_BENCH_QUICK=1 cargo bench --bench serve
 if command -v python3 >/dev/null 2>&1; then
     python3 - <<'EOF'
 import json, sys
@@ -41,16 +51,31 @@ for name in ("gemm", "syrk"):
 rows = doc.get("sections", {}).get("tournament", [])
 if not rows or not all("tournament_seconds" in r and "warm_evals" in r for r in rows):
     sys.exit("FAIL: BENCH_perf.json section 'tournament' is empty or missing fields")
-print("BENCH_perf.json gemm/syrk/tournament sections populated")
+rows = doc.get("sections", {}).get("serve", [])
+kinds = {r.get("kind") for r in rows}
+for want in ("batch_predict", "observe", "evict", "persistence"):
+    if want not in kinds:
+        sys.exit(f"FAIL: BENCH_perf.json serve section is missing {want!r} rows")
+if not all("evict_seconds" in r for r in rows if r.get("kind") == "evict"):
+    sys.exit("FAIL: serve/evict rows missing evict_seconds")
+if not all("load_seconds" in r and "retrain_seconds" in r
+           for r in rows if r.get("kind") == "persistence"):
+    sys.exit("FAIL: serve/persistence rows missing load/retrain fields")
+print("BENCH_perf.json gemm/syrk/tournament/serve sections populated")
 EOF
 else
     # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
-    # in quick mode), so a populated run has at least 4 of them, and the
-    # tournament section carries at least one wall-clock row
+    # in quick mode), so a populated run has at least 4 of them; the
+    # tournament section carries at least one wall-clock row; the serve
+    # section carries evict and persistence rows
     [ "$(grep -c '"naive_gflops"' BENCH_perf.json)" -ge 4 ] \
         || { echo "FAIL: BENCH_perf.json gemm/syrk sections not populated"; exit 1; }
     [ "$(grep -c '"tournament_seconds"' BENCH_perf.json)" -ge 1 ] \
         || { echo "FAIL: BENCH_perf.json tournament section not populated"; exit 1; }
+    [ "$(grep -c '"evict_seconds"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json serve/evict rows not populated"; exit 1; }
+    [ "$(grep -c '"load_seconds"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json serve/persistence rows not populated"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

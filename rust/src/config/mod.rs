@@ -28,6 +28,13 @@ pub struct RunConfig {
     /// env var, else the machine's available parallelism).
     pub threads: usize,
     pub artifacts_dir: String,
+    /// `[serve] window` — sliding-window capacity for the serving
+    /// session (0 = unbounded; ≥ 2 bounds every cached factor).
+    pub serve_window: usize,
+    /// `[serve] refresh_every` — cold-refactorise the windowed factors
+    /// after this many evictions (0 = never; only meaningful with a
+    /// window).
+    pub serve_refresh_every: usize,
 }
 
 impl Default for RunConfig {
@@ -43,6 +50,8 @@ impl Default for RunConfig {
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
             threads: 0,
             artifacts_dir: "artifacts".into(),
+            serve_window: 0,
+            serve_refresh_every: 64,
         }
     }
 }
@@ -101,7 +110,26 @@ impl RunConfig {
             cfg.artifacts_dir =
                 v.as_str().ok_or_else(|| anyhow::anyhow!("runtime.artifacts_dir"))?.to_string();
         }
+        if let Some(v) = doc.get("serve", "window") {
+            let w = v.as_int().ok_or_else(|| anyhow::anyhow!("serve.window"))?;
+            anyhow::ensure!(w >= 0, "serve.window must be >= 0 (0 = unbounded), got {w}");
+            cfg.serve_window = w as usize;
+        }
+        if let Some(v) = doc.get("serve", "refresh_every") {
+            let r = v.as_int().ok_or_else(|| anyhow::anyhow!("serve.refresh_every"))?;
+            anyhow::ensure!(r >= 0, "serve.refresh_every must be >= 0 (0 = never), got {r}");
+            cfg.serve_refresh_every = r as usize;
+        }
         Ok(cfg)
+    }
+
+    /// The sliding-window policy this config describes, if any
+    /// (`serve.window = 0` means serve unbounded).
+    pub fn window_policy(&self) -> Option<crate::coordinator::WindowPolicy> {
+        (self.serve_window > 0).then(|| crate::coordinator::WindowPolicy {
+            max_points: self.serve_window,
+            refresh_every: self.serve_refresh_every,
+        })
     }
 
     /// The execution context this config describes: `threads = 0` means
@@ -209,5 +237,22 @@ workers = 2
     fn bad_model_rejected_at_pipeline() {
         let cfg = RunConfig::from_toml("[run]\nmodels = [\"nope\"]\n").unwrap();
         assert!(cfg.pipeline().is_err());
+    }
+
+    #[test]
+    fn serve_window_keys_parse_and_validate() {
+        let cfg =
+            RunConfig::from_toml("[serve]\nwindow = 500\nrefresh_every = 32\n").unwrap();
+        assert_eq!(cfg.serve_window, 500);
+        assert_eq!(cfg.serve_refresh_every, 32);
+        let p = cfg.window_policy().expect("window set");
+        assert_eq!(p.max_points, 500);
+        assert_eq!(p.refresh_every, 32);
+        // defaults: unbounded serving, no policy materialised
+        let d = RunConfig::from_toml("[run]\nseed = 1\n").unwrap();
+        assert_eq!(d.serve_window, 0);
+        assert!(d.window_policy().is_none());
+        assert!(RunConfig::from_toml("[serve]\nwindow = -3\n").is_err());
+        assert!(RunConfig::from_toml("[serve]\nrefresh_every = -1\n").is_err());
     }
 }

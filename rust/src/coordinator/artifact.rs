@@ -1,0 +1,465 @@
+//! On-disk [`TrainedModel`] artifacts — the persistence third of the
+//! serving lifecycle.
+//!
+//! Training costs `O(restarts · evals · n³)`; adopting a persisted
+//! artifact costs one `O(n²)` file read. [`TrainedModel::save`] writes a
+//! **versioned little-endian binary** of everything a serving process
+//! needs to restart without retraining — the buildable spec name, the
+//! training data, ϑ̂ with its full [`TrainResult`], the peak factor `L`
+//! (lower triangle packed) with its *maintained* log-determinant, `α`,
+//! and the Laplace evidence (so a restored multi-model router re-ranks
+//! exactly) — and [`TrainedModel::load`] restores it **bit-identically**:
+//! a reloaded predictor's first prediction equals the in-memory one to
+//! the last bit, with zero profiled-likelihood evaluations (asserted via
+//! [`crate::gp::profiled::eval_count`] in `rust/tests/persistence.rs`).
+//!
+//! No serde, no external crates (the build image has no registry): the
+//! format is a flat field-by-field encoding behind a bounds-checked
+//! reader, so corrupt, truncated or version-mismatched files surface as
+//! clean `Err`s — never panics, never unbounded allocations (every
+//! length field is validated against the bytes actually remaining).
+//!
+//! Format (version 1), all integers/floats little-endian:
+//!
+//! ```text
+//! magic  b"GPFASTMD"  | version u32
+//! dataset: label str | n u64 | t f64×n | y f64×n
+//! spec name str | sigma_n f64 | param_names str-list
+//! train: theta_hat vec | lnp_peak | sigma_f_hat2 | converged u8
+//!        | n_evals u64 | n_modes u64 | restart_values vec
+//! peak:  lnp | sigma_f_hat2 | alpha vec
+//!        | factor dim u64 | logdet | packed lower triangle f64×n(n+1)/2
+//! evidence: ln_z | ln_p_peak | ln_det_h | ln_volume | marg_const
+//!        | sigma vec | covariance matrix | suspect u8
+//! nested: u8 flag [| ln_z | ln_z_err | n_evals u64 | information
+//!        | wall_secs]
+//! warm_started u8 | restarts u64 | wall_secs f64
+//! ```
+//!
+//! `str` = u32 length + UTF-8 bytes; `vec` = u64 length + f64s; `matrix`
+//! = u64 rows + u64 cols + row-major f64s.
+
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::evidence::LaplaceEvidence;
+use crate::gp::ProfiledEval;
+use crate::linalg::{Chol, Matrix};
+
+use super::registry::ModelSpec;
+use super::report::NestedReport;
+use super::tournament::TrainedModel;
+use super::train::TrainResult;
+
+const MAGIC: &[u8; 8] = b"GPFASTMD";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------- writer
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f64s_raw(&mut self, v: &[f64]) {
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn vec(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        self.f64s_raw(v);
+    }
+
+    fn matrix(&mut self, m: &Matrix) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        self.f64s_raw(m.as_slice());
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Bounds-checked cursor: every read validates the remaining length
+/// first, and every element count is validated against the bytes that
+/// could possibly back it before any allocation happens.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "truncated artifact: wanted {n} bytes at offset {}, {} remain",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> crate::Result<f64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    /// A length field counting `elem_bytes`-sized elements, validated
+    /// against the remaining buffer before any allocation.
+    fn len(&mut self, elem_bytes: usize) -> crate::Result<usize> {
+        let raw = self.u64()?;
+        let n = usize::try_from(raw)
+            .map_err(|_| anyhow::anyhow!("corrupt artifact: length field {raw} overflows"))?;
+        anyhow::ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|b| b <= self.remaining()),
+            "corrupt artifact: length field {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    fn str(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| anyhow::anyhow!("corrupt artifact: invalid UTF-8 string: {e}"))
+    }
+
+    fn f64s_raw(&mut self, n: usize) -> crate::Result<Vec<f64>> {
+        let bytes = self.take(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(8) {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            out.push(f64::from_le_bytes(a));
+        }
+        Ok(out)
+    }
+
+    fn vec(&mut self) -> crate::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        self.f64s_raw(n)
+    }
+
+    fn matrix(&mut self) -> crate::Result<Matrix> {
+        let rows = self.len(1)?;
+        let cols = self.len(1)?;
+        anyhow::ensure!(
+            rows.checked_mul(cols)
+                .and_then(|n| n.checked_mul(8))
+                .is_some_and(|b| b <= self.remaining()),
+            "corrupt artifact: {rows}×{cols} matrix exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(Matrix::from_vec(rows, cols, self.f64s_raw(rows * cols)?))
+    }
+
+    fn done(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.remaining() == 0,
+            "corrupt artifact: {} trailing bytes after the last field",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- encoding
+
+fn encode(tm: &TrainedModel, data: &Dataset) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(VERSION);
+    // dataset
+    w.str(&data.label);
+    w.u64(data.len() as u64);
+    w.f64s_raw(&data.t);
+    w.f64s_raw(&data.y);
+    // spec
+    w.str(tm.spec.name());
+    w.f64(tm.sigma_n);
+    w.u32(tm.param_names.len() as u32);
+    for nm in &tm.param_names {
+        w.str(nm);
+    }
+    // train result
+    w.vec(&tm.train.theta_hat);
+    w.f64(tm.train.lnp_peak);
+    w.f64(tm.train.sigma_f_hat2);
+    w.u8(tm.train.converged as u8);
+    w.u64(tm.train.n_evals as u64);
+    w.u64(tm.train.n_modes as u64);
+    w.vec(&tm.train.restart_values);
+    // peak evaluation: lnp, σ̂², α, factor (packed lower triangle)
+    w.f64(tm.train.peak_eval.lnp);
+    w.f64(tm.train.peak_eval.sigma_f_hat2);
+    w.vec(&tm.train.peak_eval.alpha);
+    let chol = &tm.train.peak_eval.chol;
+    let n = chol.dim();
+    w.u64(n as u64);
+    w.f64(chol.logdet());
+    let l = chol.factor_matrix();
+    for i in 0..n {
+        w.f64s_raw(&l.row(i)[..=i]);
+    }
+    // evidence
+    let ev = &tm.evidence;
+    w.f64(ev.ln_z);
+    w.f64(ev.ln_p_peak);
+    w.f64(ev.ln_det_h);
+    w.f64(ev.ln_volume);
+    w.f64(ev.marg_const);
+    w.vec(&ev.sigma);
+    w.matrix(&ev.covariance);
+    w.u8(ev.suspect as u8);
+    // nested verification
+    match &tm.nested {
+        None => w.u8(0),
+        Some(nr) => {
+            w.u8(1);
+            w.f64(nr.ln_z);
+            w.f64(nr.ln_z_err);
+            w.u64(nr.n_evals as u64);
+            w.f64(nr.information);
+            w.f64(nr.wall_secs);
+        }
+    }
+    w.u8(tm.warm_started as u8);
+    w.u64(tm.restarts as u64);
+    w.f64(tm.wall_secs);
+    w.buf
+}
+
+fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
+    let mut r = Reader::new(bytes);
+    let magic = r.take(8).map_err(|_| {
+        anyhow::anyhow!("not a gpfast model artifact: file shorter than the header")
+    })?;
+    anyhow::ensure!(
+        magic == &MAGIC[..],
+        "not a gpfast model artifact: bad magic {:?}",
+        magic
+    );
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported artifact version {version} (this build reads version {VERSION})"
+    );
+    // dataset
+    let label = r.str()?;
+    let n = r.len(16)?; // t and y each back n f64s
+    anyhow::ensure!(n >= 1, "corrupt artifact: empty dataset (n = 0)");
+    let t = r.f64s_raw(n)?;
+    let y = r.f64s_raw(n)?;
+    let data = Dataset::new(t, y, label);
+    // spec
+    let spec_name = r.str()?;
+    let spec = ModelSpec::parse(&spec_name)
+        .map_err(|e| anyhow::anyhow!("artifact names an unknown model spec: {e}"))?;
+    let sigma_n = r.f64()?;
+    anyhow::ensure!(sigma_n.is_finite() && sigma_n >= 0.0, "corrupt artifact: σ_n = {sigma_n}");
+    let n_params = r.u32()? as usize;
+    anyhow::ensure!(
+        n_params <= 64,
+        "corrupt artifact: implausible hyperparameter count {n_params}"
+    );
+    let mut param_names = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        param_names.push(r.str()?);
+    }
+    let model_dim = spec.build(sigma_n).dim();
+    anyhow::ensure!(
+        n_params == model_dim,
+        "corrupt artifact: {spec_name} has {model_dim} hyperparameters, file lists {n_params}"
+    );
+    // train result
+    let theta_hat = r.vec()?;
+    anyhow::ensure!(
+        theta_hat.len() == model_dim,
+        "corrupt artifact: θ̂ has {} coordinates, {spec_name} needs {model_dim}",
+        theta_hat.len()
+    );
+    let lnp_peak = r.f64()?;
+    let sigma_f_hat2 = r.f64()?;
+    let converged = r.u8()? != 0;
+    let n_evals = r.u64()? as usize;
+    let n_modes = r.u64()? as usize;
+    let restart_values = r.vec()?;
+    // peak evaluation
+    let peak_lnp = r.f64()?;
+    let peak_sigma2 = r.f64()?;
+    let alpha = r.vec()?;
+    let chol_dim = r.len(8)?;
+    anyhow::ensure!(
+        chol_dim == n && alpha.len() == n,
+        "corrupt artifact: factor dim {chol_dim} / α length {} vs dataset n = {n}",
+        alpha.len()
+    );
+    let logdet = r.f64()?;
+    let mut l = Matrix::zeros(chol_dim, chol_dim);
+    for i in 0..chol_dim {
+        let row = r.f64s_raw(i + 1)?;
+        l.row_mut(i)[..=i].copy_from_slice(&row);
+    }
+    let chol = Chol::from_parts(l, logdet);
+    let peak_eval = ProfiledEval { lnp: peak_lnp, sigma_f_hat2: peak_sigma2, chol, alpha };
+    // evidence
+    let ln_z = r.f64()?;
+    let ln_p_peak = r.f64()?;
+    let ln_det_h = r.f64()?;
+    let ln_volume = r.f64()?;
+    let marg_const = r.f64()?;
+    let sigma = r.vec()?;
+    let covariance = r.matrix()?;
+    let suspect = r.u8()? != 0;
+    let evidence = LaplaceEvidence {
+        ln_z,
+        ln_p_peak,
+        ln_det_h,
+        ln_volume,
+        marg_const,
+        sigma,
+        covariance,
+        suspect,
+    };
+    // nested verification
+    let nested = match r.u8()? {
+        0 => None,
+        1 => Some(NestedReport {
+            ln_z: r.f64()?,
+            ln_z_err: r.f64()?,
+            n_evals: r.u64()? as usize,
+            information: r.f64()?,
+            wall_secs: r.f64()?,
+        }),
+        other => anyhow::bail!("corrupt artifact: nested flag byte {other}"),
+    };
+    let warm_started = r.u8()? != 0;
+    let restarts = r.u64()? as usize;
+    let wall_secs = r.f64()?;
+    r.done()?;
+    let tm = TrainedModel {
+        spec,
+        sigma_n,
+        param_names,
+        train: TrainResult {
+            theta_hat,
+            lnp_peak,
+            sigma_f_hat2,
+            peak_eval,
+            converged,
+            n_evals,
+            n_modes,
+            restart_values,
+        },
+        evidence,
+        nested,
+        warm_started,
+        restarts,
+        wall_secs,
+    };
+    Ok((tm, data))
+}
+
+impl TrainedModel {
+    /// Persist this artifact (plus the training data it factored) to
+    /// `path`. See the module docs for the format; the write is
+    /// all-at-once, so a crashed save leaves either the old file or a
+    /// truncated one that [`TrainedModel::load`] will cleanly reject.
+    pub fn save(&self, path: &Path, data: &Dataset) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.train.peak_eval.chol.dim() == data.len(),
+            "artifact factor is for n = {}, dataset has n = {}",
+            self.train.peak_eval.chol.dim(),
+            data.len()
+        );
+        std::fs::write(path, encode(self, data))
+            .map_err(|e| anyhow::anyhow!("writing model artifact {}: {e}", path.display()))
+    }
+
+    /// Load an artifact saved by [`TrainedModel::save`]. The restore is
+    /// bit-identical — factor, `α`, σ̂² and the maintained log-determinant
+    /// come back exactly, so a predictor adopted from the result serves
+    /// the same bits as the one that was saved, with **zero** likelihood
+    /// evaluations. Corrupt, truncated and version-mismatched files
+    /// return errors (never panic).
+    pub fn load(path: &Path) -> crate::Result<(TrainedModel, Dataset)> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading model artifact {}: {e}", path.display()))?;
+        decode(&bytes).map_err(|e| anyhow::anyhow!("loading {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reader_rejects_short_and_oversized_fields() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(r.u64().is_err());
+        // a length field claiming more elements than bytes remain must
+        // fail before allocating
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = Reader::new(&buf);
+        assert!(r.vec().is_err());
+        // trailing garbage detected
+        let r = Reader::new(&[0u8; 4]);
+        assert!(r.done().is_err());
+    }
+}

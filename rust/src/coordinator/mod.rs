@@ -29,6 +29,7 @@
 //! owns a native backend (PJRT handles are not `Send`), while artifact-
 //! accelerated assembly runs on the coordinator thread.
 
+pub mod artifact;
 pub mod pool;
 pub mod registry;
 pub mod serve;
@@ -39,7 +40,9 @@ mod report;
 pub use pool::WorkerPool;
 pub use registry::{ModelSpec, Roster};
 pub use report::{ComparisonReport, ModelReport, NestedReport};
-pub use serve::{DriftOptions, DriftStatus, RouteMode, ServeSession};
+pub use serve::{
+    DriftOptions, DriftStatus, RetrainOutcome, RouteMode, ServeSession, WindowPolicy,
+};
 pub use tournament::{Tournament, TournamentResult, TrainedModel};
 pub use train::{train_model, train_model_seeded, TrainOptions, TrainResult};
 

@@ -27,14 +27,43 @@
 //!   ϑ̂ between retrains, so a sustained log-score deficit is exactly the
 //!   signature of hyperparameter drift.
 //!
+//! ## Serving lifecycle: grow → evict → refresh → retrain
+//!
+//! With a [`WindowPolicy`] attached ([`ServeSession::with_window`]) the
+//! session is **self-healing and bounded-memory**:
+//!
+//! * **grow** — every absorbed point extends all factors in `O(n²)`;
+//! * **evict** — past `max_points` the oldest observation is deleted
+//!   from every slot ([`Predictor::evict`], an `O(n²)` rank-1 restore on
+//!   the trailing block), so no factor ever exceeds the window — the
+//!   sliding-window accuracy-for-cost trade of Chalupka et al. and of
+//!   subset-based GPR;
+//! * **refresh** — every `refresh_every` evictions all factors are
+//!   refactorised cold from the live window (compute-then-commit, so the
+//!   refresh is all-or-nothing across slots), washing out accumulated
+//!   `O(n²)`-maintenance rounding drift;
+//! * **retrain** — when the drift monitor latches,
+//!   [`ServeSession::retrain`] reruns training on the current window
+//!   (every model warm-started from its incumbent ϑ̂), recomputes each
+//!   Laplace evidence, and **hot-swaps** all slots, the evidence ranking
+//!   and the drift baselines without dropping the session: counters
+//!   carry over and queries keep being served from the new peaks.
+//!
 //! Constructed from a finished tournament
 //! ([`ServeSession::from_tournament`]), from a single training run
-//! ([`ServeSession::from_training`]), or by training in place
-//! ([`ServeSession::train_and_serve`]).
+//! ([`ServeSession::from_training`]), by training in place
+//! ([`ServeSession::train_and_serve`]), or — the `O(n²)` restart path —
+//! from persisted artifacts on disk ([`ServeSession::from_artifacts`],
+//! reading [`TrainedModel::save`] files with zero likelihood
+//! evaluations).
+
+use std::path::Path;
 
 use crate::data::Dataset;
+use crate::evidence::laplace_evidence;
 use crate::gp::predict::Prediction;
 use crate::gp::serve::{Predictor, ServeStats};
+use crate::priors::{BoxPrior, ScalePrior};
 use crate::rng::Xoshiro256;
 use crate::runtime::ExecutionContext;
 
@@ -51,6 +80,35 @@ pub enum RouteMode {
     Winner,
     /// Evidence-weighted model averaging across the whole roster.
     Averaged,
+}
+
+/// Bounded-memory sliding-window policy (see the module docs'
+/// lifecycle section).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowPolicy {
+    /// Hard cap on the points behind every cached factor: observations
+    /// past this evict the oldest point from all slots. Clamped to ≥ 2
+    /// by [`ServeSession::with_window`] (a factor must keep at least one
+    /// point and be able to absorb the next).
+    pub max_points: usize,
+    /// Refactorise every slot cold from the live window after this many
+    /// evictions, washing out accumulated rank-1 rounding drift
+    /// (`0` = never refresh).
+    pub refresh_every: usize,
+}
+
+/// What [`ServeSession::retrain`] did, per model in the new rank order.
+#[derive(Clone, Debug)]
+pub struct RetrainOutcome {
+    /// Points in the window the retrain was fitted on.
+    pub window_n: usize,
+    /// `(model name, previous ln Z, new ln Z)`, new-rank order (winner
+    /// first).
+    pub models: Vec<(String, f64, f64)>,
+    /// The new evidence winner.
+    pub winner: String,
+    /// Did the retrain change which model serves by default?
+    pub winner_changed: bool,
 }
 
 /// Drift-monitor tuning.
@@ -172,6 +230,25 @@ pub struct ServeSession {
     slots: Vec<ModelSlot>,
     route: RouteMode,
     exec: ExecutionContext,
+    /// Fixed noise level the slots were trained with (needed to rebuild
+    /// models on retrain).
+    sigma_n: f64,
+    /// σ_f prior for retrain-time evidence (must match the prior the
+    /// incumbent ln Z values were computed with, or old-vs-new deltas
+    /// pick up a spurious prior-volume offset). Defaults to
+    /// [`ScalePrior::default`], the config pipeline's choice; override
+    /// with [`ServeSession::with_scale_prior`].
+    scale_prior: ScalePrior,
+    /// Drift tuning applied to every (re)created monitor.
+    drift_opts: DriftOptions,
+    window: Option<WindowPolicy>,
+    /// Evictions since the last cold refresh (drives `refresh_every`).
+    since_refresh: usize,
+    /// Lifetime window-eviction rounds (each round drops one point from
+    /// every slot).
+    evictions: usize,
+    /// Lifetime cold refreshes (periodic + retrain hot-swaps).
+    refreshes: usize,
 }
 
 impl ServeSession {
@@ -189,6 +266,12 @@ impl ServeSession {
         anyhow::ensure!(!models.is_empty(), "no trained models to serve");
         let mut slots = Vec::with_capacity(models.len());
         for tm in models {
+            anyhow::ensure!(
+                tm.sigma_n == models[0].sigma_n,
+                "roster noise levels disagree: {} vs {}",
+                tm.sigma_n,
+                models[0].sigma_n
+            );
             slots.push(ModelSlot {
                 spec: tm.spec.clone(),
                 predictor: tm.predictor(data)?,
@@ -197,7 +280,48 @@ impl ServeSession {
             });
         }
         slots.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap_or(std::cmp::Ordering::Equal));
-        Ok(Self { slots, route: RouteMode::Winner, exec })
+        Ok(Self {
+            slots,
+            route: RouteMode::Winner,
+            exec,
+            sigma_n: models[0].sigma_n,
+            scale_prior: ScalePrior::default(),
+            drift_opts: DriftOptions::default(),
+            window: None,
+            since_refresh: 0,
+            evictions: 0,
+            refreshes: 0,
+        })
+    }
+
+    /// Restart a serving process from persisted [`TrainedModel`]
+    /// artifacts ([`TrainedModel::save`] files) — the `O(n²)` path: every
+    /// factor is read back bit-identically from disk, so the session
+    /// reaches its first prediction with **zero** likelihood evaluations
+    /// (asserted via [`crate::gp::profiled::eval_count`] in the
+    /// persistence suite). All artifacts must have been trained on the
+    /// same dataset; the roster is re-ranked by the stored evidence.
+    pub fn from_artifacts<P: AsRef<Path>>(
+        paths: &[P],
+        exec: ExecutionContext,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!paths.is_empty(), "no artifact paths given");
+        let mut models = Vec::with_capacity(paths.len());
+        let mut data: Option<Dataset> = None;
+        for p in paths {
+            let (tm, d) = TrainedModel::load(p.as_ref())?;
+            match &data {
+                None => data = Some(d),
+                Some(d0) => anyhow::ensure!(
+                    d0.t == d.t && d0.y == d.y,
+                    "artifact {} was trained on different data than the first artifact",
+                    p.as_ref().display()
+                ),
+            }
+            models.push(tm);
+        }
+        let data = data.expect("non-empty artifact list");
+        Self::from_tournament(&models, &data, exec)
     }
 
     /// Wire a finished single-model training run into a session by
@@ -234,6 +358,13 @@ impl ServeSession {
             }],
             route: RouteMode::Winner,
             exec,
+            sigma_n,
+            scale_prior: ScalePrior::default(),
+            drift_opts: DriftOptions::default(),
+            window: None,
+            since_refresh: 0,
+            evictions: 0,
+            refreshes: 0,
         })
     }
 
@@ -260,12 +391,58 @@ impl ServeSession {
     }
 
     /// Override the drift-monitor tuning on every slot (resets any
-    /// accumulated drift state).
+    /// accumulated drift state; also applied to the fresh monitors a
+    /// retrain hot-swap creates).
     pub fn with_drift_options(mut self, opts: DriftOptions) -> Self {
+        self.drift_opts = opts;
         for slot in &mut self.slots {
             slot.drift = DriftMonitor::new(opts);
         }
         self
+    }
+
+    /// Override the σ_f prior used for retrain-time evidence (builder
+    /// style). Set this when the tournament that built the session ran
+    /// with a non-default [`crate::coordinator::PipelineConfig::scale_prior`],
+    /// so post-retrain ln Z values stay comparable with the incumbent
+    /// ones (the prior-volume constant would otherwise offset every
+    /// old-vs-new delta in [`RetrainOutcome`]).
+    pub fn with_scale_prior(mut self, scale: ScalePrior) -> Self {
+        self.scale_prior = scale;
+        self
+    }
+
+    /// Attach a bounded-memory sliding-window policy (builder style):
+    /// observations past `max_points` evict the oldest point from every
+    /// slot, and every `refresh_every` evictions the factors are
+    /// refactorised cold from the live window. `max_points` is clamped
+    /// to ≥ 2.
+    pub fn with_window(mut self, mut policy: WindowPolicy) -> Self {
+        policy.max_points = policy.max_points.max(2);
+        self.window = Some(policy);
+        self
+    }
+
+    /// The attached window policy, if any.
+    pub fn window(&self) -> Option<WindowPolicy> {
+        self.window
+    }
+
+    /// Window-eviction rounds performed so far (each round drops one
+    /// point from every slot).
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    /// Cold factor refreshes performed so far (periodic window refreshes
+    /// plus retrain hot-swaps).
+    pub fn refreshes(&self) -> usize {
+        self.refreshes
+    }
+
+    /// Fixed noise level σ_n the routed models serve with.
+    pub fn sigma_n(&self) -> f64 {
+        self.sigma_n
     }
 
     /// Number of routed models.
@@ -304,6 +481,17 @@ impl ServeSession {
             .iter()
             .find(|s| s.spec.name() == name)
             .map(|s| s.predictor.predict_batch(t_star, &self.exec))
+    }
+
+    /// Routed model names, winner first.
+    pub fn model_names(&self) -> Vec<&'static str> {
+        self.slots.iter().map(|s| s.spec.name()).collect()
+    }
+
+    /// A specific roster member's live predictor (for invariant checks —
+    /// e.g. the soak suite's windowed-factor-vs-cold-refit comparison).
+    pub fn model_predictor(&self, name: &str) -> Option<&Predictor> {
+        self.slots.iter().find(|s| s.spec.name() == name).map(|s| &s.predictor)
     }
 
     /// Evidence-weighted model averaging: mixture mean and mixture
@@ -352,10 +540,160 @@ impl ServeSession {
             slot.drift.push(s.score);
             // reuses the pivot check's triangular solve — one O(n²) solve
             // per (point, model), and it cannot fail: the extension takes
-            // exactly the pre-checked pivot
-            slot.predictor.observe_scored(t_new, y_new, s)?;
+            // exactly the pre-checked pivot. The α/σ̂² refresh is deferred
+            // until after the window policy ran, so an absorb that
+            // immediately evicts pays it once, not twice.
+            slot.predictor.observe_scored_deferred(t_new, y_new, s)?;
         }
+        // refresh the deferred caches even when the window enforcement
+        // errors (e.g. a failed periodic refit), so the session keeps
+        // serving a consistent α for whatever factors it now holds; a
+        // completed cold refresh already installed fresh caches
+        match self.enforce_window() {
+            Ok(true) => Ok(()),
+            other => {
+                for slot in &mut self.slots {
+                    slot.predictor.refresh_cache();
+                }
+                other.map(|_| ())
+            }
+        }
+    }
+
+    /// Apply the window policy after an absorption: evict everything
+    /// over capacity from every slot in one oldest-first bulk shrink
+    /// (deletion is a rank-1 update sweep — it cannot fail, so the slots
+    /// stay in lockstep; one `O(n²)` storage copy regardless of how far
+    /// over capacity the window is, e.g. after attaching a small window
+    /// to a large restored session), then run the periodic cold refresh
+    /// when due. Returns whether a cold refresh ran (in which case every
+    /// slot's serving cache is already fresh and the caller must not
+    /// redo the `O(n²)` refresh).
+    fn enforce_window(&mut self) -> crate::Result<bool> {
+        let Some(policy) = self.window else { return Ok(false) };
+        let n = self.slots[0].predictor.n();
+        if n > policy.max_points {
+            let k = n - policy.max_points;
+            for slot in &mut self.slots {
+                slot.predictor.evict_front_deferred(k)?;
+            }
+            self.evictions += k;
+            self.since_refresh += k;
+        }
+        if policy.refresh_every > 0 && self.since_refresh >= policy.refresh_every {
+            self.refresh_factors()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Refactorise **every** slot cold from the live window at its
+    /// current ϑ̂, all-or-nothing: the `O(n³)` evaluations are computed
+    /// first ([`Predictor::refit_eval`]) and only then committed
+    /// ([`Predictor::adopt_eval`]), so an assembly/factorisation failure
+    /// leaves the session exactly as it was. Resets the periodic-refresh
+    /// countdown.
+    pub fn refresh_factors(&mut self) -> crate::Result<()> {
+        let evals = self
+            .slots
+            .iter()
+            .map(|s| s.predictor.refit_eval(&self.exec))
+            .collect::<crate::Result<Vec<_>>>()?;
+        for (slot, ev) in self.slots.iter_mut().zip(evals) {
+            slot.predictor.adopt_eval(ev);
+        }
+        self.refreshes += 1;
+        self.since_refresh = 0;
         Ok(())
+    }
+
+    /// Retrain **in place** on the current window — the self-healing
+    /// answer to a latched [`ServeSession::needs_retrain`]. Every slot's
+    /// spec is retrained on the live window data (multistart plus one
+    /// deterministic warm start at the incumbent ϑ̂, so a still-good peak
+    /// is never lost), its Laplace evidence recomputed, and then — only
+    /// after every model trained successfully — all router slots, the
+    /// evidence ranking and the drift baselines are **hot-swapped**
+    /// atomically: an error leaves the old session fully serviceable,
+    /// and on success serving continues without dropping the session
+    /// (lifetime counters carry over). The σ_f prior for the evidence is
+    /// the session's ([`ServeSession::with_scale_prior`]; defaults to
+    /// the config pipeline's [`ScalePrior::default`]).
+    pub fn retrain(
+        &mut self,
+        opts: &TrainOptions,
+        workers: usize,
+        rng: &mut Xoshiro256,
+    ) -> crate::Result<RetrainOutcome> {
+        let window = Dataset::new(
+            self.slots[0].predictor.t().to_vec(),
+            self.slots[0].predictor.y().to_vec(),
+            "serve-window",
+        );
+        let span = window.span();
+        let scale = self.scale_prior;
+        // train every slot first; nothing is swapped until all succeed
+        let mut rebuilt: Vec<(ModelSlot, f64)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let spec = slot.spec.clone();
+            let model = spec.build(self.sigma_n);
+            let prior = BoxPrior::for_model(&model, &span);
+            let mut o = opts.clone();
+            let mut incumbent = slot.predictor.theta().to_vec();
+            prior.project(&mut incumbent);
+            o.extra_starts.push(incumbent);
+            let trained =
+                train_model(&spec, self.sigma_n, &window, &o, workers, &self.exec, rng)?;
+            let hessian = crate::gp::profiled_hessian_with(
+                &model,
+                &window.t,
+                &window.y,
+                &trained.theta_hat,
+                &self.exec,
+            )?;
+            let evidence = laplace_evidence(
+                window.len(),
+                &prior,
+                &scale,
+                &trained.theta_hat,
+                trained.lnp_peak,
+                &hessian,
+            )?;
+            let predictor = Predictor::from_eval(
+                spec.build(self.sigma_n),
+                window.t.clone(),
+                window.y.clone(),
+                trained.theta_hat.clone(),
+                trained.peak_eval,
+            );
+            predictor.carry_counters_from(&slot.predictor);
+            let new_slot = ModelSlot {
+                spec,
+                predictor,
+                ln_z: evidence.ln_z,
+                drift: DriftMonitor::new(self.drift_opts),
+            };
+            rebuilt.push((new_slot, slot.ln_z));
+        }
+        // hot swap: new slots, new ranking, fresh drift baselines
+        let old_winner = self.slots[0].spec.name().to_string();
+        rebuilt.sort_by(|a, b| {
+            b.0.ln_z.partial_cmp(&a.0.ln_z).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let models: Vec<(String, f64, f64)> = rebuilt
+            .iter()
+            .map(|(s, old_ln_z)| (s.spec.name().to_string(), *old_ln_z, s.ln_z))
+            .collect();
+        self.slots = rebuilt.into_iter().map(|(s, _)| s).collect();
+        self.since_refresh = 0;
+        self.refreshes += 1;
+        let winner = self.slots[0].spec.name().to_string();
+        Ok(RetrainOutcome {
+            window_n: window.len(),
+            models,
+            winner_changed: winner != old_winner,
+            winner,
+        })
     }
 
     /// Append a batch of observations **point by point**: each point is
@@ -462,6 +800,101 @@ mod tests {
         assert_eq!(session.n_models(), 1);
         assert_eq!(session.spec(), &ModelSpec::K1);
         assert_eq!(session.weights(), vec![1.0]);
+    }
+
+    #[test]
+    fn window_policy_bounds_memory_and_refreshes_periodically() {
+        let data = table1_dataset(30, 0.1, 41);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        let (mut session, _) = ServeSession::train_and_serve(
+            &ModelSpec::K1,
+            0.1,
+            &data,
+            &opts,
+            1,
+            ExecutionContext::seq(),
+            &mut rng,
+        )
+        .unwrap();
+        session = session.with_window(WindowPolicy { max_points: 32, refresh_every: 4 });
+        assert_eq!(
+            session.window(),
+            Some(WindowPolicy { max_points: 32, refresh_every: 4 })
+        );
+        // stream 10 points: n grows to 32 then slides; 8 evictions, and
+        // the cold refresh fires at evictions 4 and 8
+        for i in 0..10 {
+            session.observe(31.0 + i as f64, 0.05 * i as f64).unwrap();
+            assert!(session.stats().n_train <= 32, "window exceeded at i={i}");
+        }
+        assert_eq!(session.stats().n_train, 32);
+        assert_eq!(session.evictions(), 8);
+        assert_eq!(session.refreshes(), 2);
+        let s = session.stats();
+        assert_eq!(s.observations_appended, 10);
+        assert_eq!(s.observations_evicted, 8);
+        // the oldest points are gone, the newest are present
+        let p = session.predictor();
+        assert_eq!(p.t()[0], data.t[8]);
+        assert_eq!(*p.t().last().unwrap(), 40.0);
+        let q = session.predict(&[40.5]);
+        assert!(q.mean[0].is_finite() && q.sd[0].is_finite());
+    }
+
+    #[test]
+    fn retrain_in_place_hot_swaps_and_preserves_counters() {
+        let data = table1_dataset(30, 0.1, 47);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(53);
+        let (mut session, trained) = ServeSession::train_and_serve(
+            &ModelSpec::K1,
+            0.1,
+            &data,
+            &opts,
+            1,
+            ExecutionContext::seq(),
+            &mut rng,
+        )
+        .unwrap();
+        let _ = session.predict(&[3.5, 7.5]);
+        session.observe(31.0, 0.1).unwrap();
+        let before = session.stats();
+        let lnp_before = session.predictor().lnp();
+        let outcome = session.retrain(&opts, 1, &mut rng).unwrap();
+        assert_eq!(outcome.window_n, 31);
+        assert_eq!(outcome.models.len(), 1);
+        assert_eq!(outcome.winner, "k1");
+        assert!(!outcome.winner_changed);
+        assert!(outcome.models[0].2.is_finite());
+        // the session kept its lifetime counters and its data…
+        let after = session.stats();
+        assert_eq!(after.n_train, 31);
+        assert_eq!(after.queries_served, before.queries_served);
+        assert_eq!(after.observations_appended, before.observations_appended);
+        // …serves from the new peak: the retrain warm-starts from the
+        // incumbent ϑ̂, so on the same window it can only match or beat it
+        let _ = trained;
+        assert!(session.predictor().lnp().is_finite());
+        assert!(
+            session.predictor().lnp() >= lnp_before - 1e-6 * lnp_before.abs().max(1.0),
+            "retrained peak regressed: {} vs incumbent {}",
+            session.predictor().lnp(),
+            lnp_before
+        );
+        // …and the drift baselines were reset
+        for d in session.drift() {
+            assert!(d.baseline.is_none() && !d.drifted);
+        }
+        assert!(!session.needs_retrain());
+        let q = session.predict(&[31.5]);
+        assert!(q.mean[0].is_finite());
     }
 
     #[test]

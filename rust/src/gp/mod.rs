@@ -33,6 +33,9 @@ pub use full::{
     full_hessian, full_hessian_with, full_lnp, full_lnp_grad, full_lnp_grad_with, full_lnp_with,
 };
 pub use predict::predict;
-pub use profiled::{marg_constant, profiled_hessian, profiled_hessian_with, ProfiledEval};
+pub use profiled::{
+    eval_count as profiled_eval_count, marg_constant, profiled_hessian, profiled_hessian_with,
+    ProfiledEval,
+};
 pub use sample::draw_realisation;
 pub use serve::{Predictor, ServeStats};

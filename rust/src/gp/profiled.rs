@@ -17,12 +17,29 @@
 //! gradients are bit-identical across thread counts (contractions reduce
 //! through per-row buffers summed in row order).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::kernels::CovarianceModel;
 use crate::linalg::{dot, Chol, Matrix};
 use crate::math::{lgamma, LN_2PI_E};
 use crate::runtime::exec::{even_bounds, for_row_chunks, ExecutionContext};
 
 use super::assemble::{assemble_cov_grads_with, assemble_cov_with, hessian_contractions_with};
+
+/// Process-global count of profiled-likelihood evaluations (every
+/// factor-producing evaluation flows through
+/// [`ProfiledEval::from_cov_with`], the single choke point of both
+/// backends). Monotonic; used by tests and the `serve --load-model` CLI
+/// to *prove* a restart-from-artifact path reached its first prediction
+/// without paying any likelihood evaluation. Note it is shared by every
+/// thread in the process — delta-based assertions must not run
+/// concurrently with other evaluating work.
+static EVAL_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the process-global evaluation counter.
+pub fn eval_count() -> u64 {
+    EVAL_COUNT.load(Ordering::Relaxed)
+}
 
 /// The per-ϑ products of one profiled-hyperlikelihood evaluation.
 ///
@@ -91,6 +108,7 @@ impl ProfiledEval {
 
     /// Evaluate from an assembled covariance with a parallel Cholesky.
     pub fn from_cov_with(k: Matrix, y: &[f64], ctx: &ExecutionContext) -> crate::Result<Self> {
+        EVAL_COUNT.fetch_add(1, Ordering::Relaxed);
         let n = y.len();
         anyhow::ensure!(k.rows() == n, "covariance/data size mismatch");
         let chol = Chol::factor_owned_with(k, ctx)?;

@@ -51,6 +51,9 @@ pub struct ServeStats {
     pub queries_served: usize,
     /// Observations appended via the `O(n²)` factor extension.
     pub observations_appended: usize,
+    /// Observations deleted via the `O(n²)` factor shrink
+    /// ([`Predictor::evict`] / [`Predictor::evict_front`]).
+    pub observations_evicted: usize,
 }
 
 /// One scored candidate observation: the drift log-score, the
@@ -80,6 +83,7 @@ pub struct Predictor {
     sigma_f_hat2: f64,
     queries: AtomicUsize,
     observations: AtomicUsize,
+    evictions: AtomicUsize,
 }
 
 impl Predictor {
@@ -121,6 +125,7 @@ impl Predictor {
             sigma_f_hat2: ev.sigma_f_hat2,
             queries: AtomicUsize::new(0),
             observations: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
         }
     }
 
@@ -132,6 +137,29 @@ impl Predictor {
     /// The hyperparameters the predictor serves with.
     pub fn theta(&self) -> &[f64] {
         &self.theta
+    }
+
+    /// The input (time) points currently behind the factor, in
+    /// absorption order — training data first, streamed appends after,
+    /// minus anything evicted. The serving window a retrain trains on.
+    pub fn t(&self) -> &[f64] {
+        &self.t
+    }
+
+    /// The output values paired with [`Predictor::t`].
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// The covariance model the predictor serves with.
+    pub fn model(&self) -> &CovarianceModel {
+        &self.model
+    }
+
+    /// The live cached factor (for soak tests and persistence — callers
+    /// must not rely on the garbage upper triangle).
+    pub fn chol(&self) -> &Chol {
+        &self.chol
     }
 
     /// `σ̂_f²` at the current data (refreshed on every observe).
@@ -152,7 +180,17 @@ impl Predictor {
             n_train: self.t.len(),
             queries_served: self.queries.load(Ordering::Relaxed),
             observations_appended: self.observations.load(Ordering::Relaxed),
+            observations_evicted: self.evictions.load(Ordering::Relaxed),
         }
+    }
+
+    /// Carry another predictor's lifetime counters over (the
+    /// retrain-in-place hot swap replaces the predictor object but the
+    /// serving session — and its monotonic stats — lives on).
+    pub(crate) fn carry_counters_from(&self, old: &Predictor) {
+        self.queries.store(old.queries.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.observations.store(old.observations.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.evictions.store(old.evictions.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     /// Serve one batch of query points: predictive mean and sd at each
@@ -261,6 +299,22 @@ impl Predictor {
         y_new: f64,
         scored: ScoredObservation,
     ) -> crate::Result<()> {
+        self.observe_scored_deferred(t_new, y_new, scored)?;
+        self.refresh();
+        Ok(())
+    }
+
+    /// [`Predictor::observe_scored`] **without** the `α`/`σ̂_f²` refresh —
+    /// the serving router's windowed absorb path, which may evict right
+    /// after the extend and would otherwise pay the `O(n²)` refresh
+    /// twice per point. The caller must run [`Predictor::refresh_cache`]
+    /// (or adopt a cold refit) before the predictor serves again.
+    pub(crate) fn observe_scored_deferred(
+        &mut self,
+        t_new: f64,
+        y_new: f64,
+        scored: ScoredObservation,
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             scored.w.len() == self.t.len(),
             "scored observation is stale: solved against n = {}, factor has n = {}",
@@ -273,7 +327,6 @@ impl Predictor {
         self.t.push(t_new);
         self.y.push(y_new);
         self.observations.fetch_add(1, Ordering::Relaxed);
-        self.refresh();
         Ok(())
     }
 
@@ -329,6 +382,80 @@ impl Predictor {
         self.y.push(y_new);
         self.observations.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Delete observation `i` (by absorption order) in `O(n²)`: the
+    /// factor shrinks via the bordered-complement restore
+    /// ([`Chol::remove_row`]) and `α`/`σ̂_f²` refresh with two triangular
+    /// solves — the sliding-window eviction primitive. Infallible except
+    /// for the guards (the deletion itself is a rank-1 *update*, which
+    /// cannot fail); at least one observation must remain.
+    pub fn evict(&mut self, i: usize) -> crate::Result<()> {
+        anyhow::ensure!(i < self.t.len(), "evict({i}) out of range for n = {}", self.t.len());
+        anyhow::ensure!(self.t.len() > 1, "cannot evict the last observation");
+        self.chol.remove_row(i);
+        self.t.remove(i);
+        self.y.remove(i);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.refresh();
+        Ok(())
+    }
+
+    /// Recompute the serving cache (`α`, `σ̂_f²`) after a sequence of
+    /// deferred mutations.
+    pub(crate) fn refresh_cache(&mut self) {
+        self.refresh();
+    }
+
+    /// Delete the `k` oldest observations in one `O(k n²)` factor shrink
+    /// ([`Chol::shrink_front`]) with a single `α`/`σ̂_f²` refresh at the
+    /// end. At least one observation must remain.
+    pub fn evict_front(&mut self, k: usize) -> crate::Result<()> {
+        self.evict_front_deferred(k)?;
+        if k > 0 {
+            self.refresh();
+        }
+        Ok(())
+    }
+
+    /// [`Predictor::evict_front`] without the `α`/`σ̂_f²` refresh (see
+    /// [`Predictor::observe_scored_deferred`] for the contract) — the
+    /// window-enforcement path, which refreshes once after the whole
+    /// grow-then-shrink step.
+    pub(crate) fn evict_front_deferred(&mut self, k: usize) -> crate::Result<()> {
+        if k == 0 {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            k < self.t.len(),
+            "evict_front({k}) would leave no observations (n = {})",
+            self.t.len()
+        );
+        self.chol.shrink_front(k);
+        self.t.drain(..k);
+        self.y.drain(..k);
+        self.evictions.fetch_add(k, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Cold re-evaluation of the **current** window at the cached ϑ̂:
+    /// re-assemble `K̃` and refactorise from scratch (`O(n³)`), without
+    /// touching the live state. The periodic window refresh uses this to
+    /// wash out accumulated `O(n²)`-maintenance rounding drift — compute
+    /// first, then commit via [`Predictor::adopt_eval`], so a multi-model
+    /// refresh can be all-or-nothing.
+    pub fn refit_eval(&self, ctx: &ExecutionContext) -> crate::Result<ProfiledEval> {
+        let k = assemble_cov_with(&self.model, &self.t, &self.theta, ctx);
+        ProfiledEval::from_cov_with(k, &self.y, ctx)
+    }
+
+    /// Swap in a freshly computed evaluation of the current window (from
+    /// [`Predictor::refit_eval`]): replaces the factor, `α` and `σ̂_f²`.
+    pub fn adopt_eval(&mut self, ev: ProfiledEval) {
+        assert_eq!(ev.chol.dim(), self.t.len(), "refreshed factor/data size mismatch");
+        self.chol = ev.chol;
+        self.alpha = ev.alpha;
+        self.sigma_f_hat2 = ev.sigma_f_hat2;
     }
 
     /// Recompute `α = K̃⁻¹y` and `σ̂_f² = yᵀα/n` from the current factor
@@ -497,6 +624,82 @@ mod tests {
         assert!(good > bad, "at-mean score {good} must beat 10σ-off score {bad}");
         // scoring mutates nothing
         assert_eq!(p.stats().queries_served, 1); // only the predict above
+    }
+
+    #[test]
+    fn evict_matches_cold_fit_on_reduced_data() {
+        let (mut p, t, y) = trained_predictor(30, 47);
+        // evict the oldest point and an interior point
+        p.evict(0).unwrap();
+        p.evict(10).unwrap();
+        let mut kept_t: Vec<f64> = t[1..].to_vec();
+        let mut kept_y: Vec<f64> = y[1..].to_vec();
+        kept_t.remove(10);
+        kept_y.remove(10);
+        assert_eq!(p.t(), kept_t.as_slice());
+        assert_eq!(p.y(), kept_y.as_slice());
+        let cold = Predictor::fit(
+            paper_k1(0.1),
+            &kept_t,
+            &kept_y,
+            &PaperK1::truth(),
+            &ExecutionContext::seq(),
+        )
+        .unwrap();
+        assert!(
+            (p.sigma_f_hat2() - cold.sigma_f_hat2()).abs() < 1e-10 * cold.sigma_f_hat2(),
+            "σ̂² {} vs cold {}",
+            p.sigma_f_hat2(),
+            cold.sigma_f_hat2()
+        );
+        assert!((p.lnp() - cold.lnp()).abs() < 1e-8 * cold.lnp().abs());
+        let q: Vec<f64> = (0..12).map(|i| 0.7 + 2.3 * i as f64).collect();
+        let a = p.predict_batch(&q, &ExecutionContext::seq());
+        let b = cold.predict_batch(&q, &ExecutionContext::seq());
+        for i in 0..q.len() {
+            assert!((a.mean[i] - b.mean[i]).abs() < 1e-8, "mean[{i}]");
+            assert!((a.sd[i] - b.sd[i]).abs() < 1e-8, "sd[{i}]");
+        }
+        let s = p.stats();
+        assert_eq!(s.n_train, 28);
+        assert_eq!(s.observations_evicted, 2);
+        // guards: out-of-range and last-observation evictions are errors
+        assert!(p.evict(28).is_err());
+        assert!(p.evict_front(28).is_err());
+        // evict_front matches repeated evict(0) to rounding
+        let (mut a, _, _) = trained_predictor(25, 53);
+        let (mut b, _, _) = trained_predictor(25, 53);
+        a.evict_front(5).unwrap();
+        for _ in 0..5 {
+            b.evict(0).unwrap();
+        }
+        assert_eq!(a.n(), b.n());
+        assert!((a.lnp() - b.lnp()).abs() < 1e-9 * b.lnp().abs());
+        assert_eq!(a.stats().observations_evicted, 5);
+    }
+
+    #[test]
+    fn refit_eval_washes_out_maintenance_drift() {
+        let (mut p, t, _) = trained_predictor(30, 59);
+        // grow and shrink a few times, then refresh from scratch
+        for j in 0..4 {
+            p.observe(t[t.len() - 1] + 1.0 + j as f64, 0.1 * j as f64).unwrap();
+        }
+        p.evict_front(4).unwrap();
+        let ev = p.refit_eval(&ExecutionContext::seq()).unwrap();
+        p.adopt_eval(ev);
+        // the refreshed state is exactly a cold fit of the live window
+        let (wt, wy) = (p.t().to_vec(), p.y().to_vec());
+        let cold =
+            Predictor::fit(paper_k1(0.1), &wt, &wy, &PaperK1::truth(), &ExecutionContext::seq())
+                .unwrap();
+        assert_eq!(p.sigma_f_hat2(), cold.sigma_f_hat2());
+        assert_eq!(p.lnp(), cold.lnp());
+        let q = [3.3, 17.9];
+        let a = p.predict_batch(&q, &ExecutionContext::seq());
+        let b = cold.predict_batch(&q, &ExecutionContext::seq());
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.sd, b.sd);
     }
 
     #[test]

@@ -109,17 +109,50 @@
 //! (LINPACK-style sweeps).
 //!
 //! [`coordinator::ServeSession`] is a **router over N cached
-//! predictors**, built from a tournament (`from_tournament`) or a single
-//! training run (`from_training` / `train_and_serve`): queries go to the
-//! evidence winner by default (bit-identical to single-model serving),
-//! or to the roster under evidence-weighted model averaging
+//! predictors**, built from a tournament (`from_tournament`), a single
+//! training run (`from_training` / `train_and_serve`), or persisted
+//! artifacts on disk (`from_artifacts`): queries go to the evidence
+//! winner by default (bit-identical to single-model serving), or to the
+//! roster under evidence-weighted model averaging
 //! ([`coordinator::RouteMode`]); streamed `observe`s fan out to every
 //! live factor; each appended point is first scored with each model's
 //! log predictive density and a windowed per-model drift monitor
 //! **flags retraining** when the log-score degrades past a threshold
 //! ([`coordinator::ServeSession::needs_retrain`]).
+//!
+//! The session runs a **self-healing bounded-memory lifecycle** —
+//! *grow → evict → refresh → retrain* (state machine in
+//! [`coordinator::serve`]):
+//!
+//! * **grow** — `O(n²)` factor extension per absorbed point;
+//! * **evict** — with a [`coordinator::WindowPolicy`] attached, points
+//!   past `max_points` delete the oldest observation from every slot via
+//!   the bordered-complement restore ([`linalg::Chol::remove_row`] /
+//!   [`linalg::Chol::shrink_front`]: the deleted column seeds a rank-1
+//!   update sweep on the trailing block), so memory is hard-bounded;
+//! * **refresh** — every `refresh_every` evictions the factors are
+//!   refactorised cold from the live window (all-or-nothing across
+//!   slots), washing out accumulated rank-1 rounding drift;
+//! * **retrain** — when drift latches, [`coordinator::ServeSession::retrain`]
+//!   reruns training on the window (warm-started from the incumbent ϑ̂),
+//!   recomputes each Laplace evidence and **hot-swaps** slots, ranking
+//!   and drift baselines without dropping the session.
+//!
+//! **Persistence** closes the loop: [`coordinator::TrainedModel`]
+//! `save`/`load` write a versioned little-endian binary (spec + data +
+//! ϑ̂ + packed factor with its maintained logdet + α + evidence; no
+//! external deps) that restores **bit-identically**, so a serving
+//! process restarts in `O(n²)` — zero likelihood evaluations before its
+//! first prediction, asserted via [`gp::profiled::eval_count`]. CLI:
+//! `gpfast train --save-model m.gpfm` / `gpfast serve --load-model
+//! m.gpfm`.
+//!
 //! `examples/streaming_tidal.rs` replays the tidal series as an arriving
-//! stream and verifies streamed serving ≡ from-scratch refit to 1e-8.
+//! stream through a window policy and verifies windowed serving ≡
+//! from-scratch refit of the live window to 1e-8, then restarts serving
+//! from the saved artifact; `rust/tests/soak_serving.rs` is the
+//! long-haul soak (3× window capacity, per-step cold-refit invariants,
+//! drift-injected retrain recovery).
 //!
 //! ## Quick start
 //!

@@ -14,9 +14,15 @@
 //! across many queries and data arrivals, so [`Chol`] also supports
 //! `O(n²)` *incremental* maintenance: [`Chol::extend`] appends one
 //! observation (bordered factorisation — one triangular solve plus a
-//! square root), and [`Chol::rank1_update`] / [`Chol::rank1_downdate`]
+//! square root), [`Chol::rank1_update`] / [`Chol::rank1_downdate`]
 //! apply `K ± xxᵀ` via Givens / hyperbolic sweeps (LINPACK
-//! `dchud`/`dchdd`). All three maintain the cached log-determinant.
+//! `dchud`/`dchdd`), and — the sliding-window direction —
+//! [`Chol::remove_row`] / [`Chol::shrink_front`] *delete* observations
+//! via the bordered-complement restore: the deleted point's subdiagonal
+//! column seeds a rank-1 update sweep on the trailing block, so the
+//! remaining factor is exactly the factor of the covariance with that
+//! row/column struck out. All of them maintain the cached
+//! log-determinant.
 //!
 //! ## Kernel structure and parallelism
 //!
@@ -106,6 +112,19 @@ impl Chol {
             logdet += k[(i, i)].ln();
         }
         Ok(Self { l: k, logdet: 2.0 * logdet })
+    }
+
+    /// Reassemble a factorisation from its raw parts — the persistence
+    /// path ([`crate::coordinator::TrainedModel`] save/load). The caller
+    /// guarantees `l` is a valid lower-triangular Cholesky factor (the
+    /// upper triangle is never read) and that `logdet` is its
+    /// log-determinant. `logdet` is taken verbatim rather than recomputed
+    /// because the incremental maintenance above accumulates it in a
+    /// specific order — restoring the stored value keeps a save→load
+    /// round trip bit-identical.
+    pub fn from_parts(l: Matrix, logdet: f64) -> Self {
+        assert_eq!(l.rows(), l.cols(), "factor must be square");
+        Self { l, logdet }
     }
 
     /// Dimension `n`.
@@ -261,38 +280,29 @@ impl Chol {
     pub fn rank1_update(&mut self, x: &mut [f64]) {
         let n = self.dim();
         assert_eq!(x.len(), n);
-        let c = self.l.cols();
-        let data = self.l.as_mut_slice();
-        for k in 0..n {
-            let lkk = data[k * c + k];
-            let r = (lkk * lkk + x[k] * x[k]).sqrt();
-            let co = r / lkk;
-            let si = x[k] / lkk;
-            data[k * c + k] = r;
-            for i in (k + 1)..n {
-                let lik = (data[i * c + k] + si * x[i]) / co;
-                data[i * c + k] = lik;
-                x[i] = co * x[i] - si * lik;
-            }
-        }
-        let mut logdet = 0.0;
-        for i in 0..n {
-            logdet += data[i * c + i].ln();
-        }
-        self.logdet = 2.0 * logdet;
+        rank1_update_block(&mut self.l, 0, x);
+        self.recompute_logdet();
     }
 
-    /// Rank-1 **downdate** in place: the factor of `K − x xᵀ` in `O(n²)`
+    /// Rank-1 **downdate**: the factor of `K − x xᵀ` in `O(n²)`
     /// (hyperbolic-rotation sweep). `x` is consumed as scratch.
     ///
-    /// Fails — leaving the factor partially downdated and unusable —
-    /// when `K − x xᵀ` is not positive definite; callers must treat the
-    /// error as fatal for this factor (refactor from scratch).
+    /// The error is **recoverable**: the sweep runs on a scratch copy and
+    /// only commits when every pivot stays positive *and* every computed
+    /// entry stays finite, so on failure the live factor (and its cached
+    /// log-determinant) are exactly what they were before the call. Two
+    /// failure modes are rejected: an indefinite downdate (`d ≤ 0` at
+    /// some pivot) and a near-singular trailing block, where a pivot is
+    /// still positive but so tiny that `1/cos` overflows the column —
+    /// committing that sweep would poison the factor with `inf`/`NaN`.
+    /// The reported `value` is the offending pivot's Schur complement
+    /// (possibly a tiny positive number in the near-singular case).
     pub fn rank1_downdate(&mut self, x: &mut [f64]) -> Result<(), CholError> {
         let n = self.dim();
         assert_eq!(x.len(), n);
-        let c = self.l.cols();
-        let data = self.l.as_mut_slice();
+        let mut scratch = self.l.clone();
+        let c = scratch.cols();
+        let data = scratch.as_mut_slice();
         for k in 0..n {
             let lkk = data[k * c + k];
             let d = lkk * lkk - x[k] * x[k];
@@ -305,16 +315,90 @@ impl Chol {
             data[k * c + k] = r;
             for i in (k + 1)..n {
                 let lik = (data[i * c + k] - si * x[i]) / co;
+                if !lik.is_finite() {
+                    return Err(CholError { pivot: k, value: d });
+                }
                 data[i * c + k] = lik;
                 x[i] = co * x[i] - si * lik;
             }
         }
+        self.l = scratch;
+        self.recompute_logdet();
+        Ok(())
+    }
+
+    /// Delete observation `i` from the factorisation in `O((n−i)²)` — the
+    /// arbitrary-index eviction primitive. Writing the factored matrix as
+    ///
+    /// ```text
+    /// L = [[L₁₁, 0,   0  ],        K = [[K₁₁, k₁,  K₃₁ᵀ],
+    ///      [l₂₁ᵀ, l₂₂, 0 ],             [k₁ᵀ, k₂₂, k₃₂ᵀ],
+    ///      [L₃₁, l₃₂, L₃₃]]             [K₃₁, k₃₂, K₃₃ ]]
+    /// ```
+    ///
+    /// with row `i` the middle block, the covariance with row/column `i`
+    /// struck out has the bordered-complement factor `[[L₁₁, 0], [L₃₁,
+    /// L̃₃₃]]` where `L̃₃₃L̃₃₃ᵀ = L₃₃L₃₃ᵀ + l₃₂l₃₂ᵀ` — i.e. the deleted
+    /// point's subdiagonal column seeds one rank-1 **update** sweep on
+    /// the trailing block (updates cannot fail, so deletion is
+    /// infallible). Rows above `i` are untouched; the cached logdet is
+    /// recomputed from the new diagonal.
+    pub fn remove_row(&mut self, i: usize) {
+        let n = self.dim();
+        assert!(i < n, "remove_row({i}) out of range for dim {n}");
+        let mut x: Vec<f64> = ((i + 1)..n).map(|r| self.l[(r, i)]).collect();
+        let mut out = Matrix::zeros(n - 1, n - 1);
+        for r in 0..i {
+            out.row_mut(r)[..=r].copy_from_slice(&self.l.row(r)[..=r]);
+        }
+        for r in (i + 1)..n {
+            let nr = r - 1;
+            let src = self.l.row(r);
+            out.row_mut(nr)[..i].copy_from_slice(&src[..i]);
+            // old columns i+1..=r land at i..=nr (one step left)
+            out.row_mut(nr)[i..=nr].copy_from_slice(&src[i + 1..=r]);
+        }
+        rank1_update_block(&mut out, i, &mut x);
+        self.l = out;
+        self.recompute_logdet();
+    }
+
+    /// Drop the `k` **oldest** observations (the leading rows/columns) in
+    /// `O(k·(n−k)²)` — the sliding-window eviction primitive. The kept
+    /// trailing block `L₂₂` satisfies `K₂₂ = L₂₁L₂₁ᵀ + L₂₂L₂₂ᵀ`, so the
+    /// factor of the trailing covariance is `L₂₂` updated by one rank-1
+    /// sweep per dropped column of `L₂₁` (order-independent up to
+    /// rounding; cannot fail). Equivalent to `k` calls of
+    /// [`Chol::remove_row`]`(0)` with a single storage copy.
+    pub fn shrink_front(&mut self, k: usize) {
+        let n = self.dim();
+        assert!(k <= n, "shrink_front({k}) out of range for dim {n}");
+        if k == 0 {
+            return;
+        }
+        let m = n - k;
+        let mut out = Matrix::zeros(m, m);
+        for r in 0..m {
+            out.row_mut(r)[..=r].copy_from_slice(&self.l.row(r + k)[k..=r + k]);
+        }
+        for j in 0..k {
+            let mut x: Vec<f64> = (k..n).map(|r| self.l[(r, j)]).collect();
+            rank1_update_block(&mut out, 0, &mut x);
+        }
+        self.l = out;
+        self.recompute_logdet();
+    }
+
+    /// Refresh the cached log-determinant from the factor diagonal.
+    fn recompute_logdet(&mut self) {
+        let n = self.dim();
+        let c = self.l.cols();
+        let data = self.l.as_slice();
         let mut logdet = 0.0;
         for i in 0..n {
             logdet += data[i * c + i].ln();
         }
         self.logdet = 2.0 * logdet;
-        Ok(())
     }
 
     /// Explicit inverse `K⁻¹ = L⁻ᵀ L⁻¹` (dpotri-style, serial).
@@ -438,6 +522,33 @@ impl Chol {
         }
         w.mirror_upper_to_lower();
         w
+    }
+}
+
+/// LINPACK `dchud` Givens sweep on the trailing block of a lower factor:
+/// replaces `L[off.., off..]` with the factor of
+/// `L[off.., off..]·L[off.., off..]ᵀ + x xᵀ`, leaving rows/columns before
+/// `off` untouched. `x` (length `rows − off`) is consumed as scratch.
+/// Shared by [`Chol::rank1_update`] (`off = 0`) and the deletion
+/// primitives, whose update acts only on the block trailing the removed
+/// row. Cannot fail: every new pivot is `√(l²+x²) ≥ l > 0`.
+fn rank1_update_block(l: &mut Matrix, off: usize, x: &mut [f64]) {
+    let n = l.rows();
+    debug_assert_eq!(x.len(), n - off);
+    let c = l.cols();
+    let data = l.as_mut_slice();
+    for k in off..n {
+        let xk = x[k - off];
+        let lkk = data[k * c + k];
+        let r = (lkk * lkk + xk * xk).sqrt();
+        let co = r / lkk;
+        let si = xk / lkk;
+        data[k * c + k] = r;
+        for i in (k + 1)..n {
+            let lik = (data[i * c + k] + si * x[i - off]) / co;
+            data[i * c + k] = lik;
+            x[i - off] = co * x[i - off] - si * lik;
+        }
     }
 }
 
@@ -875,6 +986,133 @@ mod tests {
         let err = ch.rank1_downdate(&mut x).unwrap_err();
         assert_eq!(err.pivot, 0);
         assert!(err.value <= 0.0);
+    }
+
+    /// Regression for the recoverable-downdate guard: a failed downdate
+    /// must leave the factor bitwise untouched, including the
+    /// near-singular case where every pivot stays positive but the
+    /// hyperbolic rotation overflows the column (`1/cos → ∞`) — the old
+    /// in-place sweep would commit `inf` entries and NaN-poison every
+    /// later solve.
+    #[test]
+    fn rank1_downdate_failure_leaves_factor_untouched() {
+        // near-singular trailing block: pivot d = 1 − (1−2⁻⁵³)² ≈ 2.2e−16
+        // stays positive, but the huge subdiagonal entry divided by
+        // co ≈ 1.5e−8 overflows to inf
+        let l = Matrix::from_rows(&[&[1.0, 0.0], &[1e305, 1.0]]);
+        let logdet0 = 0.0; // 2·(ln 1 + ln 1)
+        let mut ch = Chol::from_parts(l.clone(), logdet0);
+        let mut x = vec![1.0 - f64::EPSILON / 2.0, 0.0];
+        let err = ch.rank1_downdate(&mut x).unwrap_err();
+        assert_eq!(err.pivot, 0);
+        assert!(err.value > 0.0, "near-singular pivot is positive: {}", err.value);
+        assert_eq!(
+            ch.factor_matrix().max_abs_diff(&l),
+            0.0,
+            "failed downdate must not mutate the factor"
+        );
+        assert_eq!(ch.logdet(), logdet0);
+
+        // indefinite case: also untouched (was: partially swept)
+        let k = random_spd(40, &mut Xoshiro256::seed_from_u64(97));
+        let orig = Chol::factor(&k).unwrap();
+        let mut ch = orig.clone();
+        // x = 10·(first column of L) makes the first pivot negative —
+        // caught at k = 0 after no scratch commit
+        let mut x: Vec<f64> = (0..40).map(|i| 10.0 * orig.factor_matrix()[(i, 0)]).collect();
+        assert!(ch.rank1_downdate(&mut x).is_err());
+        assert_eq!(ch.factor_matrix().max_abs_diff(orig.factor_matrix()), 0.0);
+        assert_eq!(ch.logdet(), orig.logdet());
+    }
+
+    #[test]
+    fn remove_row_matches_cold_factor_of_reduced_matrix() {
+        let mut rng = Xoshiro256::seed_from_u64(73);
+        for &n in &[2usize, 5, 30, 90] {
+            for &i in &[0usize, 1, n / 2, n - 1] {
+                let k = random_spd(n, &mut rng);
+                let mut ch = Chol::factor(&k).unwrap();
+                ch.remove_row(i);
+                // cold factor of K with row/column i struck out
+                let mut red = Matrix::zeros(n - 1, n - 1);
+                for r in 0..n - 1 {
+                    for c in 0..n - 1 {
+                        let (ro, co) = (r + (r >= i) as usize, c + (c >= i) as usize);
+                        red[(r, c)] = k[(ro, co)];
+                    }
+                }
+                let cold = Chol::factor(&red).unwrap();
+                let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+                assert!(d < 1e-10, "n={n} i={i}: removed factor differs from cold by {d:.3e}");
+                assert!(
+                    (ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs().max(1.0),
+                    "n={n} i={i}: logdet {} vs {}",
+                    ch.logdet(),
+                    cold.logdet()
+                );
+                // the reduced factor actually solves the reduced system
+                let b: Vec<f64> = (0..n - 1).map(|_| rng.normal()).collect();
+                let x = ch.solve(&b);
+                let r = red.matvec(&x);
+                for j in 0..n - 1 {
+                    assert!((r[j] - b[j]).abs() < 1e-8, "residual {}", (r[j] - b[j]).abs());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_front_matches_cold_factor_of_trailing_block() {
+        let mut rng = Xoshiro256::seed_from_u64(79);
+        for &(n, k) in &[(3usize, 1usize), (10, 3), (60, 20), (90, 89)] {
+            let big = random_spd(n, &mut rng);
+            let mut ch = Chol::factor(&big).unwrap();
+            ch.shrink_front(k);
+            assert_eq!(ch.dim(), n - k);
+            let m = n - k;
+            let mut tail = Matrix::zeros(m, m);
+            for r in 0..m {
+                for c in 0..m {
+                    tail[(r, c)] = big[(r + k, c + k)];
+                }
+            }
+            let cold = Chol::factor(&tail).unwrap();
+            let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+            assert!(d < 1e-10, "n={n} k={k}: shrunk factor differs from cold by {d:.3e}");
+            assert!(
+                (ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs().max(1.0)
+            );
+        }
+        // shrink_front(0) is a no-op; shrink_front(n) empties the factor
+        let k2 = random_spd(8, &mut rng);
+        let mut ch = Chol::factor(&k2).unwrap();
+        let before = ch.factor_matrix().clone();
+        ch.shrink_front(0);
+        assert_eq!(ch.factor_matrix().max_abs_diff(&before), 0.0);
+        ch.shrink_front(8);
+        assert_eq!(ch.dim(), 0);
+    }
+
+    /// Deleting the just-appended trailing row restores the original
+    /// factor (extend ∘ evict round trip at the `Chol` level).
+    #[test]
+    fn extend_then_remove_last_row_round_trips() {
+        let mut rng = Xoshiro256::seed_from_u64(83);
+        let big = random_spd(41, &mut rng);
+        let mut lead = Matrix::zeros(40, 40);
+        for i in 0..40 {
+            for j in 0..40 {
+                lead[(i, j)] = big[(i, j)];
+            }
+        }
+        let orig = Chol::factor(&lead).unwrap();
+        let mut ch = orig.clone();
+        let cross: Vec<f64> = (0..40).map(|i| big[(40, i)]).collect();
+        ch.extend(&cross, big[(40, 40)]).unwrap();
+        ch.remove_row(40);
+        let d = lower_diff(ch.factor_matrix(), orig.factor_matrix());
+        assert!(d < 1e-12, "extend→remove_row drifted by {d:.3e}");
+        assert!((ch.logdet() - orig.logdet()).abs() < 1e-10 * orig.logdet().abs().max(1.0));
     }
 
     /// The blocked multi-row TRSM reorders the per-entry sums relative to

@@ -57,6 +57,7 @@ fn run(args: &Args) -> gpfast::Result<()> {
     match args.command.as_deref() {
         Some("compare") => cmd_compare(args, &cfg),
         Some("train") => cmd_train(args, &cfg),
+        Some("serve") => cmd_serve(args, &cfg),
         Some("nested") => cmd_nested(args, &cfg),
         Some("synth") => cmd_synth(args, &cfg),
         Some("tidal") => cmd_tidal(args, &cfg),
@@ -64,7 +65,7 @@ fn run(args: &Args) -> gpfast::Result<()> {
         Some("predict") => cmd_predict(args, &cfg),
         Some("info") => cmd_info(args, &cfg),
         Some(other) => anyhow::bail!(
-            "unknown subcommand '{other}' (try: compare, train, nested, synth, tidal, realise, predict, info)"
+            "unknown subcommand '{other}' (try: compare, train, serve, nested, synth, tidal, realise, predict, info)"
         ),
         None => {
             println!("{USAGE}");
@@ -75,7 +76,7 @@ fn run(args: &Args) -> gpfast::Result<()> {
 
 const USAGE: &str = "gpfast — fast GP training (Moore et al., RSOS 2016 reproduction)
 
-usage: gpfast <compare|train|nested|synth|tidal|realise|predict|info> [flags]
+usage: gpfast <compare|train|serve|nested|synth|tidal|realise|predict|info> [flags]
 
 flags:
   --config <file.toml>     load run configuration
@@ -87,7 +88,11 @@ flags:
   --restarts <N>           multistart restarts [10]
   --nested                 verify compare with nested sampling
   --seed <N>               RNG seed
-  --out <path>             output file (csv/json)";
+  --out <path>             output file (csv/json)
+  --save-model <path>      train: persist the TrainedModel artifact
+  --load-model <p1[,p2…]>  serve: restart from persisted artifacts (O(n²))
+  --route winner|averaged  serve: routing policy [winner]
+  --n-star <N>             serve: prediction grid size [256]";
 
 /// Load `--data` CSV, else synthesise a Table-1 dataset of `--n` points.
 fn load_dataset(args: &Args, cfg: &RunConfig) -> gpfast::Result<Dataset> {
@@ -145,6 +150,70 @@ fn cmd_train(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
         res.n_evals, restarts, res.n_modes
     );
     println!("  wall     = {:.2} s", sw.elapsed_secs());
+    if let Some(path) = args.get("save-model") {
+        tm.save(Path::new(path), &data)?;
+        println!("  artifact = {path} (serve it with: gpfast serve --load-model {path})");
+    }
+    Ok(())
+}
+
+/// Restart serving from persisted artifacts: every factor comes back
+/// bit-identically from disk in `O(n²)`, so the session reaches its
+/// first prediction with **zero** profiled-likelihood evaluations — the
+/// counter delta is printed (and asserted in `rust/tests/persistence.rs`).
+fn cmd_serve(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    let spec_list = args.get("load-model").ok_or_else(|| {
+        anyhow::anyhow!("serve requires --load-model <artifact[,artifact…]> (see: train --save-model)")
+    })?;
+    let paths: Vec<PathBuf> =
+        spec_list.split(',').filter(|s| !s.is_empty()).map(PathBuf::from).collect();
+    let evals_before = gpfast::gp::profiled_eval_count();
+    let sw = Stopwatch::start();
+    let mut session = gpfast::coordinator::ServeSession::from_artifacts(&paths, cfg.exec())?;
+    if let Some(policy) = cfg.window_policy() {
+        session = session.with_window(policy);
+    }
+    match args.get("route").unwrap_or("winner") {
+        "winner" => {}
+        "averaged" => session = session.with_route(gpfast::coordinator::RouteMode::Averaged),
+        other => anyhow::bail!("--route expects winner|averaged, got '{other}'"),
+    }
+    let n = session.stats().n_train;
+    println!("serving {} model(s) restored from disk (n = {n}):", session.n_models());
+    for (name, w) in session.model_names().iter().zip(session.weights()) {
+        println!("  {name:14} posterior weight {w:.4}");
+    }
+    if let Some(policy) = session.window() {
+        println!(
+            "  window: max {} points, cold refresh every {} evictions",
+            policy.max_points, policy.refresh_every
+        );
+    }
+    // first prediction: a grid over the restored training span (the
+    // artifact loader guarantees a non-empty dataset)
+    let n_star = args.get_usize("n-star", 256)?;
+    let t = session.predictor().t();
+    anyhow::ensure!(!t.is_empty(), "restored session has no training points");
+    let (t0, t1) = (t[0], *t.last().unwrap());
+    let t_star: Vec<f64> = (0..n_star)
+        .map(|i| t0 + (t1 - t0) * i as f64 / (n_star.max(2) - 1) as f64)
+        .collect();
+    let pred = session.predict(&t_star);
+    let evals = gpfast::gp::profiled_eval_count() - evals_before;
+    println!(
+        "restored + served {} predictions in {:.3} s with {} likelihood evaluations",
+        n_star,
+        sw.elapsed_secs(),
+        evals
+    );
+    if let Some(out) = args.get("out") {
+        csv::write_columns(
+            Path::new(out),
+            &["t", "mean", "sd"],
+            &[&t_star, &pred.mean, &pred.sd],
+        )?;
+        println!("predictions written to {out}");
+    }
     Ok(())
 }
 

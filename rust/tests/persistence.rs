@@ -1,0 +1,286 @@
+//! Persistence round-trip suite for on-disk [`TrainedModel`] artifacts.
+//!
+//! Acceptance bar: save→load→predict is **bit-identical** to the
+//! in-memory predictor for every roster entrant; corrupt, truncated and
+//! version-mismatched files return clean errors (no panics); and a
+//! serving session restored via `ServeSession::from_artifacts` reaches
+//! its first prediction with **zero** profiled-likelihood evaluations —
+//! asserted through the process-global `gp::profiled::eval_count`.
+//!
+//! The eval counter is process-global, so the tests in this binary are
+//! serialised behind one mutex (cargo runs a file's tests on concurrent
+//! threads by default).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use gpfast::coordinator::{ModelSpec, NestedReport, ServeSession, TrainResult, TrainedModel};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::data::Dataset;
+use gpfast::evidence::LaplaceEvidence;
+use gpfast::gp::profiled;
+use gpfast::linalg::Matrix;
+use gpfast::priors::BoxPrior;
+use gpfast::runtime::ExecutionContext;
+
+/// Serialises the tests in this binary (shared global eval counter).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gpfast_artifact_{}_{tag}.bin", std::process::id()))
+}
+
+/// Build a deterministic TrainedModel for `spec` without running the
+/// optimiser: one profiled evaluation at the prior mid-point plus a
+/// hand-filled evidence block (persistence is about serialisation, not
+/// about evidence quality).
+fn make_artifact(spec: ModelSpec, data: &Dataset, ln_z: f64, with_nested: bool) -> TrainedModel {
+    let sigma_n = 0.1;
+    let model = spec.build(sigma_n);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let mut theta: Vec<f64> =
+        prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+    prior.project(&mut theta);
+    let ev = profiled::eval(&model, &data.t, &data.y, &theta).expect("mid-prior eval");
+    let m = model.dim();
+    TrainedModel {
+        spec,
+        sigma_n,
+        param_names: model.kernel.names(),
+        train: TrainResult {
+            theta_hat: theta,
+            lnp_peak: ev.lnp,
+            sigma_f_hat2: ev.sigma_f_hat2,
+            peak_eval: ev,
+            converged: true,
+            n_evals: 42,
+            n_modes: 1,
+            restart_values: vec![-1.5, -2.25, -7.0],
+        },
+        evidence: LaplaceEvidence {
+            ln_z,
+            ln_p_peak: -10.0,
+            ln_det_h: 3.25,
+            ln_volume: 1.5,
+            marg_const: 0.75,
+            sigma: vec![0.125; m],
+            covariance: Matrix::eye(m),
+            suspect: false,
+        },
+        nested: with_nested.then(|| NestedReport {
+            ln_z: ln_z - 0.5,
+            ln_z_err: 0.25,
+            n_evals: 20000,
+            information: 7.5,
+            wall_secs: 12.0,
+        }),
+        warm_started: with_nested,
+        restarts: 3,
+        wall_secs: 1.25,
+    }
+}
+
+/// Every roster entrant round-trips bit-identically: all scalar fields,
+/// the packed factor (via lnp/logdet), α, and — the serving acceptance —
+/// the first prediction of the reloaded predictor.
+#[test]
+fn save_load_round_trip_is_bit_identical_for_every_roster_entrant() {
+    let _guard = lock();
+    let data = table1_dataset(24, 0.1, 901);
+    let exec = ExecutionContext::seq();
+    let specs = [
+        ModelSpec::K1,
+        ModelSpec::K2,
+        ModelSpec::K3,
+        ModelSpec::WendlandSe,
+        ModelSpec::WendlandM32,
+        ModelSpec::WendlandM52,
+    ];
+    for (i, spec) in specs.into_iter().enumerate() {
+        let name = spec.name();
+        let tm = make_artifact(spec, &data, -10.0 - i as f64, i % 2 == 0);
+        let path = tmp_path(name);
+        tm.save(&path, &data).expect("save");
+        let (tm2, data2) = TrainedModel::load(&path).expect("load");
+        let _ = std::fs::remove_file(&path);
+        // dataset round trip
+        assert_eq!(data2.t, data.t, "{name}: t");
+        assert_eq!(data2.y, data.y, "{name}: y");
+        assert_eq!(data2.label, data.label, "{name}: label");
+        // spec + scalars
+        assert_eq!(tm2.spec, tm.spec, "{name}");
+        assert_eq!(tm2.sigma_n, tm.sigma_n);
+        assert_eq!(tm2.param_names, tm.param_names);
+        assert_eq!(tm2.train.theta_hat, tm.train.theta_hat);
+        assert_eq!(tm2.train.lnp_peak, tm.train.lnp_peak);
+        assert_eq!(tm2.train.sigma_f_hat2, tm.train.sigma_f_hat2);
+        assert_eq!(tm2.train.converged, tm.train.converged);
+        assert_eq!(tm2.train.n_evals, tm.train.n_evals);
+        assert_eq!(tm2.train.n_modes, tm.train.n_modes);
+        assert_eq!(tm2.train.restart_values, tm.train.restart_values);
+        assert_eq!(tm2.train.peak_eval.lnp, tm.train.peak_eval.lnp);
+        assert_eq!(tm2.train.peak_eval.alpha, tm.train.peak_eval.alpha);
+        assert_eq!(
+            tm2.train.peak_eval.chol.logdet(),
+            tm.train.peak_eval.chol.logdet(),
+            "{name}: maintained logdet must restore verbatim"
+        );
+        // evidence + nested
+        assert_eq!(tm2.evidence.ln_z, tm.evidence.ln_z);
+        assert_eq!(tm2.evidence.sigma, tm.evidence.sigma);
+        assert_eq!(
+            tm2.evidence.covariance.max_abs_diff(&tm.evidence.covariance),
+            0.0
+        );
+        assert_eq!(tm2.evidence.suspect, tm.evidence.suspect);
+        assert_eq!(tm2.nested.is_some(), tm.nested.is_some());
+        if let (Some(a), Some(b)) = (&tm2.nested, &tm.nested) {
+            assert_eq!(a.ln_z, b.ln_z);
+            assert_eq!(a.n_evals, b.n_evals);
+        }
+        assert_eq!(tm2.warm_started, tm.warm_started);
+        assert_eq!(tm2.restarts, tm.restarts);
+        assert_eq!(tm2.wall_secs, tm.wall_secs);
+        // the serving acceptance: reloaded predictor serves the same bits
+        let p_mem = tm.predictor(&data).expect("in-memory predictor");
+        let p_disk = tm2.predictor(&data2).expect("reloaded predictor");
+        let t_star: Vec<f64> = (0..20).map(|q| 0.3 + 1.17 * q as f64).collect();
+        let a = p_mem.predict_batch(&t_star, &exec);
+        let b = p_disk.predict_batch(&t_star, &exec);
+        assert_eq!(a.mean, b.mean, "{name}: reloaded means must be bit-identical");
+        assert_eq!(a.sd, b.sd, "{name}: reloaded sds must be bit-identical");
+        assert_eq!(p_mem.lnp(), p_disk.lnp(), "{name}: lnp");
+        assert_eq!(p_mem.sigma_f_hat2(), p_disk.sigma_f_hat2(), "{name}: σ̂²");
+    }
+}
+
+/// A session restored from disk reaches its first prediction with zero
+/// profiled-likelihood evaluations, and serves bit-identically to the
+/// in-memory router over the same artifacts.
+#[test]
+fn from_artifacts_serves_first_prediction_with_zero_evals() {
+    let _guard = lock();
+    let data = table1_dataset(24, 0.1, 907);
+    let tm_a = make_artifact(ModelSpec::K1, &data, -10.0, false);
+    let tm_b = make_artifact(ModelSpec::K2, &data, -12.0, false);
+    let path_a = tmp_path("session_k1");
+    let path_b = tmp_path("session_k2");
+    tm_a.save(&path_a, &data).unwrap();
+    tm_b.save(&path_b, &data).unwrap();
+    let mem = ServeSession::from_tournament(
+        &[tm_a, tm_b],
+        &data,
+        ExecutionContext::seq(),
+    )
+    .unwrap();
+    let t_star: Vec<f64> = (0..32).map(|q| 0.1 + 0.77 * q as f64).collect();
+    let want = mem.predict(&t_star);
+
+    // ---- the counter-gated leg: load + first predict, no evaluations
+    let evals_before = profiled::eval_count();
+    let restored =
+        ServeSession::from_artifacts(&[&path_a, &path_b], ExecutionContext::seq()).unwrap();
+    let got = restored.predict(&t_star);
+    assert_eq!(
+        profiled::eval_count() - evals_before,
+        0,
+        "restart-from-artifact must not pay any likelihood evaluation"
+    );
+    assert_eq!(restored.n_models(), 2);
+    assert_eq!(restored.spec().name(), "k1", "stored evidence must rank the router");
+    assert_eq!(got.mean, want.mean, "restored session must serve identical bits");
+    assert_eq!(got.sd, want.sd);
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+
+    // mismatched datasets across artifacts are rejected
+    let other = table1_dataset(24, 0.1, 911);
+    let tm_c = make_artifact(ModelSpec::K1, &other, -9.0, false);
+    let path_c = tmp_path("session_other");
+    tm_c.save(&path_c, &other).unwrap();
+    let tm_d = make_artifact(ModelSpec::K2, &data, -11.0, false);
+    let path_d = tmp_path("session_data");
+    tm_d.save(&path_d, &data).unwrap();
+    assert!(
+        ServeSession::from_artifacts(&[&path_c, &path_d], ExecutionContext::seq()).is_err(),
+        "artifacts from different datasets must not silently mix"
+    );
+    let _ = std::fs::remove_file(&path_c);
+    let _ = std::fs::remove_file(&path_d);
+}
+
+/// Corrupt, truncated and version-mismatched files all surface as clean
+/// errors — never panics, never huge allocations.
+#[test]
+fn corrupt_truncated_and_mismatched_files_error_cleanly() {
+    let _guard = lock();
+    let data = table1_dataset(16, 0.1, 913);
+    let tm = make_artifact(ModelSpec::K1, &data, -8.0, true);
+    let path = tmp_path("corrupt");
+    tm.save(&path, &data).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // truncation at a spread of byte lengths, including mid-header
+    for cut in [0usize, 4, 7, 8, 11, 12, 40, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        let err = TrainedModel::load(&path).expect_err(&format!("truncated at {cut}"));
+        assert!(!format!("{err}").is_empty());
+    }
+
+    // wrong magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    let err = TrainedModel::load(&path).expect_err("bad magic");
+    assert!(format!("{err}").contains("magic"), "unexpected: {err}");
+
+    // version mismatch
+    let mut bad = good.clone();
+    bad[8] = 0xEE; // version u32 LE starts at byte 8
+    std::fs::write(&path, &bad).unwrap();
+    let err = TrainedModel::load(&path).expect_err("version mismatch");
+    assert!(format!("{err}").contains("version"), "unexpected: {err}");
+
+    // a corrupted length field must be rejected before allocation
+    let mut bad = good.clone();
+    // dataset n (u64) sits right after magic+version+label; find the
+    // label length to locate it
+    let label_len = u32::from_le_bytes([good[12], good[13], good[14], good[15]]) as usize;
+    let n_off = 16 + label_len;
+    for b in &mut bad[n_off..n_off + 8] {
+        *b = 0xFF;
+    }
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "oversized length field accepted");
+
+    // an empty dataset (n = 0) is rejected up front — downstream code
+    // may index the first training point
+    let mut bad = good.clone();
+    for b in &mut bad[n_off..n_off + 8] {
+        *b = 0;
+    }
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "empty dataset accepted");
+
+    // trailing garbage is flagged
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 16]);
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "trailing bytes accepted");
+
+    // unknown spec name: corrupt the spec string in place (it follows
+    // the dataset block) — rejected with a model error, not a panic
+    let spec_off = n_off + 8 + 16 * data.len() + 4;
+    let mut bad = good.clone();
+    bad[spec_off] = b'z';
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TrainedModel::load(&path).is_err(), "unknown spec accepted");
+
+    // missing file
+    let _ = std::fs::remove_file(&path);
+    assert!(TrainedModel::load(&path).is_err());
+}

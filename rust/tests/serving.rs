@@ -170,6 +170,120 @@ fn streaming_tidal_predictions_match_from_scratch_refit() {
     assert_eq!(stats.observations_appended, full.t.len() - n0);
 }
 
+/// Deletion property: evict ∘ extend round-trips. Appending a row and
+/// deleting it restores the original factor; deleting the oldest row and
+/// re-appending its data at the end matches a cold factorisation of the
+/// cycled matrix (the sliding-window motion) — both ≤ 1e-10.
+#[test]
+fn evict_extend_round_trips_match_cold() {
+    let mut rng = Xoshiro256::seed_from_u64(107);
+    for &n in &[5usize, 40, 120] {
+        let big = random_spd(n + 1, &mut rng);
+        let mut lead = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                lead[(i, j)] = big[(i, j)];
+            }
+        }
+        // extend ∘ evict: append the border row, delete it again
+        let orig = Chol::factor(&lead).unwrap();
+        let mut ch = orig.clone();
+        let cross: Vec<f64> = (0..n).map(|i| big[(n, i)]).collect();
+        ch.extend(&cross, big[(n, n)]).unwrap();
+        ch.remove_row(n);
+        let d = lower_diff(ch.factor_matrix(), orig.factor_matrix());
+        assert!(d < 1e-10, "n={n}: extend→evict drifted {d:.3e}");
+        assert!((ch.logdet() - orig.logdet()).abs() < 1e-9 * orig.logdet().abs());
+
+        // evict ∘ extend: slide the window by one — drop row 0, append
+        // a new trailing row; cold reference is the cycled matrix
+        let mut ch = Chol::factor(&lead).unwrap();
+        ch.remove_row(0);
+        let cross: Vec<f64> = (1..n).map(|i| big[(n, i)]).collect();
+        ch.extend(&cross, big[(n, n)]).unwrap();
+        let mut cycled = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let (io, jo) = (if i < n - 1 { i + 1 } else { n }, if j < n - 1 { j + 1 } else { n });
+                cycled[(i, j)] = big[(io, jo)];
+            }
+        }
+        let cold = Chol::factor(&cycled).unwrap();
+        let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+        assert!(d < 1e-10, "n={n}: evict→extend drifted {d:.3e} from the cold cycled factor");
+        assert!((ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs());
+    }
+}
+
+/// Deletion property: arbitrary-index `remove_row` equals a cold refit
+/// of the matrix with that row/column struck out, on random SPD
+/// matrices, including repeated deletions at mixed indices.
+#[test]
+fn arbitrary_index_remove_row_matches_refit() {
+    let mut rng = Xoshiro256::seed_from_u64(109);
+    for &n in &[6usize, 35, 100] {
+        let k = random_spd(n, &mut rng);
+        let mut ch = Chol::factor(&k).unwrap();
+        // delete three rows at awkward indices, tracking the survivors
+        let mut kept: Vec<usize> = (0..n).collect();
+        for &del in &[0usize, n / 2, kept.len() - 3] {
+            ch.remove_row(del);
+            kept.remove(del);
+        }
+        let m = kept.len();
+        let mut red = Matrix::zeros(m, m);
+        for r in 0..m {
+            for c in 0..m {
+                red[(r, c)] = k[(kept[r], kept[c])];
+            }
+        }
+        let cold = Chol::factor(&red).unwrap();
+        let d = lower_diff(ch.factor_matrix(), cold.factor_matrix());
+        assert!(d < 1e-10, "n={n}: 3-deletion factor drifted {d:.3e}");
+        assert!(
+            (ch.logdet() - cold.logdet()).abs() < 1e-9 * cold.logdet().abs().max(1.0),
+            "n={n}: logdet {} vs {}",
+            ch.logdet(),
+            cold.logdet()
+        );
+    }
+}
+
+/// The eviction path is scalar and must be bit-identical for any thread
+/// budget: the same evict/extend sequence under a serial and a
+/// max-thread ExecutionContext yields byte-equal factors, α-state and
+/// predictions (ci.sh runs the whole suite under GPFAST_THREADS=1 and
+/// max on top of this in-process check).
+#[test]
+fn eviction_path_is_bit_identical_across_thread_budgets() {
+    let run = |ctx: ExecutionContext| {
+        let full = generate_tidal(&TidalConfig { n: 140, ..TidalConfig::six_lunar_months(5) })
+            .demean();
+        let theta = vec![4.5, 12.42f64.ln(), 0.0];
+        let mut p =
+            Predictor::fit(paper_k1(0.1), &full.t[..100], &full.y[..100], &theta, &ctx).unwrap();
+        for i in 100..140 {
+            p.observe(full.t[i], full.y[i]).unwrap();
+            if p.n() > 110 {
+                p.evict(0).unwrap();
+            }
+        }
+        p.evict(17).unwrap();
+        p.evict_front(3).unwrap();
+        let probe: Vec<f64> = (0..24).map(|i| full.t[139] + 0.5 * (i + 1) as f64).collect();
+        let pred = p.predict_batch(&probe, &ctx);
+        (pred.mean, pred.sd, p.chol().factor_matrix().clone(), p.lnp(), p.sigma_f_hat2())
+    };
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let (m1, s1, f1, l1, v1) = run(ExecutionContext::seq());
+    let (mx, sx, fx, lx, vx) = run(ExecutionContext::new(threads.max(2)));
+    assert_eq!(m1, mx, "eviction-path means diverge across thread budgets");
+    assert_eq!(s1, sx, "eviction-path sds diverge across thread budgets");
+    assert_eq!(l1, lx);
+    assert_eq!(v1, vx);
+    assert_eq!(lower_diff(&f1, &fx), 0.0, "eviction-path factors diverge");
+}
+
 /// The cached path and thread budget must not change results: a batch
 /// through a ServeSession equals the pointwise eq.-2.1 reference for any
 /// thread count.

@@ -1,0 +1,167 @@
+//! Bench: the numerical-health tier — what robustness costs.
+//!
+//! Three questions, answered on the dense k₁ Gram matrix `K̃ = K + σ_n²I`
+//! at the paper's truth hyperparameters:
+//!
+//! * **jitter ladder overhead on clean data** — the escalation entry
+//!   point ([`ProfiledEval::from_cov_with`], whose rung 0 is the
+//!   recoverable factorisation) vs the pre-ladder arithmetic (plain
+//!   `Chol::factor_owned_with` + solve). On a PD matrix the ladder takes
+//!   zero rungs, so this measures pure bookkeeping (an `O(n)` saved
+//!   diagonal) and must stay ≈ 1×.
+//! * **LDLᵀ vs LLᵀ wall** — the diagonal-pivoted fallback factorisation
+//!   ([`Ldlt::factor`]) against the blocked SIMD Cholesky. LDLᵀ is the
+//!   last-rung diagnosis tool, not a hot path; this records how much
+//!   slower the sequential reference loop is.
+//! * **condition-estimate cost** — [`Chol::cond_1est`] (two Hager
+//!   1-norm estimates, `O(n²)` per iteration) relative to the `O(n³)`
+//!   factorisation it piggybacks on; the serving layer probes it on
+//!   every cold refresh, so it must be a small fraction of the refresh.
+//!
+//! Appends a `robustness` section to **`BENCH_perf.json`** (merging with
+//! whatever sections other benches wrote). Row schema:
+//!
+//! * `jitter_ladder`: `{n, threads, ladder_seconds, plain_seconds,
+//!   overhead}` — `overhead = ladder/plain`;
+//! * `ldlt`: `{n, threads, ldlt_seconds, llt_seconds, ratio}` —
+//!   `ratio = ldlt/llt`;
+//! * `cond_est`: `{n, threads, cond_seconds, factor_seconds, fraction}`
+//!   — `fraction = cond/factor`.
+//!
+//! `cargo bench --bench robustness`; set `GPFAST_BENCH_QUICK=1` for the
+//! ci.sh smoke run (small n).
+
+use gpfast::gp::{assemble_cov_with, profiled::ProfiledEval};
+use gpfast::kernels::{paper_k1, PaperK1};
+use gpfast::linalg::{Chol, Ldlt};
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::{timer::human_time, Json, Table, TimingStats};
+
+fn main() {
+    let ctx = ExecutionContext::from_env();
+    let threads = ctx.threads();
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let sizes: Vec<usize> = if quick { vec![128, 256] } else { vec![500, 1000, 1968] };
+    println!("(thread budget: {threads}{})\n", if quick { ", quick mode" } else { "" });
+    let mut rows: Vec<Json> = Vec::new();
+    let theta = PaperK1::truth();
+    let model = paper_k1(0.1);
+
+    println!("== jitter-ladder overhead on clean (PD) data ==");
+    let mut table = Table::new(vec!["n", "ladder", "plain", "overhead"]);
+    for &n in &sizes {
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let y: Vec<f64> = t.iter().map(|&x| (x * 0.51).sin()).collect();
+        let k = assemble_cov_with(&model, &t, &theta, &ctx);
+        let reps = if n >= 1968 { 2 } else { 3 };
+        // both closures clone the O(n²) covariance; the ladder path goes
+        // through the full escalation entry point (rung 0 on PD data),
+        // the plain path is the pre-ladder arithmetic
+        let ladder = TimingStats::measure(1, reps, || {
+            let ev = ProfiledEval::from_cov_with(k.clone(), &y, &ctx).unwrap();
+            assert_eq!(ev.jitter, 0.0, "clean data took a ladder rung");
+        });
+        let plain = TimingStats::measure(1, reps, || {
+            let ch = Chol::factor_owned_with(k.clone(), &ctx).unwrap();
+            let _ = ch.solve(&y);
+        });
+        let overhead = ladder.min() / plain.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(ladder.min()),
+            human_time(plain.min()),
+            format!("{overhead:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "jitter_ladder".into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("ladder_seconds", ladder.min().into()),
+            ("plain_seconds", plain.min().into()),
+            ("overhead", overhead.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    println!("\n== LDLᵀ fallback vs blocked LLᵀ ==");
+    let mut table = Table::new(vec!["n", "ldlt", "llt", "ratio"]);
+    for &n in &sizes {
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let k = assemble_cov_with(&model, &t, &theta, &ctx);
+        let reps = if n >= 1968 { 2 } else { 3 };
+        let ldlt = TimingStats::measure(1, reps, || {
+            let f = Ldlt::factor(&k);
+            assert!(f.min_d() > 0.0, "PD matrix judged indefinite");
+        });
+        let llt = TimingStats::measure(1, reps, || {
+            let _ = Chol::factor_with(&k, &ctx).unwrap();
+        });
+        let ratio = ldlt.min() / llt.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(ldlt.min()),
+            human_time(llt.min()),
+            format!("{ratio:.1}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "ldlt".into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("ldlt_seconds", ldlt.min().into()),
+            ("llt_seconds", llt.min().into()),
+            ("ratio", ratio.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    println!("\n== condition estimate (Hager 1-norm) vs factorisation ==");
+    let mut table = Table::new(vec!["n", "cond_1est", "factor", "fraction"]);
+    for &n in &sizes {
+        let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let k = assemble_cov_with(&model, &t, &theta, &ctx);
+        let ch = Chol::factor_with(&k, &ctx).unwrap();
+        let reps = if n >= 1968 { 2 } else { 3 };
+        let cond = TimingStats::measure(1, reps, || {
+            let c = ch.cond_1est();
+            assert!(c.is_finite() && c >= 1.0, "bad condition estimate {c}");
+        });
+        let factor = TimingStats::measure(1, reps, || {
+            let _ = Chol::factor_owned_with(k.clone(), &ctx).unwrap();
+        });
+        let fraction = cond.min() / factor.min();
+        table.add_row(vec![
+            format!("{n}"),
+            human_time(cond.min()),
+            human_time(factor.min()),
+            format!("{:.0}%", fraction * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "cond_est".into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("cond_seconds", cond.min().into()),
+            ("factor_seconds", factor.min().into()),
+            ("fraction", fraction.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    // merge the robustness section into BENCH_perf.json
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections = doc
+        .get("sections")
+        .and_then(|s| s.as_obj().cloned())
+        .unwrap_or_default();
+    sections.insert("robustness".to_string(), Json::Arr(rows));
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), threads.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("\nrobustness section merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

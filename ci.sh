@@ -33,13 +33,23 @@ echo "== serving-lifecycle soak (quick mode, both thread settings) =="
 GPFAST_THREADS=1 cargo test -q --test soak_serving
 GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q --test soak_serving
 
-echo "== quick-bench smoke: micro-kernel gflops + tournament + serve recorded in BENCH_perf.json =="
-# Small-n sweeps of the perf, tournament and serve benches so the
-# BENCH_perf.json trajectory is refreshed on every gate run; the
-# full-size sweeps stay manual `cargo bench --bench perf|tournament|serve`.
+echo "== fault-injection recovery soak (quick mode, both thread settings) =="
+# The numerical-health gate: a FaultPlan-corrupted stream (near-dups,
+# huge outliers, non-finite points) through the windowed router must
+# never panic, never serve a non-finite value, and recover via
+# quarantine → retrain re-entry. (The #[ignore]d long-haul variant stays
+# manual: `cargo test --release -- --ignored`.)
+GPFAST_THREADS=1 cargo test -q --test soak_faults
+GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" cargo test -q --test soak_faults
+
+echo "== quick-bench smoke: micro-kernel gflops + tournament + serve + robustness recorded in BENCH_perf.json =="
+# Small-n sweeps of the perf, tournament, serve and robustness benches so
+# the BENCH_perf.json trajectory is refreshed on every gate run; the
+# full-size sweeps stay manual `cargo bench --bench <name>`.
 GPFAST_BENCH_QUICK=1 cargo bench --bench perf
 GPFAST_BENCH_QUICK=1 cargo bench --bench tournament
 GPFAST_BENCH_QUICK=1 cargo bench --bench serve
+GPFAST_BENCH_QUICK=1 cargo bench --bench robustness
 if command -v python3 >/dev/null 2>&1; then
     python3 - <<'EOF'
 import json, sys
@@ -61,7 +71,16 @@ if not all("evict_seconds" in r for r in rows if r.get("kind") == "evict"):
 if not all("load_seconds" in r and "retrain_seconds" in r
            for r in rows if r.get("kind") == "persistence"):
     sys.exit("FAIL: serve/persistence rows missing load/retrain fields")
-print("BENCH_perf.json gemm/syrk/tournament/serve sections populated")
+rows = doc.get("sections", {}).get("robustness", [])
+kinds = {r.get("kind") for r in rows}
+for want in ("jitter_ladder", "ldlt", "cond_est"):
+    if want not in kinds:
+        sys.exit(f"FAIL: BENCH_perf.json robustness section is missing {want!r} rows")
+if not all("overhead" in r for r in rows if r.get("kind") == "jitter_ladder"):
+    sys.exit("FAIL: robustness/jitter_ladder rows missing overhead")
+if not all("cond_seconds" in r for r in rows if r.get("kind") == "cond_est"):
+    sys.exit("FAIL: robustness/cond_est rows missing cond_seconds")
+print("BENCH_perf.json gemm/syrk/tournament/serve/robustness sections populated")
 EOF
 else
     # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
@@ -76,6 +95,12 @@ else
         || { echo "FAIL: BENCH_perf.json serve/evict rows not populated"; exit 1; }
     [ "$(grep -c '"load_seconds"' BENCH_perf.json)" -ge 1 ] \
         || { echo "FAIL: BENCH_perf.json serve/persistence rows not populated"; exit 1; }
+    [ "$(grep -c '"ladder_seconds"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json robustness/jitter_ladder rows not populated"; exit 1; }
+    [ "$(grep -c '"ldlt_seconds"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json robustness/ldlt rows not populated"; exit 1; }
+    [ "$(grep -c '"cond_seconds"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json robustness/cond_est rows not populated"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

@@ -171,3 +171,27 @@ print("\n== case 3: dense k2 (n=18, t=1..18, truth theta) ==")
 show("lnp   ", lnp)
 show("s2    ", s2)
 show("logdet", logdet)
+
+# --- case 4: symmetric-eigensolver reference — the k1 Gram matrix
+# K~ = K + sigma_n^2 I on the dense case-2 configuration at n=64.
+# Pins the tridiagonalize + implicit-shift QL path of
+# rust/src/linalg/eigen.rs (sym_eigenvalues_with) to infinite-precision
+# eigenvalues: extreme and median eigenvalues, the trace, and the
+# log-determinant (sum of eigenvalue logs, cross-checkable against the
+# Cholesky logdet).
+n = 64
+t = [mp.mpf(i) for i in range(1, n + 1)]
+a = mp.zeros(n, n)
+for i in range(n):
+    for j in range(n):
+        a[i, j] = k1(t[i] - t[j], th2)
+    a[i, i] += mp.mpf("0.1") ** 2
+evs = sorted(mp.eigsy(a, eigvals_only=True))
+print("\n== case 4: k1 Gram eigenvalues (n=64, t=1..64, theta=[2.5,1.5,0]) ==")
+show("lam_min", evs[0])
+show("lam_1  ", evs[1])
+show("lam_mid", evs[31])
+show("lam_sub", evs[62])
+show("lam_max", evs[63])
+show("trace  ", mp.fsum(evs))
+show("logdet ", mp.fsum(mp.log(e) for e in evs))

@@ -35,6 +35,10 @@ pub struct RunConfig {
     /// after this many evictions (0 = never; only meaningful with a
     /// window).
     pub serve_refresh_every: usize,
+    /// `[serve] cond_limit` — spectral-condition estimate above which a
+    /// slot latches **degraded** into `needs_retrain` (0 = the library
+    /// default, [`crate::coordinator::COND_RETRAIN_LIMIT`]).
+    pub serve_cond_limit: f64,
 }
 
 impl Default for RunConfig {
@@ -52,6 +56,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             serve_window: 0,
             serve_refresh_every: 64,
+            serve_cond_limit: 0.0,
         }
     }
 }
@@ -120,7 +125,25 @@ impl RunConfig {
             anyhow::ensure!(r >= 0, "serve.refresh_every must be >= 0 (0 = never), got {r}");
             cfg.serve_refresh_every = r as usize;
         }
+        if let Some(v) = doc.get("serve", "cond_limit") {
+            let c = v.as_float().ok_or_else(|| anyhow::anyhow!("serve.cond_limit"))?;
+            anyhow::ensure!(
+                c == 0.0 || c > 1.0,
+                "serve.cond_limit must be 0 (library default) or > 1, got {c}"
+            );
+            cfg.serve_cond_limit = c;
+        }
         Ok(cfg)
+    }
+
+    /// The condition limit this config describes (`0` means the library
+    /// default, [`crate::coordinator::COND_RETRAIN_LIMIT`]).
+    pub fn cond_limit(&self) -> f64 {
+        if self.serve_cond_limit > 1.0 {
+            self.serve_cond_limit
+        } else {
+            crate::coordinator::COND_RETRAIN_LIMIT
+        }
     }
 
     /// The sliding-window policy this config describes, if any
@@ -254,5 +277,19 @@ workers = 2
         assert!(d.window_policy().is_none());
         assert!(RunConfig::from_toml("[serve]\nwindow = -3\n").is_err());
         assert!(RunConfig::from_toml("[serve]\nrefresh_every = -1\n").is_err());
+    }
+
+    #[test]
+    fn serve_cond_limit_parses_and_validates() {
+        let cfg = RunConfig::from_toml("[serve]\ncond_limit = 1e10\n").unwrap();
+        assert_eq!(cfg.serve_cond_limit, 1e10);
+        assert_eq!(cfg.cond_limit(), 1e10);
+        // 0 / unset → library default
+        let d = RunConfig::from_toml("[run]\nseed = 1\n").unwrap();
+        assert_eq!(d.serve_cond_limit, 0.0);
+        assert_eq!(d.cond_limit(), crate::coordinator::COND_RETRAIN_LIMIT);
+        // a limit inside (0, 1] can never latch meaningfully — rejected
+        assert!(RunConfig::from_toml("[serve]\ncond_limit = 0.5\n").is_err());
+        assert!(RunConfig::from_toml("[serve]\ncond_limit = -2.0\n").is_err());
     }
 }

@@ -19,14 +19,14 @@
 //! clean `Err`s — never panics, never unbounded allocations (every
 //! length field is validated against the bytes actually remaining).
 //!
-//! Format (version 1), all integers/floats little-endian:
+//! Format (version 2), all integers/floats little-endian:
 //!
 //! ```text
 //! magic  b"GPFASTMD"  | version u32
 //! dataset: label str | n u64 | t f64×n | y f64×n
 //! spec name str | sigma_n f64 | param_names str-list
 //! train: theta_hat vec | lnp_peak | sigma_f_hat2 | converged u8
-//!        | n_evals u64 | n_modes u64 | restart_values vec
+//!        | n_evals u64 | n_modes u64 | restart_values vec | jitter f64
 //! peak:  lnp | sigma_f_hat2 | alpha vec
 //!        | factor dim u64 | logdet | packed lower triangle f64×n(n+1)/2
 //! evidence: ln_z | ln_p_peak | ln_det_h | ln_volume | marg_const
@@ -52,7 +52,7 @@ use super::tournament::TrainedModel;
 use super::train::TrainResult;
 
 const MAGIC: &[u8; 8] = b"GPFASTMD";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 // ---------------------------------------------------------------- writer
 
@@ -244,6 +244,7 @@ fn encode(tm: &TrainedModel, data: &Dataset) -> Vec<u8> {
     w.u64(tm.train.n_evals as u64);
     w.u64(tm.train.n_modes as u64);
     w.vec(&tm.train.restart_values);
+    w.f64(tm.train.jitter);
     // peak evaluation: lnp, σ̂², α, factor (packed lower triangle)
     w.f64(tm.train.peak_eval.lnp);
     w.f64(tm.train.peak_eval.sigma_f_hat2);
@@ -305,7 +306,8 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
     anyhow::ensure!(n >= 1, "corrupt artifact: empty dataset (n = 0)");
     let t = r.f64s_raw(n)?;
     let y = r.f64s_raw(n)?;
-    let data = Dataset::new(t, y, label);
+    let data = Dataset::checked(t, y, label)
+        .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?;
     // spec
     let spec_name = r.str()?;
     let spec = ModelSpec::parse(&spec_name)
@@ -339,6 +341,11 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
     let n_evals = r.u64()? as usize;
     let n_modes = r.u64()? as usize;
     let restart_values = r.vec()?;
+    let jitter = r.f64()?;
+    anyhow::ensure!(
+        jitter.is_finite() && jitter >= 0.0,
+        "corrupt artifact: recorded jitter = {jitter}"
+    );
     // peak evaluation
     let peak_lnp = r.f64()?;
     let peak_sigma2 = r.f64()?;
@@ -355,8 +362,30 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
         let row = r.f64s_raw(i + 1)?;
         l.row_mut(i)[..=i].copy_from_slice(&row);
     }
+    // payload finiteness: corrupt bytes can carry valid length fields but
+    // poison the numbers — a hydrated factor must be usable as-is
+    anyhow::ensure!(
+        theta_hat.iter().all(|v| v.is_finite()),
+        "corrupt artifact: non-finite θ̂ coordinate"
+    );
+    anyhow::ensure!(
+        alpha.iter().all(|v| v.is_finite()),
+        "corrupt artifact: non-finite α entry"
+    );
+    anyhow::ensure!(
+        logdet.is_finite() && peak_lnp.is_finite(),
+        "corrupt artifact: non-finite factor logdet ({logdet}) or peak lnp ({peak_lnp})"
+    );
+    for i in 0..chol_dim {
+        let d = l[(i, i)];
+        anyhow::ensure!(
+            d.is_finite() && d > 0.0,
+            "corrupt artifact: factor diagonal L[{i}][{i}] = {d} (must be finite and > 0)"
+        );
+    }
     let chol = Chol::from_parts(l, logdet);
-    let peak_eval = ProfiledEval { lnp: peak_lnp, sigma_f_hat2: peak_sigma2, chol, alpha };
+    let peak_eval =
+        ProfiledEval { lnp: peak_lnp, sigma_f_hat2: peak_sigma2, chol, alpha, jitter };
     // evidence
     let ln_z = r.f64()?;
     let ln_p_peak = r.f64()?;
@@ -405,6 +434,7 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
             n_evals,
             n_modes,
             restart_values,
+            jitter,
         },
         evidence,
         nested,

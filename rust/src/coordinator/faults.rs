@@ -1,0 +1,193 @@
+//! Deterministic fault-injection for the numerical-health soak.
+//!
+//! A [`FaultPlan`] turns a clean observation stream into a hostile one
+//! by corrupting a fixed, reproducible subset of the points with the
+//! failure classes the robustness tier must survive:
+//!
+//! * [`Fault::NearDuplicate`] — an input nearly coincident with its
+//!   predecessor, driving the extension pivot of `K̃` toward zero (the
+//!   quarantine / jitter-ladder stressor);
+//! * [`Fault::Outlier`] — an observation absurdly far from the
+//!   predictive mean; numerically harmless to the factor but it must
+//!   flow through drift monitoring, not crash it;
+//! * [`Fault::NonFinite`] — NaN/±∞ smuggled into the stream; must be
+//!   rejected at the data boundary with **zero** state change.
+//!
+//! The schedule is a pure function of the step index — no RNG, no
+//! hidden state — so a failing soak step reproduces exactly, and the
+//! expected outcome of every step (absorbed, rejected, quarantined) can
+//! be asserted against the plan itself.
+
+/// One step's corruption class (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// In-distribution point, passed through untouched.
+    Clean,
+    /// Input nearly coincident with the previous point.
+    NearDuplicate,
+    /// Observation pushed many σ from the predictive mean.
+    Outlier,
+    /// NaN or ±∞ in the input or the observation.
+    NonFinite,
+}
+
+impl Fault {
+    /// Must the serving boundary reject this point outright? Only
+    /// non-finite values carry a hard guarantee; a near-duplicate may
+    /// be absorbed (jitter headroom permitting), rejected, or trigger a
+    /// quarantine depending on the factor's state, and an outlier is
+    /// always absorbable.
+    pub fn must_reject(self) -> bool {
+        matches!(self, Fault::NonFinite)
+    }
+}
+
+/// Deterministic corruption schedule over a point stream: step `i` is
+/// corrupted iff `i` hits one of the configured periods (non-finite
+/// beats near-duplicate beats outlier on collisions). Step 0 is always
+/// clean so every soak starts from a healthy absorb.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Every this-many steps, replace the input with a near-duplicate
+    /// (`0` = never).
+    pub near_dup_every: usize,
+    /// Every this-many steps, blow the observation up (`0` = never).
+    pub outlier_every: usize,
+    /// Every this-many steps, inject a non-finite value (`0` = never).
+    pub non_finite_every: usize,
+    /// Magnitude of the injected outlier observations.
+    pub outlier_scale: f64,
+    /// Relative input offset of a near-duplicate (kept well below any
+    /// realistic sampling interval).
+    pub near_dup_offset: f64,
+}
+
+impl FaultPlan {
+    /// The recovery soak's default mix: mutually prime periods so the
+    /// fault classes interleave rather than stack, ~18% of steps
+    /// corrupted overall.
+    pub fn soak_default() -> Self {
+        Self {
+            near_dup_every: 11,
+            outlier_every: 17,
+            non_finite_every: 23,
+            outlier_scale: 1.0e7,
+            near_dup_offset: 1.0e-12,
+        }
+    }
+
+    /// A plan that never corrupts anything — the clean-path control arm
+    /// (used to assert bit-identical behaviour and zero applied jitter).
+    pub fn clean() -> Self {
+        Self {
+            near_dup_every: 0,
+            outlier_every: 0,
+            non_finite_every: 0,
+            outlier_scale: 0.0,
+            near_dup_offset: 0.0,
+        }
+    }
+
+    /// Classify step `i` (pure; the whole schedule is reproducible from
+    /// the plan alone).
+    pub fn fault_at(&self, i: usize) -> Fault {
+        let hits = |every: usize| i > 0 && every > 0 && i % every == 0;
+        if hits(self.non_finite_every) {
+            Fault::NonFinite
+        } else if hits(self.near_dup_every) {
+            Fault::NearDuplicate
+        } else if hits(self.outlier_every) {
+            Fault::Outlier
+        } else {
+            Fault::Clean
+        }
+    }
+
+    /// Corrupt the nominal point `(t, y)` of step `i` according to the
+    /// schedule; `t_prev` is the previous input (near-duplicates sit on
+    /// top of it). Returns the possibly-corrupted point and its class.
+    pub fn apply(&self, i: usize, t: f64, y: f64, t_prev: f64) -> (f64, f64, Fault) {
+        let fault = self.fault_at(i);
+        match fault {
+            Fault::Clean => (t, y, fault),
+            Fault::NearDuplicate => {
+                let dt = self.near_dup_offset * (1.0 + t_prev.abs());
+                (t_prev + dt, y, fault)
+            }
+            Fault::Outlier => {
+                let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+                (t, sign * self.outlier_scale, fault)
+            }
+            // rotate through the three non-finite flavours, hitting
+            // both the input and the observation sides of the boundary
+            Fault::NonFinite => match (i / self.non_finite_every.max(1)) % 3 {
+                0 => (t, f64::NAN, fault),
+                1 => (f64::INFINITY, y, fault),
+                _ => (t, f64::NEG_INFINITY, fault),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_pure_and_starts_clean() {
+        let plan = FaultPlan::soak_default();
+        assert_eq!(plan.fault_at(0), Fault::Clean);
+        for i in 0..200 {
+            assert_eq!(plan.fault_at(i), plan.fault_at(i), "schedule must be pure");
+        }
+        let a = plan.apply(22, 5.0, 1.0, 4.9);
+        let b = plan.apply(22, 5.0, 1.0, 4.9);
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn default_mix_contains_every_class() {
+        let plan = FaultPlan::soak_default();
+        let mut counts = [0usize; 4];
+        for i in 0..200 {
+            let idx = match plan.fault_at(i) {
+                Fault::Clean => 0,
+                Fault::NearDuplicate => 1,
+                Fault::Outlier => 2,
+                Fault::NonFinite => 3,
+            };
+            counts[idx] += 1;
+        }
+        assert!(counts[0] > 150, "clean steps must dominate: {counts:?}");
+        assert!(counts[1] > 0 && counts[2] > 0 && counts[3] > 0, "{counts:?}");
+    }
+
+    #[test]
+    fn corruption_matches_class() {
+        let plan = FaultPlan::soak_default();
+        // 23 → non-finite (flavour rotates with i/23); 22 → near-dup;
+        // 34 → outlier (17·2, not divisible by 11 or 23)
+        let (t, y, f) = plan.apply(23, 1.0, 2.0, 0.9);
+        assert_eq!(f, Fault::NonFinite);
+        assert!(!t.is_finite() || !y.is_finite());
+        let (t, y, f) = plan.apply(22, 5.0, 2.0, 4.9);
+        assert_eq!(f, Fault::NearDuplicate);
+        assert!((t - 4.9).abs() < 1e-10 && y == 2.0);
+        let (t, y, f) = plan.apply(34, 5.0, 2.0, 4.9);
+        assert_eq!(f, Fault::Outlier);
+        assert_eq!(t, 5.0);
+        assert_eq!(y, plan.outlier_scale);
+        assert!(f.must_reject() == false && Fault::NonFinite.must_reject());
+    }
+
+    #[test]
+    fn clean_plan_never_corrupts() {
+        let plan = FaultPlan::clean();
+        for i in 0..500 {
+            assert_eq!(plan.fault_at(i), Fault::Clean);
+            let (t, y, f) = plan.apply(i, 1.5, -0.5, 1.4);
+            assert_eq!((t, y, f), (1.5, -0.5, Fault::Clean));
+        }
+    }
+}

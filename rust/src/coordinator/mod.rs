@@ -30,6 +30,7 @@
 //! accelerated assembly runs on the coordinator thread.
 
 pub mod artifact;
+pub mod faults;
 pub mod pool;
 pub mod registry;
 pub mod serve;
@@ -37,11 +38,13 @@ pub mod tournament;
 pub mod train;
 mod report;
 
+pub use faults::{Fault, FaultPlan};
 pub use pool::WorkerPool;
 pub use registry::{ModelSpec, Roster};
 pub use report::{ComparisonReport, ModelReport, NestedReport};
 pub use serve::{
-    DriftOptions, DriftStatus, RetrainOutcome, RouteMode, ServeSession, WindowPolicy,
+    DriftOptions, DriftStatus, FactorHealth, RetrainOutcome, RouteMode, ServeSession,
+    WindowPolicy, COND_RETRAIN_LIMIT,
 };
 pub use tournament::{Tournament, TournamentResult, TrainedModel};
 pub use train::{train_model, train_model_seeded, TrainOptions, TrainResult};

@@ -39,6 +39,10 @@ pub struct ModelReport {
     pub n_modes: usize,
     pub restarts: usize,
     pub wall_secs: f64,
+    /// Diagonal jitter the escalation ladder applied at the winning peak
+    /// (`0.0` for a clean factorisation) — a non-zero value means the
+    /// model trained at the edge of positive definiteness.
+    pub jitter: f64,
     pub nested: Option<NestedReport>,
 }
 
@@ -75,7 +79,8 @@ impl ComparisonReport {
     /// the winner, per-model σ error bars as a parameter block below).
     pub fn render(&self) -> String {
         let mut t = Table::new(vec![
-            "model", "lnP_peak", "lnZ_est", "lnB", "lnZ_num", "evals", "modes", "start", "flag",
+            "model", "lnP_peak", "lnZ_est", "lnB", "lnZ_num", "evals", "modes", "start", "jit",
+            "flag",
         ]);
         for m in &self.models {
             let (num, nev) = match &m.nested {
@@ -94,6 +99,7 @@ impl ComparisonReport {
                 nev,
                 format!("{}", m.n_modes),
                 if m.warm_started { "warm".to_string() } else { "cold".to_string() },
+                if m.jitter > 0.0 { format!("{:.1e}", m.jitter) } else { "0".to_string() },
                 if m.suspect { "SUSPECT".to_string() } else { String::new() },
             ]);
         }
@@ -163,6 +169,7 @@ impl ComparisonReport {
                                 ("n_modes", m.n_modes.into()),
                                 ("restarts", m.restarts.into()),
                                 ("wall_secs", m.wall_secs.into()),
+                                ("jitter", m.jitter.into()),
                             ];
                             if let Some(ns) = &m.nested {
                                 fields.push((
@@ -205,6 +212,7 @@ mod tests {
             n_modes: 1,
             restarts: 10,
             wall_secs: 0.5,
+            jitter: 0.0,
             nested: None,
         }
     }

@@ -27,7 +27,7 @@
 //!   ϑ̂ between retrains, so a sustained log-score deficit is exactly the
 //!   signature of hyperparameter drift.
 //!
-//! ## Serving lifecycle: grow → evict → refresh → retrain
+//! ## Serving lifecycle: grow → evict → refresh → retrain → quarantine
 //!
 //! With a [`WindowPolicy`] attached ([`ServeSession::with_window`]) the
 //! session is **self-healing and bounded-memory**:
@@ -39,15 +39,31 @@
 //!   sliding-window accuracy-for-cost trade of Chalupka et al. and of
 //!   subset-based GPR;
 //! * **refresh** — every `refresh_every` evictions all factors are
-//!   refactorised cold from the live window (compute-then-commit, so the
-//!   refresh is all-or-nothing across slots), washing out accumulated
-//!   `O(n²)`-maintenance rounding drift;
-//! * **retrain** — when the drift monitor latches,
+//!   refactorised cold from the live window, washing out accumulated
+//!   `O(n²)`-maintenance rounding drift; each refreshed factor's
+//!   spectral conditioning is probed ([`Chol::cond_1est`],
+//!   a Hager-style 1-norm estimate costing `O(n²)`) and a slot whose
+//!   estimate crosses the session's condition limit latches **degraded**
+//!   into [`ServeSession::needs_retrain`];
+//! * **retrain** — when the drift monitor or a health latch fires,
 //!   [`ServeSession::retrain`] reruns training on the current window
 //!   (every model warm-started from its incumbent ϑ̂), recomputes each
 //!   Laplace evidence, and **hot-swaps** all slots, the evidence ranking
 //!   and the drift baselines without dropping the session: counters
-//!   carry over and queries keep being served from the new peaks.
+//!   carry over and queries keep being served from the new peaks;
+//! * **quarantine** — a slot whose factor maintenance becomes
+//!   unrecoverable (its extension pivot fails while sibling models
+//!   absorb the point, its cold refit errors, or a window shrink cannot
+//!   be repaired) is **frozen at its last good factor and routed
+//!   around** instead of dropping the session: it stops absorbing
+//!   observations, [`RouteMode::Winner`] falls to the next-ranked
+//!   healthy slot, [`RouteMode::Averaged`] renormalises over the
+//!   healthy roster, and `needs_retrain` latches. A successful
+//!   [`ServeSession::retrain`] rebuilds every slot from a healthy
+//!   window and **re-enters** quarantined models. Per-slot health is
+//!   reported by [`ServeSession::health`].
+//!
+//! [`Chol::cond_1est`]: crate::linalg::Chol::cond_1est
 //!
 //! Constructed from a finished tournament
 //! ([`ServeSession::from_tournament`]), from a single training run
@@ -215,13 +231,71 @@ impl DriftMonitor {
     }
 }
 
+/// Default spectral-condition limit: a 1-norm condition estimate above
+/// this latches the slot **degraded** (≈ four decimal digits of the
+/// factor's accuracy left in double precision — conservative enough to
+/// retrain well before the factor visibly misbehaves). Override with
+/// [`ServeSession::with_cond_limit`].
+pub const COND_RETRAIN_LIMIT: f64 = 1e12;
+
+/// One slot's numerical-health record, reported by
+/// [`ServeSession::health`] (winner first, like
+/// [`ServeSession::drift`]).
+#[derive(Clone, Copy, Debug)]
+pub struct FactorHealth {
+    /// Routed model name.
+    pub model: &'static str,
+    /// Latest Hager 1-norm condition estimate of the slot's `K̃` (probed
+    /// at construction, on every cold refresh, and after retrain).
+    pub cond_est: f64,
+    /// Diagonal jitter the training-time escalation ladder applied to
+    /// this slot's factor (`0.0` on the clean path — asserted by the
+    /// fault-injection soak).
+    pub jitter: f64,
+    /// Lifetime window-shrink failures this slot repaired or was
+    /// quarantined for.
+    pub downdate_failures: u64,
+    /// Lifetime cold refactorisations of this slot.
+    pub refreshes: u64,
+    /// Latched when `cond_est` crossed the session's condition limit.
+    pub degraded: bool,
+    /// Latched when factor maintenance became unrecoverable; the slot is
+    /// frozen and routed around until a retrain re-enters it.
+    pub quarantined: bool,
+}
+
+/// Internal per-slot health state backing [`FactorHealth`].
+#[derive(Clone, Debug)]
+struct SlotHealth {
+    cond_est: f64,
+    downdate_failures: u64,
+    refreshes: u64,
+    degraded: bool,
+    quarantined: bool,
+}
+
+impl SlotHealth {
+    /// Probe a freshly built predictor's conditioning (`O(n²)`).
+    fn probe(p: &Predictor, cond_limit: f64) -> Self {
+        let cond_est = p.chol().cond_1est();
+        Self {
+            cond_est,
+            downdate_failures: 0,
+            refreshes: 0,
+            degraded: cond_est > cond_limit,
+            quarantined: false,
+        }
+    }
+}
+
 /// One routed model: spec, cached predictor, ranking evidence, drift
-/// state.
+/// state, numerical health.
 struct ModelSlot {
     spec: ModelSpec,
     predictor: Predictor,
     ln_z: f64,
     drift: DriftMonitor,
+    health: SlotHealth,
 }
 
 /// A live serving session routing over `N` trained models — see the
@@ -242,6 +316,9 @@ pub struct ServeSession {
     /// Drift tuning applied to every (re)created monitor.
     drift_opts: DriftOptions,
     window: Option<WindowPolicy>,
+    /// Condition-estimate threshold that latches a slot **degraded**
+    /// (see [`COND_RETRAIN_LIMIT`]).
+    cond_limit: f64,
     /// Evictions since the last cold refresh (drives `refresh_every`).
     since_refresh: usize,
     /// Lifetime window-eviction rounds (each round drops one point from
@@ -272,11 +349,14 @@ impl ServeSession {
                 tm.sigma_n,
                 models[0].sigma_n
             );
+            let predictor = tm.predictor(data)?;
+            let health = SlotHealth::probe(&predictor, COND_RETRAIN_LIMIT);
             slots.push(ModelSlot {
                 spec: tm.spec.clone(),
-                predictor: tm.predictor(data)?,
+                predictor,
                 ln_z: tm.ln_z(),
                 drift: DriftMonitor::new(DriftOptions::default()),
+                health,
             });
         }
         slots.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap_or(std::cmp::Ordering::Equal));
@@ -288,6 +368,7 @@ impl ServeSession {
             scale_prior: ScalePrior::default(),
             drift_opts: DriftOptions::default(),
             window: None,
+            cond_limit: COND_RETRAIN_LIMIT,
             since_refresh: 0,
             evictions: 0,
             refreshes: 0,
@@ -349,12 +430,14 @@ impl ServeSession {
             trained.theta_hat.clone(),
             trained.peak_eval.clone(),
         );
+        let health = SlotHealth::probe(&predictor, COND_RETRAIN_LIMIT);
         Ok(Self {
             slots: vec![ModelSlot {
                 spec: spec.clone(),
                 predictor,
                 ln_z: 0.0,
                 drift: DriftMonitor::new(DriftOptions::default()),
+                health,
             }],
             route: RouteMode::Winner,
             exec,
@@ -362,6 +445,7 @@ impl ServeSession {
             scale_prior: ScalePrior::default(),
             drift_opts: DriftOptions::default(),
             window: None,
+            cond_limit: COND_RETRAIN_LIMIT,
             since_refresh: 0,
             evictions: 0,
             refreshes: 0,
@@ -423,6 +507,19 @@ impl ServeSession {
         self
     }
 
+    /// Override the spectral-condition limit that latches a slot
+    /// **degraded** (builder style; defaults to
+    /// [`COND_RETRAIN_LIMIT`]). Non-sensical limits (≤ 1, NaN) fall
+    /// back to the default. Re-evaluates the latch against every slot's
+    /// current estimate.
+    pub fn with_cond_limit(mut self, limit: f64) -> Self {
+        self.cond_limit = if limit > 1.0 { limit } else { COND_RETRAIN_LIMIT };
+        for slot in &mut self.slots {
+            slot.health.degraded = slot.health.cond_est > self.cond_limit;
+        }
+        self
+    }
+
     /// The attached window policy, if any.
     pub fn window(&self) -> Option<WindowPolicy> {
         self.window
@@ -455,11 +552,39 @@ impl ServeSession {
         &self.slots[0].spec
     }
 
+    /// Index of the highest-ranked slot that is **not** quarantined.
+    /// Falls back to the nominal winner when the whole roster is
+    /// quarantined: a frozen factor still serves finite (if stale)
+    /// predictions, which beats dropping the session while the caller
+    /// arranges the retrain that `needs_retrain` is demanding.
+    fn first_healthy(&self) -> usize {
+        self.slots.iter().position(|s| !s.health.quarantined).unwrap_or(0)
+    }
+
     /// Evidence-posterior weights over the roster, winner first
-    /// (`w_i ∝ exp(ln Z_i)`, normalised).
+    /// (`w_i ∝ exp(ln Z_i)`, normalised). Quarantined slots get weight
+    /// 0 and the healthy roster renormalises; if **every** slot is
+    /// quarantined the weights fall back to plain evidence weighting
+    /// (see [`ServeSession::first_healthy`] for the rationale).
     pub fn weights(&self) -> Vec<f64> {
-        let max = self.slots.iter().map(|s| s.ln_z).fold(f64::NEG_INFINITY, f64::max);
-        let mut w: Vec<f64> = self.slots.iter().map(|s| (s.ln_z - max).exp()).collect();
+        let all_quarantined = self.slots.iter().all(|s| s.health.quarantined);
+        let max = self
+            .slots
+            .iter()
+            .filter(|s| all_quarantined || !s.health.quarantined)
+            .map(|s| s.ln_z)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut w: Vec<f64> = self
+            .slots
+            .iter()
+            .map(|s| {
+                if all_quarantined || !s.health.quarantined {
+                    (s.ln_z - max).exp()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
         let total: f64 = w.iter().sum();
         for v in &mut w {
             *v /= total;
@@ -468,9 +593,14 @@ impl ServeSession {
     }
 
     /// Serve one batch of query points under the session's route mode.
+    /// Quarantined slots are routed around: `Winner` serves the
+    /// highest-ranked healthy slot, `Averaged` renormalises over the
+    /// healthy roster.
     pub fn predict(&self, t_star: &[f64]) -> Prediction {
         match self.route {
-            RouteMode::Winner => self.slots[0].predictor.predict_batch(t_star, &self.exec),
+            RouteMode::Winner => {
+                self.slots[self.first_healthy()].predictor.predict_batch(t_star, &self.exec)
+            }
             RouteMode::Averaged => self.predict_averaged(t_star),
         }
     }
@@ -502,6 +632,9 @@ impl ServeSession {
         let mut mean = vec![0.0; t_star.len()];
         let mut second = vec![0.0; t_star.len()]; // Σ wᵢ (σᵢ² + μᵢ²)
         for (slot, &wi) in self.slots.iter().zip(&w) {
+            if wi == 0.0 {
+                continue; // quarantined: excluded from the mixture
+            }
             let p = slot.predictor.predict_batch(t_star, &self.exec);
             for i in 0..t_star.len() {
                 mean[i] += wi * p.mean[i];
@@ -516,34 +649,67 @@ impl ServeSession {
         Prediction { mean, sd }
     }
 
-    /// Append one observation to **every** live factor (`O(n²)` each),
-    /// all-or-nothing: each model first scores the point and reports the
-    /// pivot its factor extension would take
-    /// ([`Predictor::log_predictive_and_pivot`]); if any model's
-    /// extension would fail, the call errors **before any slot mutates**,
-    /// so the routed factors never diverge in their data. Scores feed the
-    /// per-model drift monitors only when the point is absorbed.
+    /// Append one observation to **every** healthy live factor (`O(n²)`
+    /// each): each model first scores the point and reports the pivot
+    /// its factor extension would take
+    /// ([`Predictor::log_predictive_and_pivot`]), and nothing mutates
+    /// until the verdicts are in. Three outcomes:
+    ///
+    /// * every healthy model's pivot is viable — the point fans out to
+    ///   all of them (the PR-5 all-or-nothing path, bit-identical on
+    ///   clean data);
+    /// * **no** healthy model can absorb it — the point itself is the
+    ///   problem (e.g. an exact duplicate input), so the call errors
+    ///   with **zero** state change rather than wrecking the roster;
+    /// * *some* models fail while siblings absorb — that is a
+    ///   slot-specific conditioning collapse, so the failing slots are
+    ///   **quarantined** (frozen at their last good factor, routed
+    ///   around, `needs_retrain` latched) and serving continues.
+    ///
+    /// Non-finite observations are rejected at the boundary before any
+    /// scoring. Scores feed the per-model drift monitors only when the
+    /// point is absorbed; quarantined slots neither score nor absorb.
     pub fn observe(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        anyhow::ensure!(
+            t_new.is_finite() && y_new.is_finite(),
+            "non-finite observation (t = {t_new}, y = {y_new}) rejected at the data boundary"
+        );
         let mut scored = Vec::with_capacity(self.slots.len());
+        let mut absorbable = 0usize;
         for slot in &self.slots {
+            if slot.health.quarantined {
+                scored.push(None);
+                continue;
+            }
             let s = slot.predictor.score_observation(t_new, y_new);
-            anyhow::ensure!(
-                s.pivot > 0.0 && s.pivot.is_finite(),
-                "observe(t={t_new}) would make {}'s K̃ non-PD (pivot {:.3e}); \
-                 no model absorbed the point",
-                slot.spec.name(),
-                s.pivot
-            );
-            scored.push(s);
+            let viable = s.pivot > 0.0 && s.pivot.is_finite();
+            absorbable += viable as usize;
+            scored.push(Some((s, viable)));
         }
+        anyhow::ensure!(
+            absorbable > 0,
+            "observe(t={t_new}) would make every healthy model's K̃ non-PD; \
+             the point was rejected and no slot mutated"
+        );
         for (slot, s) in self.slots.iter_mut().zip(scored) {
-            slot.drift.push(s.score);
-            // reuses the pivot check's triangular solve — one O(n²) solve
-            // per (point, model), and it cannot fail: the extension takes
-            // exactly the pre-checked pivot. The α/σ̂² refresh is deferred
-            // until after the window policy ran, so an absorb that
-            // immediately evicts pays it once, not twice.
-            slot.predictor.observe_scored_deferred(t_new, y_new, s)?;
+            match s {
+                None => {} // quarantined: frozen
+                Some((s, true)) => {
+                    slot.drift.push(s.score);
+                    // reuses the pivot check's triangular solve — one O(n²)
+                    // solve per (point, model), and it cannot fail: the
+                    // extension takes exactly the pre-checked pivot. The
+                    // α/σ̂² refresh is deferred until after the window
+                    // policy ran, so an absorb that immediately evicts
+                    // pays it once, not twice.
+                    slot.predictor.observe_scored_deferred(t_new, y_new, s)?;
+                }
+                Some((_, false)) => {
+                    // siblings can take the point but this factor cannot:
+                    // quarantine the slot instead of failing the session
+                    slot.health.quarantined = true;
+                }
+            }
         }
         // refresh the deferred caches even when the window enforcement
         // errors (e.g. a failed periodic refit), so the session keeps
@@ -561,21 +727,38 @@ impl ServeSession {
     }
 
     /// Apply the window policy after an absorption: evict everything
-    /// over capacity from every slot in one oldest-first bulk shrink
-    /// (deletion is a rank-1 update sweep — it cannot fail, so the slots
-    /// stay in lockstep; one `O(n²)` storage copy regardless of how far
-    /// over capacity the window is, e.g. after attaching a small window
-    /// to a large restored session), then run the periodic cold refresh
-    /// when due. Returns whether a cold refresh ran (in which case every
+    /// over capacity from every healthy slot in one oldest-first bulk
+    /// shrink (one `O(n²)` storage copy regardless of how far over
+    /// capacity the window is, e.g. after attaching a small window to a
+    /// large restored session), then run the periodic cold refresh when
+    /// due. A slot whose shrink fails counts a **downdate failure** and
+    /// is repaired by a cold refit-and-retry; if even that fails it is
+    /// quarantined, so the healthy roster always stays in lockstep.
+    /// Returns whether a cold refresh ran (in which case every healthy
     /// slot's serving cache is already fresh and the caller must not
     /// redo the `O(n²)` refresh).
     fn enforce_window(&mut self) -> crate::Result<bool> {
         let Some(policy) = self.window else { return Ok(false) };
-        let n = self.slots[0].predictor.n();
+        let n = self.slots[self.first_healthy()].predictor.n();
         if n > policy.max_points {
             let k = n - policy.max_points;
             for slot in &mut self.slots {
-                slot.predictor.evict_front_deferred(k)?;
+                if slot.health.quarantined {
+                    continue;
+                }
+                if slot.predictor.evict_front_deferred(k).is_err() {
+                    slot.health.downdate_failures += 1;
+                    // repair: wash the factor with a cold refit of the
+                    // pre-shrink window, then retry the shrink once
+                    let repaired = slot
+                        .predictor
+                        .refit_eval(&self.exec)
+                        .map(|ev| slot.predictor.adopt_eval(ev))
+                        .and_then(|()| slot.predictor.evict_front_deferred(k));
+                    if repaired.is_err() {
+                        slot.health.quarantined = true;
+                    }
+                }
             }
             self.evictions += k;
             self.since_refresh += k;
@@ -587,23 +770,49 @@ impl ServeSession {
         Ok(false)
     }
 
-    /// Refactorise **every** slot cold from the live window at its
-    /// current ϑ̂, all-or-nothing: the `O(n³)` evaluations are computed
-    /// first ([`Predictor::refit_eval`]) and only then committed
-    /// ([`Predictor::adopt_eval`]), so an assembly/factorisation failure
-    /// leaves the session exactly as it was. Resets the periodic-refresh
-    /// countdown.
+    /// Refactorise every **healthy** slot cold from the live window at
+    /// its current ϑ̂: the `O(n³)` evaluations are computed first
+    /// ([`Predictor::refit_eval`]) and only committed per slot on
+    /// success ([`Predictor::adopt_eval`]), so a failed refit never
+    /// leaves a half-updated factor — the failing slot keeps its old
+    /// factor and is **quarantined**. Each refreshed factor's spectral
+    /// conditioning is re-probed ([`crate::linalg::Chol::cond_1est`])
+    /// and compared against the session's condition limit, latching
+    /// **degraded** on a crossing. Resets the periodic-refresh
+    /// countdown. Errors only when the refresh leaves **no** healthy
+    /// slot.
     pub fn refresh_factors(&mut self) -> crate::Result<()> {
-        let evals = self
+        let limit = self.cond_limit;
+        let evals: Vec<_> = self
             .slots
             .iter()
-            .map(|s| s.predictor.refit_eval(&self.exec))
-            .collect::<crate::Result<Vec<_>>>()?;
+            .map(|s| (!s.health.quarantined).then(|| s.predictor.refit_eval(&self.exec)))
+            .collect();
         for (slot, ev) in self.slots.iter_mut().zip(evals) {
-            slot.predictor.adopt_eval(ev);
+            match ev {
+                None => {} // quarantined: frozen
+                Some(Ok(ev)) => {
+                    slot.predictor.adopt_eval(ev);
+                    slot.health.refreshes += 1;
+                    slot.health.cond_est = slot.predictor.chol().cond_1est();
+                    if slot.health.cond_est > limit {
+                        slot.health.degraded = true;
+                    }
+                }
+                Some(Err(_)) => {
+                    // the live window no longer factorises for this model
+                    // even through the jitter ladder: freeze and reroute
+                    slot.health.quarantined = true;
+                }
+            }
         }
         self.refreshes += 1;
         self.since_refresh = 0;
+        anyhow::ensure!(
+            self.slots.iter().any(|s| !s.health.quarantined),
+            "cold refresh failed for every routed model; the whole roster is quarantined \
+             and serving continues from frozen factors — retrain required"
+        );
         Ok(())
     }
 
@@ -619,15 +828,23 @@ impl ServeSession {
     /// (lifetime counters carry over). The σ_f prior for the evidence is
     /// the session's ([`ServeSession::with_scale_prior`]; defaults to
     /// the config pipeline's [`ScalePrior::default`]).
+    ///
+    /// This is also the **quarantine re-entry point**: the window is
+    /// taken from the highest-ranked *healthy* slot (a quarantined
+    /// winner's frozen window is stale), every spec — quarantined or
+    /// not — is retrained on it, and a successful hot-swap clears all
+    /// quarantine and degradation latches (lifetime health counters
+    /// carry over).
     pub fn retrain(
         &mut self,
         opts: &TrainOptions,
         workers: usize,
         rng: &mut Xoshiro256,
     ) -> crate::Result<RetrainOutcome> {
+        let lead = self.first_healthy();
         let window = Dataset::new(
-            self.slots[0].predictor.t().to_vec(),
-            self.slots[0].predictor.y().to_vec(),
+            self.slots[lead].predictor.t().to_vec(),
+            self.slots[lead].predictor.y().to_vec(),
             "serve-window",
         );
         let span = window.span();
@@ -667,11 +884,22 @@ impl ServeSession {
                 trained.peak_eval,
             );
             predictor.carry_counters_from(&slot.predictor);
+            // fresh factor ⇒ fresh conditioning probe; quarantine and
+            // degradation clear (re-entry), lifetime counters carry over
+            let cond_est = predictor.chol().cond_1est();
+            let health = SlotHealth {
+                cond_est,
+                downdate_failures: slot.health.downdate_failures,
+                refreshes: slot.health.refreshes,
+                degraded: cond_est > self.cond_limit,
+                quarantined: false,
+            };
             let new_slot = ModelSlot {
                 spec,
                 predictor,
                 ln_z: evidence.ln_z,
                 drift: DriftMonitor::new(self.drift_opts),
+                health,
             };
             rebuilt.push((new_slot, slot.ln_z));
         }
@@ -711,9 +939,50 @@ impl ServeSession {
     }
 
     /// Serving counters of the **winner** slot (the factor every default
-    /// query goes through).
+    /// query goes through). Numerical-health state lives in
+    /// [`ServeSession::health`] — `ServeStats` is an exact-comparison
+    /// (`Eq`) counter record and cannot carry condition estimates.
     pub fn stats(&self) -> ServeStats {
         self.slots[0].predictor.stats()
+    }
+
+    /// Per-slot numerical health, winner first: latest condition
+    /// estimate, training-time jitter, downdate-failure and refresh
+    /// counters, and the degraded/quarantined latches.
+    pub fn health(&self) -> Vec<FactorHealth> {
+        self.slots
+            .iter()
+            .map(|s| FactorHealth {
+                model: s.spec.name(),
+                cond_est: s.health.cond_est,
+                jitter: s.predictor.jitter(),
+                downdate_failures: s.health.downdate_failures,
+                refreshes: s.health.refreshes,
+                degraded: s.health.degraded,
+                quarantined: s.health.quarantined,
+            })
+            .collect()
+    }
+
+    /// Number of currently quarantined slots.
+    pub fn n_quarantined(&self) -> usize {
+        self.slots.iter().filter(|s| s.health.quarantined).count()
+    }
+
+    /// Manually quarantine a routed model (operator override — e.g. a
+    /// model known to be misbehaving for reasons the automatic latches
+    /// cannot see yet). The slot freezes at its current factor and is
+    /// routed around exactly like an automatic quarantine; a successful
+    /// [`ServeSession::retrain`] re-enters it. Returns false when no
+    /// routed model has that name.
+    pub fn quarantine_model(&mut self, name: &str) -> bool {
+        match self.slots.iter_mut().find(|s| s.spec.name() == name) {
+            Some(slot) => {
+                slot.health.quarantined = true;
+                true
+            }
+            None => false,
+        }
     }
 
     /// The winner's predictor (e.g. for `lnp()`/`sigma_f_hat2()`).
@@ -736,10 +1005,14 @@ impl ServeSession {
     }
 
     /// True when any routed model's appended-point log-score has
-    /// degraded past the drift threshold — the signal to rerun the
-    /// tournament on the accumulated data.
+    /// degraded past the drift threshold, **or** a factor-health latch
+    /// fired (conditioning past the limit, or a quarantined slot
+    /// waiting for re-entry) — the signal to rerun training on the
+    /// accumulated data ([`ServeSession::retrain`]).
     pub fn needs_retrain(&self) -> bool {
-        self.slots.iter().any(|s| s.drift.drifted)
+        self.slots
+            .iter()
+            .any(|s| s.drift.drifted || s.health.degraded || s.health.quarantined)
     }
 }
 
@@ -932,5 +1205,85 @@ mod tests {
         m3.push(-1.0);
         m3.push(-5.0);
         assert!(m3.drifted, "1-point window must still detect the collapse");
+    }
+
+    #[test]
+    fn health_reports_and_quarantine_reroutes_then_reenters() {
+        let data = table1_dataset(30, 0.1, 59);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(61);
+        let (mut session, _) = ServeSession::train_and_serve(
+            &ModelSpec::K1,
+            0.1,
+            &data,
+            &opts,
+            1,
+            ExecutionContext::seq(),
+            &mut rng,
+        )
+        .unwrap();
+        // clean training: health probed at construction, no latches, no
+        // jitter ladder rungs
+        let h = &session.health()[0];
+        assert_eq!(h.model, "k1");
+        assert!(h.cond_est.is_finite() && h.cond_est >= 1.0, "cond est {}", h.cond_est);
+        assert_eq!(h.jitter, 0.0, "clean data must take zero ladder rungs");
+        assert_eq!(h.downdate_failures, 0);
+        assert!(!h.degraded && !h.quarantined);
+        assert!(!session.needs_retrain());
+        // force-quarantine the lone slot: routing falls back to the
+        // frozen factor (finite predictions), weights fall back to
+        // evidence weighting, the retrain latch fires, observes freeze
+        session.slots[0].health.quarantined = true;
+        assert_eq!(session.n_quarantined(), 1);
+        assert!(session.needs_retrain());
+        assert_eq!(session.weights(), vec![1.0]);
+        let q = session.predict(&[5.5]);
+        assert!(q.mean[0].is_finite() && q.sd[0].is_finite());
+        let n_before = session.stats().n_train;
+        assert!(session.observe(31.0, 0.1).is_err(), "no healthy slot can absorb");
+        assert_eq!(session.stats().n_train, n_before, "quarantined slot must stay frozen");
+        // retrain re-enters the slot and clears every latch
+        let outcome = session.retrain(&opts, 1, &mut rng).unwrap();
+        assert_eq!(outcome.window_n, 30);
+        assert_eq!(session.n_quarantined(), 0);
+        assert!(!session.needs_retrain());
+        session.observe(31.0, 0.1).unwrap();
+        assert_eq!(session.stats().n_train, 31);
+    }
+
+    #[test]
+    fn cond_limit_latches_degraded_and_retrain_is_flagged() {
+        let data = table1_dataset(25, 0.1, 67);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(71);
+        let (session, _) = ServeSession::train_and_serve(
+            &ModelSpec::K1,
+            0.1,
+            &data,
+            &opts,
+            1,
+            ExecutionContext::seq(),
+            &mut rng,
+        )
+        .unwrap();
+        let cond = session.health()[0].cond_est;
+        assert!(cond > 1.0, "a real K̃ is never perfectly conditioned (got {cond})");
+        // a limit just below the measured estimate must latch; a huge
+        // one must not; garbage limits fall back to the default
+        let session = session.with_cond_limit((cond * 0.5).max(1.0 + 1e-9));
+        assert!(session.health()[0].degraded);
+        assert!(session.needs_retrain());
+        let session = session.with_cond_limit(cond * 1e6);
+        assert!(!session.health()[0].degraded);
+        assert!(!session.needs_retrain());
+        let session = session.with_cond_limit(f64::NAN);
+        assert_eq!(session.cond_limit, COND_RETRAIN_LIMIT);
     }
 }

@@ -138,6 +138,7 @@ impl TrainedModel {
             n_modes: self.train.n_modes,
             restarts: self.restarts,
             wall_secs: self.wall_secs,
+            jitter: self.train.jitter,
             nested: self.nested.clone(),
         }
     }

@@ -50,11 +50,24 @@ pub struct TrainResult {
     pub n_modes: usize,
     /// Per-restart peak values, best first.
     pub restart_values: Vec<f64>,
+    /// Diagonal jitter the escalation ladder applied at the winning peak
+    /// (`0.0` when the peak factorised cleanly) — see
+    /// [`crate::gp::profiled::ProfiledEval::jitter`].
+    pub jitter: f64,
 }
 
+/// Finite penalty for hyperparameter proposals whose covariance stays
+/// non-PD through the whole jitter-escalation ladder. Finite (unlike the
+/// earlier −∞ sentinel) so the CG line search can compare two failed
+/// proposals and back off smoothly instead of treating the whole region
+/// as an absorbing wall; far below any reachable ln P_max so a failed
+/// proposal can never win a restart.
+pub const FAILED_EVAL_PENALTY: f64 = -1e12;
+
 /// The profiled-hyperlikelihood objective for one (model, dataset) pair.
-/// Non-positive-definite covariances evaluate to −∞ (rejected region)
-/// rather than erroring, so line searches can back off gracefully.
+/// Proposals that defeat even the escalation ladder evaluate to the
+/// finite [`FAILED_EVAL_PENALTY`] (rejected region) rather than erroring,
+/// so the restart survives and the line search backs off gracefully.
 fn make_objective<'a>(
     model: &'a crate::kernels::CovarianceModel,
     data: &'a Dataset,
@@ -68,11 +81,11 @@ fn make_objective<'a>(
         m,
         move |theta: &[f64]| {
             Ok(profiled::eval_with(model, &data.t, &data.y, theta, ctx)
-                .map_or(f64::NEG_INFINITY, |e| e.lnp))
+                .map_or(FAILED_EVAL_PENALTY, |e| e.lnp))
         },
         move |theta: &[f64]| match profiled::eval_grad_with(model, &data.t, &data.y, theta, ctx) {
             Ok((ev, g)) => Ok((ev.lnp, g)),
-            Err(_) => Ok((f64::NEG_INFINITY, vec![0.0; m])),
+            Err(_) => Ok((FAILED_EVAL_PENALTY, vec![0.0; m])),
         },
     )
 }
@@ -215,6 +228,7 @@ pub fn train_model_seeded(
     // factor + α for the serving layer to adopt (no refactorisation)
     let model = spec.build(sigma_n);
     let ev = profiled::eval_with(&model, &data.t, &data.y, &best.theta, exec)?;
+    let jitter = ev.jitter;
     Ok(TrainResult {
         theta_hat: best.theta.clone(),
         lnp_peak: best.value,
@@ -224,6 +238,7 @@ pub fn train_model_seeded(
         n_evals,
         n_modes,
         restart_values,
+        jitter,
     })
 }
 

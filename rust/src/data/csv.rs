@@ -58,7 +58,10 @@ pub fn read_dataset(path: &Path) -> crate::Result<Dataset> {
     }
     anyhow::ensure!(t.len() >= 2, "CSV {} has fewer than 2 data rows", path.display());
     let label = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
-    Ok(Dataset::new(t, y, label))
+    // `parse::<f64>` happily accepts "NaN"/"inf" tokens — the data
+    // boundary rejects them before they can poison a covariance factor
+    Dataset::checked(t, y, label)
+        .map_err(|e| anyhow::anyhow!("CSV {}: {e}", path.display()))
 }
 
 #[cfg(test)]
@@ -83,6 +86,18 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("bad.csv");
         std::fs::write(&p, "t,y\n1,2\nnope,3\n").unwrap();
+        assert!(read_dataset(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_tokens() {
+        let dir = std::env::temp_dir().join("gpfast_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("nan.csv");
+        std::fs::write(&p, "t,y\n1,2\n2,NaN\n3,4\n").unwrap();
+        let e = read_dataset(&p).unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+        std::fs::write(&p, "t,y\n1,2\ninf,3\n").unwrap();
         assert!(read_dataset(&p).is_err());
     }
 

@@ -23,6 +23,22 @@ impl Dataset {
         Self { t, y, label: label.into() }
     }
 
+    /// Fallible constructor enforcing the data-boundary contract: every
+    /// input and observation must be finite. A NaN/±∞ that slips past
+    /// this boundary poisons a covariance factor irrecoverably, so the
+    /// external entry points (CSV import, artifact hydration) reject it
+    /// here with a clean error instead.
+    pub fn checked(t: Vec<f64>, y: Vec<f64>, label: impl Into<String>) -> crate::Result<Self> {
+        anyhow::ensure!(t.len() == y.len(), "t/y length mismatch: {} vs {}", t.len(), y.len());
+        for (i, &v) in t.iter().enumerate() {
+            anyhow::ensure!(v.is_finite(), "non-finite input t[{i}] = {v}");
+        }
+        for (i, &v) in y.iter().enumerate() {
+            anyhow::ensure!(v.is_finite(), "non-finite observation y[{i}] = {v}");
+        }
+        Ok(Self { t, y, label: label.into() })
+    }
+
     pub fn len(&self) -> usize {
         self.t.len()
     }
@@ -58,6 +74,16 @@ impl Dataset {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn checked_rejects_non_finite() {
+        assert!(Dataset::checked(vec![0.0, 1.0], vec![1.0, 2.0], "ok").is_ok());
+        let e = Dataset::checked(vec![0.0, f64::NAN], vec![1.0, 2.0], "bad").unwrap_err();
+        assert!(e.to_string().contains("t[1]"), "{e}");
+        let e = Dataset::checked(vec![0.0, 1.0], vec![f64::INFINITY, 2.0], "bad").unwrap_err();
+        assert!(e.to_string().contains("y[0]"), "{e}");
+        assert!(Dataset::checked(vec![0.0], vec![1.0, 2.0], "len").is_err());
+    }
 
     #[test]
     fn head_and_demean() {

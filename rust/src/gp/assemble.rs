@@ -156,6 +156,15 @@ pub fn hessian_contractions(
 /// each worker accumulates private `m×m` partials which are folded in
 /// tile order (per-thread-count deterministic, equal to serial to
 /// rounding).
+///
+/// Deliberately **not** ported to the `linalg::micro` GEMM engine: the
+/// sweep is transcendental-bound, not FLOP-bound. Each of the n(n+1)/2
+/// pairs evaluates `value_grad_hess` — sin/cos/exp chains for every
+/// periodic factor — and those dominate the `O(m²)` multiply-adds per
+/// pair by an order of magnitude, so a register-tiled contraction would
+/// shave only the minority term while forcing the `m²` derivative
+/// matrices to be materialised at `O(n² m²)` memory. The thread-level
+/// row-tile split above is the right (and sufficient) lever.
 pub fn hessian_contractions_with(
     model: &CovarianceModel,
     t: &[f64],

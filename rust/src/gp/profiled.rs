@@ -20,7 +20,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::kernels::CovarianceModel;
-use crate::linalg::{dot, Chol, Matrix};
+use crate::linalg::{dot, Chol, Ldlt, Matrix};
 use crate::math::{lgamma, LN_2PI_E};
 use crate::runtime::exec::{even_bounds, for_row_chunks, ExecutionContext};
 
@@ -56,7 +56,20 @@ pub struct ProfiledEval {
     pub chol: Chol,
     /// `α = K̃⁻¹ y`.
     pub alpha: Vec<f64>,
+    /// Diagonal jitter the escalation ladder had to add before `K̃`
+    /// factorised (absolute units of the covariance diagonal). `0.0` on
+    /// the clean path — asserted by the robustness soak to prove the
+    /// ladder costs nothing when `K̃` is healthy.
+    pub jitter: f64,
 }
+
+/// Number of geometrically-spaced jittered retries after the clean
+/// attempt, before the LDLᵀ-calibrated last rung.
+const JITTER_RUNGS: usize = 5;
+/// Relative size of the first rung's jitter: `1e-10 · tr(K̃)/n`.
+const JITTER_REL0: f64 = 1e-10;
+/// Geometric growth between rungs (1e-10 → 1e-2 relative over 5 rungs).
+const JITTER_GROWTH: f64 = 100.0;
 
 /// Fill `out[i] = f(i)` for `i` in `0..out.len()`, row-parallel. The
 /// caller reduces `out` serially in index order, so any reduction built
@@ -107,11 +120,25 @@ impl ProfiledEval {
     }
 
     /// Evaluate from an assembled covariance with a parallel Cholesky.
+    ///
+    /// This is the single factor-producing choke point of both backends,
+    /// and it carries the **jitter-escalation ladder** of the numerical
+    /// health tier: a clean first attempt (bit-identical to the
+    /// pre-ladder arithmetic, zero extra allocation), then
+    /// [`JITTER_RUNGS`] geometrically growing diagonal jitters, and as a
+    /// last rung an LDLᵀ diagnosis of the unjittered matrix whose inertia
+    /// and minimum pivot calibrate one final repair. The jitter that made
+    /// the factorisation succeed is recorded in [`ProfiledEval::jitter`]
+    /// (`0.0` on the clean path) and propagated into
+    /// `TrainResult`/`TrainedModel`/reports. `k` must carry full
+    /// symmetric storage (both triangles), which every assembly path
+    /// produces — the retry rungs repair the clobbered lower triangle
+    /// from the untouched upper one.
     pub fn from_cov_with(k: Matrix, y: &[f64], ctx: &ExecutionContext) -> crate::Result<Self> {
         EVAL_COUNT.fetch_add(1, Ordering::Relaxed);
         let n = y.len();
         anyhow::ensure!(k.rows() == n, "covariance/data size mismatch");
-        let chol = Chol::factor_owned_with(k, ctx)?;
+        let (chol, jitter) = factor_with_escalation(k, ctx)?;
         let alpha = chol.solve(y);
         let sigma_f_hat2 = dot(y, &alpha) / n as f64;
         anyhow::ensure!(
@@ -119,7 +146,7 @@ impl ProfiledEval {
             "degenerate σ̂_f² = {sigma_f_hat2}"
         );
         let lnp = -0.5 * (n as f64) * (LN_2PI_E + sigma_f_hat2.ln()) - 0.5 * chol.logdet();
-        Ok(Self { lnp, sigma_f_hat2, chol, alpha })
+        Ok(Self { lnp, sigma_f_hat2, chol, alpha, jitter })
     }
 
     /// Gradient of `ln P_max` (eq. 2.17) given the assembled `∂K̃/∂ϑ_a`,
@@ -151,6 +178,74 @@ impl ProfiledEval {
     /// `W = K̃⁻¹` with both inversion stages row-parallel.
     pub fn inverse_with(&self, ctx: &ExecutionContext) -> Matrix {
         self.chol.inverse_with(ctx)
+    }
+}
+
+/// Factor `K̃ = LLᵀ` under the bounded jitter-escalation ladder.
+///
+/// Returns the factor and the diagonal jitter that was needed (`0.0` when
+/// the clean attempt succeeds). The failed attempts cost no reassembly:
+/// the blocked factorisation writes only the diagonal and strict lower
+/// triangle, so each rung restores the lower triangle from the untouched
+/// upper one and the saved `O(n)` diagonal, then retries in place.
+fn factor_with_escalation(k: Matrix, ctx: &ExecutionContext) -> crate::Result<(Chol, f64)> {
+    let n = k.rows();
+    let diag: Vec<f64> = (0..n).map(|i| k[(i, i)]).collect();
+    // covariance diagonals are positive; the ladder scales relative to
+    // their mean so rungs are unit-free
+    let scale = if n == 0 {
+        f64::MIN_POSITIVE
+    } else {
+        (diag.iter().sum::<f64>() / n as f64).abs().max(f64::MIN_POSITIVE)
+    };
+    // rung 0: today's exact arithmetic — the clean path is bit-identical
+    // to a ladderless build
+    let mut m = match Chol::factor_owned_recoverable_with(k, ctx) {
+        Ok(c) => return Ok((c, 0.0)),
+        Err((m, _)) => m,
+    };
+    let repair = |m: &mut Matrix, jit: f64| {
+        m.mirror_upper_to_lower();
+        for (i, &d) in diag.iter().enumerate() {
+            m[(i, i)] = d + jit;
+        }
+    };
+    // geometric rungs
+    let mut rel = JITTER_REL0;
+    let mut last_err = None;
+    for _ in 0..JITTER_RUNGS {
+        let jit = rel * scale;
+        repair(&mut m, jit);
+        match Chol::factor_owned_recoverable_with(m, ctx) {
+            Ok(c) => return Ok((c, jit)),
+            Err((mm, e)) => {
+                m = mm;
+                last_err = Some(e);
+            }
+        }
+        rel *= JITTER_GROWTH;
+    }
+    // last rung: LDLᵀ on the unjittered matrix is total — its inertia
+    // says how indefinite K̃ really is, and its most negative pivot
+    // calibrates a final spectrum-shifting repair
+    repair(&mut m, 0.0);
+    let ldlt = Ldlt::factor(&m);
+    let inertia = ldlt.inertia();
+    let min_d = ldlt.min_d();
+    let jit = 2.0 * (-min_d).max(0.0) + 1e-8 * scale;
+    repair(&mut m, jit);
+    match Chol::factor_owned_recoverable_with(m, ctx) {
+        Ok(c) => Ok((c, jit)),
+        Err((_, e)) => Err(anyhow::anyhow!(
+            "covariance stayed non-PD through the jitter ladder \
+             (LDLᵀ inertia +{}/−{}/0:{}, min pivot {:.3e}, final jitter {:.3e}): {}",
+            inertia.positive,
+            inertia.negative,
+            inertia.zero,
+            min_d,
+            jit,
+            last_err.map_or_else(|| e.to_string(), |le| le.to_string())
+        )),
     }
 }
 

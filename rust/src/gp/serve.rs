@@ -81,6 +81,10 @@ pub struct Predictor {
     chol: Chol,
     alpha: Vec<f64>,
     sigma_f_hat2: f64,
+    /// Jitter the escalation ladder applied when the cached factor was
+    /// produced (`0.0` for a clean factorisation; updated on every
+    /// refit/adopt).
+    jitter: f64,
     queries: AtomicUsize,
     observations: AtomicUsize,
     evictions: AtomicUsize,
@@ -123,6 +127,7 @@ impl Predictor {
             chol: ev.chol,
             alpha: ev.alpha,
             sigma_f_hat2: ev.sigma_f_hat2,
+            jitter: ev.jitter,
             queries: AtomicUsize::new(0),
             observations: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
@@ -158,6 +163,12 @@ impl Predictor {
 
     /// The live cached factor (for soak tests and persistence — callers
     /// must not rely on the garbage upper triangle).
+    /// Jitter applied when the cached factor was produced (`0.0` on the
+    /// clean path) — the per-slot factor-health report reads this.
+    pub fn jitter(&self) -> f64 {
+        self.jitter
+    }
+
     pub fn chol(&self) -> &Chol {
         &self.chol
     }
@@ -316,6 +327,10 @@ impl Predictor {
         scored: ScoredObservation,
     ) -> crate::Result<()> {
         anyhow::ensure!(
+            t_new.is_finite() && y_new.is_finite(),
+            "non-finite observation (t = {t_new}, y = {y_new}) rejected at the data boundary"
+        );
+        anyhow::ensure!(
             scored.w.len() == self.t.len(),
             "scored observation is stale: solved against n = {}, factor has n = {}",
             scored.w.len(),
@@ -334,6 +349,10 @@ impl Predictor {
     /// bordered-factorisation row ([`Chol::extend`]) and refresh `α` and
     /// `σ̂_f²` with two triangular solves. No refactorisation.
     pub fn observe(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        anyhow::ensure!(
+            t_new.is_finite() && y_new.is_finite(),
+            "non-finite observation (t = {t_new}, y = {y_new}) rejected at the data boundary"
+        );
         self.append(t_new, y_new)?;
         self.refresh();
         Ok(())
@@ -349,6 +368,13 @@ impl Predictor {
     /// is not.
     pub fn observe_batch(&mut self, t_new: &[f64], y_new: &[f64]) -> crate::Result<()> {
         anyhow::ensure!(t_new.len() == y_new.len(), "t/y batch length mismatch");
+        for (i, (&tn, &yn)) in t_new.iter().zip(y_new).enumerate() {
+            anyhow::ensure!(
+                tn.is_finite() && yn.is_finite(),
+                "non-finite observation in batch at index {i} (t = {tn}, y = {yn}) \
+                 rejected at the data boundary"
+            );
+        }
         let mut failure = None;
         let mut appended = 0usize;
         for (&tn, &yn) in t_new.iter().zip(y_new) {
@@ -456,6 +482,7 @@ impl Predictor {
         self.chol = ev.chol;
         self.alpha = ev.alpha;
         self.sigma_f_hat2 = ev.sigma_f_hat2;
+        self.jitter = ev.jitter;
     }
 
     /// Recompute `α = K̃⁻¹y` and `σ̂_f² = yᵀα/n` from the current factor

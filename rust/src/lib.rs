@@ -121,7 +121,7 @@
 //! ([`coordinator::ServeSession::needs_retrain`]).
 //!
 //! The session runs a **self-healing bounded-memory lifecycle** —
-//! *grow → evict → refresh → retrain* (state machine in
+//! *grow → evict → refresh → retrain → quarantine* (state machine in
 //! [`coordinator::serve`]):
 //!
 //! * **grow** — `O(n²)` factor extension per absorbed point;
@@ -131,12 +131,53 @@
 //!   [`linalg::Chol::shrink_front`]: the deleted column seeds a rank-1
 //!   update sweep on the trailing block), so memory is hard-bounded;
 //! * **refresh** — every `refresh_every` evictions the factors are
-//!   refactorised cold from the live window (all-or-nothing across
-//!   slots), washing out accumulated rank-1 rounding drift;
-//! * **retrain** — when drift latches, [`coordinator::ServeSession::retrain`]
-//!   reruns training on the window (warm-started from the incumbent ϑ̂),
-//!   recomputes each Laplace evidence and **hot-swaps** slots, ranking
-//!   and drift baselines without dropping the session.
+//!   refactorised cold from the live window (committed per slot on
+//!   success), washing out accumulated rank-1 rounding drift; each
+//!   refreshed factor's spectral conditioning is probed and compared
+//!   against the session's condition limit;
+//! * **retrain** — when drift or a health latch fires,
+//!   [`coordinator::ServeSession::retrain`] reruns training on the
+//!   window (warm-started from the incumbent ϑ̂), recomputes each Laplace
+//!   evidence and **hot-swaps** slots, ranking and drift baselines
+//!   without dropping the session;
+//! * **quarantine** — a slot whose factor maintenance becomes
+//!   unrecoverable is frozen at its last good factor and **routed
+//!   around** (Winner falls to the next-ranked healthy slot, Averaged
+//!   renormalises) instead of dropping the session; a successful retrain
+//!   **re-enters** it.
+//!
+//! ### Numerical-health tier
+//!
+//! Robustness machinery keeping the pipeline alive on ill-conditioned
+//! or corrupted inputs, with zero cost on the clean path:
+//!
+//! * **non-finite rejection at the data boundary** — [`data::Dataset`],
+//!   the CSV loader and [`coordinator::ServeSession::observe`] all
+//!   reject NaN/∞ inputs before any factor is touched;
+//! * **jitter-escalation ladder** — when `K̃` fails to factorise,
+//!   [`gp::profiled`] retries with geometrically escalating diagonal
+//!   jitter (relative to the mean diagonal), recording the applied
+//!   jitter into the evaluation, the [`coordinator::TrainResult`], the
+//!   persisted artifact and the comparison report; the last rung runs an
+//!   **LDLᵀ diagnosis** ([`linalg::Ldlt`]: diagonal-pivoted, indefinite-
+//!   safe — logdet via |D| and inertia counts) to calibrate the final
+//!   repair. A clean factorisation takes rung 0 with the *exact* old
+//!   arithmetic — bit-identical, recorded jitter 0. Failed proposals get
+//!   a finite penalised objective instead of aborting the optimiser.
+//! * **spectral diagnostics** — [`linalg::sym_eigenvalues`] (Householder
+//!   tridiagonalisation + implicit-shift QL, pinned to 60-digit mpmath
+//!   goldens at n = 64) and a Hager-style 1-norm condition estimator
+//!   ([`linalg::Chol::cond_1est`], `O(n²)`) wired into the serving
+//!   refresh: estimates past the session's limit latch **degraded** →
+//!   `needs_retrain`. Per-slot health (condition estimate, applied
+//!   jitter, downdate-failure / refresh counters, quarantine state) is
+//!   reported by [`coordinator::ServeSession::health`].
+//! * **fault injection** — [`coordinator::FaultPlan`] deterministically
+//!   corrupts an observation stream (near-duplicates, huge outliers,
+//!   non-finite values) for the recovery soak
+//!   (`rust/tests/soak_faults.rs`): never panic, never serve a
+//!   non-finite value, quarantine → retrain → re-entry, and the
+//!   clean-data control arm bit-identical with zero recorded jitter.
 //!
 //! **Persistence** closes the loop: [`coordinator::TrainedModel`]
 //! `save`/`load` write a versioned little-endian binary (spec + data +
@@ -152,7 +193,8 @@
 //! from-scratch refit of the live window to 1e-8, then restarts serving
 //! from the saved artifact; `rust/tests/soak_serving.rs` is the
 //! long-haul soak (3× window capacity, per-step cold-refit invariants,
-//! drift-injected retrain recovery).
+//! drift-injected retrain recovery) and `rust/tests/soak_faults.rs` the
+//! fault-injected recovery soak.
 //!
 //! ## Quick start
 //!

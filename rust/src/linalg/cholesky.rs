@@ -114,6 +114,33 @@ impl Chol {
         Ok(Self { l: k, logdet: 2.0 * logdet })
     }
 
+    /// Owned factorisation that hands the buffer back on failure.
+    ///
+    /// Identical arithmetic to [`Chol::factor_owned_with`] (bit-identical
+    /// success path), but a failed pivot returns the clobbered matrix
+    /// alongside the error instead of dropping it. The factorisation only
+    /// writes the diagonal and strict lower triangle, so a caller that
+    /// saved the `O(n)` diagonal can repair the buffer from the untouched
+    /// upper triangle ([`Matrix::mirror_upper_to_lower`]) and retry —
+    /// the jitter-escalation ladder of [`crate::gp::profiled`] does
+    /// exactly this, without re-allocating or re-assembling `K̃`.
+    pub fn factor_owned_recoverable_with(
+        mut k: Matrix,
+        ctx: &ExecutionContext,
+    ) -> Result<Self, (Matrix, CholError)> {
+        match factor_in_place_ctx(&mut k, ctx) {
+            Ok(()) => {
+                let n = k.rows();
+                let mut logdet = 0.0;
+                for i in 0..n {
+                    logdet += k[(i, i)].ln();
+                }
+                Ok(Self { l: k, logdet: 2.0 * logdet })
+            }
+            Err(e) => Err((k, e)),
+        }
+    }
+
     /// Reassemble a factorisation from its raw parts — the persistence
     /// path ([`crate::coordinator::TrainedModel`] save/load). The caller
     /// guarantees `l` is a valid lower-triangular Cholesky factor (the
@@ -148,6 +175,40 @@ impl Chol {
         solve_lower(&self.l, &mut x);
         solve_lower_transpose(&self.l, &mut x);
         x
+    }
+
+    /// Hager-style 1-norm condition estimate `κ₁(K) ≈ ‖K‖₁·‖K⁻¹‖₁` of
+    /// the factored matrix, in `O(n²)` — a handful of `L(Lᵀx)` products
+    /// and cached-factor solves, no refactorisation and no
+    /// eigendecomposition. This is the per-refresh conditioning probe of
+    /// the serving layer's factor-health monitoring; `f64::INFINITY`
+    /// signals a non-finite factor.
+    pub fn cond_1est(&self) -> f64 {
+        let n = self.dim();
+        if n == 0 {
+            return 1.0;
+        }
+        let norm_a = super::sym_one_norm_est(n, |x| self.apply(x));
+        let norm_ainv = super::sym_one_norm_est(n, |x| self.solve(x));
+        norm_a * norm_ainv
+    }
+
+    /// `K·x` reconstituted from the factor: `L·(Lᵀ·x)`. Reads only the
+    /// lower triangle (the stored upper triangle is garbage).
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        debug_assert_eq!(x.len(), n);
+        // u = Lᵀ x: u_i = Σ_{k≥i} L[k][i]·x[k]
+        let mut u = vec![0.0; n];
+        for k in 0..n {
+            let row = &self.l.row(k)[..=k];
+            let xk = x[k];
+            for (i, &lki) in row.iter().enumerate() {
+                u[i] = lki.mul_add(xk, u[i]);
+            }
+        }
+        // y = L u: y_i = Σ_{k≤i} L[i][k]·u[k]
+        (0..n).map(|i| super::dot(&self.l.row(i)[..=i], &u[..=i])).collect()
     }
 
     /// Solve `L w = b` only (half-solve; `wᵀw = bᵀ K⁻¹ b`).

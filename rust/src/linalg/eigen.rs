@@ -1,32 +1,60 @@
-//! Cyclic Jacobi eigensolver for small symmetric matrices.
+//! Symmetric eigensolvers and spectral diagnostics.
 //!
-//! Used by the nested sampler's bounding-ellipsoid proposal (the
-//! MULTINEST-style baseline) and by the Fig. 2 corner-plot diagnostics,
-//! where matrices are `m×m` with m ≤ ~10 — Jacobi is simple, provably
-//! convergent, and plenty fast at that size.
+//! Two tiers:
+//!
+//! * [`sym_eigen`] — cyclic Jacobi with eigenvectors, for the small
+//!   (`m ≤ ~10`) matrices of the nested sampler's bounding-ellipsoid
+//!   proposal and the Fig. 2 corner-plot diagnostics. Jacobi is simple,
+//!   provably convergent, and plenty fast at that size.
+//! * [`sym_eigenvalues_with`] — eigenvalues of an `n`-sized symmetric
+//!   matrix via Householder tridiagonalisation (row-parallel through the
+//!   [`ExecutionContext`], bit-identical for any thread count) followed
+//!   by implicit-shift symmetric QL on the tridiagonal. This is the
+//!   spectral back-end of the numerical health tier: it prices the exact
+//!   `λ_max/λ_min` that [`sym_one_norm_est`]-based condition estimates
+//!   (see [`super::Chol::cond_1est`]) approximate in `O(n²)`.
+//!
+//! Both refuse to return garbage: the Jacobi sweep cap and the QL
+//! iteration cap are *checked*, surfacing non-convergence as an explicit
+//! error instead of silently handing back a half-rotated matrix.
 
 use super::Matrix;
+use crate::runtime::exec::{even_bounds, for_row_chunks, ExecutionContext, PAR_MIN_WORK};
 
 /// Eigendecomposition `A = V diag(λ) Vᵀ` of a symmetric matrix.
 ///
 /// Returns `(eigenvalues, eigenvectors)` with eigenvalues ascending and
 /// eigenvectors in the *columns* of the returned matrix.
+///
+/// Panics if the Jacobi iteration fails to converge within the sweep cap
+/// (see [`sym_eigen_checked`] for the fallible form) — previously this
+/// case silently returned whatever the 64th sweep left behind.
 pub fn sym_eigen(a: &Matrix) -> (Vec<f64>, Matrix) {
+    sym_eigen_checked(a).expect("Jacobi eigensolver did not converge")
+}
+
+/// [`sym_eigen`], surfacing non-convergence as an `Err` carrying the
+/// residual off-diagonal norm instead of panicking.
+pub fn sym_eigen_checked(a: &Matrix) -> crate::Result<(Vec<f64>, Matrix)> {
     assert_eq!(a.rows(), a.cols(), "sym_eigen needs a square matrix");
     let n = a.rows();
     let mut m = a.clone();
     m.symmetrize();
     let mut v = Matrix::eye(n);
     const MAX_SWEEPS: usize = 64;
-    for _ in 0..MAX_SWEEPS {
-        // off-diagonal Frobenius norm
+    let off_norm = |m: &Matrix| -> f64 {
         let mut off = 0.0;
         for i in 0..n {
             for j in (i + 1)..n {
                 off += m[(i, j)] * m[(i, j)];
             }
         }
-        if off.sqrt() < 1e-14 * m.fro_norm().max(1e-300) {
+        off.sqrt()
+    };
+    let mut converged = false;
+    for _ in 0..MAX_SWEEPS {
+        if off_norm(&m) < 1e-14 * m.fro_norm().max(1e-300) {
+            converged = true;
             break;
         }
         for p in 0..n {
@@ -64,6 +92,16 @@ pub fn sym_eigen(a: &Matrix) -> (Vec<f64>, Matrix) {
             }
         }
     }
+    if !converged {
+        // one more residual check: the final sweep may have finished the
+        // job without the loop head seeing it
+        let off = off_norm(&m);
+        anyhow::ensure!(
+            off < 1e-14 * m.fro_norm().max(1e-300),
+            "Jacobi eigensolver did not converge in {MAX_SWEEPS} sweeps \
+             (residual off-diagonal norm {off:.3e})"
+        );
+    }
     // extract and sort ascending
     let mut idx: Vec<usize> = (0..n).collect();
     let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
@@ -75,13 +113,249 @@ pub fn sym_eigen(a: &Matrix) -> (Vec<f64>, Matrix) {
             sorted_vecs[(r, new_col)] = v[(r, old_col)];
         }
     }
-    (sorted_vals, sorted_vecs)
+    Ok((sorted_vals, sorted_vecs))
+}
+
+/// Eigenvalues (ascending) of an `n×n` symmetric matrix — serial form of
+/// [`sym_eigenvalues_with`].
+pub fn sym_eigenvalues(a: &Matrix) -> crate::Result<Vec<f64>> {
+    sym_eigenvalues_with(a, &ExecutionContext::seq())
+}
+
+/// Eigenvalues (ascending) of an `n×n` symmetric matrix: Householder
+/// tridiagonalisation + implicit-shift symmetric QL.
+///
+/// The `O(n³)` reduction partitions its trailing matvec and rank-2
+/// update over row tiles of the context; per-row arithmetic is
+/// independent of the partition, so the result is bit-identical for any
+/// thread count. The `O(n²)` QL phase is scalar. Errors if an eigenvalue
+/// fails to converge within the iteration cap.
+pub fn sym_eigenvalues_with(a: &Matrix, ctx: &ExecutionContext) -> crate::Result<Vec<f64>> {
+    assert_eq!(a.rows(), a.cols(), "sym_eigenvalues needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let mut m = a.clone();
+    m.symmetrize();
+    let (mut d, mut e) = tridiagonalize(&mut m, ctx);
+    tql_eigenvalues(&mut d, &mut e)?;
+    d.sort_by(|x, y| x.partial_cmp(y).expect("non-finite eigenvalue"));
+    Ok(d)
+}
+
+/// Householder reduction of a fully-stored symmetric matrix to
+/// tridiagonal form. Returns `(d, e)`: the diagonal and the `n-1`
+/// subdiagonal entries. `m` is clobbered.
+fn tridiagonalize(m: &mut Matrix, ctx: &ExecutionContext) -> (Vec<f64>, Vec<f64>) {
+    let n = m.rows();
+    let mut e = vec![0.0; n.saturating_sub(1)];
+    let mut v = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    for k in 0..n.saturating_sub(2) {
+        let rows = n - k - 1; // trailing rows k+1..n
+        // x = column k below the subdiagonal head
+        let mut norm2 = 0.0;
+        for i in (k + 1)..n {
+            let xi = m[(i, k)];
+            v[i] = xi;
+            norm2 += xi * xi;
+        }
+        let xnorm = norm2.sqrt();
+        let x0 = v[k + 1];
+        // already tridiagonal in this column?
+        if norm2 - x0 * x0 <= 0.0 || xnorm == 0.0 {
+            e[k] = x0;
+            continue;
+        }
+        let alpha = -xnorm.copysign(x0);
+        e[k] = alpha;
+        v[k + 1] -= alpha;
+        let vtv = norm2 - 2.0 * alpha * x0 + alpha * alpha;
+        if vtv <= 0.0 {
+            continue;
+        }
+        let tau = 2.0 / vtv;
+        // p = τ·B·v over the trailing block B = m[k+1.., k+1..]
+        let jobs = if rows * rows >= PAR_MIN_WORK { ctx.threads() } else { 1 };
+        let bounds = even_bounds(k + 1, n, jobs);
+        {
+            let mslice: &[f64] = m.as_slice();
+            let vref: &[f64] = &v;
+            for_row_chunks(&mut w[(k + 1)..n], 1, &bounds, ctx, |chunk, r0, r1| {
+                for r in r0..r1 {
+                    let row = &mslice[r * n + k + 1..r * n + n];
+                    chunk[r - r0] = tau * super::dot(row, &vref[(k + 1)..n]);
+                }
+            });
+        }
+        // w = p − (τ/2)(pᵀv)·v
+        let pv = super::dot(&w[(k + 1)..n], &v[(k + 1)..n]);
+        let half = 0.5 * tau * pv;
+        for i in (k + 1)..n {
+            w[i] -= half * v[i];
+        }
+        // B ← B − v·wᵀ − w·vᵀ, row-parallel (each row independent)
+        {
+            let tail = &mut m.as_mut_slice()[(k + 1) * n..];
+            let vref: &[f64] = &v;
+            let wref: &[f64] = &w;
+            for_row_chunks(tail, n, &bounds, ctx, |chunk, r0, r1| {
+                for r in r0..r1 {
+                    let lr = r - r0;
+                    let row = &mut chunk[lr * n + k + 1..lr * n + n];
+                    super::axpy(-vref[r], &wref[(k + 1)..n], row);
+                    super::axpy(-wref[r], &vref[(k + 1)..n], row);
+                }
+            });
+        }
+    }
+    if n >= 2 {
+        e[n - 2] = m[(n - 1, n - 2)];
+    }
+    let d: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    (d, e)
+}
+
+/// Implicit-shift symmetric QL on a tridiagonal `(d, e)`, eigenvalues
+/// only. `d` holds the diagonal (overwritten with unsorted eigenvalues);
+/// `e` the `n-1` subdiagonal entries (clobbered). Errors if any
+/// eigenvalue needs more than the iteration cap.
+fn tql_eigenvalues(d: &mut [f64], e: &mut [f64]) -> crate::Result<()> {
+    let n = d.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    const MAX_ITER: usize = 50;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // locate a negligible subdiagonal element
+            let mut mm = l;
+            while mm + 1 < n {
+                let dd = d[mm].abs() + d[mm + 1].abs();
+                if e[mm].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                mm += 1;
+            }
+            if mm == l {
+                break;
+            }
+            iter += 1;
+            anyhow::ensure!(
+                iter <= MAX_ITER,
+                "tridiagonal QL failed to converge on eigenvalue {l} \
+                 after {MAX_ITER} implicit-shift iterations"
+            );
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[mm] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..mm).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // rotation annihilated early: deflate and restart
+                    d[i + 1] -= p;
+                    e[mm] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                f = (d[i] - g) * s + 2.0 * c * b;
+                p = s * f;
+                d[i + 1] = g + p;
+                g = c * f - b;
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[mm] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Hager-style estimate of the 1-norm of a symmetric operator, given only
+/// matrix–vector products `x ↦ A·x` — `O(a few)` applications, each
+/// `O(n²)` for a dense factor. Used with `A = K̃` and `A = K̃⁻¹` (through
+/// the cached Cholesky solve) to price a condition estimate per window
+/// refresh without an `O(n³)` eigendecomposition; see
+/// [`super::Chol::cond_1est`].
+///
+/// Returns `f64::INFINITY` when an application produces non-finite
+/// values — the conservative answer for health monitoring.
+pub fn sym_one_norm_est<F: FnMut(&[f64]) -> Vec<f64>>(n: usize, mut apply: F) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let mut x = vec![1.0 / n as f64; n];
+    let mut est = 0.0f64;
+    const MAX_ITER: usize = 5;
+    for iter in 0..MAX_ITER {
+        let y = apply(&x);
+        debug_assert_eq!(y.len(), n);
+        let y1: f64 = y.iter().map(|v| v.abs()).sum();
+        if !y1.is_finite() {
+            return f64::INFINITY;
+        }
+        if iter > 0 && y1 <= est {
+            break; // no longer improving
+        }
+        est = est.max(y1);
+        // ξ = sign(y); z = Aᵀξ = Aξ (symmetric)
+        let xi: Vec<f64> = y.iter().map(|v| if *v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let z = apply(&xi);
+        let mut j = 0;
+        let mut zmax = 0.0f64;
+        let mut zdotx = 0.0;
+        for (i, &zi) in z.iter().enumerate() {
+            if !zi.is_finite() {
+                return f64::INFINITY;
+            }
+            zdotx += zi * x[i];
+            if zi.abs() > zmax {
+                zmax = zi.abs();
+                j = i;
+            }
+        }
+        if zmax <= zdotx.abs() {
+            break; // Hager's optimality condition: eⱼ won't improve
+        }
+        x.iter_mut().for_each(|v| *v = 0.0);
+        x[j] = 1.0;
+    }
+    est
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Chol;
     use crate::rng::Xoshiro256;
+
+    fn random_sym(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
 
     #[test]
     fn diagonal_matrix() {
@@ -146,5 +420,86 @@ mod tests {
         let (vals, _) = sym_eigen(&a);
         let tr: f64 = vals.iter().sum();
         assert!((tr - 12.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn tridiag_qr_matches_jacobi_small() {
+        for &(n, seed) in &[(2usize, 11u64), (3, 12), (5, 13), (8, 14), (10, 15)] {
+            let a = random_sym(n, seed);
+            let (jac, _) = sym_eigen(&a);
+            let qr = sym_eigenvalues(&a).unwrap();
+            assert_eq!(qr.len(), n);
+            let scale = jac.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..n {
+                assert!(
+                    (jac[i] - qr[i]).abs() <= 1e-10 * scale,
+                    "n={n} i={i}: jacobi {} vs qr {}",
+                    jac[i],
+                    qr[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tridiag_qr_parallel_bit_identical() {
+        let a = random_sym(80, 21);
+        let seq = sym_eigenvalues(&a).unwrap();
+        let par = sym_eigenvalues_with(&a, &ExecutionContext::new(4)).unwrap();
+        assert_eq!(seq, par, "eigenvalues must be bit-identical across thread counts");
+        // and match Jacobi to rounding
+        let (jac, _) = sym_eigen(&a);
+        let scale = jac.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for i in 0..80 {
+            assert!((jac[i] - seq[i]).abs() <= 1e-8 * scale, "i={i}");
+        }
+    }
+
+    #[test]
+    fn one_norm_est_exact_on_small() {
+        // ||A||₁ of a known matrix; the estimator is exact on matrices
+        // whose maximising column is found by the power step
+        let a = Matrix::from_rows(&[&[4.0, -1.0, 0.0], &[-1.0, 3.0, 2.0], &[0.0, 2.0, 5.0]]);
+        let est = sym_one_norm_est(3, |x| a.matvec(x));
+        let true_norm = 7.0; // max column abs-sum: |0|+|2|+|5| = 7
+        assert!(est <= true_norm + 1e-12);
+        assert!(est >= 0.5 * true_norm, "est {est} too far below {true_norm}");
+    }
+
+    #[test]
+    fn cond_est_brackets_true_condition() {
+        // SPD with known spectrum: diag(λ) rotated by a random orthogonal
+        for &(n, lo, hi) in &[(12usize, 1e-3f64, 1.0f64), (24, 1e-6, 10.0)] {
+            let base = random_sym(n, 31 + n as u64);
+            let (_, v) = sym_eigen(&base);
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..n {
+                        // geometric spread of eigenvalues in [lo, hi]
+                        let lam = lo * (hi / lo).powf(k as f64 / (n - 1) as f64);
+                        acc += v[(i, k)] * lam * v[(j, k)];
+                    }
+                    a[(i, j)] = acc;
+                }
+            }
+            a.symmetrize();
+            let chol = Chol::factor(&a).unwrap();
+            let est = chol.cond_1est();
+            let true_cond = hi / lo;
+            // 1-norm vs 2-norm condition differ by at most a factor n on
+            // either side; the estimator is a lower bound on κ₁
+            assert!(
+                est >= true_cond / (10.0 * n as f64) && est <= true_cond * (10.0 * n as f64),
+                "n={n}: est {est:.3e} vs true κ₂ {true_cond:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_finite_application_reports_infinite_norm() {
+        let est = sym_one_norm_est(3, |_| vec![f64::NAN, 1.0, 2.0]);
+        assert!(est.is_infinite());
     }
 }

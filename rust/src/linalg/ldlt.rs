@@ -1,0 +1,340 @@
+//! Diagonally pivoted LDLᵀ factorisation — the indefinite-safe fallback.
+//!
+//! `P A Pᵀ = L D Lᵀ` with `L` unit lower triangular, `D` diagonal and `P`
+//! a symmetric row/column permutation chosen greedily by largest remaining
+//! diagonal magnitude. Unlike the Cholesky of [`super::Chol`], the
+//! factorisation is *total*: it never fails, even on indefinite or
+//! singular input — pivots whose magnitude falls below a relative
+//! tolerance are classified as numerically zero and their elimination
+//! step is skipped. That makes it the right tool for the bottom rung of
+//! the jitter-escalation ladder ([`crate::gp::profiled`]): when every
+//! jittered LLᵀ attempt has failed, the LDLᵀ inertia and minimum pivot
+//! diagnose *how* indefinite `K̃` is and calibrate the final repair.
+//!
+//! Diagonal (1×1) pivoting is not as robust as Bunch–Kaufman 2×2
+//! pivoting on adversarial indefinite matrices (a zero diagonal with
+//! large off-diagonal coupling loses accuracy), but the matrices arriving
+//! here are symmetric covariances that are PD up to rounding — near-zero
+//! or slightly negative eigenvalues — where diagonal pivoting is accurate
+//! and half the code. The trailing update runs on full symmetric storage
+//! (simpler pivot swaps), so the factorisation costs ~2× the flops of the
+//! packed LLᵀ; it only runs on the rare escalation path.
+
+use super::{axpy, Matrix};
+
+/// Signature of a symmetric matrix: the count of positive, negative and
+/// (numerically) zero eigenvalues, read off the LDLᵀ pivots by
+/// Sylvester's law of inertia.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Inertia {
+    pub positive: usize,
+    pub negative: usize,
+    pub zero: usize,
+}
+
+/// A computed `P A Pᵀ = L D Lᵀ` factorisation.
+#[derive(Clone, Debug)]
+pub struct Ldlt {
+    /// Unit lower triangle (strict lower part stored; diagonal implicit).
+    l: Matrix,
+    /// The diagonal of `D`; entries classified as numerically zero are
+    /// stored as exact `0.0`.
+    d: Vec<f64>,
+    /// `perm[i]` = original row/column sitting at pivoted position `i`.
+    perm: Vec<usize>,
+    /// Relative zero-pivot threshold used during factorisation.
+    tol: f64,
+}
+
+impl Ldlt {
+    /// Factor a symmetric matrix. Reads the full matrix (both triangles;
+    /// it is symmetrised on entry like [`super::sym_eigen`]). Never
+    /// fails: rank deficiency shows up as zero entries of `d`.
+    pub fn factor(a: &Matrix) -> Self {
+        assert_eq!(a.rows(), a.cols(), "LDLᵀ requires a square matrix");
+        let n = a.rows();
+        let mut m = a.clone();
+        m.symmetrize();
+        let max_diag = (0..n).map(|i| m[(i, i)].abs()).fold(0.0f64, f64::max);
+        // Relative zero threshold: anything the elimination drives below
+        // n·ε·max|a_ii| is indistinguishable from zero at working
+        // precision.
+        let tol = (n as f64) * f64::EPSILON * max_diag.max(f64::MIN_POSITIVE);
+        let mut l = Matrix::zeros(n, n);
+        let mut d = vec![0.0; n];
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut col = vec![0.0; n];
+        for k in 0..n {
+            // greedy diagonal pivot: largest remaining |m_ii|
+            let mut p = k;
+            let mut best = m[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = m[(i, i)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if p != k {
+                swap_sym(&mut m, k, p);
+                swap_rows_prefix(&mut l, k, p, k);
+                perm.swap(k, p);
+            }
+            let dk = m[(k, k)];
+            if !(dk.abs() > tol) {
+                // numerically zero pivot (or NaN): skip elimination. The
+                // remaining diagonal is ≤ tol too (pivoting picked the
+                // max), so the whole trailing block is noise.
+                d[k] = 0.0;
+                continue;
+            }
+            d[k] = dk;
+            let inv = 1.0 / dk;
+            for i in (k + 1)..n {
+                col[i] = m[(i, k)] * inv;
+                l[(i, k)] = col[i];
+            }
+            // trailing update on full symmetric storage:
+            // m[i][j] -= l_i · d · l_j
+            for i in (k + 1)..n {
+                let scale = -col[i] * dk;
+                let (lcol, row) = (&col[(k + 1)..n], &mut m.row_mut(i)[(k + 1)..n]);
+                axpy(scale, lcol, row);
+            }
+        }
+        Self { l, d, perm, tol }
+    }
+
+    /// Dimension `n`.
+    pub fn dim(&self) -> usize {
+        self.d.len()
+    }
+
+    /// The pivot diagonal `D` (in pivoted order; zeros mark numerically
+    /// singular directions).
+    pub fn d(&self) -> &[f64] {
+        &self.d
+    }
+
+    /// The smallest (most negative) pivot — a cheap proxy for how far the
+    /// matrix is from positive definite. `0.0` for an exactly
+    /// rank-deficient PSD matrix.
+    pub fn min_d(&self) -> f64 {
+        self.d.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Matrix inertia via Sylvester's law: the signs of `D` are the signs
+    /// of the eigenvalues.
+    pub fn inertia(&self) -> Inertia {
+        let mut it = Inertia { positive: 0, negative: 0, zero: 0 };
+        for &v in &self.d {
+            if v > self.tol {
+                it.positive += 1;
+            } else if v < -self.tol {
+                it.negative += 1;
+            } else {
+                it.zero += 1;
+            }
+        }
+        it
+    }
+
+    /// `ln |det A| = Σ ln |d_i|` over the non-zero pivots. Returns
+    /// `f64::NEG_INFINITY` when any pivot is numerically zero (the
+    /// determinant is zero at working precision).
+    pub fn logdet_abs(&self) -> f64 {
+        let mut s = 0.0;
+        for &v in &self.d {
+            if v == 0.0 {
+                return f64::NEG_INFINITY;
+            }
+            s += v.abs().ln();
+        }
+        s
+    }
+
+    /// Solve `A x = b`. Errors when the matrix is numerically singular
+    /// (a zero pivot was recorded during factorisation).
+    pub fn solve(&self, b: &[f64]) -> crate::Result<Vec<f64>> {
+        let n = self.dim();
+        assert_eq!(b.len(), n, "rhs length mismatch");
+        anyhow::ensure!(
+            self.d.iter().all(|&v| v != 0.0),
+            "LDLᵀ solve: matrix is singular to working precision ({} zero pivot(s))",
+            self.d.iter().filter(|&&v| v == 0.0).count()
+        );
+        // y = P b
+        let mut y: Vec<f64> = self.perm.iter().map(|&i| b[i]).collect();
+        // L z = y (unit lower)
+        for i in 0..n {
+            let s = super::dot(&self.l.row(i)[..i], &y[..i]);
+            y[i] -= s;
+        }
+        // scale by D⁻¹
+        for i in 0..n {
+            y[i] /= self.d[i];
+        }
+        // Lᵀ v = y (unit upper via columns of L)
+        for i in (0..n).rev() {
+            let mut s = 0.0;
+            for k in (i + 1)..n {
+                s += self.l[(k, i)] * y[k];
+            }
+            y[i] -= s;
+        }
+        // x = Pᵀ v
+        let mut x = vec![0.0; n];
+        for (pos, &orig) in self.perm.iter().enumerate() {
+            x[orig] = y[pos];
+        }
+        Ok(x)
+    }
+}
+
+/// Symmetric swap of rows/columns `i`↔`j` of a fully-stored symmetric
+/// matrix.
+fn swap_sym(m: &mut Matrix, i: usize, j: usize) {
+    let n = m.rows();
+    if i == j {
+        return;
+    }
+    let (ri, rj) = m.rows_mut2(i, j);
+    ri.swap_with_slice(rj);
+    for r in 0..n {
+        let row = m.row_mut(r);
+        row.swap(i, j);
+    }
+}
+
+/// Swap the first `len` entries of rows `i` and `j` (the already-computed
+/// part of `L` must follow the pivot permutation).
+fn swap_rows_prefix(l: &mut Matrix, i: usize, j: usize, len: usize) {
+    if i == j || len == 0 {
+        return;
+    }
+    let (ri, rj) = l.rows_mut2(i, j);
+    ri[..len].swap_with_slice(&mut rj[..len]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{sym_eigen, Chol};
+    use crate::rng::Xoshiro256;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                g[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = g.matmul(&g.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn matches_cholesky_on_pd() {
+        for (n, seed) in [(5usize, 1u64), (16, 2), (33, 3), (64, 4)] {
+            let a = random_spd(n, seed);
+            let chol = Chol::factor(&a).unwrap();
+            let ldlt = Ldlt::factor(&a);
+            assert_eq!(
+                ldlt.inertia(),
+                Inertia { positive: n, negative: 0, zero: 0 },
+                "n={n}"
+            );
+            assert!(
+                (ldlt.logdet_abs() - chol.logdet()).abs()
+                    <= 1e-10 * chol.logdet().abs().max(1.0),
+                "n={n}: logdet {} vs {}",
+                ldlt.logdet_abs(),
+                chol.logdet()
+            );
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+            let x1 = chol.solve(&b);
+            let x2 = ldlt.solve(&b).unwrap();
+            let scale = x1.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..n {
+                assert!(
+                    (x1[i] - x2[i]).abs() <= 1e-10 * scale,
+                    "n={n} i={i}: {} vs {}",
+                    x1[i],
+                    x2[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inertia_on_constructed_indefinite() {
+        // rotate a known signature through a Jacobi-produced orthogonal
+        // basis: A = V diag(λ) Vᵀ, λ = {+,+,−,−,−}
+        let lambda = [4.0, 1.5, -0.5, -2.0, -7.0];
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut s = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..=i {
+                let v = rng.normal();
+                s[(i, j)] = v;
+                s[(j, i)] = v;
+            }
+        }
+        let (_, v) = sym_eigen(&s); // orthogonal columns
+        let mut a = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut acc = 0.0;
+                for k in 0..5 {
+                    acc += v[(i, k)] * lambda[k] * v[(j, k)];
+                }
+                a[(i, j)] = acc;
+            }
+        }
+        let ldlt = Ldlt::factor(&a);
+        assert_eq!(ldlt.inertia(), Inertia { positive: 2, negative: 3, zero: 0 });
+        // solve still works on the indefinite nonsingular matrix
+        let b = [1.0, -2.0, 0.5, 3.0, -1.0];
+        let x = ldlt.solve(&b).unwrap();
+        let r = a.matvec(&x);
+        for i in 0..5 {
+            assert!((r[i] - b[i]).abs() < 1e-9, "residual {i}: {} vs {}", r[i], b[i]);
+        }
+        // |det| = Π|λ|
+        let want: f64 = lambda.iter().map(|v| v.abs().ln()).sum();
+        assert!((ldlt.logdet_abs() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_reports_zero_pivots() {
+        // rank-2 Gram of 2 vectors in R⁴
+        let u = [1.0, 2.0, -1.0, 0.5];
+        let w = [0.0, 1.0, 1.0, -2.0];
+        let mut a = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                a[(i, j)] = u[i] * u[j] + w[i] * w[j];
+            }
+        }
+        let ldlt = Ldlt::factor(&a);
+        let inertia = ldlt.inertia();
+        assert_eq!(inertia.positive, 2);
+        assert_eq!(inertia.zero, 2);
+        assert_eq!(inertia.negative, 0);
+        assert_eq!(ldlt.logdet_abs(), f64::NEG_INFINITY);
+        assert!(ldlt.solve(&[1.0; 4]).is_err());
+    }
+
+    #[test]
+    fn min_d_flags_indefiniteness() {
+        let a = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, -3.0]]);
+        let ldlt = Ldlt::factor(&a);
+        assert!((ldlt.min_d() + 3.0).abs() < 1e-12);
+        let b = random_spd(6, 7);
+        assert!(Ldlt::factor(&b).min_d() > 0.0);
+    }
+}

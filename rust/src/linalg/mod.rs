@@ -29,6 +29,7 @@ mod triangular;
 mod toeplitz;
 mod lu;
 mod eigen;
+mod ldlt;
 
 pub use matrix::Matrix;
 pub use cholesky::{Chol, CholError};
@@ -37,7 +38,10 @@ pub use crate::runtime::ExecutionContext;
 pub use triangular::{solve_lower, solve_lower_transpose, solve_upper};
 pub use toeplitz::ToeplitzSolver;
 pub use lu::Lu;
-pub use eigen::sym_eigen;
+pub use eigen::{
+    sym_eigen, sym_eigen_checked, sym_eigenvalues, sym_eigenvalues_with, sym_one_norm_est,
+};
+pub use ldlt::{Inertia, Ldlt};
 
 /// Dot product of two equal-length slices.
 ///

@@ -169,7 +169,8 @@ fn cmd_serve(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
         spec_list.split(',').filter(|s| !s.is_empty()).map(PathBuf::from).collect();
     let evals_before = gpfast::gp::profiled_eval_count();
     let sw = Stopwatch::start();
-    let mut session = gpfast::coordinator::ServeSession::from_artifacts(&paths, cfg.exec())?;
+    let mut session = gpfast::coordinator::ServeSession::from_artifacts(&paths, cfg.exec())?
+        .with_cond_limit(cfg.cond_limit());
     if let Some(policy) = cfg.window_policy() {
         session = session.with_window(policy);
     }
@@ -180,8 +181,16 @@ fn cmd_serve(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     }
     let n = session.stats().n_train;
     println!("serving {} model(s) restored from disk (n = {n}):", session.n_models());
-    for (name, w) in session.model_names().iter().zip(session.weights()) {
-        println!("  {name:14} posterior weight {w:.4}");
+    for ((name, w), h) in
+        session.model_names().iter().zip(session.weights()).zip(session.health())
+    {
+        println!(
+            "  {name:14} posterior weight {w:.4}  cond ~{:.1e}  jitter {:.1e}{}{}",
+            h.cond_est,
+            h.jitter,
+            if h.degraded { "  DEGRADED" } else { "" },
+            if h.quarantined { "  QUARANTINED" } else { "" },
+        );
     }
     if let Some(policy) = session.window() {
         println!(

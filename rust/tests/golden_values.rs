@@ -94,6 +94,52 @@ fn dense_k2_profiled_likelihood() {
     assert_close("logdet", ev.chol.logdet(), -29.778325705977773903);
 }
 
+/// Case 4 — the symmetric eigensolver (Householder tridiagonalisation +
+/// implicit-shift QL, `sym_eigenvalues_with`) against 60-digit mpmath
+/// `eigsy` eigenvalues of the fixed n = 64 k₁ Gram matrix
+/// `K̃ = K + σ_n² I`. Pins the extreme and median eigenvalues, the trace
+/// and the log-determinant (which must also agree with the Cholesky
+/// logdet of the same matrix), sequentially and under a parallel
+/// execution context.
+#[test]
+fn k1_gram_eigenvalues_n64() {
+    use gpfast::gp::assemble_cov;
+    use gpfast::linalg::{sym_eigenvalues, sym_eigenvalues_with, Chol, ExecutionContext};
+
+    let t: Vec<f64> = (1..=64).map(|i| i as f64).collect();
+    let theta = vec![2.5, 1.5, 0.0];
+    let model = paper_k1(0.1);
+    let k = assemble_cov(&model, &t, &theta);
+
+    let golden = |evs: &[f64], tag: &str| {
+        assert_eq!(evs.len(), 64);
+        assert!(evs.windows(2).all(|w| w[0] <= w[1]), "{tag}: not ascending");
+        assert_close(&format!("{tag} lam_min"), evs[0], 0.024785648781424137622);
+        assert_close(&format!("{tag} lam_1"), evs[1], 0.024804086777898506112);
+        assert_close(&format!("{tag} lam_mid"), evs[31], 0.33476811034680823505);
+        assert_close(&format!("{tag} lam_sub"), evs[62], 6.1272276378457051914);
+        assert_close(&format!("{tag} lam_max"), evs[63], 6.2909307421533728938);
+        assert_close(&format!("{tag} trace"), evs.iter().sum::<f64>(), 64.64);
+        assert_close(
+            &format!("{tag} logdet"),
+            evs.iter().map(|&e| e.ln()).sum::<f64>(),
+            -88.968193055636497033,
+        );
+    };
+    let seq = sym_eigenvalues(&k).unwrap();
+    golden(&seq, "seq");
+    let par = sym_eigenvalues_with(&k, &ExecutionContext::new(4)).unwrap();
+    golden(&par, "par");
+    // the tridiagonal-QL arithmetic is partition-independent: parallel
+    // and sequential runs agree bit for bit
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.to_bits(), b.to_bits(), "seq/par eigenvalues diverge");
+    }
+    // independent cross-check: Σ ln λ must equal the Cholesky logdet
+    let chol = Chol::factor(&k).unwrap();
+    assert_close("chol logdet", chol.logdet(), -88.968193055636497033);
+}
+
 /// The marginalisation constant (eq. 2.18) alone, over a range of n —
 /// pins `lgamma` and the constant's composition.
 #[test]

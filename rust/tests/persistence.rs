@@ -55,6 +55,7 @@ fn make_artifact(spec: ModelSpec, data: &Dataset, ln_z: f64, with_nested: bool) 
             theta_hat: theta,
             lnp_peak: ev.lnp,
             sigma_f_hat2: ev.sigma_f_hat2,
+            jitter: ev.jitter,
             peak_eval: ev,
             converged: true,
             n_evals: 42,
@@ -122,6 +123,7 @@ fn save_load_round_trip_is_bit_identical_for_every_roster_entrant() {
         assert_eq!(tm2.train.n_evals, tm.train.n_evals);
         assert_eq!(tm2.train.n_modes, tm.train.n_modes);
         assert_eq!(tm2.train.restart_values, tm.train.restart_values);
+        assert_eq!(tm2.train.jitter, tm.train.jitter, "{name}: recorded jitter");
         assert_eq!(tm2.train.peak_eval.lnp, tm.train.peak_eval.lnp);
         assert_eq!(tm2.train.peak_eval.alpha, tm.train.peak_eval.alpha);
         assert_eq!(
@@ -283,4 +285,63 @@ fn corrupt_truncated_and_mismatched_files_error_cleanly() {
     // missing file
     let _ = std::fs::remove_file(&path);
     assert!(TrainedModel::load(&path).is_err());
+}
+
+/// Locate the little-endian byte pattern of a known f64 in the artifact
+/// stream (the values below are computed, non-round numbers — a
+/// collision with an earlier field is vanishingly unlikely and would
+/// fail loudly as a wrong error message).
+fn find_f64(hay: &[u8], v: f64) -> usize {
+    let pat = v.to_le_bytes();
+    hay.windows(8).position(|w| w == pat).expect("known f64 not found in artifact bytes")
+}
+
+/// Artifacts with structurally valid framing but non-finite payloads —
+/// NaN/∞ in θ̂, α, the factor diagonal, the recorded jitter or the
+/// dataset itself — must be rejected at hydration with clean errors.
+/// These are exactly the corruptions truncation tests cannot catch: the
+/// lengths all check out, only the numbers are poison.
+#[test]
+fn non_finite_artifact_fields_are_rejected() {
+    let _guard = lock();
+    let data = table1_dataset(16, 0.1, 917);
+    let tm = make_artifact(ModelSpec::K1, &data, -8.0, false);
+    let path = tmp_path("nonfinite");
+    tm.save(&path, &data).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let corrupt_at = |off: usize, v: f64, what: &str| {
+        let mut bad = good.clone();
+        bad[off..off + 8].copy_from_slice(&v.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = TrainedModel::load(&path)
+            .expect_err(&format!("{what} = {v} must not hydrate"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("corrupt artifact") || msg.contains("non-finite"), "{what}: {msg}");
+    };
+
+    // θ̂[0] → NaN
+    corrupt_at(find_f64(&good, tm.train.theta_hat[0]), f64::NAN, "theta_hat[0]");
+    // α[3] → ∞
+    corrupt_at(find_f64(&good, tm.train.peak_eval.alpha[3]), f64::INFINITY, "alpha[3]");
+    // factor diagonal L[0][0] — the first row (one value) follows the
+    // stored logdet — → NaN, and → a negative value (PD factors need
+    // strictly positive diagonals)
+    let l00 = find_f64(&good, tm.train.peak_eval.chol.logdet()) + 8;
+    corrupt_at(l00, f64::NAN, "L[0][0] NaN");
+    corrupt_at(l00, -1.0, "L[0][0] negative");
+    // recorded ladder jitter (follows the last restart value) → NaN and
+    // → negative (jitter is an applied magnitude, never below zero)
+    let jit = find_f64(&good, -7.0) + 8;
+    corrupt_at(jit, f64::NAN, "jitter NaN");
+    corrupt_at(jit, -1.0e-6, "jitter negative");
+    // a NaN training input: the Dataset boundary itself must refuse it
+    corrupt_at(find_f64(&good, data.t[5]), f64::NAN, "t[5]");
+    corrupt_at(find_f64(&good, data.y[5]), f64::NEG_INFINITY, "y[5]");
+
+    // and the pristine bytes still load — the corruptions above were
+    // the only problem
+    std::fs::write(&path, &good).unwrap();
+    TrainedModel::load(&path).expect("pristine artifact must hydrate");
+    let _ = std::fs::remove_file(&path);
 }

@@ -1,0 +1,342 @@
+//! Fault-injected recovery soak for the numerical-health tier
+//! (grow → evict → refresh → retrain → **quarantine**).
+//!
+//! A deterministic [`FaultPlan`] corrupts a windowed observation stream
+//! with near-duplicate inputs, huge outliers and non-finite values, and
+//! the suite proves the serving acceptance bar:
+//!
+//! * the session **never panics** and **never serves a non-finite
+//!   prediction** — every step either absorbs the point, or reports a
+//!   recoverable error (non-finite boundary rejection, no-slot-can-
+//!   absorb), or quarantines a slot and keeps serving;
+//! * non-finite points are rejected with **zero** state change;
+//! * quarantined slots are routed around (Winner falls to the
+//!   next-ranked healthy slot, Averaged renormalises) and **re-enter**
+//!   after a successful retrain;
+//! * the clean-data control arm is bit-identical to streaming without
+//!   the fault plan, with **zero** jitter-ladder rungs taken (recorded
+//!   jitter = 0 on every slot) and zero health events;
+//! * corrupt artifact bytes fail hydration cleanly and a session
+//!   restarts from the surviving artifacts.
+//!
+//! ci.sh runs this suite under `GPFAST_THREADS=1` *and* max.
+
+use std::path::PathBuf;
+
+use gpfast::coordinator::{
+    DriftOptions, Fault, FaultPlan, ModelSpec, PipelineConfig, RouteMode, ServeSession,
+    Tournament, TrainOptions, TrainedModel, WindowPolicy,
+};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+
+/// Train a 2-model tournament and wrap it in a windowed session (the
+/// soak_serving.rs topology with its own seeds).
+fn windowed_session(
+    n0: usize,
+    max_points: usize,
+    refresh_every: usize,
+    exec: &ExecutionContext,
+) -> ServeSession {
+    let data = table1_dataset(n0, 0.1, 401);
+    let mut cfg = PipelineConfig::fast();
+    cfg.models = vec![ModelSpec::K1, ModelSpec::WendlandSe];
+    cfg.train.multistart.restarts = 2;
+    cfg.workers = 1;
+    cfg.sigma_n = 0.1;
+    cfg.exec = exec.clone();
+    let mut rng = Xoshiro256::seed_from_u64(19);
+    let result = Tournament::new(cfg).run(&data, &mut rng).expect("tournament");
+    ServeSession::from_tournament(&result.models, &data, exec.clone())
+        .expect("session")
+        .with_window(WindowPolicy { max_points, refresh_every })
+}
+
+/// Deterministic synthetic stream continuing past the training grid.
+fn stream_point(i: usize, t_last: f64) -> (f64, f64) {
+    let t = t_last + 1.0 + i as f64;
+    let y = 0.6 * (0.31 * t).sin() + 0.2 * (0.057 * t).cos();
+    (t, y)
+}
+
+/// Every value the session is holding or serving must be finite.
+fn assert_session_finite(session: &ServeSession, ctx: &str) {
+    for name in session.model_names() {
+        let p = session.model_predictor(name).expect("routed model");
+        assert!(
+            p.t().iter().chain(p.y()).all(|v| v.is_finite()),
+            "{ctx}: {name} holds non-finite window data"
+        );
+    }
+    for h in session.health() {
+        assert!(!h.cond_est.is_nan(), "{ctx}: {} cond estimate is NaN", h.model);
+        assert!(h.jitter.is_finite() && h.jitter >= 0.0, "{ctx}: bad jitter {}", h.jitter);
+    }
+}
+
+/// The core soak: a corrupted stream through a windowed 2-model router.
+/// Quick mode (tier-1) streams 3× the window; the `#[ignore]`d long-haul
+/// variant scales up.
+fn run_fault_soak(n0: usize, max_points: usize, refresh_every: usize) {
+    let exec = ExecutionContext::from_env();
+    let mut session = windowed_session(n0, max_points, refresh_every, &exec)
+        .with_drift_options(DriftOptions { window: 4, threshold: 2.0 });
+    // outliers at ±50 — ~60× the signal amplitude, more than enough to
+    // crater every windowed log-score and latch drift, while keeping the
+    // post-fault retrain on the outlier-laden window well conditioned
+    // (the default ±1e7 scale is exercised by the FaultPlan unit tests)
+    let plan = FaultPlan { outlier_scale: 50.0, ..FaultPlan::soak_default() };
+    let t_last = *session.predictor().t().last().unwrap();
+    let mut t_prev = t_last;
+    let steps = 3 * max_points;
+    let mut absorbed = 0usize;
+    let mut rejected = 0usize;
+    for i in 0..steps {
+        let (t_nom, y_nom) = stream_point(i, t_last);
+        let (t, y, fault) = plan.apply(i, t_nom, y_nom, t_prev);
+        let n_before = session.stats().n_train;
+        let appended_before = session.stats().observations_appended;
+        match session.observe(t, y) {
+            Ok(()) => {
+                absorbed += 1;
+                assert!(
+                    fault != Fault::NonFinite,
+                    "step {i}: non-finite point crossed the data boundary"
+                );
+                t_prev = t;
+            }
+            Err(e) => {
+                rejected += 1;
+                let msg = format!("{e:#}");
+                assert!(!msg.is_empty(), "step {i}: empty error");
+                match fault {
+                    Fault::NonFinite => {
+                        assert!(msg.contains("non-finite"), "step {i}: {msg}");
+                        // boundary rejection is a zero-state-change event
+                        assert_eq!(session.stats().n_train, n_before, "step {i}");
+                        assert_eq!(
+                            session.stats().observations_appended,
+                            appended_before,
+                            "step {i}: rejected point was appended"
+                        );
+                    }
+                    Fault::NearDuplicate => {} // reject or quarantine: both legal
+                    Fault::Clean | Fault::Outlier => {
+                        panic!("step {i}: benign {fault:?} point rejected: {msg}")
+                    }
+                }
+            }
+        }
+        // the serving invariant, every single step: finite predictions
+        // from whatever the session now holds
+        let p = session.predict(&[t_nom + 0.5, t_nom + 7.25]);
+        assert!(
+            p.mean.iter().chain(&p.sd).all(|v| v.is_finite()),
+            "step {i}: non-finite prediction served"
+        );
+        assert_session_finite(&session, &format!("step {i}"));
+        // the memory bound holds through every fault
+        assert!(session.stats().n_train <= max_points.max(n0));
+    }
+    assert!(absorbed > steps / 2, "only {absorbed}/{steps} points absorbed");
+    assert!(rejected > 0, "the fault plan never exercised a rejection");
+    // the outliers crater the windowed log-scores: the drift monitor
+    // (or a health latch) must be demanding a retrain by now
+    assert!(session.needs_retrain(), "a faulted stream must latch needs_retrain");
+
+    // --- recovery: retrain in place on the (outlier-laden) window
+    let mut opts = TrainOptions::default();
+    opts.multistart.restarts = 2;
+    let mut rng = Xoshiro256::seed_from_u64(83);
+    let outcome = session.retrain(&opts, 1, &mut rng).expect("retrain on faulted window");
+    assert!(outcome.models.iter().all(|(_, _, z)| z.is_finite()));
+    assert_eq!(session.n_quarantined(), 0, "retrain must re-enter every quarantined slot");
+    assert!(!session.needs_retrain(), "retrain must clear drift and health latches");
+    assert_session_finite(&session, "post-retrain");
+    // and the healed session keeps absorbing clean points
+    for j in 0..8 {
+        let (t, y) = stream_point(steps + j, t_last);
+        session.observe(t, y).expect("post-retrain clean observe");
+    }
+    let p = session.predict(&[t_last + steps as f64 + 12.5]);
+    assert!(p.mean[0].is_finite() && p.sd[0].is_finite());
+}
+
+/// Quick mode: the tier-1 fault soak (ci.sh runs it serial and threaded).
+#[test]
+fn soak_faulted_stream_recovers_quick() {
+    run_fault_soak(32, 40, 8);
+}
+
+/// Long-haul mode: larger window, 3× the stream.
+#[test]
+#[ignore = "long-haul fault soak (minutes); quick mode runs in tier-1 — run via cargo test --release -- --ignored"]
+fn soak_faulted_stream_recovers_long_haul() {
+    run_fault_soak(64, 96, 16);
+}
+
+/// The clean control arm: a `FaultPlan::clean()` stream is bit-identical
+/// to streaming the raw points, takes zero jitter-ladder rungs, and
+/// logs zero health events — the robustness tier is free on clean data.
+#[test]
+fn clean_control_arm_is_bit_identical_with_zero_jitter() {
+    let exec = ExecutionContext::from_env();
+    let run = |through_plan: bool| {
+        let mut session = windowed_session(30, 36, 8, &exec);
+        let plan = FaultPlan::clean();
+        let t_last = *session.predictor().t().last().unwrap();
+        let mut t_prev = t_last;
+        for i in 0..72 {
+            let (t_nom, y_nom) = stream_point(i, t_last);
+            let (t, y) = if through_plan {
+                let (t, y, f) = plan.apply(i, t_nom, y_nom, t_prev);
+                assert_eq!(f, Fault::Clean);
+                (t, y)
+            } else {
+                (t_nom, y_nom)
+            };
+            session.observe(t, y).expect("clean observe");
+            t_prev = t;
+        }
+        let probe: Vec<f64> = (0..8).map(|q| t_last + 80.0 + q as f64).collect();
+        let pred = session.predict(&probe);
+        // zero rungs taken, zero health events, nothing quarantined
+        for h in session.health() {
+            assert_eq!(h.jitter, 0.0, "{}: clean data took a jitter rung", h.model);
+            assert_eq!(h.downdate_failures, 0, "{}", h.model);
+            assert!(!h.degraded && !h.quarantined, "{}", h.model);
+            assert!(h.cond_est.is_finite() && h.cond_est >= 1.0);
+        }
+        assert_eq!(session.n_quarantined(), 0);
+        assert!(!session.needs_retrain());
+        (pred.mean, pred.sd, session.predictor().lnp())
+    };
+    let (m_raw, s_raw, l_raw) = run(false);
+    let (m_plan, s_plan, l_plan) = run(true);
+    assert_eq!(m_raw, m_plan, "clean plan changed served means");
+    assert_eq!(s_raw, s_plan, "clean plan changed served sds");
+    assert_eq!(l_raw, l_plan, "clean plan changed the maintained lnp");
+}
+
+/// Forced quarantine end-to-end: the winner is routed around under both
+/// route modes, freezes while healthy slots absorb, and re-enters after
+/// retrain with the roster windows re-synchronised.
+#[test]
+fn quarantined_winner_is_routed_around_and_reenters_after_retrain() {
+    let exec = ExecutionContext::from_env();
+    let mut session = windowed_session(28, 64, 0, &exec);
+    assert_eq!(session.n_models(), 2);
+    let t_last = *session.predictor().t().last().unwrap();
+    let names: Vec<&str> = session.model_names();
+    let (winner, runner_up) = (names[0], names[1]);
+    let probe = [29.5, 33.25, 41.0];
+    let runner_pred = session
+        .model_predictor(runner_up)
+        .unwrap()
+        .predict_batch(&probe, &exec);
+
+    assert!(session.quarantine_model(winner), "winner must be quarantinable");
+    assert!(!session.quarantine_model("no-such-model"));
+    assert_eq!(session.n_quarantined(), 1);
+    assert!(session.needs_retrain(), "quarantine must latch the retrain signal");
+    assert!(session.health()[0].quarantined && !session.health()[1].quarantined);
+    // Winner mode falls to the next-ranked healthy slot, bit for bit
+    let served = session.predict(&probe);
+    assert_eq!(served.mean, runner_pred.mean, "winner route must fall to the runner-up");
+    assert_eq!(served.sd, runner_pred.sd);
+    // Averaged mode renormalises: all weight on the healthy slot
+    let w = session.weights();
+    assert_eq!(w[0], 0.0);
+    assert_eq!(w[1], 1.0);
+    let avg_session = session.with_route(RouteMode::Averaged);
+    let avg = avg_session.predict(&probe);
+    for i in 0..probe.len() {
+        assert!((avg.mean[i] - runner_pred.mean[i]).abs() < 1e-12);
+        assert!((avg.sd[i] - runner_pred.sd[i]).abs() < 1e-9);
+    }
+    session = avg_session.with_route(RouteMode::Winner);
+
+    // streaming continues: the healthy slot absorbs, the quarantined
+    // slot freezes at its last good window
+    let frozen_n = session.model_predictor(winner).unwrap().n();
+    for i in 0..5 {
+        let (t, y) = stream_point(i, t_last);
+        session.observe(t, y).expect("healthy slot must keep absorbing");
+    }
+    assert_eq!(session.model_predictor(winner).unwrap().n(), frozen_n, "frozen slot grew");
+    assert_eq!(session.model_predictor(runner_up).unwrap().n(), frozen_n + 5);
+
+    // retrain re-enters the quarantined model on the healthy window
+    let mut opts = TrainOptions::default();
+    opts.multistart.restarts = 2;
+    let mut rng = Xoshiro256::seed_from_u64(89);
+    let outcome = session.retrain(&opts, 1, &mut rng).expect("re-entry retrain");
+    assert_eq!(outcome.window_n, frozen_n + 5, "retrain must use the healthy window");
+    assert_eq!(session.n_quarantined(), 0);
+    assert!(!session.needs_retrain());
+    for h in session.health() {
+        assert!(!h.quarantined && !h.degraded);
+    }
+    // the roster windows are re-synchronised and both slots serve again
+    let a = session.model_predictor(names[0]).unwrap();
+    let b = session.model_predictor(names[1]).unwrap();
+    assert_eq!(a.t(), b.t(), "post-retrain windows diverged");
+    assert_eq!(a.n(), frozen_n + 5);
+    let w = session.weights();
+    assert!(w.iter().all(|&x| x > 0.0), "re-entered roster must share weight: {w:?}");
+    let p = session.predict(&[40.5]);
+    assert!(p.mean[0].is_finite() && p.sd[0].is_finite());
+}
+
+/// Locate the little-endian byte pattern of a known f64 in an artifact.
+fn find_f64(hay: &[u8], v: f64) -> usize {
+    let pat = v.to_le_bytes();
+    hay.windows(8).position(|w| w == pat).expect("known f64 not found in artifact bytes")
+}
+
+/// Corrupt-artifact hydration fault: a poisoned file fails cleanly, the
+/// roster restarts from the surviving artifact, and the restarted
+/// session serves finite predictions.
+#[test]
+fn corrupt_artifact_hydration_fails_cleanly_and_session_restarts_from_survivor() {
+    let exec = ExecutionContext::seq();
+    let data = table1_dataset(24, 0.1, 419);
+    let mut cfg = PipelineConfig::fast();
+    cfg.models = vec![ModelSpec::K1, ModelSpec::WendlandSe];
+    cfg.train.multistart.restarts = 2;
+    cfg.workers = 1;
+    cfg.exec = exec.clone();
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    let result = Tournament::new(cfg).run(&data, &mut rng).expect("tournament");
+    let dir = std::env::temp_dir();
+    let path_good: PathBuf =
+        dir.join(format!("gpfast_fault_good_{}.bin", std::process::id()));
+    let path_bad: PathBuf = dir.join(format!("gpfast_fault_bad_{}.bin", std::process::id()));
+    result.models[0].save(&path_good, &data).unwrap();
+    result.models[1].save(&path_bad, &data).unwrap();
+    // poison the second artifact: NaN into its α vector, framing intact
+    let mut bytes = std::fs::read(&path_bad).unwrap();
+    let off = find_f64(&bytes, result.models[1].train.peak_eval.alpha[2]);
+    bytes[off..off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+    std::fs::write(&path_bad, &bytes).unwrap();
+
+    // the poisoned file must fail hydration cleanly, alone or in a roster
+    let err = match TrainedModel::load(&path_bad) {
+        Err(e) => e,
+        Ok(_) => panic!("NaN artifact hydrated"),
+    };
+    assert!(format!("{err:#}").contains("corrupt artifact"), "{err:#}");
+    assert!(
+        ServeSession::from_artifacts(&[&path_bad, &path_good], exec.clone()).is_err(),
+        "a roster containing a poisoned artifact must not come up"
+    );
+    // the session restarts from the survivor and serves finite values
+    let session =
+        ServeSession::from_artifacts(&[&path_good], exec.clone()).expect("survivor restart");
+    let p = session.predict(&[5.5, 11.25]);
+    assert!(p.mean.iter().chain(&p.sd).all(|v| v.is_finite()));
+    assert_eq!(session.n_quarantined(), 0);
+    let _ = std::fs::remove_file(&path_good);
+    let _ = std::fs::remove_file(&path_bad);
+}

@@ -1,0 +1,212 @@
+//! Bench: the approximate-inference tier's accuracy-vs-cost panel —
+//! Chalupka, Williams & Murray (2013) style, on the paper's synthetic k₂
+//! truth.
+//!
+//! For each training size the exact `k2` and its approximations `sod-k2`
+//! and `fitc-k2` are trained under an identical small optimiser budget
+//! (1 restart, capped CG iterations), then scored on a held-out split
+//! (every 6th point) with:
+//!
+//! * **SMSE** — mean squared error over the variance of the test
+//!   targets (0 = perfect, 1 = predicting the mean);
+//! * **MSLL** — mean standardised log loss: the negative predictive log
+//!   density per test point minus the same under the trivial Gaussian
+//!   fitted to the training targets (0 = no better than trivial,
+//!   more negative = better-calibrated);
+//! * **train wall-clock** per method.
+//!
+//! Exact training is `O(n³)` per evaluation, so in full mode it runs for
+//! real only at the smallest size; at larger sizes its cost is estimated
+//! as (one timed analytic value+gradient evaluation) × (the evaluation
+//! count of the real run), its θ̂ transferred, and the row marked
+//! `train_estimated` — logged, never silent. The approximate backends
+//! always train for real: that gap is the point of the panel.
+//!
+//! Appends an `approx` section to **`BENCH_perf.json`** (merging with
+//! other benches' sections). Row schema: `{method, n_train, n_test,
+//! threads, n_evals, train_seconds, train_estimated, smse, msll}`.
+//!
+//! `cargo bench --bench approx`; set `GPFAST_BENCH_QUICK=1` for the
+//! ci.sh smoke run (small n, everything real).
+
+use gpfast::coordinator::{train_model, ModelSpec, TrainOptions};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::data::Dataset;
+use gpfast::gp::serve::Predictor;
+use gpfast::gp::{approx, profiled};
+use gpfast::kernels::SYNTHETIC_SIGMA_N;
+use gpfast::optimize::{CgOptions, MultistartOptions};
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::{timer::human_time, Json, Table, TimingStats};
+
+/// Optimiser budget shared by every method: what the panel times.
+fn budget() -> TrainOptions {
+    TrainOptions {
+        multistart: MultistartOptions {
+            restarts: 1,
+            cg: CgOptions { max_iters: 15, ..Default::default() },
+            ..Default::default()
+        },
+        extra_starts: Vec::new(),
+    }
+}
+
+/// Split every 6th point into the held-out set.
+fn split(full: &Dataset) -> (Dataset, Vec<f64>, Vec<f64>) {
+    let mut tt = Vec::new();
+    let mut ty = Vec::new();
+    let mut ht = Vec::new();
+    let mut hy = Vec::new();
+    for i in 0..full.len() {
+        if i % 6 == 5 {
+            ht.push(full.t[i]);
+            hy.push(full.y[i]);
+        } else {
+            tt.push(full.t[i]);
+            ty.push(full.y[i]);
+        }
+    }
+    (Dataset::new(tt, ty, format!("{}-train", full.label)), ht, hy)
+}
+
+/// SMSE and MSLL of a predictor on the held-out split, standardised
+/// against the trivial Gaussian fitted to the training targets.
+fn score(
+    pred: &Predictor,
+    train_y: &[f64],
+    ht: &[f64],
+    hy: &[f64],
+    ctx: &ExecutionContext,
+) -> (f64, f64) {
+    let p = pred.predict_batch(ht, ctx);
+    let nt = hy.len() as f64;
+    let m0 = train_y.iter().sum::<f64>() / train_y.len() as f64;
+    let v0 = train_y.iter().map(|v| (v - m0) * (v - m0)).sum::<f64>()
+        / train_y.len() as f64;
+    let var_test = {
+        let m = hy.iter().sum::<f64>() / nt;
+        hy.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / nt
+    };
+    let ln_2pi = (2.0 * std::f64::consts::PI).ln();
+    let mut mse = 0.0;
+    let mut nll = 0.0;
+    let mut nll0 = 0.0;
+    for i in 0..hy.len() {
+        let d = hy[i] - p.mean[i];
+        let v = (p.sd[i] * p.sd[i]).max(1e-300);
+        mse += d * d;
+        nll += 0.5 * ((v.ln() + ln_2pi) + d * d / v);
+        let d0 = hy[i] - m0;
+        nll0 += 0.5 * ((v0.ln() + ln_2pi) + d0 * d0 / v0);
+    }
+    (mse / nt / var_test, (nll - nll0) / nt)
+}
+
+fn main() {
+    let ctx = ExecutionContext::from_env();
+    let threads = ctx.threads();
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    // total sizes; training sets are 5/6 of these (1 000 … 10 000 full)
+    let totals: Vec<usize> = if quick { vec![240, 480] } else { vec![1200, 3840, 12000] };
+    // exact k2 trains for real up to this total; beyond, estimated
+    let exact_real_cap = if quick { usize::MAX } else { 1200 };
+    let specs = [ModelSpec::K2, ModelSpec::SodK2, ModelSpec::FitcK2];
+    println!(
+        "== approx tier: accuracy vs training cost (threads {threads}{}) ==\n",
+        if quick { ", quick mode" } else { "" }
+    );
+    let mut table =
+        Table::new(vec!["n_train", "method", "evals", "train", "smse", "msll"]);
+    let mut rows: Vec<Json> = Vec::new();
+    // the real exact run everything larger extrapolates from
+    let mut exact_ref: Option<(Vec<f64>, usize)> = None; // (theta_hat, n_evals)
+    for &n_tot in &totals {
+        let full = table1_dataset(n_tot, 0.1, 42);
+        let (train, ht, hy) = split(&full);
+        let n = train.len();
+        for spec in &specs {
+            let name = spec.name();
+            let mut rng = Xoshiro256::seed_from_u64(1000 + n_tot as u64);
+            let run_real = spec.approx().is_some() || n_tot <= exact_real_cap;
+            let (theta, peak, n_evals, secs, estimated) = if run_real {
+                let t0 = std::time::Instant::now();
+                let res = train_model(spec, SYNTHETIC_SIGMA_N, &train, &budget(), 1, &ctx, &mut rng)
+                    .expect("training failed");
+                let secs = t0.elapsed().as_secs_f64();
+                if *spec == ModelSpec::K2 {
+                    exact_ref = Some((res.theta_hat.clone(), res.n_evals));
+                }
+                (res.theta_hat, res.peak_eval, res.n_evals, secs, false)
+            } else {
+                // transfer θ̂ from the real exact run, time one analytic
+                // value+gradient evaluation, scale by its eval count
+                let (theta, ref_evals) =
+                    exact_ref.clone().expect("exact reference run missing");
+                let model = spec.build(SYNTHETIC_SIGMA_N);
+                let mut peak = None;
+                let stats = TimingStats::measure(0, 1, || {
+                    let (ev, _) =
+                        profiled::eval_grad_with(&model, &train.t, &train.y, &theta, &ctx)
+                            .expect("exact evaluation failed");
+                    peak = Some(ev);
+                });
+                let secs = stats.min() * ref_evals as f64;
+                println!(
+                    "(exact k2 at n = {n}: estimated {} from one evaluation × {ref_evals} evals)",
+                    human_time(secs)
+                );
+                (theta, peak.unwrap(), ref_evals, secs, true)
+            };
+            // spec-aware serving pair: full data for exact, the reduced
+            // set for the approximations
+            let (ts, ys) = match spec.approx() {
+                None => (train.t.clone(), train.y.clone()),
+                Some(kind) => approx::serve_parts(kind, &train.t, &train.y, &peak),
+            };
+            let model = spec.build(SYNTHETIC_SIGMA_N);
+            let pred = Predictor::from_eval(model, ts, ys, theta, peak);
+            let (smse, msll) = score(&pred, &train.y, &ht, &hy, &ctx);
+            table.add_row(vec![
+                format!("{n}"),
+                format!("{name}{}", if estimated { "*" } else { "" }),
+                format!("{n_evals}"),
+                human_time(secs),
+                format!("{smse:.4}"),
+                format!("{msll:+.3}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("method", name.into()),
+                ("n_train", n.into()),
+                ("n_test", hy.len().into()),
+                ("threads", threads.into()),
+                ("n_evals", n_evals.into()),
+                ("train_seconds", secs.into()),
+                ("train_estimated", usize::from(estimated).into()),
+                ("smse", smse.into()),
+                ("msll", msll.into()),
+            ]));
+        }
+    }
+    print!("{}", table.render());
+    println!("(* exact cost estimated: one timed evaluation × the real run's eval count)");
+
+    // merge the approx section into BENCH_perf.json
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections = doc
+        .get("sections")
+        .and_then(|s| s.as_obj().cloned())
+        .unwrap_or_default();
+    sections.insert("approx".to_string(), Json::Arr(rows));
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), threads.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("\napprox section merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

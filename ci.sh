@@ -50,6 +50,13 @@ GPFAST_BENCH_QUICK=1 cargo bench --bench perf
 GPFAST_BENCH_QUICK=1 cargo bench --bench tournament
 GPFAST_BENCH_QUICK=1 cargo bench --bench serve
 GPFAST_BENCH_QUICK=1 cargo bench --bench robustness
+
+echo "== approx-tier accuracy-vs-cost panel (quick mode, both thread settings) =="
+# The Chalupka-style SoD/FITC panel; run under both thread budgets so the
+# approx section is refreshed by a serial and a parallel sweep (the
+# second run's rows are the ones that land in BENCH_perf.json).
+GPFAST_THREADS=1 GPFAST_BENCH_QUICK=1 cargo bench --bench approx
+GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" GPFAST_BENCH_QUICK=1 cargo bench --bench approx
 if command -v python3 >/dev/null 2>&1; then
     python3 - <<'EOF'
 import json, sys
@@ -80,7 +87,14 @@ if not all("overhead" in r for r in rows if r.get("kind") == "jitter_ladder"):
     sys.exit("FAIL: robustness/jitter_ladder rows missing overhead")
 if not all("cond_seconds" in r for r in rows if r.get("kind") == "cond_est"):
     sys.exit("FAIL: robustness/cond_est rows missing cond_seconds")
-print("BENCH_perf.json gemm/syrk/tournament/serve/robustness sections populated")
+rows = doc.get("sections", {}).get("approx", [])
+methods = {r.get("method") for r in rows}
+for want in ("k2", "sod-k2", "fitc-k2"):
+    if want not in methods:
+        sys.exit(f"FAIL: BENCH_perf.json approx section is missing {want!r} rows")
+if not all("smse" in r and "msll" in r and "train_seconds" in r for r in rows):
+    sys.exit("FAIL: approx rows missing smse/msll/train_seconds")
+print("BENCH_perf.json gemm/syrk/tournament/serve/robustness/approx sections populated")
 EOF
 else
     # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
@@ -101,6 +115,10 @@ else
         || { echo "FAIL: BENCH_perf.json robustness/ldlt rows not populated"; exit 1; }
     [ "$(grep -c '"cond_seconds"' BENCH_perf.json)" -ge 1 ] \
         || { echo "FAIL: BENCH_perf.json robustness/cond_est rows not populated"; exit 1; }
+    [ "$(grep -c '"smse"' BENCH_perf.json)" -ge 3 ] \
+        || { echo "FAIL: BENCH_perf.json approx rows not populated"; exit 1; }
+    [ "$(grep -c '"msll"' BENCH_perf.json)" -ge 3 ] \
+        || { echo "FAIL: BENCH_perf.json approx rows not populated (msll)"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

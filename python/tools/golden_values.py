@@ -195,3 +195,20 @@ show("lam_sub", evs[62])
 show("lam_max", evs[63])
 show("trace  ", mp.fsum(evs))
 show("logdet ", mp.fsum(mp.log(e) for e in evs))
+
+# --- case 5: Levinson (Toeplitz) reference — the same n=64 k1 Gram is
+# Toeplitz by construction on the uniform grid t=1..64, so the
+# rust/src/linalg/toeplitz.rs solver must reproduce the dense solve and
+# log-determinant exactly. Pins selected components of K~^-1 y for the
+# case-2 data function, the quadratic form y^T K~^-1 y, and the
+# log-determinant (identical to the case-4 eigenvalue/Cholesky value).
+y = [mp.sin(mp.mpf("0.6") * ti) + mp.mpf("0.3") * mp.cos(mp.mpf("1.7") * ti) for ti in t]
+l = chol(a)
+x = solve_chol(l, y)
+print("\n== case 5: Toeplitz/Levinson solve (n=64, t=1..64, theta=[2.5,1.5,0]) ==")
+show("x[0]   ", x[0])
+show("x[1]   ", x[1])
+show("x[31]  ", x[31])
+show("x[63]  ", x[63])
+show("ytKinvy", mp.fsum(yi * xi for yi, xi in zip(y, x)))
+show("logdet ", 2 * mp.fsum(mp.log(l[i, i]) for i in range(64)))

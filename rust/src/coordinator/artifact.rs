@@ -350,10 +350,14 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
     let peak_lnp = r.f64()?;
     let peak_sigma2 = r.f64()?;
     let alpha = r.vec()?;
+    // exact specs carry an n-point factor; approximate specs carry their
+    // reduced factor, whose size is a pure function of the spec and n
     let chol_dim = r.len(8)?;
+    let want_dim = spec.factor_dim(n);
     anyhow::ensure!(
-        chol_dim == n && alpha.len() == n,
-        "corrupt artifact: factor dim {chol_dim} / α length {} vs dataset n = {n}",
+        chol_dim == want_dim && alpha.len() == chol_dim,
+        "corrupt artifact: factor dim {chol_dim} / α length {} vs expected {want_dim} \
+         for {spec_name} at n = {n}",
         alpha.len()
     );
     let logdet = r.f64()?;
@@ -452,9 +456,10 @@ impl TrainedModel {
     /// truncated one that [`TrainedModel::load`] will cleanly reject.
     pub fn save(&self, path: &Path, data: &Dataset) -> crate::Result<()> {
         anyhow::ensure!(
-            self.train.peak_eval.chol.dim() == data.len(),
-            "artifact factor is for n = {}, dataset has n = {}",
+            self.train.peak_eval.chol.dim() == self.spec.factor_dim(data.len()),
+            "artifact factor dim {} does not match {} for n = {}",
             self.train.peak_eval.chol.dim(),
+            self.spec.factor_dim(data.len()),
             data.len()
         );
         std::fs::write(path, encode(self, data))

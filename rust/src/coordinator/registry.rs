@@ -31,6 +31,14 @@ pub enum ModelSpec {
     /// k₂ plus a third periodic component (the paper's §3(b) fn. 8
     /// "three-timescale model" extension).
     K3,
+    /// k₂ trained under the subset-of-data approximation
+    /// ([`crate::gp::approx`]): exact machinery on a deterministic
+    /// `Θ(√n)` stride subset.
+    SodK2,
+    /// k₂ trained under the FITC sparse approximation
+    /// ([`crate::gp::approx`]): `Θ(√n)` inducing points on a uniform
+    /// grid, Woodbury-form profiled likelihood.
+    FitcK2,
 }
 
 impl ModelSpec {
@@ -43,8 +51,11 @@ impl ModelSpec {
             "wendland-se" => Ok(Self::WendlandSe),
             "wendland-m32" => Ok(Self::WendlandM32),
             "wendland-m52" => Ok(Self::WendlandM52),
+            "sod-k2" => Ok(Self::SodK2),
+            "fitc-k2" => Ok(Self::FitcK2),
             other => anyhow::bail!(
-                "unknown model '{other}' (k1|k2|k3|wendland-se|wendland-m32|wendland-m52)"
+                "unknown model '{other}' \
+                 (k1|k2|k3|wendland-se|wendland-m32|wendland-m52|sod-k2|fitc-k2)"
             ),
         }
     }
@@ -58,6 +69,31 @@ impl ModelSpec {
             Self::WendlandSe => "wendland-se",
             Self::WendlandM32 => "wendland-m32",
             Self::WendlandM52 => "wendland-m52",
+            Self::SodK2 => "sod-k2",
+            Self::FitcK2 => "fitc-k2",
+        }
+    }
+
+    /// Which sparse approximation this spec trains under, `None` for the
+    /// exact `O(n³)` backends. Approximate specs share their kernel (and
+    /// so their parameter names, bounds and priors) with an exact
+    /// sibling; only the likelihood machinery differs.
+    pub fn approx(&self) -> Option<crate::gp::ApproxKind> {
+        match self {
+            Self::SodK2 => Some(crate::gp::ApproxKind::Sod),
+            Self::FitcK2 => Some(crate::gp::ApproxKind::Fitc),
+            _ => None,
+        }
+    }
+
+    /// Dimension of the Cholesky factor a trained artifact of this spec
+    /// carries for an `n`-point dataset: `n` for exact specs, the
+    /// backend's reduced size for approximate ones. A pure function of
+    /// `n`, so artifact decode can validate it without extra fields.
+    pub fn factor_dim(&self, n: usize) -> usize {
+        match self.approx() {
+            None => n,
+            Some(kind) => kind.factor_dim(n),
         }
     }
 
@@ -74,6 +110,9 @@ impl ModelSpec {
             Self::K2 => Some(Self::K1),
             Self::K3 => Some(Self::K2),
             Self::WendlandM32 | Self::WendlandM52 => Some(Self::WendlandSe),
+            // same kernel, same parameter names — an exact k₂ peak is the
+            // best imaginable seed for its approximate siblings
+            Self::SodK2 | Self::FitcK2 => Some(Self::K2),
         }
     }
 
@@ -109,6 +148,18 @@ impl ModelSpec {
                 let kernel =
                     ProductKernel::new(vec![Box::new(Wendland), Box::new(Matern52::new(1))]);
                 CovarianceModel::new("wendland-m52", Box::new(kernel), sigma_n)
+            }
+            // the approximate siblings carry k₂'s kernel under their own
+            // name (reports, artifacts and parse round-trips key on it)
+            Self::SodK2 => {
+                let mut m = paper_k2(sigma_n);
+                m.name = "sod-k2".into();
+                m
+            }
+            Self::FitcK2 => {
+                let mut m = paper_k2(sigma_n);
+                m.name = "fitc-k2".into();
+                m
             }
         }
     }
@@ -222,12 +273,44 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for s in ["k1", "k2", "k3", "wendland-se", "wendland-m32", "wendland-m52"] {
+        for s in [
+            "k1",
+            "k2",
+            "k3",
+            "wendland-se",
+            "wendland-m32",
+            "wendland-m52",
+            "sod-k2",
+            "fitc-k2",
+        ] {
             let spec = ModelSpec::parse(s).unwrap();
             let model = spec.build(0.1);
             assert_eq!(model.name, s);
         }
         assert!(ModelSpec::parse("k9").is_err());
+    }
+
+    #[test]
+    fn approx_specs_share_k2_shape_and_lineage() {
+        for spec in [ModelSpec::SodK2, ModelSpec::FitcK2] {
+            let m = spec.build(0.1);
+            let k2 = ModelSpec::K2.build(0.1);
+            assert_eq!(m.dim(), k2.dim());
+            assert_eq!(m.kernel.names(), k2.kernel.names());
+            assert_eq!(spec.warm_start_parent(), Some(ModelSpec::K2));
+            assert!(spec.approx().is_some());
+        }
+        assert_eq!(ModelSpec::K2.approx(), None);
+        // exact specs carry full-rank factors, approximate ones √n-scale
+        assert_eq!(ModelSpec::K2.factor_dim(1000), 1000);
+        assert_eq!(
+            ModelSpec::SodK2.factor_dim(1000),
+            crate::gp::approx::sod_m(1000)
+        );
+        assert_eq!(
+            ModelSpec::FitcK2.factor_dim(1000),
+            crate::gp::approx::fitc_m(1000)
+        );
     }
 
     #[test]

@@ -57,7 +57,10 @@ pub struct ComparisonReport {
 
 impl ComparisonReport {
     pub fn ranked(dataset: String, n: usize, mut models: Vec<ModelReport>) -> Self {
-        models.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap());
+        // the shared evidence comparator: identical to the tournament's
+        // and the serving router's ranking, so report order and slot
+        // order can never disagree (NaN ln Z ranks last, deterministic)
+        models.sort_by(|a, b| crate::util::desc_nan_last(a.ln_z, b.ln_z));
         if let Some(best) = models.first().map(|m| m.ln_z) {
             for m in &mut models {
                 m.ln_b = m.ln_z - best;

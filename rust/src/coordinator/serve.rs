@@ -359,7 +359,7 @@ impl ServeSession {
                 health,
             });
         }
-        slots.sort_by(|a, b| b.ln_z.partial_cmp(&a.ln_z).unwrap_or(std::cmp::Ordering::Equal));
+        slots.sort_by(|a, b| crate::util::desc_nan_last(a.ln_z, b.ln_z));
         Ok(Self {
             slots,
             route: RouteMode::Winner,
@@ -417,16 +417,25 @@ impl ServeSession {
         exec: ExecutionContext,
     ) -> crate::Result<Self> {
         anyhow::ensure!(
-            trained.peak_eval.chol.dim() == data.len(),
-            "TrainResult is for n = {}, dataset has n = {}",
+            trained.peak_eval.chol.dim() == spec.factor_dim(data.len()),
+            "TrainResult factor dim {} does not match {} for n = {}",
             trained.peak_eval.chol.dim(),
+            spec.factor_dim(data.len()),
             data.len()
         );
         let model = spec.build(sigma_n);
+        // approximate specs serve from their reduced dataset (stride
+        // subset / inducing pseudo-data), exact specs from the full one
+        let (t_serve, y_serve) = match spec.approx() {
+            None => (data.t.clone(), data.y.clone()),
+            Some(kind) => {
+                crate::gp::approx::serve_parts(kind, &data.t, &data.y, &trained.peak_eval)
+            }
+        };
         let predictor = Predictor::from_eval(
             model,
-            data.t.clone(),
-            data.y.clone(),
+            t_serve,
+            y_serve,
             trained.theta_hat.clone(),
             trained.peak_eval.clone(),
         );
@@ -841,7 +850,15 @@ impl ServeSession {
         workers: usize,
         rng: &mut Xoshiro256,
     ) -> crate::Result<RetrainOutcome> {
-        let lead = self.first_healthy();
+        // prefer an exact slot's window: approximate slots serve reduced
+        // datasets (a stride subset, or FITC pseudo-targets that are not
+        // real observations), so an exact window is the ground truth
+        // whenever one is healthy
+        let lead = self
+            .slots
+            .iter()
+            .position(|s| !s.health.quarantined && s.spec.approx().is_none())
+            .unwrap_or_else(|| self.first_healthy());
         let window = Dataset::new(
             self.slots[lead].predictor.t().to_vec(),
             self.slots[lead].predictor.y().to_vec(),
@@ -861,25 +878,56 @@ impl ServeSession {
             o.extra_starts.push(incumbent);
             let trained =
                 train_model(&spec, self.sigma_n, &window, &o, workers, &self.exec, rng)?;
-            let hessian = crate::gp::profiled_hessian_with(
-                &model,
-                &window.t,
-                &window.y,
-                &trained.theta_hat,
-                &self.exec,
-            )?;
+            // same evidence routing as the tournament: n-scale surrogate
+            // + FD Hessian for approximate specs, analytic for exact
+            let (lnp_evidence, hessian) = match spec.approx() {
+                None => (
+                    trained.lnp_peak,
+                    crate::gp::profiled_hessian_with(
+                        &model,
+                        &window.t,
+                        &window.y,
+                        &trained.theta_hat,
+                        &self.exec,
+                    )?,
+                ),
+                Some(kind) => (
+                    crate::gp::approx::lnp_evidence_with(
+                        kind,
+                        &model,
+                        &window.t,
+                        &window.y,
+                        &trained.theta_hat,
+                        &self.exec,
+                    )?,
+                    crate::gp::approx::evidence_hessian_with(
+                        kind,
+                        &model,
+                        &window.t,
+                        &window.y,
+                        &trained.theta_hat,
+                        &self.exec,
+                    )?,
+                ),
+            };
             let evidence = laplace_evidence(
                 window.len(),
                 &prior,
                 &scale,
                 &trained.theta_hat,
-                trained.lnp_peak,
+                lnp_evidence,
                 &hessian,
             )?;
+            let (t_serve, y_serve) = match spec.approx() {
+                None => (window.t.clone(), window.y.clone()),
+                Some(kind) => {
+                    crate::gp::approx::serve_parts(kind, &window.t, &window.y, &trained.peak_eval)
+                }
+            };
             let predictor = Predictor::from_eval(
                 spec.build(self.sigma_n),
-                window.t.clone(),
-                window.y.clone(),
+                t_serve,
+                y_serve,
                 trained.theta_hat.clone(),
                 trained.peak_eval,
             );
@@ -905,9 +953,7 @@ impl ServeSession {
         }
         // hot swap: new slots, new ranking, fresh drift baselines
         let old_winner = self.slots[0].spec.name().to_string();
-        rebuilt.sort_by(|a, b| {
-            b.0.ln_z.partial_cmp(&a.0.ln_z).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        rebuilt.sort_by(|a, b| crate::util::desc_nan_last(a.0.ln_z, b.0.ln_z));
         let models: Vec<(String, f64, f64)> = rebuilt
             .iter()
             .map(|(s, old_ln_z)| (s.spec.name().to_string(), *old_ln_z, s.ln_z))

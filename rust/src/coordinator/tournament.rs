@@ -105,17 +105,28 @@ impl TrainedModel {
     /// Wire this artifact into a serving [`Predictor`] by **adopting**
     /// the peak evaluation — an `O(n²)` factor copy, no re-assembly and
     /// no `O(n³)` refactorisation. `data` must be the training set.
+    /// Approximate specs serve through their reduced dataset
+    /// ([`crate::gp::approx::serve_parts`]): the stride subset for SoD,
+    /// the inducing grid with pseudo-targets for FITC — both derived
+    /// deterministically from the data and the stored evaluation.
     pub fn predictor(&self, data: &Dataset) -> crate::Result<Predictor> {
         anyhow::ensure!(
-            self.train.peak_eval.chol.dim() == data.len(),
-            "TrainedModel factor is for n = {}, dataset has n = {}",
+            self.train.peak_eval.chol.dim() == self.spec.factor_dim(data.len()),
+            "TrainedModel factor dim {} does not match {} for n = {}",
             self.train.peak_eval.chol.dim(),
+            self.spec.factor_dim(data.len()),
             data.len()
         );
+        let (t_serve, y_serve) = match self.spec.approx() {
+            None => (data.t.clone(), data.y.clone()),
+            Some(kind) => {
+                crate::gp::approx::serve_parts(kind, &data.t, &data.y, &self.train.peak_eval)
+            }
+        };
         Ok(Predictor::from_eval(
             self.spec.build(self.sigma_n),
-            data.t.clone(),
-            data.y.clone(),
+            t_serve,
+            y_serve,
             self.train.theta_hat.clone(),
             self.train.peak_eval.clone(),
         ))
@@ -299,19 +310,48 @@ impl Tournament {
                 let spec = roster.specs()[idx].clone();
                 let model = spec.build(cfg.sigma_n);
                 let prior = BoxPrior::for_model(&model, &span);
-                let hessian = crate::gp::profiled_hessian_with(
-                    &model,
-                    &data.t,
-                    &data.y,
-                    &trained.theta_hat,
-                    &cfg.exec,
-                )?;
+                // every entrant — exact or approximate — enters the
+                // Laplace integral with an n-scale log-likelihood and a
+                // matching Hessian, so their ln Z values share one scale:
+                // exact specs use the analytic eq.-2.19 Hessian at their
+                // peak value; approximate specs use their n-scale
+                // evidence surrogate and its central-difference Hessian
+                let (lnp_evidence, hessian) = match spec.approx() {
+                    None => (
+                        trained.lnp_peak,
+                        crate::gp::profiled_hessian_with(
+                            &model,
+                            &data.t,
+                            &data.y,
+                            &trained.theta_hat,
+                            &cfg.exec,
+                        )?,
+                    ),
+                    Some(kind) => (
+                        crate::gp::approx::lnp_evidence_with(
+                            kind,
+                            &model,
+                            &data.t,
+                            &data.y,
+                            &trained.theta_hat,
+                            &cfg.exec,
+                        )?,
+                        crate::gp::approx::evidence_hessian_with(
+                            kind,
+                            &model,
+                            &data.t,
+                            &data.y,
+                            &trained.theta_hat,
+                            &cfg.exec,
+                        )?,
+                    ),
+                };
                 let evidence = laplace_evidence(
                     data.len(),
                     &prior,
                     &cfg.scale_prior,
                     &trained.theta_hat,
-                    trained.lnp_peak,
+                    lnp_evidence,
                     &hessian,
                 )?;
                 let nested = if cfg.run_nested {
@@ -336,9 +376,9 @@ impl Tournament {
             slots.into_iter().map(|s| s.expect("every roster model trained")).collect();
         let reports: Vec<ModelReport> = models.iter().map(TrainedModel::report).collect();
         let report = ComparisonReport::ranked(data.label.clone(), data.len(), reports);
-        models.sort_by(|a, b| {
-            b.evidence.ln_z.partial_cmp(&a.evidence.ln_z).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        // shared evidence comparator (NaN-last, deterministic) — the same
+        // order ComparisonReport::ranked and the serving router use
+        models.sort_by(|a, b| crate::util::desc_nan_last(a.evidence.ln_z, b.evidence.ln_z));
         Ok(TournamentResult { models, report })
     }
 }

@@ -64,11 +64,22 @@ pub struct TrainResult {
 /// proposal can never win a restart.
 pub const FAILED_EVAL_PENALTY: f64 = -1e12;
 
-/// The profiled-hyperlikelihood objective for one (model, dataset) pair.
+/// The training objective for one (model, dataset) pair — the profiled
+/// hyperlikelihood for exact specs, the backend's surrogate
+/// ([`crate::gp::approx::train_value_with`]) for approximate ones.
 /// Proposals that defeat even the escalation ladder evaluate to the
 /// finite [`FAILED_EVAL_PENALTY`] (rejected region) rather than erroring,
 /// so the restart survives and the line search backs off gracefully.
+///
+/// The exact path's value closure goes through
+/// [`profiled::eval_value_with`], which detects uniform time grids and
+/// serves the value through the `O(n²)` Levinson recursion instead of
+/// the `O(n³)` Cholesky. The CG optimiser itself consumes only
+/// `value_grad`, so the fast path cannot perturb its trajectory — it
+/// accelerates the value-only consumers (gradient-free probes,
+/// likelihood scans) and keeps them equal to the dense path to rounding.
 fn make_objective<'a>(
+    approx: Option<crate::gp::ApproxKind>,
     model: &'a crate::kernels::CovarianceModel,
     data: &'a Dataset,
     ctx: &'a ExecutionContext,
@@ -80,12 +91,24 @@ fn make_objective<'a>(
     FnObjective::new(
         m,
         move |theta: &[f64]| {
-            Ok(profiled::eval_with(model, &data.t, &data.y, theta, ctx)
-                .map_or(FAILED_EVAL_PENALTY, |e| e.lnp))
+            Ok(match approx {
+                None => profiled::eval_value_with(model, &data.t, &data.y, theta, ctx)
+                    .unwrap_or(FAILED_EVAL_PENALTY),
+                Some(kind) => {
+                    crate::gp::approx::train_value_with(kind, model, &data.t, &data.y, theta, ctx)
+                        .unwrap_or(FAILED_EVAL_PENALTY)
+                }
+            })
         },
-        move |theta: &[f64]| match profiled::eval_grad_with(model, &data.t, &data.y, theta, ctx) {
-            Ok((ev, g)) => Ok((ev.lnp, g)),
-            Err(_) => Ok((FAILED_EVAL_PENALTY, vec![0.0; m])),
+        move |theta: &[f64]| {
+            let res = match approx {
+                None => profiled::eval_grad_with(model, &data.t, &data.y, theta, ctx)
+                    .map(|(ev, g)| (ev.lnp, g)),
+                Some(kind) => {
+                    crate::gp::approx::train_grad_with(kind, model, &data.t, &data.y, theta, ctx)
+                }
+            };
+            Ok(res.unwrap_or_else(|_| (FAILED_EVAL_PENALTY, vec![0.0; m])))
         },
     )
 }
@@ -179,7 +202,7 @@ pub fn train_model_seeded(
                     p
                 }
             };
-            let mut obj = make_objective(&model, &data, &inner_ctx);
+            let mut obj = make_objective(spec.approx(), &model, &data, &inner_ctx);
             match maximise_cg(&mut obj, &prior, &x0, &cg) {
                 Ok(out) if out.value.is_finite() => Some(StartResult {
                     theta: out.theta,
@@ -209,7 +232,9 @@ pub fn train_model_seeded(
         !ok.is_empty(),
         "all {restarts} restarts failed for model {spec:?} (covariance never PD)"
     );
-    ok.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    // NaN-safe: a poisoned objective (NaN peak value) ranks last instead
+    // of panicking the whole train
+    ok.sort_by(|a, b| crate::util::desc_nan_last(a.value, b.value));
     let n_evals: usize = ok.iter().map(|r| r.evals).sum();
     // count distinct modes
     let tol = opts.multistart.dedupe_tol;
@@ -225,9 +250,16 @@ pub fn train_model_seeded(
     let restart_values: Vec<f64> = ok.iter().map(|r| r.value).collect();
     let best = &ok[0];
     // re-evaluate at the winning peak: σ̂_f² for the report, and the
-    // factor + α for the serving layer to adopt (no refactorisation)
+    // factor + α for the serving layer to adopt (no refactorisation).
+    // Approximate specs produce their reduced peak (subset factor for
+    // SoD, K_eff factor for FITC) — dim = spec.factor_dim(n).
     let model = spec.build(sigma_n);
-    let ev = profiled::eval_with(&model, &data.t, &data.y, &best.theta, exec)?;
+    let ev = match spec.approx() {
+        None => profiled::eval_with(&model, &data.t, &data.y, &best.theta, exec)?,
+        Some(kind) => {
+            crate::gp::approx::peak_eval_with(kind, &model, &data.t, &data.y, &best.theta, exec)?
+        }
+    };
     let jitter = ev.jitter;
     Ok(TrainResult {
         theta_hat: best.theta.clone(),

@@ -17,7 +17,12 @@
 //!   serving of eq. (2.1) with `O(n²)` observation appends
 //!   ([`crate::linalg::Chol::extend`]) — no per-query refactorisation.
 //! * [`sample`] — GP realisation sampling (Fig. 1).
+//! * [`approx`] — the approximate-inference tier (§3(b) alternatives the
+//!   paper surveys): subset-of-data and FITC sparse backends whose
+//!   `O(nm²)` training objectives slot into the same optimizer, evidence
+//!   and serving stack as the exact `O(n³)` path.
 
+pub mod approx;
 pub mod assemble;
 pub mod profiled;
 pub mod full;
@@ -33,9 +38,10 @@ pub use full::{
     full_hessian, full_hessian_with, full_lnp, full_lnp_grad, full_lnp_grad_with, full_lnp_with,
 };
 pub use predict::predict;
+pub use approx::ApproxKind;
 pub use profiled::{
     eval_count as profiled_eval_count, marg_constant, profiled_hessian, profiled_hessian_with,
-    ProfiledEval,
+    toeplitz_hit_count, ProfiledEval,
 };
 pub use sample::draw_realisation;
 pub use serve::{Predictor, ServeStats};

@@ -68,7 +68,7 @@ impl DataSpan {
     pub fn from_times(t: &[f64]) -> Self {
         assert!(t.len() >= 2, "need at least two points");
         let mut s = t.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| crate::util::asc_nan_last(*a, *b));
         let mut dt_min = f64::INFINITY;
         for w in s.windows(2) {
             let d = w[1] - w[0];

@@ -179,6 +179,46 @@
 //!   non-finite value, quarantine → retrain → re-entry, and the
 //!   clean-data control arm bit-identical with zero recorded jitter.
 //!
+//! ### Approximate-inference tier (SoD + FITC + Toeplitz fast path)
+//!
+//! [`gp::approx`] breaks the `O(n³)` wall with two sparse backends that
+//! are first-class roster entrants — `sod-k2` and `fitc-k2`
+//! ([`coordinator::ModelSpec::SodK2`] / [`coordinator::ModelSpec::FitcK2`],
+//! both warm-started from exact `k2`) — so the tournament ranks *exact
+//! vs approximate* on the same Laplace ln Z scale:
+//!
+//! * **Subset of data** — the exact profiled machinery on a
+//!   deterministic stride subset of `m = Θ(√n)` points (`O(m³)` per
+//!   training evaluation); its evidence surrogate completes the subset
+//!   likelihood with the predictive log-density of every held-out point
+//!   (`O(n m²)`).
+//! * **FITC** — `m = Θ(√n)` inducing points on a uniform grid; the
+//!   Woodbury/determinant-lemma forms evaluate the profiled likelihood
+//!   in `O(n m²)` without materialising anything `n × n`, and the
+//!   uniform grid makes the inducing Gram Toeplitz (Levinson solves).
+//!   Serving goes through an `m × m` effective model whose exact-GP
+//!   predictor equations reproduce FITC exactly.
+//!
+//! Both persist through the same versioned artifact (the factor
+//! dimension is the spec-determined [`coordinator::ModelSpec::factor_dim`])
+//! and serve through the same router — save → load → predict is
+//! bit-identical (`rust/tests/approx.rs`). Training gradients are
+//! central differences of the approximate objectives; every ranking
+//! sort in the optimizer/evidence stack orders NaN-safely
+//! ([`util::order`]: non-finite objectives rank last instead of
+//! panicking). The accuracy-vs-cost panel (`benches/approx.rs`, Chalupka
+//! et al. 2013 style) records hold-out SMSE/MSLL vs training wall-clock
+//! per method into `BENCH_perf.json`.
+//!
+//! Independently of the sparse backends,
+//! [`gp::profiled::eval_value_with`] detects **exactly uniform time
+//! grids** (bitwise-equal consecutive steps — the paper's §3(b)
+//! footnote 7) and routes value-only likelihood evaluations through the
+//! Levinson `O(n²)` solve+logdet of [`linalg::ToeplitzSolver`], falling
+//! back to the dense Cholesky off-grid; the hit counter
+//! [`gp::profiled::toeplitz_hit_count`] makes the routing observable and
+//! the golden suite pins the Levinson solve against 60-digit mpmath.
+//!
 //! **Persistence** closes the loop: [`coordinator::TrainedModel`]
 //! `save`/`load` write a versioned little-endian binary (spec + data +
 //! ϑ̂ + packed factor with its maintained logdet + α + evidence; no

@@ -105,7 +105,7 @@ pub fn sym_eigen_checked(a: &Matrix) -> crate::Result<(Vec<f64>, Matrix)> {
     // extract and sort ascending
     let mut idx: Vec<usize> = (0..n).collect();
     let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    idx.sort_by(|&a, &b| evals[a].partial_cmp(&evals[b]).unwrap());
+    idx.sort_by(|&a, &b| crate::util::asc_nan_last(evals[a], evals[b]));
     let sorted_vals: Vec<f64> = idx.iter().map(|&i| evals[i]).collect();
     let mut sorted_vecs = Matrix::zeros(n, n);
     for (new_col, &old_col) in idx.iter().enumerate() {
@@ -140,7 +140,7 @@ pub fn sym_eigenvalues_with(a: &Matrix, ctx: &ExecutionContext) -> crate::Result
     m.symmetrize();
     let (mut d, mut e) = tridiagonalize(&mut m, ctx);
     tql_eigenvalues(&mut d, &mut e)?;
-    d.sort_by(|x, y| x.partial_cmp(y).expect("non-finite eigenvalue"));
+    d.sort_by(|x, y| crate::util::asc_nan_last(*x, *y));
     Ok(d)
 }
 

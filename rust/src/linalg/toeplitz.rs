@@ -3,8 +3,13 @@
 //! Paper §3(b), footnote 7: regularly sampled data gives a Toeplitz
 //! covariance matrix whose structure "could be exploited to accelerate the
 //! inversion"; the authors chose not to so their code stays general. We
-//! implement it as an ablation (`benches/ablations.rs`): `O(n²)` solves
-//! and log-determinant versus the `O(n³)` Cholesky.
+//! do: [`crate::gp::profiled::eval_value_with`] detects uniform time
+//! grids and routes value-only likelihood evaluations through Levinson
+//! (`O(n²)` solve + log-determinant versus the `O(n³)` Cholesky), and the
+//! FITC backend ([`crate::gp::approx`]) uses the multi-RHS
+//! [`ToeplitzSolver::solve_mat`] against its uniform inducing grid's
+//! `C̃_mm`. The `O(n²)`-vs-`O(n³)` gap itself is measured in
+//! `benches/ablations.rs`.
 
 use super::Matrix;
 
@@ -101,6 +106,23 @@ impl ToeplitzSolver {
         x
     }
 
+    /// Solve `T xᵢ = bᵢ` for a stack of right-hand sides held as the
+    /// **rows** of `b` (the layout [`crate::linalg::Chol::half_solve_rows_with`]
+    /// and the FITC `Q̃`-diagonal computation use): returns the matrix
+    /// whose row `i` is `T⁻¹·row_i(b)`. `O(q·n²)` for `q` rows — each an
+    /// independent Levinson back-substitution against the shared
+    /// predictor/innovation tables, which are built once in `new`.
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let n = self.dim();
+        assert_eq!(b.cols(), n, "RHS rows must have length {n}");
+        let mut out = Matrix::zeros(b.rows(), n);
+        for i in 0..b.rows() {
+            let x = self.solve(b.row(i));
+            out.row_mut(i).copy_from_slice(&x);
+        }
+        out
+    }
+
     /// Materialise the dense matrix (test helper / cross-validation).
     pub fn dense(&self) -> Matrix {
         let n = self.dim();
@@ -171,8 +193,35 @@ mod tests {
 
     #[test]
     fn rejects_indefinite() {
-        // r = [1, 0.99, 0.99, ...] with an impossible jump is fine; build a
-        // genuinely non-PD sequence instead: r0=1, r1=1.2 violates |ρ|≤1.
+        // r1 > r0 means the 2×2 leading minor r0² − r1² is negative, i.e.
+        // the lag-1 correlation ρ = r1/r0 = 1.2 violates |ρ| ≤ 1 — the
+        // recursion must hit a non-positive innovation variance and fail.
         assert!(ToeplitzSolver::new(&[1.0, 1.2]).is_err());
+    }
+
+    #[test]
+    fn solve_mat_matches_rowwise_solve() {
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        let n = 24;
+        let ts = ToeplitzSolver::new(&ar1_column(n, 0.6)).unwrap();
+        let q = 5;
+        let mut b = Matrix::zeros(q, n);
+        for i in 0..q {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let x = ts.solve_mat(&b);
+        for i in 0..q {
+            assert_eq!(x.row(i), &ts.solve(b.row(i))[..], "row {i}");
+        }
+        // and against the dense factorisation
+        let ch = Chol::factor(&ts.dense()).unwrap();
+        for i in 0..q {
+            let xc = ch.solve(b.row(i));
+            for j in 0..n {
+                assert!((x[(i, j)] - xc[j]).abs() < 1e-9, "({i},{j})");
+            }
+        }
     }
 }

@@ -82,7 +82,7 @@ flags:
   --config <file.toml>     load run configuration
   --data <file.csv>        dataset (else synthetic --n points)
   --n <N>                  synthetic dataset size [100]
-  --models k1,k2           models to use
+  --models k1,k2,…         roster (k1|k2|k3|wendland-se|wendland-m32|wendland-m52|sod-k2|fitc-k2)
   --model k2               single model (train/nested)
   --backend native|xla|auto
   --restarts <N>           multistart restarts [10]

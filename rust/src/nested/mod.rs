@@ -115,7 +115,7 @@ where
         let (worst, &ln_l_star) = live_l
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| crate::util::asc_nan_last(*a.1, *b.1))
             .unwrap();
         let ln_x = ln_x_prev + ln_shrink;
         // trapezoid weight: w = X_{k-1} − X_k

@@ -74,7 +74,9 @@ pub fn multistart(
         }
     }
     anyhow::ensure!(!all.is_empty(), "every restart failed (covariance never PD)");
-    all.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    // NaN-safe: a restart that converged onto a NaN objective value ranks
+    // last instead of panicking the driver
+    all.sort_by(|a, b| crate::util::desc_nan_last(a.value, b.value));
     // count distinct modes
     let mut modes: Vec<&[f64]> = Vec::new();
     for s in &all {
@@ -136,6 +138,54 @@ mod tests {
         for w in out.all.windows(2) {
             assert!(w[0].value >= w[1].value);
         }
+    }
+
+    /// NaN for x < 0 (with a zero gradient, so CG "converges" right at the
+    /// start and reports the NaN value); a single clean peak at x = 2
+    /// otherwise.
+    fn nan_left(t: &[f64]) -> f64 {
+        let x = t[0];
+        if x < 0.0 {
+            f64::NAN
+        } else {
+            (-(x - 2.0) * (x - 2.0)).exp()
+        }
+    }
+
+    fn nan_left_grad(t: &[f64]) -> Vec<f64> {
+        let x = t[0];
+        if x < 0.0 {
+            vec![0.0]
+        } else {
+            vec![-2.0 * (x - 2.0) * nan_left(t)]
+        }
+    }
+
+    #[test]
+    fn nan_objective_ranks_last_instead_of_panicking() {
+        // regression: a restart that converges onto a NaN objective value
+        // used to panic the `partial_cmp().unwrap()` ranking sort; it must
+        // complete and rank the NaN outcomes strictly last
+        let mut obj = FnObjective::new(
+            1,
+            |t: &[f64]| Ok(nan_left(t)),
+            |t: &[f64]| Ok((nan_left(t), nan_left_grad(t))),
+        );
+        let prior = BoxPrior { bounds: vec![(-6.0, 6.0)], constraints: vec![] };
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let opts = MultistartOptions { restarts: 16, ..Default::default() };
+        let out = multistart(&mut obj, &prior, &opts, &mut rng).unwrap();
+        assert!(out.best.value.is_finite(), "best value is {}", out.best.value);
+        assert!((out.best.theta[0] - 2.0).abs() < 1e-3, "best {:?}", out.best.theta);
+        assert!(
+            out.all.iter().any(|s| s.value.is_nan()),
+            "seeded starts must include at least one NaN-region restart"
+        );
+        let first_nan = out.all.iter().position(|s| s.value.is_nan()).unwrap();
+        assert!(
+            out.all[first_nan..].iter().all(|s| s.value.is_nan()),
+            "every NaN outcome must rank after every finite one"
+        );
     }
 
     #[test]

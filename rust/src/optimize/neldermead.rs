@@ -51,8 +51,8 @@ pub fn maximise_neldermead(
     }
     let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
     for _ in 0..opts.max_iters {
-        // sort descending (maximisation: best first)
-        simplex.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // sort descending (maximisation: best first; NaN vertices last)
+        simplex.sort_by(|a, b| crate::util::desc_nan_last(a.1, b.1));
         let spread = simplex[0].1 - simplex[n].1;
         if spread.abs() < opts.f_tol * (1.0 + simplex[0].1.abs()) {
             break;
@@ -99,7 +99,7 @@ pub fn maximise_neldermead(
             }
         }
     }
-    simplex.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    simplex.sort_by(|a, b| crate::util::desc_nan_last(a.1, b.1));
     let best = simplex.remove(0);
     Ok((best.0, best.1))
 }

@@ -2,10 +2,12 @@
 
 pub mod json;
 pub mod cli;
+pub mod order;
 pub mod table;
 pub mod timer;
 
 pub use json::Json;
+pub use order::{asc_nan_last, desc_nan_last};
 pub use cli::Args;
 pub use table::Table;
 pub use timer::{Stopwatch, TimingStats};

@@ -1,0 +1,84 @@
+//! Shared NaN-safe `f64` orderings.
+//!
+//! Every ranking in the pipeline — restart peaks, evidence ln Z, simplex
+//! vertices, eigenvalues, timing medians — used to call
+//! `partial_cmp().unwrap()` (a panic on the first NaN) or
+//! `unwrap_or(Equal)` (input-order-dependent, so two rankings over the
+//! same values could disagree). Both are replaced by the two total
+//! orders here, built on [`f64::total_cmp`]:
+//!
+//! * finite values compare exactly as `partial_cmp` would;
+//! * **every NaN sorts last** in either direction, so a poisoned
+//!   objective value or non-finite ln Z can never win a ranking or
+//!   panic a train;
+//! * NaNs order among themselves by their `total_cmp` bit pattern, so
+//!   the result is deterministic and input-order-independent even when
+//!   several rankings see the same degenerate values.
+//!
+//! (`total_cmp` additionally distinguishes `-0.0 < +0.0`; `partial_cmp`
+//! called them equal. Ranked quantities here are likelihoods, ln Z and
+//! wall-clock times, where a signed-zero tie is not a reachable case.)
+
+use std::cmp::Ordering;
+
+/// Ascending total order with NaN last: `-∞ < … < +∞ < NaN`.
+pub fn asc_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        // both-NaN: total_cmp keeps the order deterministic
+        _ => a.total_cmp(&b),
+    }
+}
+
+/// Descending total order with NaN last: `+∞ > … > -∞ > NaN`.
+///
+/// The shared comparator behind every evidence/peak ranking
+/// (`sort_by(|a, b| desc_nan_last(a.key, b.key))` puts the best value
+/// first and anything non-finite-in-the-NaN-sense at the bottom).
+pub fn desc_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (true, true) => a.total_cmp(&b),
+        (false, false) => b.total_cmp(&a),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_values_match_partial_cmp() {
+        let vals = [-3.5, -0.0, 0.0, 1.0, f64::INFINITY, f64::NEG_INFINITY];
+        for &a in &vals {
+            for &b in &vals {
+                if a != b {
+                    assert_eq!(asc_nan_last(a, b), a.partial_cmp(&b).unwrap(), "{a} vs {b}");
+                    assert_eq!(desc_nan_last(a, b), b.partial_cmp(&a).unwrap(), "{a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_sorts_last_both_directions() {
+        let mut v = vec![1.0, f64::NAN, -2.0, 3.0];
+        v.sort_by(|a, b| asc_nan_last(*a, *b));
+        assert_eq!(&v[..3], &[-2.0, 1.0, 3.0]);
+        assert!(v[3].is_nan());
+        let mut v = vec![1.0, f64::NAN, -2.0, 3.0];
+        v.sort_by(|a, b| desc_nan_last(*a, *b));
+        assert_eq!(&v[..3], &[3.0, 1.0, -2.0]);
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
+    fn deterministic_on_all_nan_input() {
+        let a = f64::from_bits(f64::NAN.to_bits());
+        let b = f64::from_bits(f64::NAN.to_bits() | 1);
+        assert_eq!(desc_nan_last(a, b), desc_nan_last(a, b));
+        assert_ne!(desc_nan_last(a, b), desc_nan_last(b, a));
+    }
+}

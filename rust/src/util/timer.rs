@@ -73,7 +73,7 @@ impl TimingStats {
             return 0.0;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| super::order::asc_nan_last(*a, *b));
         let n = s.len();
         if n % 2 == 1 {
             s[n / 2]

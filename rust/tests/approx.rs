@@ -1,0 +1,238 @@
+//! Integration suite for the approximate-inference tier (`gp::approx`):
+//!
+//! * SoD and FITC entrants train through the tournament, persist through
+//!   the v-format artifact and serve through the router — with
+//!   save → load → predict **bit-identical** to the in-memory predictor;
+//! * a mixed exact/approximate roster (`k2, sod-k2, fitc-k2`) trains
+//!   deterministically at 1 and 4 linalg threads, every entrant carrying
+//!   a finite Laplace ln Z on the shared n-scale;
+//! * the FITC predictive uncertainty is sane against the exact GP at the
+//!   same hyperparameters (mean-level: an approximation must not claim
+//!   materially more confidence than the exact posterior);
+//! * on the regularly-gridded tidal series the Levinson value-only fast
+//!   path reproduces the dense Cholesky profiled likelihood to 1e-8.
+
+use std::path::PathBuf;
+
+use gpfast::coordinator::{ModelSpec, PipelineConfig, ServeSession, Tournament, TrainedModel};
+use gpfast::data::synthetic::{draw_gp_dataset, table1_dataset};
+use gpfast::data::tidal::{generate_tidal, TidalConfig};
+use gpfast::gp::approx::{self, ApproxKind};
+use gpfast::gp::serve::Predictor;
+use gpfast::gp::{profiled, ApproxKind as ReexportedKind};
+use gpfast::kernels::{paper_k1, PaperK1};
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gpfast_approx_{}_{tag}.bin", std::process::id()))
+}
+
+/// One mixed-roster tournament: the paper's exact k₂ plus its SoD and
+/// FITC approximations, small restart budget.
+fn mixed_tournament(threads: usize, seed: u64) -> (gpfast::data::Dataset, Vec<TrainedModel>) {
+    let data = table1_dataset(80, 0.1, 42);
+    let mut cfg = PipelineConfig::paper_synthetic();
+    cfg.models = vec![ModelSpec::K2, ModelSpec::SodK2, ModelSpec::FitcK2];
+    cfg.train.multistart.restarts = 2;
+    cfg.workers = 2;
+    cfg.exec = ExecutionContext::new(threads);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let result = Tournament::new(cfg).run(&data, &mut rng).unwrap();
+    (data, result.models)
+}
+
+/// The tentpole acceptance: the mixed roster trains through one
+/// tournament, every entrant gets a Laplace ln Z on the same n-scale,
+/// the reduced factors have the spec-mandated dimensions, and the winner
+/// serves through a `ServeSession`.
+#[test]
+fn mixed_roster_trains_ranks_and_serves() {
+    let (data, models) = mixed_tournament(1, 7);
+    assert_eq!(models.len(), 3);
+    let n = data.len();
+    for tm in &models {
+        assert!(
+            tm.ln_z().is_finite(),
+            "{}: ln Z = {} must be finite on the shared scale",
+            tm.spec.name(),
+            tm.ln_z()
+        );
+        assert!(tm.train.lnp_peak.is_finite());
+        assert_eq!(
+            tm.train.peak_eval.chol.dim(),
+            tm.spec.factor_dim(n),
+            "{}: reduced factor dimension",
+            tm.spec.name()
+        );
+        assert_eq!(tm.train.peak_eval.alpha.len(), tm.spec.factor_dim(n));
+    }
+    // the reduced dims really are reduced
+    let sod = models.iter().find(|m| m.spec == ModelSpec::SodK2).unwrap();
+    let fitc = models.iter().find(|m| m.spec == ModelSpec::FitcK2).unwrap();
+    assert_eq!(sod.train.peak_eval.chol.dim(), approx::sod_m(n));
+    assert_eq!(fitc.train.peak_eval.chol.dim(), approx::fitc_m(n));
+    assert!(approx::sod_m(n) < n && approx::fitc_m(n) < n);
+
+    // the ranked set serves through the router, winner by default
+    let session =
+        ServeSession::from_tournament(&models, &data, ExecutionContext::seq()).unwrap();
+    assert_eq!(session.n_models(), 3);
+    let t_star: Vec<f64> = (0..24).map(|q| 0.4 + 3.3 * q as f64).collect();
+    let routed = session.predict(&t_star);
+    assert!(routed.mean.iter().all(|v| v.is_finite()));
+    assert!(routed.sd.iter().all(|v| v.is_finite() && *v > 0.0));
+    // every entrant is individually queryable through the same session
+    for name in ["k2", "sod-k2", "fitc-k2"] {
+        let p = session.predict_model(name, &t_star).unwrap();
+        assert!(p.mean.iter().all(|v| v.is_finite()), "{name}");
+        assert!(p.sd.iter().all(|v| v.is_finite() && *v > 0.0), "{name}");
+    }
+}
+
+/// Save → load → predict round-trips bit-identically for both
+/// approximate backends (the artifact layer's `spec.factor_dim`
+/// relaxation at work), and a session restored from the artifacts serves
+/// the same bits as the in-memory one.
+#[test]
+fn approx_artifacts_round_trip_bit_identically() {
+    let (data, models) = mixed_tournament(1, 9);
+    let exec = ExecutionContext::seq();
+    let t_star: Vec<f64> = (0..32).map(|q| 0.9 + 2.45 * q as f64).collect();
+    let mut paths = Vec::new();
+    for tm in &models {
+        let name = tm.spec.name();
+        let path = tmp_path(name);
+        tm.save(&path, &data).expect("save");
+        let (tm2, data2) = TrainedModel::load(&path).expect("load");
+        assert_eq!(tm2.spec, tm.spec, "{name}");
+        assert_eq!(tm2.train.theta_hat, tm.train.theta_hat, "{name}");
+        assert_eq!(tm2.train.peak_eval.alpha, tm.train.peak_eval.alpha, "{name}");
+        assert_eq!(
+            tm2.train.peak_eval.chol.logdet(),
+            tm.train.peak_eval.chol.logdet(),
+            "{name}"
+        );
+        let p_mem = tm.predictor(&data).expect("in-memory predictor");
+        let p_disk = tm2.predictor(&data2).expect("reloaded predictor");
+        assert_eq!(p_mem.n(), tm.spec.factor_dim(data.len()), "{name}: serving size");
+        let a = p_mem.predict_batch(&t_star, &exec);
+        let b = p_disk.predict_batch(&t_star, &exec);
+        assert_eq!(a.mean, b.mean, "{name}: reloaded means must be bit-identical");
+        assert_eq!(a.sd, b.sd, "{name}: reloaded sds must be bit-identical");
+        paths.push(path);
+    }
+    // a full session restored from the three artifacts serves the same
+    // bits as the in-memory router
+    let mem = ServeSession::from_tournament(&models, &data, ExecutionContext::seq()).unwrap();
+    let want = mem.predict(&t_star);
+    let path_refs: Vec<&std::path::Path> = paths.iter().map(|p| p.as_path()).collect();
+    let restored =
+        ServeSession::from_artifacts(&path_refs, ExecutionContext::seq()).unwrap();
+    assert_eq!(restored.n_models(), 3);
+    assert_eq!(restored.spec().name(), mem.spec().name());
+    let got = restored.predict(&t_star);
+    assert_eq!(got.mean, want.mean);
+    assert_eq!(got.sd, want.sd);
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// The mixed roster is deterministic in the thread count: 1-thread and
+/// 4-thread tournaments (same seed) produce bitwise-identical peaks and
+/// evidences for every entrant, exact and approximate alike.
+#[test]
+fn mixed_roster_is_deterministic_across_thread_counts() {
+    let (_, seq) = mixed_tournament(1, 7);
+    let (_, par) = mixed_tournament(4, 7);
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        let name = a.spec.name();
+        assert_eq!(a.spec, b.spec, "ranking order must match");
+        assert_eq!(a.train.theta_hat, b.train.theta_hat, "{name}: θ̂");
+        assert_eq!(
+            a.train.lnp_peak.to_bits(),
+            b.train.lnp_peak.to_bits(),
+            "{name}: lnp_peak"
+        );
+        assert_eq!(a.ln_z().to_bits(), b.ln_z().to_bits(), "{name}: ln Z");
+        assert_eq!(a.train.peak_eval.alpha, b.train.peak_eval.alpha, "{name}: α");
+    }
+}
+
+/// Sanity bound on the FITC uncertainty: at the *same* hyperparameters,
+/// the approximate posterior must not be materially more confident than
+/// the exact one on held-out query points (mean level, 5% slack for the
+/// independently-profiled σ̂_f scales).
+#[test]
+fn fitc_predictive_sd_is_not_overconfident() {
+    let model = paper_k1(0.1);
+    let mut rng = Xoshiro256::seed_from_u64(2024);
+    let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 200, &mut rng);
+    let theta = PaperK1::truth();
+    let ctx = ExecutionContext::seq();
+
+    let exact = Predictor::fit(model.clone(), &data.t, &data.y, &theta, &ctx).unwrap();
+    let ev = approx::peak_eval_with(ApproxKind::Fitc, &model, &data.t, &data.y, &theta, &ctx)
+        .unwrap();
+    let (u, y_pseudo) = approx::serve_parts(ApproxKind::Fitc, &data.t, &data.y, &ev);
+    let fitc = Predictor::from_eval(model, u, y_pseudo, theta.to_vec(), ev);
+
+    let t_star: Vec<f64> = (0..80).map(|q| 0.37 + 2.41 * q as f64).collect();
+    let pe = exact.predict_batch(&t_star, &ctx);
+    let pf = fitc.predict_batch(&t_star, &ctx);
+    // normalise out the profiled scales so the comparison is purely about
+    // the posterior information content
+    let se = exact.sigma_f_hat2().sqrt();
+    let sf = fitc.sigma_f_hat2().sqrt();
+    let mean_exact = pe.sd.iter().map(|v| v / se).sum::<f64>() / t_star.len() as f64;
+    let mean_fitc = pf.sd.iter().map(|v| v / sf).sum::<f64>() / t_star.len() as f64;
+    assert!(
+        mean_fitc >= 0.95 * mean_exact,
+        "FITC mean sd {mean_fitc:.6} vs exact {mean_exact:.6}: the approximation \
+         claims more confidence than the exact posterior"
+    );
+}
+
+/// The re-exported kind and the module path name the same type (doc-level
+/// API check), and the SoD serving subset really is a subset of the data.
+#[test]
+fn sod_serves_a_true_subset_of_the_data() {
+    let model = paper_k1(0.1);
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let data = draw_gp_dataset(&model, 1.0, &PaperK1::truth(), 60, &mut rng);
+    let theta = PaperK1::truth();
+    let ctx = ExecutionContext::seq();
+    let kind: ReexportedKind = ApproxKind::Sod;
+    let ev = approx::peak_eval_with(kind, &model, &data.t, &data.y, &theta, &ctx).unwrap();
+    let (ts, ys) = approx::serve_parts(kind, &data.t, &data.y, &ev);
+    assert_eq!(ts.len(), approx::sod_m(60));
+    for (tv, yv) in ts.iter().zip(&ys) {
+        let i = data.t.iter().position(|v| v == tv).expect("subset time not in data");
+        assert_eq!(data.y[i], *yv, "subset target must be the raw observation");
+    }
+}
+
+/// §3(b) footnote 7, closed: on the exactly-regular tidal grid
+/// (t_k = 2k hours) the Levinson value-only fast path must reproduce the
+/// dense Cholesky profiled likelihood to 1e-8 relative — and must
+/// actually have taken the Toeplitz route (hit counter).
+#[test]
+fn toeplitz_fast_path_matches_cholesky_on_tidal_grid() {
+    let data = generate_tidal(&TidalConfig::six_lunar_months(20160125)).demean();
+    assert_eq!(data.len(), 1968);
+    // tidal-scale k₁: ~150 h compact support, the 12.42 h lunar period
+    let model = paper_k1(0.1);
+    let theta = vec![150f64.ln(), 12.42f64.ln(), 0.0];
+    let ctx = ExecutionContext::seq();
+    let hits_before = profiled::toeplitz_hit_count();
+    let fast = profiled::eval_value_with(&model, &data.t, &data.y, &theta, &ctx).unwrap();
+    assert!(
+        profiled::toeplitz_hit_count() > hits_before,
+        "uniform 2-hour cadence must route through Levinson"
+    );
+    let dense = profiled::eval_with(&model, &data.t, &data.y, &theta, &ctx).unwrap().lnp;
+    let rel = (fast - dense).abs() / dense.abs().max(1.0);
+    assert!(rel < 1e-8, "fast {fast} vs dense {dense} (rel {rel:.3e})");
+}

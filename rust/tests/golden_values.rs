@@ -140,6 +140,36 @@ fn k1_gram_eigenvalues_n64() {
     assert_close("chol logdet", chol.logdet(), -88.968193055636497033);
 }
 
+/// Case 5 — the Levinson–Durbin Toeplitz solver against the 60-digit
+/// dense solve on the same fixed n = 64 k₁ Gram matrix as case 4 (which
+/// is Toeplitz by construction on the uniform grid t = 1..64). Pins
+/// selected components of `K̃⁻¹y`, the quadratic form `yᵀK̃⁻¹y`, and the
+/// log-determinant — which must also reproduce the case-4
+/// eigenvalue/Cholesky value, closing the loop between all three
+/// factorisation paths.
+#[test]
+fn toeplitz_levinson_solve_n64() {
+    use gpfast::gp::assemble_cov;
+    use gpfast::linalg::{dot, ToeplitzSolver};
+
+    let t: Vec<f64> = (1..=64).map(|i| i as f64).collect();
+    let y: Vec<f64> =
+        t.iter().map(|&ti| (0.6 * ti).sin() + 0.3 * (1.7 * ti).cos()).collect();
+    let theta = vec![2.5, 1.5, 0.0];
+    let model = paper_k1(0.1);
+    let k = assemble_cov(&model, &t, &theta);
+    // first row of the (Toeplitz) Gram is the lag sequence, σ_n² included
+    let r: Vec<f64> = (0..64).map(|j| k[(0, j)]).collect();
+    let ts = ToeplitzSolver::new(&r).unwrap();
+    let x = ts.solve(&y);
+    assert_close("x[0]", x[0], 0.0072500229417323533459);
+    assert_close("x[1]", x[1], -0.64648008587845827511);
+    assert_close("x[31]", x[31], -0.28400247180701097282);
+    assert_close("x[63]", x[63], 0.53070489684839911209);
+    assert_close("ytKinvy", dot(&y, &x), 32.052631861242875937);
+    assert_close("logdet", ts.logdet(), -88.968193055636497033);
+}
+
 /// The marginalisation constant (eq. 2.18) alone, over a range of n —
 /// pins `lgamma` and the constant's composition.
 #[test]

@@ -1,0 +1,305 @@
+//! Bench: the multi-tenant serving fleet — Zipf-distributed predict
+//! traffic from 10k+ sessions funnelled through a bounded LRU of
+//! hydrated factors (capacity ≪ session count), plus the cross-session
+//! batch scheduler and a per-`n` breakdown of what a cold hydration
+//! actually costs.
+//!
+//! Appends a `fleet` section to **`BENCH_perf.json`** (merging with the
+//! sections other benches wrote). Row schema:
+//!
+//! * `workload`: `{n, sessions, capacity, requests, threads, seconds,
+//!   sessions_per_sec, hit_rate, hydration_rate, hit_p50_us, hit_p99_us,
+//!   cold_p50_us, cold_p99_us, p50_us, p99_us, hydrations, evictions,
+//!   persisted}` — one `Fleet::predict` per request over a Zipf(s=1.1)
+//!   session stream; requests are bucketed **hot** (session resident
+//!   before the call) vs **cold** (the call pays hydration). The bench
+//!   asserts the tentpole's economics in-process: hot p50 strictly
+//!   below cold p50.
+//! * `batch`: `{n, sessions, capacity, requests, threads, seconds,
+//!   requests_per_sec}` — the same traffic shape submitted as one
+//!   [`Fleet::run_batch`] call per chunk, so per-session groups share a
+//!   multi-RHS solve and the wave drains concurrently.
+//! * `hydrate_split`: `{n, threads, artifact_bytes, parse_us, adopt_us,
+//!   hydrations}` — a capacity-1 fleet thrashing between two sessions so
+//!   every lookup hydrates; the fleet's phase timers split the cost into
+//!   artifact **parse** (bytes → `TrainedModel`) vs factor **adopt**
+//!   (`TrainedModel` → live session). These numbers scope the zero-copy
+//!   artifact roadmap item.
+//!
+//! `cargo bench --bench fleet`; set `GPFAST_BENCH_QUICK=1` for the
+//! ci.sh smoke run (smaller n and request counts — still ≥ 10k
+//! sessions, the point of the exercise).
+
+use gpfast::coordinator::{
+    ArtifactStore, Fleet, MemoryStore, ModelSpec, PredictRequest, TrainResult, TrainedModel,
+    ZipfWorkload,
+};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::data::Dataset;
+use gpfast::evidence::LaplaceEvidence;
+use gpfast::gp::profiled;
+use gpfast::linalg::Matrix;
+use gpfast::priors::BoxPrior;
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::{timer::human_time, Json, Stopwatch, Table};
+
+/// Deterministic artifact without running the optimiser: one profiled
+/// evaluation at the prior mid-point (the persistence-suite recipe —
+/// fleet traffic is about serving, not about training quality).
+fn make_artifact(spec: ModelSpec, data: &Dataset) -> TrainedModel {
+    let sigma_n = 0.1;
+    let model = spec.build(sigma_n);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let mut theta: Vec<f64> = prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+    prior.project(&mut theta);
+    let ev = profiled::eval(&model, &data.t, &data.y, &theta).expect("mid-prior eval");
+    let m = model.dim();
+    TrainedModel {
+        spec,
+        sigma_n,
+        param_names: model.kernel.names(),
+        train: TrainResult {
+            theta_hat: theta,
+            lnp_peak: ev.lnp,
+            sigma_f_hat2: ev.sigma_f_hat2,
+            jitter: ev.jitter,
+            peak_eval: ev,
+            converged: true,
+            n_evals: 0,
+            n_modes: 1,
+            restart_values: Vec::new(),
+        },
+        evidence: LaplaceEvidence {
+            ln_z: -10.0,
+            ln_p_peak: -10.0,
+            ln_det_h: 0.0,
+            ln_volume: 0.0,
+            marg_const: 0.0,
+            sigma: vec![0.0; m],
+            covariance: Matrix::zeros(m, m),
+            suspect: false,
+        },
+        nested: None,
+        warm_started: false,
+        restarts: 0,
+        wall_secs: 0.0,
+    }
+}
+
+fn session_id(rank: usize) -> String {
+    format!("s{rank:05}")
+}
+
+/// p-th percentile of an already-sorted latency list (µs).
+fn pct(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx]
+}
+
+fn main() {
+    let ctx = ExecutionContext::from_env();
+    let threads = ctx.threads();
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    println!("(thread budget: {threads}{})\n", if quick { ", quick mode" } else { "" });
+    let mut rows: Vec<Json> = Vec::new();
+
+    // one trained artifact shared (byte-wise) by every cold session: the
+    // fleet's cache behaviour depends on ids and sizes, not on which
+    // model each tenant happens to own
+    let n = if quick { 24 } else { 48 };
+    let sessions = if quick { 10_000 } else { 20_000 };
+    let capacity = if quick { 64 } else { 128 };
+    let requests = if quick { 1_500 } else { 8_000 };
+    let data = table1_dataset(n, 0.1, 5);
+    let blob = make_artifact(ModelSpec::K1, &data).to_bytes(&data).expect("encode");
+    println!(
+        "== Zipf workload: {sessions} sessions × {} B artifacts, LRU capacity {capacity} ==",
+        blob.len()
+    );
+    let sw = Stopwatch::start();
+    let mut store = MemoryStore::new();
+    for rank in 0..sessions {
+        store.put(&session_id(rank), vec![blob.clone()]).expect("seed store");
+    }
+    println!(
+        "store seeded: {} sessions, {:.1} MiB cold tier, {}",
+        store.len().unwrap(),
+        store.total_bytes().unwrap() as f64 / (1024.0 * 1024.0),
+        human_time(sw.elapsed_secs())
+    );
+
+    // --- per-request predicts through the LRU, hot/cold bucketed
+    let mut fleet = Fleet::new(store, capacity, ctx.clone());
+    let mut zipf = ZipfWorkload::new(sessions, 1.1, 0x5eed_f1ee);
+    let q = 8usize;
+    let span = data.t[data.t.len() - 1] - data.t[0];
+    let t_star: Vec<f64> =
+        (0..q).map(|i| data.t[0] + span * (i as f64 + 0.5) / q as f64).collect();
+    let mut hot_us: Vec<f64> = Vec::new();
+    let mut cold_us: Vec<f64> = Vec::new();
+    let sw = Stopwatch::start();
+    for _ in 0..requests {
+        let id = session_id(zipf.next_session());
+        let resident = fleet.is_resident(&id);
+        let one = Stopwatch::start();
+        let _ = fleet.predict(&id, &t_star).expect("fleet predict");
+        let us = one.elapsed_secs() * 1e6;
+        if resident {
+            hot_us.push(us);
+        } else {
+            cold_us.push(us);
+        }
+    }
+    let seconds = sw.elapsed_secs();
+    let stats = fleet.stats();
+    let mut all_us: Vec<f64> = hot_us.iter().chain(&cold_us).copied().collect();
+    hot_us.sort_by(f64::total_cmp);
+    cold_us.sort_by(f64::total_cmp);
+    all_us.sort_by(f64::total_cmp);
+    assert!(
+        !hot_us.is_empty() && !cold_us.is_empty(),
+        "workload must exercise both hot and cold paths (hot {}, cold {})",
+        hot_us.len(),
+        cold_us.len()
+    );
+    let hit_p50 = pct(&hot_us, 0.50);
+    let cold_p50 = pct(&cold_us, 0.50);
+    assert!(
+        hit_p50 < cold_p50,
+        "cache economics inverted: hot p50 {hit_p50:.1}µs ≥ cold p50 {cold_p50:.1}µs"
+    );
+    let mut table = Table::new(vec!["metric", "value"]);
+    table.add_row(vec!["sessions/sec".into(), format!("{:.0}", requests as f64 / seconds)]);
+    table.add_row(vec!["hit rate".into(), format!("{:.3}", stats.hit_rate())]);
+    table.add_row(vec!["hydration rate".into(), format!("{:.3}", stats.hydration_rate())]);
+    table.add_row(vec![
+        "hot p50 / p99".into(),
+        format!("{:.1}µs / {:.1}µs", hit_p50, pct(&hot_us, 0.99)),
+    ]);
+    table.add_row(vec![
+        "cold p50 / p99".into(),
+        format!("{:.1}µs / {:.1}µs", cold_p50, pct(&cold_us, 0.99)),
+    ]);
+    table.add_row(vec![
+        "hydrations / evictions / persisted".into(),
+        format!("{} / {} / {}", stats.hydrations, stats.evictions, stats.persisted),
+    ]);
+    print!("{}", table.render());
+    rows.push(Json::obj(vec![
+        ("kind", "workload".into()),
+        ("n", n.into()),
+        ("sessions", sessions.into()),
+        ("capacity", capacity.into()),
+        ("requests", requests.into()),
+        ("threads", threads.into()),
+        ("seconds", seconds.into()),
+        ("sessions_per_sec", (requests as f64 / seconds).into()),
+        ("hit_rate", stats.hit_rate().into()),
+        ("hydration_rate", stats.hydration_rate().into()),
+        ("hit_p50_us", hit_p50.into()),
+        ("hit_p99_us", pct(&hot_us, 0.99).into()),
+        ("cold_p50_us", cold_p50.into()),
+        ("cold_p99_us", pct(&cold_us, 0.99).into()),
+        ("p50_us", pct(&all_us, 0.50).into()),
+        ("p99_us", pct(&all_us, 0.99).into()),
+        ("hydrations", (stats.hydrations as usize).into()),
+        ("evictions", (stats.evictions as usize).into()),
+        ("persisted", (stats.persisted as usize).into()),
+    ]));
+
+    // --- the same traffic shape as scheduler batches
+    println!("\n== batch scheduler: run_batch over the same Zipf stream ==");
+    let batch_requests = if quick { 1_024 } else { 4_096 };
+    let chunk = 256usize;
+    let mut zipf = ZipfWorkload::new(sessions, 1.1, 0xba7c_4);
+    let reqs: Vec<PredictRequest> = (0..batch_requests)
+        .map(|_| PredictRequest {
+            session_id: session_id(zipf.next_session()),
+            t_star: t_star.clone(),
+        })
+        .collect();
+    let sw = Stopwatch::start();
+    for chunk_reqs in reqs.chunks(chunk) {
+        let preds = fleet.run_batch(chunk_reqs).expect("run_batch");
+        assert_eq!(preds.len(), chunk_reqs.len());
+    }
+    let batch_seconds = sw.elapsed_secs();
+    println!(
+        "{batch_requests} requests in {} ({:.0} requests/sec, chunks of {chunk})",
+        human_time(batch_seconds),
+        batch_requests as f64 / batch_seconds
+    );
+    rows.push(Json::obj(vec![
+        ("kind", "batch".into()),
+        ("n", n.into()),
+        ("sessions", sessions.into()),
+        ("capacity", capacity.into()),
+        ("requests", batch_requests.into()),
+        ("threads", threads.into()),
+        ("seconds", batch_seconds.into()),
+        ("requests_per_sec", (batch_requests as f64 / batch_seconds).into()),
+    ]));
+
+    // --- what one hydration costs, split parse vs adopt, per n
+    println!("\n== hydration cost split: artifact parse vs factor adoption ==");
+    let mut table = Table::new(vec!["n", "artifact", "parse", "adopt", "hydrations"]);
+    let split_sizes: Vec<usize> = if quick { vec![24, 48] } else { vec![64, 128, 256] };
+    for &sn in &split_sizes {
+        let sdata = table1_dataset(sn, 0.1, 5);
+        let sblob = make_artifact(ModelSpec::K1, &sdata).to_bytes(&sdata).expect("encode");
+        let mut sstore = MemoryStore::new();
+        sstore.put("thrash-a", vec![sblob.clone()]).unwrap();
+        sstore.put("thrash-b", vec![sblob.clone()]).unwrap();
+        // capacity 1 + alternating tenants = every lookup hydrates
+        let mut thrash = Fleet::new(sstore, 1, ctx.clone());
+        let probe = [sdata.t[0] + 0.25 * (sdata.t[sn - 1] - sdata.t[0])];
+        let reps = if quick { 20 } else { 40 };
+        for _ in 0..reps {
+            let _ = thrash.predict("thrash-a", &probe).expect("thrash predict");
+            let _ = thrash.predict("thrash-b", &probe).expect("thrash predict");
+        }
+        let st = thrash.stats();
+        assert_eq!(st.hydrations, 2 * reps as u64, "thrash must hydrate every lookup");
+        let parse_us = st.hydrate_parse_secs / st.hydrations as f64 * 1e6;
+        let adopt_us = st.hydrate_adopt_secs / st.hydrations as f64 * 1e6;
+        table.add_row(vec![
+            format!("{sn}"),
+            format!("{} B", sblob.len()),
+            format!("{parse_us:.1}µs"),
+            format!("{adopt_us:.1}µs"),
+            format!("{}", st.hydrations),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "hydrate_split".into()),
+            ("n", sn.into()),
+            ("threads", threads.into()),
+            ("artifact_bytes", sblob.len().into()),
+            ("parse_us", parse_us.into()),
+            ("adopt_us", adopt_us.into()),
+            ("hydrations", (st.hydrations as usize).into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    // merge the fleet section into BENCH_perf.json (keep other sections)
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections = doc
+        .get("sections")
+        .and_then(|s| s.as_obj().cloned())
+        .unwrap_or_default();
+    sections.insert("fleet".to_string(), Json::Arr(rows));
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), threads.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("\nfleet section merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -57,6 +57,15 @@ echo "== approx-tier accuracy-vs-cost panel (quick mode, both thread settings) =
 # second run's rows are the ones that land in BENCH_perf.json).
 GPFAST_THREADS=1 GPFAST_BENCH_QUICK=1 cargo bench --bench approx
 GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" GPFAST_BENCH_QUICK=1 cargo bench --bench approx
+
+echo "== multi-tenant fleet workload (quick mode, both thread settings) =="
+# 10k Zipf-traffic sessions through the bounded LRU + batch scheduler;
+# the bench asserts hot-p50 < cold-p50 in-process, and the JSON gate
+# below checks the fleet section landed with sane numbers. Run serial
+# and max-threads so the scheduler's split/drain path is exercised both
+# ways (the second run's rows are the ones that land in BENCH_perf.json).
+GPFAST_THREADS=1 GPFAST_BENCH_QUICK=1 cargo bench --bench fleet
+GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" GPFAST_BENCH_QUICK=1 cargo bench --bench fleet
 if command -v python3 >/dev/null 2>&1; then
     python3 - <<'EOF'
 import json, sys
@@ -94,7 +103,27 @@ for want in ("k2", "sod-k2", "fitc-k2"):
         sys.exit(f"FAIL: BENCH_perf.json approx section is missing {want!r} rows")
 if not all("smse" in r and "msll" in r and "train_seconds" in r for r in rows):
     sys.exit("FAIL: approx rows missing smse/msll/train_seconds")
-print("BENCH_perf.json gemm/syrk/tournament/serve/robustness/approx sections populated")
+rows = doc.get("sections", {}).get("fleet", [])
+kinds = {r.get("kind") for r in rows}
+for want in ("workload", "batch", "hydrate_split"):
+    if want not in kinds:
+        sys.exit(f"FAIL: BENCH_perf.json fleet section is missing {want!r} rows")
+import math
+for r in rows:
+    if r.get("kind") != "workload":
+        continue
+    if r.get("sessions", 0) < 10000:
+        sys.exit("FAIL: fleet workload must drive >= 10k sessions")
+    for f in ("sessions_per_sec", "p99_us", "hit_rate", "hydration_rate"):
+        v = r.get(f)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            sys.exit(f"FAIL: fleet workload field {f!r} not finite/positive: {v!r}")
+    if not r.get("hit_p50_us", 0) < r.get("cold_p50_us", 0):
+        sys.exit("FAIL: fleet cache economics inverted (hit p50 >= cold p50)")
+if not all("parse_us" in r and "adopt_us" in r
+           for r in rows if r.get("kind") == "hydrate_split"):
+    sys.exit("FAIL: fleet/hydrate_split rows missing parse_us/adopt_us")
+print("BENCH_perf.json gemm/syrk/tournament/serve/robustness/approx/fleet sections populated")
 EOF
 else
     # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
@@ -119,6 +148,10 @@ else
         || { echo "FAIL: BENCH_perf.json approx rows not populated"; exit 1; }
     [ "$(grep -c '"msll"' BENCH_perf.json)" -ge 3 ] \
         || { echo "FAIL: BENCH_perf.json approx rows not populated (msll)"; exit 1; }
+    [ "$(grep -c '"sessions_per_sec"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json fleet workload rows not populated"; exit 1; }
+    [ "$(grep -c '"parse_us"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json fleet hydrate_split rows not populated"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

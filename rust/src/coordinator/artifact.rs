@@ -19,7 +19,7 @@
 //! clean `Err`s — never panics, never unbounded allocations (every
 //! length field is validated against the bytes actually remaining).
 //!
-//! Format (version 2), all integers/floats little-endian:
+//! Format (version 3), all integers/floats little-endian:
 //!
 //! ```text
 //! magic  b"GPFASTMD"  | version u32
@@ -34,10 +34,18 @@
 //! nested: u8 flag [| ln_z | ln_z_err | n_evals u64 | information
 //!        | wall_secs]
 //! warm_started u8 | restarts u64 | wall_secs f64
+//! crc32 u32   (IEEE/zlib polynomial, over every preceding byte)
 //! ```
 //!
 //! `str` = u32 length + UTF-8 bytes; `vec` = u64 length + f64s; `matrix`
 //! = u64 rows + u64 cols + row-major f64s.
+//!
+//! Version 3 appends the CRC32 trailer so a disk-backed artifact store
+//! detects *silent* corruption — a flipped bit inside an f64 payload is
+//! still a structurally valid file, and before the checksum it would
+//! hydrate a poisoned factor whenever the flip kept every number finite.
+//! Version-2 files (no trailer) are still read for compatibility with
+//! artifacts persisted by older builds.
 
 use std::path::Path;
 
@@ -52,7 +60,42 @@ use super::tournament::TrainedModel;
 use super::train::TrainResult;
 
 const MAGIC: &[u8; 8] = b"GPFASTMD";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// Newest trailer-less version still accepted by [`decode`].
+const COMPAT_VERSION: u32 = 2;
+
+// ------------------------------------------------------------------ crc32
+
+/// IEEE/zlib-polynomial CRC32 lookup table, built at compile time.
+const fn make_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = make_crc32_table();
+
+/// CRC32 (IEEE 802.3 / zlib polynomial, reflected, init and final xor
+/// `0xFFFF_FFFF`) — the standard checksum, hand-rolled because the build
+/// image has no crate registry. Pinned to the `"123456789"` test vector
+/// below.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
 
 // ---------------------------------------------------------------- writer
 
@@ -282,24 +325,56 @@ fn encode(tm: &TrainedModel, data: &Dataset) -> Vec<u8> {
     w.u8(tm.warm_started as u8);
     w.u64(tm.restarts as u64);
     w.f64(tm.wall_secs);
+    // version-3 trailer: checksum of every byte written so far
+    let crc = crc32(&w.buf);
+    w.u32(crc);
     w.buf
 }
 
 fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
-    let mut r = Reader::new(bytes);
-    let magic = r.take(8).map_err(|_| {
-        anyhow::anyhow!("not a gpfast model artifact: file shorter than the header")
-    })?;
     anyhow::ensure!(
-        magic == &MAGIC[..],
+        bytes.len() >= 12,
+        "not a gpfast model artifact: file shorter than the header"
+    );
+    anyhow::ensure!(
+        &bytes[..8] == &MAGIC[..],
         "not a gpfast model artifact: bad magic {:?}",
-        magic
+        &bytes[..8]
     );
-    let version = r.u32()?;
-    anyhow::ensure!(
-        version == VERSION,
-        "unsupported artifact version {version} (this build reads version {VERSION})"
-    );
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    // Version 3 carries a CRC32 trailer over everything before it; verify
+    // it *before* field-level decoding so a silently flipped payload byte
+    // (structurally valid, possibly still finite) never hydrates. The
+    // body handed to the field reader excludes the trailer. Version-2
+    // files have no trailer and decode as-is (read-compat).
+    let body = match version {
+        COMPAT_VERSION => bytes,
+        VERSION => {
+            anyhow::ensure!(
+                bytes.len() >= 16,
+                "truncated artifact: version {VERSION} file too short for its checksum trailer"
+            );
+            let split = bytes.len() - 4;
+            let stored = u32::from_le_bytes([
+                bytes[split],
+                bytes[split + 1],
+                bytes[split + 2],
+                bytes[split + 3],
+            ]);
+            let computed = crc32(&bytes[..split]);
+            anyhow::ensure!(
+                stored == computed,
+                "corrupt artifact: CRC32 mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            );
+            &bytes[..split]
+        }
+        other => anyhow::bail!(
+            "unsupported artifact version {other} (this build reads versions {COMPAT_VERSION} and {VERSION})"
+        ),
+    };
+    let mut r = Reader::new(body);
+    let _magic = r.take(8)?;
+    let _version = r.u32()?;
     // dataset
     let label = r.str()?;
     let n = r.len(16)?; // t and y each back n f64s
@@ -450,11 +525,11 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
 }
 
 impl TrainedModel {
-    /// Persist this artifact (plus the training data it factored) to
-    /// `path`. See the module docs for the format; the write is
-    /// all-at-once, so a crashed save leaves either the old file or a
-    /// truncated one that [`TrainedModel::load`] will cleanly reject.
-    pub fn save(&self, path: &Path, data: &Dataset) -> crate::Result<()> {
+    /// Encode this artifact (plus the training data it factored) to the
+    /// versioned binary format, without touching the filesystem — the
+    /// byte-level half of [`TrainedModel::save`], used directly by
+    /// in-memory artifact stores ([`crate::coordinator::fleet`]).
+    pub fn to_bytes(&self, data: &Dataset) -> crate::Result<Vec<u8>> {
         anyhow::ensure!(
             self.train.peak_eval.chol.dim() == self.spec.factor_dim(data.len()),
             "artifact factor dim {} does not match {} for n = {}",
@@ -462,7 +537,24 @@ impl TrainedModel {
             self.spec.factor_dim(data.len()),
             data.len()
         );
-        std::fs::write(path, encode(self, data))
+        Ok(encode(self, data))
+    }
+
+    /// Decode an artifact encoded by [`TrainedModel::to_bytes`] (or read
+    /// from a [`TrainedModel::save`] file). Bit-identical restore, zero
+    /// likelihood evaluations; corrupt, truncated, checksum-mismatched
+    /// and version-unknown byte strings return errors (never panic).
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
+        decode(bytes)
+    }
+
+    /// Persist this artifact (plus the training data it factored) to
+    /// `path`. See the module docs for the format; the write is
+    /// all-at-once, so a crashed save leaves either the old file or a
+    /// truncated one that [`TrainedModel::load`] will cleanly reject.
+    pub fn save(&self, path: &Path, data: &Dataset) -> crate::Result<()> {
+        let bytes = self.to_bytes(data)?;
+        std::fs::write(path, bytes)
             .map_err(|e| anyhow::anyhow!("writing model artifact {}: {e}", path.display()))
     }
 
@@ -496,5 +588,18 @@ mod tests {
         // trailing garbage detected
         let r = Reader::new(&[0u8; 4]);
         assert!(r.done().is_err());
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // the universal IEEE/zlib check value, plus the empty-input and
+        // single-byte identities any table-driven implementation must hit
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"\x00"), 0xD202_EF8D);
+        // one flipped bit anywhere changes the checksum
+        let a = crc32(b"gpfast artifact payload");
+        let b = crc32(b"gpfast artifact pazload");
+        assert_ne!(a, b);
     }
 }

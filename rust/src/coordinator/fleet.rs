@@ -1,0 +1,777 @@
+//! Multi-tenant serving fleet: artifact store → LRU hot-factor cache →
+//! cross-session batch scheduler → [`ServeSession`].
+//!
+//! One [`ServeSession`] is one user's model roster with live `O(n²)`
+//! Cholesky factors. Production traffic means orders of magnitude more
+//! sessions than fit factored in RAM, so the fleet keeps sessions in two
+//! states:
+//!
+//! * **cold** — a list of versioned artifact blobs in an
+//!   [`ArtifactStore`] (the [`TrainedModel::to_bytes`] format, CRC32
+//!   checksummed): `O(artifact bytes)` on disk or in a byte map, no
+//!   factors, no likelihood state;
+//! * **hot** — a hydrated [`ServeSession`] in a bounded **LRU** of at
+//!   most `capacity` residents. A cache miss hydrates from the store via
+//!   the zero-evaluation artifact path (decode + `O(n²)` factor
+//!   adoption, *never* an `O(n³)` refactorisation — asserted through
+//!   [`crate::gp::profiled::CounterSnapshot`] in `rust/tests/fleet.rs`);
+//!   eviction persists **dirty** sessions (mutated by
+//!   [`Fleet::observe`] / [`Fleet::with_session`]) back to the store via
+//!   [`ServeSession::to_artifact_bytes`] before dropping their factors,
+//!   so no observation is ever lost to cache pressure.
+//!
+//! The **scheduler** ([`Fleet::run_batch`]) accepts a batch of
+//! `(session_id, t_star)` predict requests, groups them per session in
+//! **deterministic arrival order**, hydrates each wave of at most
+//! `capacity` distinct sessions sequentially (so the eviction order is a
+//! pure function of the request stream), concatenates every group's
+//! query points into one batched predict, and drains the wave's groups
+//! concurrently — each group under an [`ExecutionContext::split`] share
+//! of the fleet budget, so `q` queries across `s` sessions never
+//! oversubscribe the machine. Results are bit-identical for any thread
+//! count and any batch split (the repo-wide linalg contract), which the
+//! determinism suite checks end-to-end: predictions, eviction order and
+//! final store bytes all match between 1 thread and max.
+//!
+//! Everything is observable through [`FleetStats`]: lookups/hits,
+//! hydrations (with the wall-clock split into artifact **parse** vs
+//! factor **adoption** — the numbers that scope the zero-copy artifact
+//! roadmap item), evictions and persisted write-backs.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::data::Dataset;
+use crate::gp::predict::Prediction;
+use crate::rng::Xoshiro256;
+use crate::runtime::ExecutionContext;
+use crate::util::Stopwatch;
+
+use super::serve::ServeSession;
+use super::tournament::TrainedModel;
+
+// ------------------------------------------------------------- the store
+
+/// Where cold sessions live: a keyed blob store of artifact bytes, one
+/// blob per roster model per session, in rank order. Backends must
+/// return blobs bit-identically (`get` after `put` is the identity), so
+/// hydration from any backend yields the same factors.
+pub trait ArtifactStore {
+    /// Persist a session's blobs, replacing anything stored under `id`.
+    fn put(&mut self, id: &str, blobs: Vec<Vec<u8>>) -> crate::Result<()>;
+    /// The session's blobs, or `None` if it was never persisted.
+    fn get(&self, id: &str) -> crate::Result<Option<Vec<Vec<u8>>>>;
+    /// Does the store hold this session?
+    fn contains(&self, id: &str) -> bool;
+    /// Delete a session; `true` if it existed.
+    fn remove(&mut self, id: &str) -> crate::Result<bool>;
+    /// Every stored session id, sorted (deterministic iteration).
+    fn ids(&self) -> crate::Result<Vec<String>>;
+    /// Total artifact bytes held (the cold-tier footprint).
+    fn total_bytes(&self) -> crate::Result<u64>;
+    /// Stored session count.
+    fn len(&self) -> crate::Result<usize> {
+        Ok(self.ids()?.len())
+    }
+    /// True when nothing is stored.
+    fn is_empty(&self) -> crate::Result<bool> {
+        Ok(self.len()? == 0)
+    }
+}
+
+/// Session ids must be usable as file stems on the disk backend; the
+/// memory backend enforces the same grammar so a workload moves between
+/// backends without re-keying.
+pub fn validate_session_id(id: &str) -> crate::Result<()> {
+    anyhow::ensure!(
+        !id.is_empty()
+            && id.len() <= 128
+            && !id.starts_with('.')
+            && id.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "invalid session id {id:?}: want 1–128 chars of [A-Za-z0-9._-], not starting with '.'"
+    );
+    Ok(())
+}
+
+/// In-memory backend: a `BTreeMap` of blob lists. `get` clones the
+/// bytes (the fleet mutates its hydrated copy independently of the
+/// store).
+#[derive(Clone, Debug, Default)]
+pub struct MemoryStore {
+    map: BTreeMap<String, Vec<Vec<u8>>>,
+}
+
+impl MemoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ArtifactStore for MemoryStore {
+    fn put(&mut self, id: &str, blobs: Vec<Vec<u8>>) -> crate::Result<()> {
+        validate_session_id(id)?;
+        anyhow::ensure!(!blobs.is_empty(), "refusing to store zero blobs for session {id:?}");
+        self.map.insert(id.to_string(), blobs);
+        Ok(())
+    }
+
+    fn get(&self, id: &str) -> crate::Result<Option<Vec<Vec<u8>>>> {
+        validate_session_id(id)?;
+        Ok(self.map.get(id).cloned())
+    }
+
+    fn contains(&self, id: &str) -> bool {
+        self.map.contains_key(id)
+    }
+
+    fn remove(&mut self, id: &str) -> crate::Result<bool> {
+        validate_session_id(id)?;
+        Ok(self.map.remove(id).is_some())
+    }
+
+    fn ids(&self) -> crate::Result<Vec<String>> {
+        Ok(self.map.keys().cloned().collect()) // BTreeMap: already sorted
+    }
+
+    fn total_bytes(&self) -> crate::Result<u64> {
+        Ok(self.map.values().flatten().map(|b| b.len() as u64).sum())
+    }
+
+    fn len(&self) -> crate::Result<usize> {
+        Ok(self.map.len())
+    }
+}
+
+/// On-disk backend: one file per blob, `<root>/<id>.<k>.gpfast` for the
+/// session's `k`-th ranked model. Cold sessions cost `O(artifact bytes)`
+/// of disk and **zero** RAM. `put` rewrites the session's files and
+/// removes stale higher-`k` leftovers from a previous larger roster, so
+/// `get` can rebuild the blob list by reading `k = 0, 1, …` until the
+/// first gap.
+#[derive(Clone, Debug)]
+pub struct DiskStore {
+    root: PathBuf,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> crate::Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .map_err(|e| anyhow::anyhow!("creating artifact store {}: {e}", root.display()))?;
+        Ok(Self { root })
+    }
+
+    /// The directory backing this store.
+    pub fn root(&self) -> &std::path::Path {
+        &self.root
+    }
+
+    fn blob_path(&self, id: &str, k: usize) -> PathBuf {
+        self.root.join(format!("{id}.{k}.gpfast"))
+    }
+}
+
+impl ArtifactStore for DiskStore {
+    fn put(&mut self, id: &str, blobs: Vec<Vec<u8>>) -> crate::Result<()> {
+        validate_session_id(id)?;
+        anyhow::ensure!(!blobs.is_empty(), "refusing to store zero blobs for session {id:?}");
+        for (k, blob) in blobs.iter().enumerate() {
+            let path = self.blob_path(id, k);
+            std::fs::write(&path, blob)
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        }
+        // a previous persist of this session may have had a larger roster
+        let mut k = blobs.len();
+        while self.blob_path(id, k).exists() {
+            let path = self.blob_path(id, k);
+            std::fs::remove_file(&path)
+                .map_err(|e| anyhow::anyhow!("removing stale {}: {e}", path.display()))?;
+            k += 1;
+        }
+        Ok(())
+    }
+
+    fn get(&self, id: &str) -> crate::Result<Option<Vec<Vec<u8>>>> {
+        validate_session_id(id)?;
+        if !self.blob_path(id, 0).exists() {
+            return Ok(None);
+        }
+        let mut blobs = Vec::new();
+        let mut k = 0;
+        loop {
+            let path = self.blob_path(id, k);
+            if !path.exists() {
+                break;
+            }
+            let bytes = std::fs::read(&path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            blobs.push(bytes);
+            k += 1;
+        }
+        Ok(Some(blobs))
+    }
+
+    fn contains(&self, id: &str) -> bool {
+        self.blob_path(id, 0).exists()
+    }
+
+    fn remove(&mut self, id: &str) -> crate::Result<bool> {
+        validate_session_id(id)?;
+        let mut k = 0;
+        while self.blob_path(id, k).exists() {
+            let path = self.blob_path(id, k);
+            std::fs::remove_file(&path)
+                .map_err(|e| anyhow::anyhow!("removing {}: {e}", path.display()))?;
+            k += 1;
+        }
+        Ok(k > 0)
+    }
+
+    fn ids(&self) -> crate::Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.root)
+            .map_err(|e| anyhow::anyhow!("listing artifact store {}: {e}", self.root.display()))?;
+        for entry in entries {
+            let entry = entry
+                .map_err(|e| anyhow::anyhow!("listing artifact store {}: {e}", self.root.display()))?;
+            if let Some(name) = entry.file_name().to_str() {
+                if let Some(id) = name.strip_suffix(".0.gpfast") {
+                    out.push(id.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn total_bytes(&self) -> crate::Result<u64> {
+        let mut total = 0u64;
+        let entries = std::fs::read_dir(&self.root)
+            .map_err(|e| anyhow::anyhow!("listing artifact store {}: {e}", self.root.display()))?;
+        for entry in entries {
+            let entry = entry
+                .map_err(|e| anyhow::anyhow!("listing artifact store {}: {e}", self.root.display()))?;
+            let is_blob =
+                entry.file_name().to_str().is_some_and(|n| n.ends_with(".gpfast"));
+            if is_blob {
+                let meta = entry
+                    .metadata()
+                    .map_err(|e| anyhow::anyhow!("stat in {}: {e}", self.root.display()))?;
+                total += meta.len();
+            }
+        }
+        Ok(total)
+    }
+}
+
+// ------------------------------------------------------------- the fleet
+
+/// One predict call for the scheduler: which session, which query points.
+#[derive(Clone, Debug)]
+pub struct PredictRequest {
+    /// Target session (must be resident or in the store).
+    pub session_id: String,
+    /// Query points for that session.
+    pub t_star: Vec<f64>,
+}
+
+/// Fleet-level counters and hydration timings. All counts are
+/// monotonic; timings accumulate wall-clock seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStats {
+    /// Session lookups (one per [`Fleet::predict`]/[`Fleet::observe`]
+    /// call, one per session *group* in [`Fleet::run_batch`]).
+    pub lookups: u64,
+    /// Lookups answered by a resident session.
+    pub hits: u64,
+    /// Cold hydrations from the store (lookups − hits for ids that were
+    /// stored; unknown ids error without counting here).
+    pub hydrations: u64,
+    /// Residents dropped by LRU pressure or [`Fleet::evict_all`].
+    pub evictions: u64,
+    /// Dirty sessions written back to the store (on eviction or
+    /// [`Fleet::flush`]).
+    pub persisted: u64,
+    /// Hydration seconds spent decoding artifact bytes (bounds-checked
+    /// parse + payload validation).
+    pub hydrate_parse_secs: f64,
+    /// Hydration seconds spent adopting factors into a live session
+    /// (`O(n²)` factor copies + conditioning probe).
+    pub hydrate_adopt_secs: f64,
+}
+
+impl FleetStats {
+    /// Fraction of lookups served without hydration.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+
+    /// Fraction of lookups that paid a cold hydration.
+    pub fn hydration_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hydrations as f64 / self.lookups as f64
+    }
+}
+
+struct Resident {
+    id: String,
+    session: ServeSession,
+    /// Mutated since hydration/admission — must persist before dropping.
+    dirty: bool,
+    /// LRU clock value at last touch (monotonic, never reused).
+    last_used: u64,
+}
+
+/// The shard manager: a bounded LRU of hydrated sessions over an
+/// [`ArtifactStore`], plus the cross-session batch scheduler. See the
+/// module docs for the design; all cache-management decisions are made
+/// sequentially on the caller's thread (only the *drain* of a request
+/// wave fans out), so the fleet's behaviour — hit/miss pattern, eviction
+/// order, final store bytes — is a deterministic function of the call
+/// sequence, independent of the thread budget.
+pub struct Fleet<S: ArtifactStore> {
+    store: S,
+    capacity: usize,
+    exec: ExecutionContext,
+    residents: Vec<Resident>,
+    clock: u64,
+    stats: FleetStats,
+    eviction_log: Vec<String>,
+}
+
+impl<S: ArtifactStore> Fleet<S> {
+    /// A fleet over `store` keeping at most `capacity` (clamped ≥ 1)
+    /// sessions hydrated, draining predict work through `exec`.
+    pub fn new(store: S, capacity: usize, exec: ExecutionContext) -> Self {
+        Self {
+            store,
+            capacity: capacity.max(1),
+            exec,
+            residents: Vec::new(),
+            clock: 0,
+            stats: FleetStats::default(),
+            eviction_log: Vec::new(),
+        }
+    }
+
+    /// The LRU capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Currently hydrated session count (≤ capacity).
+    pub fn resident_count(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// Hydrated session ids, oldest admission first.
+    pub fn resident_ids(&self) -> Vec<&str> {
+        self.residents.iter().map(|r| r.id.as_str()).collect()
+    }
+
+    /// Is this session currently hydrated?
+    pub fn is_resident(&self, id: &str) -> bool {
+        self.position(id).is_some()
+    }
+
+    /// Counters and hydration timings so far.
+    pub fn stats(&self) -> FleetStats {
+        self.stats
+    }
+
+    /// Every eviction so far, in order — the determinism suite replays a
+    /// workload at 1 and max threads and asserts these match exactly.
+    pub fn eviction_log(&self) -> &[String] {
+        &self.eviction_log
+    }
+
+    /// The backing store (read-only).
+    pub fn store(&self) -> &S {
+        &self.store
+    }
+
+    /// Tear down the fleet, returning the store. Call
+    /// [`Fleet::evict_all`] first if dirty residents must be persisted.
+    pub fn into_store(self) -> S {
+        self.store
+    }
+
+    /// Seed the store with a freshly trained session's artifacts (rank
+    /// order, as [`super::tournament::TournamentResult::models`] comes).
+    /// Any hydrated copy of `id` is dropped un-persisted: the new bytes
+    /// are the truth now.
+    pub fn put_artifacts(
+        &mut self,
+        id: &str,
+        models: &[TrainedModel],
+        data: &Dataset,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(!models.is_empty(), "no models to persist for session {id:?}");
+        let mut blobs = Vec::with_capacity(models.len());
+        for tm in models {
+            blobs.push(tm.to_bytes(data)?);
+        }
+        if let Some(pos) = self.position(id) {
+            self.residents.remove(pos);
+        }
+        self.store.put(id, blobs)
+    }
+
+    /// Admit an already-hydrated session (e.g. fresh from
+    /// [`ServeSession::train_and_serve`]) as a dirty resident; it will
+    /// be persisted on eviction/flush. Errors if `id` is already
+    /// resident.
+    pub fn admit(&mut self, id: &str, session: ServeSession) -> crate::Result<()> {
+        validate_session_id(id)?;
+        anyhow::ensure!(self.position(id).is_none(), "session {id:?} is already resident");
+        self.make_room()?;
+        self.clock += 1;
+        self.residents.push(Resident {
+            id: id.to_string(),
+            session,
+            dirty: true,
+            last_used: self.clock,
+        });
+        Ok(())
+    }
+
+    /// Serve one session's predict call (hydrating it if cold) under the
+    /// fleet's full thread budget. For cross-session batches prefer
+    /// [`Fleet::run_batch`], which shares the budget across sessions.
+    pub fn predict(&mut self, id: &str, t_star: &[f64]) -> crate::Result<Prediction> {
+        let pos = self.ensure_resident(id)?;
+        Ok(self.residents[pos].session.predict(t_star))
+    }
+
+    /// Stream one observation into a session (hydrating it if cold) and
+    /// mark it dirty — it will be written back to the store before its
+    /// factors are dropped.
+    pub fn observe(&mut self, id: &str, t: f64, y: f64) -> crate::Result<()> {
+        let pos = self.ensure_resident(id)?;
+        let r = &mut self.residents[pos];
+        r.session.observe(t, y)?;
+        r.dirty = true;
+        Ok(())
+    }
+
+    /// Run arbitrary session logic (retrain, window tuning, …) against a
+    /// hydrated resident, conservatively marking it dirty.
+    pub fn with_session<R>(
+        &mut self,
+        id: &str,
+        f: impl FnOnce(&mut ServeSession) -> R,
+    ) -> crate::Result<R> {
+        let pos = self.ensure_resident(id)?;
+        let r = &mut self.residents[pos];
+        r.dirty = true;
+        Ok(f(&mut r.session))
+    }
+
+    /// The batch scheduler: group requests per session in arrival order,
+    /// hydrate and drain them in waves of at most `capacity` distinct
+    /// sessions, each wave's groups predicted concurrently under an
+    /// [`ExecutionContext::split`] share. Returns one [`Prediction`] per
+    /// request, in request order. See the module docs for the
+    /// determinism argument.
+    pub fn run_batch(&mut self, requests: &[PredictRequest]) -> crate::Result<Vec<Prediction>> {
+        // group per session, preserving first-arrival order
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, req) in requests.iter().enumerate() {
+            match groups.iter_mut().find(|(id, _)| *id == req.session_id) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((req.session_id.clone(), vec![i])),
+            }
+        }
+        let mut out: Vec<Option<Prediction>> = (0..requests.len()).map(|_| None).collect();
+        let mut g0 = 0;
+        while g0 < groups.len() {
+            // a wave never exceeds capacity, so hydrating its members in
+            // arrival order can only evict sessions outside the wave
+            // (every wave member, once touched, outranks them in the LRU)
+            let wave = (groups.len() - g0).min(self.capacity);
+            let wave_groups = &groups[g0..g0 + wave];
+            let mut positions = Vec::with_capacity(wave);
+            for (id, _) in wave_groups {
+                positions.push(self.ensure_resident(id)?);
+            }
+            let child = self.exec.split(wave);
+            let residents = &self.residents;
+            let jobs: Vec<_> = wave_groups
+                .iter()
+                .zip(&positions)
+                .map(|((_, idxs), &pos)| {
+                    let session = &residents[pos].session;
+                    let child = child.clone();
+                    let idxs = idxs.as_slice();
+                    move || {
+                        // one batched predict per session: the group's
+                        // query points share a single multi-RHS solve
+                        let total: usize =
+                            idxs.iter().map(|&i| requests[i].t_star.len()).sum();
+                        let mut cat = Vec::with_capacity(total);
+                        for &i in idxs {
+                            cat.extend_from_slice(&requests[i].t_star);
+                        }
+                        let joint = session.predict_with(&cat, &child);
+                        let mut outs = Vec::with_capacity(idxs.len());
+                        let mut off = 0;
+                        for &i in idxs {
+                            let q = requests[i].t_star.len();
+                            outs.push((
+                                i,
+                                Prediction {
+                                    mean: joint.mean[off..off + q].to_vec(),
+                                    sd: joint.sd[off..off + q].to_vec(),
+                                },
+                            ));
+                            off += q;
+                        }
+                        outs
+                    }
+                })
+                .collect();
+            for group_out in self.exec.run_jobs_collect(jobs) {
+                for (i, p) in group_out {
+                    out[i] = Some(p);
+                }
+            }
+            g0 += wave;
+        }
+        Ok(out.into_iter().map(|p| p.expect("every request drained")).collect())
+    }
+
+    /// Persist every dirty resident to the store (keeping it hydrated);
+    /// returns how many were written.
+    pub fn flush(&mut self) -> crate::Result<usize> {
+        let mut written = 0;
+        for pos in 0..self.residents.len() {
+            if self.residents[pos].dirty {
+                let blobs = self.residents[pos].session.to_artifact_bytes()?;
+                self.store.put(&self.residents[pos].id, blobs)?;
+                self.residents[pos].dirty = false;
+                self.stats.persisted += 1;
+                written += 1;
+            }
+        }
+        Ok(written)
+    }
+
+    /// Evict every resident in LRU order, persisting dirty ones — the
+    /// clean-shutdown path.
+    pub fn evict_all(&mut self) -> crate::Result<()> {
+        while !self.residents.is_empty() {
+            self.evict_lru()?;
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- internals
+
+    fn position(&self, id: &str) -> Option<usize> {
+        self.residents.iter().position(|r| r.id == id)
+    }
+
+    /// Touch `id` (hit) or hydrate it from the store (miss), returning
+    /// its index in `residents`.
+    fn ensure_resident(&mut self, id: &str) -> crate::Result<usize> {
+        self.stats.lookups += 1;
+        if let Some(pos) = self.position(id) {
+            self.stats.hits += 1;
+            self.clock += 1;
+            self.residents[pos].last_used = self.clock;
+            return Ok(pos);
+        }
+        let blobs = self.store.get(id)?.ok_or_else(|| {
+            anyhow::anyhow!("fleet: unknown session {id:?} (not resident, not in the store)")
+        })?;
+        // timed in two phases for the zero-copy-artifact roadmap item:
+        // bytes → TrainedModel (parse) vs TrainedModel → live factors
+        // (adopt, the O(n²) copies + conditioning probe)
+        let sw = Stopwatch::start();
+        let mut models = Vec::with_capacity(blobs.len());
+        let mut data: Option<Dataset> = None;
+        for (k, blob) in blobs.iter().enumerate() {
+            let (tm, d) = TrainedModel::from_bytes(blob)
+                .map_err(|e| anyhow::anyhow!("hydrating session {id:?} blob {k}: {e}"))?;
+            match &data {
+                None => data = Some(d),
+                Some(d0) => anyhow::ensure!(
+                    d0.t == d.t && d0.y == d.y,
+                    "hydrating session {id:?}: blob {k} carries different data than blob 0"
+                ),
+            }
+            models.push(tm);
+        }
+        let data = data.expect("non-empty blob list");
+        let parse = sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let session = ServeSession::from_tournament(&models, &data, self.exec.clone())
+            .map_err(|e| anyhow::anyhow!("hydrating session {id:?}: {e}"))?;
+        let adopt = sw.elapsed_secs();
+        self.stats.hydrations += 1;
+        self.stats.hydrate_parse_secs += parse;
+        self.stats.hydrate_adopt_secs += adopt;
+        self.make_room()?;
+        self.clock += 1;
+        self.residents.push(Resident {
+            id: id.to_string(),
+            session,
+            dirty: false,
+            last_used: self.clock,
+        });
+        Ok(self.residents.len() - 1)
+    }
+
+    fn make_room(&mut self) -> crate::Result<()> {
+        while self.residents.len() >= self.capacity {
+            self.evict_lru()?;
+        }
+        Ok(())
+    }
+
+    fn evict_lru(&mut self) -> crate::Result<()> {
+        let pos = self
+            .residents
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.last_used)
+            .map(|(i, _)| i)
+            .expect("evict_lru on an empty fleet");
+        if self.residents[pos].dirty {
+            let blobs = self.residents[pos].session.to_artifact_bytes()?;
+            self.store.put(&self.residents[pos].id, blobs)?;
+            self.stats.persisted += 1;
+        }
+        let r = self.residents.remove(pos);
+        self.stats.evictions += 1;
+        self.eviction_log.push(r.id);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------- the workload
+
+/// Deterministic Zipf-distributed session sampler for fleet benchmarks
+/// and tests: session rank `i` (0-based) is drawn with probability
+/// `∝ 1/(i+1)^s`, the classic heavy-tailed popularity law — a few hot
+/// sessions dominate while the long tail guarantees a steady stream of
+/// cold hydrations. Sampling inverts a precomputed CDF with the repo's
+/// seeded [`Xoshiro256`], so a (sessions, exponent, seed) triple always
+/// replays the same request stream.
+pub struct ZipfWorkload {
+    cdf: Vec<f64>,
+    rng: Xoshiro256,
+}
+
+impl ZipfWorkload {
+    /// A sampler over `n_sessions ≥ 1` ranks with exponent `s` (`s = 0`
+    /// is uniform; larger `s` concentrates traffic on low ranks).
+    pub fn new(n_sessions: usize, exponent: f64, seed: u64) -> Self {
+        assert!(n_sessions >= 1, "ZipfWorkload needs at least one session");
+        assert!(exponent.is_finite() && exponent >= 0.0, "bad Zipf exponent {exponent}");
+        let mut cdf = Vec::with_capacity(n_sessions);
+        let mut acc = 0.0;
+        for i in 0..n_sessions {
+            acc += ((i + 1) as f64).powf(-exponent);
+            cdf.push(acc);
+        }
+        Self { cdf, rng: Xoshiro256::seed_from_u64(seed) }
+    }
+
+    /// Next session rank in `0..n_sessions`.
+    pub fn next_session(&mut self) -> usize {
+        let total = *self.cdf.last().expect("non-empty CDF");
+        let u = self.rng.uniform() * total;
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_id_grammar() {
+        for good in ["a", "s000042", "user-7_b.2", "X"] {
+            assert!(validate_session_id(good).is_ok(), "{good:?} should be valid");
+        }
+        for bad in ["", ".hidden", "a/b", "a b", "é"] {
+            assert!(validate_session_id(bad).is_err(), "{bad:?} should be invalid");
+        }
+        let too_long = "x".repeat(129);
+        assert!(validate_session_id(&too_long).is_err());
+    }
+
+    #[test]
+    fn memory_store_round_trips_and_sorts_ids() {
+        let mut s = MemoryStore::new();
+        assert!(s.is_empty().unwrap());
+        s.put("b", vec![vec![1, 2], vec![3]]).unwrap();
+        s.put("a", vec![vec![9]]).unwrap();
+        assert_eq!(s.get("b").unwrap().unwrap(), vec![vec![1, 2], vec![3]]);
+        assert!(s.get("missing").unwrap().is_none());
+        assert!(s.contains("a") && !s.contains("c"));
+        assert_eq!(s.ids().unwrap(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(s.total_bytes().unwrap(), 4);
+        assert_eq!(s.len().unwrap(), 2);
+        // put replaces wholesale
+        s.put("b", vec![vec![7]]).unwrap();
+        assert_eq!(s.get("b").unwrap().unwrap(), vec![vec![7]]);
+        assert!(s.remove("a").unwrap());
+        assert!(!s.remove("a").unwrap());
+        assert!(s.put("x", Vec::new()).is_err());
+    }
+
+    #[test]
+    fn disk_store_round_trips_and_prunes_stale_blobs() {
+        let root = std::env::temp_dir()
+            .join(format!("gpfast_fleet_store_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut s = DiskStore::new(&root).unwrap();
+        s.put("sess.1", vec![vec![1, 2, 3], vec![4, 5], vec![6]]).unwrap();
+        assert_eq!(
+            s.get("sess.1").unwrap().unwrap(),
+            vec![vec![1, 2, 3], vec![4, 5], vec![6]]
+        );
+        // shrinking the roster removes the stale third blob file
+        s.put("sess.1", vec![vec![9, 9]]).unwrap();
+        assert_eq!(s.get("sess.1").unwrap().unwrap(), vec![vec![9, 9]]);
+        s.put("other", vec![vec![1]]).unwrap();
+        assert_eq!(s.ids().unwrap(), vec!["other".to_string(), "sess.1".to_string()]);
+        assert_eq!(s.total_bytes().unwrap(), 3);
+        assert!(s.remove("sess.1").unwrap());
+        assert!(!s.contains("sess.1"));
+        assert!(s.get("sess.1").unwrap().is_none());
+        // path traversal shapes rejected before touching the filesystem
+        assert!(s.put("../escape", vec![vec![1]]).is_err());
+        assert!(s.get("../escape").is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn zipf_is_deterministic_and_head_heavy() {
+        let mut a = ZipfWorkload::new(1000, 1.1, 42);
+        let mut b = ZipfWorkload::new(1000, 1.1, 42);
+        let draws_a: Vec<usize> = (0..500).map(|_| a.next_session()).collect();
+        let draws_b: Vec<usize> = (0..500).map(|_| b.next_session()).collect();
+        assert_eq!(draws_a, draws_b, "same seed must replay the same stream");
+        assert!(draws_a.iter().all(|&s| s < 1000));
+        // heavy head: rank 0 alone should out-draw the entire back half
+        let head = draws_a.iter().filter(|&&s| s == 0).count();
+        let back_half = draws_a.iter().filter(|&&s| s >= 500).count();
+        assert!(
+            head > back_half,
+            "rank 0 drew {head}, back half drew {back_half} — not Zipf-shaped"
+        );
+        // different seed, different stream
+        let mut c = ZipfWorkload::new(1000, 1.1, 43);
+        let draws_c: Vec<usize> = (0..500).map(|_| c.next_session()).collect();
+        assert_ne!(draws_a, draws_c);
+    }
+}

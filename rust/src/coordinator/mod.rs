@@ -31,6 +31,7 @@
 
 pub mod artifact;
 pub mod faults;
+pub mod fleet;
 pub mod pool;
 pub mod registry;
 pub mod serve;
@@ -39,6 +40,9 @@ pub mod train;
 mod report;
 
 pub use faults::{Fault, FaultPlan};
+pub use fleet::{
+    ArtifactStore, DiskStore, Fleet, FleetStats, MemoryStore, PredictRequest, ZipfWorkload,
+};
 pub use pool::WorkerPool;
 pub use registry::{ModelSpec, Roster};
 pub use report::{ComparisonReport, ModelReport, NestedReport};

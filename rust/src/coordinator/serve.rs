@@ -76,9 +76,11 @@
 use std::path::Path;
 
 use crate::data::Dataset;
-use crate::evidence::laplace_evidence;
+use crate::evidence::{laplace_evidence, LaplaceEvidence};
 use crate::gp::predict::Prediction;
 use crate::gp::serve::{Predictor, ServeStats};
+use crate::gp::ProfiledEval;
+use crate::linalg::Matrix;
 use crate::priors::{BoxPrior, ScalePrior};
 use crate::rng::Xoshiro256;
 use crate::runtime::ExecutionContext;
@@ -405,6 +407,110 @@ impl ServeSession {
         Self::from_tournament(&models, &data, exec)
     }
 
+    /// [`ServeSession::from_artifacts`] for artifact *bytes* instead of
+    /// files — the hydration path of the multi-tenant fleet
+    /// ([`crate::coordinator::fleet`]), where blobs come from an
+    /// [`crate::coordinator::fleet::ArtifactStore`] that may never touch
+    /// the filesystem. Same guarantees: zero likelihood evaluations,
+    /// bit-identical factors, all blobs must decode to the same dataset.
+    pub fn from_artifact_bytes<B: AsRef<[u8]>>(
+        blobs: &[B],
+        exec: ExecutionContext,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!blobs.is_empty(), "no artifact blobs given");
+        let mut models = Vec::with_capacity(blobs.len());
+        let mut data: Option<Dataset> = None;
+        for (i, b) in blobs.iter().enumerate() {
+            let (tm, d) = TrainedModel::from_bytes(b.as_ref())?;
+            match &data {
+                None => data = Some(d),
+                Some(d0) => anyhow::ensure!(
+                    d0.t == d.t && d0.y == d.y,
+                    "artifact blob {i} was trained on different data than the first blob"
+                ),
+            }
+            models.push(tm);
+        }
+        let data = data.expect("non-empty blob list");
+        Self::from_tournament(&models, &data, exec)
+    }
+
+    /// Re-serialise the **live** session as artifact bytes, one blob per
+    /// slot in the current rank order — the eviction path of the
+    /// multi-tenant fleet: a dirty session (post-`observe`/`retrain`)
+    /// persists its *current* factors, data window and evidence ranking,
+    /// and a later [`ServeSession::from_artifact_bytes`] serves
+    /// bit-identical predictions (factor, α, σ̂² and ϑ̂ round-trip
+    /// exactly; the stored ln Z preserves the ranking and the averaging
+    /// weights).
+    ///
+    /// What deliberately does **not** round-trip: training diagnostics
+    /// (restart values, eval counts, wall-clock — re-encoded as zeros so
+    /// the bytes are deterministic), evidence error bars (σ, H⁻¹ —
+    /// zeroed; ln Z itself is kept), drift baselines, health latches and
+    /// serving counters (a rehydrated session re-probes health from the
+    /// factor it loads). Predictions are unaffected by any of these.
+    ///
+    /// Errors for approximate-spec slots (`sod-k2`/`fitc-k2`): their
+    /// artifact format stores the *full* training set alongside a
+    /// reduced factor, and a live slot only holds the reduced serving
+    /// set, so a faithful re-encoding is impossible — fleets that mutate
+    /// sessions should roster exact specs.
+    pub fn to_artifact_bytes(&self) -> crate::Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            anyhow::ensure!(
+                slot.spec.approx().is_none(),
+                "cannot re-serialise a live {} slot: approximate specs store the full \
+                 training set, which a serving slot no longer holds",
+                slot.spec.name()
+            );
+            let p = &slot.predictor;
+            let data =
+                Dataset::new(p.t().to_vec(), p.y().to_vec(), format!("serve-session-{}", slot.spec.name()));
+            let m = p.theta().len();
+            let peak_eval = ProfiledEval {
+                lnp: p.lnp(),
+                sigma_f_hat2: p.sigma_f_hat2(),
+                chol: p.chol().clone(),
+                alpha: p.alpha().to_vec(),
+                jitter: p.jitter(),
+            };
+            let tm = TrainedModel {
+                spec: slot.spec.clone(),
+                sigma_n: self.sigma_n,
+                param_names: p.model().kernel.names(),
+                train: TrainResult {
+                    theta_hat: p.theta().to_vec(),
+                    lnp_peak: p.lnp(),
+                    sigma_f_hat2: p.sigma_f_hat2(),
+                    peak_eval,
+                    converged: true,
+                    n_evals: 0,
+                    n_modes: 0,
+                    restart_values: Vec::new(),
+                    jitter: p.jitter(),
+                },
+                evidence: LaplaceEvidence {
+                    ln_z: slot.ln_z,
+                    ln_p_peak: 0.0,
+                    ln_det_h: 0.0,
+                    ln_volume: 0.0,
+                    marg_const: 0.0,
+                    sigma: vec![0.0; m],
+                    covariance: Matrix::zeros(m, m),
+                    suspect: false,
+                },
+                nested: None,
+                warm_started: false,
+                restarts: 0,
+                wall_secs: 0.0,
+            };
+            out.push(tm.to_bytes(&data)?);
+        }
+        Ok(out)
+    }
+
     /// Wire a finished single-model training run into a session by
     /// adopting the peak evaluation `train_model` already produced.
     /// Equivalent to a tournament-of-one handoff (ln Z is not known on
@@ -606,11 +712,20 @@ impl ServeSession {
     /// highest-ranked healthy slot, `Averaged` renormalises over the
     /// healthy roster.
     pub fn predict(&self, t_star: &[f64]) -> Prediction {
+        self.predict_with(t_star, &self.exec)
+    }
+
+    /// [`ServeSession::predict`] under an explicit thread budget instead
+    /// of the session's own. The fleet scheduler drains several sessions
+    /// concurrently and hands each a [`ExecutionContext::split`] share so
+    /// the drain never oversubscribes; results are bit-identical for any
+    /// budget (the linalg contract).
+    pub fn predict_with(&self, t_star: &[f64], exec: &ExecutionContext) -> Prediction {
         match self.route {
             RouteMode::Winner => {
-                self.slots[self.first_healthy()].predictor.predict_batch(t_star, &self.exec)
+                self.slots[self.first_healthy()].predictor.predict_batch(t_star, exec)
             }
-            RouteMode::Averaged => self.predict_averaged(t_star),
+            RouteMode::Averaged => self.predict_averaged(t_star, exec),
         }
     }
 
@@ -636,7 +751,7 @@ impl ServeSession {
     /// Evidence-weighted model averaging: mixture mean and mixture
     /// standard deviation across every slot. With a dominant winner
     /// (`ln B ≫ 1`) this degrades gracefully to the winner's prediction.
-    fn predict_averaged(&self, t_star: &[f64]) -> Prediction {
+    fn predict_averaged(&self, t_star: &[f64], exec: &ExecutionContext) -> Prediction {
         let w = self.weights();
         let mut mean = vec![0.0; t_star.len()];
         let mut second = vec![0.0; t_star.len()]; // Σ wᵢ (σᵢ² + μᵢ²)
@@ -644,7 +759,7 @@ impl ServeSession {
             if wi == 0.0 {
                 continue; // quarantined: excluded from the mixture
             }
-            let p = slot.predictor.predict_batch(t_star, &self.exec);
+            let p = slot.predictor.predict_batch(t_star, exec);
             for i in 0..t_star.len() {
                 mean[i] += wi * p.mean[i];
                 second[i] += wi * (p.sd[i] * p.sd[i] + p.mean[i] * p.mean[i]);

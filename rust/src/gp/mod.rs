@@ -41,7 +41,7 @@ pub use predict::predict;
 pub use approx::ApproxKind;
 pub use profiled::{
     eval_count as profiled_eval_count, marg_constant, profiled_hessian, profiled_hessian_with,
-    toeplitz_hit_count, ProfiledEval,
+    toeplitz_hit_count, CounterDelta, CounterSnapshot, ProfiledEval,
 };
 pub use sample::draw_realisation;
 pub use serve::{Predictor, ServeStats};

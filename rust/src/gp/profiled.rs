@@ -17,6 +17,7 @@
 //! gradients are bit-identical across thread counts (contractions reduce
 //! through per-row buffers summed in row order).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::kernels::CovarianceModel;
@@ -50,6 +51,68 @@ static TOEPLITZ_HITS: AtomicU64 = AtomicU64::new(0);
 /// Current value of the Toeplitz fast-path counter.
 pub fn toeplitz_hit_count() -> u64 {
     TOEPLITZ_HITS.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    // Thread-local shadows of the process-global counters, incremented at
+    // the same two choke points. These back [`CounterSnapshot`], whose
+    // deltas see only the *calling thread's* evaluations — so tests can
+    // assert "this code path performed zero evaluations" without
+    // serialising against every other test thread in the process.
+    static LOCAL_EVALS: Cell<u64> = Cell::new(0);
+    static LOCAL_TOEPLITZ_HITS: Cell<u64> = Cell::new(0);
+}
+
+/// A point-in-time capture of the *calling thread's* evaluation counters.
+///
+/// [`CounterSnapshot::take`] then [`CounterSnapshot::delta`] measures how
+/// many profiled-likelihood evaluations (and Toeplitz fast-path hits)
+/// this thread performed in between — immune to concurrent activity on
+/// other threads, unlike deltas of the process-global [`eval_count`].
+/// This is what lets the persistence/fleet suites assert **zero-eval**
+/// artifact hydration while the rest of the test binary trains models in
+/// parallel.
+///
+/// Caveat: work fanned out to [`ExecutionContext`] worker threads is
+/// counted on *those* threads, so a positive-delta assertion must run the
+/// evaluating code on the snapshot's thread (e.g. under a sequential
+/// context). Zero-delta assertions don't care: a path that evaluates
+/// nothing evaluates nothing on every thread.
+#[derive(Clone, Copy, Debug)]
+pub struct CounterSnapshot {
+    evals: u64,
+    toeplitz_hits: u64,
+}
+
+/// Counter movement since a [`CounterSnapshot`] was taken, on the taking
+/// thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterDelta {
+    /// Profiled-likelihood evaluations by this thread since the snapshot.
+    pub evals: u64,
+    /// Toeplitz fast-path value evaluations by this thread since the
+    /// snapshot (the fast path advances both counters, so each hit also
+    /// counts in `evals`).
+    pub toeplitz_hits: u64,
+}
+
+impl CounterSnapshot {
+    /// Capture the calling thread's current counter values.
+    pub fn take() -> Self {
+        Self {
+            evals: LOCAL_EVALS.with(|c| c.get()),
+            toeplitz_hits: LOCAL_TOEPLITZ_HITS.with(|c| c.get()),
+        }
+    }
+
+    /// Counters accumulated by the calling thread since this snapshot.
+    pub fn delta(&self) -> CounterDelta {
+        let now = Self::take();
+        CounterDelta {
+            evals: now.evals - self.evals,
+            toeplitz_hits: now.toeplitz_hits - self.toeplitz_hits,
+        }
+    }
 }
 
 /// The per-ϑ products of one profiled-hyperlikelihood evaluation.
@@ -147,6 +210,7 @@ impl ProfiledEval {
     /// from the untouched upper one.
     pub fn from_cov_with(k: Matrix, y: &[f64], ctx: &ExecutionContext) -> crate::Result<Self> {
         EVAL_COUNT.fetch_add(1, Ordering::Relaxed);
+        LOCAL_EVALS.with(|c| c.set(c.get() + 1));
         let n = y.len();
         anyhow::ensure!(k.rows() == n, "covariance/data size mismatch");
         let (chol, jitter) = factor_with_escalation(k, ctx)?;
@@ -335,6 +399,8 @@ fn toeplitz_lnp(model: &CovarianceModel, y: &[f64], theta: &[f64], dt: f64) -> O
     }
     EVAL_COUNT.fetch_add(1, Ordering::Relaxed);
     TOEPLITZ_HITS.fetch_add(1, Ordering::Relaxed);
+    LOCAL_EVALS.with(|c| c.set(c.get() + 1));
+    LOCAL_TOEPLITZ_HITS.with(|c| c.set(c.get() + 1));
     Some(lnp)
 }
 

@@ -173,6 +173,13 @@ impl Predictor {
         &self.chol
     }
 
+    /// The maintained weight vector `α = K̃⁻¹y` at the current data —
+    /// alongside [`Predictor::chol`] this is everything a live session
+    /// needs to re-serialise itself as a fresh artifact (fleet eviction).
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
     /// `σ̂_f²` at the current data (refreshed on every observe).
     pub fn sigma_f_hat2(&self) -> f64 {
         self.sigma_f_hat2

@@ -221,12 +221,47 @@
 //!
 //! **Persistence** closes the loop: [`coordinator::TrainedModel`]
 //! `save`/`load` write a versioned little-endian binary (spec + data +
-//! ϑ̂ + packed factor with its maintained logdet + α + evidence; no
+//! ϑ̂ + packed factor with its maintained logdet + α + evidence + a
+//! CRC32 integrity trailer since format v3, v2 still readable; no
 //! external deps) that restores **bit-identically**, so a serving
 //! process restarts in `O(n²)` — zero likelihood evaluations before its
-//! first prediction, asserted via [`gp::profiled::eval_count`]. CLI:
+//! first prediction, asserted via the per-thread
+//! [`gp::profiled::CounterSnapshot`] deltas. CLI:
 //! `gpfast train --save-model m.gpfm` / `gpfast serve --load-model
 //! m.gpfm`.
+//!
+//! ### Fleet layer (multi-tenant serving at cache-bounded memory)
+//!
+//! One [`coordinator::ServeSession`] holds `O(n²)` of factors; a serving
+//! process with tens of thousands of tenants cannot keep them all hot.
+//! [`coordinator::Fleet`] stacks four stages between a request and a
+//! factor:
+//!
+//! ```text
+//!   ArtifactStore (cold: CRC32-checked blobs, Memory/Disk backends)
+//!        │ get → parse → adopt            ▲ dirty write-back on evict
+//!        ▼                                │
+//!   LRU of ≤ capacity hydrated residents ─┘
+//!        │ group per session, waves of ≤ capacity
+//!        ▼
+//!   batch scheduler — ExecutionContext::split per wave, no
+//!        │             oversubscription, deterministic arrival order
+//!        ▼
+//!   ServeSession::predict_with  (cached-factor O(q n²) batch predict)
+//! ```
+//!
+//! Hydration is the artifact path — zero likelihood evaluations — and a
+//! dirty resident (post-`observe`/`retrain`) is re-serialised via
+//! [`coordinator::ServeSession::to_artifact_bytes`] before its factors
+//! drop, so cache pressure never loses an observation. Cache decisions
+//! run sequentially on the caller's thread; only wave drains fan out —
+//! predictions, eviction order and final store bytes are bit-identical
+//! for any thread budget (`rust/tests/fleet.rs`). [`coordinator::FleetStats`]
+//! exposes hit/hydration rates and the hydrate wall-clock split into
+//! artifact **parse** vs factor **adopt**; `benches/fleet.rs` drives a
+//! 10k-session Zipf workload through capacity ≪ sessions into the
+//! `fleet` section of `BENCH_perf.json`. CLI: `gpfast fleet --sessions
+//! 10000 --capacity 64`.
 //!
 //! `examples/streaming_tidal.rs` replays the tidal series as an arriving
 //! stream through a window policy and verifies windowed serving ≡

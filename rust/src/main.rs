@@ -11,6 +11,10 @@
 //! * `tidal`    — emit the simulated Woods-Hole tidal series as CSV.
 //! * `realise`  — draw GP realisations (Fig. 1) as CSV.
 //! * `predict`  — train then interpolate onto a finer grid (Fig. 3).
+//! * `fleet`    — multi-tenant serving demo: train once, seed a
+//!   disk-backed artifact store with many cold sessions, drive
+//!   Zipf-distributed predict traffic through the LRU fleet, and persist
+//!   a mutated session back on shutdown.
 //! * `info`     — backend/artifact status.
 //!
 //! Common flags: `--config <toml>`, `--backend native|xla|auto`,
@@ -63,9 +67,10 @@ fn run(args: &Args) -> gpfast::Result<()> {
         Some("tidal") => cmd_tidal(args, &cfg),
         Some("realise") => cmd_realise(args, &cfg),
         Some("predict") => cmd_predict(args, &cfg),
+        Some("fleet") => cmd_fleet(args, &cfg),
         Some("info") => cmd_info(args, &cfg),
         Some(other) => anyhow::bail!(
-            "unknown subcommand '{other}' (try: compare, train, serve, nested, synth, tidal, realise, predict, info)"
+            "unknown subcommand '{other}' (try: compare, train, serve, fleet, nested, synth, tidal, realise, predict, info)"
         ),
         None => {
             println!("{USAGE}");
@@ -76,7 +81,7 @@ fn run(args: &Args) -> gpfast::Result<()> {
 
 const USAGE: &str = "gpfast — fast GP training (Moore et al., RSOS 2016 reproduction)
 
-usage: gpfast <compare|train|serve|nested|synth|tidal|realise|predict|info> [flags]
+usage: gpfast <compare|train|serve|fleet|nested|synth|tidal|realise|predict|info> [flags]
 
 flags:
   --config <file.toml>     load run configuration
@@ -92,7 +97,11 @@ flags:
   --save-model <path>      train: persist the TrainedModel artifact
   --load-model <p1[,p2…]>  serve: restart from persisted artifacts (O(n²))
   --route winner|averaged  serve: routing policy [winner]
-  --n-star <N>             serve: prediction grid size [256]";
+  --n-star <N>             serve: prediction grid size [256]
+  --sessions <N>           fleet: cold sessions to seed [64]
+  --capacity <N>           fleet: LRU capacity (hot sessions) [8]
+  --requests <N>           fleet: Zipf predict requests to drive [512]
+  --store <dir>            fleet: artifact store directory [tmp]";
 
 /// Load `--data` CSV, else synthesise a Table-1 dataset of `--n` points.
 fn load_dataset(args: &Args, cfg: &RunConfig) -> gpfast::Result<Dataset> {
@@ -330,6 +339,126 @@ fn cmd_predict(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     csv::write_columns(&out, &["t", "mean", "sd"], &[&t_star, &pred.mean, &pred.sd])?;
     println!("wrote interpolant ({} points) to {}", n_star, out.display());
     Ok(())
+}
+
+/// Multi-tenant lifecycle demo: one trained artifact seeds `--sessions`
+/// cold sessions in a disk-backed store, Zipf traffic drives hydrations
+/// and evictions through a `--capacity`-bounded LRU, and a mutated
+/// session is persisted back on clean shutdown. Hot (cache-hit) predict
+/// latency is reported separately from cold (hydrate + predict).
+fn cmd_fleet(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
+    use gpfast::coordinator::{DiskStore, Fleet, ZipfWorkload};
+
+    let n_sessions = args.get_usize("sessions", 64)?;
+    let capacity = args.get_usize("capacity", 8)?;
+    let n_requests = args.get_usize("requests", 512)?;
+    anyhow::ensure!(n_sessions >= 1 && n_requests >= 1, "fleet needs ≥1 session and request");
+    let data = load_dataset(args, cfg)?;
+    let spec = ModelSpec::parse(&args.get_or("model", "k1"))?;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let sw = Stopwatch::start();
+    let result = Tournament::single(spec, cfg.pipeline()?).run(&data, &mut rng)?;
+    let tm = result.winner();
+    println!(
+        "trained {} on n = {} in {:.2} s (lnZ = {:.2})",
+        tm.name(),
+        data.len(),
+        sw.elapsed_secs(),
+        tm.ln_z()
+    );
+
+    let default_store = std::env::temp_dir().join(format!("gpfast_fleet_{}", std::process::id()));
+    let store_dir = PathBuf::from(args.get_or("store", &default_store.to_string_lossy()));
+    let mut fleet = Fleet::new(DiskStore::new(&store_dir)?, capacity, cfg.exec());
+    for i in 0..n_sessions {
+        fleet.put_artifacts(&format!("s{i:05}"), std::slice::from_ref(tm), &data)?;
+    }
+    println!(
+        "seeded {} cold sessions ({} KiB) in {}",
+        n_sessions,
+        fleet.store().total_bytes()? / 1024,
+        store_dir.display()
+    );
+
+    let mut zipf = ZipfWorkload::new(n_sessions, 1.1, cfg.seed ^ 0x9e37_79b9_7f4a_7c15);
+    let (t0, t1) = (data.t[0], *data.t.last().unwrap());
+    let q = 8usize;
+    let t_star: Vec<f64> =
+        (0..q).map(|i| t0 + (t1 - t0) * (i as f64 + 0.5) / q as f64).collect();
+    let mut hot_us: Vec<f64> = Vec::new();
+    let mut cold_us: Vec<f64> = Vec::new();
+    let sw = Stopwatch::start();
+    for _ in 0..n_requests {
+        let id = format!("s{:05}", zipf.next_session());
+        let was_resident = fleet.is_resident(&id);
+        let t = Stopwatch::start();
+        fleet.predict(&id, &t_star)?;
+        let us = t.elapsed_secs() * 1e6;
+        if was_resident {
+            hot_us.push(us);
+        } else {
+            cold_us.push(us);
+        }
+    }
+    let secs = sw.elapsed_secs();
+    let stats = fleet.stats();
+    println!(
+        "drove {} requests ({} query points each) in {:.2} s — {:.0} sessions/sec",
+        n_requests,
+        q,
+        secs,
+        n_requests as f64 / secs
+    );
+    println!(
+        "  capacity {:4}  resident {:4}  hit rate {:5.1}%  hydration rate {:5.1}%",
+        fleet.capacity(),
+        fleet.resident_count(),
+        100.0 * stats.hit_rate(),
+        100.0 * stats.hydration_rate()
+    );
+    println!(
+        "  hydrations {}  evictions {}  persisted {}",
+        stats.hydrations, stats.evictions, stats.persisted
+    );
+    println!(
+        "  hot  predict p50 {:8.0} µs   p99 {:8.0} µs   ({} samples)",
+        percentile_us(&mut hot_us, 0.50),
+        percentile_us(&mut hot_us, 0.99),
+        hot_us.len()
+    );
+    println!(
+        "  cold hydrate+predict p50 {:8.0} µs   p99 {:8.0} µs   ({} samples)",
+        percentile_us(&mut cold_us, 0.50),
+        percentile_us(&mut cold_us, 0.99),
+        cold_us.len()
+    );
+    println!(
+        "  hydrate wall split: parse {:.1} ms, factor adoption {:.1} ms (total)",
+        stats.hydrate_parse_secs * 1e3,
+        stats.hydrate_adopt_secs * 1e3
+    );
+
+    // mutate the hottest session, then shut down cleanly: eviction
+    // persists the dirty session's *current* factors back to the store
+    let hot = "s00000";
+    let bytes_before = fleet.store().total_bytes()?;
+    fleet.observe(hot, t1 + 1.0, 0.0)?;
+    fleet.evict_all()?;
+    println!(
+        "observed 1 point into {hot}; shutdown persisted it back ({bytes_before} → {} store bytes)",
+        fleet.store().total_bytes()?
+    );
+    Ok(())
+}
+
+/// In-place-sorting percentile helper (`0.0` for an empty sample set).
+fn percentile_us(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(f64::total_cmp);
+    let idx = ((xs.len() - 1) as f64 * p).round() as usize;
+    xs[idx.min(xs.len() - 1)]
 }
 
 fn cmd_info(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {

@@ -132,6 +132,35 @@ impl ExecutionContext {
             }
         });
     }
+
+    /// [`Self::run_jobs`] for jobs that *return* values: results come
+    /// back in **submission order** regardless of completion order (job 0
+    /// runs on the calling thread, the rest on scoped threads), so a
+    /// caller fanning work out across sessions gets a deterministic
+    /// result vector to reassemble from. Panics in any job propagate.
+    pub fn run_jobs_collect<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        if self.threads <= 1 || jobs.len() <= 1 {
+            return jobs.into_iter().map(|job| job()).collect();
+        }
+        std::thread::scope(|scope| {
+            let mut iter = jobs.into_iter();
+            let first = iter.next().expect("non-empty checked above");
+            let handles: Vec<_> = iter.map(|job| scope.spawn(job)).collect();
+            let mut out = Vec::with_capacity(handles.len() + 1);
+            out.push(first());
+            for handle in handles {
+                match handle.join() {
+                    Ok(v) => out.push(v),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+            out
+        })
+    }
 }
 
 /// Below this many `f64` elements of touched data an `O(q·n)`-shaped
@@ -291,6 +320,20 @@ mod tests {
             ctx.run_jobs(jobs);
             assert_eq!(counter.load(Ordering::SeqCst), threads);
         }
+    }
+
+    #[test]
+    fn run_jobs_collect_preserves_submission_order() {
+        for threads in [1usize, 2, 4, 7] {
+            let ctx = ExecutionContext::new(threads);
+            let jobs: Vec<_> = (0..5usize).map(|i| move || i * 10).collect();
+            assert_eq!(ctx.run_jobs_collect(jobs), vec![0, 10, 20, 30, 40]);
+        }
+        // empty and singleton inputs stay inline
+        let ctx = ExecutionContext::new(4);
+        let empty: Vec<fn() -> usize> = Vec::new();
+        assert!(ctx.run_jobs_collect(empty).is_empty());
+        assert_eq!(ctx.run_jobs_collect(vec![|| 7usize]), vec![7]);
     }
 
     #[test]

@@ -226,10 +226,12 @@ fn toeplitz_fast_path_matches_cholesky_on_tidal_grid() {
     let model = paper_k1(0.1);
     let theta = vec![150f64.ln(), 12.42f64.ln(), 0.0];
     let ctx = ExecutionContext::seq();
-    let hits_before = profiled::toeplitz_hit_count();
+    // per-thread snapshot: the sequential context keeps the evaluation on
+    // this thread, so the delta is immune to concurrent test binaries
+    let snap = profiled::CounterSnapshot::take();
     let fast = profiled::eval_value_with(&model, &data.t, &data.y, &theta, &ctx).unwrap();
     assert!(
-        profiled::toeplitz_hit_count() > hits_before,
+        snap.delta().toeplitz_hits > 0,
         "uniform 2-hour cadence must route through Levinson"
     );
     let dense = profiled::eval_with(&model, &data.t, &data.y, &theta, &ctx).unwrap().lnp;

@@ -1,0 +1,301 @@
+//! Fleet acceptance suite: the multi-tenant LRU serving cache must be
+//! **free** (zero likelihood evaluations on the hydration path),
+//! **lossless** (dirty evictions round-trip observations through the
+//! artifact store bit-identically), **deterministic** (the same request
+//! stream produces the same predictions, eviction order and final store
+//! bytes at any thread budget) and **honest about corruption** (a
+//! flipped payload byte in a stored blob fails hydration with a clean
+//! CRC error instead of serving garbage).
+//!
+//! Eval accounting uses [`CounterSnapshot`] — per-thread deltas, so this
+//! suite runs under cargo's default concurrent test threads without the
+//! process-global counter races the persistence suite used to serialise
+//! behind a mutex.
+
+use gpfast::coordinator::{
+    ArtifactStore, Fleet, MemoryStore, ModelSpec, PredictRequest, ServeSession, TrainResult,
+    TrainedModel, ZipfWorkload,
+};
+use gpfast::data::synthetic::table1_dataset;
+use gpfast::data::Dataset;
+use gpfast::evidence::LaplaceEvidence;
+use gpfast::gp::{profiled, CounterSnapshot};
+use gpfast::linalg::Matrix;
+use gpfast::priors::BoxPrior;
+use gpfast::runtime::ExecutionContext;
+
+/// Deterministic artifact without the optimiser: one profiled eval at
+/// the prior mid-point (the persistence-suite recipe).
+fn make_artifact(spec: ModelSpec, data: &Dataset, ln_z: f64) -> TrainedModel {
+    let sigma_n = 0.1;
+    let model = spec.build(sigma_n);
+    let prior = BoxPrior::for_model(&model, &data.span());
+    let mut theta: Vec<f64> = prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+    prior.project(&mut theta);
+    let ev = profiled::eval(&model, &data.t, &data.y, &theta).expect("mid-prior eval");
+    let m = model.dim();
+    TrainedModel {
+        spec,
+        sigma_n,
+        param_names: model.kernel.names(),
+        train: TrainResult {
+            theta_hat: theta,
+            lnp_peak: ev.lnp,
+            sigma_f_hat2: ev.sigma_f_hat2,
+            jitter: ev.jitter,
+            peak_eval: ev,
+            converged: true,
+            n_evals: 0,
+            n_modes: 1,
+            restart_values: Vec::new(),
+        },
+        evidence: LaplaceEvidence {
+            ln_z,
+            ln_p_peak: ln_z,
+            ln_det_h: 0.0,
+            ln_volume: 0.0,
+            marg_const: 0.0,
+            sigma: vec![0.0; m],
+            covariance: Matrix::zeros(m, m),
+            suspect: false,
+        },
+        nested: None,
+        warm_started: false,
+        restarts: 0,
+        wall_secs: 0.0,
+    }
+}
+
+/// A two-model session roster (k1 ranked above k2) as store blobs.
+fn session_blobs(data: &Dataset) -> Vec<Vec<u8>> {
+    let a = make_artifact(ModelSpec::K1, data, -9.0);
+    let b = make_artifact(ModelSpec::K2, data, -11.0);
+    vec![a.to_bytes(data).expect("encode k1"), b.to_bytes(data).expect("encode k2")]
+}
+
+/// Hydrating a cold session from the store and serving its first
+/// prediction costs **zero** profiled-likelihood evaluations — the whole
+/// point of shipping factors inside the artifact.
+#[test]
+fn hydration_pays_zero_likelihood_evaluations() {
+    let data = table1_dataset(24, 0.1, 907);
+    let mut store = MemoryStore::new();
+    store.put("tenant", session_blobs(&data)).unwrap();
+    let mut fleet = Fleet::new(store, 1, ExecutionContext::seq());
+    let t_star: Vec<f64> = (0..16).map(|q| 0.3 + 1.17 * q as f64).collect();
+
+    let snap = CounterSnapshot::take();
+    let pred = fleet.predict("tenant", &t_star).expect("cold predict");
+    let delta = snap.delta();
+    assert_eq!(
+        delta.evals, 0,
+        "hydration + first predict must not pay any likelihood evaluation"
+    );
+    assert!(pred.mean.iter().all(|m| m.is_finite()));
+    let stats = fleet.stats();
+    assert_eq!(stats.hydrations, 1);
+    assert_eq!(stats.hits, 0);
+    assert!(stats.hydrate_parse_secs >= 0.0 && stats.hydrate_adopt_secs >= 0.0);
+
+    // second touch is a hit: still zero evals, no new hydration
+    let snap = CounterSnapshot::take();
+    let again = fleet.predict("tenant", &t_star).expect("hot predict");
+    assert_eq!(snap.delta().evals, 0);
+    assert_eq!(fleet.stats().hydrations, 1);
+    assert_eq!(fleet.stats().hits, 1);
+    assert_eq!(again.mean, pred.mean, "hot path must serve the same bits");
+    assert_eq!(again.sd, pred.sd);
+}
+
+/// Capacity-1 thrash: two tenants alternating through a single slot.
+/// Every cycle evicts and rehydrates both, and every cycle serves
+/// bit-identical predictions — the LRU is invisible to the answers.
+#[test]
+fn evicted_then_rehydrated_sessions_serve_identical_bits() {
+    let data = table1_dataset(24, 0.1, 911);
+    let mut store = MemoryStore::new();
+    store.put("a", session_blobs(&data)).unwrap();
+    store.put("b", session_blobs(&data)).unwrap();
+    let mut fleet = Fleet::new(store, 1, ExecutionContext::seq());
+    let t_star: Vec<f64> = (0..12).map(|q| 0.5 + 1.9 * q as f64).collect();
+
+    let first_a = fleet.predict("a", &t_star).unwrap();
+    let first_b = fleet.predict("b", &t_star).unwrap();
+    assert!(!fleet.is_resident("a"), "capacity 1: b must have evicted a");
+    for cycle in 0..3 {
+        let pa = fleet.predict("a", &t_star).unwrap();
+        let pb = fleet.predict("b", &t_star).unwrap();
+        assert_eq!(pa.mean, first_a.mean, "cycle {cycle}: a mean drifted");
+        assert_eq!(pa.sd, first_a.sd, "cycle {cycle}: a sd drifted");
+        assert_eq!(pb.mean, first_b.mean, "cycle {cycle}: b mean drifted");
+        assert_eq!(pb.sd, first_b.sd, "cycle {cycle}: b sd drifted");
+    }
+    let stats = fleet.stats();
+    assert_eq!(stats.hits, 0, "capacity-1 alternation can never hit");
+    assert_eq!(stats.hydrations, 8);
+    assert_eq!(stats.evictions, 7, "every hydration after the first evicts");
+    assert_eq!(stats.persisted, 0, "clean sessions must not be written back");
+    // eviction order is the strict alternation
+    let want: Vec<String> =
+        ["a", "b", "a", "b", "a", "b", "a"].iter().map(|s| s.to_string()).collect();
+    assert_eq!(fleet.eviction_log(), &want[..]);
+}
+
+/// Observations streamed into a resident session survive eviction: the
+/// dirty write-back re-serialises the live factors, and the rehydrated
+/// session serves bit-identically to a control session that never left
+/// memory.
+#[test]
+fn dirty_eviction_round_trips_observations() {
+    let data = table1_dataset(24, 0.1, 917);
+    let exec = ExecutionContext::seq();
+    let tm_a = make_artifact(ModelSpec::K1, &data, -9.0);
+    let tm_b = make_artifact(ModelSpec::K2, &data, -11.0);
+    let mut control =
+        ServeSession::from_tournament(&[tm_a, tm_b], &data, exec.clone()).unwrap();
+
+    let mut store = MemoryStore::new();
+    store.put("tenant", session_blobs(&data)).unwrap();
+    store.put("bystander", session_blobs(&data)).unwrap();
+    let bytes_before = store.get("tenant").unwrap().unwrap();
+    let mut fleet = Fleet::new(store, 1, exec);
+
+    let new_points = [(25.5, 0.31), (26.25, -0.42), (27.0, 0.11)];
+    for &(t, y) in &new_points {
+        fleet.observe("tenant", t, y).unwrap();
+        control.observe(t, y).unwrap();
+    }
+    // cache pressure: hydrating the bystander evicts the dirty tenant
+    let probe: Vec<f64> = (0..10).map(|q| 0.7 + 2.3 * q as f64).collect();
+    let _ = fleet.predict("bystander", &probe).unwrap();
+    assert!(!fleet.is_resident("tenant"));
+    assert_eq!(fleet.stats().persisted, 1, "dirty eviction must write back");
+    let bytes_after = fleet.store().get("tenant").unwrap().unwrap();
+    assert_ne!(bytes_before, bytes_after, "write-back must capture the new observations");
+
+    // rehydrate and compare against the in-memory control
+    let got = fleet.predict("tenant", &probe).unwrap();
+    let want = control.predict(&probe);
+    assert_eq!(got.mean, want.mean, "rehydrated observations must serve identical bits");
+    assert_eq!(got.sd, want.sd);
+
+    // the rehydrated copy is clean until touched again: a second
+    // eviction must not write the store
+    let persisted = fleet.stats().persisted;
+    let _ = fleet.predict("bystander", &probe).unwrap();
+    assert_eq!(fleet.stats().persisted, persisted);
+}
+
+/// One seeded Zipf workload — batched predicts interleaved with
+/// observations — replayed at thread budgets 1 and 4: predictions,
+/// eviction order and the final persisted store must match exactly.
+fn run_workload(threads: usize) -> (Vec<Vec<f64>>, Vec<String>, Vec<String>, Vec<Vec<Vec<u8>>>) {
+    let data = table1_dataset(24, 0.1, 31);
+    let ids: Vec<String> = (0..6).map(|i| format!("w{i}")).collect();
+    let mut store = MemoryStore::new();
+    for id in &ids {
+        store.put(id, session_blobs(&data)).unwrap();
+    }
+    let mut fleet = Fleet::new(store, 2, ExecutionContext::new(threads));
+    let mut zipf = ZipfWorkload::new(ids.len(), 1.0, 77);
+    let mut preds: Vec<Vec<f64>> = Vec::new();
+    for chunk in 0..5usize {
+        let reqs: Vec<PredictRequest> = (0..8usize)
+            .map(|j| {
+                let q = 1 + j % 3;
+                let t_star: Vec<f64> = (0..q)
+                    .map(|k| 0.4 + 0.9 * (j + k) as f64 + 0.05 * chunk as f64)
+                    .collect();
+                PredictRequest { session_id: ids[zipf.next_session()].clone(), t_star }
+            })
+            .collect();
+        for p in fleet.run_batch(&reqs).unwrap() {
+            preds.push(p.mean);
+            preds.push(p.sd);
+        }
+        // a deterministic dirtying observe per chunk
+        fleet.observe(&reqs[0].session_id, 30.0 + chunk as f64, 0.2 * chunk as f64).unwrap();
+    }
+    fleet.evict_all().unwrap();
+    let log = fleet.eviction_log().to_vec();
+    let store = fleet.into_store();
+    let final_ids = store.ids().unwrap();
+    let blobs = final_ids.iter().map(|id| store.get(id).unwrap().unwrap()).collect();
+    (preds, log, final_ids, blobs)
+}
+
+#[test]
+fn fleet_workload_is_deterministic_across_thread_budgets() {
+    let (p1, log1, ids1, blobs1) = run_workload(1);
+    let (p4, log4, ids4, blobs4) = run_workload(4);
+    assert_eq!(p1, p4, "predictions must be bit-identical at 1 vs 4 threads");
+    assert_eq!(log1, log4, "eviction order must not depend on the thread budget");
+    assert_eq!(ids1, ids4);
+    assert_eq!(blobs1, blobs4, "persisted store bytes must be bit-identical");
+    assert!(!log1.is_empty(), "the workload must actually exercise eviction");
+}
+
+/// `run_batch` answers land in request order with per-request shapes,
+/// and batching a mixed-session stream matches the one-at-a-time path
+/// bit for bit.
+#[test]
+fn run_batch_matches_sequential_predicts() {
+    let data = table1_dataset(24, 0.1, 919);
+    let ids = ["r0", "r1", "r2"];
+    let mut store = MemoryStore::new();
+    for id in ids {
+        store.put(id, session_blobs(&data)).unwrap();
+    }
+    let mut fleet = Fleet::new(store, 2, ExecutionContext::new(2));
+    let reqs: Vec<PredictRequest> = (0..9usize)
+        .map(|j| PredictRequest {
+            session_id: ids[j % 3].to_string(),
+            t_star: (0..1 + j % 2).map(|k| 0.6 + 1.3 * (j + k) as f64).collect(),
+        })
+        .collect();
+    let batched = fleet.run_batch(&reqs).unwrap();
+    assert_eq!(batched.len(), reqs.len());
+
+    let mut solo = Fleet::new(fleet.into_store(), 2, ExecutionContext::new(2));
+    for (req, got) in reqs.iter().zip(&batched) {
+        assert_eq!(got.mean.len(), req.t_star.len(), "per-request shape");
+        let want = solo.predict(&req.session_id, &req.t_star).unwrap();
+        assert_eq!(got.mean, want.mean, "batched vs sequential mean");
+        assert_eq!(got.sd, want.sd, "batched vs sequential sd");
+    }
+}
+
+/// Freshly trained sessions enter the fleet dirty via `admit` and are
+/// persisted by `flush`; unknown tenants and corrupted store blobs
+/// surface as clean errors.
+#[test]
+fn admit_flush_and_failure_modes() {
+    let data = table1_dataset(24, 0.1, 923);
+    let exec = ExecutionContext::seq();
+    let tm_a = make_artifact(ModelSpec::K1, &data, -9.0);
+    let tm_b = make_artifact(ModelSpec::K2, &data, -11.0);
+    let session = ServeSession::from_tournament(&[tm_a, tm_b], &data, exec.clone()).unwrap();
+
+    let mut fleet = Fleet::new(MemoryStore::new(), 2, exec);
+    fleet.admit("live", session).unwrap();
+    assert!(!fleet.store().contains("live"), "admit alone must not touch the store");
+    assert_eq!(fleet.flush().unwrap(), 1, "flush writes the dirty admission");
+    assert!(fleet.store().contains("live"));
+    assert_eq!(fleet.flush().unwrap(), 0, "flush is idempotent on clean residents");
+
+    // unknown tenant: clean error, no counters corrupted
+    let err = fleet.predict("ghost", &[1.0]).expect_err("unknown id");
+    assert!(format!("{err}").contains("unknown session"), "unexpected: {err}");
+
+    // a flipped payload byte in a stored blob must fail hydration with
+    // the CRC error, not serve corrupted factors
+    let mut blobs = session_blobs(&data);
+    let mid = blobs[0].len() / 2;
+    blobs[0][mid] ^= 0x01;
+    let mut store = MemoryStore::new();
+    store.put("corrupt", blobs).unwrap();
+    let mut fleet = Fleet::new(store, 1, ExecutionContext::seq());
+    let err = fleet.predict("corrupt", &[1.0]).expect_err("corrupt blob");
+    let msg = format!("{err}");
+    assert!(msg.contains("corrupt artifact"), "want a CRC complaint, got: {msg}");
+}

@@ -5,29 +5,35 @@
 //! version-mismatched files return clean errors (no panics); and a
 //! serving session restored via `ServeSession::from_artifacts` reaches
 //! its first prediction with **zero** profiled-likelihood evaluations —
-//! asserted through the process-global `gp::profiled::eval_count`.
+//! asserted through the per-thread [`CounterSnapshot`] deltas, so this
+//! binary's tests run concurrently (no process-global counter races to
+//! serialise behind a mutex).
 //!
-//! The eval counter is process-global, so the tests in this binary are
-//! serialised behind one mutex (cargo runs a file's tests on concurrent
-//! threads by default).
+//! Since format version 3 every artifact ends in a CRC32 trailer; the
+//! corrupt-byte matrix here patches payload bytes **and refreshes the
+//! trailer** so the field-level validation stays exercised, then checks
+//! separately that an unrefreshed flip is caught by the checksum alone —
+//! including the silent-corruption case version 2 used to accept.
 
 use std::path::PathBuf;
-use std::sync::Mutex;
 
+use gpfast::coordinator::artifact::crc32;
 use gpfast::coordinator::{ModelSpec, NestedReport, ServeSession, TrainResult, TrainedModel};
 use gpfast::data::synthetic::table1_dataset;
 use gpfast::data::Dataset;
 use gpfast::evidence::LaplaceEvidence;
-use gpfast::gp::profiled;
+use gpfast::gp::{profiled, CounterSnapshot};
 use gpfast::linalg::Matrix;
 use gpfast::priors::BoxPrior;
 use gpfast::runtime::ExecutionContext;
 
-/// Serialises the tests in this binary (shared global eval counter).
-static SERIAL: Mutex<()> = Mutex::new(());
-
-fn lock() -> std::sync::MutexGuard<'static, ()> {
-    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+/// Rewrite the version-3 CRC32 trailer after an in-place byte patch, so
+/// a corruption reaches the field validation it targets instead of dying
+/// at the checksum gate.
+fn refresh_crc(bytes: &mut [u8]) {
+    let split = bytes.len() - 4;
+    let crc = crc32(&bytes[..split]);
+    bytes[split..].copy_from_slice(&crc.to_le_bytes());
 }
 
 fn tmp_path(tag: &str) -> PathBuf {
@@ -90,7 +96,6 @@ fn make_artifact(spec: ModelSpec, data: &Dataset, ln_z: f64, with_nested: bool) 
 /// the first prediction of the reloaded predictor.
 #[test]
 fn save_load_round_trip_is_bit_identical_for_every_roster_entrant() {
-    let _guard = lock();
     let data = table1_dataset(24, 0.1, 901);
     let exec = ExecutionContext::seq();
     let specs = [
@@ -165,7 +170,6 @@ fn save_load_round_trip_is_bit_identical_for_every_roster_entrant() {
 /// in-memory router over the same artifacts.
 #[test]
 fn from_artifacts_serves_first_prediction_with_zero_evals() {
-    let _guard = lock();
     let data = table1_dataset(24, 0.1, 907);
     let tm_a = make_artifact(ModelSpec::K1, &data, -10.0, false);
     let tm_b = make_artifact(ModelSpec::K2, &data, -12.0, false);
@@ -183,12 +187,13 @@ fn from_artifacts_serves_first_prediction_with_zero_evals() {
     let want = mem.predict(&t_star);
 
     // ---- the counter-gated leg: load + first predict, no evaluations
-    let evals_before = profiled::eval_count();
+    // (per-thread snapshot: the sequential context keeps all work here)
+    let snap = CounterSnapshot::take();
     let restored =
         ServeSession::from_artifacts(&[&path_a, &path_b], ExecutionContext::seq()).unwrap();
     let got = restored.predict(&t_star);
     assert_eq!(
-        profiled::eval_count() - evals_before,
+        snap.delta().evals,
         0,
         "restart-from-artifact must not pay any likelihood evaluation"
     );
@@ -219,7 +224,6 @@ fn from_artifacts_serves_first_prediction_with_zero_evals() {
 /// errors — never panics, never huge allocations.
 #[test]
 fn corrupt_truncated_and_mismatched_files_error_cleanly() {
-    let _guard = lock();
     let data = table1_dataset(16, 0.1, 913);
     let tm = make_artifact(ModelSpec::K1, &data, -8.0, true);
     let path = tmp_path("corrupt");
@@ -247,7 +251,8 @@ fn corrupt_truncated_and_mismatched_files_error_cleanly() {
     let err = TrainedModel::load(&path).expect_err("version mismatch");
     assert!(format!("{err}").contains("version"), "unexpected: {err}");
 
-    // a corrupted length field must be rejected before allocation
+    // a corrupted length field must be rejected before allocation — the
+    // trailer is refreshed so the length check itself does the rejecting
     let mut bad = good.clone();
     // dataset n (u64) sits right after magic+version+label; find the
     // label length to locate it
@@ -256,6 +261,7 @@ fn corrupt_truncated_and_mismatched_files_error_cleanly() {
     for b in &mut bad[n_off..n_off + 8] {
         *b = 0xFF;
     }
+    refresh_crc(&mut bad);
     std::fs::write(&path, &bad).unwrap();
     assert!(TrainedModel::load(&path).is_err(), "oversized length field accepted");
 
@@ -265,12 +271,14 @@ fn corrupt_truncated_and_mismatched_files_error_cleanly() {
     for b in &mut bad[n_off..n_off + 8] {
         *b = 0;
     }
+    refresh_crc(&mut bad);
     std::fs::write(&path, &bad).unwrap();
     assert!(TrainedModel::load(&path).is_err(), "empty dataset accepted");
 
-    // trailing garbage is flagged
+    // trailing garbage is flagged even with a valid trailer
     let mut bad = good.clone();
     bad.extend_from_slice(&[0u8; 16]);
+    refresh_crc(&mut bad);
     std::fs::write(&path, &bad).unwrap();
     assert!(TrainedModel::load(&path).is_err(), "trailing bytes accepted");
 
@@ -279,6 +287,7 @@ fn corrupt_truncated_and_mismatched_files_error_cleanly() {
     let spec_off = n_off + 8 + 16 * data.len() + 4;
     let mut bad = good.clone();
     bad[spec_off] = b'z';
+    refresh_crc(&mut bad);
     std::fs::write(&path, &bad).unwrap();
     assert!(TrainedModel::load(&path).is_err(), "unknown spec accepted");
 
@@ -303,7 +312,6 @@ fn find_f64(hay: &[u8], v: f64) -> usize {
 /// lengths all check out, only the numbers are poison.
 #[test]
 fn non_finite_artifact_fields_are_rejected() {
-    let _guard = lock();
     let data = table1_dataset(16, 0.1, 917);
     let tm = make_artifact(ModelSpec::K1, &data, -8.0, false);
     let path = tmp_path("nonfinite");
@@ -313,6 +321,9 @@ fn non_finite_artifact_fields_are_rejected() {
     let corrupt_at = |off: usize, v: f64, what: &str| {
         let mut bad = good.clone();
         bad[off..off + 8].copy_from_slice(&v.to_le_bytes());
+        // refreshed trailer: the poison value, not the checksum, must be
+        // what the loader rejects
+        refresh_crc(&mut bad);
         std::fs::write(&path, &bad).unwrap();
         let err = TrainedModel::load(&path)
             .expect_err(&format!("{what} = {v} must not hydrate"));
@@ -343,5 +354,42 @@ fn non_finite_artifact_fields_are_rejected() {
     // the only problem
     std::fs::write(&path, &good).unwrap();
     TrainedModel::load(&path).expect("pristine artifact must hydrate");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// What the CRC trailer exists for: a single flipped payload byte —
+/// subtle enough to keep every length and finiteness check happy — is
+/// caught by the version-3 checksum, and demonstrably was *not*
+/// catchable before: the same corrupted body re-framed as version 2
+/// loads "successfully" with silently wrong data (which also proves the
+/// prior-version read-compat path).
+#[test]
+fn checksum_catches_payload_flip_that_version2_accepted() {
+    let data = table1_dataset(16, 0.1, 929);
+    let tm = make_artifact(ModelSpec::K1, &data, -8.0, false);
+    let path = tmp_path("crcflip");
+    tm.save(&path, &data).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // flip the lowest mantissa bit of y[5]: still finite, same lengths,
+    // wrong by one ulp — invisible to every structural check
+    let off = find_f64(&good, data.y[5]);
+    let mut bad = good.clone();
+    bad[off] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    let err = TrainedModel::load(&path).expect_err("flipped payload byte");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("CRC32"), "want the checksum complaint, got: {msg}");
+
+    // strip the trailer and rewrite the version field: the corrupted
+    // body now claims to be version 2 and hydrates without complaint —
+    // the silent-corruption window the trailer closes — while genuine
+    // v2 files stay readable through the same arm
+    let mut v2 = bad[..bad.len() - 4].to_vec();
+    v2[8] = 2; // version u32 LE starts at byte 8
+    std::fs::write(&path, &v2).unwrap();
+    let (_tm2, data2) = TrainedModel::load(&path).expect("v2 framing must stay readable");
+    assert_ne!(data2.y[5], data.y[5], "v2 had no defence against the flip");
+    assert_eq!(data2.y[4], data.y[4], "only the flipped value differs");
     let _ = std::fs::remove_file(&path);
 }

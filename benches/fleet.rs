@@ -243,44 +243,92 @@ fn main() {
         ("requests_per_sec", (batch_requests as f64 / batch_seconds).into()),
     ]));
 
-    // --- what one hydration costs, split parse vs adopt, per n
-    println!("\n== hydration cost split: artifact parse vs factor adoption ==");
-    let mut table = Table::new(vec!["n", "artifact", "parse", "adopt", "hydrations"]);
+    // --- what one hydration costs, split parse vs view vs adopt, per n
+    // and per artifact version: v3 pays the field-stream parse, v4 pays
+    // only zero-copy view establishment (checksum + validation) before
+    // the same O(n²) adoption
+    println!("\n== hydration cost split: parse vs zero-copy view vs factor adoption ==");
+    let mut table =
+        Table::new(vec!["n", "ver", "artifact", "parse", "view", "adopt", "hydrations"]);
     let split_sizes: Vec<usize> = if quick { vec![24, 48] } else { vec![64, 128, 256] };
     for &sn in &split_sizes {
         let sdata = table1_dataset(sn, 0.1, 5);
-        let sblob = make_artifact(ModelSpec::K1, &sdata).to_bytes(&sdata).expect("encode");
-        let mut sstore = MemoryStore::new();
-        sstore.put("thrash-a", vec![sblob.clone()]).unwrap();
-        sstore.put("thrash-b", vec![sblob.clone()]).unwrap();
-        // capacity 1 + alternating tenants = every lookup hydrates
-        let mut thrash = Fleet::new(sstore, 1, ctx.clone());
-        let probe = [sdata.t[0] + 0.25 * (sdata.t[sn - 1] - sdata.t[0])];
-        let reps = if quick { 20 } else { 40 };
-        for _ in 0..reps {
-            let _ = thrash.predict("thrash-a", &probe).expect("thrash predict");
-            let _ = thrash.predict("thrash-b", &probe).expect("thrash predict");
+        let tm = make_artifact(ModelSpec::K1, &sdata);
+        let blob_v3 = tm.to_bytes(&sdata).expect("encode v3");
+        let blob_v4 = tm.to_bytes_v4(&sdata, None).expect("encode v4");
+        let blob_v4c = tm.to_bytes_v4(&sdata, Some(1e-3)).expect("encode v4 compressed");
+        assert!(
+            blob_v4c.len() <= blob_v4.len(),
+            "compression must never grow the artifact ({} > {} B at n={sn})",
+            blob_v4c.len(),
+            blob_v4.len()
+        );
+        for (version, sblob) in [(3usize, &blob_v3), (4usize, &blob_v4)] {
+            let mut sstore = MemoryStore::new();
+            sstore.put("thrash-a", vec![sblob.clone()]).unwrap();
+            sstore.put("thrash-b", vec![sblob.clone()]).unwrap();
+            // capacity 1 + alternating tenants = every lookup hydrates
+            let mut thrash = Fleet::new(sstore, 1, ctx.clone());
+            let probe = [sdata.t[0] + 0.25 * (sdata.t[sn - 1] - sdata.t[0])];
+            let reps = if quick { 20 } else { 40 };
+            for _ in 0..reps {
+                let _ = thrash.predict("thrash-a", &probe).expect("thrash predict");
+                let _ = thrash.predict("thrash-b", &probe).expect("thrash predict");
+            }
+            let st = thrash.stats();
+            assert_eq!(st.hydrations, 2 * reps as u64, "thrash must hydrate every lookup");
+            if version == 4 {
+                assert_eq!(
+                    st.hydrate_parse_secs, 0.0,
+                    "v4 hydration must not touch the field-stream parser"
+                );
+            } else {
+                assert_eq!(st.hydrate_view_secs, 0.0, "v3 hydration has no view phase");
+            }
+            let per = 1e6 / st.hydrations as f64;
+            let parse_us = st.hydrate_parse_secs * per;
+            let view_us = st.hydrate_view_secs * per;
+            let adopt_us = st.hydrate_adopt_secs * per;
+            table.add_row(vec![
+                format!("{sn}"),
+                format!("v{version}"),
+                format!("{} B", sblob.len()),
+                format!("{parse_us:.1}µs"),
+                format!("{view_us:.1}µs"),
+                format!("{adopt_us:.1}µs"),
+                format!("{}", st.hydrations),
+            ]);
+            rows.push(Json::obj(vec![
+                ("kind", "hydrate_split".into()),
+                ("n", sn.into()),
+                ("version", version.into()),
+                ("threads", threads.into()),
+                ("artifact_bytes", sblob.len().into()),
+                ("parse_us", parse_us.into()),
+                ("view_us", view_us.into()),
+                ("adopt_us", adopt_us.into()),
+                ("hydrations", (st.hydrations as usize).into()),
+            ]));
         }
-        let st = thrash.stats();
-        assert_eq!(st.hydrations, 2 * reps as u64, "thrash must hydrate every lookup");
-        let parse_us = st.hydrate_parse_secs / st.hydrations as f64 * 1e6;
-        let adopt_us = st.hydrate_adopt_secs / st.hydrations as f64 * 1e6;
-        table.add_row(vec![
-            format!("{sn}"),
-            format!("{} B", sblob.len()),
-            format!("{parse_us:.1}µs"),
-            format!("{adopt_us:.1}µs"),
-            format!("{}", st.hydrations),
-        ]);
         rows.push(Json::obj(vec![
-            ("kind", "hydrate_split".into()),
+            ("kind", "artifact_format".into()),
             ("n", sn.into()),
             ("threads", threads.into()),
-            ("artifact_bytes", sblob.len().into()),
-            ("parse_us", parse_us.into()),
-            ("adopt_us", adopt_us.into()),
-            ("hydrations", (st.hydrations as usize).into()),
+            ("v3_bytes", blob_v3.len().into()),
+            ("v4_bytes", blob_v4.len().into()),
+            ("v4_compressed_bytes", blob_v4c.len().into()),
+            (
+                "compression_ratio",
+                (blob_v4c.len() as f64 / blob_v4.len() as f64).into(),
+            ),
         ]));
+        println!(
+            "n={sn}: v3 {} B, v4 {} B, v4+spectral(1e-3) {} B (ratio {:.3})",
+            blob_v3.len(),
+            blob_v4.len(),
+            blob_v4c.len(),
+            blob_v4c.len() as f64 / blob_v4.len() as f64
+        );
     }
     print!("{}", table.render());
 

@@ -105,7 +105,7 @@ if not all("smse" in r and "msll" in r and "train_seconds" in r for r in rows):
     sys.exit("FAIL: approx rows missing smse/msll/train_seconds")
 rows = doc.get("sections", {}).get("fleet", [])
 kinds = {r.get("kind") for r in rows}
-for want in ("workload", "batch", "hydrate_split"):
+for want in ("workload", "batch", "hydrate_split", "artifact_format"):
     if want not in kinds:
         sys.exit(f"FAIL: BENCH_perf.json fleet section is missing {want!r} rows")
 import math
@@ -120,9 +120,25 @@ for r in rows:
             sys.exit(f"FAIL: fleet workload field {f!r} not finite/positive: {v!r}")
     if not r.get("hit_p50_us", 0) < r.get("cold_p50_us", 0):
         sys.exit("FAIL: fleet cache economics inverted (hit p50 >= cold p50)")
-if not all("parse_us" in r and "adopt_us" in r
-           for r in rows if r.get("kind") == "hydrate_split"):
-    sys.exit("FAIL: fleet/hydrate_split rows missing parse_us/adopt_us")
+splits = [r for r in rows if r.get("kind") == "hydrate_split"]
+if not all("parse_us" in r and "view_us" in r and "adopt_us" in r for r in splits):
+    sys.exit("FAIL: fleet/hydrate_split rows missing parse_us/view_us/adopt_us")
+split_versions = {r.get("version") for r in splits}
+if not {3, 4} <= split_versions:
+    sys.exit(f"FAIL: fleet/hydrate_split must cover versions 3 and 4, got {split_versions}")
+if not all(r.get("parse_us") == 0 for r in splits if r.get("version") == 4):
+    sys.exit("FAIL: v4 hydrate_split rows must not touch the field-stream parser")
+if not all(r.get("view_us") == 0 for r in splits if r.get("version") == 3):
+    sys.exit("FAIL: v3 hydrate_split rows must have no view phase")
+for r in rows:
+    if r.get("kind") != "artifact_format":
+        continue
+    for f in ("v3_bytes", "v4_bytes", "v4_compressed_bytes"):
+        if not isinstance(r.get(f), (int, float)) or r.get(f) <= 0:
+            sys.exit(f"FAIL: fleet/artifact_format field {f!r} not positive: {r.get(f)!r}")
+    ratio = r.get("compression_ratio")
+    if not isinstance(ratio, (int, float)) or not math.isfinite(ratio) or not 0 < ratio <= 1:
+        sys.exit(f"FAIL: fleet/artifact_format compression_ratio out of (0, 1]: {ratio!r}")
 print("BENCH_perf.json gemm/syrk/tournament/serve/robustness/approx/fleet sections populated")
 EOF
 else
@@ -152,6 +168,10 @@ else
         || { echo "FAIL: BENCH_perf.json fleet workload rows not populated"; exit 1; }
     [ "$(grep -c '"parse_us"' BENCH_perf.json)" -ge 1 ] \
         || { echo "FAIL: BENCH_perf.json fleet hydrate_split rows not populated"; exit 1; }
+    [ "$(grep -c '"view_us"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json fleet hydrate_split view rows not populated"; exit 1; }
+    [ "$(grep -c '"compression_ratio"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json fleet artifact_format rows not populated"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

@@ -46,6 +46,16 @@
 //! hydrate a poisoned factor whenever the flip kept every number finite.
 //! Version-2 files (no trailer) are still read for compatibility with
 //! artifacts persisted by older builds.
+//!
+//! **Version 4** (the zero-copy format — see [`super::artifact_v4`])
+//! moves the large numeric payloads (`t`, `y`, `α`, the factor) into
+//! 8-byte-aligned raw blocks behind a fixed header, so an mmap'd or
+//! aligned buffer hydrates by *reinterpreting* the bytes in place
+//! instead of re-decoding f64s one at a time, and optionally stores the
+//! factor as a truncated spectral form (`K̃ ≈ V_r Λ_r V_rᵀ + diag`).
+//! [`decode`] dispatches on the version field, so every reader in the
+//! crate accepts versions 2–4; the v3 encoder here remains the default
+//! writer (byte-stable with prior builds).
 
 use std::path::Path;
 
@@ -59,7 +69,7 @@ use super::report::NestedReport;
 use super::tournament::TrainedModel;
 use super::train::TrainResult;
 
-const MAGIC: &[u8; 8] = b"GPFASTMD";
+pub(super) const MAGIC: &[u8; 8] = b"GPFASTMD";
 const VERSION: u32 = 3;
 /// Newest trailer-less version still accepted by [`decode`].
 const COMPAT_VERSION: u32 = 2;
@@ -99,48 +109,48 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 
 // ---------------------------------------------------------------- writer
 
-struct Writer {
-    buf: Vec<u8>,
+pub(super) struct Writer {
+    pub(super) buf: Vec<u8>,
 }
 
 impl Writer {
-    fn new() -> Self {
+    pub(super) fn new() -> Self {
         Self { buf: Vec::new() }
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(super) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
-    fn u32(&mut self, v: u32) {
+    pub(super) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(super) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f64(&mut self, v: f64) {
+    pub(super) fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn str(&mut self, s: &str) {
+    pub(super) fn str(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
     }
 
-    fn f64s_raw(&mut self, v: &[f64]) {
+    pub(super) fn f64s_raw(&mut self, v: &[f64]) {
         for &x in v {
             self.f64(x);
         }
     }
 
-    fn vec(&mut self, v: &[f64]) {
+    pub(super) fn vec(&mut self, v: &[f64]) {
         self.u64(v.len() as u64);
         self.f64s_raw(v);
     }
 
-    fn matrix(&mut self, m: &Matrix) {
+    pub(super) fn matrix(&mut self, m: &Matrix) {
         self.u64(m.rows() as u64);
         self.u64(m.cols() as u64);
         self.f64s_raw(m.as_slice());
@@ -152,21 +162,21 @@ impl Writer {
 /// Bounds-checked cursor: every read validates the remaining length
 /// first, and every element count is validated against the bytes that
 /// could possibly back it before any allocation happens.
-struct Reader<'a> {
+pub(super) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(super) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(super) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+    pub(super) fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
         anyhow::ensure!(
             n <= self.remaining(),
             "truncated artifact: wanted {n} bytes at offset {}, {} remain",
@@ -178,23 +188,23 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    fn u8(&mut self) -> crate::Result<u8> {
+    pub(super) fn u8(&mut self) -> crate::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> crate::Result<u32> {
+    pub(super) fn u32(&mut self) -> crate::Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> crate::Result<u64> {
+    pub(super) fn u64(&mut self) -> crate::Result<u64> {
         let b = self.take(8)?;
         let mut a = [0u8; 8];
         a.copy_from_slice(b);
         Ok(u64::from_le_bytes(a))
     }
 
-    fn f64(&mut self) -> crate::Result<f64> {
+    pub(super) fn f64(&mut self) -> crate::Result<f64> {
         let b = self.take(8)?;
         let mut a = [0u8; 8];
         a.copy_from_slice(b);
@@ -203,7 +213,7 @@ impl<'a> Reader<'a> {
 
     /// A length field counting `elem_bytes`-sized elements, validated
     /// against the remaining buffer before any allocation.
-    fn len(&mut self, elem_bytes: usize) -> crate::Result<usize> {
+    pub(super) fn len(&mut self, elem_bytes: usize) -> crate::Result<usize> {
         let raw = self.u64()?;
         let n = usize::try_from(raw)
             .map_err(|_| anyhow::anyhow!("corrupt artifact: length field {raw} overflows"))?;
@@ -215,14 +225,14 @@ impl<'a> Reader<'a> {
         Ok(n)
     }
 
-    fn str(&mut self) -> crate::Result<String> {
+    pub(super) fn str(&mut self) -> crate::Result<String> {
         let n = self.u32()? as usize;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec())
             .map_err(|e| anyhow::anyhow!("corrupt artifact: invalid UTF-8 string: {e}"))
     }
 
-    fn f64s_raw(&mut self, n: usize) -> crate::Result<Vec<f64>> {
+    pub(super) fn f64s_raw(&mut self, n: usize) -> crate::Result<Vec<f64>> {
         let bytes = self.take(n * 8)?;
         let mut out = Vec::with_capacity(n);
         for c in bytes.chunks_exact(8) {
@@ -233,12 +243,12 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    fn vec(&mut self) -> crate::Result<Vec<f64>> {
+    pub(super) fn vec(&mut self) -> crate::Result<Vec<f64>> {
         let n = self.len(8)?;
         self.f64s_raw(n)
     }
 
-    fn matrix(&mut self) -> crate::Result<Matrix> {
+    pub(super) fn matrix(&mut self) -> crate::Result<Matrix> {
         let rows = self.len(1)?;
         let cols = self.len(1)?;
         anyhow::ensure!(
@@ -251,7 +261,7 @@ impl<'a> Reader<'a> {
         Ok(Matrix::from_vec(rows, cols, self.f64s_raw(rows * cols)?))
     }
 
-    fn done(&self) -> crate::Result<()> {
+    pub(super) fn done(&self) -> crate::Result<()> {
         anyhow::ensure!(
             self.remaining() == 0,
             "corrupt artifact: {} trailing bytes after the last field",
@@ -348,6 +358,9 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
     // body handed to the field reader excludes the trailer. Version-2
     // files have no trailer and decode as-is (read-compat).
     let body = match version {
+        // Version 4 is the zero-copy fixed-layout format; its parser
+        // lives in the sibling module and owns its own CRC handling.
+        super::artifact_v4::VERSION_V4 => return super::artifact_v4::decode_v4(bytes),
         COMPAT_VERSION => bytes,
         VERSION => {
             anyhow::ensure!(
@@ -369,7 +382,8 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
             &bytes[..split]
         }
         other => anyhow::bail!(
-            "unsupported artifact version {other} (this build reads versions {COMPAT_VERSION} and {VERSION})"
+            "unsupported artifact version {other} (this build reads versions {COMPAT_VERSION} through {})",
+            super::artifact_v4::VERSION_V4
         ),
     };
     let mut r = Reader::new(body);

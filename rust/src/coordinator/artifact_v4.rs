@@ -1,0 +1,802 @@
+//! Artifact format **version 4** — the zero-copy, optionally compressed
+//! layout behind the fleet's memory-mapped hydration path.
+//!
+//! Version 3 (see [`super::artifact`]) decodes every f64 through a
+//! bounds-checked byte cursor: structurally safe, but a cache-miss
+//! hydration re-copies the `O(n²)` factor one little-endian read at a
+//! time before the `O(n²)` α adoption even starts. Version 4 moves the
+//! large numeric payloads into a fixed, 8-byte-aligned block section so
+//! an aligned buffer (an mmap'd file, or
+//! [`super::fleet::AlignedBlob`]'s heap fallback) hydrates by
+//! *reinterpreting* the bytes in place:
+//!
+//! ```text
+//! offset   size  field
+//! ------   ----  -----------------------------------------------------
+//!      0      8  magic  b"GPFASTMD"
+//!      8      4  version u32 = 4
+//!     12      4  flags u32           (bit 0: compressed factor block)
+//!     16      8  n u64               (training points)
+//!     24      8  chol_dim u64        (factor dimension; = n for exact specs)
+//!     32      8  rank u64            (retained spectral rank; 0 ⇔ packed)
+//!     40      8  logdet f64          (maintained log-determinant)
+//!     48      8  meta_len u64
+//!     56      8  blocks_off u64      (= align8(64 + meta_len))
+//!     64      …  meta                (v3-style field stream, small)
+//!      …      …  zero padding to blocks_off
+//! blocks_off  …  t f64×n | y f64×n | α f64×chol_dim | factor payload
+//!      …      4  crc32 u32           (over every preceding byte)
+//! ------   ----  -----------------------------------------------------
+//! factor payload, rank = 0 (packed):    lower triangle f64×d(d+1)/2
+//! factor payload, rank = r (spectral):  λ f64×r (descending)
+//!                                     | V f64×(r·d) (row per eigvec)
+//!                                     | diag f64×d
+//! ```
+//!
+//! **Alignment contract.** The block section starts at `blocks_off ≡ 0
+//! (mod 8)` and contains only consecutive raw little-endian f64s, so if
+//! the *buffer base* is 8-byte aligned (mmap pages always are; `Vec<u8>`
+//! is not guaranteed to be) every block reinterprets as `&[f64]` with no
+//! copy and no decode loop. [`FSlice`] carries the checked-alignment
+//! fallback: an unaligned or big-endian buffer still loads, through a
+//! one-pass copy. Either way the CRC32 trailer is verified before any
+//! field is trusted, the padding bytes must be zero, and every length
+//! field is validated against the bytes actually present — corrupt
+//! input is a clean `Err`, never UB.
+//!
+//! **Compression.** With the `compressed` flag the factor block stores a
+//! truncated spectral form `K̃ ≈ V_r Λ_r V_rᵀ + diag`
+//! ([`crate::linalg::spectral_truncate`]): rank `r` is picked by a
+//! relative tail-energy tolerance at encode time, so the artifact goes
+//! sublinear in `n²` when the kernel spectrum decays. `t`, `y`, `α` and
+//! ϑ̂ are always stored exactly, so predictive **means round-trip
+//! bit-identically**; only predictive variances are approximate (the
+//! reconstruction is exact on the diagonal, and the variance error is
+//! bounded by the discarded tail energy — `O(tol·tr K)` in the absolute
+//! covariance). Hydration re-factors the reconstruction (`O(r n²)` +
+//! one `O(n³)` Cholesky) — the storage-vs-cost tradeoff of
+//! Chalupka/Williams/Murray (arXiv 1205.6326): compression is worth it
+//! for cold archival tiers and network-limited stores, not for the hot
+//! LRU path, which should persist packed v4 (or v3) factors.
+
+use crate::data::Dataset;
+use crate::evidence::LaplaceEvidence;
+use crate::gp::ProfiledEval;
+use crate::linalg::{spectral_reconstruct, spectral_truncate, Chol, Matrix, SpectralTrunc};
+
+use super::artifact::{crc32, Reader, Writer, MAGIC};
+use super::registry::ModelSpec;
+use super::report::NestedReport;
+use super::tournament::TrainedModel;
+use super::train::TrainResult;
+
+/// The version tag in bytes `[8..12)` of a v4 artifact.
+pub const VERSION_V4: u32 = 4;
+/// Fixed header length; also the (8-aligned) offset of the meta section.
+const HEADER_LEN: usize = 64;
+/// Flag bit 0: the factor payload is a truncated spectral block.
+const FLAG_COMPRESSED: u32 = 1;
+
+fn align8(x: usize) -> usize {
+    (x + 7) & !7
+}
+
+// ---------------------------------------------------------------- fslice
+
+/// A block of f64s backed either by the artifact buffer itself
+/// (zero-copy reinterpretation — the aligned little-endian fast path) or
+/// by an owned copy (the checked-alignment fallback). Derefs to `[f64]`
+/// so downstream code is agnostic.
+pub enum FSlice<'a> {
+    /// Borrowed straight from the (8-aligned, little-endian) buffer.
+    Borrowed(&'a [f64]),
+    /// Copied out byte-by-byte (unaligned buffer or big-endian host).
+    Owned(Vec<f64>),
+}
+
+impl std::ops::Deref for FSlice<'_> {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        match self {
+            FSlice::Borrowed(s) => s,
+            FSlice::Owned(v) => v,
+        }
+    }
+}
+
+impl FSlice<'_> {
+    /// `true` when the zero-copy path engaged (no bytes were copied).
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, FSlice::Borrowed(_))
+    }
+}
+
+/// Reinterpret `bytes` (exactly `count * 8` long) as f64s — borrowed
+/// when the base pointer is 8-aligned on a little-endian host, copied
+/// otherwise. Every bit pattern is a valid `f64`, so no value check is
+/// needed for safety (finiteness is validated separately at adopt time).
+fn view_f64s(bytes: &[u8], count: usize) -> FSlice<'_> {
+    debug_assert_eq!(bytes.len(), count * 8);
+    #[cfg(target_endian = "little")]
+    {
+        let ptr = bytes.as_ptr();
+        if (ptr as usize) % std::mem::align_of::<f64>() == 0 {
+            // SAFETY: the pointer is 8-byte aligned (checked above), the
+            // length is exactly `count` f64s (asserted above), the host
+            // is little-endian (cfg-gated) matching the on-disk byte
+            // order, and any 8-byte pattern is a valid f64. The borrow
+            // inherits `bytes`' lifetime, so the buffer outlives the view.
+            let s = unsafe { std::slice::from_raw_parts(ptr as *const f64, count) };
+            return FSlice::Borrowed(s);
+        }
+    }
+    let mut out = Vec::with_capacity(count);
+    for c in bytes.chunks_exact(8) {
+        let mut a = [0u8; 8];
+        a.copy_from_slice(c);
+        out.push(f64::from_le_bytes(a));
+    }
+    FSlice::Owned(out)
+}
+
+// ---------------------------------------------------------------- meta
+
+/// The decoded small-field section: everything except `t`/`y`/`α`/factor.
+struct MetaV4 {
+    label: String,
+    spec: ModelSpec,
+    sigma_n: f64,
+    param_names: Vec<String>,
+    theta_hat: Vec<f64>,
+    lnp_peak: f64,
+    sigma_f_hat2: f64,
+    converged: bool,
+    n_evals: usize,
+    n_modes: usize,
+    restart_values: Vec<f64>,
+    jitter: f64,
+    peak_lnp: f64,
+    peak_sigma2: f64,
+    evidence: LaplaceEvidence,
+    nested: Option<NestedReport>,
+    warm_started: bool,
+    restarts: usize,
+    wall_secs: f64,
+}
+
+fn encode_meta(tm: &TrainedModel, label: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(label);
+    w.str(tm.spec.name());
+    w.f64(tm.sigma_n);
+    w.u32(tm.param_names.len() as u32);
+    for nm in &tm.param_names {
+        w.str(nm);
+    }
+    w.vec(&tm.train.theta_hat);
+    w.f64(tm.train.lnp_peak);
+    w.f64(tm.train.sigma_f_hat2);
+    w.u8(tm.train.converged as u8);
+    w.u64(tm.train.n_evals as u64);
+    w.u64(tm.train.n_modes as u64);
+    w.vec(&tm.train.restart_values);
+    w.f64(tm.train.jitter);
+    w.f64(tm.train.peak_eval.lnp);
+    w.f64(tm.train.peak_eval.sigma_f_hat2);
+    let ev = &tm.evidence;
+    w.f64(ev.ln_z);
+    w.f64(ev.ln_p_peak);
+    w.f64(ev.ln_det_h);
+    w.f64(ev.ln_volume);
+    w.f64(ev.marg_const);
+    w.vec(&ev.sigma);
+    w.matrix(&ev.covariance);
+    w.u8(ev.suspect as u8);
+    match &tm.nested {
+        None => w.u8(0),
+        Some(nr) => {
+            w.u8(1);
+            w.f64(nr.ln_z);
+            w.f64(nr.ln_z_err);
+            w.u64(nr.n_evals as u64);
+            w.f64(nr.information);
+            w.f64(nr.wall_secs);
+        }
+    }
+    w.u8(tm.warm_started as u8);
+    w.u64(tm.restarts as u64);
+    w.f64(tm.wall_secs);
+    w.buf
+}
+
+fn decode_meta(bytes: &[u8]) -> crate::Result<MetaV4> {
+    let mut r = Reader::new(bytes);
+    let label = r.str()?;
+    let spec_name = r.str()?;
+    let spec = ModelSpec::parse(&spec_name)
+        .map_err(|e| anyhow::anyhow!("artifact names an unknown model spec: {e}"))?;
+    let sigma_n = r.f64()?;
+    anyhow::ensure!(sigma_n.is_finite() && sigma_n >= 0.0, "corrupt artifact: σ_n = {sigma_n}");
+    let n_params = r.u32()? as usize;
+    anyhow::ensure!(
+        n_params <= 64,
+        "corrupt artifact: implausible hyperparameter count {n_params}"
+    );
+    let mut param_names = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        param_names.push(r.str()?);
+    }
+    let model_dim = spec.build(sigma_n).dim();
+    anyhow::ensure!(
+        n_params == model_dim,
+        "corrupt artifact: {spec_name} has {model_dim} hyperparameters, file lists {n_params}"
+    );
+    let theta_hat = r.vec()?;
+    anyhow::ensure!(
+        theta_hat.len() == model_dim && theta_hat.iter().all(|v| v.is_finite()),
+        "corrupt artifact: θ̂ has {} coordinates (want {model_dim}) or non-finite entries",
+        theta_hat.len()
+    );
+    let lnp_peak = r.f64()?;
+    let sigma_f_hat2 = r.f64()?;
+    let converged = r.u8()? != 0;
+    let n_evals = r.u64()? as usize;
+    let n_modes = r.u64()? as usize;
+    let restart_values = r.vec()?;
+    let jitter = r.f64()?;
+    anyhow::ensure!(
+        jitter.is_finite() && jitter >= 0.0,
+        "corrupt artifact: recorded jitter = {jitter}"
+    );
+    let peak_lnp = r.f64()?;
+    let peak_sigma2 = r.f64()?;
+    anyhow::ensure!(peak_lnp.is_finite(), "corrupt artifact: non-finite peak lnp ({peak_lnp})");
+    let evidence = LaplaceEvidence {
+        ln_z: r.f64()?,
+        ln_p_peak: r.f64()?,
+        ln_det_h: r.f64()?,
+        ln_volume: r.f64()?,
+        marg_const: r.f64()?,
+        sigma: r.vec()?,
+        covariance: r.matrix()?,
+        suspect: r.u8()? != 0,
+    };
+    let nested = match r.u8()? {
+        0 => None,
+        1 => Some(NestedReport {
+            ln_z: r.f64()?,
+            ln_z_err: r.f64()?,
+            n_evals: r.u64()? as usize,
+            information: r.f64()?,
+            wall_secs: r.f64()?,
+        }),
+        other => anyhow::bail!("corrupt artifact: nested flag byte {other}"),
+    };
+    let warm_started = r.u8()? != 0;
+    let restarts = r.u64()? as usize;
+    let wall_secs = r.f64()?;
+    r.done()
+        .map_err(|_| anyhow::anyhow!("corrupt artifact: trailing bytes in the meta section"))?;
+    Ok(MetaV4 {
+        label,
+        spec,
+        sigma_n,
+        param_names,
+        theta_hat,
+        lnp_peak,
+        sigma_f_hat2,
+        converged,
+        n_evals,
+        n_modes,
+        restart_values,
+        jitter,
+        peak_lnp,
+        peak_sigma2,
+        evidence,
+        nested,
+        warm_started,
+        restarts,
+        wall_secs,
+    })
+}
+
+// ------------------------------------------------------------- encoding
+
+fn push_f64s(buf: &mut Vec<u8>, v: &[f64]) {
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a v4 artifact. `compress_tol = Some(tol)` requests the
+/// truncated spectral factor block with relative tail-energy tolerance
+/// `tol ∈ [0, 1)`; the encoder silently falls back to the packed form
+/// when truncation would not actually shrink the payload (flat spectrum,
+/// tiny n), so a v4 file is never larger than its packed layout by more
+/// than the fixed header.
+pub fn encode_v4(
+    tm: &TrainedModel,
+    data: &Dataset,
+    compress_tol: Option<f64>,
+) -> crate::Result<Vec<u8>> {
+    let n = data.len();
+    let chol = &tm.train.peak_eval.chol;
+    let dim = chol.dim();
+    anyhow::ensure!(
+        dim == tm.spec.factor_dim(n),
+        "artifact factor dim {dim} does not match {} for n = {n}",
+        tm.spec.factor_dim(n)
+    );
+    anyhow::ensure!(
+        tm.train.peak_eval.alpha.len() == dim,
+        "artifact α length {} does not match factor dim {dim}",
+        tm.train.peak_eval.alpha.len()
+    );
+    let tri = dim * (dim + 1) / 2;
+    let spectral = match compress_tol {
+        None => None,
+        Some(tol) => {
+            anyhow::ensure!(
+                tol.is_finite() && (0.0..1.0).contains(&tol),
+                "compression tolerance {tol} must lie in [0, 1)"
+            );
+            let st = spectral_truncate(chol, tol)?;
+            if st.stored_f64s() < tri {
+                Some(st)
+            } else {
+                None
+            }
+        }
+    };
+    let meta = encode_meta(tm, &data.label);
+    let meta_len = meta.len();
+    let blocks_off = align8(HEADER_LEN + meta_len);
+    let rank = spectral.as_ref().map_or(0, SpectralTrunc::rank);
+    let payload = match &spectral {
+        None => tri,
+        Some(st) => st.stored_f64s(),
+    };
+    let block_bytes = (2 * n + dim + payload) * 8;
+    let mut buf = Vec::with_capacity(blocks_off + block_bytes + 4);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION_V4.to_le_bytes());
+    let flags = if spectral.is_some() { FLAG_COMPRESSED } else { 0 };
+    buf.extend_from_slice(&flags.to_le_bytes());
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&(dim as u64).to_le_bytes());
+    buf.extend_from_slice(&(rank as u64).to_le_bytes());
+    buf.extend_from_slice(&chol.logdet().to_le_bytes());
+    buf.extend_from_slice(&(meta_len as u64).to_le_bytes());
+    buf.extend_from_slice(&(blocks_off as u64).to_le_bytes());
+    debug_assert_eq!(buf.len(), HEADER_LEN);
+    buf.extend_from_slice(&meta);
+    buf.resize(blocks_off, 0); // zero alignment padding
+    push_f64s(&mut buf, &data.t);
+    push_f64s(&mut buf, &data.y);
+    push_f64s(&mut buf, &tm.train.peak_eval.alpha);
+    match &spectral {
+        None => {
+            let l = chol.factor_matrix();
+            for i in 0..dim {
+                push_f64s(&mut buf, &l.row(i)[..=i]);
+            }
+        }
+        Some(st) => {
+            push_f64s(&mut buf, &st.eigvals);
+            for k in 0..rank {
+                push_f64s(&mut buf, st.eigvecs.row(k));
+            }
+            push_f64s(&mut buf, &st.diag);
+        }
+    }
+    debug_assert_eq!(buf.len(), blocks_off + block_bytes);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    Ok(buf)
+}
+
+// -------------------------------------------------------------- parsing
+
+/// Which form the factor payload takes.
+pub enum FactorBlock<'a> {
+    /// Packed lower triangle, `d(d+1)/2` f64s.
+    Packed(FSlice<'a>),
+    /// Truncated spectral form: `λ` (descending), eigenvector rows, diag.
+    Spectral { eigvals: FSlice<'a>, eigvecs: FSlice<'a>, diag: FSlice<'a> },
+}
+
+/// A parsed-but-not-materialised v4 artifact: the header and meta fields
+/// are decoded, the CRC and every structural invariant are verified, and
+/// the numeric blocks are held as (ideally borrowed) [`FSlice`]s over the
+/// input buffer. [`ArtifactView::adopt`] materialises the
+/// [`TrainedModel`] + [`Dataset`] pair; the serving layer can instead
+/// read the blocks directly ([`crate::coordinator::ServeSession`]'s
+/// view-hydration path) and skip the intermediate model entirely.
+pub struct ArtifactView<'a> {
+    meta: MetaV4,
+    n: usize,
+    chol_dim: usize,
+    logdet: f64,
+    t: FSlice<'a>,
+    y: FSlice<'a>,
+    alpha: FSlice<'a>,
+    factor: FactorBlock<'a>,
+}
+
+fn header_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+fn header_u64(bytes: &[u8], off: usize) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&bytes[off..off + 8]);
+    u64::from_le_bytes(a)
+}
+
+fn header_usize(bytes: &[u8], off: usize, what: &str) -> crate::Result<usize> {
+    usize::try_from(header_u64(bytes, off))
+        .map_err(|_| anyhow::anyhow!("corrupt artifact: {what} field overflows this platform"))
+}
+
+impl<'a> ArtifactView<'a> {
+    /// Parse a v4 artifact without materialising the numeric payloads.
+    ///
+    /// Verifies, in order: length, magic, version, the CRC32 trailer
+    /// (before *any* field is trusted), flag bits, the rank/dim contract
+    /// of the compressed block, meta/padding/block-section bounds (the
+    /// padding must be all-zero and `blocks_off` must equal the aligned
+    /// meta end), the exact total length, the meta field stream, and the
+    /// spec-vs-dimension cross-checks. Corrupt input at any layer is a
+    /// clean `Err`.
+    pub fn parse(bytes: &'a [u8]) -> crate::Result<Self> {
+        anyhow::ensure!(
+            bytes.len() >= HEADER_LEN + 4,
+            "truncated artifact: {} bytes is shorter than the v4 header + trailer",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            &bytes[..8] == &MAGIC[..],
+            "not a gpfast model artifact: bad magic {:?}",
+            &bytes[..8]
+        );
+        let version = header_u32(bytes, 8);
+        anyhow::ensure!(version == VERSION_V4, "not a v4 artifact: version field {version}");
+        let split = bytes.len() - 4;
+        let stored = header_u32(bytes, split);
+        let computed = crc32(&bytes[..split]);
+        anyhow::ensure!(
+            stored == computed,
+            "corrupt artifact: CRC32 mismatch (stored {stored:#010x}, computed {computed:#010x})"
+        );
+        let flags = header_u32(bytes, 12);
+        anyhow::ensure!(
+            flags & !FLAG_COMPRESSED == 0,
+            "corrupt artifact: unknown flag bits {flags:#010x}"
+        );
+        let compressed = flags & FLAG_COMPRESSED != 0;
+        let n = header_usize(bytes, 16, "n")?;
+        let chol_dim = header_usize(bytes, 24, "chol_dim")?;
+        let rank = header_usize(bytes, 32, "rank")?;
+        let logdet = f64::from_le_bytes(bytes[40..48].try_into().expect("8 header bytes"));
+        let meta_len = header_usize(bytes, 48, "meta_len")?;
+        let blocks_off = header_usize(bytes, 56, "blocks_off")?;
+        anyhow::ensure!(n >= 1, "corrupt artifact: empty dataset (n = 0)");
+        anyhow::ensure!(chol_dim >= 1, "corrupt artifact: empty factor (chol_dim = 0)");
+        if compressed {
+            anyhow::ensure!(
+                (1..=chol_dim).contains(&rank),
+                "corrupt artifact: compressed-block rank {rank} out of range for factor dim {chol_dim}"
+            );
+        } else {
+            anyhow::ensure!(
+                rank == 0,
+                "corrupt artifact: rank {rank} set without the compressed flag"
+            );
+        }
+        let overflow = || anyhow::anyhow!("corrupt artifact: block sizes overflow");
+        let meta_end = HEADER_LEN.checked_add(meta_len).ok_or_else(overflow)?;
+        anyhow::ensure!(
+            meta_end <= split && blocks_off == align8(meta_end),
+            "corrupt artifact: blocks_off {blocks_off} does not match the aligned meta end"
+        );
+        anyhow::ensure!(
+            bytes[meta_end..blocks_off].iter().all(|&b| b == 0),
+            "corrupt artifact: nonzero alignment padding before the block section"
+        );
+        // exact block-section size, all arithmetic checked
+        let payload = if compressed {
+            rank.checked_mul(chol_dim.checked_add(1).ok_or_else(overflow)?)
+                .and_then(|v| v.checked_add(chol_dim))
+                .ok_or_else(overflow)?
+        } else {
+            chol_dim
+                .checked_mul(chol_dim.checked_add(1).ok_or_else(overflow)?)
+                .map(|v| v / 2)
+                .ok_or_else(overflow)?
+        };
+        let total_f64s = n
+            .checked_mul(2)
+            .and_then(|v| v.checked_add(chol_dim))
+            .and_then(|v| v.checked_add(payload))
+            .ok_or_else(overflow)?;
+        let block_bytes = total_f64s.checked_mul(8).ok_or_else(overflow)?;
+        anyhow::ensure!(
+            blocks_off.checked_add(block_bytes) == Some(split),
+            "corrupt artifact: block section is {} bytes, header claims {block_bytes}",
+            split.saturating_sub(blocks_off)
+        );
+        let meta = decode_meta(&bytes[HEADER_LEN..meta_end])?;
+        anyhow::ensure!(
+            chol_dim == meta.spec.factor_dim(n),
+            "corrupt artifact: factor dim {chol_dim} vs expected {} for {} at n = {n}",
+            meta.spec.factor_dim(n),
+            meta.spec.name()
+        );
+        let mut off = blocks_off;
+        let mut block = |count: usize| {
+            let s = view_f64s(&bytes[off..off + count * 8], count);
+            off += count * 8;
+            s
+        };
+        let t = block(n);
+        let y = block(n);
+        let alpha = block(chol_dim);
+        let factor = if compressed {
+            FactorBlock::Spectral {
+                eigvals: block(rank),
+                eigvecs: block(rank * chol_dim),
+                diag: block(chol_dim),
+            }
+        } else {
+            FactorBlock::Packed(block(payload))
+        };
+        Ok(Self { meta, n, chol_dim, logdet, t, y, alpha, factor })
+    }
+
+    /// Training-set size `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Factor dimension (`= n` for exact specs).
+    pub fn chol_dim(&self) -> usize {
+        self.chol_dim
+    }
+
+    /// Whether the factor payload is the truncated spectral form.
+    pub fn compressed(&self) -> bool {
+        matches!(self.factor, FactorBlock::Spectral { .. })
+    }
+
+    /// Whether the zero-copy path engaged for the numeric blocks (false
+    /// on unaligned buffers and big-endian hosts — the fallback copies).
+    pub fn zero_copy(&self) -> bool {
+        self.t.is_borrowed() && self.alpha.is_borrowed()
+    }
+
+    /// The buildable model spec.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.meta.spec
+    }
+
+    /// Fixed noise level σ_n.
+    pub fn sigma_n(&self) -> f64 {
+        self.meta.sigma_n
+    }
+
+    /// Stored Laplace evidence ln Z (slot-ranking key).
+    pub fn ln_z(&self) -> f64 {
+        self.meta.evidence.ln_z
+    }
+
+    /// ϑ̂ at the peak.
+    pub fn theta(&self) -> &[f64] {
+        &self.meta.theta_hat
+    }
+
+    /// Input points (borrowed from the buffer on the fast path).
+    pub fn t(&self) -> &[f64] {
+        &self.t
+    }
+
+    /// Output values.
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// The maintained weight vector α.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// The packed lower triangle, when the factor is uncompressed.
+    pub fn packed_factor(&self) -> Option<&[f64]> {
+        match &self.factor {
+            FactorBlock::Packed(p) => Some(p),
+            FactorBlock::Spectral { .. } => None,
+        }
+    }
+
+    /// Maintained log-determinant of the stored factor.
+    pub fn logdet(&self) -> f64 {
+        self.logdet
+    }
+
+    /// σ̂_f² at the peak evaluation.
+    pub fn sigma_f_hat2(&self) -> f64 {
+        self.meta.peak_sigma2
+    }
+
+    /// Jitter the factor was produced with.
+    pub fn jitter(&self) -> f64 {
+        self.meta.jitter
+    }
+
+    /// Validate the numeric payloads: `t`/`y`/`α` finiteness, factor
+    /// diagonal positivity (packed form) or eigenvalue/diag ordering and
+    /// sign (spectral form). Structure and checksum are already verified
+    /// by [`ArtifactView::parse`]; callers that bypass
+    /// [`ArtifactView::adopt`] (the direct view-hydration path) must
+    /// call this before trusting the blocks.
+    pub fn validate_payload(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.t.iter().all(|v| v.is_finite()) && self.y.iter().all(|v| v.is_finite()),
+            "corrupt artifact: non-finite training point"
+        );
+        anyhow::ensure!(
+            self.alpha.iter().all(|v| v.is_finite()),
+            "corrupt artifact: non-finite α entry"
+        );
+        match &self.factor {
+            FactorBlock::Packed(p) => {
+                let mut off = 0;
+                for i in 0..self.chol_dim {
+                    let d = p[off + i];
+                    anyhow::ensure!(
+                        d.is_finite() && d > 0.0,
+                        "corrupt artifact: factor diagonal L[{i}][{i}] = {d} (must be finite and > 0)"
+                    );
+                    off += i + 1;
+                }
+                anyhow::ensure!(
+                    self.logdet.is_finite(),
+                    "corrupt artifact: non-finite factor logdet ({})",
+                    self.logdet
+                );
+            }
+            FactorBlock::Spectral { eigvals, eigvecs, diag } => {
+                anyhow::ensure!(
+                    eigvals.iter().all(|v| v.is_finite() && *v >= 0.0)
+                        && eigvals.windows(2).all(|w| w[0] >= w[1]),
+                    "corrupt artifact: spectral eigenvalues not finite/descending/nonnegative"
+                );
+                anyhow::ensure!(
+                    eigvecs.iter().all(|v| v.is_finite()),
+                    "corrupt artifact: non-finite spectral eigenvector entry"
+                );
+                anyhow::ensure!(
+                    diag.iter().all(|v| v.is_finite() && *v >= 0.0),
+                    "corrupt artifact: spectral diagonal correction not finite/nonnegative"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the factor as a [`Chol`]: a straight packed-triangle
+    /// scatter for the uncompressed form (no intermediate per-row
+    /// buffers), reconstruction + re-factorisation for the spectral
+    /// form. Assumes [`ArtifactView::validate_payload`] passed.
+    fn rebuild_chol(&self) -> crate::Result<Chol> {
+        match &self.factor {
+            FactorBlock::Packed(p) => Ok(Chol::from_packed_lower(p, self.chol_dim, self.logdet)),
+            FactorBlock::Spectral { eigvals, eigvecs, diag } => {
+                let rank = eigvals.len();
+                let st = SpectralTrunc {
+                    eigvals: eigvals.to_vec(),
+                    eigvecs: Matrix::from_vec(rank, self.chol_dim, eigvecs.to_vec()),
+                    diag: diag.to_vec(),
+                };
+                let k = spectral_reconstruct(&st);
+                Chol::factor_owned(k).map_err(|e| {
+                    anyhow::anyhow!("corrupt artifact: compressed factor does not re-factor: {e}")
+                })
+            }
+        }
+    }
+
+    /// Materialise the full [`TrainedModel`] + [`Dataset`] pair — the
+    /// compatibility surface every v2/v3 caller already speaks. Each
+    /// numeric block is copied exactly once (a memcpy off the borrowed
+    /// view on the fast path); the packed factor scatters straight into
+    /// the dense triangle with no intermediate per-row buffers.
+    pub fn adopt(&self) -> crate::Result<(TrainedModel, Dataset)> {
+        self.validate_payload()?;
+        let m = &self.meta;
+        let data = Dataset::checked(self.t.to_vec(), self.y.to_vec(), m.label.clone())
+            .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?;
+        let chol = self.rebuild_chol()?;
+        let peak_eval = ProfiledEval {
+            lnp: m.peak_lnp,
+            sigma_f_hat2: m.peak_sigma2,
+            chol,
+            alpha: self.alpha.to_vec(),
+            jitter: m.jitter,
+        };
+        let tm = TrainedModel {
+            spec: m.spec.clone(),
+            sigma_n: m.sigma_n,
+            param_names: m.param_names.clone(),
+            train: TrainResult {
+                theta_hat: m.theta_hat.clone(),
+                lnp_peak: m.lnp_peak,
+                sigma_f_hat2: m.sigma_f_hat2,
+                peak_eval,
+                converged: m.converged,
+                n_evals: m.n_evals,
+                n_modes: m.n_modes,
+                restart_values: m.restart_values.clone(),
+                jitter: m.jitter,
+            },
+            evidence: m.evidence.clone(),
+            nested: m.nested.clone(),
+            warm_started: m.warm_started,
+            restarts: m.restarts,
+            wall_secs: m.wall_secs,
+        };
+        Ok((tm, data))
+    }
+}
+
+/// Full v4 decode — the [`super::artifact::decode`] dispatch target, so
+/// `TrainedModel::from_bytes` / `load` accept v4 files transparently.
+pub(super) fn decode_v4(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
+    ArtifactView::parse(bytes)?.adopt()
+}
+
+impl TrainedModel {
+    /// Encode this artifact in format **v4** (see the module docs):
+    /// zero-copy block layout, optional truncated-spectral factor
+    /// compression. [`TrainedModel::from_bytes`] reads the result back;
+    /// with `compress_tol = None` the restore is bit-identical, with
+    /// `Some(tol)` the predictive means are bit-identical and variances
+    /// carry an `O(tol)` relative perturbation.
+    pub fn to_bytes_v4(&self, data: &Dataset, compress_tol: Option<f64>) -> crate::Result<Vec<u8>> {
+        encode_v4(self, data, compress_tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align8_and_layout_constants() {
+        assert_eq!(align8(64), 64);
+        assert_eq!(align8(65), 72);
+        assert_eq!(align8(71), 72);
+        assert_eq!(HEADER_LEN % 8, 0);
+    }
+
+    #[test]
+    fn view_f64s_round_trips_aligned_and_unaligned() {
+        let vals = [1.5f64, -2.25, 0.0, f64::MAX];
+        let mut bytes = vec![0u8; 8 * 4 + 1];
+        for (i, v) in vals.iter().enumerate() {
+            bytes[1 + i * 8..1 + (i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        // offset 1: guaranteed unaligned view of the same payload
+        let off = &bytes[1..33];
+        let s = view_f64s(off, 4);
+        assert_eq!(&*s, &vals[..]);
+        // an owned aligned copy: the borrow path must produce equal values
+        let aligned: Vec<f64> = vals.to_vec();
+        let raw: &[u8] = unsafe {
+            std::slice::from_raw_parts(aligned.as_ptr() as *const u8, 32)
+        };
+        let s2 = view_f64s(raw, 4);
+        assert!(s2.is_borrowed(), "8-aligned little-endian buffer must borrow");
+        assert_eq!(&*s2, &vals[..]);
+    }
+}

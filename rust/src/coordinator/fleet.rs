@@ -35,8 +35,23 @@
 //!
 //! Everything is observable through [`FleetStats`]: lookups/hits,
 //! hydrations (with the wall-clock split into artifact **parse** vs
-//! factor **adoption** — the numbers that scope the zero-copy artifact
-//! roadmap item), evictions and persisted write-backs.
+//! zero-copy **view** establishment vs factor **adoption**), evictions
+//! and persisted write-backs.
+//!
+//! ## Hydration paths
+//!
+//! Stores hand blobs back as [`AlignedBlob`]s (8-byte-aligned buffers;
+//! [`DiskStore`] memory-maps its files, everything else copies into an
+//! aligned heap allocation). A blob whose version field is **4** takes
+//! the zero-copy path: [`crate::coordinator::artifact_v4::ArtifactView`]
+//! verifies the checksum and *borrows* the numeric blocks in place, and
+//! [`ServeSession::from_artifact_views`] adopts the factors with one
+//! memcpy each — no per-f64 decode loop, no intermediate
+//! [`TrainedModel`]. v2/v3 blobs (and mixed-version blob lists) fall
+//! back to the field-stream decoder. Either way the wall is split into
+//! `hydrate_view_secs` (view establishment), `hydrate_parse_secs`
+//! (v2/v3 field decoding) and `hydrate_adopt_secs` (the `O(n²)` factor
+//! copies + conditioning probe).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -47,8 +62,158 @@ use crate::rng::Xoshiro256;
 use crate::runtime::ExecutionContext;
 use crate::util::Stopwatch;
 
+use super::artifact_v4::{ArtifactView, VERSION_V4};
 use super::serve::ServeSession;
 use super::tournament::TrainedModel;
+
+// ------------------------------------------------------------ blob buffer
+
+/// An artifact byte buffer whose base address is **8-byte aligned**, so
+/// the v4 zero-copy parser can reinterpret its f64 blocks in place (see
+/// [`crate::coordinator::artifact_v4`]'s alignment contract). Two
+/// backings: a memory-mapped file (page-aligned by the OS; unmapped on
+/// drop) and an aligned heap copy (a `u64` allocation viewed as bytes —
+/// `Vec<u8>` alone does not guarantee 8-byte alignment). Derefs to
+/// `&[u8]`, so v2/v3 decoding works on it unchanged.
+pub struct AlignedBlob(Blob);
+
+enum Blob {
+    /// Read-only private file mapping. Unmapped on drop.
+    #[cfg(unix)]
+    Mmap { ptr: *mut u8, len: usize },
+    /// Heap copy, 8-aligned via the `u64` backing allocation.
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+#[cfg(unix)]
+mod mmap_sys {
+    //! Minimal raw `mmap`/`munmap` bindings (std links libc on unix; no
+    //! external crate needed). Constants match Linux and the BSDs.
+    use core::ffi::c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+impl AlignedBlob {
+    /// Copy `bytes` into an 8-aligned heap buffer.
+    pub fn from_slice(bytes: &[u8]) -> Self {
+        let len = bytes.len();
+        let mut buf = vec![0u64; (len + 7) / 8];
+        if len > 0 {
+            // SAFETY: the u64 allocation holds ≥ len bytes and a u64
+            // buffer may always be viewed/written as raw bytes.
+            unsafe {
+                std::ptr::copy_nonoverlapping(bytes.as_ptr(), buf.as_mut_ptr() as *mut u8, len)
+            };
+        }
+        Self(Blob::Heap { buf, len })
+    }
+
+    /// Memory-map `path` read-only (private mapping). Falls back to an
+    /// aligned heap read if the mapping fails, so callers never have to
+    /// branch. The caller must not truncate the file while the blob is
+    /// alive (the usual mmap caveat).
+    #[cfg(unix)]
+    pub fn mmap_file(path: &std::path::Path) -> crate::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        let len = file
+            .metadata()
+            .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?
+            .len();
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("{} is too large to map", path.display()))?;
+        if len == 0 {
+            return Ok(Self(Blob::Heap { buf: Vec::new(), len: 0 }));
+        }
+        // SAFETY: read-only private mapping of a freshly opened fd; the
+        // kernel validates len/fd and we check for MAP_FAILED. The fd
+        // may close after mmap returns — the mapping persists until
+        // munmap in Drop.
+        let ptr = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mmap_sys::PROT_READ,
+                mmap_sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == mmap_sys::MAP_FAILED || ptr.is_null() {
+            let bytes = std::fs::read(path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            return Ok(Self::from_slice(&bytes));
+        }
+        Ok(Self(Blob::Mmap { ptr: ptr as *mut u8, len }))
+    }
+
+    /// Buffer length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.0 {
+            #[cfg(unix)]
+            Blob::Mmap { len, .. } => *len,
+            Blob::Heap { len, .. } => *len,
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when backed by a file mapping (vs a heap copy).
+    pub fn is_mapped(&self) -> bool {
+        match &self.0 {
+            #[cfg(unix)]
+            Blob::Mmap { .. } => true,
+            Blob::Heap { .. } => false,
+        }
+    }
+}
+
+impl std::ops::Deref for AlignedBlob {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.0 {
+            #[cfg(unix)]
+            // SAFETY: the mapping is PROT_READ, ptr/len came from a
+            // successful mmap, and it stays mapped until Drop.
+            Blob::Mmap { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            // SAFETY: the u64 allocation holds ≥ len initialized bytes
+            // and may always be viewed as raw bytes.
+            Blob::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+}
+
+impl Drop for AlignedBlob {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Blob::Mmap { ptr, len } = &self.0 {
+            // SAFETY: exactly the region returned by mmap, unmapped once.
+            unsafe { mmap_sys::munmap(*ptr as *mut core::ffi::c_void, *len) };
+        }
+    }
+}
 
 // ------------------------------------------------------------- the store
 
@@ -61,6 +226,15 @@ pub trait ArtifactStore {
     fn put(&mut self, id: &str, blobs: Vec<Vec<u8>>) -> crate::Result<()>;
     /// The session's blobs, or `None` if it was never persisted.
     fn get(&self, id: &str) -> crate::Result<Option<Vec<Vec<u8>>>>;
+    /// The session's blobs as 8-byte-aligned buffers suitable for the v4
+    /// zero-copy parser. The default copies [`ArtifactStore::get`] into
+    /// aligned heap allocations; backends with mappable storage (see
+    /// [`DiskStore`]) override this to avoid the copy entirely.
+    fn get_view(&self, id: &str) -> crate::Result<Option<Vec<AlignedBlob>>> {
+        Ok(self
+            .get(id)?
+            .map(|blobs| blobs.iter().map(|b| AlignedBlob::from_slice(b)).collect()))
+    }
     /// Does the store hold this session?
     fn contains(&self, id: &str) -> bool;
     /// Delete a session; `true` if it existed.
@@ -212,6 +386,29 @@ impl ArtifactStore for DiskStore {
         Ok(Some(blobs))
     }
 
+    fn get_view(&self, id: &str) -> crate::Result<Option<Vec<AlignedBlob>>> {
+        validate_session_id(id)?;
+        if !self.blob_path(id, 0).exists() {
+            return Ok(None);
+        }
+        let mut blobs = Vec::new();
+        let mut k = 0;
+        loop {
+            let path = self.blob_path(id, k);
+            if !path.exists() {
+                break;
+            }
+            #[cfg(unix)]
+            blobs.push(AlignedBlob::mmap_file(&path)?);
+            #[cfg(not(unix))]
+            blobs.push(AlignedBlob::from_slice(&std::fs::read(&path).map_err(|e| {
+                anyhow::anyhow!("reading {}: {e}", path.display())
+            })?));
+            k += 1;
+        }
+        Ok(Some(blobs))
+    }
+
     fn contains(&self, id: &str) -> bool {
         self.blob_path(id, 0).exists()
     }
@@ -293,9 +490,14 @@ pub struct FleetStats {
     /// Dirty sessions written back to the store (on eviction or
     /// [`Fleet::flush`]).
     pub persisted: u64,
-    /// Hydration seconds spent decoding artifact bytes (bounds-checked
-    /// parse + payload validation).
+    /// Hydration seconds spent decoding v2/v3 artifact bytes into
+    /// [`TrainedModel`]s (the per-f64 field-stream walk). Stays ~0 when
+    /// every blob takes the v4 zero-copy path.
     pub hydrate_parse_secs: f64,
+    /// Hydration seconds spent establishing v4 zero-copy views
+    /// (checksum + header/meta validation; no numeric materialisation).
+    /// Stays 0 on the v2/v3 path.
+    pub hydrate_view_secs: f64,
     /// Hydration seconds spent adopting factors into a live session
     /// (`O(n²)` factor copies + conditioning probe).
     pub hydrate_adopt_secs: f64,
@@ -343,11 +545,19 @@ pub struct Fleet<S: ArtifactStore> {
     clock: u64,
     stats: FleetStats,
     eviction_log: Vec<String>,
+    /// Format every write-back ([`Fleet::put_artifacts`],
+    /// [`Fleet::flush`], eviction persists) encodes with: 3 (default,
+    /// field-stream) or 4 (zero-copy layout).
+    artifact_version: u32,
+    /// v4-only spectral-truncation tolerance (`None` = packed exact).
+    compress_tol: Option<f64>,
 }
 
 impl<S: ArtifactStore> Fleet<S> {
     /// A fleet over `store` keeping at most `capacity` (clamped ≥ 1)
-    /// sessions hydrated, draining predict work through `exec`.
+    /// sessions hydrated, draining predict work through `exec`. Writes
+    /// artifacts in the v3 format by default; see
+    /// [`Fleet::set_artifact_format`].
     pub fn new(store: S, capacity: usize, exec: ExecutionContext) -> Self {
         Self {
             store,
@@ -357,7 +567,44 @@ impl<S: ArtifactStore> Fleet<S> {
             clock: 0,
             stats: FleetStats::default(),
             eviction_log: Vec::new(),
+            artifact_version: 3,
+            compress_tol: None,
         }
+    }
+
+    /// Choose the artifact format for every subsequent write-back:
+    /// `version` 3 (field-stream) or 4 (zero-copy layout);
+    /// `compress_tol` opts v4 into truncated-spectral factor compression
+    /// (relative spectrum-mass tolerance in `[0, 1)`; see
+    /// [`crate::coordinator::artifact_v4`]). Reads always auto-detect,
+    /// so a store may hold mixed versions mid-migration.
+    pub fn set_artifact_format(
+        &mut self,
+        version: u32,
+        compress_tol: Option<f64>,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            version == 3 || version == 4,
+            "unsupported artifact version {version} (want 3 or 4)"
+        );
+        anyhow::ensure!(
+            compress_tol.is_none() || version == 4,
+            "factor compression requires artifact version 4"
+        );
+        if let Some(tol) = compress_tol {
+            anyhow::ensure!(
+                tol.is_finite() && (0.0..1.0).contains(&tol),
+                "compression tolerance {tol} out of range [0, 1)"
+            );
+        }
+        self.artifact_version = version;
+        self.compress_tol = compress_tol;
+        Ok(())
+    }
+
+    /// The artifact version write-backs encode with.
+    pub fn artifact_version(&self) -> u32 {
+        self.artifact_version
     }
 
     /// The LRU capacity.
@@ -415,7 +662,11 @@ impl<S: ArtifactStore> Fleet<S> {
         anyhow::ensure!(!models.is_empty(), "no models to persist for session {id:?}");
         let mut blobs = Vec::with_capacity(models.len());
         for tm in models {
-            blobs.push(tm.to_bytes(data)?);
+            blobs.push(if self.artifact_version == 4 {
+                tm.to_bytes_v4(data, self.compress_tol)?
+            } else {
+                tm.to_bytes(data)?
+            });
         }
         if let Some(pos) = self.position(id) {
             self.residents.remove(pos);
@@ -552,7 +803,9 @@ impl<S: ArtifactStore> Fleet<S> {
         let mut written = 0;
         for pos in 0..self.residents.len() {
             if self.residents[pos].dirty {
-                let blobs = self.residents[pos].session.to_artifact_bytes()?;
+                let blobs = self.residents[pos]
+                    .session
+                    .to_artifact_bytes_with(self.artifact_version, self.compress_tol)?;
                 self.store.put(&self.residents[pos].id, blobs)?;
                 self.residents[pos].dirty = false;
                 self.stats.persisted += 1;
@@ -587,36 +840,59 @@ impl<S: ArtifactStore> Fleet<S> {
             self.residents[pos].last_used = self.clock;
             return Ok(pos);
         }
-        let blobs = self.store.get(id)?.ok_or_else(|| {
+        let blobs = self.store.get_view(id)?.ok_or_else(|| {
             anyhow::anyhow!("fleet: unknown session {id:?} (not resident, not in the store)")
         })?;
-        // timed in two phases for the zero-copy-artifact roadmap item:
-        // bytes → TrainedModel (parse) vs TrainedModel → live factors
-        // (adopt, the O(n²) copies + conditioning probe)
-        let sw = Stopwatch::start();
-        let mut models = Vec::with_capacity(blobs.len());
-        let mut data: Option<Dataset> = None;
-        for (k, blob) in blobs.iter().enumerate() {
-            let (tm, d) = TrainedModel::from_bytes(blob)
-                .map_err(|e| anyhow::anyhow!("hydrating session {id:?} blob {k}: {e}"))?;
-            match &data {
-                None => data = Some(d),
-                Some(d0) => anyhow::ensure!(
-                    d0.t == d.t && d0.y == d.y,
-                    "hydrating session {id:?}: blob {k} carries different data than blob 0"
-                ),
+        anyhow::ensure!(!blobs.is_empty(), "fleet: session {id:?} has zero stored blobs");
+        // timed in phases (the hydrate_split bench rows): v4 blobs get a
+        // zero-copy view (checksum + validation, no numeric decode) then
+        // one O(n²) memcpy per factor at adoption; v2/v3 blobs pay the
+        // field-stream parse into TrainedModels first. A mixed-version
+        // blob list takes the v2/v3 path for all blobs (from_bytes
+        // dispatches v4 too, so correctness is version-independent).
+        let all_v4 = blobs
+            .iter()
+            .all(|b| b.len() >= 12 && b[8..12] == VERSION_V4.to_le_bytes());
+        let session = if all_v4 {
+            let sw = Stopwatch::start();
+            let mut views = Vec::with_capacity(blobs.len());
+            for (k, blob) in blobs.iter().enumerate() {
+                views.push(ArtifactView::parse(blob).map_err(|e| {
+                    anyhow::anyhow!("hydrating session {id:?} blob {k}: {e}")
+                })?);
             }
-            models.push(tm);
-        }
-        let data = data.expect("non-empty blob list");
-        let parse = sw.elapsed_secs();
-        let sw = Stopwatch::start();
-        let session = ServeSession::from_tournament(&models, &data, self.exec.clone())
-            .map_err(|e| anyhow::anyhow!("hydrating session {id:?}: {e}"))?;
-        let adopt = sw.elapsed_secs();
+            self.stats.hydrate_view_secs += sw.elapsed_secs();
+            let sw = Stopwatch::start();
+            let session = ServeSession::from_artifact_views(&views, self.exec.clone())
+                .map_err(|e| anyhow::anyhow!("hydrating session {id:?}: {e}"))?;
+            self.stats.hydrate_adopt_secs += sw.elapsed_secs();
+            session
+        } else {
+            let sw = Stopwatch::start();
+            let mut models = Vec::with_capacity(blobs.len());
+            let mut data: Option<Dataset> = None;
+            for (k, blob) in blobs.iter().enumerate() {
+                let (tm, d) = TrainedModel::from_bytes(blob)
+                    .map_err(|e| anyhow::anyhow!("hydrating session {id:?} blob {k}: {e}"))?;
+                match &data {
+                    None => data = Some(d),
+                    Some(d0) => anyhow::ensure!(
+                        d0.t == d.t && d0.y == d.y,
+                        "hydrating session {id:?}: blob {k} carries different data than blob 0"
+                    ),
+                }
+                models.push(tm);
+            }
+            let data = data.expect("non-empty blob list");
+            self.stats.hydrate_parse_secs += sw.elapsed_secs();
+            let sw = Stopwatch::start();
+            let session = ServeSession::from_tournament(&models, &data, self.exec.clone())
+                .map_err(|e| anyhow::anyhow!("hydrating session {id:?}: {e}"))?;
+            self.stats.hydrate_adopt_secs += sw.elapsed_secs();
+            session
+        };
+        drop(blobs); // release mappings before the session outlives them
         self.stats.hydrations += 1;
-        self.stats.hydrate_parse_secs += parse;
-        self.stats.hydrate_adopt_secs += adopt;
         self.make_room()?;
         self.clock += 1;
         self.residents.push(Resident {
@@ -644,7 +920,9 @@ impl<S: ArtifactStore> Fleet<S> {
             .map(|(i, _)| i)
             .expect("evict_lru on an empty fleet");
         if self.residents[pos].dirty {
-            let blobs = self.residents[pos].session.to_artifact_bytes()?;
+            let blobs = self.residents[pos]
+                .session
+                .to_artifact_bytes_with(self.artifact_version, self.compress_tol)?;
             self.store.put(&self.residents[pos].id, blobs)?;
             self.stats.persisted += 1;
         }

@@ -30,6 +30,7 @@
 //! accelerated assembly runs on the coordinator thread.
 
 pub mod artifact;
+pub mod artifact_v4;
 pub mod faults;
 pub mod fleet;
 pub mod pool;
@@ -39,9 +40,11 @@ pub mod tournament;
 pub mod train;
 mod report;
 
+pub use artifact_v4::{ArtifactView, FSlice, VERSION_V4};
 pub use faults::{Fault, FaultPlan};
 pub use fleet::{
-    ArtifactStore, DiskStore, Fleet, FleetStats, MemoryStore, PredictRequest, ZipfWorkload,
+    AlignedBlob, ArtifactStore, DiskStore, Fleet, FleetStats, MemoryStore, PredictRequest,
+    ZipfWorkload,
 };
 pub use pool::WorkerPool;
 pub use registry::{ModelSpec, Roster};

@@ -85,6 +85,7 @@ use crate::priors::{BoxPrior, ScalePrior};
 use crate::rng::Xoshiro256;
 use crate::runtime::ExecutionContext;
 
+use super::artifact_v4::ArtifactView;
 use super::registry::ModelSpec;
 use super::tournament::TrainedModel;
 use super::train::{train_model, TrainOptions, TrainResult};
@@ -435,6 +436,79 @@ impl ServeSession {
         Self::from_tournament(&models, &data, exec)
     }
 
+    /// Hydrate a session straight from parsed **v4 artifact views** —
+    /// the zero-copy half of the fleet's hydration path
+    /// ([`crate::coordinator::fleet`]). Uncompressed exact-spec views
+    /// adopt their borrowed numeric blocks directly into predictors
+    /// ([`Predictor::from_view_parts`]): one memcpy per block off the
+    /// (possibly memory-mapped) buffer, no intermediate [`TrainedModel`]
+    /// and no per-row factor `Vec`s. Compressed or approximate-spec
+    /// views fall back to [`ArtifactView::adopt`] + the tournament
+    /// constructor. Serves the same bits as
+    /// [`ServeSession::from_artifact_bytes`] over equivalent blobs.
+    pub fn from_artifact_views(
+        views: &[ArtifactView<'_>],
+        exec: ExecutionContext,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!views.is_empty(), "no artifact views given");
+        let sigma_n = views[0].sigma_n();
+        let mut slots = Vec::with_capacity(views.len());
+        for (i, v) in views.iter().enumerate() {
+            anyhow::ensure!(
+                v.sigma_n() == sigma_n,
+                "roster noise levels disagree: {} vs {sigma_n}",
+                v.sigma_n()
+            );
+            anyhow::ensure!(
+                v.t() == views[0].t() && v.y() == views[0].y(),
+                "artifact view {i} was trained on different data than the first view"
+            );
+            v.validate_payload()?;
+            let predictor = match v.packed_factor() {
+                Some(packed) if v.spec().approx().is_none() => Predictor::from_view_parts(
+                    v.spec().build(sigma_n),
+                    v.t(),
+                    v.y(),
+                    v.theta(),
+                    packed,
+                    v.logdet(),
+                    v.alpha(),
+                    v.sigma_f_hat2(),
+                    v.jitter(),
+                ),
+                // compressed or approximate-spec views materialise the
+                // model first (spectral reconstruction / reduced-set
+                // serving both need the full adopt path)
+                _ => {
+                    let (tm, data) = v.adopt()?;
+                    tm.predictor(&data)?
+                }
+            };
+            let health = SlotHealth::probe(&predictor, COND_RETRAIN_LIMIT);
+            slots.push(ModelSlot {
+                spec: v.spec().clone(),
+                predictor,
+                ln_z: v.ln_z(),
+                drift: DriftMonitor::new(DriftOptions::default()),
+                health,
+            });
+        }
+        slots.sort_by(|a, b| crate::util::desc_nan_last(a.ln_z, b.ln_z));
+        Ok(Self {
+            slots,
+            route: RouteMode::Winner,
+            exec,
+            sigma_n,
+            scale_prior: ScalePrior::default(),
+            drift_opts: DriftOptions::default(),
+            window: None,
+            cond_limit: COND_RETRAIN_LIMIT,
+            since_refresh: 0,
+            evictions: 0,
+            refreshes: 0,
+        })
+    }
+
     /// Re-serialise the **live** session as artifact bytes, one blob per
     /// slot in the current rank order — the eviction path of the
     /// multi-tenant fleet: a dirty session (post-`observe`/`retrain`)
@@ -457,6 +531,27 @@ impl ServeSession {
     /// set, so a faithful re-encoding is impossible — fleets that mutate
     /// sessions should roster exact specs.
     pub fn to_artifact_bytes(&self) -> crate::Result<Vec<Vec<u8>>> {
+        self.to_artifact_bytes_with(3, None)
+    }
+
+    /// [`ServeSession::to_artifact_bytes`] with an explicit artifact
+    /// format: `version` is 3 (the default field-stream format) or 4
+    /// (the zero-copy block layout, optionally compressed with
+    /// `compress_tol` — see [`crate::coordinator::artifact_v4`]).
+    /// `compress_tol` is rejected for version 3.
+    pub fn to_artifact_bytes_with(
+        &self,
+        version: u32,
+        compress_tol: Option<f64>,
+    ) -> crate::Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(
+            version == 3 || version == 4,
+            "unsupported artifact encode version {version} (this build writes 3 and 4)"
+        );
+        anyhow::ensure!(
+            compress_tol.is_none() || version == 4,
+            "factor compression requires artifact version 4"
+        );
         let mut out = Vec::with_capacity(self.slots.len());
         for slot in &self.slots {
             anyhow::ensure!(
@@ -506,7 +601,11 @@ impl ServeSession {
                 restarts: 0,
                 wall_secs: 0.0,
             };
-            out.push(tm.to_bytes(&data)?);
+            out.push(if version == 4 {
+                tm.to_bytes_v4(&data, compress_tol)?
+            } else {
+                tm.to_bytes(&data)?
+            });
         }
         Ok(out)
     }

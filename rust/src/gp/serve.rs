@@ -134,6 +134,47 @@ impl Predictor {
         }
     }
 
+    /// Adopt a predictor straight from **borrowed artifact-view parts**
+    /// — the zero-copy hydration path of the v4 format
+    /// ([`crate::coordinator::artifact_v4`]). Every numeric block is
+    /// copied exactly once, from the (possibly memory-mapped) view into
+    /// this predictor's own storage: the packed lower triangle scatters
+    /// directly into the dense factor via
+    /// [`Chol::from_packed_lower`], with **no intermediate `Vec`s** (the
+    /// v3 reader allocates one per factor row). Serves the same bits as
+    /// [`Predictor::from_eval`] on equal inputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_view_parts(
+        model: CovarianceModel,
+        t: &[f64],
+        y: &[f64],
+        theta: &[f64],
+        packed_l: &[f64],
+        logdet: f64,
+        alpha: &[f64],
+        sigma_f_hat2: f64,
+        jitter: f64,
+    ) -> Self {
+        let n = t.len();
+        assert_eq!(n, y.len(), "t/y length mismatch");
+        assert_eq!(packed_l.len(), n * (n + 1) / 2, "factor/data size mismatch");
+        assert_eq!(alpha.len(), n, "alpha/data size mismatch");
+        assert_eq!(theta.len(), model.dim(), "theta/model dim mismatch");
+        Self {
+            model,
+            theta: theta.to_vec(),
+            t: t.to_vec(),
+            y: y.to_vec(),
+            chol: Chol::from_packed_lower(packed_l, n, logdet),
+            alpha: alpha.to_vec(),
+            sigma_f_hat2,
+            jitter,
+            queries: AtomicUsize::new(0),
+            observations: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
     /// Current training-set size behind the factor.
     pub fn n(&self) -> usize {
         self.t.len()

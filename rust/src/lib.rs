@@ -230,6 +230,44 @@
 //! `gpfast train --save-model m.gpfm` / `gpfast serve --load-model
 //! m.gpfm`.
 //!
+//! ### Zero-copy artifact format v4
+//!
+//! Formats v2/v3 are flat field streams: hydration re-parses and copies
+//! every f64. Format v4 ([`coordinator::artifact_v4`]) is a fixed
+//! 64-byte header + meta stream + **8-byte-aligned block section** whose
+//! large payloads (`t`, `y`, `α`, factor) can be reinterpreted in place:
+//!
+//! ```text
+//!   [ 0..64)  header: magic │ version=4 │ flags │ n │ chol_dim │ rank
+//!             │ logdet │ meta_len │ blocks_off  (all fixed offsets)
+//!   [64..64+meta_len)        v3-style meta field stream (small)
+//!   [… ..blocks_off)         zero padding to the next 8-byte boundary
+//!   [blocks_off..len-4)      t[n] │ y[n] │ α[d] │ factor payload
+//!   [len-4..len)             CRC32 over everything preceding
+//! ```
+//!
+//! **Alignment contract:** `blocks_off = align8(64 + meta_len)`, the
+//! padding must be all-zero, and every block is a plain little-endian
+//! f64 array — so on a little-endian host an 8-aligned buffer (the
+//! [`coordinator::AlignedBlob`] mmap/heap wrapper the fleet's
+//! `ArtifactStore::get_view` returns) hydrates through
+//! [`coordinator::ArtifactView::parse`] with **zero numeric copies**:
+//! parse verifies the CRC and the layout, and the O(n²) cost collapses
+//! into the single `adopt` memcpy of the factor. Misaligned or
+//! big-endian buffers take a checked fallback copy — never UB. The
+//! factor payload is either the packed lower triangle (`d(d+1)/2`
+//! doubles, bit-identical restore) or, behind the header's compressed
+//! flag, a truncated spectral form `K̃ ≈ V_r Λ_r V_rᵀ + diag`
+//! ([`linalg::spectral_truncate`], rank picked by a relative
+//! tail-energy tolerance) storing `r(n+1) + n` doubles. Compression is
+//! worth it when the kernel is smooth enough that `r ≪ n/2` at an
+//! acceptable tolerance: means stay bit-identical (α is stored exactly),
+//! variances carry an `O(tol)` perturbation, and hydration pays an
+//! `O(r n²)` reconstruction + one `O(n³)/3` re-factorisation — encoders
+//! fall back to the packed triangle whenever truncation would not
+//! shrink the artifact. v2/v3 stay readable (and v3 stays the default
+//! write format); readers auto-detect per blob.
+//!
 //! ### Fleet layer (multi-tenant serving at cache-bounded memory)
 //!
 //! One [`coordinator::ServeSession`] holds `O(n²)` of factors; a serving
@@ -239,8 +277,8 @@
 //!
 //! ```text
 //!   ArtifactStore (cold: CRC32-checked blobs, Memory/Disk backends)
-//!        │ get → parse → adopt            ▲ dirty write-back on evict
-//!        ▼                                │
+//!        │ get_view → (v4: view │ v2/v3: parse) → adopt
+//!        ▼                                ▲ dirty write-back on evict
 //!   LRU of ≤ capacity hydrated residents ─┘
 //!        │ group per session, waves of ≤ capacity
 //!        ▼
@@ -258,10 +296,12 @@
 //! predictions, eviction order and final store bytes are bit-identical
 //! for any thread budget (`rust/tests/fleet.rs`). [`coordinator::FleetStats`]
 //! exposes hit/hydration rates and the hydrate wall-clock split into
-//! artifact **parse** vs factor **adopt**; `benches/fleet.rs` drives a
-//! 10k-session Zipf workload through capacity ≪ sessions into the
-//! `fleet` section of `BENCH_perf.json`. CLI: `gpfast fleet --sessions
-//! 10000 --capacity 64`.
+//! v2/v3 field-stream **parse** vs v4 zero-copy **view** vs factor
+//! **adopt**; `benches/fleet.rs` drives a 10k-session Zipf workload
+//! through capacity ≪ sessions into the `fleet` section of
+//! `BENCH_perf.json` (per-version hydrate splits + v3/v4/compressed
+//! artifact sizes). CLI: `gpfast fleet --sessions 10000 --capacity 64
+//! --artifact-version 4 [--compress-tol 1e-3]`.
 //!
 //! `examples/streaming_tidal.rs` replays the tidal series as an arriving
 //! stream through a window policy and verifies windowed serving ≡

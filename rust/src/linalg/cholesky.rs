@@ -154,6 +154,23 @@ impl Chol {
         Self { l, logdet }
     }
 
+    /// Reassemble a factorisation straight from a **packed lower
+    /// triangle** (row-major, row `i` contributing `i + 1` doubles) —
+    /// the zero-copy artifact path ([`crate::coordinator::artifact`]
+    /// format v4): the borrowed view's factor block is scattered into
+    /// the dense triangle in one pass, with no intermediate per-row
+    /// `Vec` allocations. Same caller contract as [`Chol::from_parts`].
+    pub fn from_packed_lower(packed: &[f64], n: usize, logdet: f64) -> Self {
+        assert_eq!(packed.len(), n * (n + 1) / 2, "packed triangle length");
+        let mut l = Matrix::zeros(n, n);
+        let mut off = 0;
+        for i in 0..n {
+            l.row_mut(i)[..=i].copy_from_slice(&packed[off..off + i + 1]);
+            off += i + 1;
+        }
+        Self { l, logdet }
+    }
+
     /// Dimension `n`.
     pub fn dim(&self) -> usize {
         self.l.rows()

@@ -30,6 +30,7 @@ mod toeplitz;
 mod lu;
 mod eigen;
 mod ldlt;
+mod spectral;
 
 pub use matrix::Matrix;
 pub use cholesky::{Chol, CholError};
@@ -42,6 +43,7 @@ pub use eigen::{
     sym_eigen, sym_eigen_checked, sym_eigenvalues, sym_eigenvalues_with, sym_one_norm_est,
 };
 pub use ldlt::{Inertia, Ldlt};
+pub use spectral::{spectral_reconstruct, spectral_truncate, SpectralTrunc};
 
 /// Dot product of two equal-length slices.
 ///

@@ -1,0 +1,225 @@
+//! Truncated spectral compression of SPD factors — the storage side of
+//! the reduced-rank tradeoff (Chalupka/Williams/Murray, arXiv 1205.6326).
+//!
+//! A persisted Cholesky factor is `n(n+1)/2` doubles; for smooth kernels
+//! the spectrum of `K = L Lᵀ` decays fast, so a truncated eigenexpansion
+//!
+//! ```text
+//! K̃  =  V_r Λ_r V_rᵀ  +  diag(d)
+//! ```
+//!
+//! with `r ≪ n` stores `r(n+1) + n` doubles instead. The rank is chosen
+//! by a **relative tail-energy tolerance**: the smallest `r` with
+//! `Σ_{i>r} λ_i ≤ tol · Σ_i λ_i` (eigenvalues clamped at zero, sorted
+//! descending). The diagonal correction `d_i = K_ii − Σ_{k≤r} λ_k V_ik²`
+//! (clamped at zero) makes the reconstruction **exact on the diagonal**,
+//! which keeps predictive variances honest at the training points and —
+//! crucially — keeps `K̃` positive definite so it re-factors cleanly on
+//! hydration ([`crate::coordinator::artifact`] format v4).
+//!
+//! Compression runs at *encode* time (a one-off `O(n³)` Jacobi
+//! eigensolve on an already-trained factor); the serve path only pays
+//! the `O(r n²)` reconstruction plus one re-factorisation.
+
+use super::{sym_eigen_checked, Chol, Matrix};
+
+/// A rank-`r` spectral truncation of an SPD matrix plus its exact
+/// diagonal correction. Produced by [`spectral_truncate`], rebuilt by
+/// [`spectral_reconstruct`].
+#[derive(Debug, Clone)]
+pub struct SpectralTrunc {
+    /// Retained eigenvalues, descending, all `≥ 0`, length `r ≥ 1`.
+    pub eigvals: Vec<f64>,
+    /// Retained eigenvectors as the **rows** of an `r × n` matrix
+    /// (row `k` pairs with `eigvals[k]`).
+    pub eigvecs: Matrix,
+    /// Diagonal correction `d`, length `n`, all `≥ 0`, chosen so the
+    /// reconstruction matches `K` exactly on the diagonal.
+    pub diag: Vec<f64>,
+}
+
+impl SpectralTrunc {
+    /// Retained rank `r`.
+    pub fn rank(&self) -> usize {
+        self.eigvals.len()
+    }
+
+    /// Original dimension `n`.
+    pub fn dim(&self) -> usize {
+        self.eigvecs.cols()
+    }
+
+    /// Doubles stored by this form: `r(n+1) + n` vs the packed
+    /// triangle's `n(n+1)/2`.
+    pub fn stored_f64s(&self) -> usize {
+        self.rank() * (self.dim() + 1) + self.dim()
+    }
+}
+
+/// Compress the SPD matrix behind a Cholesky factor to a truncated
+/// spectral form whose relative tail energy is at most `tol`.
+///
+/// `tol` is clamped into `[0, 1)`; `tol = 0` keeps every positive
+/// eigenvalue (lossless up to the eigensolve's round-off). The rank is
+/// always at least 1 and at most `n`. Errors if the eigensolver fails
+/// to converge (pathological input) — callers should fall back to the
+/// uncompressed encoding in that case.
+pub fn spectral_truncate(chol: &Chol, tol: f64) -> crate::Result<SpectralTrunc> {
+    let n = chol.dim();
+    anyhow::ensure!(n >= 1, "cannot compress an empty factor");
+    let tol = tol.clamp(0.0, 1.0 - f64::EPSILON);
+    // Reconstitute K = L·Lᵀ (lower triangle only is read from L).
+    let l = chol.factor_matrix();
+    let mut k = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // dot of row i and row j over the first min(i,j)+1 entries
+            let m = j + 1;
+            let mut s = 0.0;
+            for p in 0..m {
+                s += l.row(i)[p] * l.row(j)[p];
+            }
+            k[(i, j)] = s;
+            k[(j, i)] = s;
+        }
+    }
+    let (mut vals, vecs) = sym_eigen_checked(&k)?;
+    // sym_eigen returns ascending eigenvalues with eigenvectors in the
+    // *columns*; flip to descending and clamp the (round-off) negatives.
+    vals.reverse();
+    for v in &mut vals {
+        if !v.is_finite() {
+            anyhow::bail!("eigensolver produced a non-finite eigenvalue");
+        }
+        *v = v.max(0.0);
+    }
+    let total: f64 = vals.iter().sum();
+    anyhow::ensure!(
+        total.is_finite() && total > 0.0,
+        "degenerate spectrum: trace {total} not positive"
+    );
+    // Smallest r ≥ 1 with tail energy Σ_{i>r} λ ≤ tol·total.
+    let mut rank = n;
+    let mut tail = 0.0;
+    for r in (1..n).rev() {
+        tail += vals[r];
+        if tail > tol * total {
+            break;
+        }
+        rank = r;
+    }
+    // Copy the retained eigenvectors out as rows. Column n-1 of `vecs`
+    // is the largest eigenvalue's vector after the reversal above.
+    let mut eigvecs = Matrix::zeros(rank, n);
+    for kk in 0..rank {
+        let col = n - 1 - kk;
+        for i in 0..n {
+            eigvecs[(kk, i)] = vecs[(i, col)];
+        }
+    }
+    let eigvals = vals[..rank].to_vec();
+    // Exact-diagonal correction, clamped at zero so K̃ stays SPD-friendly.
+    let mut diag = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut approx = 0.0;
+        for kk in 0..rank {
+            let v = eigvecs[(kk, i)];
+            approx += eigvals[kk] * v * v;
+        }
+        diag.push((k[(i, i)] - approx).max(0.0));
+    }
+    Ok(SpectralTrunc { eigvals, eigvecs, diag })
+}
+
+/// Rebuild the dense approximation `K̃ = V_r Λ_r V_rᵀ + diag(d)`.
+///
+/// `O(r n²)` — the hydration-side cost of the compressed artifact path.
+pub fn spectral_reconstruct(st: &SpectralTrunc) -> Matrix {
+    let n = st.dim();
+    let r = st.rank();
+    let mut k = Matrix::zeros(n, n);
+    for kk in 0..r {
+        let lam = st.eigvals[kk];
+        let row = st.eigvecs.row(kk);
+        for i in 0..n {
+            let li = lam * row[i];
+            let out = k.row_mut(i);
+            for j in 0..n {
+                out[j] += li * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        k[(i, i)] += st.diag[i];
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize) -> Matrix {
+        // A well-conditioned SPD matrix with decaying off-diagonals —
+        // kernel-matrix-like so truncation is meaningful.
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let d = (i as f64 - j as f64).abs();
+                k[(i, j)] = (-0.5 * d * d / 9.0).exp();
+            }
+            k[(i, i)] += 0.1;
+        }
+        k
+    }
+
+    #[test]
+    fn lossless_tolerance_round_trips() {
+        let k = spd(12);
+        let chol = Chol::factor(&k).unwrap();
+        let st = spectral_truncate(&chol, 0.0).unwrap();
+        let kk = spectral_reconstruct(&st);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!(
+                    (kk[(i, j)] - k[(i, j)]).abs() < 1e-8,
+                    "K̃[{i}][{j}] = {} vs {}",
+                    kk[(i, j)],
+                    k[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loose_tolerance_truncates_and_stays_factorable() {
+        let n = 24;
+        let k = spd(n);
+        let chol = Chol::factor(&k).unwrap();
+        let st = spectral_truncate(&chol, 1e-3).unwrap();
+        assert!(st.rank() < n, "smooth spectrum should truncate, rank = {}", st.rank());
+        assert!(st.stored_f64s() < n * (n + 1) / 2);
+        // descending, non-negative
+        for w in st.eigvals.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(st.eigvals.iter().all(|&v| v >= 0.0));
+        // exact on the diagonal by construction
+        let kk = spectral_reconstruct(&st);
+        for i in 0..n {
+            assert!((kk[(i, i)] - k[(i, i)]).abs() < 1e-10);
+        }
+        // and the reconstruction re-factors
+        let re = Chol::factor(&kk).unwrap();
+        assert!(re.logdet().is_finite());
+    }
+
+    #[test]
+    fn rank_bounds_are_respected() {
+        let k = spd(6);
+        let chol = Chol::factor(&k).unwrap();
+        // tol ≈ 1 still keeps rank ≥ 1
+        let st = spectral_truncate(&chol, 0.999_999).unwrap();
+        assert!(st.rank() >= 1 && st.rank() <= 6);
+    }
+}

@@ -101,7 +101,9 @@ flags:
   --sessions <N>           fleet: cold sessions to seed [64]
   --capacity <N>           fleet: LRU capacity (hot sessions) [8]
   --requests <N>           fleet: Zipf predict requests to drive [512]
-  --store <dir>            fleet: artifact store directory [tmp]";
+  --store <dir>            fleet: artifact store directory [tmp]
+  --artifact-version 3|4   fleet: artifact write-back format [3]
+  --compress-tol <tol>     fleet: v4 spectral factor compression, tol in [0,1)";
 
 /// Load `--data` CSV, else synthesise a Table-1 dataset of `--n` points.
 fn load_dataset(args: &Args, cfg: &RunConfig) -> gpfast::Result<Dataset> {
@@ -367,16 +369,31 @@ fn cmd_fleet(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
         tm.ln_z()
     );
 
+    let artifact_version = args.get_u64("artifact-version", 3)? as u32;
+    let compress_tol = match args.get("compress-tol") {
+        Some(s) => Some(
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--compress-tol expects a number, got '{s}'"))?,
+        ),
+        None => None,
+    };
     let default_store = std::env::temp_dir().join(format!("gpfast_fleet_{}", std::process::id()));
     let store_dir = PathBuf::from(args.get_or("store", &default_store.to_string_lossy()));
     let mut fleet = Fleet::new(DiskStore::new(&store_dir)?, capacity, cfg.exec());
+    fleet.set_artifact_format(artifact_version, compress_tol)?;
     for i in 0..n_sessions {
         fleet.put_artifacts(&format!("s{i:05}"), std::slice::from_ref(tm), &data)?;
     }
     println!(
-        "seeded {} cold sessions ({} KiB) in {}",
+        "seeded {} cold sessions (v{} artifacts{}, {} KiB = {} bytes) in {}",
         n_sessions,
+        artifact_version,
+        match compress_tol {
+            Some(tol) => format!(", spectral tol {tol:.1e}"),
+            None => String::new(),
+        },
         fleet.store().total_bytes()? / 1024,
+        fleet.store().total_bytes()?,
         store_dir.display()
     );
 
@@ -433,10 +450,20 @@ fn cmd_fleet(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
         cold_us.len()
     );
     println!(
-        "  hydrate wall split: parse {:.1} ms, factor adoption {:.1} ms (total)",
+        "  hydrate wall split (total): parse {:.1} ms, view {:.1} ms, factor adoption {:.1} ms",
         stats.hydrate_parse_secs * 1e3,
+        stats.hydrate_view_secs * 1e3,
         stats.hydrate_adopt_secs * 1e3
     );
+    if stats.hydrations > 0 {
+        let per = 1e6 / stats.hydrations as f64;
+        println!(
+            "  hydrate wall split (per session): parse {:.0} µs, view {:.0} µs, adoption {:.0} µs",
+            stats.hydrate_parse_secs * per,
+            stats.hydrate_view_secs * per,
+            stats.hydrate_adopt_secs * per
+        );
+    }
 
     // mutate the hottest session, then shut down cleanly: eviction
     // persists the dirty session's *current* factors back to the store

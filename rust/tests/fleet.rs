@@ -299,3 +299,79 @@ fn admit_flush_and_failure_modes() {
     let msg = format!("{err}");
     assert!(msg.contains("corrupt artifact"), "want a CRC complaint, got: {msg}");
 }
+
+/// A two-model session roster encoded as v4 store blobs.
+fn session_blobs_v4(data: &Dataset) -> Vec<Vec<u8>> {
+    let a = make_artifact(ModelSpec::K1, data, -9.0);
+    let b = make_artifact(ModelSpec::K2, data, -11.0);
+    vec![
+        a.to_bytes_v4(data, None).expect("encode k1 v4"),
+        b.to_bytes_v4(data, None).expect("encode k2 v4"),
+    ]
+}
+
+/// The v4 store path under capacity-1 thrash: a fleet reading v4 blobs
+/// serves bit-identical answers to the v3 fleet, pays zero likelihood
+/// evaluations, never touches the v2/v3 field-stream parser (hydrations
+/// go through the zero-copy view), and dirty write-backs re-encode in
+/// v4 and round-trip observations bit-identically.
+#[test]
+fn v4_store_thrash_serves_identical_bits_without_the_parser() {
+    let data = table1_dataset(24, 0.1, 937);
+    let mut store3 = MemoryStore::new();
+    store3.put("a", session_blobs(&data)).unwrap();
+    store3.put("b", session_blobs(&data)).unwrap();
+    let mut fleet3 = Fleet::new(store3, 1, ExecutionContext::seq());
+
+    let mut store4 = MemoryStore::new();
+    store4.put("a", session_blobs_v4(&data)).unwrap();
+    store4.put("b", session_blobs_v4(&data)).unwrap();
+    let mut fleet4 = Fleet::new(store4, 1, ExecutionContext::seq());
+    fleet4.set_artifact_format(4, None).unwrap();
+
+    let t_star: Vec<f64> = (0..12).map(|q| 0.5 + 1.9 * q as f64).collect();
+    let snap = CounterSnapshot::take();
+    for cycle in 0..3 {
+        let p3a = fleet3.predict("a", &t_star).unwrap();
+        let p4a = fleet4.predict("a", &t_star).unwrap();
+        assert_eq!(p4a.mean, p3a.mean, "cycle {cycle}: v4 means diverged from v3");
+        assert_eq!(p4a.sd, p3a.sd, "cycle {cycle}: v4 sds diverged from v3");
+        let p3b = fleet3.predict("b", &t_star).unwrap();
+        let p4b = fleet4.predict("b", &t_star).unwrap();
+        assert_eq!(p4b.mean, p3b.mean, "cycle {cycle}: v4 means diverged from v3 (b)");
+        assert_eq!(p4b.sd, p3b.sd, "cycle {cycle}: v4 sds diverged from v3 (b)");
+    }
+    assert_eq!(snap.delta().evals, 0, "v4 hydration must stay eval-free");
+    let st = fleet4.stats();
+    assert_eq!(st.hydrations, 6, "capacity-1 alternation rehydrates every touch");
+    assert_eq!(st.hydrate_parse_secs, 0.0, "v4 hydration must never touch the v2/v3 parser");
+    assert!(st.hydrate_view_secs > 0.0, "v4 hydration must be timed through the view phase");
+    assert!(st.hydrate_adopt_secs > 0.0, "factor adoption must be timed");
+    let st3 = fleet3.stats();
+    assert_eq!(st3.hydrate_view_secs, 0.0, "v3 hydration has no view phase");
+    assert!(st3.hydrate_parse_secs > 0.0, "v3 hydration must be timed through the parser");
+    assert_eq!(fleet4.eviction_log(), fleet3.eviction_log(), "eviction order must match");
+
+    // dirty write-back stays v4: observe, evict under pressure, check
+    // the stored version bytes, then rehydrate bit-identically against
+    // a control session that never left memory
+    let tm_a = make_artifact(ModelSpec::K1, &data, -9.0);
+    let tm_b = make_artifact(ModelSpec::K2, &data, -11.0);
+    let mut control =
+        ServeSession::from_tournament(&[tm_a, tm_b], &data, ExecutionContext::seq()).unwrap();
+    for &(t, y) in &[(25.5, 0.31), (26.25, -0.42)] {
+        fleet4.observe("a", t, y).unwrap();
+        control.observe(t, y).unwrap();
+    }
+    let _ = fleet4.predict("b", &t_star).unwrap(); // pressure: evicts dirty "a"
+    assert!(!fleet4.is_resident("a"));
+    assert_eq!(fleet4.stats().persisted, 1, "dirty v4 eviction must write back");
+    for blob in fleet4.store().get("a").unwrap().unwrap() {
+        assert_eq!(&blob[8..12], &4u32.to_le_bytes()[..], "write-back must stay format v4");
+    }
+    let probe: Vec<f64> = (0..10).map(|q| 0.7 + 2.6 * q as f64).collect();
+    let got = fleet4.predict("a", &probe).unwrap();
+    let want = control.predict(&probe);
+    assert_eq!(got.mean, want.mean, "v4 write-back must round-trip observations bit-identically");
+    assert_eq!(got.sd, want.sd);
+}

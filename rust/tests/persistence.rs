@@ -18,7 +18,9 @@
 use std::path::PathBuf;
 
 use gpfast::coordinator::artifact::crc32;
-use gpfast::coordinator::{ModelSpec, NestedReport, ServeSession, TrainResult, TrainedModel};
+use gpfast::coordinator::{
+    AlignedBlob, ArtifactView, ModelSpec, NestedReport, ServeSession, TrainResult, TrainedModel,
+};
 use gpfast::data::synthetic::table1_dataset;
 use gpfast::data::Dataset;
 use gpfast::evidence::LaplaceEvidence;
@@ -392,4 +394,372 @@ fn checksum_catches_payload_flip_that_version2_accepted() {
     assert_ne!(data2.y[5], data.y[5], "v2 had no defence against the flip");
     assert_eq!(data2.y[4], data.y[4], "only the flipped value differs");
     let _ = std::fs::remove_file(&path);
+}
+
+/// The committed fixture files (tools/make_golden_artifacts.py — an
+/// independent Python encoder, not this crate) pin the v2 and v3 wire
+/// formats across refactors: every future build must keep hydrating
+/// artifacts persisted by older builds, byte layout and all.
+#[test]
+fn committed_golden_fixtures_stay_readable() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data");
+    for version in [2u32, 3] {
+        let path = dir.join(format!("golden_v{version}.gpfast"));
+        let bytes = std::fs::read(&path)
+            .unwrap_or_else(|e| panic!("committed fixture {} missing: {e}", path.display()));
+        assert_eq!(
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
+            version,
+            "fixture file carries the wrong version field"
+        );
+        let (tm, data) = TrainedModel::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("golden v{version} fixture must hydrate: {e:#}"));
+        // dataset: t = 1..8, y = sin(0.7 t) + 0.05 t (the generator's
+        // recipe — t is exact, y within libm cross-language round-off)
+        assert_eq!(data.label, "golden-fixture");
+        assert_eq!(data.len(), 8);
+        assert_eq!(data.t, (1..=8).map(f64::from).collect::<Vec<_>>());
+        for (k, &y) in data.y.iter().enumerate() {
+            let want = (0.7 * data.t[k]).sin() + 0.05 * data.t[k];
+            assert!((y - want).abs() < 1e-12, "y[{k}] = {y} vs {want}");
+        }
+        // model block, exactly as the generator wrote it
+        assert_eq!(tm.spec.name(), "k1");
+        assert_eq!(tm.sigma_n, 0.1);
+        assert_eq!(tm.param_names, vec!["phi0", "phi1", "xi1"]);
+        assert_eq!(tm.train.theta_hat, vec![0.4, 1.3, 2.0]);
+        assert_eq!(tm.train.sigma_f_hat2, 1.25);
+        assert!(tm.train.converged);
+        assert_eq!(tm.train.n_evals, 42);
+        assert_eq!(tm.train.jitter, 0.0);
+        assert_eq!(tm.evidence.sigma, vec![0.1, 0.2, 0.3]);
+        assert!(tm.nested.is_none());
+        assert!(!tm.warm_started);
+        assert_eq!(tm.restarts, 3);
+        assert_eq!(tm.wall_secs, 0.125);
+        // the stored factor is live: a predictor builds and serves
+        // finite values straight off the fixture bytes
+        let p = tm.predictor(&data).expect("fixture predictor");
+        let pred = p.predict_batch(&[2.5, 6.75], &ExecutionContext::seq());
+        assert!(
+            pred.mean.iter().chain(pred.sd.iter()).all(|v| v.is_finite()),
+            "fixture predictions must be finite"
+        );
+    }
+    // the two fixtures encode the same artifact: v3 is the v2 body with
+    // the version field bumped plus the 4-byte CRC trailer
+    let v2 = std::fs::read(dir.join("golden_v2.gpfast")).unwrap();
+    let v3 = std::fs::read(dir.join("golden_v3.gpfast")).unwrap();
+    assert_eq!(v3.len(), v2.len() + 4, "v3 adds exactly the CRC32 trailer");
+    assert_eq!(&v3[12..v2.len()], &v2[12..], "fixture bodies must agree after the version field");
+}
+
+/// Format v4 round-trips bit-identically for every roster entrant and
+/// serves exactly the same bits as the v3 encoding of the same model;
+/// the zero-copy view borrows the payload in place on an 8-aligned
+/// buffer. A compressed encode at a tight tolerance is always safe: the
+/// encoder falls back to the packed layout when truncation would not
+/// shrink the artifact, and predictive means stay bit-identical either
+/// way because α/t/y/ϑ̂ are stored exactly.
+#[test]
+fn v4_round_trip_is_bit_identical_and_matches_v3() {
+    let data = table1_dataset(24, 0.1, 937);
+    let exec = ExecutionContext::seq();
+    let t_star: Vec<f64> = (0..20).map(|q| 0.3 + 1.17 * q as f64).collect();
+    let specs = [
+        ModelSpec::K1,
+        ModelSpec::K2,
+        ModelSpec::K3,
+        ModelSpec::WendlandSe,
+        ModelSpec::WendlandM32,
+        ModelSpec::WendlandM52,
+    ];
+    for (i, spec) in specs.into_iter().enumerate() {
+        let name = spec.name();
+        let tm = make_artifact(spec, &data, -10.0 - i as f64, i % 2 == 1);
+        let v3 = tm.to_bytes(&data).expect("encode v3");
+        let v4 = tm.to_bytes_v4(&data, None).expect("encode v4");
+        assert_eq!(u32::from_le_bytes(v4[8..12].try_into().unwrap()), 4, "{name}: version");
+
+        // the view parses without materialising the numeric payload and
+        // borrows every block in place off an 8-aligned buffer
+        let blob = AlignedBlob::from_slice(&v4);
+        let view = ArtifactView::parse(&blob).expect("v4 view");
+        assert!(view.zero_copy(), "{name}: aligned buffer must hydrate without copies");
+        assert!(!view.compressed(), "{name}: no compression was requested");
+        assert_eq!(view.n(), data.len());
+        assert_eq!(view.chol_dim(), data.len());
+        assert_eq!(view.spec().name(), name);
+        assert_eq!(view.t(), &data.t[..], "{name}: borrowed t block");
+        assert_eq!(view.y(), &data.y[..], "{name}: borrowed y block");
+        assert_eq!(view.alpha(), &tm.train.peak_eval.alpha[..], "{name}: borrowed α block");
+        assert_eq!(view.theta(), &tm.train.theta_hat[..]);
+        assert_eq!(view.logdet(), tm.train.peak_eval.chol.logdet());
+        view.validate_payload().expect("pristine payload must validate");
+
+        // both containers hydrate to the same model and serve the same bits
+        let (tm3, d3) = TrainedModel::from_bytes(&v3).expect("v3 load");
+        let (tm4, d4) = TrainedModel::from_bytes(&v4).expect("v4 load");
+        assert_eq!(d4.t, d3.t, "{name}");
+        assert_eq!(d4.y, d3.y);
+        assert_eq!(d4.label, d3.label);
+        assert_eq!(tm4.spec, tm3.spec);
+        assert_eq!(tm4.sigma_n, tm3.sigma_n);
+        assert_eq!(tm4.param_names, tm3.param_names);
+        assert_eq!(tm4.train.theta_hat, tm3.train.theta_hat);
+        assert_eq!(tm4.train.lnp_peak, tm3.train.lnp_peak);
+        assert_eq!(tm4.train.restart_values, tm3.train.restart_values);
+        assert_eq!(tm4.train.jitter, tm3.train.jitter);
+        assert_eq!(tm4.train.peak_eval.alpha, tm3.train.peak_eval.alpha);
+        assert_eq!(tm4.train.peak_eval.chol.logdet(), tm3.train.peak_eval.chol.logdet());
+        assert_eq!(tm4.evidence.ln_z, tm3.evidence.ln_z);
+        assert_eq!(tm4.nested.is_some(), tm3.nested.is_some());
+        let a = tm3.predictor(&d3).unwrap().predict_batch(&t_star, &exec);
+        let b = tm4.predictor(&d4).unwrap().predict_batch(&t_star, &exec);
+        assert_eq!(b.mean, a.mean, "{name}: v4 means must be bit-identical to v3");
+        assert_eq!(b.sd, a.sd, "{name}: v4 sds must be bit-identical to v3");
+
+        // compressed encode: never larger, means never perturbed, sds
+        // within the documented truncation tolerance (exact when the
+        // encoder falls back to the packed layout)
+        let comp = tm.to_bytes_v4(&data, Some(1e-6)).expect("encode compressed");
+        assert!(
+            comp.len() <= v4.len(),
+            "{name}: compression must never grow the artifact ({} vs {})",
+            comp.len(),
+            v4.len()
+        );
+        let (tmc, dc) = TrainedModel::from_bytes(&comp).expect("compressed load");
+        let c = tmc.predictor(&dc).unwrap().predict_batch(&t_star, &exec);
+        assert_eq!(c.mean, a.mean, "{name}: compressed means must stay bit-identical");
+        for (got, want) in c.sd.iter().zip(&a.sd) {
+            assert!(got.is_finite() && *got >= 0.0, "{name}: compressed sd {got}");
+            assert!(
+                (got - want).abs() <= 2e-2 * want.abs() + 1e-4,
+                "{name}: compressed sd outside tolerance: {got} vs {want}"
+            );
+        }
+    }
+}
+
+/// The v4 corruption matrix: truncated buffers, unrefreshed bit flips,
+/// unknown flags, rank/layout contract violations, nonzero alignment
+/// padding and CRC-refreshed payload poison all fail hydration with
+/// clean errors — never panics, never UB on the zero-copy path.
+#[test]
+fn v4_corruption_matrix_errors_cleanly() {
+    let data = table1_dataset(16, 0.1, 941);
+    let tm = make_artifact(ModelSpec::K1, &data, -8.0, true);
+    let good = tm.to_bytes_v4(&data, None).expect("encode v4");
+
+    // pristine bytes hydrate through the version-dispatching reader
+    let (tm0, d0) = TrainedModel::from_bytes(&good).expect("pristine v4");
+    assert_eq!(d0.t, data.t);
+    assert_eq!(tm0.train.peak_eval.alpha, tm.train.peak_eval.alpha);
+
+    // truncation at a spread of cuts: empty, mid-magic, mid-header,
+    // header-only, mid-meta, mid-block, one-short
+    for cut in [0usize, 5, 8, 12, 24, 40, 63, 64, 100, good.len() / 2, good.len() - 1] {
+        let err = TrainedModel::from_bytes(&good[..cut])
+            .expect_err(&format!("truncated at {cut} accepted"));
+        assert!(!format!("{err}").is_empty());
+    }
+
+    let n = data.len();
+    let meta_len = u64::from_le_bytes(good[48..56].try_into().unwrap()) as usize;
+    let blocks_off = u64::from_le_bytes(good[56..64].try_into().unwrap()) as usize;
+    assert_eq!(blocks_off % 8, 0, "layout contract: block section must be 8-aligned");
+    assert_eq!(
+        blocks_off,
+        (64 + meta_len + 7) / 8 * 8,
+        "layout contract: blocks_off is the 8-aligned meta end"
+    );
+    let alpha_off = blocks_off + 2 * n * 8; // t and y blocks precede α
+    let l00_off = alpha_off + n * 8; // packed factor follows α
+
+    // a single flipped payload bit with a stale trailer: the checksum
+    // alone does the rejecting, before any field is trusted
+    let mut bad = good.clone();
+    bad[alpha_off] ^= 0x01;
+    let err = TrainedModel::from_bytes(&bad).expect_err("unrefreshed flip");
+    assert!(format!("{err:#}").contains("CRC32"), "want checksum complaint, got: {err:#}");
+
+    // every patch below refreshes the trailer, so the targeted
+    // validation — not the checksum — must reject
+
+    // unknown flag bits
+    let mut bad = good.clone();
+    bad[13] = 0x80;
+    refresh_crc(&mut bad);
+    let err = TrainedModel::from_bytes(&bad).expect_err("unknown flags");
+    assert!(format!("{err:#}").contains("flag"), "unexpected: {err:#}");
+
+    // rank field set on an uncompressed artifact
+    let mut bad = good.clone();
+    bad[32..40].copy_from_slice(&3u64.to_le_bytes());
+    refresh_crc(&mut bad);
+    let err = TrainedModel::from_bytes(&bad).expect_err("rank without flag");
+    assert!(format!("{err:#}").contains("rank"), "unexpected: {err:#}");
+
+    // compressed-block rank out of range: 0, dim+1 and u64::MAX are all
+    // rejected by the rank/dim contract before any size arithmetic
+    for rank in [0u64, n as u64 + 1, u64::MAX] {
+        let mut bad = good.clone();
+        bad[12] |= 0x01; // set FLAG_COMPRESSED
+        bad[32..40].copy_from_slice(&rank.to_le_bytes());
+        refresh_crc(&mut bad);
+        let err =
+            TrainedModel::from_bytes(&bad).expect_err(&format!("compressed rank {rank} accepted"));
+        assert!(format!("{err:#}").contains("rank"), "rank {rank}: unexpected: {err:#}");
+    }
+
+    // blocks_off pointing away from the aligned meta end
+    let mut bad = good.clone();
+    bad[56..64].copy_from_slice(&((blocks_off + 8) as u64).to_le_bytes());
+    refresh_crc(&mut bad);
+    assert!(TrainedModel::from_bytes(&bad).is_err(), "skewed blocks_off accepted");
+
+    // trailing garbage beyond the declared layout, even with a valid trailer
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 8]);
+    refresh_crc(&mut bad);
+    assert!(TrainedModel::from_bytes(&bad).is_err(), "trailing bytes accepted");
+
+    // nonzero alignment padding between meta and blocks: sweep dataset
+    // label lengths until the meta stream leaves pad bytes (7 of 8
+    // consecutive lengths do), then dirty the last pad byte
+    let mut padded = None;
+    for extra in 0..8 {
+        let label = format!("pad{}", "x".repeat(extra));
+        let d = Dataset::new(data.t.clone(), data.y.clone(), label);
+        let b = make_artifact(ModelSpec::K1, &d, -8.0, true).to_bytes_v4(&d, None).unwrap();
+        let ml = u64::from_le_bytes(b[48..56].try_into().unwrap()) as usize;
+        if ml % 8 != 0 {
+            padded = Some(b);
+            break;
+        }
+    }
+    let mut bad = padded.expect("some label parity must leave alignment padding");
+    let bo = u64::from_le_bytes(bad[56..64].try_into().unwrap()) as usize;
+    bad[bo - 1] = 0xAA;
+    refresh_crc(&mut bad);
+    let err = TrainedModel::from_bytes(&bad).expect_err("nonzero padding");
+    assert!(format!("{err:#}").contains("padding"), "unexpected: {err:#}");
+
+    // CRC-refreshed payload poison: the validate layer, not the parser,
+    // must reject non-finite α and a non-positive factor diagonal
+    let mut bad = good.clone();
+    bad[alpha_off..alpha_off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+    refresh_crc(&mut bad);
+    let err = TrainedModel::from_bytes(&bad).expect_err("NaN α");
+    assert!(format!("{err:#}").contains("non-finite"), "unexpected: {err:#}");
+
+    let mut bad = good.clone();
+    bad[l00_off..l00_off + 8].copy_from_slice(&(-1.0f64).to_le_bytes());
+    refresh_crc(&mut bad);
+    let err = TrainedModel::from_bytes(&bad).expect_err("negative L[0][0]");
+    assert!(format!("{err:#}").contains("diagonal"), "unexpected: {err:#}");
+
+    // and the pristine bytes still hydrate — the patches above were the
+    // only problem
+    TrainedModel::from_bytes(&good).expect("pristine v4 must still hydrate");
+}
+
+/// Deterministic artifact at an explicit σ_n and ϑ (no prior mid-point):
+/// the spectral-engagement test below needs a smooth, long-range kernel
+/// whose spectrum genuinely collapses.
+fn make_artifact_at(
+    spec: ModelSpec,
+    data: &Dataset,
+    sigma_n: f64,
+    theta: Vec<f64>,
+    ln_z: f64,
+) -> TrainedModel {
+    let model = spec.build(sigma_n);
+    let m = model.dim();
+    let ev = profiled::eval(&model, &data.t, &data.y, &theta).expect("eval at theta");
+    TrainedModel {
+        spec,
+        sigma_n,
+        param_names: model.kernel.names(),
+        train: TrainResult {
+            theta_hat: theta,
+            lnp_peak: ev.lnp,
+            sigma_f_hat2: ev.sigma_f_hat2,
+            jitter: ev.jitter,
+            peak_eval: ev,
+            converged: true,
+            n_evals: 7,
+            n_modes: 1,
+            restart_values: vec![-1.0],
+        },
+        evidence: LaplaceEvidence {
+            ln_z,
+            ln_p_peak: ln_z,
+            ln_det_h: 0.0,
+            ln_volume: 0.0,
+            marg_const: 0.0,
+            sigma: vec![0.0; m],
+            covariance: Matrix::zeros(m, m),
+            suspect: false,
+        },
+        nested: None,
+        warm_started: false,
+        restarts: 0,
+        wall_secs: 0.0,
+    }
+}
+
+/// Drive the truncated-spectral block for real: a k1 model with a wide
+/// Wendland support (T₀ = e⁵ ≈ 148 ≫ span) and a smooth periodic factor
+/// has a collapsing spectrum, so a loose tolerance must engage
+/// compression, shrink the artifact, keep predictive means bit-identical
+/// (α is stored exactly) and reconstruct sds close to the uncompressed
+/// factor's.
+#[test]
+fn v4_spectral_compression_engages_and_round_trips() {
+    let data = table1_dataset(48, 0.1, 947);
+    let exec = ExecutionContext::seq();
+    // ϑ = [φ₀, φ₁, ξ₁]: T₀ = e⁵, T₁ = e^2.7726 ≈ 16, l ≈ 7.8 — smooth
+    // everywhere, no compact-support cutoff inside the span
+    let tm = make_artifact_at(ModelSpec::K1, &data, 1e-2, vec![5.0, 2.7726, 0.2], -9.0);
+    let t_star: Vec<f64> = (0..24).map(|q| 0.4 + 2.1 * q as f64).collect();
+    let want = tm.predictor(&data).expect("control predictor").predict_batch(&t_star, &exec);
+    let plain = tm.to_bytes_v4(&data, None).expect("encode packed");
+
+    let mut engaged = 0usize;
+    for tol in [1e-3, 1e-4] {
+        let comp = tm.to_bytes_v4(&data, Some(tol)).expect("encode compressed");
+        let blob = AlignedBlob::from_slice(&comp);
+        let view = ArtifactView::parse(&blob).expect("compressed view");
+        if !view.compressed() {
+            continue; // encoder fell back — counted below
+        }
+        engaged += 1;
+        assert!(
+            comp.len() < plain.len(),
+            "tol {tol}: engaged compression must shrink the artifact ({} vs {})",
+            comp.len(),
+            plain.len()
+        );
+        assert!(view.packed_factor().is_none(), "compressed artifacts carry no packed triangle");
+        view.validate_payload().expect("compressed payload must validate");
+
+        let (tmc, dc) = TrainedModel::from_bytes(&comp).expect("compressed hydrate");
+        let got = tmc.predictor(&dc).expect("hydrated predictor").predict_batch(&t_star, &exec);
+        assert_eq!(got.mean, want.mean, "tol {tol}: means must survive compression bit-identically");
+        let sd_max = want.sd.iter().cloned().fold(0.0, f64::max);
+        assert!(sd_max.is_finite() && sd_max > 0.0);
+        for (g, w) in got.sd.iter().zip(&want.sd) {
+            assert!(g.is_finite() && *g >= 0.0, "tol {tol}: compressed sd {g}");
+            assert!(
+                (g - w).abs() <= 0.25 * sd_max,
+                "tol {tol}: compressed sd outside tolerance: {g} vs {w}"
+            );
+        }
+    }
+    assert!(
+        engaged >= 1,
+        "spectral truncation must engage on a collapsed spectrum at loose tolerance"
+    );
 }

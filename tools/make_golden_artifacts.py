@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Regenerate the committed golden artifact fixtures.
+
+Writes rust/tests/data/golden_v2.gpfast and golden_v3.gpfast: tiny,
+fully deterministic k1 artifacts in the version-2 (trailer-less) and
+version-3 (CRC32-trailed) field-stream formats, encoded by this script
+rather than by the crate so the *format* is pinned independently of the
+Rust encoder. rust/tests/persistence.rs loads them and asserts a
+bit-exact hydrate; if this script and the decoder ever disagree, that
+test fails.
+
+Pure stdlib; zlib.crc32 is the same IEEE polynomial as the crate's
+hand-rolled crc32.
+"""
+import math
+import struct
+import zlib
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "tests" / "data"
+
+N = 8
+T = [float(i + 1) for i in range(N)]
+Y = [math.sin(0.7 * t) + 0.05 * t for t in T]
+SIGMA_N = 0.1
+THETA = [0.4, 1.3, 2.0]            # k1: phi0, phi1, xi1
+PARAMS = ["phi0", "phi1", "xi1"]
+
+
+def spd_kernel():
+    k = [[math.exp(-0.5 * (T[i] - T[j]) ** 2 / 4.0) for j in range(N)] for i in range(N)]
+    for i in range(N):
+        k[i][i] += SIGMA_N * SIGMA_N + 0.1
+    return k
+
+
+def cholesky(k):
+    l = [[0.0] * N for _ in range(N)]
+    for i in range(N):
+        for j in range(i + 1):
+            s = k[i][j] - sum(l[i][p] * l[j][p] for p in range(j))
+            l[i][j] = math.sqrt(s) if i == j else s / l[j][j]
+    return l
+
+
+def solve_chol(l, b):
+    z = [0.0] * N
+    for i in range(N):
+        z[i] = (b[i] - sum(l[i][j] * z[j] for j in range(i))) / l[i][i]
+    x = [0.0] * N
+    for i in reversed(range(N)):
+        x[i] = (z[i] - sum(l[j][i] * x[j] for j in range(i + 1, N))) / l[i][i]
+    return x
+
+
+class W:
+    def __init__(self):
+        self.buf = bytearray()
+
+    def u8(self, v): self.buf += struct.pack("<B", v)
+    def u32(self, v): self.buf += struct.pack("<I", v)
+    def u64(self, v): self.buf += struct.pack("<Q", v)
+    def f64(self, v): self.buf += struct.pack("<d", v)
+
+    def s(self, text):
+        raw = text.encode()
+        self.u32(len(raw))
+        self.buf += raw
+
+    def f64s(self, xs):
+        for x in xs:
+            self.f64(x)
+
+    def vec(self, xs):
+        self.u64(len(xs))
+        self.f64s(xs)
+
+    def matrix(self, rows):
+        self.u64(len(rows))
+        self.u64(len(rows[0]) if rows else 0)
+        for r in rows:
+            self.f64s(r)
+
+
+def encode(version):
+    k = spd_kernel()
+    l = cholesky(k)
+    alpha = solve_chol(l, Y)
+    logdet = 2.0 * sum(math.log(l[i][i]) for i in range(N))
+    lnp = -0.5 * N * math.log(2.0 * math.pi) - 0.5 * logdet \
+        - 0.5 * sum(a * y for a, y in zip(alpha, Y))
+    w = W()
+    w.buf += b"GPFASTMD"
+    w.u32(version)
+    # dataset
+    w.s("golden-fixture")
+    w.u64(N)
+    w.f64s(T)
+    w.f64s(Y)
+    # spec
+    w.s("k1")
+    w.f64(SIGMA_N)
+    w.u32(len(PARAMS))
+    for p in PARAMS:
+        w.s(p)
+    # train result
+    w.vec(THETA)
+    w.f64(lnp)                     # lnp_peak
+    w.f64(1.25)                    # sigma_f_hat2
+    w.u8(1)                        # converged
+    w.u64(42)                      # n_evals
+    w.u64(1)                       # n_modes
+    w.vec([lnp, lnp - 0.5])        # restart_values
+    w.f64(0.0)                     # jitter
+    # peak evaluation
+    w.f64(lnp)
+    w.f64(1.25)
+    w.vec(alpha)
+    w.u64(N)
+    w.f64(logdet)
+    for i in range(N):
+        w.f64s(l[i][: i + 1])
+    # evidence
+    w.f64(lnp - 3.0)               # ln_z
+    w.f64(lnp)                     # ln_p_peak
+    w.f64(1.5)                     # ln_det_h
+    w.f64(-2.0)                    # ln_volume
+    w.f64(0.25)                    # marg_const
+    w.vec([0.1, 0.2, 0.3])         # sigma
+    w.matrix([[1.0 if i == j else 0.0 for j in range(3)] for i in range(3)])
+    w.u8(0)                        # suspect
+    # nested flag, warm_started, restarts, wall_secs
+    w.u8(0)
+    w.u8(0)
+    w.u64(3)
+    w.f64(0.125)
+    if version == 3:
+        w.u32(zlib.crc32(bytes(w.buf)) & 0xFFFFFFFF)
+    return bytes(w.buf)
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    for version in (2, 3):
+        path = OUT / f"golden_v{version}.gpfast"
+        blob = encode(version)
+        path.write_bytes(blob)
+        print(f"wrote {path} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

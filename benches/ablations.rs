@@ -39,7 +39,7 @@ fn ablation_profiling() {
     println!("== ablation 1: σ_f profiled out (eq. 2.16) vs explicit (eq. 2.5) ==\n");
     let data = table1_dataset(100, 0.1, 20160125);
     let model = paper_k1(0.1);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
     let cg = CgOptions::default();
     let mut table = Table::new(vec!["objective", "dim", "evals", "peak lnP"]);
     // profiled: 3 parameters
@@ -95,7 +95,7 @@ fn ablation_gradient() {
     println!("== ablation 2: CG + analytic gradient vs Nelder–Mead ==\n");
     let data = table1_dataset(100, 0.1, 20160125);
     let model = paper_k1(0.1);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
     let mut rng = Xoshiro256::seed_from_u64(6);
     let start = prior.sample(&mut rng);
     let value = |th: &[f64]| {

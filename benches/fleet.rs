@@ -49,7 +49,7 @@ use gpfast::util::{timer::human_time, Json, Stopwatch, Table};
 fn make_artifact(spec: ModelSpec, data: &Dataset) -> TrainedModel {
     let sigma_n = 0.1;
     let model = spec.build(sigma_n);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
     let mut theta: Vec<f64> = prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
     prior.project(&mut theta);
     let ev = profiled::eval(&model, &data.t, &data.y, &theta).expect("mid-prior eval");

@@ -1,0 +1,173 @@
+//! Bench: the scenario tier — ARD multi-dimensional inputs and
+//! heteroscedastic per-point noise.
+//!
+//! Appends a `scenario` section to **`BENCH_perf.json`** (merging with
+//! the sections other benches wrote). Row schema:
+//!
+//! * `d_sweep`: `{d, n, threads, assemble_seconds, eval_seconds,
+//!   train_seconds, lnp, n_evals}` — wall-clock of the n×d covariance
+//!   assembly, one profiled `eval_nd_with`, and a full multistart train
+//!   of `se-ard<d>` on a heteroscedastic dataset whose first d columns
+//!   come from the synthetic ARD truth. The d = 1 row is the scalar
+//!   baseline the nd layout must not regress.
+//! * `ard_gap`: `{n, threads, ln_z_iso, ln_z_ard, ln_b, winner,
+//!   tournament_seconds}` — the evidence gap between the isotropic-in-d
+//!   parent and its warm-started SE-ARD child on ARD-generated d = 3
+//!   data: the scenario tier's headline accuracy claim.
+//!
+//! `cargo bench --bench scenario`; set `GPFAST_BENCH_QUICK=1` for the
+//! ci.sh smoke run (smaller n, fewer restarts, d ∈ {1, 3}).
+
+use gpfast::coordinator::{train_model, ModelSpec, PipelineConfig, Tournament, TrainOptions};
+use gpfast::data::synthetic::ard3_dataset;
+use gpfast::data::Dataset;
+use gpfast::gp::{assemble_cov_nd_with, profiled};
+use gpfast::priors::BoxPrior;
+use gpfast::rng::Xoshiro256;
+use gpfast::runtime::ExecutionContext;
+use gpfast::util::{timer::human_time, Json, Stopwatch, Table};
+
+/// First-d-columns slice of the synthetic d = 3 ARD dataset, keeping the
+/// heteroscedastic noise schedule: the d-sweep measures the input-layout
+/// cost, so every row shares the same grid, targets and noise.
+fn ard_dataset_d(n: usize, d: usize, seed: u64) -> Dataset {
+    let base = ard3_dataset(n, 0.1, true, seed);
+    if d == 3 {
+        return base;
+    }
+    let mut data = Dataset::new(base.t.clone(), base.y.clone(), format!("ard-d{d}"));
+    if d > 1 {
+        data = data.with_extra_cols(base.extra[..d - 1].to_vec()).expect("extra cols");
+    }
+    data.with_noise(base.noise.clone().expect("hetero base")).expect("noise")
+}
+
+fn main() {
+    let ctx = ExecutionContext::from_env();
+    let threads = ctx.threads();
+    let quick = std::env::var("GPFAST_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    println!("(thread budget: {threads}{})\n", if quick { ", quick mode" } else { "" });
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- d-sweep: assembly + eval + train wall-clock over input dims
+    let n = if quick { 48 } else { 128 };
+    let dims: &[usize] = if quick { &[1, 3] } else { &[1, 2, 3] };
+    let restarts = if quick { 2 } else { 4 };
+    println!("== d-sweep: n×d assembly + profiled eval + se-ard<d> train (n = {n}) ==");
+    let mut table =
+        Table::new(vec!["d", "assemble", "eval", "train", "lnp", "evals"]);
+    for &d in dims {
+        let data = ard_dataset_d(n, d, 11);
+        assert_eq!(data.d(), d);
+        let spec = ModelSpec::SeArd(d as u8);
+        let model = spec.build(0.1);
+        let prior = BoxPrior::for_model(&model, &data.span().expect("span"));
+        let theta0: Vec<f64> =
+            prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+        let cols = data.input_cols();
+        let noise = data.noise.as_deref();
+
+        let reps = if quick { 8 } else { 20 };
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let k = assemble_cov_nd_with(&model, &cols, noise, &theta0, &ctx);
+            assert!(k[(0, 0)].is_finite());
+        }
+        let assemble_seconds = sw.elapsed_secs() / reps as f64;
+
+        let sw = Stopwatch::start();
+        let ev = profiled::eval_nd_with(&model, &cols, noise, &data.y, &theta0, &ctx)
+            .expect("profiled eval");
+        let eval_seconds = sw.elapsed_secs();
+        assert!(ev.lnp.is_finite(), "d = {d}: non-finite lnp");
+
+        let mut opts = TrainOptions::default();
+        opts.multistart.restarts = restarts;
+        let mut rng = Xoshiro256::seed_from_u64(29 + d as u64);
+        let sw = Stopwatch::start();
+        let trained =
+            train_model(&spec, 0.1, &data, &opts, 2, &ctx, &mut rng).expect("train");
+        let train_seconds = sw.elapsed_secs();
+        assert!(trained.lnp_peak.is_finite(), "d = {d}: non-finite peak");
+
+        table.add_row(vec![
+            format!("{d}"),
+            human_time(assemble_seconds),
+            human_time(eval_seconds),
+            human_time(train_seconds),
+            format!("{:.2}", trained.lnp_peak),
+            format!("{}", trained.n_evals),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", "d_sweep".into()),
+            ("d", d.into()),
+            ("n", n.into()),
+            ("threads", threads.into()),
+            ("assemble_seconds", assemble_seconds.into()),
+            ("eval_seconds", eval_seconds.into()),
+            ("train_seconds", train_seconds.into()),
+            ("lnp", trained.lnp_peak.into()),
+            ("n_evals", trained.n_evals.into()),
+        ]));
+    }
+    print!("{}", table.render());
+
+    // --- ARD vs isotropic evidence gap on ARD-generated data
+    let gap_n = if quick { 40 } else { 96 };
+    println!("\n== ARD-vs-isotropic evidence gap on ARD-truth data (n = {gap_n}, d = 3) ==");
+    let data = ard3_dataset(gap_n, 0.1, true, 13);
+    let mut cfg = PipelineConfig::fast();
+    cfg.models = vec![ModelSpec::SeIso(3), ModelSpec::SeArd(3)];
+    cfg.sigma_n = 0.1;
+    cfg.train.multistart.restarts = restarts;
+    cfg.exec = ctx.clone();
+    let mut rng = Xoshiro256::seed_from_u64(37);
+    let sw = Stopwatch::start();
+    let result = Tournament::new(cfg).run(&data, &mut rng).expect("tournament");
+    let tournament_seconds = sw.elapsed_secs();
+    let iso = result.model("se-iso3").expect("iso entrant");
+    let ard = result.model("se-ard3").expect("ard entrant");
+    let ln_b = ard.evidence.ln_z - iso.evidence.ln_z;
+    assert!(
+        iso.evidence.ln_z.is_finite() && ard.evidence.ln_z.is_finite(),
+        "non-finite evidence in the gap tournament"
+    );
+    assert!(ard.warm_started, "se-ard3 must warm-start from the isotropic parent");
+    println!(
+        "ln Z(se-ard3) = {:.2}, ln Z(se-iso3) = {:.2}, ln B = {:.2}, winner = {} ({})",
+        ard.evidence.ln_z,
+        iso.evidence.ln_z,
+        ln_b,
+        result.winner().name(),
+        human_time(tournament_seconds)
+    );
+    rows.push(Json::obj(vec![
+        ("kind", "ard_gap".into()),
+        ("n", gap_n.into()),
+        ("threads", threads.into()),
+        ("ln_z_iso", iso.evidence.ln_z.into()),
+        ("ln_z_ard", ard.evidence.ln_z.into()),
+        ("ln_b", ln_b.into()),
+        ("winner", result.winner().name().into()),
+        ("tournament_seconds", tournament_seconds.into()),
+    ]));
+
+    // merge the scenario section into BENCH_perf.json (keep other sections)
+    let path = "BENCH_perf.json";
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    let mut sections = doc
+        .get("sections")
+        .and_then(|s| s.as_obj().cloned())
+        .unwrap_or_default();
+    sections.insert("scenario".to_string(), Json::Arr(rows));
+    doc.insert("sections".to_string(), Json::Obj(sections));
+    doc.insert("threads_available".to_string(), threads.into());
+    match std::fs::write(path, Json::Obj(doc).pretty()) {
+        Ok(()) => println!("\nscenario section merged into {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

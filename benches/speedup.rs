@@ -32,7 +32,7 @@ fn main() {
         let data = table1_dataset(n, 0.1, 20160125);
         for spec in [ModelSpec::K1, ModelSpec::K2] {
             let model = spec.build(0.1);
-            let prior = BoxPrior::for_model(&model, &data.span());
+            let prior = BoxPrior::for_model(&model, &data.span().unwrap());
             let scale = ScalePrior::default();
             let mut rng = Xoshiro256::seed_from_u64(n as u64 + 1);
             let mut opts = TrainOptions::default();

@@ -71,7 +71,7 @@ fn main() {
                 cold_evals = res.n_evals;
             }
             let model = spec.build(cfg.sigma_n);
-            let prior = BoxPrior::for_model(&model, &data.span());
+            let prior = BoxPrior::for_model(&model, &data.span().unwrap());
             let hess = gpfast::gp::profiled_hessian_with(
                 &model,
                 &data.t,

@@ -66,6 +66,14 @@ echo "== multi-tenant fleet workload (quick mode, both thread settings) =="
 # ways (the second run's rows are the ones that land in BENCH_perf.json).
 GPFAST_THREADS=1 GPFAST_BENCH_QUICK=1 cargo bench --bench fleet
 GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" GPFAST_BENCH_QUICK=1 cargo bench --bench fleet
+
+echo "== scenario tier: ARD d-sweep + heteroscedastic evidence gap (quick mode, both thread settings) =="
+# The scenario tier's bench: n×d assembly/eval/train wall over input
+# dims, and the ARD-vs-isotropic ln Z gap on ARD-generated data (the
+# bench asserts warm-start lineage and finite evidence in-process; the
+# JSON gate below checks the section landed with sane numbers).
+GPFAST_THREADS=1 GPFAST_BENCH_QUICK=1 cargo bench --bench scenario
+GPFAST_THREADS="$(nproc 2>/dev/null || echo 4)" GPFAST_BENCH_QUICK=1 cargo bench --bench scenario
 if command -v python3 >/dev/null 2>&1; then
     python3 - <<'EOF'
 import json, sys
@@ -139,7 +147,28 @@ for r in rows:
     ratio = r.get("compression_ratio")
     if not isinstance(ratio, (int, float)) or not math.isfinite(ratio) or not 0 < ratio <= 1:
         sys.exit(f"FAIL: fleet/artifact_format compression_ratio out of (0, 1]: {ratio!r}")
-print("BENCH_perf.json gemm/syrk/tournament/serve/robustness/approx/fleet sections populated")
+rows = doc.get("sections", {}).get("scenario", [])
+kinds = {r.get("kind") for r in rows}
+for want in ("d_sweep", "ard_gap"):
+    if want not in kinds:
+        sys.exit(f"FAIL: BENCH_perf.json scenario section is missing {want!r} rows")
+sweep = [r for r in rows if r.get("kind") == "d_sweep"]
+if {r.get("d") for r in sweep} < {1, 3}:
+    sys.exit("FAIL: scenario/d_sweep must cover d = 1 and d = 3")
+for r in sweep:
+    for f in ("assemble_seconds", "eval_seconds", "train_seconds"):
+        v = r.get(f)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            sys.exit(f"FAIL: scenario/d_sweep field {f!r} not finite/positive: {v!r}")
+    if not math.isfinite(r.get("lnp", math.nan)):
+        sys.exit("FAIL: scenario/d_sweep lnp not finite")
+for r in rows:
+    if r.get("kind") != "ard_gap":
+        continue
+    for f in ("ln_z_iso", "ln_z_ard", "ln_b"):
+        if not math.isfinite(r.get(f, math.nan)):
+            sys.exit(f"FAIL: scenario/ard_gap field {f!r} not finite")
+print("BENCH_perf.json gemm/syrk/tournament/serve/robustness/approx/fleet/scenario sections populated")
 EOF
 else
     # fallback: naive_gflops only appears in gemm/syrk rows (2 rows each
@@ -172,6 +201,10 @@ else
         || { echo "FAIL: BENCH_perf.json fleet hydrate_split view rows not populated"; exit 1; }
     [ "$(grep -c '"compression_ratio"' BENCH_perf.json)" -ge 1 ] \
         || { echo "FAIL: BENCH_perf.json fleet artifact_format rows not populated"; exit 1; }
+    [ "$(grep -c '"assemble_seconds"' BENCH_perf.json)" -ge 2 ] \
+        || { echo "FAIL: BENCH_perf.json scenario d_sweep rows not populated"; exit 1; }
+    [ "$(grep -c '"ln_z_ard"' BENCH_perf.json)" -ge 1 ] \
+        || { echo "FAIL: BENCH_perf.json scenario ard_gap row not populated"; exit 1; }
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

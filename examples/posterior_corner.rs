@@ -30,7 +30,7 @@ fn main() -> gpfast::Result<()> {
     let data = table1_dataset(n, 0.1, 20160125);
     let spec = ModelSpec::K2;
     let model = spec.build(0.1);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
     let scale = ScalePrior::default();
 
     // 1. fast path: train + Hessian + Laplace

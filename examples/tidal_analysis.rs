@@ -37,7 +37,7 @@ fn train_large_warm(
 ) -> gpfast::Result<ModelReport> {
     let sw = Stopwatch::start();
     let model = spec.build(TIDAL_SIGMA_N);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
     let mut opts = gpfast::coordinator::TrainOptions::default();
     opts.multistart.restarts = 1;
     opts.extra_starts = vec![warm.to_vec()];

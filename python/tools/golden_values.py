@@ -212,3 +212,44 @@ show("x[31]  ", x[31])
 show("x[63]  ", x[63])
 show("ytKinvy", mp.fsum(yi * xi for yi, xi in zip(y, x)))
 show("logdet ", 2 * mp.fsum(mp.log(l[i, i]) for i in range(64)))
+
+# --- case 6: heteroscedastic SE-ARD profiled likelihood (d=3, n=16).
+# Pins the scenario tier's n x d assembly + per-point-noise diagonal:
+#   K~_ij = exp(-1/2 sum_a e^{-2 phi_a} dx_a^2) + sigma_i^2 delta_ij
+# with deterministic integer-derived input columns (exact in f64) and a
+# cycling 4-level noise schedule. Mirrors rust's
+# gp::profiled::eval_nd_with on a configuration no fast path can reach.
+
+
+def se_ard(dx, th):
+    r2 = mp.fsum(mp.e ** (-2 * p) * d * d for p, d in zip(th, dx))
+    return mp.e ** (-r2 / 2)
+
+
+n = 16
+x1 = [mp.mpf(i) for i in range(1, n + 1)]
+x2 = [mp.mpf((7 * i) % 16) / 2 for i in range(1, n + 1)]
+x3 = [mp.mpf((3 * i) % 5) / 4 for i in range(1, n + 1)]
+y = [
+    mp.sin(mp.mpf("0.6") * a) + mp.mpf("0.3") * mp.cos(mp.mpf("1.7") * b)
+    - mp.mpf("0.2") * c
+    for a, b, c in zip(x1, x2, x3)
+]
+sig = [mp.mpf("0.05") * (1 + (i % 4)) for i in range(1, n + 1)]
+th6 = [mp.mpf("0.5"), mp.mpf(0), mp.mpf("-0.3")]
+a = mp.zeros(n, n)
+for i in range(n):
+    for j in range(n):
+        a[i, j] = se_ard(
+            (x1[i] - x1[j], x2[i] - x2[j], x3[i] - x3[j]), th6
+        )
+    a[i, i] += sig[i] ** 2
+l = chol(a)
+logdet = 2 * mp.fsum(mp.log(l[i, i]) for i in range(n))
+alpha = solve_chol(l, y)
+s2 = mp.fsum(yi * ai for yi, ai in zip(y, alpha)) / n
+lnp = -mp.mpf(n) / 2 * (mp.log(2 * mp.pi * mp.e) + mp.log(s2)) - logdet / 2
+print("\n== case 6: heteroscedastic SE-ARD (d=3, n=16, theta=[0.5,0,-0.3]) ==")
+show("lnp   ", lnp)
+show("s2    ", s2)
+show("logdet", logdet)

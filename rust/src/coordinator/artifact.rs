@@ -335,6 +335,23 @@ fn encode(tm: &TrainedModel, data: &Dataset) -> Vec<u8> {
     w.u8(tm.warm_started as u8);
     w.u64(tm.restarts as u64);
     w.f64(tm.wall_secs);
+    // optional scenario-tier input block (extra input columns beyond t,
+    // per-point noise). Written ONLY for nd/heteroscedastic datasets, so
+    // 1-D homoscedastic artifacts stay byte-identical with prior builds
+    // (the golden persistence fixtures pin this).
+    if data.d() > 1 || data.noise.is_some() {
+        w.u64(data.extra.len() as u64);
+        for c in &data.extra {
+            w.f64s_raw(c);
+        }
+        match &data.noise {
+            None => w.u8(0),
+            Some(s) => {
+                w.u8(1);
+                w.f64s_raw(s);
+            }
+        }
+    }
     // version-3 trailer: checksum of every byte written so far
     let crc = crc32(&w.buf);
     w.u32(crc);
@@ -513,6 +530,46 @@ fn decode(bytes: &[u8]) -> crate::Result<(TrainedModel, Dataset)> {
     let warm_started = r.u8()? != 0;
     let restarts = r.u64()? as usize;
     let wall_secs = r.f64()?;
+    // optional scenario-tier input block: absent on 1-D homoscedastic
+    // artifacts (including every file an older build wrote), present —
+    // guarded by remaining() — when the dataset carried extra input
+    // columns and/or a per-point noise vector
+    let data = if r.remaining() > 0 {
+        let d_extra = r.len(8)?;
+        anyhow::ensure!(
+            d_extra < crate::gp::MAX_INPUT_DIM,
+            "corrupt artifact: implausible extra-column count {d_extra}"
+        );
+        let mut extra = Vec::with_capacity(d_extra);
+        for _ in 0..d_extra {
+            extra.push(r.f64s_raw(n)?);
+        }
+        let mut d = if extra.is_empty() {
+            data
+        } else {
+            data.with_extra_cols(extra)
+                .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?
+        };
+        match r.u8()? {
+            0 => {}
+            1 => {
+                let s = r.f64s_raw(n)?;
+                d = d
+                    .with_noise(s)
+                    .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?;
+            }
+            other => anyhow::bail!("corrupt artifact: noise flag byte {other}"),
+        }
+        d
+    } else {
+        data
+    };
+    anyhow::ensure!(
+        spec.input_dim() == data.d(),
+        "corrupt artifact: {spec_name} expects d = {} inputs, file carries d = {}",
+        spec.input_dim(),
+        data.d()
+    );
     r.done()?;
     let tm = TrainedModel {
         spec,

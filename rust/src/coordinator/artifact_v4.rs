@@ -163,11 +163,17 @@ struct MetaV4 {
     warm_started: bool,
     restarts: usize,
     wall_secs: f64,
+    /// Scenario-tier input block: extra input columns beyond `t` (empty
+    /// for 1-D) and the optional per-point noise vector. Lives in the
+    /// meta stream — only the four large canonical blocks (`t`, `y`, `α`,
+    /// factor) are zero-copy.
+    extra: Vec<Vec<f64>>,
+    noise: Option<Vec<f64>>,
 }
 
-fn encode_meta(tm: &TrainedModel, label: &str) -> Vec<u8> {
+fn encode_meta(tm: &TrainedModel, data: &Dataset) -> Vec<u8> {
     let mut w = Writer::new();
-    w.str(label);
+    w.str(&data.label);
     w.str(tm.spec.name());
     w.f64(tm.sigma_n);
     w.u32(tm.param_names.len() as u32);
@@ -207,6 +213,22 @@ fn encode_meta(tm: &TrainedModel, label: &str) -> Vec<u8> {
     w.u8(tm.warm_started as u8);
     w.u64(tm.restarts as u64);
     w.f64(tm.wall_secs);
+    // optional scenario-tier input block — written only for
+    // nd/heteroscedastic datasets, keeping 1-D homoscedastic v4 bytes
+    // identical with prior builds (pinned by the golden fixtures)
+    if data.d() > 1 || data.noise.is_some() {
+        w.u64(data.extra.len() as u64);
+        for c in &data.extra {
+            w.vec(c);
+        }
+        match &data.noise {
+            None => w.u8(0),
+            Some(s) => {
+                w.u8(1);
+                w.vec(s);
+            }
+        }
+    }
     w.buf
 }
 
@@ -276,6 +298,27 @@ fn decode_meta(bytes: &[u8]) -> crate::Result<MetaV4> {
     let warm_started = r.u8()? != 0;
     let restarts = r.u64()? as usize;
     let wall_secs = r.f64()?;
+    // optional scenario-tier input block (absent on 1-D homoscedastic
+    // artifacts, including every file an older build wrote)
+    let (extra, noise) = if r.remaining() > 0 {
+        let d_extra = r.len(8)?;
+        anyhow::ensure!(
+            d_extra < crate::gp::MAX_INPUT_DIM,
+            "corrupt artifact: implausible extra-column count {d_extra}"
+        );
+        let mut extra = Vec::with_capacity(d_extra);
+        for _ in 0..d_extra {
+            extra.push(r.vec()?);
+        }
+        let noise = match r.u8()? {
+            0 => None,
+            1 => Some(r.vec()?),
+            other => anyhow::bail!("corrupt artifact: noise flag byte {other}"),
+        };
+        (extra, noise)
+    } else {
+        (Vec::new(), None)
+    };
     r.done()
         .map_err(|_| anyhow::anyhow!("corrupt artifact: trailing bytes in the meta section"))?;
     Ok(MetaV4 {
@@ -298,6 +341,8 @@ fn decode_meta(bytes: &[u8]) -> crate::Result<MetaV4> {
         warm_started,
         restarts,
         wall_secs,
+        extra,
+        noise,
     })
 }
 
@@ -349,7 +394,7 @@ pub fn encode_v4(
             }
         }
     };
-    let meta = encode_meta(tm, &data.label);
+    let meta = encode_meta(tm, data);
     let meta_len = meta.len();
     let blocks_off = align8(HEADER_LEN + meta_len);
     let rank = spectral.as_ref().map_or(0, SpectralTrunc::rank);
@@ -533,6 +578,18 @@ impl<'a> ArtifactView<'a> {
             meta.spec.factor_dim(n),
             meta.spec.name()
         );
+        anyhow::ensure!(
+            meta.spec.input_dim() == 1 + meta.extra.len(),
+            "corrupt artifact: {} expects d = {} inputs, file carries d = {}",
+            meta.spec.name(),
+            meta.spec.input_dim(),
+            1 + meta.extra.len()
+        );
+        anyhow::ensure!(
+            meta.extra.iter().all(|c| c.len() == n)
+                && meta.noise.as_ref().map_or(true, |s| s.len() == n),
+            "corrupt artifact: input-block column length does not match n = {n}"
+        );
         let mut off = blocks_off;
         let mut block = |count: usize| {
             let s = view_f64s(&bytes[off..off + count * 8], count);
@@ -610,6 +667,21 @@ impl<'a> ArtifactView<'a> {
         &self.alpha
     }
 
+    /// Input dimension d of the stored dataset (1 + extra columns).
+    pub fn d(&self) -> usize {
+        1 + self.meta.extra.len()
+    }
+
+    /// Extra input columns beyond `t` (empty for 1-D artifacts).
+    pub fn extra_cols(&self) -> &[Vec<f64>] {
+        &self.meta.extra
+    }
+
+    /// Per-point noise vector (`None` ⇒ homoscedastic).
+    pub fn noise(&self) -> Option<&[f64]> {
+        self.meta.noise.as_deref()
+    }
+
     /// The packed lower triangle, when the factor is uncompressed.
     pub fn packed_factor(&self) -> Option<&[f64]> {
         match &self.factor {
@@ -647,6 +719,17 @@ impl<'a> ArtifactView<'a> {
         anyhow::ensure!(
             self.alpha.iter().all(|v| v.is_finite()),
             "corrupt artifact: non-finite α entry"
+        );
+        anyhow::ensure!(
+            self.meta.extra.iter().all(|c| c.iter().all(|v| v.is_finite())),
+            "corrupt artifact: non-finite extra-column entry"
+        );
+        anyhow::ensure!(
+            self.meta
+                .noise
+                .as_ref()
+                .map_or(true, |s| s.iter().all(|v| v.is_finite() && *v >= 0.0)),
+            "corrupt artifact: per-point noise not finite/nonnegative"
         );
         match &self.factor {
             FactorBlock::Packed(p) => {
@@ -714,8 +797,18 @@ impl<'a> ArtifactView<'a> {
     pub fn adopt(&self) -> crate::Result<(TrainedModel, Dataset)> {
         self.validate_payload()?;
         let m = &self.meta;
-        let data = Dataset::checked(self.t.to_vec(), self.y.to_vec(), m.label.clone())
+        let mut data = Dataset::checked(self.t.to_vec(), self.y.to_vec(), m.label.clone())
             .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?;
+        if !m.extra.is_empty() {
+            data = data
+                .with_extra_cols(m.extra.clone())
+                .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?;
+        }
+        if let Some(s) = &m.noise {
+            data = data
+                .with_noise(s.clone())
+                .map_err(|e| anyhow::anyhow!("corrupt artifact: {e}"))?;
+        }
         let chol = self.rebuild_chol()?;
         let peak_eval = ProfiledEval {
             lnp: m.peak_lnp,

@@ -11,9 +11,28 @@
 //! ([`Roster::generations`]).
 
 use crate::kernels::{
-    paper_k1, paper_k2, CovarianceModel, Matern32, Matern52, Periodic, ProductKernel,
+    paper_k1, paper_k2, ArdKernel, CovarianceModel, Matern32, Matern52, Periodic, ProductKernel,
     SquaredExponential, Wendland,
 };
+
+/// Static name tables for the ARD specs (one entry per input dimension
+/// 1..=8) — [`ModelSpec::name`] returns `&'static str`, which the
+/// factor-health plumbing stores, so the names cannot be formatted on
+/// the fly.
+const SE_ISO_NAMES: [&str; 8] = [
+    "se-iso1", "se-iso2", "se-iso3", "se-iso4", "se-iso5", "se-iso6", "se-iso7", "se-iso8",
+];
+const SE_ARD_NAMES: [&str; 8] = [
+    "se-ard1", "se-ard2", "se-ard3", "se-ard4", "se-ard5", "se-ard6", "se-ard7", "se-ard8",
+];
+const M32_ARD_NAMES: [&str; 8] = [
+    "m32-ard1", "m32-ard2", "m32-ard3", "m32-ard4", "m32-ard5", "m32-ard6", "m32-ard7",
+    "m32-ard8",
+];
+const M52_ARD_NAMES: [&str; 8] = [
+    "m52-ard1", "m52-ard2", "m52-ard3", "m52-ard4", "m52-ard5", "m52-ard6", "m52-ard7",
+    "m52-ard8",
+];
 
 /// A buildable model description.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -39,6 +58,16 @@ pub enum ModelSpec {
     /// ([`crate::gp::approx`]): `Θ(√n)` inducing points on a uniform
     /// grid, Woodbury-form profiled likelihood.
     FitcK2,
+    /// Isotropic-in-d squared exponential on d input columns (one shared
+    /// length scale) — the cold-start root of the ARD lineage and the
+    /// ARD-vs-isotropic lnZ-gap baseline of the scenario bench.
+    SeIso(u8),
+    /// Squared exponential with per-dimension (ARD) length scales.
+    SeArd(u8),
+    /// Matérn-3/2 with ARD length scales.
+    M32Ard(u8),
+    /// Matérn-5/2 with ARD length scales.
+    M52Ard(u8),
 }
 
 impl ModelSpec {
@@ -53,11 +82,35 @@ impl ModelSpec {
             "wendland-m52" => Ok(Self::WendlandM52),
             "sod-k2" => Ok(Self::SodK2),
             "fitc-k2" => Ok(Self::FitcK2),
-            other => anyhow::bail!(
-                "unknown model '{other}' \
-                 (k1|k2|k3|wendland-se|wendland-m32|wendland-m52|sod-k2|fitc-k2)"
-            ),
+            other => Self::parse_ard(other).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model '{other}' \
+                     (k1|k2|k3|wendland-se|wendland-m32|wendland-m52|sod-k2|fitc-k2|\
+                      se-iso<d>|se-ard<d>|m32-ard<d>|m52-ard<d> for d in 1..=8)"
+                )
+            }),
         }
+    }
+
+    /// Parse the ARD spec family: `se-iso<d>`, `se-ard<d>`, `m32-ard<d>`,
+    /// `m52-ard<d>` with `d ∈ 1..=8`.
+    fn parse_ard(s: &str) -> Option<Self> {
+        let ctors: [(&str, fn(u8) -> Self); 4] = [
+            ("se-iso", Self::SeIso),
+            ("se-ard", Self::SeArd),
+            ("m32-ard", Self::M32Ard),
+            ("m52-ard", Self::M52Ard),
+        ];
+        for (prefix, ctor) in ctors {
+            if let Some(ds) = s.strip_prefix(prefix) {
+                if let Ok(d) = ds.parse::<u8>() {
+                    if (1..=8).contains(&d) {
+                        return Some(ctor(d));
+                    }
+                }
+            }
+        }
+        None
     }
 
     /// The canonical CLI/config name of this spec.
@@ -71,6 +124,19 @@ impl ModelSpec {
             Self::WendlandM52 => "wendland-m52",
             Self::SodK2 => "sod-k2",
             Self::FitcK2 => "fitc-k2",
+            Self::SeIso(d) => SE_ISO_NAMES[*d as usize - 1],
+            Self::SeArd(d) => SE_ARD_NAMES[*d as usize - 1],
+            Self::M32Ard(d) => M32_ARD_NAMES[*d as usize - 1],
+            Self::M52Ard(d) => M52_ARD_NAMES[*d as usize - 1],
+        }
+    }
+
+    /// Number of input dimensions this spec's kernel consumes per point
+    /// (1 for every time-series spec).
+    pub fn input_dim(&self) -> usize {
+        match self {
+            Self::SeIso(d) | Self::SeArd(d) | Self::M32Ard(d) | Self::M52Ard(d) => *d as usize,
+            _ => 1,
         }
     }
 
@@ -113,6 +179,13 @@ impl ModelSpec {
             // same kernel, same parameter names — an exact k₂ peak is the
             // best imaginable seed for its approximate siblings
             Self::SodK2 | Self::FitcK2 => Some(Self::K2),
+            // ARD lineage: the tied (isotropic-in-d) SE trains one shared
+            // length scale, which seeds every ARD dimension's phiARD0 by
+            // name; the Matérn ARD variants then inherit the full
+            // per-dimension scales from the SE ARD peak
+            Self::SeIso(_) => None,
+            Self::SeArd(d) => Some(Self::SeIso(*d)),
+            Self::M32Ard(d) | Self::M52Ard(d) => Some(Self::SeArd(*d)),
         }
     }
 
@@ -160,6 +233,20 @@ impl ModelSpec {
                 let mut m = paper_k2(sigma_n);
                 m.name = "fitc-k2".into();
                 m
+            }
+            Self::SeIso(d) => CovarianceModel::new(
+                self.name(),
+                Box::new(ArdKernel::se_iso(*d as usize)),
+                sigma_n,
+            ),
+            Self::SeArd(d) => {
+                CovarianceModel::new(self.name(), Box::new(ArdKernel::se(*d as usize)), sigma_n)
+            }
+            Self::M32Ard(d) => {
+                CovarianceModel::new(self.name(), Box::new(ArdKernel::m32(*d as usize)), sigma_n)
+            }
+            Self::M52Ard(d) => {
+                CovarianceModel::new(self.name(), Box::new(ArdKernel::m52(*d as usize)), sigma_n)
             }
         }
     }
@@ -336,6 +423,46 @@ mod tests {
         for s in [ModelSpec::K1, ModelSpec::K2, ModelSpec::K3] {
             assert_eq!(ModelSpec::parse(s.name()).unwrap(), s);
         }
+    }
+
+    #[test]
+    fn ard_specs_parse_build_and_declare_lineage() {
+        for d in 1..=8u8 {
+            for (name, spec) in [
+                (format!("se-iso{d}"), ModelSpec::SeIso(d)),
+                (format!("se-ard{d}"), ModelSpec::SeArd(d)),
+                (format!("m32-ard{d}"), ModelSpec::M32Ard(d)),
+                (format!("m52-ard{d}"), ModelSpec::M52Ard(d)),
+            ] {
+                assert_eq!(ModelSpec::parse(&name).unwrap(), spec);
+                assert_eq!(spec.name(), name);
+                let m = spec.build(0.1);
+                assert_eq!(m.name, name);
+                assert_eq!(m.input_dim(), d as usize);
+                assert_eq!(spec.input_dim(), d as usize);
+                assert_eq!(spec.approx(), None);
+                assert_eq!(spec.factor_dim(500), 500);
+            }
+            // tied root has one parameter, ARD has d
+            assert_eq!(ModelSpec::SeIso(d).build(0.1).dim(), 1);
+            assert_eq!(ModelSpec::SeArd(d).build(0.1).dim(), d as usize);
+        }
+        assert!(ModelSpec::parse("se-ard0").is_err());
+        assert!(ModelSpec::parse("se-ard9").is_err());
+        assert!(ModelSpec::parse("se-ard").is_err());
+        // lineage: SeIso is root; SeArd ← SeIso; Matérns ← SeArd. The
+        // shared "phiARD0" name carries the tied scale into dimension 0.
+        assert_eq!(ModelSpec::SeIso(3).warm_start_parent(), None);
+        assert_eq!(ModelSpec::SeArd(3).warm_start_parent(), Some(ModelSpec::SeIso(3)));
+        assert_eq!(ModelSpec::M32Ard(3).warm_start_parent(), Some(ModelSpec::SeArd(3)));
+        assert_eq!(ModelSpec::M52Ard(3).warm_start_parent(), Some(ModelSpec::SeArd(3)));
+        let iso_names = ModelSpec::SeIso(3).build(0.1).kernel.names();
+        let ard_names = ModelSpec::SeArd(3).build(0.1).kernel.names();
+        assert!(ard_names.contains(&iso_names[0]));
+        assert_eq!(ModelSpec::M32Ard(3).build(0.1).kernel.names(), ard_names);
+        // roster schedules the ARD generation chain parent-first
+        let r = Roster::parse("m52-ard3,se-ard3,se-iso3").unwrap();
+        assert_eq!(r.generations(), vec![vec![2], vec![1], vec![0]]);
     }
 
     #[test]

@@ -397,7 +397,7 @@ impl ServeSession {
             match &data {
                 None => data = Some(d),
                 Some(d0) => anyhow::ensure!(
-                    d0.t == d.t && d0.y == d.y,
+                    d0.t == d.t && d0.y == d.y && d0.extra == d.extra && d0.noise == d.noise,
                     "artifact {} was trained on different data than the first artifact",
                     p.as_ref().display()
                 ),
@@ -426,7 +426,7 @@ impl ServeSession {
             match &data {
                 None => data = Some(d),
                 Some(d0) => anyhow::ensure!(
-                    d0.t == d.t && d0.y == d.y,
+                    d0.t == d.t && d0.y == d.y && d0.extra == d.extra && d0.noise == d.noise,
                     "artifact blob {i} was trained on different data than the first blob"
                 ),
             }
@@ -460,22 +460,34 @@ impl ServeSession {
                 v.sigma_n()
             );
             anyhow::ensure!(
-                v.t() == views[0].t() && v.y() == views[0].y(),
+                v.t() == views[0].t()
+                    && v.y() == views[0].y()
+                    && v.extra_cols() == views[0].extra_cols()
+                    && v.noise() == views[0].noise(),
                 "artifact view {i} was trained on different data than the first view"
             );
             v.validate_payload()?;
             let predictor = match v.packed_factor() {
-                Some(packed) if v.spec().approx().is_none() => Predictor::from_view_parts(
-                    v.spec().build(sigma_n),
-                    v.t(),
-                    v.y(),
-                    v.theta(),
-                    packed,
-                    v.logdet(),
-                    v.alpha(),
-                    v.sigma_f_hat2(),
-                    v.jitter(),
-                ),
+                Some(packed) if v.spec().approx().is_none() => {
+                    let mut p = Predictor::from_view_parts(
+                        v.spec().build(sigma_n),
+                        v.t(),
+                        v.y(),
+                        v.theta(),
+                        packed,
+                        v.logdet(),
+                        v.alpha(),
+                        v.sigma_f_hat2(),
+                        v.jitter(),
+                    );
+                    if v.d() > 1 || v.noise().is_some() {
+                        p.attach_input_block(
+                            v.extra_cols().to_vec(),
+                            v.noise().map(|s| s.to_vec()),
+                        );
+                    }
+                    p
+                }
                 // compressed or approximate-spec views materialise the
                 // model first (spectral reconstruction / reduced-set
                 // serving both need the full adopt path)
@@ -561,8 +573,14 @@ impl ServeSession {
                 slot.spec.name()
             );
             let p = &slot.predictor;
-            let data =
+            let mut data =
                 Dataset::new(p.t().to_vec(), p.y().to_vec(), format!("serve-session-{}", slot.spec.name()));
+            if p.d() > 1 {
+                data = data.with_extra_cols(p.extra().to_vec())?;
+            }
+            if let Some(s) = p.noise() {
+                data = data.with_noise(s.to_vec())?;
+            }
             let m = p.theta().len();
             let peak_eval = ProfiledEval {
                 lnp: p.lnp(),
@@ -851,15 +869,22 @@ impl ServeSession {
     /// standard deviation across every slot. With a dominant winner
     /// (`ln B ≫ 1`) this degrades gracefully to the winner's prediction.
     fn predict_averaged(&self, t_star: &[f64], exec: &ExecutionContext) -> Prediction {
+        self.average_with(t_star.len(), |slot| slot.predictor.predict_batch(t_star, exec))
+    }
+
+    /// The mixture arithmetic shared by the scalar and the nd averaged
+    /// routes: `Σ wᵢ μᵢ` and `Σ wᵢ (σᵢ² + μᵢ²) − μ̄²` over the healthy
+    /// roster, `q` query points, one slot prediction per weight.
+    fn average_with<F: Fn(&ModelSlot) -> Prediction>(&self, q: usize, predict: F) -> Prediction {
         let w = self.weights();
-        let mut mean = vec![0.0; t_star.len()];
-        let mut second = vec![0.0; t_star.len()]; // Σ wᵢ (σᵢ² + μᵢ²)
+        let mut mean = vec![0.0; q];
+        let mut second = vec![0.0; q]; // Σ wᵢ (σᵢ² + μᵢ²)
         for (slot, &wi) in self.slots.iter().zip(&w) {
             if wi == 0.0 {
                 continue; // quarantined: excluded from the mixture
             }
-            let p = slot.predictor.predict_batch(t_star, exec);
-            for i in 0..t_star.len() {
+            let p = predict(slot);
+            for i in 0..q {
                 mean[i] += wi * p.mean[i];
                 second[i] += wi * (p.sd[i] * p.sd[i] + p.mean[i] * p.mean[i]);
             }
@@ -870,6 +895,28 @@ impl ServeSession {
             .map(|(m, s)| (s - m * m).max(0.0).sqrt())
             .collect();
         Prediction { mean, sd }
+    }
+
+    /// Serve one batch of d-dimensional query points (`x_star` is d
+    /// columns, the [`Predictor::input_cols`] layout) under the
+    /// session's route mode — the scenario-tier twin of
+    /// [`ServeSession::predict`]. For a 1-D roster this delegates to the
+    /// scalar predict path bit-identically.
+    pub fn predict_rows(&self, x_star: &[&[f64]]) -> Prediction {
+        self.predict_rows_with(x_star, &self.exec)
+    }
+
+    /// [`ServeSession::predict_rows`] under an explicit thread budget
+    /// (see [`ServeSession::predict_with`]).
+    pub fn predict_rows_with(&self, x_star: &[&[f64]], exec: &ExecutionContext) -> Prediction {
+        match self.route {
+            RouteMode::Winner => {
+                self.slots[self.first_healthy()].predictor.predict_rows(x_star, exec)
+            }
+            RouteMode::Averaged => self.average_with(x_star.first().map_or(0, |c| c.len()), |slot| {
+                slot.predictor.predict_rows(x_star, exec)
+            }),
+        }
     }
 
     /// Append one observation to **every** healthy live factor (`O(n²)`
@@ -893,6 +940,13 @@ impl ServeSession {
     /// scoring. Scores feed the per-model drift monitors only when the
     /// point is absorbed; quarantined slots neither score nor absorb.
     pub fn observe(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        {
+            let p0 = &self.slots[0].predictor;
+            anyhow::ensure!(
+                p0.d() == 1 && p0.noise().is_none(),
+                "scalar observe on an nd/heteroscedastic session — use observe_row"
+            );
+        }
         anyhow::ensure!(
             t_new.is_finite() && y_new.is_finite(),
             "non-finite observation (t = {t_new}, y = {y_new}) rejected at the data boundary"
@@ -938,6 +992,68 @@ impl ServeSession {
         // errors (e.g. a failed periodic refit), so the session keeps
         // serving a consistent α for whatever factors it now holds; a
         // completed cold refresh already installed fresh caches
+        match self.enforce_window() {
+            Ok(true) => Ok(()),
+            other => {
+                for slot in &mut self.slots {
+                    slot.predictor.refresh_cache();
+                }
+                other.map(|_| ())
+            }
+        }
+    }
+
+    /// [`ServeSession::observe`] for a d-dimensional observation row,
+    /// with an optional per-point noise level — the scenario-tier
+    /// streaming path. The noise contract follows
+    /// [`Predictor::observe_row`]: a heteroscedastic roster requires
+    /// `Some(σ_n,new)`, a homoscedastic one requires `None`. Same
+    /// all-or-nothing fan-out, drift scoring and quarantine semantics as
+    /// the scalar path.
+    pub fn observe_row(
+        &mut self,
+        x_new: &[f64],
+        y_new: f64,
+        sigma_n_new: Option<f64>,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            x_new.iter().all(|v| v.is_finite())
+                && y_new.is_finite()
+                && sigma_n_new.map_or(true, |s| s.is_finite() && s >= 0.0),
+            "non-finite observation row (x = {x_new:?}, y = {y_new}, σ_n = {sigma_n_new:?}) \
+             rejected at the data boundary"
+        );
+        let mut scored = Vec::with_capacity(self.slots.len());
+        let mut absorbable = 0usize;
+        for slot in &self.slots {
+            if slot.health.quarantined {
+                scored.push(None);
+                continue;
+            }
+            // dimension/noise-contract violations are caller errors, not
+            // factor failures: propagate before anything mutates
+            let s = slot.predictor.score_observation_row(x_new, y_new, sigma_n_new)?;
+            let viable = s.pivot > 0.0 && s.pivot.is_finite();
+            absorbable += viable as usize;
+            scored.push(Some((s, viable)));
+        }
+        anyhow::ensure!(
+            absorbable > 0,
+            "observe_row(x={x_new:?}) would make every healthy model's K̃ non-PD; \
+             the point was rejected and no slot mutated"
+        );
+        for (slot, s) in self.slots.iter_mut().zip(scored) {
+            match s {
+                None => {} // quarantined: frozen
+                Some((s, true)) => {
+                    slot.drift.push(s.score);
+                    slot.predictor.observe_scored_row_deferred(x_new, y_new, sigma_n_new, s)?;
+                }
+                Some((_, false)) => {
+                    slot.health.quarantined = true;
+                }
+            }
+        }
         match self.enforce_window() {
             Ok(true) => Ok(()),
             other => {
@@ -1073,12 +1189,21 @@ impl ServeSession {
             .iter()
             .position(|s| !s.health.quarantined && s.spec.approx().is_none())
             .unwrap_or_else(|| self.first_healthy());
-        let window = Dataset::new(
+        let mut window = Dataset::new(
             self.slots[lead].predictor.t().to_vec(),
             self.slots[lead].predictor.y().to_vec(),
             "serve-window",
         );
-        let span = window.span();
+        if self.slots[lead].predictor.d() > 1 {
+            window = window.with_extra_cols(self.slots[lead].predictor.extra().to_vec())?;
+        }
+        if let Some(s) = self.slots[lead].predictor.noise() {
+            window = window.with_noise(s.to_vec())?;
+        }
+        // a degenerate window (e.g. duplicate timestamps absorbed under a
+        // tiny window policy) is a recoverable error, not a panic: the
+        // old session stays fully serviceable
+        let span = window.span()?;
         let scale = self.scale_prior;
         // train every slot first; nothing is swapped until all succeed
         let mut rebuilt: Vec<(ModelSlot, f64)> = Vec::with_capacity(self.slots.len());
@@ -1097,9 +1222,10 @@ impl ServeSession {
             let (lnp_evidence, hessian) = match spec.approx() {
                 None => (
                     trained.lnp_peak,
-                    crate::gp::profiled_hessian_with(
+                    crate::gp::profiled_hessian_nd_with(
                         &model,
-                        &window.t,
+                        &window.input_cols(),
+                        window.noise.as_deref(),
                         &window.y,
                         &trained.theta_hat,
                         &self.exec,
@@ -1132,19 +1258,36 @@ impl ServeSession {
                 lnp_evidence,
                 &hessian,
             )?;
-            let (t_serve, y_serve) = match spec.approx() {
-                None => (window.t.clone(), window.y.clone()),
-                Some(kind) => {
-                    crate::gp::approx::serve_parts(kind, &window.t, &window.y, &trained.peak_eval)
-                }
+            let predictor = if window.d() > 1 || window.is_heteroscedastic() {
+                // train_model already rejected approximate specs for
+                // nd/heteroscedastic windows, so this is the exact path
+                Predictor::from_eval_nd(
+                    spec.build(self.sigma_n),
+                    window.t.clone(),
+                    window.extra.clone(),
+                    window.noise.clone(),
+                    window.y.clone(),
+                    trained.theta_hat.clone(),
+                    trained.peak_eval,
+                )
+            } else {
+                let (t_serve, y_serve) = match spec.approx() {
+                    None => (window.t.clone(), window.y.clone()),
+                    Some(kind) => crate::gp::approx::serve_parts(
+                        kind,
+                        &window.t,
+                        &window.y,
+                        &trained.peak_eval,
+                    ),
+                };
+                Predictor::from_eval(
+                    spec.build(self.sigma_n),
+                    t_serve,
+                    y_serve,
+                    trained.theta_hat.clone(),
+                    trained.peak_eval,
+                )
             };
-            let predictor = Predictor::from_eval(
-                spec.build(self.sigma_n),
-                t_serve,
-                y_serve,
-                trained.theta_hat.clone(),
-                trained.peak_eval,
-            );
             predictor.carry_counters_from(&slot.predictor);
             // fresh factor ⇒ fresh conditioning probe; quarantine and
             // degradation clear (re-entry), lifetime counters carry over
@@ -1428,6 +1571,51 @@ mod tests {
         assert!(!session.needs_retrain());
         let q = session.predict(&[31.5]);
         assert!(q.mean[0].is_finite());
+    }
+
+    #[test]
+    fn nd_session_routes_rows_and_retrains_with_extras_and_noise() {
+        // the scenario tier through the router: a d = 3 heteroscedastic
+        // roster must stream via the row API, reject the scalar API, and
+        // retrain from a window that still carries its extra columns and
+        // noise vector
+        let data = crate::data::synthetic::ard3_dataset(22, 0.1, true, 31);
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let mut cfg = crate::coordinator::PipelineConfig::fast();
+        cfg.models = vec![ModelSpec::SeArd(3)];
+        cfg.train = opts.clone();
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let result = crate::coordinator::Tournament::new(cfg.clone())
+            .run(&data, &mut rng)
+            .unwrap();
+        let mut session =
+            ServeSession::from_tournament(&result.models, &data, ExecutionContext::seq())
+                .unwrap();
+        // scalar APIs are rejected up front, with zero state change
+        let n0 = session.stats().n_train;
+        assert!(session.observe(23.0, 0.1).is_err());
+        assert_eq!(session.stats().n_train, n0);
+        // the noise contract propagates: a hetero roster needs Some(σ)
+        assert!(session.observe_row(&[23.0, 1.0, 2.0], 0.1, None).is_err());
+        session.observe_row(&[23.0, 1.0, 2.0], 0.1, Some(0.12)).unwrap();
+        session.observe_row(&[24.0, 4.0, 0.5], -0.2, Some(0.08)).unwrap();
+        assert_eq!(session.stats().n_train, 24);
+        let q1 = [5.5, 23.5];
+        let q2 = [2.0, 1.0];
+        let q3 = [1.0, 2.0];
+        let pred = session.predict_rows(&[&q1, &q2, &q3]);
+        assert!(pred.mean.iter().chain(&pred.sd).all(|v| v.is_finite()));
+        // retrain rebuilds from the nd window: extras and noise survive
+        let outcome = session.retrain(&opts, 1, &mut rng).unwrap();
+        assert_eq!(outcome.window_n, 24);
+        let p = session.predictor();
+        assert_eq!(p.d(), 3);
+        assert_eq!(p.noise().map(|s| s.len()), Some(24));
+        let pred2 = session.predict_rows(&[&q1, &q2, &q3]);
+        assert!(pred2.mean.iter().chain(&pred2.sd).all(|v| v.is_finite()));
     }
 
     #[test]

@@ -117,6 +117,24 @@ impl TrainedModel {
             self.spec.factor_dim(data.len()),
             data.len()
         );
+        if data.d() > 1 || data.is_heteroscedastic() {
+            // exact specs only (train_model rejects approx specs for
+            // nd/heteroscedastic data), so the full dataset serves
+            anyhow::ensure!(
+                self.spec.approx().is_none(),
+                "approximate spec {} cannot serve nd/heteroscedastic data",
+                self.name()
+            );
+            return Ok(Predictor::from_eval_nd(
+                self.spec.build(self.sigma_n),
+                data.t.clone(),
+                data.extra.clone(),
+                data.noise.clone(),
+                data.y.clone(),
+                self.train.theta_hat.clone(),
+                self.train.peak_eval.clone(),
+            ));
+        }
         let (t_serve, y_serve) = match self.spec.approx() {
             None => (data.t.clone(), data.y.clone()),
             Some(kind) => {
@@ -211,7 +229,7 @@ impl Tournament {
     pub fn run(&self, data: &Dataset, rng: &mut Xoshiro256) -> crate::Result<TournamentResult> {
         let cfg = &self.config;
         let roster = Roster::new(cfg.models.clone())?;
-        let span = data.span();
+        let span = data.span()?;
         let mut slots: Vec<Option<TrainedModel>> = (0..roster.len()).map(|_| None).collect();
         for gen in roster.generations() {
             // --- schedule: every RNG draw happens here, in roster order
@@ -319,9 +337,10 @@ impl Tournament {
                 let (lnp_evidence, hessian) = match spec.approx() {
                     None => (
                         trained.lnp_peak,
-                        crate::gp::profiled_hessian_with(
+                        crate::gp::profiled_hessian_nd_with(
                             &model,
-                            &data.t,
+                            &data.input_cols(),
+                            data.noise.as_deref(),
                             &data.y,
                             &trained.theta_hat,
                             &cfg.exec,
@@ -423,6 +442,13 @@ fn run_nested_for(
     data: &Dataset,
     rng: &mut Xoshiro256,
 ) -> crate::Result<NestedReport> {
+    anyhow::ensure!(
+        data.d() == 1 && !data.is_heteroscedastic(),
+        "nested-sampling verification supports only 1-D homoscedastic datasets \
+         (got d = {}, heteroscedastic = {})",
+        data.d(),
+        data.is_heteroscedastic()
+    );
     let sw = Stopwatch::start();
     let dim = prior.dim() + 1; // λ first
     let scale = cfg.scale_prior;
@@ -535,6 +561,39 @@ mod tests {
             assert_eq!(ma.evidence.ln_z, mb.evidence.ln_z);
             assert!(!ma.warm_started);
         }
+    }
+
+    #[test]
+    fn ard_tournament_on_heteroscedastic_3d_data() {
+        // the scenario tier end to end: an ARD roster with lineage
+        // (se-iso3 → se-ard3) on d = 3 heteroscedastic data, served
+        // through an nd predictor
+        let data = crate::data::synthetic::ard3_dataset(28, 0.1, true, 9);
+        let mut cfg = fast_config();
+        cfg.models = vec![ModelSpec::SeArd(3), ModelSpec::SeIso(3)];
+        cfg.train.multistart.restarts = 2;
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let result = Tournament::new(cfg.clone()).run(&data, &mut rng).unwrap();
+        assert_eq!(result.models.len(), 2);
+        let ard = result.model("se-ard3").unwrap();
+        assert!(ard.warm_started, "se-ard3 must inherit se-iso3's peak");
+        for m in &result.models {
+            assert!(m.ln_z().is_finite(), "{} ln Z", m.name());
+        }
+        let p = result.winner().predictor(&data).unwrap();
+        assert_eq!(p.d(), 3);
+        assert!(p.noise().is_some());
+        let q1 = [2.5, 7.5];
+        let q2 = [1.0, 3.0];
+        let q3 = [0.5, 2.0];
+        let pred = p.predict_rows(&[&q1, &q2, &q3], &cfg.exec);
+        assert!(pred.mean.iter().chain(&pred.sd).all(|v| v.is_finite()));
+
+        // nested verification is gated off for nd/heteroscedastic data
+        cfg.run_nested = true;
+        let mut rng2 = Xoshiro256::seed_from_u64(17);
+        let err = Tournament::new(cfg).run(&data, &mut rng2).unwrap_err();
+        assert!(err.to_string().contains("nested-sampling"), "{err:#}");
     }
 
     #[test]

@@ -92,8 +92,18 @@ fn make_objective<'a>(
         m,
         move |theta: &[f64]| {
             Ok(match approx {
-                None => profiled::eval_value_with(model, &data.t, &data.y, theta, ctx)
-                    .unwrap_or(FAILED_EVAL_PENALTY),
+                // nd entry point: delegates to the scalar (and Toeplitz-
+                // capable) path when d == 1 and the noise is homoscedastic,
+                // so 1-D training trajectories are bit-identical
+                None => profiled::eval_value_nd_with(
+                    model,
+                    &data.input_cols(),
+                    data.noise.as_deref(),
+                    &data.y,
+                    theta,
+                    ctx,
+                )
+                .unwrap_or(FAILED_EVAL_PENALTY),
                 Some(kind) => {
                     crate::gp::approx::train_value_with(kind, model, &data.t, &data.y, theta, ctx)
                         .unwrap_or(FAILED_EVAL_PENALTY)
@@ -102,8 +112,15 @@ fn make_objective<'a>(
         },
         move |theta: &[f64]| {
             let res = match approx {
-                None => profiled::eval_grad_with(model, &data.t, &data.y, theta, ctx)
-                    .map(|(ev, g)| (ev.lnp, g)),
+                None => profiled::eval_grad_nd_with(
+                    model,
+                    &data.input_cols(),
+                    data.noise.as_deref(),
+                    &data.y,
+                    theta,
+                    ctx,
+                )
+                .map(|(ev, g)| (ev.lnp, g)),
                 Some(kind) => {
                     crate::gp::approx::train_grad_with(kind, model, &data.t, &data.y, theta, ctx)
                 }
@@ -152,7 +169,20 @@ pub fn train_model_seeded(
     exec: &ExecutionContext,
 ) -> crate::Result<TrainResult> {
     let restarts = seeds.len().max(1);
-    let span = data.span();
+    let span = data.span()?;
+    anyhow::ensure!(
+        spec.input_dim() == data.d(),
+        "model {} consumes {}-dim inputs but dataset '{}' has d = {}",
+        spec.name(),
+        spec.input_dim(),
+        data.label,
+        data.d()
+    );
+    anyhow::ensure!(
+        spec.approx().is_none() || (data.d() == 1 && !data.is_heteroscedastic()),
+        "approximate spec {} supports only 1-D homoscedastic datasets",
+        spec.name()
+    );
     /// A start is either a fresh RNG stream (random prior draw) or a
     /// deterministic warm-start point.
     #[derive(Clone)]
@@ -255,7 +285,14 @@ pub fn train_model_seeded(
     // SoD, K_eff factor for FITC) — dim = spec.factor_dim(n).
     let model = spec.build(sigma_n);
     let ev = match spec.approx() {
-        None => profiled::eval_with(&model, &data.t, &data.y, &best.theta, exec)?,
+        None => profiled::eval_nd_with(
+            &model,
+            &data.input_cols(),
+            data.noise.as_deref(),
+            &data.y,
+            &best.theta,
+            exec,
+        )?,
         Some(kind) => {
             crate::gp::approx::peak_eval_with(kind, &model, &data.t, &data.y, &best.theta, exec)?
         }
@@ -300,7 +337,7 @@ mod tests {
         assert_eq!(res.restart_values.len() <= 4, true);
         // training beats a random prior point
         let model = ModelSpec::K1.build(0.1);
-        let prior = BoxPrior::for_model(&model, &data.span());
+        let prior = BoxPrior::for_model(&model, &data.span().unwrap());
         let mut r2 = Xoshiro256::seed_from_u64(1000);
         let random_point = prior.sample(&mut r2);
         if let Ok(ev) = profiled::eval(&model, &data.t, &data.y, &random_point) {
@@ -347,6 +384,27 @@ mod tests {
     }
 
     #[test]
+    fn trains_ard_on_3d_heteroscedastic_data() {
+        let data = crate::data::synthetic::ard3_dataset(30, 0.1, true, 23);
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let exec = ExecutionContext::seq();
+        let opts = TrainOptions {
+            multistart: MultistartOptions { restarts: 2, ..Default::default() },
+            extra_starts: Vec::new(),
+        };
+        let res = train_model(&ModelSpec::SeArd(3), 0.1, &data, &opts, 1, &exec, &mut rng)
+            .unwrap();
+        assert!(res.lnp_peak.is_finite());
+        assert_eq!(res.theta_hat.len(), 3);
+        assert!(res.sigma_f_hat2 > 0.0);
+        // dimension mismatch and approx-on-nd both error cleanly
+        assert!(train_model(&ModelSpec::SeArd(2), 0.1, &data, &opts, 1, &exec, &mut rng)
+            .is_err());
+        assert!(train_model(&ModelSpec::K1, 0.1, &data, &opts, 1, &exec, &mut rng).is_err());
+        assert!(train_model(&ModelSpec::SodK2, 0.1, &data, &opts, 1, &exec, &mut rng).is_err());
+    }
+
+    #[test]
     fn peak_gradient_is_small() {
         let data = table1_dataset(40, 0.1, 13);
         let mut rng = Xoshiro256::seed_from_u64(21);
@@ -354,7 +412,7 @@ mod tests {
         let res =
             train_model(&ModelSpec::K1, 0.1, &data, &fast_opts(), 1, &exec, &mut rng).unwrap();
         let model = ModelSpec::K1.build(0.1);
-        let prior = BoxPrior::for_model(&model, &data.span());
+        let prior = BoxPrior::for_model(&model, &data.span().unwrap());
         let (_, mut g) =
             profiled::eval_grad(&model, &data.t, &data.y, &res.theta_hat).unwrap();
         crate::optimize::project_gradient(&res.theta_hat, &mut g, &prior);

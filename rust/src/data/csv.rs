@@ -1,18 +1,39 @@
-//! Two-column CSV import/export for datasets and report series.
+//! CSV import/export for datasets and report series.
+//!
+//! Layouts: the classic two-column `t,y` (d = 1, unchanged), and the
+//! scenario tier's multi-column `t1,…,td,y` with an optional trailing
+//! `noise` column carrying per-point σ_n,i. Line 0 is treated as a
+//! header **only** when it contains no parsable float at all — a typo'd
+//! first *data* row is a hard error, never a silent drop.
 
 use std::io::Write as _;
 use std::path::Path;
 
 use super::Dataset;
 
-/// Write a dataset as `t,y` CSV with a header line.
+/// Write a dataset as CSV with a header line: `t,y` for d = 1 (the
+/// pre-existing layout, byte-identical), `t1,…,td,y` for d > 1, plus a
+/// trailing `noise` column when the dataset is heteroscedastic.
 pub fn write_dataset(path: &Path, data: &Dataset) -> crate::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "t,y")?;
-    for (t, y) in data.t.iter().zip(&data.y) {
-        writeln!(f, "{t},{y}")?;
+    if data.d() == 1 && data.noise.is_none() {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "t,y")?;
+        for (t, y) in data.t.iter().zip(&data.y) {
+            writeln!(f, "{t},{y}")?;
+        }
+        return Ok(());
     }
-    Ok(())
+    let d = data.d();
+    let mut names: Vec<String> = (1..=d).map(|j| format!("t{j}")).collect();
+    names.push("y".into());
+    let mut cols: Vec<&[f64]> = data.input_cols();
+    cols.push(&data.y);
+    if let Some(noise) = &data.noise {
+        names.push("noise".into());
+        cols.push(noise);
+    }
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    write_columns(path, &name_refs, &cols)
 }
 
 /// Write arbitrary named columns (all same length).
@@ -34,66 +55,220 @@ pub fn write_columns(path: &Path, names: &[&str], cols: &[&[f64]]) -> crate::Res
     Ok(())
 }
 
-/// Read a `t,y` CSV (header optional; extra columns ignored).
+/// Read a dataset CSV.
+///
+/// * **Header detection:** line 0 is skipped as a header only when *no*
+///   field parses as a float (i.e. it looks like column names). A first
+///   row with any parsable float must parse *fully* as data — a typo
+///   there is an error, not a silently dropped point.
+/// * **With a header** the column names drive the layout: `y` is the
+///   observation column (last column if none is named `y`), a column
+///   named `noise` carries per-point σ_n,i, and every other column is
+///   an input dimension in file order.
+/// * **Without a header** the file is the classic layout: first column
+///   `t`, second `y`, extra columns ignored.
 pub fn read_dataset(path: &Path) -> crate::Result<Dataset> {
     let text = std::fs::read_to_string(path)?;
-    let mut t = Vec::new();
-    let mut y = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut parts = line.split(',');
-        let a = parts.next().unwrap_or("");
-        let b = parts.next().unwrap_or("");
-        match (a.trim().parse::<f64>(), b.trim().parse::<f64>()) {
-            (Ok(tv), Ok(yv)) => {
-                t.push(tv);
-                y.push(yv);
-            }
-            _ if lineno == 0 => continue, // header
-            _ => anyhow::bail!("bad CSV line {} in {}: '{line}'", lineno + 1, path.display()),
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+
+    // peek at line 0 to classify header vs data
+    let first = lines.next();
+    let mut header: Option<Vec<String>> = None;
+    let mut pending_row: Option<(usize, &str)> = None;
+    if let Some((lineno, line)) = first {
+        let fields: Vec<&str> = line.trim().split(',').map(|s| s.trim()).collect();
+        let any_float = fields.iter().any(|f| f.parse::<f64>().is_ok());
+        if any_float {
+            pending_row = Some((lineno, line));
+        } else {
+            header = Some(fields.iter().map(|s| s.to_string()).collect());
         }
     }
-    anyhow::ensure!(t.len() >= 2, "CSV {} has fewer than 2 data rows", path.display());
+
+    // resolve the column layout from the header (or the classic default)
+    let (input_idx, y_idx, noise_idx) = match &header {
+        Some(names) => {
+            let y_idx = names
+                .iter()
+                .position(|n| n == "y")
+                .unwrap_or_else(|| names.len().saturating_sub(1));
+            let noise_idx = names.iter().position(|n| n == "noise");
+            let input_idx: Vec<usize> = (0..names.len())
+                .filter(|&i| i != y_idx && Some(i) != noise_idx)
+                .collect();
+            anyhow::ensure!(
+                !input_idx.is_empty(),
+                "CSV {}: header {:?} has no input column",
+                path.display(),
+                names
+            );
+            (input_idx, y_idx, noise_idx)
+        }
+        None => (vec![0usize], 1usize, None),
+    };
+    // headerless files keep the historic "extra columns ignored" rule;
+    // with a header every named column is meaningful and required
+    let strict_width = header.is_some();
+    let min_width = input_idx
+        .iter()
+        .chain(std::iter::once(&y_idx))
+        .chain(noise_idx.iter())
+        .max()
+        .copied()
+        .unwrap_or(1)
+        + 1;
+
+    let mut inputs: Vec<Vec<f64>> = vec![Vec::new(); input_idx.len()];
+    let mut y = Vec::new();
+    let mut noise: Vec<f64> = Vec::new();
+    let rows = pending_row.into_iter().chain(lines);
+    for (lineno, line) in rows {
+        let line = line.trim();
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        let wide_enough =
+            fields.len() >= min_width && (!strict_width || fields.len() == min_width);
+        let parse = |i: usize| fields[i].parse::<f64>();
+        let parsed: Option<(Vec<f64>, f64, Option<f64>)> = if wide_enough {
+            let mut xs = Vec::with_capacity(input_idx.len());
+            let mut ok = true;
+            for &i in &input_idx {
+                match parse(i) {
+                    Ok(v) => xs.push(v),
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            let yv = parse(y_idx);
+            let nv = noise_idx.map(parse);
+            match (ok, yv, nv) {
+                (true, Ok(yv), None) => Some((xs, yv, None)),
+                (true, Ok(yv), Some(Ok(nv))) => Some((xs, yv, Some(nv))),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        match parsed {
+            Some((xs, yv, nv)) => {
+                for (col, v) in inputs.iter_mut().zip(xs) {
+                    col.push(v);
+                }
+                y.push(yv);
+                if let Some(nv) = nv {
+                    noise.push(nv);
+                }
+            }
+            None => anyhow::bail!("bad CSV line {} in {}: '{line}'", lineno + 1, path.display()),
+        }
+    }
+    anyhow::ensure!(y.len() >= 2, "CSV {} has fewer than 2 data rows", path.display());
     let label = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
     // `parse::<f64>` happily accepts "NaN"/"inf" tokens — the data
     // boundary rejects them before they can poison a covariance factor
-    Dataset::checked(t, y, label)
-        .map_err(|e| anyhow::anyhow!("CSV {}: {e}", path.display()))
+    let t = inputs.remove(0);
+    let mut data = Dataset::checked(t, y, label)
+        .map_err(|e| anyhow::anyhow!("CSV {}: {e}", path.display()))?;
+    if !inputs.is_empty() {
+        data = data
+            .with_extra_cols(inputs)
+            .map_err(|e| anyhow::anyhow!("CSV {}: {e}", path.display()))?;
+    }
+    if noise_idx.is_some() {
+        data = data
+            .with_noise(noise)
+            .map_err(|e| anyhow::anyhow!("CSV {}: {e}", path.display()))?;
+    }
+    Ok(data)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("gpfast_csv_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("d.csv");
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("d.csv");
         let d = Dataset::new(vec![0.0, 0.5, 1.0], vec![1.0, -1.0, 2.5], "x");
         write_dataset(&p, &d).unwrap();
         let back = read_dataset(&p).unwrap();
         assert_eq!(back.t, d.t);
         assert_eq!(back.y, d.y);
+        assert_eq!(back.d(), 1);
+        assert!(back.noise.is_none());
+        // the d = 1 on-disk layout is the historic two-column file
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("t,y\n"), "{text}");
+    }
+
+    #[test]
+    fn multi_column_roundtrip() {
+        let p = tmp("nd.csv");
+        let d = Dataset::new(vec![0.0, 0.5, 1.0], vec![1.0, -1.0, 2.5], "x")
+            .with_extra_cols(vec![vec![3.0, 4.0, 5.5], vec![-1.0, 0.0, 1.0]])
+            .unwrap()
+            .with_noise(vec![0.1, 0.2, 0.15])
+            .unwrap();
+        write_dataset(&p, &d).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("t1,t2,t3,y,noise\n"), "{text}");
+        let back = read_dataset(&p).unwrap();
+        assert_eq!(back.d(), 3);
+        assert_eq!(back.t, d.t);
+        assert_eq!(back.extra, d.extra);
+        assert_eq!(back.y, d.y);
+        assert_eq!(back.noise, d.noise);
     }
 
     #[test]
     fn rejects_garbage_row() {
-        let dir = std::env::temp_dir().join("gpfast_csv_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("bad.csv");
+        let p = tmp("bad.csv");
         std::fs::write(&p, "t,y\n1,2\nnope,3\n").unwrap();
         assert!(read_dataset(&p).is_err());
     }
 
     #[test]
+    fn malformed_first_data_row_is_an_error_not_a_header() {
+        // regression: "1.5,oops" has a parsable float, so it is a typo'd
+        // data row — the old reader silently dropped it as a "header"
+        let p = tmp("typo.csv");
+        std::fs::write(&p, "1.5,oops\n2,3\n4,5\n").unwrap();
+        let e = read_dataset(&p).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        // the same tokens in the other order are a typo too
+        std::fs::write(&p, "oops,1.5\n2,3\n4,5\n").unwrap();
+        let e = read_dataset(&p).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        // while a float-free line 0 is still a header
+        std::fs::write(&p, "time,value\n2,3\n4,5\n").unwrap();
+        let back = read_dataset(&p).unwrap();
+        assert_eq!(back.t, vec![2.0, 4.0]);
+        // and a fully numeric line 0 is data
+        std::fs::write(&p, "1,2\n3,4\n").unwrap();
+        let back = read_dataset(&p).unwrap();
+        assert_eq!(back.t, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn headerless_extra_columns_still_ignored() {
+        let p = tmp("wide.csv");
+        std::fs::write(&p, "1,2,99\n3,4,99\n").unwrap();
+        let back = read_dataset(&p).unwrap();
+        assert_eq!(back.t, vec![1.0, 3.0]);
+        assert_eq!(back.y, vec![2.0, 4.0]);
+        assert_eq!(back.d(), 1);
+    }
+
+    #[test]
     fn rejects_non_finite_tokens() {
-        let dir = std::env::temp_dir().join("gpfast_csv_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("nan.csv");
+        let p = tmp("nan.csv");
         std::fs::write(&p, "t,y\n1,2\n2,NaN\n3,4\n").unwrap();
         let e = read_dataset(&p).unwrap_err();
         assert!(e.to_string().contains("non-finite"), "{e}");
@@ -103,9 +278,7 @@ mod tests {
 
     #[test]
     fn columns_writer() {
-        let dir = std::env::temp_dir().join("gpfast_csv_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("c.csv");
+        let p = tmp("c.csv");
         write_columns(&p, &["a", "b"], &[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 3);

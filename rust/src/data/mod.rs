@@ -1,18 +1,33 @@
 //! Dataset handling: synthetic GP draws (§3(a)), the Woods-Hole tidal
 //! simulator (§3(b) substitute — see DESIGN.md §Substitutions), and CSV
 //! import/export.
+//!
+//! ## Input layout (scenario tier)
+//!
+//! A [`Dataset`] is an n×d input block plus observations. Column 0 is
+//! `t` (the time axis of every pre-existing 1-D pipeline); columns
+//! 1..d live in `extra`, so a d = 1 dataset is bit-identical to the
+//! old `{t, y}` layout (`extra` empty). An optional per-point noise
+//! vector `noise` (σ_n,i, in σ_f = 1 units, replacing the model's
+//! scalar σ_n on the diagonal) makes the likelihood heteroscedastic.
 
 pub mod synthetic;
 pub mod tidal;
 pub mod csv;
 
-/// A 1-D regression dataset `{(t_i, y_i)}` — the paper's `D = {x, y}`.
+/// A regression dataset `{(x_i, y_i)}` — the paper's `D = {x, y}` —
+/// with `x_i ∈ ℝ^d` stored column-major (`t` is column 0).
 #[derive(Clone, Debug)]
 pub struct Dataset {
-    /// Input (time) vector.
+    /// First input column (time axis for d = 1 series).
     pub t: Vec<f64>,
+    /// Input columns 1..d (empty for classic 1-D datasets).
+    pub extra: Vec<Vec<f64>>,
     /// Output vector.
     pub y: Vec<f64>,
+    /// Optional per-point noise σ_n,i (heteroscedastic diagonal); `None`
+    /// means the model's scalar σ_n applies to every point.
+    pub noise: Option<Vec<f64>>,
     /// Human-readable provenance tag carried into reports.
     pub label: String,
 }
@@ -20,7 +35,7 @@ pub struct Dataset {
 impl Dataset {
     pub fn new(t: Vec<f64>, y: Vec<f64>, label: impl Into<String>) -> Self {
         assert_eq!(t.len(), y.len(), "t/y length mismatch");
-        Self { t, y, label: label.into() }
+        Self { t, extra: Vec::new(), y, noise: None, label: label.into() }
     }
 
     /// Fallible constructor enforcing the data-boundary contract: every
@@ -36,7 +51,42 @@ impl Dataset {
         for (i, &v) in y.iter().enumerate() {
             anyhow::ensure!(v.is_finite(), "non-finite observation y[{i}] = {v}");
         }
-        Ok(Self { t, y, label: label.into() })
+        Ok(Self { t, extra: Vec::new(), y, noise: None, label: label.into() })
+    }
+
+    /// Attach input columns 1..d (builder style). Each column must match
+    /// `len()` and be finite everywhere.
+    pub fn with_extra_cols(mut self, extra: Vec<Vec<f64>>) -> crate::Result<Self> {
+        for (j, col) in extra.iter().enumerate() {
+            anyhow::ensure!(
+                col.len() == self.t.len(),
+                "input column {} length mismatch: {} vs {}",
+                j + 1,
+                col.len(),
+                self.t.len()
+            );
+            for (i, &v) in col.iter().enumerate() {
+                anyhow::ensure!(v.is_finite(), "non-finite input x{}[{i}] = {v}", j + 1);
+            }
+        }
+        self.extra = extra;
+        Ok(self)
+    }
+
+    /// Attach a per-point noise vector σ_n,i (builder style). Must match
+    /// `len()`; every entry finite and non-negative.
+    pub fn with_noise(mut self, noise: Vec<f64>) -> crate::Result<Self> {
+        anyhow::ensure!(
+            noise.len() == self.t.len(),
+            "noise length mismatch: {} vs {}",
+            noise.len(),
+            self.t.len()
+        );
+        for (i, &v) in noise.iter().enumerate() {
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "bad noise sigma_n[{i}] = {v}");
+        }
+        self.noise = Some(noise);
+        Ok(self)
     }
 
     pub fn len(&self) -> usize {
@@ -47,17 +97,50 @@ impl Dataset {
         self.t.is_empty()
     }
 
-    /// First `n` points (the paper's "first lunar month" style subsetting).
+    /// Number of input dimensions d (≥ 1).
+    pub fn d(&self) -> usize {
+        1 + self.extra.len()
+    }
+
+    /// All d input columns, `t` first — the borrowed layout the nd
+    /// assembly/likelihood entry points consume.
+    pub fn input_cols(&self) -> Vec<&[f64]> {
+        let mut cols: Vec<&[f64]> = Vec::with_capacity(self.d());
+        cols.push(&self.t);
+        for c in &self.extra {
+            cols.push(c);
+        }
+        cols
+    }
+
+    /// Does this dataset carry a per-point (heteroscedastic) noise
+    /// vector?
+    pub fn is_heteroscedastic(&self) -> bool {
+        self.noise.is_some()
+    }
+
+    /// First `n` points (the paper's "first lunar month" style
+    /// subsetting). Safe for any `n`, including `n = 0` and `n > len()`
+    /// — the result is simply clamped (an empty head is a valid empty
+    /// dataset; downstream `span()` reports it as a recoverable error).
     pub fn head(&self, n: usize) -> Dataset {
+        let k = n.min(self.len());
         Dataset {
-            t: self.t[..n.min(self.len())].to_vec(),
-            y: self.y[..n.min(self.len())].to_vec(),
-            label: format!("{}[..{}]", self.label, n.min(self.len())),
+            t: self.t[..k].to_vec(),
+            extra: self.extra.iter().map(|c| c[..k].to_vec()).collect(),
+            y: self.y[..k].to_vec(),
+            noise: self.noise.as_ref().map(|s| s[..k].to_vec()),
+            label: format!("{}[..{}]", self.label, k),
         }
     }
 
     /// Subtract the mean of `y` (the paper assumes zero-mean GPs).
+    /// Empty-safe: an empty dataset passes through unchanged instead of
+    /// producing a 0/0 NaN mean.
     pub fn demean(mut self) -> Dataset {
+        if self.y.is_empty() {
+            return self;
+        }
         let m = self.y.iter().sum::<f64>() / self.len() as f64;
         for v in &mut self.y {
             *v -= m;
@@ -65,9 +148,15 @@ impl Dataset {
         self
     }
 
-    /// The sampling geometry (δt, ΔT).
-    pub fn span(&self) -> crate::kernels::DataSpan {
-        crate::kernels::DataSpan::from_times(&self.t)
+    /// The sampling geometry (δt, ΔT), pooled over all d input columns.
+    /// Errors on degenerate grids (fewer than two points, or a
+    /// dimension with no positive separation) instead of panicking.
+    pub fn span(&self) -> crate::Result<crate::kernels::DataSpan> {
+        if self.extra.is_empty() {
+            crate::kernels::DataSpan::from_times(&self.t)
+        } else {
+            crate::kernels::DataSpan::from_columns(&self.input_cols())
+        }
     }
 }
 
@@ -93,5 +182,62 @@ mod tests {
         assert_eq!(h.y, vec![1.0, 3.0]);
         let dm = d.demean();
         assert!((dm.y.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn head_zero_and_empty_demean_are_safe() {
+        let d = Dataset::new(vec![0.0, 1.0, 2.0], vec![1.0, 3.0, 5.0], "x");
+        let h = d.head(0);
+        assert_eq!(h.len(), 0);
+        assert!(h.is_empty());
+        // span on the empty head is a clean error, not a panic
+        assert!(h.span().is_err());
+        // demean on an empty dataset must not manufacture NaNs
+        let dm = h.demean();
+        assert!(dm.y.is_empty());
+        // head past the end clamps
+        let d = Dataset::new(vec![0.0, 1.0], vec![1.0, 2.0], "x");
+        assert_eq!(d.head(10).len(), 2);
+    }
+
+    #[test]
+    fn span_errors_on_duplicate_times() {
+        let d = Dataset::new(vec![5.0, 5.0, 5.0], vec![1.0, 2.0, 3.0], "dup");
+        let e = d.span().unwrap_err();
+        assert!(e.to_string().contains("degenerate"), "{e}");
+        let one = Dataset::new(vec![5.0], vec![1.0], "one");
+        assert!(one.span().is_err());
+    }
+
+    #[test]
+    fn multi_column_layout() {
+        let d = Dataset::new(vec![0.0, 1.0, 2.0], vec![1.0, 2.0, 3.0], "nd")
+            .with_extra_cols(vec![vec![5.0, 6.0, 8.0], vec![-1.0, 0.5, 0.0]])
+            .unwrap()
+            .with_noise(vec![0.1, 0.2, 0.3])
+            .unwrap();
+        assert_eq!(d.d(), 3);
+        assert!(d.is_heteroscedastic());
+        let cols = d.input_cols();
+        assert_eq!(cols.len(), 3);
+        assert_eq!(cols[1][2], 8.0);
+        let span = d.span().unwrap();
+        assert!(span.dt_min > 0.0 && span.dt_max >= 2.0);
+        let h = d.head(2);
+        assert_eq!(h.extra[0], vec![5.0, 6.0]);
+        assert_eq!(h.noise.as_deref(), Some(&[0.1, 0.2][..]));
+        // ragged/non-finite extras rejected
+        assert!(Dataset::new(vec![0.0, 1.0], vec![1.0, 2.0], "bad")
+            .with_extra_cols(vec![vec![1.0]])
+            .is_err());
+        assert!(Dataset::new(vec![0.0, 1.0], vec![1.0, 2.0], "bad")
+            .with_noise(vec![0.1, -0.2])
+            .is_err());
+        // a constant extra column is a degenerate dimension
+        let flat = Dataset::new(vec![0.0, 1.0, 2.0], vec![1.0, 2.0, 3.0], "flat")
+            .with_extra_cols(vec![vec![7.0, 7.0, 7.0]])
+            .unwrap();
+        let e = flat.span().unwrap_err();
+        assert!(e.to_string().contains("dimension 1"), "{e}");
     }
 }

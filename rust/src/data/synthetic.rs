@@ -30,6 +30,52 @@ pub fn table1_dataset(n: usize, sigma_n: f64, seed: u64) -> Dataset {
     draw_gp_dataset(&model, 1.0, &crate::kernels::PaperK2::truth(), n, &mut rng)
 }
 
+/// Truth hyperparameters of the d = 3 ARD scenario: distinct
+/// per-dimension log length scales `φ = [0.8, 0.0, −0.5]`
+/// (ℓ ≈ 2.2, 1.0, 0.6) — far enough apart that an isotropic fit pays a
+/// visible evidence penalty, which is what the `scenario` bench measures.
+pub fn ard3_truth() -> Vec<f64> {
+    vec![0.8, 0.0, -0.5]
+}
+
+/// A d = 3 ARD scenario dataset, drawn from the `se-ard3` truth
+/// ([`ard3_truth`]): column 0 is the grid `t = 1..n` (keeping the
+/// time-axis convention), columns 1–2 are uniform draws on scales
+/// comparable to the truth length scales. With `heteroscedastic` the
+/// dataset carries a per-point noise vector `σ_n,i ∈ σ_n·[0.5, 2.0)`
+/// (and the realisation is drawn under it); otherwise the model's scalar
+/// σ_n applies.
+pub fn ard3_dataset(n: usize, sigma_n: f64, heteroscedastic: bool, seed: u64) -> Dataset {
+    let model = crate::kernels::CovarianceModel::new(
+        "se-ard3",
+        Box::new(crate::kernels::ArdKernel::se(3)),
+        sigma_n,
+    );
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let t: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+    let x2: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.0, 8.0)).collect();
+    let x3: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.0, 4.0)).collect();
+    let noise: Option<Vec<f64>> = heteroscedastic
+        .then(|| (0..n).map(|_| sigma_n * rng.uniform_in(0.5, 2.0)).collect());
+    let y = crate::gp::sample::draw_realisation_nd(
+        &model,
+        1.0,
+        &ard3_truth(),
+        &[&t, &x2, &x3],
+        noise.as_deref(),
+        &mut rng,
+    )
+    .expect("ARD truth covariance must be positive definite");
+    let label = format!("ard3-n{n}{}", if heteroscedastic { "-hetero" } else { "" });
+    let mut data = Dataset::new(t, y, label)
+        .with_extra_cols(vec![x2, x3])
+        .expect("generated columns are finite and aligned");
+    if let Some(s) = noise {
+        data = data.with_noise(s).expect("generated noise is finite and non-negative");
+    }
+    data
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,6 +94,23 @@ mod tests {
         let a = table1_dataset(50, 0.1, 1);
         let b = table1_dataset(50, 0.1, 2);
         assert!(a.y.iter().zip(&b.y).any(|(x, y)| (x - y).abs() > 1e-6));
+    }
+
+    #[test]
+    fn ard3_dataset_has_three_columns_and_optional_noise() {
+        let d = ard3_dataset(25, 0.1, false, 5);
+        assert_eq!(d.d(), 3);
+        assert_eq!(d.len(), 25);
+        assert!(d.noise.is_none());
+        assert!(d.span().is_ok());
+        let h = ard3_dataset(25, 0.1, true, 5);
+        assert!(h.is_heteroscedastic());
+        let s = h.noise.as_ref().unwrap();
+        assert!(s.iter().all(|&v| v >= 0.05 - 1e-12 && v < 0.2 + 1e-12));
+        // deterministic given the seed
+        let h2 = ard3_dataset(25, 0.1, true, 5);
+        assert_eq!(h.y, h2.y);
+        assert_eq!(h.extra, h2.extra);
     }
 
     #[test]

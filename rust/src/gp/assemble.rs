@@ -135,6 +135,224 @@ pub fn assemble_cov_grads_with(
     (k, grads)
 }
 
+/// Maximum number of input dimensions the nd assembly supports (the
+/// per-pair separation is built in a stack buffer of this size).
+pub const MAX_INPUT_DIM: usize = 8;
+
+#[inline]
+fn noise_var_at(model: &CovarianceModel, noise: Option<&[f64]>, i: usize) -> f64 {
+    match noise {
+        Some(s) => s[i] * s[i],
+        None => model.noise_variance(),
+    }
+}
+
+/// Assemble `K̃ = k̃(x_i − x_j) + σ_n,i² δ_ij` from a d-column input
+/// layout (`x[0]` is the time/first axis) with an optional per-point
+/// noise vector (heteroscedastic diagonal, σ_f = 1 units).
+///
+/// On `d = 1` homoscedastic inputs this *delegates* to
+/// [`assemble_cov_with`] — bit-identical to the pre-scenario path. The
+/// d-dim sweep reuses the same weighted row-tile partition, so nd
+/// matrices are likewise bit-identical across thread counts.
+pub fn assemble_cov_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> Matrix {
+    let d = x.len();
+    if d == 1 && noise.is_none() {
+        return assemble_cov_with(model, x[0], theta, ctx);
+    }
+    assert!(d >= 1 && d <= MAX_INPUT_DIM, "unsupported input dimension {d}");
+    let n = x[0].len();
+    assert!(x.iter().all(|c| c.len() == n), "ragged input columns");
+    if let Some(s) = noise {
+        assert_eq!(s.len(), n, "noise length mismatch");
+    }
+    let mut k = Matrix::zeros(n, n);
+    let jobs = assembly_jobs(n, ctx);
+    let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
+    for_row_chunks(k.as_mut_slice(), n, &bounds, ctx, |chunk, r0, r1| {
+        let mut prep = model.kernel.prepare(theta);
+        let zeros = [0.0; MAX_INPUT_DIM];
+        let k0 = prep.value_nd(&zeros[..d]);
+        let mut dx = [0.0; MAX_INPUT_DIM];
+        for i in r0..r1 {
+            let row = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+            row[i] = k0 + noise_var_at(model, noise, i);
+            for j in (i + 1)..n {
+                for (a, col) in x.iter().enumerate() {
+                    dx[a] = col[i] - col[j];
+                }
+                row[j] = prep.value_nd(&dx[..d]);
+            }
+        }
+    });
+    k.mirror_upper_to_lower();
+    k
+}
+
+/// Assemble `K̃` and all `∂K̃/∂ϑ_a` from a d-column input layout with an
+/// optional per-point noise vector. `d = 1` homoscedastic delegates to
+/// [`assemble_cov_grads_with`]. The noise is *not* learned, so the
+/// derivative matrices carry no diagonal noise term — same contract as
+/// the scalar σ_n path.
+pub fn assemble_cov_grads_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> (Matrix, Vec<Matrix>) {
+    let d = x.len();
+    if d == 1 && noise.is_none() {
+        return assemble_cov_grads_with(model, x[0], theta, ctx);
+    }
+    assert!(d >= 1 && d <= MAX_INPUT_DIM, "unsupported input dimension {d}");
+    let n = x[0].len();
+    assert!(x.iter().all(|c| c.len() == n), "ragged input columns");
+    if let Some(s) = noise {
+        assert_eq!(s.len(), n, "noise length mismatch");
+    }
+    let m = model.dim();
+    let mut k = Matrix::zeros(n, n);
+    let mut grads = vec![Matrix::zeros(n, n); m];
+    let jobs = assembly_jobs(n, ctx);
+    let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
+    {
+        let mut buffers: Vec<(&mut [f64], usize)> = Vec::with_capacity(m + 1);
+        buffers.push((k.as_mut_slice(), n));
+        for g in grads.iter_mut() {
+            buffers.push((g.as_mut_slice(), n));
+        }
+        for_row_chunks_multi(buffers, &bounds, ctx, |chunks, r0, r1| {
+            let mut it = chunks.into_iter();
+            let k_chunk = it.next().expect("value-matrix chunk");
+            let mut g_chunk: Vec<&mut [f64]> = it.collect();
+            let mut prep = model.kernel.prepare(theta);
+            let mut g = vec![0.0; m];
+            let zeros = [0.0; MAX_INPUT_DIM];
+            let k0 = prep.value_grad_nd(&zeros[..d], &mut g);
+            let g_diag = g.clone();
+            let mut dx = [0.0; MAX_INPUT_DIM];
+            for i in r0..r1 {
+                let base = (i - r0) * n;
+                k_chunk[base + i] = k0 + noise_var_at(model, noise, i);
+                for (a, gm) in g_chunk.iter_mut().enumerate() {
+                    gm[base + i] = g_diag[a];
+                }
+                for j in (i + 1)..n {
+                    for (a, col) in x.iter().enumerate() {
+                        dx[a] = col[i] - col[j];
+                    }
+                    let v = prep.value_grad_nd(&dx[..d], &mut g);
+                    k_chunk[base + j] = v;
+                    for (a, gm) in g_chunk.iter_mut().enumerate() {
+                        gm[base + j] = g[a];
+                    }
+                }
+            }
+        });
+    }
+    k.mirror_upper_to_lower();
+    for gmat in &mut grads {
+        gmat.mirror_upper_to_lower();
+    }
+    (k, grads)
+}
+
+/// Hessian pair-contractions (see [`hessian_contractions_with`]) from a
+/// d-column input layout. The diagonal noise never enters `∂²K̃`, so no
+/// noise argument is needed; `d = 1` delegates to the scalar sweep.
+pub fn hessian_contractions_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    theta: &[f64],
+    alpha: &[f64],
+    w: &Matrix,
+    ctx: &ExecutionContext,
+) -> (Matrix, Matrix) {
+    let d = x.len();
+    if d == 1 {
+        return hessian_contractions_with(model, x[0], theta, alpha, w, ctx);
+    }
+    assert!(d >= 1 && d <= MAX_INPUT_DIM, "unsupported input dimension {d}");
+    let n = x[0].len();
+    assert!(x.iter().all(|c| c.len() == n), "ragged input columns");
+    let m = model.dim();
+    assert_eq!(alpha.len(), n);
+    assert_eq!((w.rows(), w.cols()), (n, n));
+    let mut a_c = Matrix::zeros(m, m);
+    let mut b_c = Matrix::zeros(m, m);
+    {
+        let mut prep = model.kernel.prepare(theta);
+        let mut g = vec![0.0; m];
+        let mut h = vec![0.0; m * m];
+        let zeros = [0.0; MAX_INPUT_DIM];
+        prep.value_grad_hess_nd(&zeros[..d], &mut g, &mut h);
+        let diag_alpha: f64 = alpha.iter().map(|x| x * x).sum();
+        let diag_w: f64 = (0..n).map(|i| w[(i, i)]).sum();
+        for a in 0..m {
+            for b in 0..m {
+                a_c[(a, b)] += diag_alpha * h[a * m + b];
+                b_c[(a, b)] += diag_w * h[a * m + b];
+            }
+        }
+    }
+    let jobs = assembly_jobs(n, ctx);
+    let bounds = weighted_bounds(0, n, jobs, |i| (n - i) as f64);
+    let n_chunks = bounds.len() - 1;
+    let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..n_chunks).map(|_| (vec![0.0; m * m], vec![0.0; m * m])).collect();
+    let mut job_fns = Vec::with_capacity(n_chunks);
+    for (slot, wnd) in partials.iter_mut().zip(bounds.windows(2)) {
+        let (r0, r1) = (wnd[0], wnd[1]);
+        job_fns.push(move || {
+            let (a_part, b_part) = slot;
+            let mut prep = model.kernel.prepare(theta);
+            let mut g = vec![0.0; m];
+            let mut h = vec![0.0; m * m];
+            let mut dx = [0.0; MAX_INPUT_DIM];
+            for i in r0..r1 {
+                for j in (i + 1)..n {
+                    for (a, col) in x.iter().enumerate() {
+                        dx[a] = col[i] - col[j];
+                    }
+                    prep.value_grad_hess_nd(&dx[..d], &mut g, &mut h);
+                    let wa = 2.0 * alpha[i] * alpha[j];
+                    let ww = 2.0 * w[(i, j)];
+                    for a in 0..m {
+                        for b in a..m {
+                            let hv = h[a * m + b];
+                            a_part[a * m + b] += wa * hv;
+                            b_part[a * m + b] += ww * hv;
+                        }
+                    }
+                }
+            }
+        });
+    }
+    ctx.run_jobs(job_fns);
+    for (a_part, b_part) in &partials {
+        for a in 0..m {
+            for b in a..m {
+                a_c[(a, b)] += a_part[a * m + b];
+                b_c[(a, b)] += b_part[a * m + b];
+            }
+        }
+    }
+    for a in 0..m {
+        for b in 0..a {
+            a_c[(a, b)] = a_c[(b, a)];
+            b_c[(a, b)] = b_c[(b, a)];
+        }
+    }
+    (a_c, b_c)
+}
+
 /// Stream the per-pair kernel Hessians `∂²k̃/∂ϑ_a∂ϑ_b (t_i − t_j)` into the
 /// two contractions the profiled Hessian (eq. 2.19) needs (serial):
 ///
@@ -360,6 +578,91 @@ mod tests {
         }
         assert!(a_c.max_abs_diff(&a_ref) < 1e-10, "A: {}", a_c.max_abs_diff(&a_ref));
         assert!(b_c.max_abs_diff(&b_ref) < 1e-10, "B: {}", b_c.max_abs_diff(&b_ref));
+    }
+
+    #[test]
+    fn nd_assembly_d1_constant_noise_matches_scalar_bitwise() {
+        // per-point noise vector filled with the model's σ_n must give
+        // exactly the scalar-path matrix (same float ops on the diagonal)
+        let model = paper_k1(0.1);
+        let t = grid(50);
+        let theta = PaperK1::truth();
+        let noise = vec![0.1; t.len()];
+        let ctx = ExecutionContext::seq();
+        let k_s = assemble_cov(&model, &t, &theta);
+        let k_nd = assemble_cov_nd_with(&model, &[&t], Some(&noise), &theta, &ctx);
+        assert_eq!(k_nd.max_abs_diff(&k_s), 0.0);
+        let (kg_s, g_s) = assemble_cov_grads(&model, &t, &theta);
+        let (kg_nd, g_nd) = assemble_cov_grads_nd_with(&model, &[&t], Some(&noise), &theta, &ctx);
+        assert_eq!(kg_nd.max_abs_diff(&kg_s), 0.0);
+        for (gp, gs) in g_nd.iter().zip(&g_s) {
+            assert_eq!(gp.max_abs_diff(gs), 0.0);
+        }
+    }
+
+    #[test]
+    fn nd_parallel_assembly_is_bit_identical() {
+        use crate::kernels::{ArdKernel, CovarianceModel};
+        let model = CovarianceModel::new("se-ard3", Box::new(ArdKernel::se(3)), 0.1);
+        for n in [40usize, 90] {
+            let cols: Vec<Vec<f64>> = (0..3)
+                .map(|a| (0..n).map(|i| ((i * 7 + a * 3) % 23) as f64 * 0.31 + i as f64 * 0.01).collect())
+                .collect();
+            let x: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+            let noise: Vec<f64> = (0..n).map(|i| 0.05 + 0.001 * i as f64).collect();
+            let theta = [0.3, 0.0, -0.3];
+            let seq = ExecutionContext::seq();
+            let k_s = assemble_cov_nd_with(&model, &x, Some(&noise), &theta, &seq);
+            let (kg_s, g_s) = assemble_cov_grads_nd_with(&model, &x, Some(&noise), &theta, &seq);
+            assert_eq!(k_s.max_abs_diff(&kg_s), 0.0, "value matrix differs between entry points");
+            for threads in [2usize, 4] {
+                let ctx = ExecutionContext::new(threads);
+                let k_p = assemble_cov_nd_with(&model, &x, Some(&noise), &theta, &ctx);
+                assert_eq!(k_p.max_abs_diff(&k_s), 0.0, "n={n} threads={threads}");
+                let (kg_p, g_p) = assemble_cov_grads_nd_with(&model, &x, Some(&noise), &theta, &ctx);
+                assert_eq!(kg_p.max_abs_diff(&kg_s), 0.0);
+                for (a, (gp, gs)) in g_p.iter().zip(&g_s).enumerate() {
+                    assert_eq!(gp.max_abs_diff(gs), 0.0, "n={n} grad[{a}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nd_grads_match_fd_and_heteroscedastic_diagonal() {
+        use crate::kernels::{ArdKernel, CovarianceModel};
+        let model = CovarianceModel::new("m52-ard2", Box::new(ArdKernel::m52(2)), 0.2);
+        let n = 12;
+        let c0: Vec<f64> = (0..n).map(|i| i as f64 * 0.9).collect();
+        let c1: Vec<f64> = (0..n).map(|i| ((i * 5) % 7) as f64 * 0.6).collect();
+        let x: Vec<&[f64]> = vec![&c0, &c1];
+        let noise: Vec<f64> = (0..n).map(|i| 0.1 + 0.02 * i as f64).collect();
+        let theta = [0.2, -0.1];
+        let ctx = ExecutionContext::seq();
+        let (k, grads) = assemble_cov_grads_nd_with(&model, &x, Some(&noise), &theta, &ctx);
+        for i in 0..n {
+            let expect = 1.0 + noise[i] * noise[i]; // k(0) = 1 for ARD Matérn
+            assert!((k[(i, i)] - expect).abs() < 1e-14, "diag[{i}]");
+        }
+        for a in 0..2 {
+            let h = 1e-6;
+            let mut tp = theta;
+            let mut tm = theta;
+            tp[a] += h;
+            tm[a] -= h;
+            let kp = assemble_cov_nd_with(&model, &x, Some(&noise), &tp, &ctx);
+            let km = assemble_cov_nd_with(&model, &x, Some(&noise), &tm, &ctx);
+            for i in 0..n {
+                for j in 0..n {
+                    let fd = (kp[(i, j)] - km[(i, j)]) / (2.0 * h);
+                    assert!(
+                        (grads[a][(i, j)] - fd).abs() < 1e-6 * fd.abs().max(1e-4),
+                        "a={a} ({i},{j}): {} vs {fd}",
+                        grads[a][(i, j)]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

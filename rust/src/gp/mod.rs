@@ -31,8 +31,9 @@ pub mod serve;
 pub mod sample;
 
 pub use assemble::{
-    assemble_cov, assemble_cov_grads, assemble_cov_grads_with, assemble_cov_with,
-    hessian_contractions, hessian_contractions_with,
+    assemble_cov, assemble_cov_grads, assemble_cov_grads_nd_with, assemble_cov_grads_with,
+    assemble_cov_nd_with, assemble_cov_with, hessian_contractions, hessian_contractions_nd_with,
+    hessian_contractions_with, MAX_INPUT_DIM,
 };
 pub use full::{
     full_hessian, full_hessian_with, full_lnp, full_lnp_grad, full_lnp_grad_with, full_lnp_with,
@@ -40,8 +41,8 @@ pub use full::{
 pub use predict::predict;
 pub use approx::ApproxKind;
 pub use profiled::{
-    eval_count as profiled_eval_count, marg_constant, profiled_hessian, profiled_hessian_with,
-    toeplitz_hit_count, CounterDelta, CounterSnapshot, ProfiledEval,
+    eval_count as profiled_eval_count, marg_constant, profiled_hessian, profiled_hessian_nd_with,
+    profiled_hessian_with, toeplitz_hit_count, CounterDelta, CounterSnapshot, ProfiledEval,
 };
 pub use sample::draw_realisation;
 pub use serve::{Predictor, ServeStats};

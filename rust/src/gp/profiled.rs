@@ -25,7 +25,10 @@ use crate::linalg::{dot, Chol, Ldlt, Matrix};
 use crate::math::{lgamma, LN_2PI_E};
 use crate::runtime::exec::{even_bounds, for_row_chunks, ExecutionContext};
 
-use super::assemble::{assemble_cov_grads_with, assemble_cov_with, hessian_contractions_with};
+use super::assemble::{
+    assemble_cov_grads_nd_with, assemble_cov_grads_with, assemble_cov_nd_with, assemble_cov_with,
+    hessian_contractions_nd_with, hessian_contractions_with,
+};
 
 /// Process-global count of profiled-likelihood evaluations (every
 /// factor-producing evaluation flows through
@@ -471,6 +474,67 @@ pub fn eval_grad_with(
     Ok((ev, g))
 }
 
+/// Evaluate `ln P_max` on an n×d input block with an optional per-point
+/// noise vector (heteroscedastic diagonal `K̃_ii += σ_n,i²` replacing the
+/// model's scalar σ_n²). With `x.len() == 1` and no noise this **is**
+/// [`eval_with`] — same call chain, bit-identical.
+pub fn eval_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<ProfiledEval> {
+    if x.len() == 1 && noise.is_none() {
+        return eval_with(model, x[0], y, theta, ctx);
+    }
+    let k = assemble_cov_nd_with(model, x, noise, theta, ctx);
+    ProfiledEval::from_cov_with(k, y, ctx)
+}
+
+/// Value-only `ln P_max` on an n×d input block with optional per-point
+/// noise. The Toeplitz/Levinson fast path is only reachable through the
+/// scalar delegation (`d == 1`, no noise): a heteroscedastic diagonal
+/// breaks the constant-diagonal Toeplitz structure even on a uniform
+/// grid, so non-constant noise *structurally* bypasses the fast path —
+/// [`toeplitz_hit_count`] stays flat.
+pub fn eval_value_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<f64> {
+    if x.len() == 1 && noise.is_none() {
+        return eval_value_with(model, x[0], y, theta, ctx);
+    }
+    eval_nd_with(model, x, noise, y, theta, ctx).map(|e| e.lnp)
+}
+
+/// Evaluate `ln P_max` and its gradient on an n×d input block with
+/// optional per-point noise. The noise vector is data, not a
+/// hyperparameter: `∂K̃/∂ϑ_a` is unchanged by it, so eq. (2.17) applies
+/// verbatim with the heteroscedastic factor.
+pub fn eval_grad_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<(ProfiledEval, Vec<f64>)> {
+    if x.len() == 1 && noise.is_none() {
+        return eval_grad_with(model, x[0], y, theta, ctx);
+    }
+    let (k, grads) = assemble_cov_grads_nd_with(model, x, noise, theta, ctx);
+    let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+    let w = ev.inverse_with(ctx);
+    let g = ev.gradient_with(&grads, &w, ctx);
+    Ok((ev, g))
+}
+
 /// The Hessian `H = −∂²ln P_max/∂ϑ∂ϑ'` at (or near) the peak — eq. (2.19),
 /// serial.
 ///
@@ -579,6 +643,58 @@ pub(crate) fn pairwise_d2_with(
         }
     });
     out
+}
+
+/// Eq.-2.19 Hessian on an n×d input block with optional per-point noise.
+/// Σ_n is ϑ-independent, so the second-derivative contractions are those
+/// of the noiseless kernel — only the factor and `W = K̃⁻¹` see the
+/// heteroscedastic diagonal.
+pub fn profiled_hessian_nd_with(
+    model: &CovarianceModel,
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    y: &[f64],
+    theta: &[f64],
+    ctx: &ExecutionContext,
+) -> crate::Result<Matrix> {
+    if x.len() == 1 && noise.is_none() {
+        return profiled_hessian_with(model, x[0], y, theta, ctx);
+    }
+    let m = model.dim();
+    let n = y.len();
+    let (k, grads) = assemble_cov_grads_nd_with(model, x, noise, theta, ctx);
+    let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+    let w = ev.inverse_with(ctx);
+    let s2 = ev.sigma_f_hat2;
+
+    let mut v = Vec::with_capacity(m);
+    let mut q = Vec::with_capacity(m);
+    let mut wm = Vec::with_capacity(m);
+    for dk in &grads {
+        let va = dk.matvec(&ev.alpha);
+        q.push(dot(&ev.alpha, &va));
+        v.push(va);
+        wm.push(w.matmul_with(dk, ctx));
+    }
+    let wmt: Vec<Matrix> = wm.iter().map(|ma| ma.transpose()).collect();
+    let (a_c, b_c) = hessian_contractions_nd_with(model, x, theta, &ev.alpha, &w, ctx);
+
+    let d2 = pairwise_d2_with(n, m, &w, &wm, &wmt, &v, ctx);
+    let mut h = Matrix::zeros(m, m);
+    let mut idx = 0;
+    for a in 0..m {
+        for b in a..m {
+            let (tr_ab, vwv) = d2[idx];
+            idx += 1;
+            let val = q[a] * q[b] / (2.0 * n as f64 * s2 * s2)
+                - (2.0 * vwv - a_c[(a, b)]) / (2.0 * s2)
+                + 0.5 * tr_ab
+                - 0.5 * b_c[(a, b)];
+            h[(a, b)] = -val;
+            h[(b, a)] = -val;
+        }
+    }
+    Ok(h)
 }
 
 /// The additive constant converting `ln P_max` into the σ_f-marginalised
@@ -740,6 +856,102 @@ mod tests {
         let dense = eval(&model, &t, &y, &theta).unwrap().lnp;
         let v = eval_value(&model, &t, &y, &theta).unwrap();
         assert_eq!(v, dense);
+    }
+
+    /// d = 1 with a *constant* per-point noise vector must reproduce the
+    /// scalar-σ_n evaluation bitwise (diagonal entries are the same
+    /// `s·s` product), and the no-noise nd call is the scalar call.
+    #[test]
+    fn nd_eval_d1_matches_scalar() {
+        let (model, t, y) = small_problem();
+        let theta = PaperK1::truth();
+        let ctx = ExecutionContext::seq();
+        let (ev_s, g_s) = eval_grad_with(&model, &t, &y, &theta, &ctx).unwrap();
+        let (ev_n, g_n) =
+            eval_grad_nd_with(&model, &[&t], None, &y, &theta, &ctx).unwrap();
+        assert_eq!(ev_n.lnp, ev_s.lnp);
+        assert_eq!(g_n, g_s);
+        // constant noise vector == scalar σ_n on the diagonal, bitwise
+        let noise = vec![model.sigma_n; y.len()];
+        let (ev_c, g_c) =
+            eval_grad_nd_with(&model, &[&t], Some(&noise), &y, &theta, &ctx).unwrap();
+        assert_eq!(ev_c.lnp, ev_s.lnp);
+        assert_eq!(ev_c.sigma_f_hat2, ev_s.sigma_f_hat2);
+        assert_eq!(g_c, g_s);
+        let h_s = profiled_hessian_with(&model, &t, &y, &theta, &ctx).unwrap();
+        let h_c =
+            profiled_hessian_nd_with(&model, &[&t], Some(&noise), &y, &theta, &ctx).unwrap();
+        assert_eq!(h_c.max_abs_diff(&h_s), 0.0);
+    }
+
+    /// Regression guard for the scenario tier's Toeplitz contract: a
+    /// bitwise-uniform grid with *non-constant* per-point noise must NOT
+    /// engage the Levinson fast path — the heteroscedastic diagonal
+    /// breaks the Toeplitz structure. Thread-local counters make the
+    /// zero-hit assertion immune to parallel tests.
+    #[test]
+    fn toeplitz_stays_cold_under_heteroscedastic_noise() {
+        let (model, t, y) = small_problem();
+        let theta = PaperK1::truth();
+        assert!(uniform_grid_step(&t).is_some());
+        let ctx = ExecutionContext::seq();
+        // sanity: without noise the same grid DOES hit the fast path
+        let snap = CounterSnapshot::take();
+        eval_value_nd_with(&model, &[&t], None, &y, &theta, &ctx).unwrap();
+        assert_eq!(snap.delta().toeplitz_hits, 1, "no-noise path should hit");
+        // non-constant noise: dense route, zero fast-path hits
+        let noise: Vec<f64> = (0..y.len()).map(|i| 0.05 + 0.01 * i as f64).collect();
+        let snap = CounterSnapshot::take();
+        let lnp = eval_value_nd_with(&model, &[&t], Some(&noise), &y, &theta, &ctx).unwrap();
+        let d = snap.delta();
+        assert_eq!(d.toeplitz_hits, 0, "hetero noise must bypass Toeplitz");
+        assert_eq!(d.evals, 1, "dense route still counts one evaluation");
+        assert!(lnp.is_finite());
+    }
+
+    /// Heteroscedastic gradient and Hessian against finite differences on
+    /// a d = 2 ARD problem — the nd analytic chain end to end.
+    #[test]
+    fn nd_heteroscedastic_grad_and_hessian_match_fd() {
+        let kernel = crate::kernels::ArdKernel::m32(2);
+        let model = CovarianceModel::new("m32-ard2", Box::new(kernel), 0.1);
+        let n = 20;
+        let mut rng = Xoshiro256::seed_from_u64(4242);
+        let t: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+        let x2: Vec<f64> = (0..n).map(|_| rng.uniform_in(-3.0, 3.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let noise: Vec<f64> = (0..n).map(|_| 0.05 + 0.2 * rng.uniform()).collect();
+        let x: Vec<&[f64]> = vec![&t, &x2];
+        let theta = vec![0.4, -0.3];
+        let ctx = ExecutionContext::seq();
+        let (_, g) = eval_grad_nd_with(&model, &x, Some(&noise), &y, &theta, &ctx).unwrap();
+        let hess =
+            profiled_hessian_nd_with(&model, &x, Some(&noise), &y, &theta, &ctx).unwrap();
+        let h = 1e-5;
+        for a in 0..2 {
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let fp = eval_value_nd_with(&model, &x, Some(&noise), &y, &tp, &ctx).unwrap();
+            let fm = eval_value_nd_with(&model, &x, Some(&noise), &y, &tm, &ctx).unwrap();
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                crate::math::rel_diff(g[a], fd) < 1e-4,
+                "grad[{a}]: analytic {} vs FD {fd}",
+                g[a]
+            );
+            let (_, gp) = eval_grad_nd_with(&model, &x, Some(&noise), &y, &tp, &ctx).unwrap();
+            let (_, gm) = eval_grad_nd_with(&model, &x, Some(&noise), &y, &tm, &ctx).unwrap();
+            for b in 0..2 {
+                let fd = -(gp[b] - gm[b]) / (2.0 * h);
+                assert!(
+                    crate::math::rel_diff(hess[(a, b)], fd) < 1e-3,
+                    "H[{a},{b}]: analytic {} vs FD {fd}",
+                    hess[(a, b)]
+                );
+            }
+        }
     }
 
     #[test]

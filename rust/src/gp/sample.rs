@@ -3,8 +3,9 @@
 
 use crate::kernels::CovarianceModel;
 use crate::rng::{MultivariateNormal, Xoshiro256};
+use crate::runtime::exec::ExecutionContext;
 
-use super::assemble::assemble_cov;
+use super::assemble::{assemble_cov, assemble_cov_nd_with};
 
 /// Draw one realisation of the GP (including the σ_n measurement noise)
 /// at the inputs `t`.
@@ -21,6 +22,28 @@ pub fn draw_realisation(
         *v *= s2;
     }
     let mvn = MultivariateNormal::new(vec![0.0; t.len()], &k)?;
+    Ok(mvn.sample(rng))
+}
+
+/// Draw one realisation of the GP over an n×d input block (`x` is d
+/// columns), with either the model's scalar σ_n or a per-point noise
+/// vector on the diagonal. The d = 1 homoscedastic case matches
+/// [`draw_realisation`] bitwise (the nd assembly delegates).
+pub fn draw_realisation_nd(
+    model: &CovarianceModel,
+    sigma_f: f64,
+    theta: &[f64],
+    x: &[&[f64]],
+    noise: Option<&[f64]>,
+    rng: &mut Xoshiro256,
+) -> crate::Result<Vec<f64>> {
+    anyhow::ensure!(!x.is_empty(), "need at least one input column");
+    let mut k = assemble_cov_nd_with(model, x, noise, theta, &ExecutionContext::seq());
+    let s2 = sigma_f * sigma_f;
+    for v in k.as_mut_slice() {
+        *v *= s2;
+    }
+    let mvn = MultivariateNormal::new(vec![0.0; x[0].len()], &k)?;
     Ok(mvn.sample(rng))
 }
 

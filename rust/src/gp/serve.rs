@@ -38,7 +38,7 @@ use crate::runtime::exec::{
     even_bounds, for_row_chunks, for_row_chunks_multi, ExecutionContext, PAR_MIN_WORK,
 };
 
-use super::assemble::assemble_cov_with;
+use super::assemble::{assemble_cov_nd_with, assemble_cov_with, MAX_INPUT_DIM};
 use super::predict::Prediction;
 use super::profiled::ProfiledEval;
 
@@ -77,6 +77,13 @@ pub struct Predictor {
     model: CovarianceModel,
     theta: Vec<f64>,
     t: Vec<f64>,
+    /// Input columns 1..d (empty for classic 1-D sessions — every scalar
+    /// method requires this empty, keeping the pre-scenario paths
+    /// untouched).
+    extra: Vec<Vec<f64>>,
+    /// Per-point noise σ_n,i behind the factor's diagonal (`None` ⇒ the
+    /// model's scalar σ_n everywhere).
+    noise: Option<Vec<f64>>,
     y: Vec<f64>,
     chol: Chol,
     alpha: Vec<f64>,
@@ -106,6 +113,33 @@ impl Predictor {
         Ok(Self::from_eval(model, t.to_vec(), y.to_vec(), theta.to_vec(), ev))
     }
 
+    /// [`Predictor::fit`] on an n×d input block with optional per-point
+    /// noise — assemble through the nd path (which delegates bitwise to
+    /// the scalar assembly when `x.len() == 1` and no noise), factor
+    /// once, serve from the cache.
+    pub fn fit_nd(
+        model: CovarianceModel,
+        x: &[&[f64]],
+        noise: Option<&[f64]>,
+        y: &[f64],
+        theta: &[f64],
+        ctx: &ExecutionContext,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!x.is_empty(), "need at least one input column");
+        let k = assemble_cov_nd_with(&model, x, noise, theta, ctx);
+        let ev = ProfiledEval::from_cov_with(k, y, ctx)?;
+        let extra: Vec<Vec<f64>> = x[1..].iter().map(|c| c.to_vec()).collect();
+        Ok(Self::from_eval_nd(
+            model,
+            x[0].to_vec(),
+            extra,
+            noise.map(|s| s.to_vec()),
+            y.to_vec(),
+            theta.to_vec(),
+            ev,
+        ))
+    }
+
     /// Adopt a training-time evaluation (peak ϑ̂, eq. 2.6) without
     /// refactorising: the [`ProfiledEval`]'s factor and `α` *are* the
     /// serving cache.
@@ -123,6 +157,8 @@ impl Predictor {
             model,
             theta,
             t,
+            extra: Vec::new(),
+            noise: None,
             y,
             chol: ev.chol,
             alpha: ev.alpha,
@@ -132,6 +168,48 @@ impl Predictor {
             observations: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
         }
+    }
+
+    /// [`Predictor::from_eval`] for an n×d input block with an optional
+    /// per-point noise vector — the evaluation must have been produced by
+    /// the nd likelihood ([`super::profiled::eval_nd_with`]) on exactly
+    /// these inputs. With `extra` empty and no noise this is
+    /// [`Predictor::from_eval`].
+    pub fn from_eval_nd(
+        model: CovarianceModel,
+        t: Vec<f64>,
+        extra: Vec<Vec<f64>>,
+        noise: Option<Vec<f64>>,
+        y: Vec<f64>,
+        theta: Vec<f64>,
+        ev: ProfiledEval,
+    ) -> Self {
+        assert!(1 + extra.len() <= MAX_INPUT_DIM, "input dim {} > max", 1 + extra.len());
+        for col in &extra {
+            assert_eq!(col.len(), t.len(), "input column length mismatch");
+        }
+        if let Some(s) = &noise {
+            assert_eq!(s.len(), t.len(), "noise length mismatch");
+        }
+        let mut p = Self::from_eval(model, t, y, theta, ev);
+        p.extra = extra;
+        p.noise = noise;
+        p
+    }
+
+    /// Attach nd state (input columns 1..d, per-point noise) to a
+    /// predictor hydrated through a scalar-shaped path — the artifact
+    /// readers use this, since the factor itself is layout-agnostic.
+    pub fn attach_input_block(&mut self, extra: Vec<Vec<f64>>, noise: Option<Vec<f64>>) {
+        assert!(1 + extra.len() <= MAX_INPUT_DIM, "input dim {} > max", 1 + extra.len());
+        for col in &extra {
+            assert_eq!(col.len(), self.t.len(), "input column length mismatch");
+        }
+        if let Some(s) = &noise {
+            assert_eq!(s.len(), self.t.len(), "noise length mismatch");
+        }
+        self.extra = extra;
+        self.noise = noise;
     }
 
     /// Adopt a predictor straight from **borrowed artifact-view parts**
@@ -164,6 +242,8 @@ impl Predictor {
             model,
             theta: theta.to_vec(),
             t: t.to_vec(),
+            extra: Vec::new(),
+            noise: None,
             y: y.to_vec(),
             chol: Chol::from_packed_lower(packed_l, n, logdet),
             alpha: alpha.to_vec(),
@@ -195,6 +275,32 @@ impl Predictor {
     /// The output values paired with [`Predictor::t`].
     pub fn y(&self) -> &[f64] {
         &self.y
+    }
+
+    /// Number of input dimensions d (≥ 1).
+    pub fn d(&self) -> usize {
+        1 + self.extra.len()
+    }
+
+    /// Input columns 1..d behind the factor (empty for 1-D sessions).
+    pub fn extra(&self) -> &[Vec<f64>] {
+        &self.extra
+    }
+
+    /// Per-point noise σ_n,i behind the factor (`None` ⇒ homoscedastic).
+    pub fn noise(&self) -> Option<&[f64]> {
+        self.noise.as_deref()
+    }
+
+    /// All d input columns, `t` first — the layout the nd likelihood
+    /// entry points consume.
+    pub fn input_cols(&self) -> Vec<&[f64]> {
+        let mut cols: Vec<&[f64]> = Vec::with_capacity(self.d());
+        cols.push(&self.t);
+        for c in &self.extra {
+            cols.push(c);
+        }
+        cols
     }
 
     /// The covariance model the predictor serves with.
@@ -256,6 +362,11 @@ impl Predictor {
     /// element of `t_star`, through the cached factor (see module docs;
     /// never refactorises).
     pub fn predict_batch(&self, t_star: &[f64], ctx: &ExecutionContext) -> Prediction {
+        assert!(
+            self.extra.is_empty(),
+            "scalar predict_batch on a {}-dim predictor — use predict_rows",
+            self.d()
+        );
         let q = t_star.len();
         let n = self.t.len();
         let mut mean = vec![0.0; q];
@@ -307,6 +418,74 @@ impl Predictor {
         Prediction { mean, sd }
     }
 
+    /// Serve one batch of d-dimensional query points (`x_star` is d
+    /// columns, each of length q — the same column layout as
+    /// [`Predictor::input_cols`]): eq. (2.1) through the cached factor,
+    /// never refactorising. For a 1-D predictor this delegates to
+    /// [`Predictor::predict_batch`] (bit-identical; the per-point noise
+    /// never enters the latent predictive variance).
+    pub fn predict_rows(&self, x_star: &[&[f64]], ctx: &ExecutionContext) -> Prediction {
+        assert_eq!(x_star.len(), self.d(), "query dim {} vs predictor d {}", x_star.len(), self.d());
+        if self.extra.is_empty() {
+            return self.predict_batch(x_star[0], ctx);
+        }
+        let q = x_star[0].len();
+        for c in x_star {
+            assert_eq!(c.len(), q, "ragged query columns");
+        }
+        let n = self.t.len();
+        let d = self.d();
+        let mut mean = vec![0.0; q];
+        let mut sd = vec![0.0; q];
+        if q == 0 {
+            return Prediction { mean, sd };
+        }
+        self.queries.fetch_add(q, Ordering::Relaxed);
+        let jobs = if q * n < PAR_MIN_WORK { 1 } else { ctx.threads().min(q) };
+        let bounds = even_bounds(0, q, jobs);
+        let mut work = Matrix::zeros(q, n);
+        {
+            let (model, theta, alpha) = (&self.model, &self.theta, &self.alpha);
+            let cols = self.input_cols();
+            let cols_ref = &cols;
+            for_row_chunks_multi(
+                vec![(work.as_mut_slice(), n), (&mut mean[..], 1)],
+                &bounds,
+                ctx,
+                |chunks, r0, r1| {
+                    let mut it = chunks.into_iter();
+                    let wchunk = it.next().expect("cross-covariance chunk");
+                    let mchunk = it.next().expect("mean chunk");
+                    let mut prep = model.kernel.prepare(theta);
+                    let mut dx = [0.0f64; MAX_INPUT_DIM];
+                    for r in r0..r1 {
+                        let row = &mut wchunk[(r - r0) * n..(r - r0 + 1) * n];
+                        for i in 0..n {
+                            for (j, col) in cols_ref.iter().enumerate() {
+                                dx[j] = x_star[j][r] - col[i];
+                            }
+                            row[i] = prep.value_nd(&dx[..d]);
+                        }
+                        mchunk[r - r0] = dot(row, alpha);
+                    }
+                },
+            );
+        }
+        self.chol.half_solve_rows_with(&mut work, ctx);
+        let zero = [0.0f64; MAX_INPUT_DIM];
+        let k_ss = self.model.kernel.prepare(&self.theta).value_nd(&zero[..d]);
+        let s2 = self.sigma_f_hat2;
+        let work_ref = &work;
+        for_row_chunks(&mut sd, 1, &bounds, ctx, |chunk, r0, r1| {
+            for r in r0..r1 {
+                let w = work_ref.row(r);
+                let var = s2 * (k_ss - dot(w, w));
+                chunk[r - r0] = var.max(0.0).sqrt();
+            }
+        });
+        Prediction { mean, sd }
+    }
+
     /// Log predictive density of a single would-be observation under the
     /// **current** state: `ln N(y | μ(t), σ²(t) + σ̂_f²·σ_n²)` — the
     /// latent predictive variance plus the model's (scaled) noise floor.
@@ -335,6 +514,11 @@ impl Predictor {
     /// [`Predictor::observe_scored`] absorption right after pays **one**
     /// `O(n²)` solve per point instead of two (score, then extend).
     pub fn score_observation(&self, t_new: f64, y_new: f64) -> ScoredObservation {
+        assert!(
+            self.extra.is_empty() && self.noise.is_none(),
+            "scalar score_observation on an nd/heteroscedastic predictor — \
+             use score_observation_row"
+        );
         let mut prep = self.model.kernel.prepare(&self.theta);
         let k: Vec<f64> = self.t.iter().map(|&ti| prep.value(ti - t_new)).collect();
         let mean = dot(&k, &self.alpha);
@@ -344,6 +528,61 @@ impl Predictor {
         let score =
             -0.5 * ((y_new - mean) * (y_new - mean) / var + var.ln() + crate::math::LN_2PI);
         ScoredObservation { score, pivot: d, w }
+    }
+
+    /// [`Predictor::score_observation`] for a d-dimensional candidate
+    /// row. A heteroscedastic predictor requires the new point's own σ_n
+    /// (`sigma_n_new`); a homoscedastic one requires `None` (the model's
+    /// scalar σ_n applies) — mixing the two is an error, not a silent
+    /// noise-floor change.
+    pub fn score_observation_row(
+        &self,
+        x_new: &[f64],
+        y_new: f64,
+        sigma_n_new: Option<f64>,
+    ) -> crate::Result<ScoredObservation> {
+        anyhow::ensure!(
+            x_new.len() == self.d(),
+            "observation dim {} vs predictor d {}",
+            x_new.len(),
+            self.d()
+        );
+        anyhow::ensure!(
+            x_new.iter().all(|v| v.is_finite()) && y_new.is_finite(),
+            "non-finite observation rejected at the data boundary"
+        );
+        anyhow::ensure!(
+            self.noise.is_some() == sigma_n_new.is_some(),
+            "noise contract mismatch: predictor {} but observation σ_n is {:?}",
+            if self.noise.is_some() { "is heteroscedastic" } else { "is homoscedastic" },
+            sigma_n_new
+        );
+        let noise_var = match sigma_n_new {
+            Some(s) => {
+                anyhow::ensure!(s.is_finite() && s >= 0.0, "bad observation σ_n = {s}");
+                s * s
+            }
+            None => self.model.noise_variance(),
+        };
+        let d = self.d();
+        let cols = self.input_cols();
+        let mut prep = self.model.kernel.prepare(&self.theta);
+        let mut dx = [0.0f64; MAX_INPUT_DIM];
+        let mut k = Vec::with_capacity(self.t.len());
+        for i in 0..self.t.len() {
+            for (j, col) in cols.iter().enumerate() {
+                dx[j] = col[i] - x_new[j];
+            }
+            k.push(prep.value_nd(&dx[..d]));
+        }
+        let mean = dot(&k, &self.alpha);
+        let w = self.chol.half_solve(&k);
+        let zero = [0.0f64; MAX_INPUT_DIM];
+        let pivot = prep.value_nd(&zero[..d]) + noise_var - dot(&w, &w);
+        let var = (self.sigma_f_hat2 * pivot).max(1e-300);
+        let score =
+            -0.5 * ((y_new - mean) * (y_new - mean) / var + var.ln() + crate::math::LN_2PI);
+        Ok(ScoredObservation { score, pivot, w })
     }
 
     /// Absorb an observation whose solve was already done by
@@ -375,6 +614,10 @@ impl Predictor {
         scored: ScoredObservation,
     ) -> crate::Result<()> {
         anyhow::ensure!(
+            self.extra.is_empty() && self.noise.is_none(),
+            "scalar observe on an nd/heteroscedastic predictor — use the row variants"
+        );
+        anyhow::ensure!(
             t_new.is_finite() && y_new.is_finite(),
             "non-finite observation (t = {t_new}, y = {y_new}) rejected at the data boundary"
         );
@@ -390,6 +633,69 @@ impl Predictor {
         self.t.push(t_new);
         self.y.push(y_new);
         self.observations.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Absorb one d-dimensional observation already scored by
+    /// [`Predictor::score_observation_row`] **without** the `α`/`σ̂_f²`
+    /// refresh — the windowed absorb path's row twin of
+    /// [`Predictor::observe_scored_deferred`]. The caller must refresh
+    /// (or adopt a cold refit) before serving.
+    pub(crate) fn observe_scored_row_deferred(
+        &mut self,
+        x_new: &[f64],
+        y_new: f64,
+        sigma_n_new: Option<f64>,
+        scored: ScoredObservation,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            x_new.len() == self.d(),
+            "observation dim {} vs predictor d {}",
+            x_new.len(),
+            self.d()
+        );
+        anyhow::ensure!(
+            x_new.iter().all(|v| v.is_finite()) && y_new.is_finite(),
+            "non-finite observation rejected at the data boundary"
+        );
+        anyhow::ensure!(
+            self.noise.is_some() == sigma_n_new.is_some(),
+            "noise contract mismatch on absorb"
+        );
+        anyhow::ensure!(
+            scored.w.len() == self.t.len(),
+            "scored observation is stale: solved against n = {}, factor has n = {}",
+            scored.w.len(),
+            self.t.len()
+        );
+        self.chol
+            .extend_solved(&scored.w, scored.pivot)
+            .map_err(|e| anyhow::anyhow!("observe(t={}) makes K̃ non-PD: {e}", x_new[0]))?;
+        self.t.push(x_new[0]);
+        for (j, col) in self.extra.iter_mut().enumerate() {
+            col.push(x_new[j + 1]);
+        }
+        if let (Some(noise), Some(s)) = (&mut self.noise, sigma_n_new) {
+            noise.push(s);
+        }
+        self.y.push(y_new);
+        self.observations.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Append one d-dimensional observation in `O(n²)` (score + bordered
+    /// factor extension + `α`/`σ̂_f²` refresh). The row twin of
+    /// [`Predictor::observe`]; see [`Predictor::score_observation_row`]
+    /// for the σ_n contract.
+    pub fn observe_row(
+        &mut self,
+        x_new: &[f64],
+        y_new: f64,
+        sigma_n_new: Option<f64>,
+    ) -> crate::Result<()> {
+        let scored = self.score_observation_row(x_new, y_new, sigma_n_new)?;
+        self.observe_scored_row_deferred(x_new, y_new, sigma_n_new, scored)?;
+        self.refresh();
         Ok(())
     }
 
@@ -444,6 +750,10 @@ impl Predictor {
     }
 
     fn append(&mut self, t_new: f64, y_new: f64) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.extra.is_empty() && self.noise.is_none(),
+            "scalar observe on an nd/heteroscedastic predictor — use observe_row"
+        );
         let mut prep = self.model.kernel.prepare(&self.theta);
         // assembly convention: lag = existing − new (the new point is the
         // trailing row of the grown matrix); kernels are even in the lag
@@ -469,6 +779,12 @@ impl Predictor {
         anyhow::ensure!(self.t.len() > 1, "cannot evict the last observation");
         self.chol.remove_row(i);
         self.t.remove(i);
+        for col in &mut self.extra {
+            col.remove(i);
+        }
+        if let Some(noise) = &mut self.noise {
+            noise.remove(i);
+        }
         self.y.remove(i);
         self.evictions.fetch_add(1, Ordering::Relaxed);
         self.refresh();
@@ -507,6 +823,12 @@ impl Predictor {
         );
         self.chol.shrink_front(k);
         self.t.drain(..k);
+        for col in &mut self.extra {
+            col.drain(..k);
+        }
+        if let Some(noise) = &mut self.noise {
+            noise.drain(..k);
+        }
         self.y.drain(..k);
         self.evictions.fetch_add(k, Ordering::Relaxed);
         Ok(())
@@ -519,7 +841,11 @@ impl Predictor {
     /// first, then commit via [`Predictor::adopt_eval`], so a multi-model
     /// refresh can be all-or-nothing.
     pub fn refit_eval(&self, ctx: &ExecutionContext) -> crate::Result<ProfiledEval> {
-        let k = assemble_cov_with(&self.model, &self.t, &self.theta, ctx);
+        // nd assembly delegates to the scalar path when d == 1 and the
+        // noise is the model's scalar σ_n — bit-identical to the
+        // pre-scenario refit
+        let cols = self.input_cols();
+        let k = assemble_cov_nd_with(&self.model, &cols, self.noise.as_deref(), &self.theta, ctx);
         ProfiledEval::from_cov_with(k, &self.y, ctx)
     }
 
@@ -773,6 +1099,72 @@ mod tests {
         let q = [3.3, 17.9];
         let a = p.predict_batch(&q, &ExecutionContext::seq());
         let b = cold.predict_batch(&q, &ExecutionContext::seq());
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.sd, b.sd);
+    }
+
+    #[test]
+    fn nd_predictor_streams_and_matches_cold_refit() {
+        // d = 2 heteroscedastic session: fit, stream row appends, evict,
+        // and check the maintained state against a cold refit
+        let n = 24;
+        let mut rng = Xoshiro256::seed_from_u64(314);
+        let t: Vec<f64> = (0..n).map(|i| i as f64 * 0.7).collect();
+        let x2: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let noise: Vec<f64> = (0..n).map(|_| 0.05 + 0.15 * rng.uniform()).collect();
+        let theta = vec![0.3, -0.2];
+        let ctx = ExecutionContext::seq();
+        let mut p = Predictor::fit_nd(
+            CovarianceModel::new("se-ard2", Box::new(crate::kernels::ArdKernel::se(2)), 0.1),
+            &[&t, &x2],
+            Some(&noise),
+            &y,
+            &theta,
+            &ctx,
+        )
+        .unwrap();
+        assert_eq!(p.d(), 2);
+        // scalar entry points must refuse the nd session cleanly
+        assert!(p.observe(99.0, 0.1).is_err());
+        // stream three row appends (hetero ⇒ per-point σ required)
+        for j in 0..3 {
+            let xr = [t[n - 1] + 1.0 + j as f64, 0.3 * j as f64];
+            assert!(p.observe_row(&xr, 0.2, None).is_err(), "missing σ_n must error");
+            p.observe_row(&xr, 0.2, Some(0.1)).unwrap();
+        }
+        p.evict(0).unwrap();
+        p.evict_front(2).unwrap();
+        assert_eq!(p.n(), n); // +3 −3
+        assert_eq!(p.extra()[0].len(), n);
+        assert_eq!(p.noise().unwrap().len(), n);
+        // maintained state vs cold refit of the live window
+        let ev = p.refit_eval(&ctx).unwrap();
+        assert!(
+            (p.sigma_f_hat2() - ev.sigma_f_hat2).abs() < 1e-8 * ev.sigma_f_hat2,
+            "σ̂² {} vs cold {}",
+            p.sigma_f_hat2(),
+            ev.sigma_f_hat2
+        );
+        assert!((p.lnp() - ev.lnp).abs() < 1e-7 * ev.lnp.abs(), "{} vs {}", p.lnp(), ev.lnp);
+        // predict_rows serves finite numbers and counts queries
+        let q1: Vec<f64> = vec![2.0, 9.5];
+        let q2: Vec<f64> = vec![0.1, -0.4];
+        let out = p.predict_rows(&[&q1, &q2], &ctx);
+        assert!(out.mean.iter().all(|v| v.is_finite()));
+        assert!(out.sd.iter().all(|v| v.is_finite() && *v >= 0.0));
+        // thread-count bit-identity of the nd batch
+        let par = p.predict_rows(&[&q1, &q2], &ExecutionContext::new(4));
+        assert_eq!(par.mean, out.mean);
+        assert_eq!(par.sd, out.sd);
+    }
+
+    #[test]
+    fn predict_rows_delegates_for_1d() {
+        let (p, _, _) = trained_predictor(30, 71);
+        let q: Vec<f64> = (0..9).map(|i| 0.3 + 2.1 * i as f64).collect();
+        let a = p.predict_batch(&q, &ExecutionContext::seq());
+        let b = p.predict_rows(&[&q], &ExecutionContext::seq());
         assert_eq!(a.mean, b.mean);
         assert_eq!(a.sd, b.sd);
     }

@@ -38,8 +38,10 @@ mod amplitude;
 mod product;
 mod sum;
 mod paper;
+mod ard;
 
 pub use amplitude::Amplitude;
+pub use ard::{ArdFamily, ArdKernel};
 pub use matern::{Matern32, Matern52};
 pub use paper::{
     paper_k1, paper_k2, PaperK1, PaperK2, K2_PHI1_IDX, K2_PHI2_IDX, SYNTHETIC_SIGMA_N,
@@ -65,8 +67,13 @@ pub struct DataSpan {
 
 impl DataSpan {
     /// Compute from a (not necessarily sorted) input vector.
-    pub fn from_times(t: &[f64]) -> Self {
-        assert!(t.len() >= 2, "need at least two points");
+    ///
+    /// Errors (instead of panicking) on degenerate grids: fewer than two
+    /// points, or all points coincident (no positive separation) — both
+    /// reachable from the streaming observe path via duplicate
+    /// timestamps, so they must surface as recoverable errors.
+    pub fn from_times(t: &[f64]) -> crate::Result<Self> {
+        anyhow::ensure!(t.len() >= 2, "degenerate input grid: need at least two points, got {}", t.len());
         let mut s = t.to_vec();
         s.sort_by(|a, b| crate::util::asc_nan_last(*a, *b));
         let mut dt_min = f64::INFINITY;
@@ -77,8 +84,30 @@ impl DataSpan {
             }
         }
         let dt_max = s[s.len() - 1] - s[0];
-        assert!(dt_min.is_finite() && dt_max > 0.0, "degenerate input grid");
-        Self { dt_min, dt_max }
+        anyhow::ensure!(
+            dt_min.is_finite() && dt_max > 0.0,
+            "degenerate input grid: all {} points coincident (no positive separation)",
+            t.len()
+        );
+        Ok(Self { dt_min, dt_max })
+    }
+
+    /// Pooled sampling geometry of a d-column input layout (column 0 is
+    /// the time/first axis): δt is the smallest positive per-dimension
+    /// separation over all columns, ΔT the largest per-dimension
+    /// diameter. Every column must be non-degenerate on its own —
+    /// a constant column makes its ARD length-scale unidentifiable.
+    pub fn from_columns(cols: &[&[f64]]) -> crate::Result<Self> {
+        anyhow::ensure!(!cols.is_empty(), "degenerate input grid: zero input columns");
+        let mut dt_min = f64::INFINITY;
+        let mut dt_max = 0.0f64;
+        for (j, col) in cols.iter().enumerate() {
+            let s = Self::from_times(col)
+                .map_err(|e| anyhow::anyhow!("input dimension {j}: {e}"))?;
+            dt_min = dt_min.min(s.dt_min);
+            dt_max = dt_max.max(s.dt_max);
+        }
+        Ok(Self { dt_min, dt_max })
     }
 
     /// `ln(ΔT/δt)` — the hyperprior volume per timescale parameter.
@@ -127,6 +156,13 @@ pub trait PreparedFactor {
 pub trait StationaryKernel: Send + Sync {
     /// Number of hyperparameters `ϑ` (σ_f excluded — it is profiled).
     fn dim(&self) -> usize;
+    /// Number of *input* dimensions d the kernel consumes per point.
+    /// Every pre-existing kernel is a time-series kernel (d = 1); ARD
+    /// kernels override. The training/serving layers validate this
+    /// against the dataset's column count before any assembly.
+    fn input_dim(&self) -> usize {
+        1
+    }
     /// Hyperparameter names, e.g. `["phi0", "phi1", "xi1"]`.
     fn names(&self) -> Vec<String>;
     /// Box bounds for each hyperparameter given the data geometry.
@@ -150,6 +186,24 @@ pub trait PreparedKernel {
     fn value_grad(&mut self, dt: f64, grad: &mut [f64]) -> f64;
     /// `k̃(Δt)`, gradient, and full symmetric Hessian (row-major `m×m`).
     fn value_grad_hess(&mut self, dt: f64, grad: &mut [f64], hess: &mut [f64]) -> f64;
+
+    /// `k̃(Δx)` for a d-dimensional separation vector. The defaults
+    /// delegate to the scalar lag path, so every 1-D kernel evaluates on
+    /// d = 1 column layouts unchanged; ARD kernels override all three.
+    fn value_nd(&mut self, dx: &[f64]) -> f64 {
+        assert_eq!(dx.len(), 1, "scalar kernel given a {}-dim separation", dx.len());
+        self.value(dx[0])
+    }
+    /// `k̃(Δx)` and `∂k̃/∂ϑ` for a d-dimensional separation.
+    fn value_grad_nd(&mut self, dx: &[f64], grad: &mut [f64]) -> f64 {
+        assert_eq!(dx.len(), 1, "scalar kernel given a {}-dim separation", dx.len());
+        self.value_grad(dx[0], grad)
+    }
+    /// `k̃(Δx)`, gradient, and Hessian for a d-dimensional separation.
+    fn value_grad_hess_nd(&mut self, dx: &[f64], grad: &mut [f64], hess: &mut [f64]) -> f64 {
+        assert_eq!(dx.len(), 1, "scalar kernel given a {}-dim separation", dx.len());
+        self.value_grad_hess(dx[0], grad, hess)
+    }
 }
 
 /// A complete covariance model in the paper's sense: a stationary kernel
@@ -173,6 +227,11 @@ impl CovarianceModel {
     /// Number of reduced hyperparameters (σ_f profiled out).
     pub fn dim(&self) -> usize {
         self.kernel.dim()
+    }
+
+    /// Number of input dimensions the kernel consumes per point.
+    pub fn input_dim(&self) -> usize {
+        self.kernel.input_dim()
     }
 
     /// σ_n² — the diagonal noise contribution in σ_f = 1 units.

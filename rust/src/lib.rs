@@ -219,6 +219,52 @@
 //! [`gp::profiled::toeplitz_hit_count`] makes the routing observable and
 //! the golden suite pins the Levinson solve against 60-digit mpmath.
 //!
+//! ### Scenario tier (ARD multi-dimensional inputs + heteroscedastic noise)
+//!
+//! The input side of the stack generalises from a scalar time axis to an
+//! **n×d column layout** with per-point noise, additively — the 1-D
+//! homoscedastic path is untouched and stays bit-identical:
+//!
+//! * **data** — [`data::Dataset`] carries `extra` input columns 1..d
+//!   (`with_extra_cols`) and an optional per-point noise vector
+//!   (`with_noise`); the CSV loader reads multi-column files (d = 1
+//!   keeps the old two-column layout) and `Dataset::span` pools the
+//!   per-dimension sampling geometry ([`kernels::DataSpan::from_columns`],
+//!   every column must be non-degenerate on its own). Degenerate grids —
+//!   fewer than two points, or all points coincident — surface as
+//!   recoverable errors, not panics (reachable from streaming duplicate
+//!   timestamps; regression-tested in `rust/tests/soak_faults.rs`).
+//! * **kernels** — [`kernels::ArdKernel`] implements SE/Matérn-3/2/5/2
+//!   over the weighted distance `r² = Σ_j e^{−2φ_j} Δx_j²` with analytic
+//!   per-dimension gradients and Hessians; the **tied** variant shares
+//!   one φ across dimensions (the isotropic-in-d parent). Registry
+//!   entrants `se-iso<d>` / `se-ard<d>` / `m32-ard<d>` / `m52-ard<d>`
+//!   (d ∈ 1..=8) join the warm-start lineage: the ARD children seed
+//!   dimension 0 from the tied parent's fitted length-scale by the
+//!   shared `phiARD0` parameter name.
+//! * **likelihood** — [`gp::profiled`]'s `*_nd_with` entry points accept
+//!   the column layout plus an optional noise vector (`K̃_ii = k̃(0) +
+//!   σ_n,i²` — noise is *data*, not a hyperparameter, so the profiled
+//!   σ_f machinery is unchanged); with `d == 1` and no noise they
+//!   delegate to the scalar chain, bit-identically. The Toeplitz fast
+//!   path is **structurally unreachable** under non-constant noise (a
+//!   heteroscedastic diagonal breaks the constant-diagonal Toeplitz
+//!   form even on a uniform grid).
+//! * **serving** — [`gp::serve::Predictor`] caches the input block and
+//!   answers row queries (`predict_rows`) and heteroscedastic streaming
+//!   (`observe_row` on [`coordinator::ServeSession`], per-point σ
+//!   required iff the session is heteroscedastic); retrain carries the
+//!   extras + noise through the window. Artifacts (v3 and v4) append an
+//!   optional input block that is **absent** — byte-identical encodings
+//!   — for 1-D homoscedastic data.
+//!
+//! The heteroscedastic profiled likelihood is pinned against a 60-digit
+//! mpmath reference (`rust/tests/golden_values.rs` case 6); ARD kernel
+//! properties sweep d ∈ {1,2,3,5} (`rust/tests/kernel_properties.rs`);
+//! `benches/scenario.rs` records the d-sweep assembly/train wall and the
+//! ARD-vs-isotropic evidence gap into `BENCH_perf.json`, and
+//! `examples/ard_scenario.rs` is the end-to-end walkthrough.
+//!
 //! **Persistence** closes the loop: [`coordinator::TrainedModel`]
 //! `save`/`load` write a versioned little-endian binary (spec + data +
 //! ϑ̂ + packed factor with its maintained logdet + α + evidence + a

@@ -241,7 +241,7 @@ fn cmd_nested(args: &Args, cfg: &RunConfig) -> gpfast::Result<()> {
     let data = load_dataset(args, cfg)?;
     let spec = ModelSpec::parse(&args.get_or("model", "k2"))?;
     let model = spec.build(cfg.sigma_n);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span()?);
     let scale = ScalePrior::default();
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let opts = NestedOptions { nlive: cfg.nlive, ..Default::default() };

@@ -70,7 +70,7 @@ fn dense_k1_laplace_evidence() {
     let model = paper_k1(0.1);
     let ev = profiled::eval(&model, &t, &y, &theta).unwrap();
     let hess = profiled_hessian(&model, &t, &y, &theta).unwrap();
-    let prior = BoxPrior::for_model(&model, &DataSpan::from_times(&t));
+    let prior = BoxPrior::for_model(&model, &DataSpan::from_times(&t).unwrap());
     let lap = laplace_evidence(24, &prior, &ScalePrior::default(), &theta, ev.lnp, &hess)
         .unwrap();
     assert_close("ln_det_h", lap.ln_det_h, 596502.92496166734402f64.ln());
@@ -184,4 +184,33 @@ fn marg_constant_golden() {
         let got = marg_constant(n, 1e-3, 1e3);
         assert_close(&format!("marg({n})"), got, want);
     }
+}
+
+/// Case 6 — heteroscedastic SE-ARD (d = 3, n = 16): the scenario tier's
+/// n×d assembly with a per-point noise diagonal, pinned against the
+/// 60-digit mpmath reference. The input columns are integer-derived
+/// (exact in f64) and the noise cycles through four σ levels, so no
+/// Toeplitz or scalar fast path can reach this configuration — it pins
+/// the general `eval_nd_with` chain itself.
+#[test]
+fn heteroscedastic_se_ard_profiled_likelihood() {
+    use gpfast::kernels::{ArdKernel, CovarianceModel};
+    use gpfast::runtime::ExecutionContext;
+
+    let n = 16usize;
+    let x1: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+    let x2: Vec<f64> = (1..=n).map(|i| ((7 * i) % 16) as f64 / 2.0).collect();
+    let x3: Vec<f64> = (1..=n).map(|i| ((3 * i) % 5) as f64 / 4.0).collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| (0.6 * x1[i]).sin() + 0.3 * (1.7 * x2[i]).cos() - 0.2 * x3[i])
+        .collect();
+    let sig: Vec<f64> = (1..=n).map(|i| 0.05 * (1 + (i % 4)) as f64).collect();
+    let theta = vec![0.5, 0.0, -0.3];
+    let model = CovarianceModel::new("se-ard3", Box::new(ArdKernel::se(3)), 0.1);
+    let x: Vec<&[f64]> = vec![&x1, &x2, &x3];
+    let ev = profiled::eval_nd_with(&model, &x, Some(&sig), &y, &theta, &ExecutionContext::seq())
+        .unwrap();
+    assert_close("lnp", ev.lnp, -13.259958578396906566);
+    assert_close("sigma_f_hat2", ev.sigma_f_hat2, 0.31754401301002881805);
+    assert_close("logdet", ev.chol.logdet(), -0.53189436010567536641);
 }

@@ -15,8 +15,8 @@
 //! combinators (ProductKernel, SumKernel), including the paper's k₁/k₂.
 
 use gpfast::kernels::{
-    paper_k1, paper_k2, Amplitude, DataSpan, Matern32, Matern52, Periodic, ProductKernel,
-    SquaredExponential, StationaryKernel, SumKernel, Wendland,
+    paper_k1, paper_k2, Amplitude, ArdKernel, DataSpan, Matern32, Matern52, Periodic,
+    ProductKernel, SquaredExponential, StationaryKernel, SumKernel, Wendland,
 };
 use gpfast::linalg::{Chol, Matrix};
 use gpfast::propcheck::{property, Gen};
@@ -128,7 +128,7 @@ fn every_kernel_gram_matrix_is_pd_with_jitter() {
         let idx = g.usize(0..N_KERNELS);
         let (name, kernel) = build_kernel(idx);
         let t = gen_times(g, 30);
-        let span = DataSpan::from_times(&t);
+        let span = DataSpan::from_times(&t).unwrap();
         let theta = gen_theta(g, kernel.as_ref(), &span);
         let mut prep = kernel.prepare(&theta);
         let n = t.len();
@@ -183,6 +183,161 @@ fn every_kernel_gradient_matches_finite_differences() {
                     "{name}: grad[{a}] at dt={dt} θ={theta:?}: analytic {} vs FD {fd}",
                     grad[a]
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// ARD sweeps — the same three properties on d-dimensional separations,
+// over the scenario tier's kernel roster (se/m32/m52 ARD plus the tied
+// se-iso parent) and input dimensions d ∈ {1, 2, 3, 5}.
+// ---------------------------------------------------------------------
+
+/// ARD input dimensions under sweep (d = 5 exceeds every registry spec
+/// on purpose — the kernel layer itself has no d ≤ 3 assumption).
+const ARD_DIMS: [usize; 4] = [1, 2, 3, 5];
+
+/// The ARD zoo: family × tied, freshly built for a given input dim.
+fn build_ard_kernel(fam: usize, d: usize) -> (String, ArdKernel) {
+    match fam {
+        0 => (format!("se-ard d={d}"), ArdKernel::se(d)),
+        1 => (format!("m32-ard d={d}"), ArdKernel::m32(d)),
+        2 => (format!("m52-ard d={d}"), ArdKernel::m52(d)),
+        3 => (format!("se-iso d={d}"), ArdKernel::se_iso(d)),
+        _ => unreachable!(),
+    }
+}
+
+const N_ARD_FAMILIES: usize = 4;
+
+#[test]
+fn ard_kernels_are_symmetric_in_the_separation_across_dims() {
+    property("k(Δx) = k(−Δx) for every ARD kernel, d ∈ {1,2,3,5}", 60, |g| {
+        let d = ARD_DIMS[g.usize(0..ARD_DIMS.len())];
+        let (name, kernel) = build_ard_kernel(g.usize(0..N_ARD_FAMILIES), d);
+        let span = DataSpan { dt_min: 0.3, dt_max: 40.0 };
+        let theta = gen_theta(g, &kernel, &span);
+        let mut prep = kernel.prepare(&theta);
+        for _ in 0..8 {
+            let dx: Vec<f64> = (0..d).map(|_| g.f64(-6.0, 6.0)).collect();
+            let neg: Vec<f64> = dx.iter().map(|v| -v).collect();
+            let (a, b) = (prep.value_nd(&dx), prep.value_nd(&neg));
+            if a != b {
+                return Err(format!("{name}: k({dx:?}) = {a} but k(−Δx) = {b}"));
+            }
+            // normalised correlation kernels: finite, in [0, k(0) = 1]
+            if !a.is_finite() || a < 0.0 || a > 1.0 {
+                return Err(format!("{name}: k({dx:?}) = {a} outside [0, 1]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ard_gram_matrix_is_pd_with_jitter_across_dims() {
+    property("Cholesky succeeds on jittered ARD Gram, d ∈ {1,2,3,5}", 40, |g| {
+        let d = ARD_DIMS[g.usize(0..ARD_DIMS.len())];
+        let (name, kernel) = build_ard_kernel(g.usize(0..N_ARD_FAMILIES), d);
+        let span = DataSpan { dt_min: 0.3, dt_max: 40.0 };
+        let theta = gen_theta(g, &kernel, &span);
+        let mut prep = kernel.prepare(&theta);
+        let n = g.usize(6..24);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| g.f64(0.0, 12.0)).collect()).collect();
+        let jitter = 1e-6; // k(0) = 1 for every ARD family
+        let mut k = Matrix::zeros(n, n);
+        let mut dx = vec![0.0; d];
+        for i in 0..n {
+            for j in 0..n {
+                for c in 0..d {
+                    dx[c] = x[i][c] - x[j][c];
+                }
+                k[(i, j)] = prep.value_nd(&dx);
+            }
+            k[(i, i)] += jitter;
+        }
+        match Chol::factor(&k) {
+            Ok(_) => Ok(()),
+            Err(e) => Err(format!("{name}: Gram not PD at θ={theta:?}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn ard_gradient_matches_finite_differences_across_dims() {
+    property("analytic ∂k/∂φ = FD for ARD kernels, d ∈ {1,2,3,5}", 30, |g| {
+        let d = ARD_DIMS[g.usize(0..ARD_DIMS.len())];
+        let (name, kernel) = build_ard_kernel(g.usize(0..N_ARD_FAMILIES), d);
+        let span = DataSpan { dt_min: 0.5, dt_max: 30.0 };
+        let theta = gen_theta(g, &kernel, &span);
+        let m = kernel.dim();
+        let dx: Vec<f64> = (0..d).map(|_| g.f64(0.1, 4.0)).collect();
+        let mut grad = vec![0.0; m];
+        let v = kernel.prepare(&theta).value_grad_nd(&dx, &mut grad);
+        if !v.is_finite() {
+            return Err(format!("{name}: non-finite value {v} at dx={dx:?}"));
+        }
+        for a in 0..m {
+            let h = 1e-6 * theta[a].abs().max(0.05);
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let fp = kernel.prepare(&tp).value_nd(&dx);
+            let fm = kernel.prepare(&tm).value_nd(&dx);
+            let fd = (fp - fm) / (2.0 * h);
+            if gpfast::math::rel_diff(grad[a], fd) > 5e-4 {
+                return Err(format!(
+                    "{name}: grad[{a}] at dx={dx:?} θ={theta:?}: analytic {} vs FD {fd}",
+                    grad[a]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ard_hessian_is_symmetric_and_matches_fd_of_gradient_across_dims() {
+    property("∂²k symmetric + consistent with FD(∂k) for ARD, d ∈ {1,2,3,5}", 20, |g| {
+        let d = ARD_DIMS[g.usize(0..ARD_DIMS.len())];
+        let (name, kernel) = build_ard_kernel(g.usize(0..N_ARD_FAMILIES), d);
+        let span = DataSpan { dt_min: 0.5, dt_max: 30.0 };
+        let theta = gen_theta(g, &kernel, &span);
+        let m = kernel.dim();
+        let dx: Vec<f64> = (0..d).map(|_| g.f64(0.1, 4.0)).collect();
+        let mut grad = vec![0.0; m];
+        let mut hess = vec![0.0; m * m];
+        kernel.prepare(&theta).value_grad_hess_nd(&dx, &mut grad, &mut hess);
+        for a in 0..m {
+            for b in 0..m {
+                let (hab, hba) = (hess[a * m + b], hess[b * m + a]);
+                if (hab - hba).abs() > 1e-9 * hab.abs().max(1e-9) {
+                    return Err(format!("{name}: H[{a},{b}] = {hab} ≠ H[{b},{a}] = {hba}"));
+                }
+            }
+        }
+        for a in 0..m {
+            let h = 1e-6 * theta[a].abs().max(0.05);
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[a] += h;
+            tm[a] -= h;
+            let mut gp = vec![0.0; m];
+            let mut gm = vec![0.0; m];
+            kernel.prepare(&tp).value_grad_nd(&dx, &mut gp);
+            kernel.prepare(&tm).value_grad_nd(&dx, &mut gm);
+            for b in 0..m {
+                let fd = (gp[b] - gm[b]) / (2.0 * h);
+                if gpfast::math::rel_diff(hess[a * m + b], fd) > 1e-3 {
+                    return Err(format!(
+                        "{name}: H[{a},{b}] at dx={dx:?}: analytic {} vs FD {fd}",
+                        hess[a * m + b]
+                    ));
+                }
             }
         }
         Ok(())

@@ -21,7 +21,7 @@ use gpfast::coordinator::artifact::crc32;
 use gpfast::coordinator::{
     AlignedBlob, ArtifactView, ModelSpec, NestedReport, ServeSession, TrainResult, TrainedModel,
 };
-use gpfast::data::synthetic::table1_dataset;
+use gpfast::data::synthetic::{ard3_dataset, table1_dataset};
 use gpfast::data::Dataset;
 use gpfast::evidence::LaplaceEvidence;
 use gpfast::gp::{profiled, CounterSnapshot};
@@ -49,7 +49,7 @@ fn tmp_path(tag: &str) -> PathBuf {
 fn make_artifact(spec: ModelSpec, data: &Dataset, ln_z: f64, with_nested: bool) -> TrainedModel {
     let sigma_n = 0.1;
     let model = spec.build(sigma_n);
-    let prior = BoxPrior::for_model(&model, &data.span());
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
     let mut theta: Vec<f64> =
         prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
     prior.project(&mut theta);
@@ -663,6 +663,112 @@ fn v4_corruption_matrix_errors_cleanly() {
     // and the pristine bytes still hydrate — the patches above were the
     // only problem
     TrainedModel::from_bytes(&good).expect("pristine v4 must still hydrate");
+}
+
+/// The scenario tier's artifacts: a d = 3 heteroscedastic dataset
+/// round-trips through both container versions with its extra input
+/// columns and per-point noise intact, the v4 view exposes them through
+/// its accessors, and the reloaded predictors serve bit-identical rows.
+/// A homoscedastic 1-D artifact keeps carrying **no** input block at all
+/// (the committed golden fixtures pin those absolute bytes; here the
+/// structural invariant is pinned — decode leaves the nd fields empty).
+#[test]
+fn nd_heteroscedastic_artifacts_round_trip_v3_and_v4() {
+    let data = ard3_dataset(20, 0.1, true, 953);
+    assert_eq!(data.d(), 3);
+    assert!(data.is_heteroscedastic());
+    let exec = ExecutionContext::seq();
+    let spec = ModelSpec::SeArd(3);
+    let sigma_n = 0.1;
+    let model = spec.build(sigma_n);
+    let prior = BoxPrior::for_model(&model, &data.span().unwrap());
+    let mut theta: Vec<f64> =
+        prior.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+    prior.project(&mut theta);
+    let ev = profiled::eval_nd_with(
+        &model,
+        &data.input_cols(),
+        data.noise.as_deref(),
+        &data.y,
+        &theta,
+        &exec,
+    )
+    .expect("nd mid-prior eval");
+    let m = model.dim();
+    let tm = TrainedModel {
+        spec,
+        sigma_n,
+        param_names: model.kernel.names(),
+        train: TrainResult {
+            theta_hat: theta,
+            lnp_peak: ev.lnp,
+            sigma_f_hat2: ev.sigma_f_hat2,
+            jitter: ev.jitter,
+            peak_eval: ev,
+            converged: true,
+            n_evals: 11,
+            n_modes: 1,
+            restart_values: vec![-2.0],
+        },
+        evidence: LaplaceEvidence {
+            ln_z: -9.5,
+            ln_p_peak: -9.5,
+            ln_det_h: 0.0,
+            ln_volume: 0.0,
+            marg_const: 0.0,
+            sigma: vec![0.0; m],
+            covariance: Matrix::zeros(m, m),
+            suspect: false,
+        },
+        nested: None,
+        warm_started: true,
+        restarts: 2,
+        wall_secs: 0.5,
+    };
+
+    // query rows expressed as three query *columns* — the same layout
+    // as Dataset::input_cols
+    let q1 = vec![2.5, 7.25, 13.0];
+    let q2 = vec![1.0, 4.0, 6.5];
+    let q3 = vec![0.5, 2.0, 3.5];
+    let q: Vec<&[f64]> = vec![&q1, &q2, &q3];
+    let want = tm.predictor(&data).expect("in-memory nd predictor").predict_rows(&q, &exec);
+    assert!(want.mean.iter().chain(want.sd.iter()).all(|v| v.is_finite()));
+
+    // ---- v3 container
+    let v3 = tm.to_bytes(&data).expect("encode v3");
+    let (tm3, d3) = TrainedModel::from_bytes(&v3).expect("v3 load");
+    assert_eq!(d3.t, data.t);
+    assert_eq!(d3.extra, data.extra, "v3 must round-trip the extra input columns");
+    assert_eq!(d3.noise, data.noise, "v3 must round-trip the per-point noise");
+    assert_eq!(d3.d(), 3);
+    assert_eq!(tm3.spec, spec);
+    let got3 = tm3.predictor(&d3).expect("v3 predictor").predict_rows(&q, &exec);
+    assert_eq!(got3.mean, want.mean, "v3 reloaded rows must be bit-identical");
+    assert_eq!(got3.sd, want.sd);
+
+    // ---- v4 container + view accessors
+    let v4 = tm.to_bytes_v4(&data, None).expect("encode v4");
+    let blob = AlignedBlob::from_slice(&v4);
+    let view = ArtifactView::parse(&blob).expect("v4 view");
+    assert_eq!(view.d(), 3);
+    assert_eq!(view.extra_cols(), &data.extra[..]);
+    assert_eq!(view.noise(), data.noise.as_deref());
+    view.validate_payload().expect("nd payload must validate");
+    let (tm4, d4) = TrainedModel::from_bytes(&v4).expect("v4 load");
+    assert_eq!(d4.extra, data.extra, "v4 must round-trip the extra input columns");
+    assert_eq!(d4.noise, data.noise, "v4 must round-trip the per-point noise");
+    let got4 = tm4.predictor(&d4).expect("v4 predictor").predict_rows(&q, &exec);
+    assert_eq!(got4.mean, want.mean, "v4 reloaded rows must be bit-identical");
+    assert_eq!(got4.sd, want.sd);
+
+    // homoscedastic 1-D: no input block, nd fields decode empty
+    let flat = table1_dataset(12, 0.1, 959);
+    let tm_flat = make_artifact(ModelSpec::K1, &flat, -8.0, false);
+    let (_, d_flat) =
+        TrainedModel::from_bytes(&tm_flat.to_bytes(&flat).unwrap()).unwrap();
+    assert_eq!(d_flat.d(), 1);
+    assert!(d_flat.extra.is_empty() && d_flat.noise.is_none());
 }
 
 /// Deterministic artifact at an explicit σ_n and ϑ (no prior mid-point):

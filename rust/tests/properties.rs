@@ -33,7 +33,7 @@ fn gen_theta_k2(g: &mut Gen, span: &DataSpan) -> Vec<f64> {
 fn assembled_covariance_is_positive_definite() {
     property("K(θ) is PD for any prior-interior θ", 40, |g| {
         let t = gen_times(g, 40);
-        let span = DataSpan::from_times(&t);
+        let span = DataSpan::from_times(&t).unwrap();
         let theta = gen_theta_k2(g, &span);
         let model = paper_k2(g.f64(0.01, 0.3));
         let k = gpfast::gp::assemble_cov(&model, &t, &theta);
@@ -49,7 +49,7 @@ fn profiled_sigma_hat_is_scale_equivariant() {
     // scaling y by c scales σ̂_f² by c² and shifts lnP by −n ln c
     property("σ̂_f²(c·y) = c²σ̂_f²(y)", 30, |g| {
         let t = gen_times(g, 30);
-        let span = DataSpan::from_times(&t);
+        let span = DataSpan::from_times(&t).unwrap();
         let theta = gen_theta_k2(g, &span);
         let model = paper_k2(0.1);
         let y: Vec<f64> = t.iter().map(|&x| (x * 0.7).sin() + 0.3 * (x * 0.13).cos()).collect();
@@ -76,7 +76,7 @@ fn profiled_lnp_is_maximum_over_explicit_sigma() {
     // for random λ, full_lnp([λ, ϑ]) ≤ lnP_max(ϑ)
     property("lnP(λ, ϑ) ≤ lnP_max(ϑ)", 25, |g| {
         let t = gen_times(g, 25);
-        let span = DataSpan::from_times(&t);
+        let span = DataSpan::from_times(&t).unwrap();
         let theta = gen_theta_k2(g, &span);
         let model = paper_k2(0.1);
         let y: Vec<f64> = t.iter().map(|&x| (x * 0.9).sin()).collect();
@@ -99,7 +99,7 @@ fn toeplitz_matches_cholesky_on_regular_grids() {
         let n = g.usize(5..40);
         let model = paper_k1(0.1);
         let t: Vec<f64> = (0..n).map(|i| i as f64).collect();
-        let span = DataSpan::from_times(&t);
+        let span = DataSpan::from_times(&t).unwrap();
         let (lo, hi) = span.phi_bounds();
         let theta = vec![g.f64(lo + 0.5 * (hi - lo), hi), g.f64(lo, hi), g.f64(-0.3, 0.3)];
         // first column defines the Toeplitz operator on a regular grid
@@ -126,7 +126,7 @@ fn toeplitz_matches_cholesky_on_regular_grids() {
 fn prior_cube_roundtrip_volume_consistency() {
     property("cube → θ stays in prior; volume finite", 100, |g| {
         let t = gen_times(g, 20);
-        let span = DataSpan::from_times(&t);
+        let span = DataSpan::from_times(&t).unwrap();
         let model = paper_k2(0.1);
         let prior = BoxPrior::for_model(&model, &span);
         let u: Vec<f64> = (0..prior.dim()).map(|_| g.f64(0.0, 1.0)).collect();
@@ -183,7 +183,7 @@ fn truth_parameters_recovered_within_error_bars_on_large_n() {
     if (res.theta_hat[1] - truth[1]).abs() < 0.3 {
         let hess =
             gpfast::gp::profiled_hessian(&model, &data.t, &data.y, &res.theta_hat).unwrap();
-        let prior = BoxPrior::for_model(&model, &data.span());
+        let prior = BoxPrior::for_model(&model, &data.span().unwrap());
         let ev = gpfast::evidence::laplace_evidence(
             300,
             &prior,

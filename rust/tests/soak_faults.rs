@@ -289,6 +289,62 @@ fn quarantined_winner_is_routed_around_and_reenters_after_retrain() {
     assert!(p.mean[0].is_finite() && p.sd[0].is_finite());
 }
 
+/// Duplicate-timestamp regression: a [`FaultPlan`] with a **zero**
+/// near-duplicate offset injects *exact* duplicates, and a tiny window
+/// (`max_points = 2`) lets them crowd every distinct point out. The
+/// resulting all-coincident window used to **panic** inside
+/// `DataSpan::from_times` when a retrain was attempted; it must now
+/// surface as a recoverable error that leaves the session fully
+/// serviceable — and a single distinct observation must make the next
+/// retrain succeed.
+#[test]
+fn exact_duplicate_window_fails_retrain_cleanly_instead_of_panicking() {
+    let exec = ExecutionContext::seq();
+    let mut session = windowed_session(24, 2, 0, &exec);
+    let plan = FaultPlan {
+        near_dup_every: 1,
+        outlier_every: 0,
+        non_finite_every: 0,
+        outlier_scale: 0.0,
+        near_dup_offset: 0.0, // exact duplicates, not near ones
+    };
+    let t_last = *session.predictor().t().last().unwrap();
+    let mut t_prev = t_last;
+    for i in 0..4 {
+        let (t_nom, y_nom) = stream_point(i, t_last);
+        let (t, y, fault) = plan.apply(i, t_nom, y_nom, t_prev);
+        if i > 0 {
+            assert_eq!(fault, Fault::NearDuplicate);
+            assert_eq!(t, t_prev, "offset-0 plan must inject exact duplicates");
+        }
+        // σ_n keeps the extension pivot positive even for an exact
+        // duplicate input, so the point absorbs rather than rejects
+        session.observe(t, y).expect("duplicate absorbs through the noise floor");
+        t_prev = t;
+    }
+    // the window now holds two coincident timestamps
+    let w = session.predictor().t().to_vec();
+    assert_eq!(w.len(), 2);
+    assert_eq!(w[0], w[1], "window should have degenerated to duplicates");
+    // retrain on the degenerate window: a clean error, not a panic, and
+    // zero session damage
+    let mut opts = TrainOptions::default();
+    opts.multistart.restarts = 2;
+    let mut rng = Xoshiro256::seed_from_u64(97);
+    let err = session.retrain(&opts, 1, &mut rng).expect_err("degenerate window must error");
+    assert!(
+        format!("{err:#}").contains("degenerate input grid"),
+        "unexpected error: {err:#}"
+    );
+    let p = session.predict(&[w[0] + 0.5]);
+    assert!(p.mean[0].is_finite() && p.sd[0].is_finite(), "session must keep serving");
+    // one distinct point heals the window and the retrain goes through
+    session.observe(w[0] + 3.0, 0.1).expect("distinct point absorbs");
+    let outcome = session.retrain(&opts, 1, &mut rng).expect("healed window retrains");
+    assert_eq!(outcome.window_n, 2);
+    assert!(outcome.models.iter().all(|(_, _, z)| z.is_finite()));
+}
+
 /// Locate the little-endian byte pattern of a known f64 in an artifact.
 fn find_f64(hay: &[u8], v: f64) -> usize {
     let pat = v.to_le_bytes();
